@@ -1,0 +1,144 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * Eq. 3 outlier reweighting  f(x) = 1 + ln(x)  vs raw ratios vs hard
+//!   clipping — effect on subset quality (power at zero penalty)
+//! * k-means restarts — solution stability / inertia
+//! * multi-OP joint clustering (Sec. 3.2) vs per-OP independent searches
+//!   — subset size and power trade-off
+
+use std::sync::Arc;
+
+use qos_nets::baselines::quality_penalty;
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::Experiment;
+use qos_nets::selection::{self, kmeans, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "quick".into());
+    let Ok(exp) = Experiment::load("artifacts", &name) else {
+        println!("artifacts/{name} missing — ablation skipped");
+        return Ok(());
+    };
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let se = errmodel::sigma_e(&db, &exp.stats);
+    let scales = exp.scales();
+    let usable = selection::usable_multipliers(&se, &exp.sigma_g, &scales);
+
+    // --- ablation 1: reweighting function ---
+    println!("=== Eq.3 reweighting ablation (n = {}) ===", exp.n_multipliers());
+    for (label, f) in [
+        ("f(x)=x (raw)", Box::new(|x: f64| x) as Box<dyn Fn(f64) -> f64>),
+        ("f(x)=min(x,1) (clip)", Box::new(|x: f64| x.min(1.0))),
+        ("f(x)=1+ln(x) (paper)", Box::new(selection::reweight)),
+    ] {
+        // rebuild preference vectors with the candidate transform
+        let mut points = Vec::new();
+        for &s in &scales {
+            for k in 0..se.l {
+                let tol = (s * exp.sigma_g[k]).max(1e-12);
+                points.push(usable.iter().map(|&j| f(se.get(j, k) / tol)).collect::<Vec<f64>>());
+            }
+        }
+        let km = kmeans::kmeans(&points, exp.n_multipliers(), 0, 8);
+        let muls: Vec<usize> = km
+            .centroids
+            .iter()
+            .map(|c| selection::pick_for_centroid(c, &usable, &db))
+            .collect();
+        let l = se.l;
+        let mut total_power = 0.0;
+        let mut total_pen = 0.0;
+        for (opi, _) in scales.iter().enumerate() {
+            let a: Vec<usize> = (0..l).map(|k| muls[km.assignment[opi * l + k]]).collect();
+            total_power += errmodel::relative_power(&db, &exp.stats, &a);
+            total_pen += quality_penalty(&se, &exp.sigma_g, &a);
+        }
+        println!(
+            "{:24} mean power {:.2}%  mean penalty {:.4}  inertia {:.3}",
+            label,
+            100.0 * total_power / scales.len() as f64,
+            total_pen / scales.len() as f64,
+            km.inertia
+        );
+    }
+
+    // --- ablation 1b: residual-bias coefficient in the error model ---
+    println!("\n=== error-model residual-bias ablation (paper = 0.0) ===");
+    for bias in [0.0f64, 0.05, 0.1, 0.2] {
+        let se_b = errmodel::sigma_e_with_bias(&db, &exp.stats, bias);
+        let cfg = SearchConfig {
+            n_multipliers: exp.n_multipliers(),
+            scales: scales.clone(),
+            seed: 0,
+            restarts: 8,
+        };
+        let sol = selection::search(&db, &se_b, &exp.sigma_g, &exp.stats, &cfg);
+        let names: Vec<&str> = sol.subset.iter().map(|&m| db.specs[m].name.as_str()).collect();
+        println!(
+            "bias_residual {bias:>4}: power {:?} subset {names:?}",
+            sol.power.iter().map(|p| format!("{:.1}%", 100.0 * p)).collect::<Vec<_>>()
+        );
+    }
+
+    // --- ablation 2: k-means restarts ---
+    println!("\n=== k-means restart ablation ===");
+    for restarts in [1usize, 2, 4, 8, 16] {
+        let cfg = SearchConfig {
+            n_multipliers: exp.n_multipliers(),
+            scales: scales.clone(),
+            seed: 0,
+            restarts,
+        };
+        let sol = selection::search(&db, &se, &exp.sigma_g, &exp.stats, &cfg);
+        println!(
+            "restarts {restarts:>2}: inertia {:.4}  power {:?}",
+            sol.kmeans_inertia,
+            sol.power.iter().map(|p| format!("{:.1}%", 100.0 * p)).collect::<Vec<_>>()
+        );
+    }
+
+    // --- ablation 3: joint vs independent per-OP clustering ---
+    println!("\n=== joint (Sec. 3.2) vs independent per-OP clustering ===");
+    let joint = selection::search(
+        &db,
+        &se,
+        &exp.sigma_g,
+        &exp.stats,
+        &SearchConfig {
+            n_multipliers: exp.n_multipliers(),
+            scales: scales.clone(),
+            seed: 0,
+            restarts: 8,
+        },
+    );
+    let mut indep_subset: std::collections::BTreeSet<usize> = Default::default();
+    let mut indep_power = Vec::new();
+    for &s in &scales {
+        let sol = selection::search(
+            &db,
+            &se,
+            &exp.sigma_g,
+            &exp.stats,
+            &SearchConfig {
+                n_multipliers: exp.n_multipliers(),
+                scales: vec![s],
+                seed: 0,
+                restarts: 8,
+            },
+        );
+        indep_subset.extend(sol.subset.iter().cloned());
+        indep_power.push(sol.power[0]);
+    }
+    println!(
+        "joint:       subset {:>2} instances, power {:?}",
+        joint.subset.len(),
+        joint.power.iter().map(|p| format!("{:.1}%", 100.0 * p)).collect::<Vec<_>>()
+    );
+    println!(
+        "independent: subset {:>2} instances (violates the n-constraint across OPs), power {:?}",
+        indep_subset.len(),
+        indep_power.iter().map(|p| format!("{:.1}%", 100.0 * p)).collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Regenerates **paper Figure 3**: per-layer multiplier assignment for
+//! every operating point of the MobileNetV2 experiment, plus each OP's
+//! combined relative power line (the horizontal line in the paper plot).
+//! Emits CSV series ready for plotting; also regenerates **Figures 1-2**
+//! data (sigma_g / sigma_e preparation and the scaled preference-vector
+//! clustering) as summary statistics.
+
+use std::sync::Arc;
+
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::selection;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::var("FIG3_EXP").unwrap_or_else(|_| "table4_mnv2".into());
+    let Ok(exp) = Experiment::load("artifacts", &name) else {
+        println!("[{name}] artifacts missing — falling back to quick");
+        return run("quick");
+    };
+    let _ = exp;
+    run(&name)
+}
+
+fn run(name: &str) -> anyhow::Result<()> {
+    let exp = Experiment::load("artifacts", name)?;
+    let db = Arc::new(MulDb::load("artifacts")?);
+
+    // --- Fig. 1: sigma_g vector + sigma_e matrix summary ---
+    let se = errmodel::sigma_e(&db, &exp.stats);
+    println!("# Fig1: l x m error-estimation matrix, l={} layers, m={} multipliers", se.l, se.m);
+    println!("layer,sigma_g,min_sigma_e_nonexact,median_sigma_e");
+    for (k, lname) in exp.layer_names.iter().enumerate() {
+        let mut col: Vec<f64> = (1..se.m).map(|j| se.get(j, k)).collect();
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!("{lname},{:.5},{:.5},{:.5}", exp.sigma_g[k], col[0], col[col.len() / 2]);
+    }
+
+    // --- Fig. 2: preference-vector clustering summary ---
+    let usable = selection::usable_multipliers(&se, &exp.sigma_g, &exp.scales());
+    let points = selection::preference_vectors(&se, &exp.sigma_g, &exp.scales(), &usable);
+    println!("\n# Fig2: clustering space: {} preference vectors (o={} x l={}), dim={}",
+        points.len(), exp.scales().len(), se.l, usable.len());
+    let (_, sol) = pipeline::run_search(&exp, &db);
+    println!("clusters -> multipliers: {:?}",
+        sol.cluster_muls.iter().map(|&m| db.specs[m].name.as_str()).collect::<Vec<_>>());
+
+    // --- Fig. 3: the assignment plot series ---
+    println!("\n# Fig3: per-layer assignment per operating point");
+    for (i, a) in sol.assignment.iter().enumerate() {
+        println!("## OP{i} scale={} relative_power={:.4} (horizontal line)", exp.scales()[i], sol.power[i]);
+        println!("layer_index,layer,multiplier,multiplier_power");
+        for (k, lname) in exp.layer_names.iter().enumerate() {
+            println!("{k},{lname},{},{:.3}", db.specs[a[k]].name, db.power(a[k]));
+        }
+    }
+    // shape checks mirroring the paper's description
+    assert_eq!(sol.assignment.len(), exp.scales().len());
+    let distinct: std::collections::BTreeSet<usize> = sol.assignment.iter().flatten().cloned().collect();
+    assert!(distinct.len() <= exp.n_multipliers());
+    println!("\n# {} layers x {} OPs assigned to {} multiplier instances (n = {})",
+        exp.layer_names.len(), sol.assignment.len(), distinct.len(), exp.n_multipliers());
+    Ok(())
+}

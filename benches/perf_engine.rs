@@ -1,0 +1,70 @@
+//! Engine micro/macro benchmarks (§Perf deliverable, L3 hot path).
+//!
+//! * blocked LUT matmul GMAC/s across shapes (the hot loop)
+//! * exact-multiplier fast path vs LUT path
+//! * end-to-end engine images/s on the quick model per operating point
+
+use std::sync::Arc;
+
+use qos_nets::engine::{lutmm, Engine};
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::util::bench::{bench, report};
+use qos_nets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let db = Arc::new(MulDb::generate());
+    let mut rng = Rng::new(0);
+
+    println!("=== LUT matmul hot loop ===");
+    for &(m, k, n) in &[(1024usize, 144usize, 64usize), (4096, 288, 64), (256, 1152, 128), (4096, 64, 64)] {
+        let at: Vec<i32> = (0..k * m).map(|_| rng.below(256) as i32).collect();
+        let wt: Vec<i32> = (0..n * k).map(|_| rng.below(256) as i32).collect();
+        let wlut = lutmm::transpose_lut(db.lut(9));
+        let mut out = vec![0i32; m * n];
+        let macs = (m * k * n) as f64;
+        let r = bench(&format!("lut_matmul {m}x{k}x{n}"), 1, 5, || {
+            lutmm::lut_matmul_acc(&at, &wt, &wlut, m, k, n, &mut out);
+        });
+        report(&r, Some((macs / 1e9, "GMAC/s")));
+
+        let mut out2 = vec![0i32; m * n];
+        let r2 = bench(&format!("exact_matmul {m}x{k}x{n}"), 1, 5, || {
+            lutmm::exact_matmul_corrected(&at, &wt, m, k, n, 128, 128, &mut out2);
+        });
+        report(&r2, Some((macs / 1e9, "GMAC/s")));
+    }
+
+    println!("\n=== end-to-end engine (quick model) ===");
+    let Ok(exp) = Experiment::load("artifacts", "quick") else {
+        println!("artifacts/quick missing — engine macro bench skipped");
+        return Ok(());
+    };
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let (images, _) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let batch = 32usize;
+
+    for (label, op) in [
+        ("exact OP", pipeline::exact_operating_point(&exp)?),
+        ("approx OP", {
+            let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
+            if let Some((_, power, amap)) = assignments.last() {
+                pipeline::build_operating_point(&exp, "approx", amap.clone(), *power, None)?
+            } else {
+                pipeline::exact_operating_point(&exp)?
+            }
+        }),
+    ] {
+        let mut eng = Engine::new(exp.graph.clone(), db.clone());
+        let r = bench(&format!("engine fwd b{batch} [{label}]"), 1, 5, || {
+            eng.forward(&op, &images[..batch * elems], batch).unwrap();
+        });
+        report(&r, Some((batch as f64, "img/s")));
+    }
+
+    // MAC-rate view of the end-to-end number
+    let total_macs = exp.graph.total_macs as f64;
+    println!("\nmodel MACs/image: {:.1}M", total_macs / 1e6);
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Server/coordinator benchmarks (§Perf deliverable, L3 coordination):
+//! throughput + latency percentiles vs offered load, batcher settings and
+//! worker counts; OP-switch cost.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(exp) = Experiment::load("artifacts", "quick") else {
+        println!("artifacts/quick missing — server bench skipped");
+        return Ok(());
+    };
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let (images, _) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let n_img = images.len() / elems;
+    let op = pipeline::exact_operating_point(&exp)?;
+
+    println!("=== throughput/latency vs batcher config (2s runs, open loop) ===");
+    println!(
+        "{:>8} {:>10} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "workers", "max_batch", "rate/s", "done/s", "mean ms", "p50 ms", "p99 ms", "batch"
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &max_batch in &[1usize, 8, 16, 32] {
+            let server = Server::start(
+                exp.graph.clone(),
+                db.clone(),
+                vec![op.clone()],
+                BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(3),
+                    workers,
+                },
+            )?;
+            let rate = 400.0f64;
+            let mut rng = Rng::new(5);
+            let started = Instant::now();
+            let mut rxs = Vec::new();
+            while started.elapsed() < Duration::from_secs(2) {
+                let i = rng.below(n_img);
+                rxs.push(server.submit(images[i * elems..(i + 1) * elems].to_vec())?);
+                std::thread::sleep(Duration::from_secs_f64(1.0 / rate));
+            }
+            let submitted = rxs.len();
+            for rx in rxs {
+                let _ = rx.recv_timeout(Duration::from_secs(20));
+            }
+            let wall = started.elapsed().as_secs_f64();
+            let m = server.shutdown();
+            println!(
+                "{:>8} {:>10} {:>8.0} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>8.2}",
+                workers,
+                max_batch,
+                submitted as f64 / wall,
+                m.completed as f64 / wall,
+                m.latency.mean_us() / 1e3,
+                m.latency.percentile_us(50.0) as f64 / 1e3,
+                m.latency.percentile_us(99.0) as f64 / 1e3,
+                m.mean_batch()
+            );
+        }
+    }
+
+    println!("\n=== operating-point switch cost ===");
+    let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
+    if let Some((_, power, amap)) = assignments.last() {
+        let op2 = pipeline::build_operating_point(&exp, "op", amap.clone(), *power, None)?;
+        let server = Server::start(
+            exp.graph.clone(),
+            db.clone(),
+            vec![op.clone(), op2],
+            BatcherConfig::default(),
+        )?;
+        let t0 = Instant::now();
+        let iters = 10_000;
+        for i in 0..iters {
+            server.set_operating_point(i % 2);
+        }
+        let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+        println!("set_operating_point: {per:.1} ns/switch (atomic store)");
+        server.shutdown();
+    }
+    Ok(())
+}

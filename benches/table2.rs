@@ -1,0 +1,122 @@
+//! Regenerates **paper Table 2**: power-consumption reduction vs Top-1
+//! accuracy loss on (synth)CIFAR-10 for ResNet-8/14/20/32, comparing the
+//! baseline mapping algorithms against QoS-Nets (o = 1).
+//!
+//! Requires the `table2_*` artifacts:
+//!   python -m compile.aot build --exp table2_resnetN
+//!   qos-nets search --exp table2_resnetN
+//!   python -m compile.aot retrain --exp table2_resnetN
+//! (scripts_queue.sh drives all of this.)  Experiments that have not been
+//! built yet are skipped with a notice, so `cargo bench` always runs.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use qos_nets::baselines::{self, alwann};
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+
+// Paper Table 2 reference rows: (model, method, power reduction %, top-1 loss pp)
+const PAPER: &[(&str, &str, f64, f64)] = &[
+    ("resnet8", "ALWANN [9]", 30.0, 1.7),
+    ("resnet8", "Homogeneous [2]", 47.0, 1.5),
+    ("resnet8", "QoS-Nets o=1 n=4", 41.0, 0.8),
+    ("resnet14", "ALWANN [9]", 30.0, 0.9),
+    ("resnet14", "Homogeneous [2]", 47.0, 0.9),
+    ("resnet14", "QoS-Nets o=1 n=4", 46.0, 0.8),
+    ("resnet20", "LVRM [15]", 17.0, 0.5),
+    ("resnet20", "PNAM [14]", 19.0, 0.5),
+    ("resnet20", "Homogeneous [2]", 29.0, 0.5),
+    ("resnet20", "QoS-Nets o=1 n=3", 38.0, 0.3),
+    ("resnet32", "LVRM [15]", 18.0, 0.5),
+    ("resnet32", "PNAM [14]", 22.0, 1.0),
+    ("resnet32", "Homogeneous [2]", 29.0, 0.2),
+    ("resnet32", "QoS-Nets o=1 n=3", 40.0, 0.5),
+];
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 2: (synth)CIFAR-10, power reduction vs top-1 loss ===\n");
+    let db = Arc::new(MulDb::load("artifacts").or_else(|_| -> anyhow::Result<MulDb> { Ok(MulDb::generate()) })?);
+
+    for depth in [8usize, 14, 20, 32] {
+        let name = format!("table2_resnet{depth}");
+        let Ok(exp) = Experiment::load("artifacts", &name) else {
+            println!("[{name}] artifacts missing — skipped (run scripts_queue.sh)");
+            continue;
+        };
+        println!("--- ResNet-{depth} ---");
+        let se = errmodel::sigma_e(&db, &exp.stats);
+        let exact = pipeline::exact_operating_point(&exp)?;
+        let base = pipeline::eval_operating_point(&exp, &db, &exact, 32, Some(512))?;
+        println!("baseline (8-bit exact) top1 {:.2}%", 100.0 * base.top1);
+
+        // method assignments (single OP, scale 1.0)
+        let mut methods: Vec<(String, Vec<usize>)> = Vec::new();
+        let front = alwann::evolve(
+            &db,
+            &se,
+            &exp.sigma_g,
+            &exp.stats,
+            &alwann::GaConfig { n_tiles: exp.n_multipliers(), seed: 0, ..Default::default() },
+        );
+        if let Some(best) = alwann::pick_feasible(&front) {
+            methods.push(("ALWANN-style GA [9]".into(), best.chromosome.assignment()));
+        }
+        let hom = baselines::homogeneous_pick(&db, &se, &exp.sigma_g, &exp.stats, 0.0);
+        methods.push((format!("Homogeneous [2] ({})", db.specs[hom].name), vec![hom; se.l]));
+        methods.push(("LVRM-style [15]".into(), baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, 1.0)));
+        methods.push(("PNAM-style [14]".into(), baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, 1.0)));
+        let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
+        if let Some((_, _, amap)) = assignments.last() {
+            let a: Vec<usize> = exp.layer_names.iter().map(|n| amap[n]).collect();
+            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), a));
+        }
+
+        println!(
+            "{:34} {:>10} {:>7} {:>16} {:>16}",
+            "method", "power red.", "#AMs", "loss[pp] raw", "loss[pp] tuned"
+        );
+        for (mname, a) in methods {
+            let power = errmodel::relative_power(&db, &exp.stats, &a);
+            let distinct: std::collections::BTreeSet<usize> = a.iter().cloned().collect();
+            let amap: HashMap<String, usize> = exp
+                .layer_names
+                .iter()
+                .cloned()
+                .zip(a.iter().cloned())
+                .collect();
+            let op = pipeline::build_operating_point(&exp, &mname, amap.clone(), power, None)?;
+            let raw = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(512))?;
+            // the QoS-Nets row additionally gets its stage-B retrained overlay
+            let tuned = if mname.starts_with("QoS-Nets") {
+                let idx = assignments.len() - 1;
+                let overlay = exp.dir.join(format!("params_full_op{idx}.qten"));
+                if overlay.exists() {
+                    let op2 = pipeline::build_operating_point(&exp, &mname, amap, power, Some(&overlay))?;
+                    let r = pipeline::eval_operating_point(&exp, &db, &op2, 32, Some(512))?;
+                    format!("{:.2}", 100.0 * (base.top1 - r.top1))
+                } else {
+                    "n/a".into()
+                }
+            } else {
+                "-".into()
+            };
+            println!(
+                "{:34} {:>9.1}% {:>7} {:>16.2} {:>16}",
+                mname,
+                100.0 * (1.0 - power),
+                distinct.len(),
+                100.0 * (base.top1 - raw.top1),
+                tuned
+            );
+        }
+        println!("paper reference:");
+        for (m, meth, pr, loss) in PAPER.iter().filter(|(m, ..)| *m == format!("resnet{depth}")) {
+            let _ = m;
+            println!("  {:32} {:>9.1}% {:>24.2}", meth, pr, loss);
+        }
+        println!();
+    }
+    Ok(())
+}

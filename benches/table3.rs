@@ -1,0 +1,83 @@
+//! Regenerates **paper Table 3**: CIFAR-100 (synth) power reduction vs
+//! top-1 loss for ResNet-20/32, n = 3, o = 1 — QoS-Nets vs the TPM- and
+//! PNAM-style baselines.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use qos_nets::baselines;
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+
+const PAPER: &[(&str, &str, f64, f64)] = &[
+    ("resnet20", "TPM [13]", 3.0, 0.5),
+    ("resnet20", "PNAM [14]", 20.0, 0.5),
+    ("resnet20", "QoS-Nets o=1 n=3", 21.0, 0.0),
+    ("resnet32", "TPM [13]", 3.0, 0.5),
+    ("resnet32", "PNAM [14]", 22.0, 0.5),
+    ("resnet32", "QoS-Nets o=1 n=3", 24.0, -0.2),
+];
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 3: (synth)CIFAR-100, power reduction vs top-1 loss ===\n");
+    let db = Arc::new(MulDb::load("artifacts").or_else(|_| -> anyhow::Result<MulDb> { Ok(MulDb::generate()) })?);
+
+    for depth in [20usize, 32] {
+        let name = format!("table3_resnet{depth}");
+        let Ok(exp) = Experiment::load("artifacts", &name) else {
+            println!("[{name}] artifacts missing — skipped (run scripts_queue.sh)");
+            continue;
+        };
+        println!("--- ResNet-{depth} / synthcifar100 ---");
+        let se = errmodel::sigma_e(&db, &exp.stats);
+        let exact = pipeline::exact_operating_point(&exp)?;
+        let base = pipeline::eval_operating_point(&exp, &db, &exact, 32, Some(512))?;
+        println!("baseline (8-bit exact) top1 {:.2}%", 100.0 * base.top1);
+
+        let mut methods: Vec<(String, Vec<usize>)> = vec![
+            ("TPM-style [13]".into(), baselines::tpm_threshold(&db, &se, &exp.sigma_g, 1.0)),
+            ("PNAM-style [14]".into(), baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, 1.0)),
+        ];
+        let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
+        if let Some((_, _, amap)) = assignments.last() {
+            let a: Vec<usize> = exp.layer_names.iter().map(|n| amap[n]).collect();
+            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), a));
+        }
+
+        println!("{:28} {:>10} {:>7} {:>14}", "method", "power red.", "#AMs", "top1 loss[pp]");
+        for (mname, a) in methods {
+            let power = errmodel::relative_power(&db, &exp.stats, &a);
+            let distinct: std::collections::BTreeSet<usize> = a.iter().cloned().collect();
+            let amap: HashMap<String, usize> = exp
+                .layer_names
+                .iter()
+                .cloned()
+                .zip(a.iter().cloned())
+                .collect();
+            // use the full-retrained overlay for QoS-Nets when available
+            let overlay = if mname.starts_with("QoS-Nets") {
+                let idx = assignments.len() - 1;
+                let p = exp.dir.join(format!("params_full_op{idx}.qten"));
+                p.exists().then_some(p)
+            } else {
+                None
+            };
+            let op = pipeline::build_operating_point(&exp, &mname, amap, power, overlay.as_deref())?;
+            let r = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(512))?;
+            println!(
+                "{:28} {:>9.1}% {:>7} {:>14.2}",
+                mname,
+                100.0 * (1.0 - power),
+                distinct.len(),
+                100.0 * (base.top1 - r.top1)
+            );
+        }
+        println!("paper reference:");
+        for (_, meth, pr, loss) in PAPER.iter().filter(|(m, ..)| *m == format!("resnet{depth}")) {
+            println!("  {:26} {:>9.1}% {:>22.2}", meth, pr, loss);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Regenerates **paper Table 4**: MobileNetV2 / TinyImageNet(synth),
+//! o = 3 operating points — relative multiplication power and Top-5
+//! accuracy loss for every (method, retraining strategy), plus the
+//! multiplier-instance count and parameter overhead columns.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use qos_nets::baselines;
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::util::json;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Table 4: MobileNetV2 / synthtin, o = 3 operating points ===\n");
+    let Ok(exp) = Experiment::load("artifacts", "table4_mnv2") else {
+        println!("[table4_mnv2] artifacts missing — skipped (run scripts_queue.sh)");
+        return Ok(());
+    };
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let se = errmodel::sigma_e(&db, &exp.stats);
+    let limit = std::env::var("TABLE4_LIMIT").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    // parameter accounting (exp.json from stage A)
+    let exp_meta = json::parse(&std::fs::read_to_string(exp.dir.join("exp.json"))?)
+        .map_err(anyhow::Error::msg)?;
+    let n_params = exp_meta.get("n_params").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let bn_overlay = exp_meta.get("bn_overlay_params").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let o = exp.scales().len() as f64;
+
+    let exact = pipeline::exact_operating_point(&exp)?;
+    let base = pipeline::eval_operating_point(&exp, &db, &exact, 16, Some(limit))?;
+    println!(
+        "baseline (8-bit, exact mult): top5 {:.2}%  params {:.2}M\n",
+        100.0 * base.top5,
+        n_params / 1e6
+    );
+
+    let assignments = pipeline::read_assignment(&exp)?;
+    println!(
+        "{:30} {:>6} {:>22} {:>22} {:>6} {:>9}",
+        "method", "", "rel. power / OP", "top5 loss [pp] / OP", "#AMs", "params"
+    );
+
+    // --- QoS-Nets rows: none / full / bn ---
+    for (mode, label, params_str) in [
+        ("none", "QoS-Nets w/o retraining", format!("{:.2}M", n_params / 1e6)),
+        ("full", "QoS-Nets full retraining", format!("{:.2}M", n_params * o / 1e6)),
+        ("bn", "QoS-Nets BN tuning", format!("{:.2}M", (n_params + bn_overlay * o) / 1e6)),
+    ] {
+        let mut powers = Vec::new();
+        let mut losses = Vec::new();
+        let mut used: std::collections::BTreeSet<usize> = Default::default();
+        for (i, (_s, power, amap)) in assignments.iter().enumerate() {
+            used.extend(amap.values().cloned());
+            let overlay = match mode {
+                "bn" => Some(exp.dir.join(format!("bn_op{i}.qten"))),
+                "full" => Some(exp.dir.join(format!("params_full_op{i}.qten"))),
+                _ => None,
+            }
+            .filter(|p| p.exists());
+            let op = pipeline::build_operating_point(&exp, &format!("op{i}"), amap.clone(), *power, overlay.as_deref())?;
+            let r = pipeline::eval_operating_point(&exp, &db, &op, 16, Some(limit))?;
+            powers.push(format!("{:.1}%", 100.0 * power));
+            losses.push(format!("{:.2}", 100.0 * (base.top5 - r.top5)));
+        }
+        println!(
+            "{:30} {:>6} {:>22} {:>22} {:>6} {:>9}",
+            label,
+            "",
+            powers.join(" / "),
+            losses.join(" / "),
+            used.len(),
+            params_str
+        );
+    }
+
+    // --- unconstrained gradient search [16] per scale (no retraining) ---
+    {
+        let mut powers = Vec::new();
+        let mut losses = Vec::new();
+        let mut used: std::collections::BTreeSet<usize> = Default::default();
+        for &s in &exp.scales() {
+            let a = baselines::gradient_search(&db, &se, &exp.sigma_g, s);
+            used.extend(a.iter().cloned());
+            let power = errmodel::relative_power(&db, &exp.stats, &a);
+            let amap: HashMap<String, usize> = exp
+                .layer_names
+                .iter()
+                .cloned()
+                .zip(a.iter().cloned())
+                .collect();
+            let op = pipeline::build_operating_point(&exp, "gs", amap, power, None)?;
+            let r = pipeline::eval_operating_point(&exp, &db, &op, 16, Some(limit))?;
+            powers.push(format!("{:.1}%", 100.0 * power));
+            losses.push(format!("{:.2}", 100.0 * (base.top5 - r.top5)));
+        }
+        println!(
+            "{:30} {:>6} {:>22} {:>22} {:>6} {:>9}",
+            "Gradient Search [16] (raw)",
+            "",
+            powers.join(" / "),
+            losses.join(" / "),
+            used.len(),
+            format!("{:.2}M", n_params * o / 1e6)
+        );
+    }
+
+    // --- homogeneous rows: nearest-power instances to each OP ---
+    {
+        let mut powers = Vec::new();
+        let mut losses = Vec::new();
+        let mut used: std::collections::BTreeSet<usize> = Default::default();
+        for (_s, power, _) in &assignments {
+            // pick the single instance whose network power is closest
+            let sweep = baselines::homogeneous_sweep(&db, &se, &exp.sigma_g, &exp.stats);
+            let (mid, p, _) = sweep
+                .into_iter()
+                .min_by(|a, b| {
+                    (a.1 - power).abs().partial_cmp(&(b.1 - power).abs()).unwrap()
+                })
+                .unwrap();
+            used.insert(mid);
+            let amap: HashMap<String, usize> = exp
+                .layer_names
+                .iter()
+                .map(|n| (n.clone(), mid))
+                .collect();
+            let op = pipeline::build_operating_point(&exp, "hom", amap, p, None)?;
+            let r = pipeline::eval_operating_point(&exp, &db, &op, 16, Some(limit))?;
+            powers.push(format!("{:.1}%", 100.0 * p));
+            losses.push(format!("{:.2}", 100.0 * (base.top5 - r.top5)));
+        }
+        println!(
+            "{:30} {:>6} {:>22} {:>22} {:>6} {:>9}",
+            "Homogeneous [2] (raw)",
+            "",
+            powers.join(" / "),
+            losses.join(" / "),
+            used.len(),
+            format!("{:.2}M", n_params * o / 1e6)
+        );
+    }
+
+    println!("\npaper reference (MobileNetV2/TinyImageNet, power / top-5 loss):");
+    println!("  Homogeneous          84.1/70.6/60.6%   0.85/0.51/15.86   3 AMs  7.44M");
+    println!("  Gradient Search [16] 83.7/70.5/55.9%   0.08/0.47/2.02   16 AMs  7.44M");
+    println!("  QoS-Nets w/o retrain 84.7/69.4/57.2%   30.0/76.8/76.7    4 AMs  2.48M");
+    println!("  QoS-Nets full        84.7/69.4/57.2%   0.10/0.52/1.65    4 AMs  7.44M");
+    println!("  QoS-Nets BN tuning   84.7/69.4/57.2%   0.30/0.71/2.33    4 AMs  2.54M");
+    Ok(())
+}

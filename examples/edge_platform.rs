@@ -1,0 +1,116 @@
+//! Edge-platform simulation: battery + thermal environment driving QoS.
+//!
+//! Couples the environmental simulator (battery SoC, thermal RC node,
+//! governor) to the QoS controller and the batching server: as the
+//! battery drains / the die heats, the governor shrinks the power budget
+//! and the controller walks DOWN the operating-point ladder (graceful
+//! degradation instead of the paper's "binary failure mode"); harvest
+//! or idle periods recover the budget and accuracy climbs back.
+//!
+//!   cargo run --release --example edge_platform -- [exp] [sim_secs]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::qos::envsim::{EnvConfig, EnvSimulator};
+use qos_nets::qos::{LadderEntry, QosConfig, QosController};
+use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let exp_name = args.first().map(|s| s.as_str()).unwrap_or("quick");
+    let sim_secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5.0);
+
+    let exp = Experiment::load("artifacts", exp_name)?;
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let assignments = pipeline::read_assignment(&exp)?;
+    anyhow::ensure!(!assignments.is_empty(), "run `qos-nets search --exp {exp_name}` first");
+
+    let mut ops = Vec::new();
+    for (i, (_s, power, amap)) in assignments.into_iter().enumerate() {
+        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
+        ops.push(pipeline::build_operating_point(
+            &exp,
+            &format!("op{i}"),
+            amap,
+            power,
+            overlay.exists().then_some(overlay.as_path()),
+        )?);
+    }
+    let ladder: Vec<LadderEntry> = ops
+        .iter()
+        .map(|o| LadderEntry { name: o.name.clone(), power: o.relative_power })
+        .collect();
+    let mut controller = QosController::new(ladder, QosConfig::default());
+    let server = Server::start(
+        exp.graph.clone(),
+        db,
+        ops,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4), workers: 1 },
+    )?;
+
+    // a small battery under heavy load: forces the full QoS ladder walk
+    let mut env = EnvSimulator::new(EnvConfig {
+        battery_capacity: 150.0,
+        initial_soc: 0.75,
+        harvest_peak: 6.0,
+        full_power_draw: 12.0,
+        ..Default::default()
+    });
+
+    let (images, _) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let n_img = images.len() / elems;
+    let mut rng = Rng::new(1);
+
+    println!("t[s]  SoC    temp°C  budget  OP  power");
+    let started = Instant::now();
+    let mut receivers = Vec::new();
+    let mut last_op = usize::MAX;
+    let steps = (sim_secs / 0.05) as usize;
+    for step in 0..steps {
+        // each wall 50 ms simulates 10 s of platform time (battery scale)
+        let served_power = server.ops()[server.operating_point()].relative_power;
+        let budget = env.step(10.0, served_power);
+        if let Some(idx) = controller.observe(budget, Instant::now()) {
+            server.set_operating_point(idx);
+        }
+        if server.operating_point() != last_op || step % 20 == 0 {
+            last_op = server.operating_point();
+            let st = env.state();
+            println!(
+                "{:5.1} {:6.2} {:7.1} {:7.2} {:>3} {:6.1}%",
+                st.t,
+                st.soc,
+                st.temperature,
+                st.budget,
+                last_op,
+                100.0 * server.ops()[last_op].relative_power
+            );
+        }
+        let deadline = started + Duration::from_millis(50 * (step as u64 + 1));
+        while Instant::now() < deadline {
+            let i = rng.below(n_img);
+            receivers.push(server.submit(images[i * elems..(i + 1) * elems].to_vec())?);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let mut done = 0u64;
+    for rx in receivers {
+        if rx.recv_timeout(Duration::from_secs(20)).is_ok() {
+            done += 1;
+        }
+    }
+    let m = server.shutdown();
+    println!(
+        "\ncompleted {done} requests; OP switches {}; budget violations {}; \
+         mean latency {:.2} ms",
+        controller.switches,
+        controller.budget_violations,
+        m.latency.mean_us() / 1e3
+    );
+    Ok(())
+}

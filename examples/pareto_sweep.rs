@@ -1,0 +1,64 @@
+//! Pareto sweep: how the subset size n and the operating-point scale set
+//! shape the accuracy/power trade-off (the design space behind paper
+//! Secs. 3.1-3.2).
+//!
+//!   cargo run --release --example pareto_sweep -- [exp]
+//!
+//! Uses the error model as the quality proxy (no retraining), so the
+//! sweep runs in milliseconds and prints the predicted Pareto table.
+
+use std::sync::Arc;
+
+use qos_nets::baselines::quality_penalty;
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::Experiment;
+use qos_nets::selection::{search, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let exp_name = std::env::args().nth(1).unwrap_or_else(|| "quick".into());
+    let exp = Experiment::load("artifacts", &exp_name)?;
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let se = errmodel::sigma_e(&db, &exp.stats);
+
+    println!("# n-constraint sweep (single operating point, scale 1.0)");
+    println!("{:>3} {:>10} {:>10} {:>8} {:>9}", "n", "power", "penalty", "#AMs", "inertia");
+    for n in 1..=8 {
+        let cfg = SearchConfig {
+            n_multipliers: n,
+            scales: vec![1.0],
+            seed: exp.seed(),
+            restarts: 8,
+        };
+        let sol = search(&db, &se, &exp.sigma_g, &exp.stats, &cfg);
+        println!(
+            "{:>3} {:>9.2}% {:>10.4} {:>8} {:>9.3}",
+            n,
+            100.0 * sol.power[0],
+            quality_penalty(&se, &exp.sigma_g, &sol.assignment[0]),
+            sol.subset.len(),
+            sol.kmeans_inertia
+        );
+    }
+
+    println!("\n# operating-point ladder sweep (n = {})", exp.n_multipliers());
+    let ladders: Vec<Vec<f64>> = vec![
+        vec![1.0],
+        vec![0.3, 1.0],
+        vec![0.1, 0.3, 1.0],
+        vec![0.05, 0.1, 0.3, 1.0],
+    ];
+    for scales in ladders {
+        let cfg = SearchConfig {
+            n_multipliers: exp.n_multipliers(),
+            scales: scales.clone(),
+            seed: exp.seed(),
+            restarts: 8,
+        };
+        let sol = search(&db, &se, &exp.sigma_g, &exp.stats, &cfg);
+        let powers: Vec<String> = sol.power.iter().map(|p| format!("{:.1}%", 100.0 * p)).collect();
+        let subset: Vec<&str> = sol.subset.iter().map(|&m| db.specs[m].name.as_str()).collect();
+        println!("S={scales:?}: powers=[{}] subset={subset:?}", powers.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! End-to-end QoS serving driver (the repo's headline example).
+//!
+//! Loads a searched + fine-tuned experiment, starts the batching
+//! inference server with all operating points resident, replays a
+//! synthetic power-budget trace through the QoS controller, and reports
+//! latency / throughput / per-OP accuracy — the runtime behaviour the
+//! paper's "QoS scaling" section describes.
+//!
+//!   cargo run --release --example qos_serving -- [exp] [secs] [trace]
+//!
+//! Defaults: quick, 6 seconds, "steps" trace.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+use qos_nets::qos::{budget_trace, LadderEntry, QosConfig, QosController};
+use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let exp_name = args.first().map(|s| s.as_str()).unwrap_or("quick");
+    let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+    let trace_kind = args.get(2).map(|s| s.as_str()).unwrap_or("steps");
+
+    let exp = Experiment::load("artifacts", exp_name)?;
+    let db = Arc::new(MulDb::load("artifacts")?);
+    let assignments = pipeline::read_assignment(&exp)?;
+    anyhow::ensure!(!assignments.is_empty(), "run `qos-nets search --exp {exp_name}` first");
+
+    // operating points, BN-tuned when stage B overlays exist
+    let mut ops = Vec::new();
+    for (i, (_s, power, amap)) in assignments.into_iter().enumerate() {
+        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
+        ops.push(pipeline::build_operating_point(
+            &exp,
+            &format!("op{i}"),
+            amap,
+            power,
+            overlay.exists().then_some(overlay.as_path()),
+        )?);
+    }
+    let ladder: Vec<LadderEntry> = ops
+        .iter()
+        .map(|o| LadderEntry { name: o.name.clone(), power: o.relative_power })
+        .collect();
+    let mut controller = QosController::new(ladder, QosConfig::default());
+
+    // measure per-OP accuracy up front (what QoS the user gets per rung)
+    println!("operating-point ladder:");
+    for (i, op) in ops.iter().enumerate() {
+        let r = pipeline::eval_operating_point(&exp, &db, op, 32, Some(128))?;
+        println!(
+            "  {} power={:.1}% top1={:.1}%",
+            op.name,
+            100.0 * op.relative_power,
+            100.0 * r.top1
+        );
+        let _ = i;
+    }
+
+    let server = Server::start(
+        exp.graph.clone(),
+        db.clone(),
+        ops,
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(4), workers: 2 },
+    )?;
+
+    let (images, labels) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let classes = exp.num_classes();
+    let n_img = labels.len();
+
+    let steps = (secs * 20.0) as usize;
+    let trace = budget_trace(trace_kind, steps, 7);
+    let mut rng = Rng::new(99);
+    let started = Instant::now();
+    let mut pending = Vec::new();
+    let mut submitted = 0u64;
+    let mut switch_log = Vec::new();
+
+    for (step, &budget) in trace.iter().enumerate() {
+        if let Some(idx) = controller.observe(budget, Instant::now()) {
+            server.set_operating_point(idx);
+            switch_log.push((started.elapsed().as_millis(), budget, idx));
+        }
+        let deadline = started + Duration::from_millis(50 * (step as u64 + 1));
+        while Instant::now() < deadline {
+            let i = rng.below(n_img);
+            pending.push((i, server.submit(images[i * elems..(i + 1) * elems].to_vec())?));
+            submitted += 1;
+            std::thread::sleep(Duration::from_micros(800));
+        }
+    }
+
+    // drain + accuracy-in-flight
+    let mut correct = 0u64;
+    let mut done = 0u64;
+    for (img_idx, rx) in pending {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(30)) {
+            done += 1;
+            let arg = resp
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if arg == labels[img_idx] as usize {
+                correct += 1;
+            }
+            let _ = classes;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let m = server.shutdown();
+
+    println!("\n=== serving report ({trace_kind} budget trace, {:.1}s) ===", wall);
+    println!("requests: {submitted} submitted, {done} completed ({:.1} req/s)", done as f64 / wall);
+    println!("online top-1 accuracy across OP switches: {:.2}%", 100.0 * correct as f64 / done.max(1) as f64);
+    println!(
+        "latency: mean {:.2} ms | p50 <= {:.2} ms | p99 <= {:.2} ms | max {:.2} ms",
+        m.latency.mean_us() / 1e3,
+        m.latency.percentile_us(50.0) as f64 / 1e3,
+        m.latency.percentile_us(99.0) as f64 / 1e3,
+        m.latency.max_us() as f64 / 1e3
+    );
+    println!("mean batch size: {:.2}", m.mean_batch());
+    let mut per_op: HashMap<usize, u64> = HashMap::new();
+    for (i, c) in m.per_op_requests.iter().enumerate() {
+        per_op.insert(i, *c);
+    }
+    println!("per-OP request counts: {:?}", per_op);
+    println!("OP switches: {} (budget violations {})", controller.switches, controller.budget_violations);
+    for (ms, budget, idx) in switch_log {
+        println!("  t={ms:>6}ms budget={budget:.2} -> OP{idx}");
+    }
+    Ok(())
+}

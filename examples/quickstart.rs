@@ -1,0 +1,64 @@
+//! Quickstart: the whole QoS-Nets flow on the `quick` artifacts.
+//!
+//!   make artifacts && cargo build --release
+//!   cargo run --release --example quickstart
+//!
+//! Loads the exported experiment, runs the constrained multi-operating-
+//! point search, evaluates every operating point with the bit-exact LUT
+//! engine and prints a paper-style summary.
+
+use std::sync::Arc;
+
+use qos_nets::muldb::MulDb;
+use qos_nets::pipeline::{self, Experiment};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let exp = Experiment::load(&artifacts, "quick")?;
+    let db = Arc::new(MulDb::load(&artifacts)?);
+
+    println!("experiment: {} ({} approximable layers)", exp.name, exp.layer_names.len());
+    println!("search space: {} multipliers, n = {}, scales = {:?}", db.len(), exp.n_multipliers(), exp.scales());
+
+    // 1. constrained multi-OP search (error model -> preference vectors
+    //    -> k-means -> per-centroid multiplier pick)
+    let (_, sol) = pipeline::run_search(&exp, &db);
+    pipeline::write_assignment(&exp, &db, &sol)?;
+    println!("\nselected subset:");
+    for &mid in &sol.subset {
+        println!("  {} (relative power {:.3})", db.specs[mid].name, db.power(mid));
+    }
+
+    // 2. evaluate the exact baseline + every operating point
+    let exact = pipeline::exact_operating_point(&exp)?;
+    let base = pipeline::eval_operating_point(&exp, &db, &exact, 32, Some(256))?;
+    println!("\n8-bit baseline (exact multipliers): top1 {:.2}%", 100.0 * base.top1);
+
+    for (i, assignment) in sol.assignment.iter().enumerate() {
+        let amap = exp
+            .layer_names
+            .iter()
+            .cloned()
+            .zip(assignment.iter().cloned())
+            .collect();
+        // use the BN-tuned overlay when stage B has produced one
+        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
+        let op = pipeline::build_operating_point(
+            &exp,
+            &format!("op{i}"),
+            amap,
+            sol.power[i],
+            overlay.exists().then_some(overlay.as_path()),
+        )?;
+        let r = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(256))?;
+        println!(
+            "OP{i}: multiplication power {:.1}% | top1 {:.2}% ({:+.2}pp vs baseline){}",
+            100.0 * sol.power[i],
+            100.0 * r.top1,
+            100.0 * (r.top1 - base.top1),
+            if overlay.exists() { " [BN-tuned]" } else { " [no retraining]" },
+        );
+    }
+    println!("\n(run `python -m compile.aot retrain --exp quick` for the BN overlays)");
+    Ok(())
+}

@@ -1,0 +1,319 @@
+"""AOT build orchestrator — the *only* entry point that runs Python.
+
+Stage A (``build``): train baseline -> QAT -> AGN sensitivity search ->
+layer statistics -> export all artifacts the Rust side needs::
+
+    artifacts/
+      muldb.json  luts.bin  lowrank.bin         (shared, once)
+      <exp>/
+        exp.json           experiment config + baseline accuracies
+        graph.json         topology + MACs + quantization parameters
+        params.qten        QAT parameters (weights, BN, biases)
+        sensitivity.json   sigma_g from the AGN search
+        layer_stats.json   histograms etc. for the error model
+        testset.qten       evaluation images (f32) + labels (i32)
+        trainset.qten      retraining data for stage B
+        model.hlo.txt      serving graph (per-OP tensors as inputs)
+        kernel.hlo.txt     stand-alone L1 Pallas kernel
+        hlo_signature.json input ordering for both HLO artifacts
+
+Stage B (``retrain``): consume the Rust-produced ``assignment.json`` and
+fine-tune per operating point (none / full / bn), exporting per-OP BN
+overlays + a retrain report.  Stage B is still build-time Python; the
+request path stays pure Rust.
+
+HLO is emitted as **text** via StableHLO -> XlaComputation: jax >= 0.5
+serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, datasets, model as model_mod, models, muldb, stats as stats_mod, tensorio
+from .agn import AgnConfig, search as agn_search
+from .executor import bn_param_count, init_params, num_params
+from .graph import Graph
+from .quant import QParams
+from .train import (
+    TrainConfig,
+    calibrate_quant,
+    evaluate,
+    refresh_weight_qparams,
+    residual_noise_for_assignment,
+    retrain_approx,
+    train,
+    uv_for_assignment,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # "constant({...})" and the 0.5.1-era text parser silently zero-fills
+    # them — the exported weights would all read as zero on the Rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), {"f32": jnp.float32, "i32": jnp.int32}[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Stage A
+# ---------------------------------------------------------------------------
+
+
+def _params_to_tensors(graph: Graph, params: dict) -> dict:
+    out = {}
+    for n in graph.approx_layers():
+        for k, v in params[n.name].items():
+            out[f"{n.name}.{k}"] = np.asarray(v)
+    return out
+
+
+def _tensors_to_params(graph: Graph, tensors: dict) -> dict:
+    params = {}
+    for n in graph.approx_layers():
+        group = {}
+        for key, v in tensors.items():
+            ln, _, pk = key.rpartition(".")
+            if ln == n.name:
+                group[pk] = jnp.asarray(v)
+        params[n.name] = group
+    return params
+
+
+def _quant_to_json(quant_meta: dict) -> dict:
+    return {
+        name: {"in": d["in"].to_json(), "w": d["w"].to_json()}
+        for name, d in quant_meta.items()
+    }
+
+
+def _quant_from_json(d: dict) -> dict:
+    return {
+        name: {
+            "in": QParams(v["in"]["scale"], v["in"]["zero_point"]),
+            "w": QParams(v["w"]["scale"], v["w"]["zero_point"]),
+        }
+        for name, v in d.items()
+    }
+
+
+def build_graph(cfg: configs.ExperimentConfig) -> Graph:
+    return models.build(cfg.model, configs.num_classes(cfg), configs.hw(cfg), cfg.width)
+
+
+def stage_a(cfg: configs.ExperimentConfig, outdir: str, log=print) -> dict:
+    t0 = time.time()
+    exp_dir = os.path.join(outdir, cfg.name)
+    os.makedirs(exp_dir, exist_ok=True)
+
+    # shared multiplier artifacts (idempotent)
+    if not os.path.exists(os.path.join(outdir, "muldb.json")):
+        log("building multiplier LUT family...")
+        muldb.write_artifacts(outdir, rank=16)
+
+    log(f"[{cfg.name}] generating dataset {cfg.dataset}...")
+    tr_x, tr_y = datasets.generate(cfg.dataset, "train")
+    te_x, te_y = datasets.generate(cfg.dataset, "test")
+
+    graph = build_graph(cfg)
+    params = init_params(graph, cfg.seed)
+    log(f"[{cfg.name}] model {cfg.model} w={cfg.width}: "
+        f"{len(graph.approx_layers())} approx layers, {num_params(params):,} params")
+
+    log(f"[{cfg.name}] float training ({cfg.float_epochs} epochs)...")
+    tc = TrainConfig(epochs=cfg.float_epochs, batch=cfg.batch, lr=cfg.lr, seed=cfg.seed)
+    params = train(graph, params, tr_x, tr_y, tc, mode="float", log=log)
+    acc_float = evaluate(graph, params, te_x, te_y, "float")
+    log(f"[{cfg.name}] float top1={acc_float['top1']:.3f} top5={acc_float['top5']:.3f}")
+
+    log(f"[{cfg.name}] calibrating quantization + QAT ({cfg.qat_epochs} epochs)...")
+    quant_meta = calibrate_quant(graph, params, tr_x)
+    tcq = TrainConfig(epochs=cfg.qat_epochs, batch=cfg.batch, lr=cfg.lr * 0.1, seed=cfg.seed + 1)
+    params = train(graph, params, tr_x, tr_y, tcq, mode="qat", quant_meta=quant_meta, log=log)
+    quant_meta = refresh_weight_qparams(graph, params, quant_meta)
+    acc_qat = evaluate(graph, params, te_x, te_y, "qat", quant_meta)
+    log(f"[{cfg.name}] qat top1={acc_qat['top1']:.3f} top5={acc_qat['top5']:.3f}")
+
+    log(f"[{cfg.name}] AGN sensitivity search ({cfg.agn_epochs} epochs)...")
+    agn_cfg = AgnConfig(
+        lam=cfg.agn_lambda,
+        sigma_max=cfg.agn_sigma_max,
+        sigma_init=cfg.agn_sigma_init,
+        epochs=cfg.agn_epochs,
+    )
+    sigma_g = agn_search(graph, params, quant_meta, tr_x, tr_y, agn_cfg, batch=cfg.batch, seed=cfg.seed, log=log)
+
+    log(f"[{cfg.name}] collecting layer statistics...")
+    layer_stats = stats_mod.collect_layer_stats(graph, params, quant_meta, tr_x, batches=cfg.stats_batches, batch=cfg.batch)
+
+    # ---- exports ----
+    tensorio.save(os.path.join(exp_dir, "params.qten"), _params_to_tensors(graph, params))
+    tensorio.save(os.path.join(exp_dir, "testset.qten"), {"images": te_x, "labels": te_y})
+    tensorio.save(os.path.join(exp_dir, "trainset.qten"), {"images": tr_x, "labels": tr_y})
+
+    with open(os.path.join(exp_dir, "graph.json"), "w") as f:
+        json.dump(graph.to_json(qmeta=_quant_to_json(quant_meta)), f, indent=1)
+    names = [n.name for n in graph.approx_layers()]
+    with open(os.path.join(exp_dir, "sensitivity.json"), "w") as f:
+        json.dump({"layers": names, "sigma_g": sigma_g.tolist(),
+                   "lambda": cfg.agn_lambda, "sigma_max": cfg.agn_sigma_max}, f, indent=1)
+    with open(os.path.join(exp_dir, "layer_stats.json"), "w") as f:
+        json.dump(layer_stats, f)
+
+    export_hlo(cfg, graph, params, quant_meta, exp_dir, log=log)
+
+    summary = {
+        "config": cfg.to_json(),
+        "acc_float": acc_float,
+        "acc_qat": acc_qat,
+        "n_params": num_params(params),
+        "bn_overlay_params": bn_param_count(graph),
+        "build_seconds": time.time() - t0,
+    }
+    with open(os.path.join(exp_dir, "exp.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    log(f"[{cfg.name}] stage A done in {summary['build_seconds']:.1f}s")
+    return summary
+
+
+def export_hlo(cfg, graph: Graph, params: dict, quant_meta: dict, exp_dir: str, log=print) -> None:
+    log(f"[{cfg.name}] lowering serving graph to HLO text...")
+    sig = model_mod.serving_signature(graph, cfg.rank, cfg.export_batch)
+    fn = model_mod.make_serving_fn(graph, params, quant_meta)
+    specs = [_spec(s["shape"], s["dtype"]) for s in sig]
+    lowered = jax.jit(fn).lower(*specs)
+    with open(os.path.join(exp_dir, "model.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # stand-alone L1 kernel artifact (first-layer-like shape)
+    km, kk, kn = 64, 32, 32
+    ksig = model_mod.kernel_signature(km, kk, kn)
+    kfn = model_mod.make_kernel_fn()
+    klowered = jax.jit(kfn).lower(*[_spec(s["shape"], s["dtype"]) for s in ksig])
+    with open(os.path.join(exp_dir, "kernel.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(klowered))
+
+    with open(os.path.join(exp_dir, "hlo_signature.json"), "w") as f:
+        json.dump({"model": sig, "kernel": ksig, "rank": cfg.rank,
+                   "export_batch": cfg.export_batch}, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Stage B: per-operating-point fine-tuning from a Rust assignment
+# ---------------------------------------------------------------------------
+
+
+def load_experiment(outdir: str, name: str):
+    exp_dir = os.path.join(outdir, name)
+    with open(os.path.join(exp_dir, "exp.json")) as f:
+        summary = json.load(f)
+    cfg = configs.ExperimentConfig.from_json(summary["config"])
+    graph = build_graph(cfg)
+    with open(os.path.join(exp_dir, "graph.json")) as f:
+        gj = json.load(f)
+    quant_meta = _quant_from_json({n["name"]: n["quant"] for n in gj["nodes"] if "quant" in n})
+    params = _tensors_to_params(graph, tensorio.load(os.path.join(exp_dir, "params.qten")))
+    return cfg, graph, params, quant_meta, exp_dir
+
+
+def _load_lowrank(outdir: str):
+    import struct
+
+    with open(os.path.join(outdir, "lowrank.bin"), "rb") as f:
+        magic, count, nop, rank = struct.unpack("<4sIII", f.read(16))
+        assert magic == b"QLRK"
+        u = np.frombuffer(f.read(count * nop * rank * 4), "<f4").reshape(count, nop, rank)
+        v = np.frombuffer(f.read(count * nop * rank * 4), "<f4").reshape(count, nop, rank)
+    return u, v
+
+
+def stage_b(outdir: str, name: str, modes=("none", "full", "bn"), log=print) -> dict:
+    cfg, graph, base_params, quant_meta, exp_dir = load_experiment(outdir, name)
+    with open(os.path.join(exp_dir, "assignment.json")) as f:
+        assignment = json.load(f)
+    with open(os.path.join(exp_dir, "layer_stats.json")) as f:
+        layer_stats = json.load(f)
+    lr_u, lr_v = _load_lowrank(outdir)
+
+    tr = tensorio.load(os.path.join(exp_dir, "trainset.qten"))
+    te = tensorio.load(os.path.join(exp_dir, "testset.qten"))
+    tr_x, tr_y = tr["images"], tr["labels"].astype(np.int32)
+    te_x, te_y = te["images"], te["labels"].astype(np.int32)
+
+    report = {"experiment": name, "ops": []}
+    rtc = TrainConfig(
+        epochs=cfg.retrain_epochs, batch=cfg.batch, lr=cfg.retrain_lr,
+        lr_decay_at=(0.5,), lr_decay=0.1, augment=False, seed=cfg.seed + 7,
+    )
+
+    for op in assignment["operating_points"]:
+        op_idx = op["index"]
+        amap = {k: int(v) for k, v in op["assignment"].items()}
+        uv = uv_for_assignment(graph, amap, lr_u, lr_v, cfg.rank)
+        res_noise = residual_noise_for_assignment(graph, amap, layer_stats, lr_u, lr_v, cfg.rank)
+        entry = {"index": op_idx, "scale": op.get("scale"), "power": op.get("relative_power"), "modes": {}}
+        for mode in modes:
+            log(f"[{name}] OP{op_idx} retrain mode={mode}...")
+            p = retrain_approx(graph, jax.tree_util.tree_map(lambda x: x, base_params),
+                               quant_meta, uv, tr_x, tr_y, mode, rtc, res_noise=res_noise, log=log)
+            acc = evaluate(graph, p, te_x, te_y, "approx", quant_meta, uv)
+            entry["modes"][mode] = acc
+            log(f"[{name}] OP{op_idx} {mode}: top1={acc['top1']:.3f} top5={acc['top5']:.3f}")
+            if mode == "bn":
+                overlay = {}
+                for n in graph.approx_layers():
+                    for k in ("gamma", "beta", "b"):
+                        if k in p[n.name]:
+                            overlay[f"{n.name}.{k}"] = np.asarray(p[n.name][k])
+                tensorio.save(os.path.join(exp_dir, f"bn_op{op_idx}.qten"), overlay)
+            if mode == "full":
+                tensorio.save(os.path.join(exp_dir, f"params_full_op{op_idx}.qten"),
+                              _params_to_tensors(graph, p))
+        report["ops"].append(entry)
+
+    with open(os.path.join(exp_dir, "retrain_report.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    return report
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="QoS-Nets AOT build pipeline")
+    ap.add_argument("command", choices=["build", "retrain", "muldb"])
+    ap.add_argument("--exp", default="quick", help="experiment name (see configs.py)")
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--modes", default="none,full,bn", help="retrain modes for stage B")
+    args = ap.parse_args()
+
+    if args.command == "muldb":
+        meta = muldb.write_artifacts(args.out)
+        print(f"wrote {meta['count']} multipliers, digest {meta['digest_sha256'][:16]}")
+    elif args.command == "build":
+        stage_a(configs.get(args.exp), args.out)
+    elif args.command == "retrain":
+        stage_b(args.out, args.exp, modes=tuple(args.modes.split(",")))
+    else:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Experiment configuration system.
+
+Every paper experiment (and the CI-scale ``quick`` profile) is a named,
+JSON-serializable ``ExperimentConfig``.  The Rust CLI reads the exported
+``exp.json`` so both sides agree on the workload; CLI flags on either side
+can override individual fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    name: str
+    dataset: str
+    model: str
+    width: float = 1.0
+    # training schedule (epochs)
+    float_epochs: int = 8
+    qat_epochs: int = 4
+    agn_epochs: int = 3
+    retrain_epochs: int = 2
+    batch: int = 64
+    lr: float = 0.05
+    retrain_lr: float = 2e-3
+    # search
+    n_multipliers: int = 4  # n: clustered AM subset size
+    scales: Tuple[float, ...] = (1.0,)  # S: one entry per operating point
+    # AGN hyper-parameters.  The paper uses lambda=0.1, sigma_max=0.05,
+    # sigma_init=0.001 on its normalization; our noise is injected post-BN
+    # where activations have RMS ~1, so the equivalent working point that
+    # yields a *differentiated* sigma_g (verified empirically) is:
+    agn_lambda: float = 0.05
+    agn_sigma_max: float = 0.5
+    agn_sigma_init: float = 0.01
+    rank: int = 8  # low-rank error surrogate rank
+    # Deterministic-error safety factor: the AGN search measures tolerance
+    # to *fresh random* noise; deterministic multiplier error of equal std
+    # is correlated across MACs (shared weights) and constant across
+    # inference passes, so the usable tolerance is a fraction of sigma_g.
+    # Applied uniformly to every mapping method (ours and baselines).
+    tolerance_factor: float = 0.3
+    seed: int = 0
+    export_batch: int = 8  # HLO serving batch
+    stats_batches: int = 4
+
+    @property
+    def num_ops(self) -> int:
+        return len(self.scales)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["scales"] = list(self.scales)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "ExperimentConfig":
+        d = dict(d)
+        d["scales"] = tuple(d["scales"])
+        return ExperimentConfig(**d)
+
+
+def _hw_for(dataset: str) -> int:
+    return {"synthcifar10": 32, "synthcifar100": 32, "synthtin": 64, "microcifar": 16}[dataset]
+
+
+EXPERIMENTS: Dict[str, ExperimentConfig] = {}
+
+
+def _reg(cfg: ExperimentConfig) -> ExperimentConfig:
+    EXPERIMENTS[cfg.name] = cfg
+    return cfg
+
+
+# CI / unit-test scale: a few seconds of training.
+_reg(
+    ExperimentConfig(
+        name="quick",
+        dataset="microcifar",
+        model="resnet8",
+        width=0.5,
+        float_epochs=3,
+        qat_epochs=2,
+        agn_epochs=2,
+        retrain_epochs=2,
+        batch=64,
+        n_multipliers=3,
+        scales=(0.3, 1.0),
+        rank=8,
+    )
+)
+
+# Table 2: CIFAR-10, single operating point.
+for depth, n in [(8, 4), (14, 4), (20, 3), (32, 3)]:
+    _reg(
+        ExperimentConfig(
+            name=f"table2_resnet{depth}",
+            dataset="synthcifar10",
+            model=f"resnet{depth}",
+            width=1.0,
+            float_epochs=10,
+            qat_epochs=4,
+            agn_epochs=3,
+            retrain_epochs=3,
+            n_multipliers=n,
+            scales=(1.0,),
+        )
+    )
+
+# Table 3: CIFAR-100, single operating point, n = 3.
+for depth in (20, 32):
+    _reg(
+        ExperimentConfig(
+            name=f"table3_resnet{depth}",
+            dataset="synthcifar100",
+            model=f"resnet{depth}",
+            width=1.0,
+            float_epochs=12,
+            qat_epochs=4,
+            agn_epochs=3,
+            retrain_epochs=3,
+            n_multipliers=3,
+            scales=(1.0,),
+        )
+    )
+
+# Table 4 / Fig 3: MobileNetV2 on TinyImageNet-like data, o = 3, n = 4.
+_reg(
+    ExperimentConfig(
+        name="table4_mnv2",
+        dataset="synthtin",
+        model="mobilenet_v2",
+        width=0.5,
+        float_epochs=10,
+        qat_epochs=3,
+        agn_epochs=2,
+        retrain_epochs=2,
+        batch=48,
+        n_multipliers=4,
+        scales=(0.1, 0.3, 1.0),
+        retrain_lr=2e-3,
+    )
+)
+
+
+def get(name: str) -> ExperimentConfig:
+    if name not in EXPERIMENTS:
+        raise KeyError(f"unknown experiment {name!r}; have {sorted(EXPERIMENTS)}")
+    return EXPERIMENTS[name]
+
+
+def hw(cfg: ExperimentConfig) -> int:
+    return _hw_for(cfg.dataset)
+
+
+def num_classes(cfg: ExperimentConfig) -> int:
+    from .datasets import SPECS
+
+    return SPECS[cfg.dataset].num_classes
+
+
+def save(cfg: ExperimentConfig, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(cfg.to_json(), f, indent=1)

@@ -1,0 +1,109 @@
+"""Deterministic synthetic image-classification datasets.
+
+Offline substitutes for CIFAR-10/100 and TinyImageNet (see DESIGN.md).
+Each class is a procedural texture generator: an oriented grating with a
+class-specific frequency / orientation / color palette, modulated by a
+class-positioned Gaussian envelope, plus per-sample jitter (orientation
+noise, translation, brightness, additive pixel noise).  Classes are far
+enough apart to be learnable by a small CNN in a few epochs and close
+enough that approximation-induced error shows up as graded accuracy loss
+(the property the paper's experiments rely on).
+
+All generation is a pure function of ``(dataset seed, split, index)``, so
+the Python training side and any re-generation for the Rust evaluation
+set agree exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    num_classes: int
+    hw: int
+    n_train: int
+    n_test: int
+    seed: int
+
+
+SPECS = {
+    "synthcifar10": DatasetSpec("synthcifar10", 10, 32, 4096, 1024, 0xC1FA10),
+    "synthcifar100": DatasetSpec("synthcifar100", 100, 32, 8192, 2048, 0xC1FA64),
+    "synthtin": DatasetSpec("synthtin", 200, 64, 6000, 1500, 0x71F200),
+    # reduced variants for unit tests / CI-speed runs
+    "microcifar": DatasetSpec("microcifar", 10, 16, 512, 256, 0x3C0FFE),
+}
+
+
+def _class_params(spec: DatasetSpec, cls: int) -> dict:
+    rng = np.random.default_rng(np.uint64(spec.seed) + np.uint64(7919 * cls + 13))
+    return {
+        "theta": rng.uniform(0, np.pi),
+        "freq": rng.uniform(2.0, 7.0),
+        "phase": rng.uniform(0, 2 * np.pi),
+        "color": rng.uniform(0.25, 1.0, size=3),
+        "color2": rng.uniform(0.0, 0.75, size=3),
+        "cx": rng.uniform(0.25, 0.75),
+        "cy": rng.uniform(0.25, 0.75),
+        "sigma": rng.uniform(0.18, 0.42),
+        "checker": rng.uniform(0.0, 1.0) > 0.5,
+    }
+
+
+def _render(spec: DatasetSpec, params: dict, rng: np.random.Generator) -> np.ndarray:
+    hw = spec.hw
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32) / hw
+    theta = params["theta"] + rng.normal(0, 0.12)
+    freq = params["freq"] * (1.0 + rng.normal(0, 0.08))
+    cx = params["cx"] + rng.normal(0, 0.06)
+    cy = params["cy"] + rng.normal(0, 0.06)
+    u = np.cos(theta) * xx + np.sin(theta) * yy
+    v = -np.sin(theta) * xx + np.cos(theta) * yy
+    wave = np.sin(2 * np.pi * freq * u + params["phase"])
+    if params["checker"]:
+        wave = wave * np.sin(2 * np.pi * freq * v + params["phase"])
+    env = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * params["sigma"] ** 2)))
+    pattern = 0.5 + 0.5 * wave * env
+    img = (
+        pattern[..., None] * params["color"][None, None, :]
+        + (1 - pattern[..., None]) * params["color2"][None, None, :]
+    )
+    img = img * (1.0 + rng.normal(0, 0.08))  # brightness jitter
+    img = img + rng.normal(0, 0.04, size=img.shape)  # pixel noise
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def generate(spec_name: str, split: str) -> tuple:
+    """Returns (images NHWC f32 in [0,1], labels i32)."""
+    spec = SPECS[spec_name]
+    n = spec.n_train if split == "train" else spec.n_test
+    salt = 0 if split == "train" else 0x5EED
+    cls_params = [_class_params(spec, c) for c in range(spec.num_classes)]
+    imgs = np.empty((n, spec.hw, spec.hw, 3), dtype=np.float32)
+    labels = np.empty((n,), dtype=np.int32)
+    for i in range(n):
+        cls = i % spec.num_classes
+        rng = np.random.default_rng(np.uint64(spec.seed) + np.uint64(salt) * 1_000_003 + np.uint64(i) * 7907 + 1)
+        imgs[i] = _render(spec, cls_params[cls], rng)
+        labels[i] = cls
+    # deterministic shuffle so batches are class-mixed
+    order = np.random.default_rng(np.uint64(spec.seed) ^ np.uint64(salt + 99)).permutation(n)
+    return imgs[order], labels[order]
+
+
+def augment(imgs: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Light train-time augmentation: flips + up-to-2px translations."""
+    out = imgs.copy()
+    n, hw = imgs.shape[0], imgs.shape[1]
+    flip = rng.random(n) < 0.5
+    out[flip] = out[flip, :, ::-1]
+    shifts = rng.integers(-2, 3, size=(n, 2))
+    for i in range(n):
+        dy, dx = shifts[i]
+        out[i] = np.roll(out[i], (dy, dx), axis=(0, 1))
+    return out

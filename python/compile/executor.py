@@ -1,0 +1,260 @@
+"""JAX executor for the graph IR — one forward, four modes.
+
+  * ``float``   plain f32 forward (baseline training)
+  * ``qat``     fake-quantized weights + layer inputs (STE), QAT
+  * ``agn``     QAT forward + per-layer additive Gaussian noise whose
+                std vector sigma is a differentiable parameter (the
+                sensitivity search of Trommer et al. [16] / paper Sec 3.1)
+  * ``approx``  quantized forward with the per-layer approximate-multiplier
+                error added through the low-rank surrogate
+                err[a, w] ~= sum_r U_r[a] * V_r[w]
+                (see muldb.lowrank_error), which keeps retraining a pure
+                conv/matmul computation.
+
+Numeric contract with the Rust engine (rust/src/engine):
+
+  fake_quant(x) = s_a * (a - za)           [a = u8 code]
+  conv(fake_quant(x), fake_quant(w)) = s_a * s_w * sum (a - za)(w - zw)
+  err term                          = s_a * s_w * sum err[a, w]
+  sum lut[a,w] - za*SW - zw*SA + K*za*zw = sum (a-za)(w-zw) + sum err[a,w]
+
+so ``approx`` mode computes exactly the corrected integer LUT accumulation
+the Rust engine performs (up to f32 rounding and the rank truncation of
+the surrogate).  Padding is materialized as zero-point codes *before* the
+error gather so both sides feed padded taps through the multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, Node
+from .quant import QParams, fake_quant
+
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass
+class RunConfig:
+    mode: str = "float"  # float | qat | agn | approx
+    quant: Optional[Dict[str, Dict[str, QParams]]] = None  # name -> {in, w}
+    # agn
+    sigma: Optional[jnp.ndarray] = None  # (l,) noise std per approx layer
+    rng: Optional[jax.Array] = None
+    # approx: name -> (U (256,r) f32, V (256,r) f32)
+    uv: Optional[Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]] = None
+    # approx: per-layer std of the rank-truncation residual, injected as
+    # additive Gaussian noise during retraining (zero-mean, pre-BN) so the
+    # training-time error statistics match the bit-exact LUT semantics
+    # even for multipliers whose error map is not low-rank (otrunc*).
+    res_noise: Optional[Dict[str, float]] = None
+    bn_train: bool = False
+    collect_acts: bool = False  # record each approx layer's input + output
+
+
+def init_params(graph: Graph, seed: int = 0) -> dict:
+    """He-initialized parameter pytree."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for n in graph.approx_layers():
+        if n.kind == "conv":
+            fan_in = n.ksize * n.ksize * (n.cin // n.groups)
+            shape = (n.ksize, n.ksize, n.cin // n.groups, n.cout)
+        else:
+            fan_in = n.cin
+            shape = (n.cin, n.cout)
+        std = float(np.sqrt(2.0 / fan_in))
+        p = {"w": jnp.asarray(rng.normal(0, std, size=shape), dtype=jnp.float32)}
+        if n.has_bn:
+            p["gamma"] = jnp.ones((n.cout,), jnp.float32)
+            p["beta"] = jnp.zeros((n.cout,), jnp.float32)
+            p["mean"] = jnp.zeros((n.cout,), jnp.float32)
+            p["var"] = jnp.ones((n.cout,), jnp.float32)
+        else:
+            p["b"] = jnp.zeros((n.cout,), jnp.float32)
+        params[n.name] = p
+    return params
+
+
+def _interp_gather(table: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable LUT row lookup: linear interpolation over the index.
+
+    ``table``: (256, r); ``pos``: float codes in [0, 255] (integral in the
+    forward pass thanks to the STE).  The interpolation only matters for
+    the backward pass, where it provides a local slope for d err / d code.
+    """
+    pos = jnp.clip(pos, 0.0, 255.0)
+    lo = jnp.floor(pos)
+    frac = pos - lo
+    ilo = lo.astype(jnp.int32)
+    ihi = jnp.minimum(ilo + 1, 255)
+    tlo = table[ilo]
+    thi = table[ihi]
+    return tlo + frac[..., None] * (thi - tlo)
+
+
+def _codes_ste(x, qp: QParams):
+    q = jnp.clip(jnp.round(x / qp.scale) + qp.zero_point, 0.0, 255.0)
+    lin = x / qp.scale + qp.zero_point
+    return lin + jax.lax.stop_gradient(q - lin)
+
+
+def _conv(x, w, node: Node, padding) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(node.stride, node.stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=node.groups,
+    )
+
+
+def _approx_err_conv(x, w, node: Node, qp_in: QParams, qp_w: QParams, U, V) -> jnp.ndarray:
+    """s_a*s_w * conv(U[a], V[w]) with padded taps routed through the LUT."""
+    r = U.shape[1]
+    a_pos = _codes_ste(x, qp_in)
+    if node.pad > 0:
+        p = node.pad
+        a_pos = jnp.pad(
+            a_pos, ((0, 0), (p, p), (p, p), (0, 0)), constant_values=float(qp_in.zero_point)
+        )
+    w_pos = _codes_ste(w, qp_w)
+    ua = _interp_gather(U, a_pos)  # (B, H', W', Cin, r)
+    vw = _interp_gather(V, w_pos)  # (kh, kw, Cin/g, Cout, r)
+    b, hh, ww, cin = a_pos.shape
+    ua = ua.reshape(b, hh, ww, cin * r)
+    kh, kw, cing, cout = w.shape
+    vw = jnp.transpose(vw, (0, 1, 2, 4, 3)).reshape(kh, kw, cing * r, cout)
+    err = jax.lax.conv_general_dilated(
+        ua,
+        vw,
+        window_strides=(node.stride, node.stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=node.groups,
+    )
+    return qp_in.scale * qp_w.scale * err
+
+
+def _approx_err_dense(x, w, qp_in: QParams, qp_w: QParams, U, V) -> jnp.ndarray:
+    r = U.shape[1]
+    a_pos = _codes_ste(x, qp_in)
+    w_pos = _codes_ste(w, qp_w)
+    ua = _interp_gather(U, a_pos).reshape(x.shape[0], -1)  # (B, cin*r)
+    vw = jnp.transpose(_interp_gather(V, w_pos), (0, 2, 1)).reshape(-1, w.shape[1])
+    return qp_in.scale * qp_w.scale * (ua @ vw)
+
+
+def _batchnorm(y, p, train: bool):
+    if train:
+        axes = tuple(range(y.ndim - 1))
+        mean = jnp.mean(y, axis=axes)
+        var = jnp.var(y, axis=axes)
+        yn = (y - mean) / jnp.sqrt(var + BN_EPS)
+        return yn * p["gamma"] + p["beta"], (mean, var)
+    yn = (y - p["mean"]) / jnp.sqrt(p["var"] + BN_EPS)
+    return yn * p["gamma"] + p["beta"], None
+
+
+def _act(y, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(y)
+    if kind == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    return y
+
+
+def forward(graph: Graph, params: dict, x: jnp.ndarray, cfg: RunConfig, rng=None):
+    """Run the graph; returns (logits, aux).
+
+    aux = {"bn": {name: (mean, var)}, "acts": {name: (x_in, y_preact)}}
+    ``rng`` overrides cfg.rng (lets jitted training loops thread fresh keys).
+    """
+    mode = cfg.mode
+    vals: Dict[int, jnp.ndarray] = {0: x}
+    aux = {"bn": {}, "acts": {}}
+    approx_idx = 0
+    rng = rng if rng is not None else cfg.rng
+
+    for n in graph.nodes[1:]:
+        if n.kind in ("conv", "dense"):
+            xin = vals[n.inputs[0]]
+            if n.kind == "dense" and xin.ndim > 2:
+                xin = xin.reshape(xin.shape[0], -1)
+            p = params[n.name]
+            w = p["w"]
+            if mode in ("qat", "agn", "approx"):
+                qp_in = cfg.quant[n.name]["in"]
+                qp_w = cfg.quant[n.name]["w"]
+                xq = fake_quant(xin, qp_in)
+                wq = fake_quant(w, qp_w)
+            else:
+                xq, wq = xin, w
+
+            if cfg.collect_acts:
+                aux["acts"][n.name] = {"x": xq}
+
+            if n.kind == "conv":
+                pad = [(n.pad, n.pad), (n.pad, n.pad)]
+                y = _conv(xq, wq, n, pad)
+            else:
+                y = xq @ wq
+
+            if mode == "approx" and n.name in (cfg.uv or {}):
+                U, V = cfg.uv[n.name]
+                if n.kind == "conv":
+                    y = y + _approx_err_conv(xin, w, n, qp_in, qp_w, U, V)
+                else:
+                    y = y + _approx_err_dense(xin, w, qp_in, qp_w, U, V)
+                std = (cfg.res_noise or {}).get(n.name, 0.0)
+                if std > 0.0 and rng is not None:
+                    rng, sub = jax.random.split(rng)
+                    y = y + std * jax.random.normal(sub, y.shape)
+
+            if n.has_bn:
+                y, stats = _batchnorm(y, p, cfg.bn_train)
+                if stats is not None:
+                    aux["bn"][n.name] = stats
+            else:
+                y = y + p["b"]
+
+            if mode == "agn":
+                assert cfg.sigma is not None and rng is not None
+                rng, sub = jax.random.split(rng)
+                y = y + cfg.sigma[approx_idx] * jax.random.normal(sub, y.shape)
+
+            if cfg.collect_acts:
+                aux["acts"][n.name]["y"] = y
+
+            y = _act(y, n.act)
+            vals[n.nid] = y
+            approx_idx += 1
+        elif n.kind == "add":
+            y = vals[n.inputs[0]] + vals[n.inputs[1]]
+            vals[n.nid] = _act(y, n.act)
+        elif n.kind == "gap":
+            v = vals[n.inputs[0]]
+            vals[n.nid] = jnp.mean(v, axis=(1, 2))
+        elif n.kind == "output":
+            return vals[n.inputs[0]], aux
+        else:
+            raise ValueError(f"unhandled node kind {n.kind}")
+    raise ValueError("graph has no output node")
+
+
+def num_params(params: dict) -> int:
+    return int(sum(np.prod(v.shape) for p in params.values() for v in p.values()))
+
+
+def bn_param_count(graph: Graph) -> int:
+    """Parameters a per-operating-point BN overlay adds (gamma+beta [+bias])."""
+    total = 0
+    for n in graph.approx_layers():
+        total += 2 * n.cout if n.has_bn else n.cout
+    return total

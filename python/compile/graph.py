@@ -1,0 +1,190 @@
+"""Tiny SSA graph IR shared between the Python (L2) and Rust (L3) sides.
+
+A model is a list of nodes; each node consumes earlier nodes by id and
+produces one tensor (NHWC).  The same graph is executed by
+
+  * the JAX executor (``executor.py``) in float / QAT / AGN / approx modes
+    (training + artifact export), and
+  * the Rust native engine (``rust/src/engine``) with bit-exact integer
+    LUT arithmetic (deployment / evaluation / serving).
+
+``conv`` and ``dense`` nodes are the *approximable layers*: the units the
+paper assigns approximate multipliers to.  The exported ``graph.json``
+carries everything the Rust side needs: topology, shapes, MAC counts and
+quantization parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Node:
+    nid: int
+    kind: str  # input | conv | dense | add | gap | output
+    inputs: List[int]
+    name: str = ""
+    # conv attrs
+    cin: int = 0
+    cout: int = 0
+    ksize: int = 0
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    has_bn: bool = False
+    act: str = "none"  # none | relu | relu6
+    # filled by shape inference
+    out_shape: Tuple[int, ...] = ()
+    macs_per_out: int = 0  # K: MACs per output element (error-model fan-in)
+    macs_total: int = 0
+
+
+class Graph:
+    def __init__(self, input_shape: Tuple[int, int, int], name: str):
+        """input_shape = (H, W, C) without the batch dim."""
+        self.name = name
+        self.nodes: List[Node] = []
+        self.input_shape = input_shape
+        n = Node(nid=0, kind="input", inputs=[], name="input", out_shape=input_shape)
+        self.nodes.append(n)
+
+    def _push(self, node: Node) -> int:
+        node.nid = len(self.nodes)
+        self.nodes.append(node)
+        return node.nid
+
+    def conv(
+        self,
+        src: int,
+        cout: int,
+        ksize: int,
+        stride: int = 1,
+        groups: int = 1,
+        act: str = "relu",
+        has_bn: bool = True,
+        name: str = "",
+    ) -> int:
+        h, w, cin = self.nodes[src].out_shape
+        pad = (ksize - 1) // 2
+        oh = (h + 2 * pad - ksize) // stride + 1
+        ow = (w + 2 * pad - ksize) // stride + 1
+        k_fanin = ksize * ksize * (cin // groups)
+        node = Node(
+            nid=-1,
+            kind="conv",
+            inputs=[src],
+            name=name or f"conv{len(self.nodes)}",
+            cin=cin,
+            cout=cout,
+            ksize=ksize,
+            stride=stride,
+            pad=pad,
+            groups=groups,
+            has_bn=has_bn,
+            act=act,
+            out_shape=(oh, ow, cout),
+            macs_per_out=k_fanin,
+            macs_total=oh * ow * cout * k_fanin,
+        )
+        return self._push(node)
+
+    def dense(self, src: int, cout: int, act: str = "none", has_bn: bool = False, name: str = "") -> int:
+        shape = self.nodes[src].out_shape
+        cin = int(_prod(shape))
+        node = Node(
+            nid=-1,
+            kind="dense",
+            inputs=[src],
+            name=name or f"dense{len(self.nodes)}",
+            cin=cin,
+            cout=cout,
+            has_bn=has_bn,
+            act=act,
+            out_shape=(cout,),
+            macs_per_out=cin,
+            macs_total=cin * cout,
+        )
+        return self._push(node)
+
+    def add(self, a: int, b: int, act: str = "none", name: str = "") -> int:
+        assert self.nodes[a].out_shape == self.nodes[b].out_shape, (
+            self.nodes[a].out_shape,
+            self.nodes[b].out_shape,
+        )
+        node = Node(
+            nid=-1,
+            kind="add",
+            inputs=[a, b],
+            name=name or f"add{len(self.nodes)}",
+            act=act,
+            out_shape=self.nodes[a].out_shape,
+        )
+        return self._push(node)
+
+    def gap(self, src: int, name: str = "") -> int:
+        h, w, c = self.nodes[src].out_shape
+        node = Node(
+            nid=-1,
+            kind="gap",
+            inputs=[src],
+            name=name or "gap",
+            out_shape=(c,),
+        )
+        return self._push(node)
+
+    def output(self, src: int) -> int:
+        node = Node(nid=-1, kind="output", inputs=[src], name="output", out_shape=self.nodes[src].out_shape)
+        return self._push(node)
+
+    # ------------------------------------------------------------------
+    def approx_layers(self) -> List[Node]:
+        """The l layers the mapping problem assigns multipliers to."""
+        return [n for n in self.nodes if n.kind in ("conv", "dense")]
+
+    def total_macs(self) -> int:
+        return sum(n.macs_total for n in self.approx_layers())
+
+    def to_json(self, qmeta: Optional[Dict[str, dict]] = None) -> dict:
+        nodes = []
+        for n in self.nodes:
+            d = {
+                "id": n.nid,
+                "kind": n.kind,
+                "inputs": n.inputs,
+                "name": n.name,
+                "out_shape": list(n.out_shape),
+            }
+            if n.kind in ("conv", "dense"):
+                d.update(
+                    cin=n.cin,
+                    cout=n.cout,
+                    ksize=n.ksize,
+                    stride=n.stride,
+                    pad=n.pad,
+                    groups=n.groups,
+                    has_bn=n.has_bn,
+                    act=n.act,
+                    macs_per_out=n.macs_per_out,
+                    macs_total=n.macs_total,
+                )
+                if qmeta and n.name in qmeta:
+                    d["quant"] = qmeta[n.name]
+            if n.kind == "add":
+                d["act"] = n.act
+            nodes.append(d)
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "nodes": nodes,
+            "n_approx_layers": len(self.approx_layers()),
+            "total_macs": self.total_macs(),
+        }
+
+
+def _prod(t) -> int:
+    out = 1
+    for v in t:
+        out *= int(v)
+    return out

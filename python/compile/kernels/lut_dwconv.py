@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: depthwise LUT convolution.
+
+MobileNetV2's depthwise 3x3 layers are a poor fit for the im2col +
+``lut_matmul`` path (K = 9, one output channel per group), so they get a
+dedicated kernel: every channel convolves its own k*k filter, products
+looked up through the approximate multiplier's LUT:
+
+    out[m, c] = sum_t lut[patches[m, t, c], w[t, c]]
+
+with ``patches`` the pre-extracted (M, k*k, C) code tensor (padding taps
+already filled with the zero-point code, matching the engine / executor
+contract).  Grid over M tiles; the LUT is VMEM-resident and unblocked as
+in lut_matmul; the tap loop is unrolled (taps = 9 for 3x3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+
+
+def _dwconv_kernel(p_ref, w_ref, lut_ref, o_ref):
+    patches = p_ref[...]  # (bm, taps, C) i32 codes
+    w = w_ref[...]  # (taps, C) i32 codes
+    lut = lut_ref[...].reshape(-1)
+    idx = patches * 256 + w[None, :, :]
+    prod = jnp.take(lut, idx, axis=0)
+    o_ref[...] = jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def lut_dwconv(patches, w, lut, *, bm: int = DEFAULT_BM):
+    """Depthwise LUT conv: (M, taps, C) x (taps, C) -> (M, C) i32.
+
+    M must be divisible by ``bm`` (pad at the call site).
+    """
+    m, taps, c = patches.shape
+    t2, c2 = w.shape
+    assert (taps, c) == (t2, c2), (patches.shape, w.shape)
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _dwconv_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, taps, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((taps, c), lambda i: (0, 0)),
+            pl.BlockSpec((256, 256), lambda i: (0, 0)),  # LUT VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.int32),
+        interpret=True,
+    )(patches.astype(jnp.int32), w.astype(jnp.int32), lut.astype(jnp.int32))
+
+
+def extract_patches(codes, hw: int, c: int, ksize: int, stride: int, pad: int, za: int):
+    """NHWC code tensor (B, H, W, C) -> (B*OH*OW, k*k, C) with za padding."""
+    b = codes.shape[0]
+    p = pad
+    padded = jnp.pad(codes, ((0, 0), (p, p), (p, p), (0, 0)), constant_values=za)
+    oh = (hw + 2 * p - ksize) // stride + 1
+    rows = []
+    for ky in range(ksize):
+        for kx in range(ksize):
+            sl = padded[:, ky : ky + oh * stride : stride, kx : kx + oh * stride : stride, :]
+            rows.append(sl.reshape(b * oh * oh, c))
+    return jnp.stack(rows, axis=1)  # (M, taps, C)
+
+
+def dwconv_ref(patches, w, lut):
+    """Pure-jnp oracle."""
+    flat = lut.astype(jnp.int32).reshape(-1)
+    idx = patches.astype(jnp.int32) * 256 + w.astype(jnp.int32)[None, :, :]
+    return jnp.sum(jnp.take(flat, idx, axis=0), axis=1, dtype=jnp.int32)

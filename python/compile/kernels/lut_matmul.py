@@ -1,0 +1,162 @@
+"""L1 Pallas kernel: LUT-based approximate quantized matmul.
+
+The compute hot-spot of the whole system: a matrix multiplication whose
+scalar product is an *approximate multiplier* evaluated through its
+256x256 lookup table,
+
+    out[m, n] = sum_k lut[a[m, k], w[k, n]]          (raw accumulation)
+
+plus a fused variant that applies the zero-point correction and float
+requantization in the same kernel:
+
+    corr[m, n] = acc - za * SW[n] - zw * SA[m] + K * za * zw
+    out_q      = clip(round(corr * s_a * s_w / s_o) + zo, 0, 255)
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the LUT (256 KiB, i32)
+is VMEM-resident and *unblocked* (its BlockSpec index_map pins block
+(0, 0) for every grid step), while `a` tiles stream along the M grid axis
+and `w` tiles along N.  Product lookup is a VPU gather; the K reduction
+is kept inside the block so the accumulator tile never round-trips to
+HBM.  Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; real-TPU numbers are estimated
+analytically (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+
+
+def _lut_matmul_kernel(a_ref, w_ref, lut_ref, o_ref):
+    """One (bm, bn) output tile; full K reduction in-block."""
+    a = a_ref[...]  # (bm, K) i32 codes
+    w = w_ref[...]  # (K, bn) i32 codes
+    lut = lut_ref[...].reshape(-1)  # (65536,) i32, flattened for 1-D gather
+    # flat index a*256 + w over the (bm, K, bn) product cube
+    idx = a[:, :, None] * 256 + w[None, :, :]
+    prod = jnp.take(lut, idx, axis=0)
+    o_ref[...] = jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def lut_matmul(a, w, lut, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Raw LUT accumulation: (M, K) x (K, N) -> (M, N) i32.
+
+    ``a``/``w`` are u8 codes stored as i32; ``lut`` is (256, 256) i32.
+    M and N must be divisible by the block sizes (pad at the call site;
+    helpers in model.py handle it).
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _lut_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((256, 256), lambda i, j: (0, 0)),  # LUT VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), w.astype(jnp.int32), lut.astype(jnp.int32))
+
+
+def _lut_matmul_requant_kernel(a_ref, w_ref, lut_ref, scale_ref, zps_ref, o_ref):
+    a = a_ref[...]
+    w = w_ref[...]
+    lut = lut_ref[...].reshape(-1)
+    scale = scale_ref[0]  # s_a * s_w / s_o
+    za = zps_ref[0]
+    zw = zps_ref[1]
+    zo = zps_ref[2]
+    idx = a[:, :, None] * 256 + w[None, :, :]
+    acc = jnp.sum(jnp.take(lut, idx, axis=0), axis=1, dtype=jnp.int32)
+    k = a.shape[1]
+    sa = jnp.sum(a, axis=1, dtype=jnp.int32)  # (bm,)
+    sw = jnp.sum(w, axis=0, dtype=jnp.int32)  # (bn,)
+    corr = acc - za * sw[None, :] - zw * sa[:, None] + k * za * zw
+    q = jnp.round(corr.astype(jnp.float32) * scale) + zo.astype(jnp.float32)
+    o_ref[...] = jnp.clip(q, 0.0, 255.0).astype(jnp.int32)
+
+
+def lut_matmul_requant(a, w, lut, scale: float, za: int, zw: int, zo: int, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Fused LUT matmul + zero-point correction + u8 requantization."""
+    m, k = a.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    scale_arr = jnp.asarray([scale], jnp.float32)
+    zps = jnp.asarray([za, zw, zo], jnp.int32)
+    return pl.pallas_call(
+        _lut_matmul_requant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((256, 256), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), w.astype(jnp.int32), lut.astype(jnp.int32), scale_arr, zps)
+
+
+def lut_matmul_requant_dyn(a, w, lut, scale, zps, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """Like lut_matmul_requant but with *traced* scale / zero points.
+
+    Used by the stand-alone kernel HLO artifact (kernel.hlo.txt) so the
+    Rust runtime can feed requantization parameters at execute time.
+    ``scale``: (1,) f32 = s_a*s_w/s_o; ``zps``: (3,) i32 = [za, zw, zo].
+    """
+    m, k = a.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _lut_matmul_requant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((256, 256), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a.astype(jnp.int32), w.astype(jnp.int32), lut.astype(jnp.int32), scale.astype(jnp.float32), zps.astype(jnp.int32))
+
+
+def vmem_footprint_bytes(bm: int, bn: int, k: int) -> dict:
+    """Analytic VMEM budget for one grid step (DESIGN.md §Perf).
+
+    The (bm, k, bn) gather cube dominates; the LUT is a constant 256 KiB.
+    """
+    lut = 256 * 256 * 4
+    a_tile = bm * k * 4
+    w_tile = k * bn * 4
+    cube = bm * k * bn * 4
+    acc = bm * bn * 4
+    total = lut + a_tile + w_tile + cube + acc
+    return {
+        "lut": lut,
+        "a_tile": a_tile,
+        "w_tile": w_tile,
+        "gather_cube": cube,
+        "acc": acc,
+        "total": total,
+        "fits_16MiB_vmem": total <= 16 * 1024 * 1024,
+    }

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact references)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(a, w, lut):
+    """out[m, n] = sum_k lut[a[m, k], w[k, n]]  — (M, N) i32."""
+    a = a.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    flat = lut.astype(jnp.int32).reshape(-1)
+    idx = a[:, :, None] * 256 + w[None, :, :]
+    return jnp.sum(jnp.take(flat, idx, axis=0), axis=1, dtype=jnp.int32)
+
+
+def lut_matmul_requant_ref(a, w, lut, scale: float, za: int, zw: int, zo: int):
+    a = a.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    acc = lut_matmul_ref(a, w, lut)
+    k = a.shape[1]
+    sa = jnp.sum(a, axis=1, dtype=jnp.int32)
+    sw = jnp.sum(w, axis=0, dtype=jnp.int32)
+    corr = acc - za * sw[None, :] - zw * sa[:, None] + k * za * zw
+    q = jnp.round(corr.astype(jnp.float32) * scale) + float(zo)
+    return jnp.clip(q, 0.0, 255.0).astype(jnp.int32)

@@ -1,0 +1,96 @@
+"""L2 serving graphs that get AOT-lowered to HLO text (see aot.py).
+
+Two artifacts per experiment:
+
+  * ``model.hlo.txt`` — the full network forward in ``approx`` mode with
+    the trained weights folded in as constants and the **per-operating-
+    point tensors as runtime inputs**: for every approximable layer its
+    low-rank error tables (U, V) and its BN overlay (gamma, beta) or bias.
+    One compiled PJRT executable therefore serves *all* operating points;
+    the Rust coordinator switches OPs by swapping input buffers
+    (DESIGN.md "reconfiguration = input buffers").
+
+  * ``kernel.hlo.txt`` — the L1 Pallas LUT-matmul kernel lowered stand-
+    alone (interpret mode) for bit-exact single-layer execution from Rust;
+    proves the L1 -> L3 path composes and anchors integration tests.
+
+Input signature (order matters; mirrored in hlo_signature.json):
+
+    x, then per approx layer (graph order):
+      <layer>.U (256, r) f32, <layer>.V (256, r) f32,
+      <layer>.gamma (cout,) f32 + <layer>.beta (cout,) f32   [if has_bn]
+      <layer>.b (cout,) f32                                  [otherwise]
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .executor import RunConfig, forward
+from .graph import Graph
+from .kernels import lut_matmul as lm
+
+
+def serving_signature(graph: Graph, rank: int, batch: int) -> List[dict]:
+    """Ordered input spec for model.hlo.txt."""
+    h, w, c = graph.input_shape
+    sig = [{"name": "x", "shape": [batch, h, w, c], "dtype": "f32"}]
+    for n in graph.approx_layers():
+        sig.append({"name": f"{n.name}.U", "shape": [256, rank], "dtype": "f32"})
+        sig.append({"name": f"{n.name}.V", "shape": [256, rank], "dtype": "f32"})
+        if n.has_bn:
+            sig.append({"name": f"{n.name}.gamma", "shape": [n.cout], "dtype": "f32"})
+            sig.append({"name": f"{n.name}.beta", "shape": [n.cout], "dtype": "f32"})
+        else:
+            sig.append({"name": f"{n.name}.b", "shape": [n.cout], "dtype": "f32"})
+    return sig
+
+
+def make_serving_fn(graph: Graph, params: dict, quant_meta: dict):
+    """Returns f(x, *op_tensors) -> (logits,) with weights closed over.
+
+    ``op_tensors`` follow serving_signature order (sans x).  A zero U/V
+    pair degenerates to the exact multiplier (the error term vanishes),
+    so the exact OP needs no special casing.
+    """
+    layers = graph.approx_layers()
+
+    def fn(x, *op_tensors):
+        uv = {}
+        p = {k: dict(v) for k, v in params.items()}
+        i = 0
+        for n in layers:
+            u, v = op_tensors[i], op_tensors[i + 1]
+            i += 2
+            uv[n.name] = (u, v)
+            if n.has_bn:
+                p[n.name]["gamma"] = op_tensors[i]
+                p[n.name]["beta"] = op_tensors[i + 1]
+                i += 2
+            else:
+                p[n.name]["b"] = op_tensors[i]
+                i += 1
+        run = RunConfig(mode="approx", quant=quant_meta, uv=uv, bn_train=False)
+        logits, _ = forward(graph, p, x, run)
+        return (logits,)
+
+    return fn
+
+
+def make_kernel_fn():
+    """Stand-alone L1 kernel artifact: fused LUT matmul + requant."""
+
+    def fn(a, w, lut, scale, zps):
+        return (lm.lut_matmul_requant_dyn(a, w, lut, scale, zps),)
+
+    return fn
+
+
+def kernel_signature(m: int, k: int, n: int) -> List[dict]:
+    return [
+        {"name": "a", "shape": [m, k], "dtype": "i32"},
+        {"name": "w", "shape": [k, n], "dtype": "i32"},
+        {"name": "lut", "shape": [256, 256], "dtype": "i32"},
+        {"name": "scale", "shape": [1], "dtype": "f32"},
+        {"name": "zps", "shape": [3], "dtype": "i32"},
+    ]

@@ -1,0 +1,109 @@
+"""Model zoo: CIFAR-style ResNet-{8,14,20,32} and MobileNetV2.
+
+Topologies follow the paper's experimental setup:
+
+  * ResNet-N (N = 6n + 2) with the standard CIFAR three-stage layout
+    [He et al. 2016]; all convolutions and the final classifier are
+    approximable layers.
+  * MobileNetV2 [Sandler et al. 2018] with the stem stride reduced to 1
+    (the paper's TinyImageNet adaptation for 64x64 inputs).  With the
+    standard 17 inverted-residual blocks this yields exactly the paper's
+    **53 approximable target layers** (stem + 50 block convs + head conv
+    + classifier).
+
+A ``width`` multiplier scales channel counts so the models train in
+CPU-minutes on the synthetic datasets (see DESIGN.md substitutions);
+``width=1.0`` reproduces the full architectures.
+"""
+
+from __future__ import annotations
+
+from .graph import Graph
+
+
+def _c(ch: int, width: float, divisor: int = 8) -> int:
+    """MobileNet-style divisible channel rounding."""
+    v = max(divisor, int(ch * width + divisor / 2) // divisor * divisor)
+    if v < 0.9 * ch * width:
+        v += divisor
+    return v
+
+
+def resnet(depth: int, num_classes: int, input_hw: int = 32, width: float = 1.0) -> Graph:
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    n = (depth - 2) // 6
+    g = Graph((input_hw, input_hw, 3), name=f"resnet{depth}")
+    w16, w32, w64 = _c(16, width), _c(32, width), _c(64, width)
+
+    x = g.conv(0, w16, 3, name="stem")
+    for stage, (ch, stride0) in enumerate([(w16, 1), (w32, 2), (w64, 2)]):
+        for blk in range(n):
+            stride = stride0 if blk == 0 else 1
+            pre = x
+            y = g.conv(x, ch, 3, stride=stride, name=f"s{stage}b{blk}c1")
+            y = g.conv(y, ch, 3, act="none", name=f"s{stage}b{blk}c2")
+            if stride != 1 or g.nodes[pre].out_shape[-1] != ch:
+                pre = g.conv(pre, ch, 1, stride=stride, act="none", name=f"s{stage}b{blk}proj")
+            x = g.add(y, pre, act="relu", name=f"s{stage}b{blk}add")
+    x = g.gap(x)
+    x = g.dense(x, num_classes, name="fc")
+    g.output(x)
+    return g
+
+
+# MobileNetV2 inverted-residual config: (expansion t, channels c, repeats n, stride s)
+_MBV2_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2(num_classes: int, input_hw: int = 64, width: float = 1.0, stem_stride: int = 1) -> Graph:
+    g = Graph((input_hw, input_hw, 3), name="mobilenet_v2")
+    ch_in = _c(32, width)
+    x = g.conv(0, ch_in, 3, stride=stem_stride, act="relu6", name="stem")
+
+    blk = 0
+    for t, c, n, s in _MBV2_CFG:
+        cout = _c(c, width)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            cin = g.nodes[x].out_shape[-1]
+            hidden = cin * t
+            pre = x
+            y = x
+            if t != 1:
+                y = g.conv(y, hidden, 1, act="relu6", name=f"b{blk}expand")
+            y = g.conv(y, hidden, 3, stride=stride, groups=hidden, act="relu6", name=f"b{blk}dw")
+            y = g.conv(y, cout, 1, act="none", name=f"b{blk}project")
+            if stride == 1 and cin == cout:
+                y = g.add(y, pre, name=f"b{blk}add")
+            x = y
+            blk += 1
+
+    head = _c(1280, width) if width > 1.0 else max(_c(1280, width), 1280 if width >= 1.0 else _c(1280, width))
+    x = g.conv(x, head, 1, act="relu6", name="head")
+    x = g.gap(x)
+    x = g.dense(x, num_classes, name="fc")
+    g.output(x)
+    return g
+
+
+_ZOO = {
+    "resnet8": lambda nc, hw, w: resnet(8, nc, hw, w),
+    "resnet14": lambda nc, hw, w: resnet(14, nc, hw, w),
+    "resnet20": lambda nc, hw, w: resnet(20, nc, hw, w),
+    "resnet32": lambda nc, hw, w: resnet(32, nc, hw, w),
+    "mobilenet_v2": lambda nc, hw, w: mobilenet_v2(nc, hw, w),
+}
+
+
+def build(name: str, num_classes: int, input_hw: int, width: float = 1.0) -> Graph:
+    if name not in _ZOO:
+        raise KeyError(f"unknown model {name!r}; have {sorted(_ZOO)}")
+    return _ZOO[name](num_classes, input_hw, width)

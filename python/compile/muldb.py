@@ -1,0 +1,369 @@
+"""Approximate-multiplier database (the EvoApprox8b substitute).
+
+The paper searches over the 37 unsigned 8x8-bit multipliers of the
+EvoApprox library.  That library's synthesized netlists / PDK45 power
+numbers are not available offline, so we build a *synthetic family of 37
+deterministic u8 x u8 -> u32 approximate multipliers* spanning the same
+qualitative accuracy/power Pareto spread, using the classic approximation
+techniques from the literature:
+
+  - ``trunc``    operand LSB truncation
+  - ``bam``      broken-array multiplier (partial-product bits with
+                 ``i + j < h`` omitted)
+  - ``bamc``     BAM with constant error compensation (adds the expected
+                 value of the dropped partial products under uniform inputs)
+  - ``drum``     DRUM-style dynamic-range multiplier (k significant bits
+                 from the leading one, LSB of the kept segment forced to 1
+                 for unbiasing)
+  - ``mitch``    Mitchell logarithmic multiplier (F fraction bits)
+  - ``loa``      lower-part OR approximation of the low x low partial
+                 product block
+  - ``otrunc``   output LSB truncation
+  - ``otruncc``  output truncation with half-LSB compensation
+
+Every instance is a pure function of the two operand *codes* (it operates
+on raw u8 codes exactly like a hardware multiplier would, before any
+zero-point correction).  The full behaviour of each instance is captured
+by a 256x256 i32 lookup table (LUT); the power model is a structural proxy
+(fraction of the 64-bit partial-product array that is actually built, plus
+small per-technique overheads), calibrated so the family spans relative
+power ~0.05 .. 1.0 like EvoApprox's mul8u corner.
+
+The Rust crate (``rust/src/muldb``) re-implements exactly the same
+definitions; ``python/tests/test_muldb.py`` and the Rust golden test both
+check the SHA-256 of the serialized LUT stack so the two sides can never
+drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import struct
+from typing import Callable, Dict, List
+
+import numpy as np
+
+N_OPERAND = 256
+LUT_ENTRIES = N_OPERAND * N_OPERAND
+
+
+# ---------------------------------------------------------------------------
+# Multiplier behavioural definitions (scalar, integer-exact).
+# ---------------------------------------------------------------------------
+
+
+def mul_exact(a: int, b: int) -> int:
+    return a * b
+
+
+def mul_trunc_op(a: int, b: int, k: int) -> int:
+    """Zero the k LSBs of both operands before an exact multiply."""
+    mask = ~((1 << k) - 1) & 0xFF
+    return (a & mask) * (b & mask)
+
+
+def _bam_kept_terms(h: int) -> List[tuple]:
+    return [(i, j) for i in range(8) for j in range(8) if i + j >= h]
+
+
+def mul_bam(a: int, b: int, h: int) -> int:
+    """Broken-array multiplier: omit partial-product bits with i + j < h."""
+    acc = 0
+    for i in range(8):
+        if not (a >> i) & 1:
+            continue
+        for j in range(8):
+            if (b >> j) & 1 and i + j >= h:
+                acc += 1 << (i + j)
+    return acc
+
+
+def bam_compensation(h: int) -> int:
+    """Expected value of the dropped PP bits for uniform random operands.
+
+    Each partial-product bit a_i * b_j is 1 with probability 1/4.
+    """
+    total = sum((1 << (i + j)) for i in range(8) for j in range(8) if i + j < h)
+    return (total + 2) // 4  # round(total / 4), ties away from zero not needed
+
+
+def mul_bamc(a: int, b: int, h: int) -> int:
+    return mul_bam(a, b, h) + bam_compensation(h)
+
+
+def _drum_approx_operand(x: int, k: int) -> int:
+    if x < (1 << k):
+        return x
+    msb = x.bit_length() - 1
+    shift = msb - k + 1
+    return ((x >> shift) | 1) << shift
+
+
+def mul_drum(a: int, b: int, k: int) -> int:
+    """DRUM-k: keep k bits from the leading one, force kept LSB to 1."""
+    if a == 0 or b == 0:
+        return 0
+    return _drum_approx_operand(a, k) * _drum_approx_operand(b, k)
+
+
+def mul_mitchell(a: int, b: int, frac_bits: int) -> int:
+    """Mitchell's logarithmic multiplier with ``frac_bits`` fraction bits.
+
+    log2(x) ~= msb(x) + (x - 2^msb)/2^msb ; the sum of the two logs is
+    converted back with the same linear antilog approximation.
+    """
+    if a == 0 or b == 0:
+        return 0
+    f = frac_bits
+    la = a.bit_length() - 1
+    lb = b.bit_length() - 1
+    fa = ((a - (1 << la)) << f) >> la  # fraction in Q0.f
+    fb = ((b - (1 << lb)) << f) >> lb
+    lsum = ((la + lb) << f) + fa + fb
+    k = lsum >> f
+    frac = lsum & ((1 << f) - 1)
+    # antilog: (1 + frac) * 2^k, computed in integer arithmetic
+    return (((1 << f) + frac) << k) >> f
+
+
+def mul_loa(a: int, b: int, h: int) -> int:
+    """Exact high/cross partial products; the low x low block is OR-ed.
+
+    Splits both operands at bit ``h``; the (h x h)-bit low block
+    ``al * bl`` is replaced by ``al | bl`` (a lower-part-OR style
+    approximation: cheap, slightly biased low).
+    """
+    mask = (1 << h) - 1
+    ah, al = a >> h, a & mask
+    bh, bl = b >> h, b & mask
+    return ((ah * bh) << (2 * h)) + (((ah * bl) + (bh * al)) << h) + (al | bl)
+
+
+def mul_otrunc(a: int, b: int, k: int) -> int:
+    """Exact product with the k LSBs of the result zeroed."""
+    return (a * b) & (~((1 << k) - 1) & 0xFFFFFFFF)
+
+
+def mul_otruncc(a: int, b: int, k: int) -> int:
+    """Output truncation with half-LSB constant compensation."""
+    return mul_otrunc(a, b, k) + (1 << (k - 1))
+
+
+# ---------------------------------------------------------------------------
+# Power model: structural proxy, relative to the exact 8x8 array (= 1.0).
+# ---------------------------------------------------------------------------
+
+
+def _bam_power(h: int) -> float:
+    kept = len(_bam_kept_terms(h))
+    return kept / 64.0
+
+
+def power_model(technique: str, param: int) -> float:
+    if technique == "exact":
+        return 1.0
+    if technique == "trunc":
+        return ((8 - param) / 8.0) ** 2
+    if technique == "bam":
+        return _bam_power(param)
+    if technique == "bamc":
+        return _bam_power(param) + 0.01
+    if technique == "drum":
+        return (param * param) / 64.0 + 0.08
+    if technique == "mitch":
+        return 0.11 + param * 0.012
+    if technique == "loa":
+        return (64 - param * param) / 64.0 + 0.008
+    if technique == "otrunc":
+        return 1.0 - param * 0.06
+    if technique == "otruncc":
+        return 1.0 - param * 0.06 + 0.005
+    raise ValueError(f"unknown technique {technique!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiplierSpec:
+    """One approximate-multiplier instance in the search space."""
+
+    mid: int  # dense id, 0 = exact
+    name: str
+    technique: str
+    param: int
+    power: float  # relative to the accurate multiplier
+
+    def fn(self) -> Callable[[int, int], int]:
+        t, p = self.technique, self.param
+        table: Dict[str, Callable[[int, int], int]] = {
+            "exact": lambda a, b: mul_exact(a, b),
+            "trunc": lambda a, b: mul_trunc_op(a, b, p),
+            "bam": lambda a, b: mul_bam(a, b, p),
+            "bamc": lambda a, b: mul_bamc(a, b, p),
+            "drum": lambda a, b: mul_drum(a, b, p),
+            "mitch": lambda a, b: mul_mitchell(a, b, p),
+            "loa": lambda a, b: mul_loa(a, b, p),
+            "otrunc": lambda a, b: mul_otrunc(a, b, p),
+            "otruncc": lambda a, b: mul_otruncc(a, b, p),
+        }
+        return table[t]
+
+
+def build_family() -> List[MultiplierSpec]:
+    """The fixed 37-instance search space (order defines the dense ids)."""
+    specs: List[tuple] = [("exact", 0)]
+    specs += [("trunc", k) for k in (1, 2, 3, 4)]
+    specs += [("bam", h) for h in range(3, 11)]
+    specs += [("bamc", h) for h in range(3, 9)]
+    specs += [("drum", k) for k in (3, 4, 5, 6)]
+    specs += [("mitch", f) for f in (7, 5, 3)]
+    specs += [("loa", h) for h in (3, 4, 5, 6)]
+    specs += [("otrunc", k) for k in (2, 4, 6, 8)]
+    specs += [("otruncc", k) for k in (4, 6, 8)]
+    assert len(specs) == 37
+    out = []
+    for mid, (tech, param) in enumerate(specs):
+        name = "am8u_exact" if tech == "exact" else f"am8u_{tech}{param}"
+        out.append(
+            MultiplierSpec(
+                mid=mid,
+                name=name,
+                technique=tech,
+                param=param,
+                power=power_model(tech, param),
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LUT construction + vectorized error statistics.
+# ---------------------------------------------------------------------------
+
+
+def build_lut(spec: MultiplierSpec) -> np.ndarray:
+    """256x256 i32 table: lut[a, b] = approx_mul(a, b)."""
+    fn = spec.fn()
+    lut = np.empty((N_OPERAND, N_OPERAND), dtype=np.int64)
+    for a in range(N_OPERAND):
+        for b in range(N_OPERAND):
+            lut[a, b] = fn(a, b)
+    assert lut.min() >= 0 and lut.max() < 2**31
+    return lut.astype(np.int32)
+
+
+_EXACT = None
+
+
+def exact_lut() -> np.ndarray:
+    global _EXACT
+    if _EXACT is None:
+        v = np.arange(N_OPERAND, dtype=np.int64)
+        _EXACT = np.outer(v, v).astype(np.int32)
+    return _EXACT
+
+
+def error_map(lut: np.ndarray) -> np.ndarray:
+    """err[a, b] = approx(a, b) - a * b as f64."""
+    return (lut.astype(np.int64) - exact_lut().astype(np.int64)).astype(np.float64)
+
+
+def error_stats(lut: np.ndarray) -> Dict[str, float]:
+    """Classic AM error metrics over the uniform operand distribution."""
+    err = error_map(lut)
+    exact = exact_lut().astype(np.float64)
+    mean = float(err.mean())
+    std = float(err.std())
+    med = float(np.abs(err).mean())  # mean error distance
+    with np.errstate(divide="ignore", invalid="ignore"):
+        red = np.where(exact > 0, np.abs(err) / exact, 0.0)
+    mred = float(red[exact > 0].mean())
+    wce = float(np.abs(err).max())
+    return {"mean": mean, "std": std, "med": med, "mred": mred, "wce": wce}
+
+
+def lowrank_error(lut: np.ndarray, rank: int = 16) -> tuple:
+    """Rank-``rank`` factorization  err ~= U @ V.T  (U, V: 256 x rank f32).
+
+    Used by the L2 training graph: a LUT product inside a matmul is
+    equivalent to  exact_matmul + sum_r  (U_r o A) @ (V_r o W)  which keeps
+    retraining a pure-matmul computation.  BAM-style errors are *exactly*
+    low-rank (sum of dropped rank-1 bit outer-products), the smooth
+    techniques are numerically low-rank.
+    """
+    err = error_map(lut)
+    u, s, vt = np.linalg.svd(err, full_matrices=False)
+    r = min(rank, len(s))
+    U = (u[:, :r] * np.sqrt(s[:r])).astype(np.float32)
+    V = (vt[:r, :].T * np.sqrt(s[:r])).astype(np.float32)
+    return U, V
+
+
+# ---------------------------------------------------------------------------
+# Serialization (artifacts/muldb.json + artifacts/luts.bin + lowrank.bin).
+# ---------------------------------------------------------------------------
+
+
+def lut_stack(family: List[MultiplierSpec] | None = None) -> np.ndarray:
+    family = family or build_family()
+    return np.stack([build_lut(s) for s in family], axis=0)
+
+
+def serialize_luts(stack: np.ndarray) -> bytes:
+    """m x 256 x 256 i32, little-endian, C order, with a tiny header."""
+    header = struct.pack("<4sII", b"QLUT", stack.shape[0], LUT_ENTRIES)
+    return header + stack.astype("<i4").tobytes(order="C")
+
+
+def family_digest(stack: np.ndarray) -> str:
+    return hashlib.sha256(serialize_luts(stack)).hexdigest()
+
+
+def write_artifacts(outdir: str, rank: int = 16) -> dict:
+    import os
+
+    os.makedirs(outdir, exist_ok=True)
+    family = build_family()
+    stack = lut_stack(family)
+    blob = serialize_luts(stack)
+    with open(os.path.join(outdir, "luts.bin"), "wb") as f:
+        f.write(blob)
+
+    lr_u = np.zeros((len(family), N_OPERAND, rank), dtype=np.float32)
+    lr_v = np.zeros((len(family), N_OPERAND, rank), dtype=np.float32)
+    for i, _ in enumerate(family):
+        U, V = lowrank_error(stack[i], rank)
+        lr_u[i, :, : U.shape[1]] = U
+        lr_v[i, :, : V.shape[1]] = V
+    with open(os.path.join(outdir, "lowrank.bin"), "wb") as f:
+        f.write(struct.pack("<4sIII", b"QLRK", len(family), N_OPERAND, rank))
+        f.write(lr_u.astype("<f4").tobytes(order="C"))
+        f.write(lr_v.astype("<f4").tobytes(order="C"))
+
+    meta = {
+        "format": 1,
+        "count": len(family),
+        "rank": rank,
+        "digest_sha256": family_digest(stack),
+        "multipliers": [
+            {
+                "id": s.mid,
+                "name": s.name,
+                "technique": s.technique,
+                "param": s.param,
+                "power": s.power,
+                **error_stats(stack[s.mid]),
+            }
+            for s in family
+        ],
+    }
+    with open(os.path.join(outdir, "muldb.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+if __name__ == "__main__":
+    import sys
+
+    meta = write_artifacts(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")
+    print(f"wrote {meta['count']} multipliers, digest {meta['digest_sha256'][:16]}")

@@ -1,0 +1,106 @@
+"""8-bit affine quantization with straight-through-estimator fake-quant.
+
+Conventions (shared bit-for-bit with the Rust engine, ``rust/src/nn``):
+
+  * all quantized tensors are **u8 codes** ``q`` in ``[0, 255]`` with a
+    per-tensor ``scale s`` (f32) and **integer zero point** ``z``:
+    ``x_f = s * (q - z)``.
+  * approximate multipliers operate on the raw u8 *codes* (like the
+    hardware would); the zero-point cross terms are corrected exactly with
+    adder sums, so an exact multiplier reproduces float conv up to
+    rounding:  sum (a-za)(w-zw) = sum lut[a,w] - za*SW - zw*SA + K*za*zw
+    + sum err[a,w].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMIN = 0.0
+QMAX = 255.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Per-tensor affine quantization parameters."""
+
+    scale: float
+    zero_point: int
+
+    @staticmethod
+    def from_range(lo: float, hi: float) -> "QParams":
+        """Affine params covering [lo, hi] (always includes 0)."""
+        lo = min(float(lo), 0.0)
+        hi = max(float(hi), 1e-6)
+        scale = (hi - lo) / QMAX
+        zp = int(round(-lo / scale))
+        zp = max(0, min(255, zp))
+        return QParams(scale=scale, zero_point=zp)
+
+    def to_json(self) -> dict:
+        return {"scale": self.scale, "zero_point": self.zero_point}
+
+
+def quantize_codes(x, qp: QParams):
+    """float -> u8 codes (rounded, clipped). Non-differentiable."""
+    return jnp.clip(jnp.round(x / qp.scale) + qp.zero_point, QMIN, QMAX)
+
+
+def dequantize(q, qp: QParams):
+    return (q - qp.zero_point) * qp.scale
+
+
+def fake_quant(x, qp: QParams):
+    """Quantize-dequantize with a straight-through gradient estimator."""
+    q = quantize_codes(x, qp)
+    y = dequantize(q, qp)
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def codes_ste(x, qp: QParams):
+    """u8 codes of ``x`` with identity (scaled) gradient back to ``x``.
+
+    d codes / d x = 1/scale through the STE, which is what the low-rank
+    error-surrogate path needs when weights are being retrained.
+    """
+    q = quantize_codes(x, qp)
+    lin = x / qp.scale + qp.zero_point
+    return lin + jax.lax.stop_gradient(q - lin)
+
+
+def weight_qparams(w: np.ndarray) -> QParams:
+    """Per-tensor weight quantization covering the full range."""
+    return QParams.from_range(float(np.min(w)), float(np.max(w)))
+
+
+def calibrate_activation(samples: np.ndarray, pct: float = 99.9) -> QParams:
+    """Percentile-calibrated activation range (robust to outliers)."""
+    lo = float(np.percentile(samples, 100.0 - pct))
+    hi = float(np.percentile(samples, pct))
+    return QParams.from_range(lo, hi)
+
+
+class EmaRange:
+    """Exponential-moving-average min/max tracker used during QAT."""
+
+    def __init__(self, decay: float = 0.99):
+        self.decay = decay
+        self.lo: float | None = None
+        self.hi: float | None = None
+
+    def update(self, x: np.ndarray) -> None:
+        lo, hi = float(np.min(x)), float(np.max(x))
+        if self.lo is None:
+            self.lo, self.hi = lo, hi
+        else:
+            d = self.decay
+            self.lo = d * self.lo + (1 - d) * lo
+            self.hi = d * self.hi + (1 - d) * hi
+
+    def qparams(self) -> QParams:
+        assert self.lo is not None, "EmaRange never updated"
+        return QParams.from_range(self.lo, self.hi)

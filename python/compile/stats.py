@@ -1,0 +1,113 @@
+"""Layer statistics export for the error model (paper Fig. 1, [16]).
+
+For every approximable layer we sample, from training data under the QAT
+forward:
+
+  * the histogram of the layer's quantized *input codes* (256 bins),
+  * the histogram of its quantized *weight codes* (256 bins),
+  * the fan-in K (MACs per output element) and total MAC count,
+  * the quantization scales / zero points,
+  * the post-BN scale factor RMS( gamma_c / sqrt(var_c + eps) ) that maps
+    accumulator-domain error std into the (post-BN) domain where the AGN
+    sigma_g lives,
+  * the RMS of the post-BN pre-activation output (sanity/normalization).
+
+The Rust error model (rust/src/errmodel) combines these with each
+multiplier's LUT error map into the sigma_e matrix:
+
+  sigma_e[j, k] = sqrt( K_k * Var_{a~pa_k, w~pw_k}[ err_j(a, w) ] )
+                  * s_a,k * s_w,k * bn_scale_k
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .executor import BN_EPS, RunConfig, forward
+from .graph import Graph
+from .quant import quantize_codes
+
+
+def collect_layer_stats(
+    graph: Graph,
+    params: dict,
+    quant_meta: dict,
+    images: np.ndarray,
+    batches: int = 4,
+    batch: int = 64,
+) -> Dict[str, dict]:
+    run = RunConfig(mode="qat", quant=quant_meta, bn_train=False, collect_acts=True)
+    fwd = jax.jit(lambda p, x: forward(graph, p, x, run)[1]["acts"])
+
+    hist_in = {n.name: np.zeros(256, np.float64) for n in graph.approx_layers()}
+    out_sq = {n.name: 0.0 for n in graph.approx_layers()}
+    out_n = {n.name: 0 for n in graph.approx_layers()}
+
+    for b in range(batches):
+        acts = fwd(params, jnp.asarray(images[b * batch : (b + 1) * batch]))
+        for name, d in acts.items():
+            qp = quant_meta[name]["in"]
+            codes = np.asarray(quantize_codes(jnp.asarray(d["x"]), qp)).astype(np.int64).ravel()
+            hist_in[name] += np.bincount(codes, minlength=256)
+            y = np.asarray(d["y"])
+            out_sq[name] += float((y.astype(np.float64) ** 2).sum())
+            out_n[name] += y.size
+
+    stats = {}
+    for node in graph.approx_layers():
+        name = node.name
+        p = params[name]
+        qp_in = quant_meta[name]["in"]
+        qp_w = quant_meta[name]["w"]
+        w_codes = np.asarray(quantize_codes(jnp.asarray(p["w"]), qp_w)).astype(np.int64).ravel()
+        w_hist = np.bincount(w_codes, minlength=256).astype(np.float64)
+        if node.has_bn:
+            g = np.asarray(p["gamma"], np.float64)
+            v = np.asarray(p["var"], np.float64)
+            bn_scale = float(np.sqrt(np.mean((g / np.sqrt(v + BN_EPS)) ** 2)))
+        else:
+            bn_scale = 1.0
+        pa = hist_in[name] / max(hist_in[name].sum(), 1.0)
+        pw = w_hist / max(w_hist.sum(), 1.0)
+        stats[name] = {
+            "act_hist": pa.tolist(),
+            "w_hist": pw.tolist(),
+            "k_fanin": node.macs_per_out,
+            "macs_total": node.macs_total,
+            "s_act": qp_in.scale,
+            "z_act": qp_in.zero_point,
+            "s_w": qp_w.scale,
+            "z_w": qp_w.zero_point,
+            "bn_scale": bn_scale,
+            "out_rms": float(np.sqrt(out_sq[name] / max(out_n[name], 1))),
+        }
+    return stats
+
+
+BIAS_RESIDUAL = 0.1  # must match rust/src/errmodel BIAS_RESIDUAL
+
+
+def sigma_e_reference(stats: Dict[str, dict], err_map: np.ndarray, bias_residual: float = BIAS_RESIDUAL) -> Dict[str, float]:
+    """Python reference of the Rust error model (used in cross-checks).
+
+    ``err_map``: (256, 256) f64 error of one multiplier.  Returns the
+    post-BN-domain error std estimate per layer:
+        sqrt(K var + (bias_residual K |mean|)^2) * s_a * s_w * bn_scale
+    (bias_residual = 0 recovers the paper's variance-only model).
+    """
+    out = {}
+    for name, s in stats.items():
+        pa = np.asarray(s["act_hist"])
+        pw = np.asarray(s["w_hist"])
+        mean = pa @ err_map @ pw
+        second = pa @ (err_map**2) @ pw
+        var = max(second - mean * mean, 0.0)
+        k = s["k_fanin"]
+        bias = bias_residual * k * abs(mean)
+        std_acc = np.sqrt(k * var + bias * bias)
+        out[name] = float(std_acc * s["s_act"] * s["s_w"] * s["bn_scale"])
+    return out

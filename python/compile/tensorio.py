@@ -1,0 +1,64 @@
+"""QTEN: a minimal named-tensor container (the offline npz substitute).
+
+Layout:  b"QTEN" | u32 header_len | header JSON (utf-8) | raw data.
+Header: {"tensors": [{"name", "dtype", "shape", "offset", "nbytes"}]}
+dtypes: f32 | i32 | u8  (little-endian, C order).
+
+The Rust reader lives in ``rust/src/util/tensorio.rs``; the format is
+covered by a cross-language golden test.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+_DT = {"float32": "f32", "int32": "i32", "uint8": "u8"}
+_DT_REV = {"f32": np.float32, "i32": np.int32, "u8": np.uint8}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    entries = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        dt = _DT.get(arr.dtype.name)
+        if dt is None:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.tobytes(order="C")
+        entries.append(
+            {"name": name, "dtype": dt, "shape": list(arr.shape), "offset": offset, "nbytes": len(raw)}
+        )
+        blobs.append(raw)
+        offset += len(raw)
+    header = json.dumps({"tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(b"QTEN")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"QTEN", f"bad magic {magic!r} in {path}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        base = f.tell()
+        out = {}
+        for e in header["tensors"]:
+            f.seek(base + e["offset"])
+            raw = f.read(e["nbytes"])
+            arr = np.frombuffer(raw, dtype=_DT_REV[e["dtype"]]).reshape(e["shape"])
+            out[e["name"]] = arr.copy()
+    return out

@@ -1,0 +1,284 @@
+"""Training loops: float baseline, QAT, and approximate retraining.
+
+SGD with momentum 0.9 throughout (the paper's optimizer).  BatchNorm uses
+batch statistics during training with EMA running-stat updates; running
+stats are frozen once QAT finishes so that per-operating-point fine-tuning
+only moves (gamma, beta) — exactly the paper's low-overhead scheme.
+
+``retrain_approx`` covers the paper's three Table-4 strategies:
+  * ``mode="none"``   deploy without retraining
+  * ``mode="full"``   retrain all parameters (one full set per OP)
+  * ``mode="bn"``     freeze weights, tune only BN gamma/beta (+ biases)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant as q
+from .executor import RunConfig, forward
+from .graph import Graph
+
+BN_MOMENTUM = 0.9
+
+
+def cross_entropy(logits, y):
+    return -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1))
+
+
+def _tree_sgd(params, grads, vel, lr: float, momentum: float, trainable) -> Tuple[dict, dict]:
+    new_p, new_v = {}, {}
+    for lname, group in params.items():
+        new_p[lname], new_v[lname] = {}, {}
+        for k, v in group.items():
+            g = grads[lname][k] if lname in grads and k in grads[lname] else None
+            if g is None or not trainable(lname, k):
+                new_p[lname][k] = v
+                new_v[lname][k] = vel[lname][k]
+                continue
+            nv = momentum * vel[lname][k] - lr * g
+            new_p[lname][k] = v + nv
+            new_v[lname][k] = nv
+    return new_p, new_v
+
+
+def _zeros_like_tree(params):
+    return {ln: {k: jnp.zeros_like(v) for k, v in g.items()} for ln, g in params.items()}
+
+
+def _update_bn_running(params, bn_stats):
+    for lname, (mean, var) in bn_stats.items():
+        p = params[lname]
+        p["mean"] = BN_MOMENTUM * p["mean"] + (1 - BN_MOMENTUM) * mean
+        p["var"] = BN_MOMENTUM * p["var"] + (1 - BN_MOMENTUM) * var
+    return params
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 10
+    batch: int = 64
+    lr: float = 0.1
+    momentum: float = 0.9
+    lr_decay_at: Tuple[float, ...] = (0.5, 0.75)  # fractions of total epochs
+    lr_decay: float = 0.1
+    augment: bool = True
+    seed: int = 0
+
+
+def _lr_at(cfg: TrainConfig, epoch: int) -> float:
+    lr = cfg.lr
+    for frac in cfg.lr_decay_at:
+        threshold = max(1, int(frac * cfg.epochs))
+        if epoch >= threshold:
+            lr *= cfg.lr_decay
+    return lr
+
+
+def _epoch_batches(n: int, batch: int, seed: int):
+    order = np.random.default_rng(seed).permutation(n)
+    for s in range(n // batch):
+        yield order[s * batch : (s + 1) * batch]
+
+
+def train(
+    graph: Graph,
+    params: dict,
+    images: np.ndarray,
+    labels: np.ndarray,
+    cfg: TrainConfig,
+    mode: str = "float",
+    quant_meta: Optional[dict] = None,
+    uv: Optional[dict] = None,
+    res_noise: Optional[dict] = None,
+    trainable_fn=None,
+    log=print,
+    eval_every: int = 0,
+    eval_data=None,
+) -> dict:
+    """Generic SGD loop over the executor; returns trained params."""
+    from . import datasets as ds
+
+    trainable_fn = trainable_fn or (lambda lname, k: k not in ("mean", "var"))
+    bn_train = mode in ("float", "qat")
+
+    def loss_fn(p, x, y, key):
+        run = RunConfig(mode=mode, quant=quant_meta, uv=uv, res_noise=res_noise, bn_train=bn_train)
+        logits, aux = forward(graph, p, x, run, rng=key)
+        return cross_entropy(logits, y), aux
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    vel = _zeros_like_tree(params)
+    n = images.shape[0]
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    for ep in range(cfg.epochs):
+        lr = _lr_at(cfg, ep)
+        ep_imgs = ds.augment(images, rng) if cfg.augment else images
+        losses = []
+        for idx in _epoch_batches(n, cfg.batch, cfg.seed * 1000 + ep):
+            key, sub = jax.random.split(key)
+            (loss, aux), grads = grad_fn(params, jnp.asarray(ep_imgs[idx]), jnp.asarray(labels[idx]), sub)
+            params, vel = _tree_sgd(params, grads, vel, lr, cfg.momentum, trainable_fn)
+            if bn_train and aux["bn"]:
+                params = _update_bn_running(params, aux["bn"])
+            losses.append(float(loss))
+        msg = f"  [{mode}] epoch {ep + 1}/{cfg.epochs} lr={lr:.4f} loss={np.mean(losses):.4f}"
+        if eval_every and (ep + 1) % eval_every == 0 and eval_data is not None:
+            acc = evaluate(graph, params, eval_data[0], eval_data[1], mode, quant_meta, uv)
+            msg += f" top1={acc['top1']:.3f}"
+        log(msg)
+    return params
+
+
+def evaluate(
+    graph: Graph,
+    params: dict,
+    images: np.ndarray,
+    labels: np.ndarray,
+    mode: str = "float",
+    quant_meta: Optional[dict] = None,
+    uv: Optional[dict] = None,
+    batch: int = 128,
+) -> Dict[str, float]:
+    """Top-1/Top-5 accuracy."""
+    run = RunConfig(mode=mode, quant=quant_meta, uv=uv, bn_train=False)
+    fwd = jax.jit(lambda p, x: forward(graph, p, x, run)[0])
+    n = images.shape[0]
+    top1 = top5 = 0
+    for s in range(0, n, batch):
+        x = jnp.asarray(images[s : s + batch])
+        y = labels[s : s + batch]
+        logits = np.asarray(fwd(params, x))
+        pred = np.argsort(-logits, axis=1)
+        top1 += int((pred[:, 0] == y).sum())
+        top5 += int((pred[:, :5] == y[:, None]).any(axis=1).sum())
+    return {"top1": top1 / n, "top5": top5 / n, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# Quantization calibration
+# ---------------------------------------------------------------------------
+
+
+def calibrate_quant(graph: Graph, params: dict, images: np.ndarray, batches: int = 4, batch: int = 64) -> dict:
+    """Per-layer input/weight QParams from float-mode activation samples."""
+    run = RunConfig(mode="float", bn_train=False, collect_acts=True)
+    fwd = jax.jit(lambda p, x: forward(graph, p, x, run)[1]["acts"])
+    samples: Dict[str, list] = {}
+    for b in range(batches):
+        acts = fwd(params, jnp.asarray(images[b * batch : (b + 1) * batch]))
+        for name, d in acts.items():
+            samples.setdefault(name, []).append(np.asarray(d["x"]).ravel())
+    meta = {}
+    for node in graph.approx_layers():
+        xs = np.concatenate(samples[node.name])
+        meta[node.name] = {
+            "in": q.calibrate_activation(xs),
+            "w": q.weight_qparams(np.asarray(params[node.name]["w"])),
+        }
+    return meta
+
+
+def refresh_weight_qparams(graph: Graph, params: dict, quant_meta: dict) -> dict:
+    for node in graph.approx_layers():
+        quant_meta[node.name]["w"] = q.weight_qparams(np.asarray(params[node.name]["w"]))
+    return quant_meta
+
+
+# ---------------------------------------------------------------------------
+# Approximate retraining (paper Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+
+def uv_for_assignment(graph: Graph, assignment: Dict[str, int], lr_u: np.ndarray, lr_v: np.ndarray, rank: int) -> dict:
+    """Per-layer (U, V) tables for an {layer name -> multiplier id} map."""
+    uv = {}
+    for node in graph.approx_layers():
+        mid = assignment[node.name]
+        if mid == 0:
+            continue  # exact multiplier: no error term
+        uv[node.name] = (
+            jnp.asarray(lr_u[mid][:, :rank]),
+            jnp.asarray(lr_v[mid][:, :rank]),
+        )
+    return uv
+
+
+def residual_noise_for_assignment(
+    graph: Graph,
+    assignment: Dict[str, int],
+    layer_stats: dict,
+    lr_u: np.ndarray,
+    lr_v: np.ndarray,
+    rank: int,
+) -> Dict[str, float]:
+    """Pre-BN std of the rank-truncation residual per layer.
+
+    For multipliers whose error map is not low-rank (output truncation),
+    the surrogate U@V' drops a high-frequency residual; we match its
+    second moment with additive Gaussian noise during retraining:
+        std = sqrt(K * Var_{a~pa,w~pw}[residual]) * s_a * s_w.
+    """
+    from . import muldb as muldb_mod
+
+    fam = muldb_mod.build_family()
+    out: Dict[str, float] = {}
+    for node in graph.approx_layers():
+        mid = assignment[node.name]
+        if mid == 0:
+            continue
+        st = layer_stats[node.name]
+        err = muldb_mod.error_map(muldb_mod.build_lut(fam[mid]))
+        res = err - lr_u[mid][:, :rank].astype(np.float64) @ lr_v[mid][:, :rank].astype(np.float64).T
+        pa = np.asarray(st["act_hist"])
+        pw = np.asarray(st["w_hist"])
+        mean = pa @ res @ pw
+        second = pa @ (res**2) @ pw
+        var = max(second - mean * mean, 0.0)
+        std = float(np.sqrt(st["k_fanin"] * var) * st["s_act"] * st["s_w"])
+        if std > 0.0:
+            out[node.name] = std
+    return out
+
+
+def retrain_approx(
+    graph: Graph,
+    params: dict,
+    quant_meta: dict,
+    uv: dict,
+    images: np.ndarray,
+    labels: np.ndarray,
+    mode: str,
+    cfg: TrainConfig,
+    res_noise: Optional[dict] = None,
+    log=print,
+) -> dict:
+    """Retrain under approximate forward.  mode in {none, full, bn}."""
+    if mode == "none":
+        return params
+    if mode == "full":
+        trainable = lambda lname, k: k not in ("mean", "var")
+    elif mode == "bn":
+        trainable = lambda lname, k: k in ("gamma", "beta", "b")
+    else:
+        raise ValueError(mode)
+    return train(
+        graph,
+        params,
+        images,
+        labels,
+        cfg,
+        mode="approx",
+        quant_meta=quant_meta,
+        uv=uv,
+        res_noise=res_noise,
+        trainable_fn=trainable,
+        log=log,
+    )

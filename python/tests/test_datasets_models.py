@@ -1,0 +1,90 @@
+"""Dataset determinism + model-zoo topology invariants."""
+
+import numpy as np
+import pytest
+
+from compile import datasets, models
+
+
+def test_dataset_deterministic():
+    a_x, a_y = datasets.generate("microcifar", "test")
+    b_x, b_y = datasets.generate("microcifar", "test")
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+
+
+def test_dataset_shapes_and_ranges():
+    spec = datasets.SPECS["microcifar"]
+    x, y = datasets.generate("microcifar", "train")
+    assert x.shape == (spec.n_train, spec.hw, spec.hw, 3)
+    assert x.dtype == np.float32
+    assert 0.0 <= x.min() and x.max() <= 1.0
+    assert set(np.unique(y)) == set(range(spec.num_classes))
+
+
+def test_train_test_disjoint_generation():
+    tr, _ = datasets.generate("microcifar", "train")
+    te, _ = datasets.generate("microcifar", "test")
+    # different split salt -> different pixels
+    assert not np.array_equal(tr[: len(te)], te)
+
+
+def test_classes_are_distinguishable():
+    """Nearest-class-mean on raw pixels beats chance by a wide margin —
+    the datasets must be learnable for the paper's experiments to work."""
+    x, y = datasets.generate("microcifar", "train")
+    te_x, te_y = datasets.generate("microcifar", "test")
+    n_cls = 10
+    means = np.stack([x[y == c].mean(axis=0).ravel() for c in range(n_cls)])
+    preds = []
+    for img in te_x[:200]:
+        d = ((means - img.ravel()) ** 2).sum(axis=1)
+        preds.append(np.argmin(d))
+    acc = (np.asarray(preds) == te_y[:200]).mean()
+    assert acc > 0.3, f"nearest-mean accuracy {acc}"
+
+
+def test_augment_preserves_shape_and_range():
+    x, _ = datasets.generate("microcifar", "test")
+    out = datasets.augment(x[:32], np.random.default_rng(0))
+    assert out.shape == x[:32].shape
+    assert 0.0 <= out.min() and out.max() <= 1.0
+
+
+@pytest.mark.parametrize(
+    "depth,layers", [(8, 10), (14, 16), (20, 22), (32, 34)]
+)
+def test_resnet_layer_counts(depth, layers):
+    g = models.resnet(depth, 10, 32)
+    assert len(g.approx_layers()) == layers
+    assert g.nodes[-1].kind == "output"
+
+
+def test_mobilenet_v2_has_53_target_layers():
+    """The paper's Fig. 3 shows 53 MobileNetV2 target layers."""
+    g = models.mobilenet_v2(200, 64, width=0.5)
+    assert len(g.approx_layers()) == 53
+
+
+def test_mobilenet_depthwise_groups():
+    g = models.mobilenet_v2(10, 32, width=0.5)
+    dw = [n for n in g.approx_layers() if n.groups > 1]
+    assert dw, "expected depthwise layers"
+    for n in dw:
+        assert n.groups == n.cin == n.cout
+
+
+def test_graph_shape_inference_consistency():
+    g = models.resnet(8, 10, 32)
+    for n in g.approx_layers():
+        if n.kind == "conv":
+            assert n.macs_total == int(np.prod(n.out_shape)) * n.macs_per_out
+
+
+def test_graph_json_roundtrip_fields():
+    g = models.resnet(8, 10, 32)
+    j = g.to_json()
+    assert j["n_approx_layers"] == 10
+    assert j["total_macs"] == g.total_macs()
+    kinds = {n["kind"] for n in j["nodes"]}
+    assert kinds == {"input", "conv", "dense", "add", "gap", "output"}

@@ -1,0 +1,70 @@
+"""Depthwise LUT-conv kernel vs its oracle and vs lax depthwise conv."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import muldb
+from compile.kernels import lut_dwconv as dw
+
+FAMILY = muldb.build_family()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([16, 64]),
+    tiles=st.integers(1, 3),
+    taps=st.sampled_from([1, 9]),
+    c=st.integers(1, 16),
+    mid=st.integers(0, 36),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_matches_ref(bm, tiles, taps, c, mid, seed):
+    rng = np.random.default_rng(seed)
+    m = bm * tiles
+    patches = rng.integers(0, 256, (m, taps, c))
+    w = rng.integers(0, 256, (taps, c))
+    lut = muldb.build_lut(FAMILY[mid])
+    out = dw.lut_dwconv(jnp.asarray(patches), jnp.asarray(w), jnp.asarray(lut), bm=bm)
+    exp = dw.dwconv_ref(jnp.asarray(patches), jnp.asarray(w), jnp.asarray(lut))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_exact_dwconv_equals_lax_conv():
+    """With the exact LUT and zero-point-corrected codes the kernel must
+    reproduce a depthwise lax.conv on the dequantized values."""
+    rng = np.random.default_rng(0)
+    b, hw, c, k = 2, 8, 4, 3
+    za, zw = 128, 120
+    codes = rng.integers(0, 256, (b, hw, hw, c))
+    wcodes = rng.integers(0, 256, (k * k, c))
+
+    patches = dw.extract_patches(jnp.asarray(codes), hw, c, k, 1, 1, za)
+    acc = np.asarray(dw.lut_dwconv(patches, jnp.asarray(wcodes), jnp.asarray(muldb.exact_lut())))
+    # corrections: acc - za*SW_c - zw*SA - taps*za*zw per output element
+    sw = wcodes.sum(axis=0)
+    sa = np.asarray(patches).sum(axis=1)
+    corr = acc - za * sw[None, :] - zw * sa + k * k * za * zw
+
+    x = (codes - za).astype(np.float32)
+    w = (wcodes - zw).astype(np.float32).reshape(k, k, 1, c)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(x),
+        jnp.asarray(w),
+        (1, 1),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    np.testing.assert_allclose(corr.reshape(b, hw, hw, c), np.asarray(ref), atol=0.5)
+
+
+def test_extract_patches_padding_uses_zero_point():
+    codes = jnp.zeros((1, 4, 4, 2), jnp.int32) + 7
+    patches = dw.extract_patches(codes, 4, 2, 3, 1, 1, 99)
+    p = np.asarray(patches).reshape(4, 4, 9, 2)
+    # top-left output's top-left tap is padding
+    assert (p[0, 0, 0] == 99).all()
+    # center taps are real values
+    assert (p[1, 1, 4] == 7).all()

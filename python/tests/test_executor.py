@@ -1,0 +1,133 @@
+"""Executor semantics: mode equivalences + the low-rank error surrogate
+against a direct LUT evaluation (the L2 <-> engine contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, muldb, quant
+from compile.executor import RunConfig, bn_param_count, forward, init_params, num_params
+from compile.graph import Graph
+
+FAMILY = muldb.build_family()
+
+
+def tiny_graph():
+    g = Graph((8, 8, 3), name="tiny")
+    x = g.conv(0, 8, 3, name="c1")
+    x = g.conv(x, 8, 3, stride=2, name="c2")
+    x = g.gap(x)
+    x = g.dense(x, 5, name="fc")
+    g.output(x)
+    return g
+
+
+def quant_meta_for(graph, params, scale_in=0.05):
+    return {
+        n.name: {
+            "in": quant.QParams(scale_in, 128),
+            "w": quant.weight_qparams(np.asarray(params[n.name]["w"])),
+        }
+        for n in graph.approx_layers()
+    }
+
+
+def test_float_and_qat_shapes():
+    g = tiny_graph()
+    p = init_params(g, 0)
+    x = jnp.asarray(np.random.default_rng(0).random((2, 8, 8, 3)), jnp.float32)
+    logits, _ = forward(g, p, x, RunConfig(mode="float", bn_train=True))
+    assert logits.shape == (2, 5)
+    qm = quant_meta_for(g, p)
+    logits2, _ = forward(g, p, x, RunConfig(mode="qat", quant=qm))
+    assert logits2.shape == (2, 5)
+
+
+def test_exact_uv_is_identity():
+    """Zero U/V tables must reproduce the plain QAT forward exactly."""
+    g = tiny_graph()
+    p = init_params(g, 1)
+    qm = quant_meta_for(g, p)
+    x = jnp.asarray(np.random.default_rng(1).random((2, 8, 8, 3)), jnp.float32)
+    base, _ = forward(g, p, x, RunConfig(mode="qat", quant=qm))
+    uv = {
+        n.name: (jnp.zeros((256, 4), jnp.float32), jnp.zeros((256, 4), jnp.float32))
+        for n in g.approx_layers()
+    }
+    approx, _ = forward(g, p, x, RunConfig(mode="approx", quant=qm, uv=uv))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(approx), atol=1e-5)
+
+
+def lut_layer_reference(x, w, qp_in, qp_w, lut):
+    """Direct dense-layer LUT evaluation: s_a*s_w * (corrected acc)."""
+    a = np.clip(np.round(np.asarray(x) / qp_in.scale) + qp_in.zero_point, 0, 255).astype(np.int64)
+    wq = np.clip(np.round(np.asarray(w) / qp_w.scale) + qp_w.zero_point, 0, 255).astype(np.int64)
+    acc = lut[a[:, :, None], wq[None, :, :]].sum(axis=1)
+    k = a.shape[1]
+    corr = (
+        acc
+        - qp_in.zero_point * wq.sum(axis=0)[None, :]
+        - qp_w.zero_point * a.sum(axis=1)[:, None]
+        + k * qp_in.zero_point * qp_w.zero_point
+    )
+    return qp_in.scale * qp_w.scale * corr
+
+
+@pytest.mark.parametrize("mid", [7, 9, 19, 26])  # low-rank-friendly instances
+def test_surrogate_matches_direct_lut_dense(mid):
+    """For exactly-low-rank multipliers the surrogate dense layer equals a
+    direct LUT evaluation (up to f32 arithmetic)."""
+    g = Graph((4,), name="d")
+    d = g.dense(0, 6, name="fc", has_bn=False)
+    g.output(d)
+    rng = np.random.default_rng(mid)
+    p = {"fc": {"w": jnp.asarray(rng.normal(0, 0.4, (4, 6)), jnp.float32), "b": jnp.zeros(6, jnp.float32)}}
+    qm = quant_meta_for(g, p, scale_in=0.02)
+    lut = muldb.build_lut(FAMILY[mid])
+    U, V = muldb.lowrank_error(lut, rank=8)
+    uv = {"fc": (jnp.asarray(U), jnp.asarray(V))}
+    x = jnp.asarray(rng.uniform(-1, 1, (16, 4)), jnp.float32)
+    out, _ = forward(g, p, x, RunConfig(mode="approx", quant=qm, uv=uv))
+    expect = lut_layer_reference(x, p["fc"]["w"], qm["fc"]["in"], qm["fc"]["w"], lut.astype(np.int64))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=2e-3)
+
+
+def test_residual_noise_changes_output_only_with_rng():
+    g = tiny_graph()
+    p = init_params(g, 2)
+    qm = quant_meta_for(g, p)
+    lut = muldb.build_lut(FAMILY[9])
+    U, V = muldb.lowrank_error(lut, 8)
+    uv = {n.name: (jnp.asarray(U), jnp.asarray(V)) for n in g.approx_layers()}
+    noise = {n.name: 0.5 for n in g.approx_layers()}
+    x = jnp.asarray(np.random.default_rng(2).random((2, 8, 8, 3)), jnp.float32)
+    cfg = RunConfig(mode="approx", quant=qm, uv=uv, res_noise=noise)
+    a, _ = forward(g, p, x, cfg)  # no rng: deterministic
+    b, _ = forward(g, p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c, _ = forward(g, p, x, cfg, rng=jax.random.PRNGKey(0))
+    assert float(jnp.abs(c - a).max()) > 0.0
+
+
+def test_param_counting():
+    g = models.resnet(8, 10, 32, width=1.0)
+    p = init_params(g)
+    # full ResNet8 ~78k params (conv + bn + fc)
+    assert 70_000 < num_params(p) < 90_000
+    overlay = bn_param_count(g)
+    # BN overlay is a small fraction (paper: ~2-3%)
+    assert overlay / num_params(p) < 0.03
+
+
+def test_agn_mode_perturbs():
+    g = tiny_graph()
+    p = init_params(g, 3)
+    qm = quant_meta_for(g, p)
+    x = jnp.asarray(np.random.default_rng(3).random((2, 8, 8, 3)), jnp.float32)
+    base, _ = forward(g, p, x, RunConfig(mode="qat", quant=qm))
+    noisy, _ = forward(
+        g, p, x,
+        RunConfig(mode="agn", quant=qm, sigma=jnp.full((3,), 0.2), rng=jax.random.PRNGKey(1)),
+    )
+    assert float(jnp.abs(noisy - base).max()) > 0.0

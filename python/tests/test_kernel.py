@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas LUT matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / block sizes / multiplier instances; every case
+must be **bit-exact** against ref.py (the kernel computes integers).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import muldb
+from compile.kernels import lut_matmul as lm
+from compile.kernels import ref
+
+FAMILY = muldb.build_family()
+_LUT_CACHE = {}
+
+
+def lut_for(mid: int) -> np.ndarray:
+    if mid not in _LUT_CACHE:
+        _LUT_CACHE[mid] = muldb.build_lut(FAMILY[mid])
+    return _LUT_CACHE[mid]
+
+
+def rand_codes(rng, shape):
+    return rng.integers(0, 256, size=shape, dtype=np.int64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    k=st.integers(1, 96),
+    mid=st.integers(0, len(FAMILY) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_matmul_matches_ref(bm, bn, mt, nt, k, mid, seed):
+    rng = np.random.default_rng(seed)
+    m, n = bm * mt, bn * nt
+    a = rand_codes(rng, (m, k))
+    w = rand_codes(rng, (k, n))
+    lut = lut_for(mid)
+    out = lm.lut_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(lut), bm=bm, bn=bn)
+    exp = ref.lut_matmul_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(lut))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 64),
+    mid=st.integers(0, len(FAMILY) - 1),
+    za=st.integers(0, 255),
+    zw=st.integers(0, 255),
+    zo=st.integers(0, 255),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_matmul_requant_matches_ref(k, mid, za, zw, zo, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_codes(rng, (32, k))
+    w = rand_codes(rng, (k, 32))
+    lut = lut_for(mid)
+    scale = float(rng.uniform(1e-6, 1e-3))
+    out = lm.lut_matmul_requant(jnp.asarray(a), jnp.asarray(w), jnp.asarray(lut), scale, za, zw, zo)
+    exp = ref.lut_matmul_requant_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(lut), scale, za, zw, zo)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_exact_lut_equals_integer_matmul():
+    rng = np.random.default_rng(7)
+    a = rand_codes(rng, (64, 80))
+    w = rand_codes(rng, (80, 64))
+    out = lm.lut_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(muldb.exact_lut()))
+    np.testing.assert_array_equal(np.asarray(out), a @ w)
+
+
+def test_zero_point_correction_identity():
+    """With the exact LUT, the corrected accumulation equals the
+    zero-point-shifted integer matmul — the numeric contract the whole
+    quantized pipeline relies on."""
+    rng = np.random.default_rng(11)
+    a = rand_codes(rng, (32, 40))
+    w = rand_codes(rng, (40, 32))
+    za, zw = 131, 117
+    acc = np.asarray(ref.lut_matmul_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(muldb.exact_lut())))
+    corr = acc - za * w.sum(axis=0)[None, :] - zw * a.sum(axis=1)[:, None] + 40 * za * zw
+    direct = (a - za) @ (w - zw)
+    np.testing.assert_array_equal(corr, direct)
+
+
+@pytest.mark.parametrize("mid", [0, 9, 19, 23, 30])
+def test_kernel_constant_operands(mid):
+    """Degenerate inputs: all-zero and all-max codes."""
+    lut = lut_for(mid)
+    for val in (0, 255):
+        a = np.full((16, 8), val, dtype=np.int64)
+        w = np.full((8, 16), val, dtype=np.int64)
+        out = lm.lut_matmul(jnp.asarray(a), jnp.asarray(w), jnp.asarray(lut), bm=16, bn=16)
+        assert (np.asarray(out) == 8 * int(lut[val, val])).all()
+
+
+def test_vmem_budget_default_blocks():
+    fp = lm.vmem_footprint_bytes(lm.DEFAULT_BM, lm.DEFAULT_BN, 1152)
+    assert fp["fits_16MiB_vmem"], fp

@@ -1,0 +1,111 @@
+"""Multiplier-family invariants + the cross-language golden digest."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import muldb
+
+FAMILY = muldb.build_family()
+
+# Golden SHA-256 of the serialized LUT stack.  The Rust generator
+# (rust/src/muldb) asserts the same value: if either side's behavioural
+# definitions drift, both this test and the Rust test fail.
+GOLDEN_DIGEST = "351117ce8837aa4c469a02f8a2c6d5f6a3a9aab0cba8f4c4c29d05926d27c723"
+
+
+def test_family_size_and_ids():
+    assert len(FAMILY) == 37
+    assert [s.mid for s in FAMILY] == list(range(37))
+    assert FAMILY[0].technique == "exact"
+    names = [s.name for s in FAMILY]
+    assert len(set(names)) == 37
+
+
+def test_digest_golden():
+    assert muldb.family_digest(muldb.lut_stack(FAMILY)) == GOLDEN_DIGEST
+
+
+def test_power_model_bounds():
+    for s in FAMILY:
+        assert 0.0 < s.power <= 1.0, s.name
+    assert FAMILY[0].power == 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255), mid=st.integers(0, 36))
+def test_scalar_functions_nonnegative_and_bounded(a, b, mid):
+    v = FAMILY[mid].fn()(a, b)
+    assert v >= 0
+    # bounded by max exact product + worst constant compensation
+    assert v <= 255 * 255 + 70000
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255))
+def test_trunc_is_lower_bound(a, b):
+    for k in (1, 2, 3, 4):
+        assert muldb.mul_trunc_op(a, b, k) <= a * b
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255))
+def test_bam_monotone_in_h(a, b):
+    prev = a * b
+    for h in range(3, 11):
+        v = muldb.mul_bam(a, b, h)
+        assert v <= prev + 1e-9  # dropping more PP bits can only decrease
+        prev = v
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(1, 255), b=st.integers(1, 255))
+def test_drum_relative_error_bounded(a, b):
+    # DRUM-k relative error is bounded by ~2^-(k-1) per operand
+    for k in (4, 5, 6):
+        v = muldb.mul_drum(a, b, k)
+        rel = abs(v - a * b) / (a * b)
+        assert rel <= 2.0 ** (-(k - 1)) * 2.5, (k, a, b, v)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255))
+def test_mitchell_underestimates(a, b):
+    # Mitchell's approximation never overestimates the product
+    assert muldb.mul_mitchell(a, b, 7) <= a * b
+
+
+def test_zero_operand_maps_to_zero():
+    for s in FAMILY:
+        if s.technique in ("bamc", "otruncc", "loa"):
+            continue  # constant compensation / OR-block shift zero
+        fn = s.fn()
+        assert fn(0, 0) == 0, s.name
+        assert fn(0, 137) == 0, s.name
+
+
+def test_error_stats_match_lut():
+    lut = muldb.build_lut(FAMILY[7])  # bam5
+    st_ = muldb.error_stats(lut)
+    err = muldb.error_map(lut)
+    assert st_["mean"] == pytest.approx(err.mean())
+    assert st_["std"] == pytest.approx(err.std())
+
+
+def test_lowrank_reconstruction_bam_exact():
+    """BAM error maps are exactly low-rank (sum of <=8 bit outer products)."""
+    for mid in (5, 9, 12):  # bam instances
+        lut = muldb.build_lut(FAMILY[mid])
+        U, V = muldb.lowrank_error(lut, rank=8)
+        err = muldb.error_map(lut)
+        rec = U.astype(np.float64) @ V.astype(np.float64).T
+        rel = np.linalg.norm(err - rec) / max(np.linalg.norm(err), 1e-12)
+        assert rel < 1e-5, (FAMILY[mid].name, rel)
+
+
+def test_serialize_header():
+    stack = muldb.lut_stack(FAMILY[:2] + FAMILY[2:3])
+    blob = muldb.serialize_luts(stack)
+    assert blob[:4] == b"QLUT"
+    assert int.from_bytes(blob[4:8], "little") == 3
+    assert int.from_bytes(blob[8:12], "little") == 65536

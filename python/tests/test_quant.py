@@ -1,0 +1,70 @@
+"""Quantization semantics: the numeric contract both engines rely on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(lo=st.floats(-100, 0), hi=st.floats(0.01, 100))
+def test_qparams_cover_range(lo, hi):
+    qp = quant.QParams.from_range(lo, hi)
+    assert 0 <= qp.zero_point <= 255
+    assert qp.scale > 0
+    # zero is exactly representable
+    zero = (qp.zero_point - qp.zero_point) * qp.scale
+    assert zero == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-4, 1.0))
+def test_fake_quant_roundtrip_error_bounded(seed, scale):
+    rng = np.random.default_rng(seed)
+    qp = quant.QParams(scale=scale, zero_point=128)
+    x = jnp.asarray(rng.uniform(-100 * scale, 100 * scale, size=64), jnp.float32)
+    y = np.asarray(quant.fake_quant(x, qp))
+    assert np.max(np.abs(y - np.asarray(x))) <= scale / 2 + 1e-6
+
+
+def test_fake_quant_clips_to_range():
+    qp = quant.QParams(scale=0.1, zero_point=128)
+    x = jnp.asarray([1e6, -1e6], jnp.float32)
+    y = np.asarray(quant.fake_quant(x, qp))
+    np.testing.assert_allclose(y[0], (255 - 128) * 0.1, rtol=1e-2)
+    np.testing.assert_allclose(y[1], (0 - 128) * 0.1, rtol=1e-2)
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    qp = quant.QParams(scale=0.05, zero_point=128)
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(x, qp)))(jnp.asarray([0.3, -0.7]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0])
+
+
+def test_codes_ste_forward_integral():
+    qp = quant.QParams(scale=0.05, zero_point=100)
+    x = jnp.asarray([0.0, 0.12, -0.3, 100.0], jnp.float32)
+    codes = np.asarray(quant.codes_ste(x, qp))
+    assert np.all(codes == np.round(codes))
+    assert codes.min() >= 0 and codes.max() <= 255
+    assert codes[0] == 100  # zero maps to the zero point
+
+
+def test_weight_qparams_cover_extremes():
+    w = np.asarray([-0.8, 0.0, 0.4], np.float32)
+    qp = quant.weight_qparams(w)
+    codes = np.clip(np.round(w / qp.scale) + qp.zero_point, 0, 255)
+    deq = (codes - qp.zero_point) * qp.scale
+    assert np.max(np.abs(deq - w)) <= qp.scale / 2 + 1e-7
+
+
+def test_ema_range_tracks():
+    ema = quant.EmaRange(decay=0.5)
+    ema.update(np.asarray([0.0, 1.0]))
+    ema.update(np.asarray([-1.0, 3.0]))
+    qp = ema.qparams()
+    assert qp.scale > 0
+    # second update pulls the range toward [-1, 3]
+    assert ema.lo < 0.0 and ema.hi > 1.0

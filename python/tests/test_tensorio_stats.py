@@ -1,0 +1,75 @@
+"""QTEN container + layer statistics / error-model reference."""
+
+import numpy as np
+import pytest
+
+from compile import muldb, stats, tensorio
+
+
+def test_qten_roundtrip(tmp_path):
+    path = str(tmp_path / "t.qten")
+    tensors = {
+        "a.w": np.random.default_rng(0).normal(size=(3, 3, 2, 4)).astype(np.float32),
+        "labels": np.asarray([1, 2, 3], np.int32),
+        "codes": np.asarray([0, 128, 255], np.uint8),
+    }
+    tensorio.save(path, tensors)
+    out = tensorio.load(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_qten_f64_i64_coercion(tmp_path):
+    path = str(tmp_path / "c.qten")
+    tensorio.save(path, {"x": np.asarray([1.5], np.float64), "y": np.asarray([7], np.int64)})
+    out = tensorio.load(path)
+    assert out["x"].dtype == np.float32
+    assert out["y"].dtype == np.int32
+
+
+def test_qten_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.qten"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        tensorio.load(str(p))
+
+
+def test_sigma_e_reference_uniform_matches_closed_form():
+    """Under uniform operand histograms the reference model must agree
+    with the LUT's global error statistics."""
+    fam = muldb.build_family()
+    lut = muldb.build_lut(fam[9])
+    err = muldb.error_map(lut)
+    st = {
+        "l0": {
+            "act_hist": [1 / 256] * 256,
+            "w_hist": [1 / 256] * 256,
+            "k_fanin": 144,
+            "s_act": 0.01,
+            "s_w": 0.02,
+            "bn_scale": 0.5,
+        }
+    }
+    out = stats.sigma_e_reference(st, err, bias_residual=0.0)
+    expect = np.sqrt(144 * err.var()) * 0.01 * 0.02 * 0.5
+    assert out["l0"] == pytest.approx(expect, rel=1e-9)
+    # with the residual-bias term the estimate can only grow
+    out_bias = stats.sigma_e_reference(st, err)
+    assert out_bias["l0"] >= out["l0"]
+
+
+def test_sigma_e_reference_exact_is_zero():
+    err = np.zeros((256, 256))
+    st = {
+        "l0": {
+            "act_hist": [1 / 256] * 256,
+            "w_hist": [1 / 256] * 256,
+            "k_fanin": 100,
+            "s_act": 1.0,
+            "s_w": 1.0,
+            "bn_scale": 1.0,
+        }
+    }
+    assert stats.sigma_e_reference(st, err)["l0"] == 0.0

@@ -1,0 +1,261 @@
+//! ALWANN-style genetic tile mapping [Mrazek et al., ICCAD 2019].
+//!
+//! The accelerator has `n_tiles` compute tiles, each built from one
+//! multiplier instance.  A chromosome is (tile multiplier ids, layer ->
+//! tile map).  NSGA-II-lite multi-objective evolution over (relative
+//! power, quality penalty); returns the final nondominated front so the
+//! caller can pick an operating point like the original paper does.
+
+use crate::baselines::quality_penalty;
+use crate::errmodel::{relative_power, SigmaE};
+use crate::muldb::MulDb;
+use crate::nn::LayerStats;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Chromosome {
+    pub tiles: Vec<usize>,      // n_tiles multiplier ids
+    pub layer_tile: Vec<usize>, // l entries in [0, n_tiles)
+}
+
+impl Chromosome {
+    pub fn assignment(&self) -> Vec<usize> {
+        self.layer_tile.iter().map(|&t| self.tiles[t]).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub n_tiles: usize,
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            n_tiles: 4,
+            population: 64,
+            generations: 60,
+            mutation_rate: 0.15,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub chromosome: Chromosome,
+    pub power: f64,
+    pub penalty: f64,
+}
+
+fn evaluate(c: &Chromosome, db: &MulDb, se: &SigmaE, sigma_g: &[f64], stats: &[LayerStats]) -> Evaluated {
+    let a = c.assignment();
+    Evaluated {
+        chromosome: c.clone(),
+        power: relative_power(db, stats, &a),
+        penalty: quality_penalty(se, sigma_g, &a),
+    }
+}
+
+fn dominates(a: &Evaluated, b: &Evaluated) -> bool {
+    (a.power <= b.power && a.penalty <= b.penalty)
+        && (a.power < b.power || a.penalty < b.penalty)
+}
+
+/// Nondominated subset (first Pareto front).
+pub fn pareto_front(pop: &[Evaluated]) -> Vec<Evaluated> {
+    pop.iter()
+        .filter(|a| !pop.iter().any(|b| dominates(b, a)))
+        .cloned()
+        .collect()
+}
+
+fn random_chromosome(rng: &mut Rng, m: usize, l: usize, n_tiles: usize) -> Chromosome {
+    Chromosome {
+        tiles: (0..n_tiles).map(|_| rng.below(m)).collect(),
+        layer_tile: (0..l).map(|_| rng.below(n_tiles)).collect(),
+    }
+}
+
+fn crossover(rng: &mut Rng, a: &Chromosome, b: &Chromosome) -> Chromosome {
+    let tiles = a
+        .tiles
+        .iter()
+        .zip(&b.tiles)
+        .map(|(&x, &y)| if rng.f64() < 0.5 { x } else { y })
+        .collect();
+    let cut = rng.below(a.layer_tile.len().max(1));
+    let mut layer_tile = a.layer_tile[..cut].to_vec();
+    layer_tile.extend_from_slice(&b.layer_tile[cut..]);
+    Chromosome { tiles, layer_tile }
+}
+
+fn mutate(rng: &mut Rng, c: &mut Chromosome, m: usize, rate: f64) {
+    let n_tiles = c.tiles.len();
+    for t in c.tiles.iter_mut() {
+        if rng.f64() < rate {
+            *t = rng.below(m);
+        }
+    }
+    for lt in c.layer_tile.iter_mut() {
+        if rng.f64() < rate {
+            *lt = rng.below(n_tiles);
+        }
+    }
+}
+
+/// Run the evolution; returns the final population's Pareto front sorted
+/// by power (ascending).
+pub fn evolve(
+    db: &MulDb,
+    se: &SigmaE,
+    sigma_g: &[f64],
+    stats: &[LayerStats],
+    cfg: &GaConfig,
+) -> Vec<Evaluated> {
+    let m = db.len();
+    let l = se.l;
+    let mut rng = Rng::new(cfg.seed);
+    let mut pop: Vec<Evaluated> = (0..cfg.population)
+        .map(|_| evaluate(&random_chromosome(&mut rng, m, l, cfg.n_tiles), db, se, sigma_g, stats))
+        .collect();
+
+    for _gen in 0..cfg.generations {
+        let mut children = Vec::with_capacity(cfg.population);
+        while children.len() < cfg.population {
+            // binary tournaments on Pareto dominance, tie-break on penalty
+            let pick = |rng: &mut Rng, pop: &[Evaluated]| -> usize {
+                let i = rng.below(pop.len());
+                let j = rng.below(pop.len());
+                if dominates(&pop[i], &pop[j]) {
+                    i
+                } else if dominates(&pop[j], &pop[i]) {
+                    j
+                } else if pop[i].penalty <= pop[j].penalty {
+                    i
+                } else {
+                    j
+                }
+            };
+            let pa = pick(&mut rng, &pop);
+            let pb = pick(&mut rng, &pop);
+            let mut child = crossover(&mut rng, &pop[pa].chromosome, &pop[pb].chromosome);
+            mutate(&mut rng, &mut child, m, cfg.mutation_rate);
+            children.push(evaluate(&child, db, se, sigma_g, stats));
+        }
+        // elitist merge: parents + children, keep nondominated first, fill
+        // by penalty-then-power.
+        pop.extend(children);
+        let front = pareto_front(&pop);
+        let mut next = front;
+        if next.len() < cfg.population {
+            let mut rest: Vec<Evaluated> = pop
+                .iter()
+                .filter(|e| !next.iter().any(|f| f.power == e.power && f.penalty == e.penalty))
+                .cloned()
+                .collect();
+            rest.sort_by(|a, b| {
+                (a.penalty, a.power)
+                    .partial_cmp(&(b.penalty, b.power))
+                    .unwrap()
+            });
+            next.extend(rest.into_iter().take(cfg.population - next.len()));
+        } else {
+            next.truncate(cfg.population);
+        }
+        pop = next;
+    }
+
+    let mut front = pareto_front(&pop);
+    front.sort_by(|a, b| a.power.partial_cmp(&b.power).unwrap());
+    front.dedup_by(|a, b| a.power == b.power && a.penalty == b.penalty);
+    front
+}
+
+/// Convenience: lowest-power front member whose penalty is ~zero.
+pub fn pick_feasible(front: &[Evaluated]) -> Option<&Evaluated> {
+    front
+        .iter()
+        .filter(|e| e.penalty <= 1e-9)
+        .min_by(|a, b| a.power.partial_cmp(&b.power).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errmodel::sigma_e;
+
+    fn setup() -> (MulDb, SigmaE, Vec<f64>, Vec<LayerStats>) {
+        let db = MulDb::generate();
+        let stats: Vec<LayerStats> = (0..6)
+            .map(|i| LayerStats {
+                name: format!("l{i}"),
+                act_hist: vec![1.0 / 256.0; 256],
+                w_hist: vec![1.0 / 256.0; 256],
+                k_fanin: 64,
+                macs_total: 10_000 * (1 + i),
+                s_act: 0.02,
+                z_act: 128,
+                s_w: 0.01,
+                z_w: 128,
+                bn_scale: 0.3,
+                out_rms: 1.0,
+            })
+            .collect();
+        let se = sigma_e(&db, &stats);
+        let sigma_g: Vec<f64> = (0..6).map(|i| 0.1 * (1.0 + i as f64)).collect();
+        (db, se, sigma_g, stats)
+    }
+
+    #[test]
+    fn chromosome_uses_at_most_n_tiles() {
+        let (db, se, sigma_g, stats) = setup();
+        let cfg = GaConfig {
+            n_tiles: 3,
+            population: 24,
+            generations: 10,
+            ..Default::default()
+        };
+        let front = evolve(&db, &se, &sigma_g, &stats, &cfg);
+        assert!(!front.is_empty());
+        for e in &front {
+            let distinct: std::collections::BTreeSet<usize> =
+                e.chromosome.assignment().into_iter().collect();
+            assert!(distinct.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn front_is_nondominated_and_finds_feasible() {
+        let (db, se, sigma_g, stats) = setup();
+        let cfg = GaConfig {
+            population: 48,
+            generations: 30,
+            ..Default::default()
+        };
+        let front = evolve(&db, &se, &sigma_g, &stats, &cfg);
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b) || a.power == b.power);
+            }
+        }
+        let feasible = pick_feasible(&front);
+        assert!(feasible.is_some(), "GA found no zero-penalty solution");
+        assert!(feasible.unwrap().power < 1.0, "should beat exact-everywhere");
+    }
+
+    #[test]
+    fn evolution_improves_over_random_init() {
+        let (db, se, sigma_g, stats) = setup();
+        let short = evolve(&db, &se, &sigma_g, &stats, &GaConfig { generations: 1, seed: 5, ..Default::default() });
+        let long = evolve(&db, &se, &sigma_g, &stats, &GaConfig { generations: 40, seed: 5, ..Default::default() });
+        let best = |front: &[Evaluated]| {
+            pick_feasible(front).map(|e| e.power).unwrap_or(1.0)
+        };
+        assert!(best(&long) <= best(&short) + 1e-9);
+    }
+}

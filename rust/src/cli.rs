@@ -1,0 +1,112 @@
+//! Hand-rolled CLI (clap is unavailable offline): flag parser + the
+//! subcommand implementations live in `commands`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `cmd [positional...] [--flag value | --switch]...`.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // value if next token exists and is not another flag
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), (*v).clone());
+                        it.next();
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+pub const USAGE: &str = "qos-nets — adaptive approximate NN inference (QoS-Nets reproduction)
+
+USAGE: qos-nets <command> [--flags]
+
+COMMANDS
+  muldb                         print the approximate-multiplier family
+  search    --exp E             run the QoS-Nets clustered search, write
+                                artifacts/E/assignment.json
+  baselines --exp E             run all baseline mapping algorithms
+  eval      --exp E [--mode M]  evaluate operating points with the native
+                                LUT engine (M: none|bn|full, default bn)
+  eval-pjrt --exp E             evaluate through the AOT PJRT artifact
+  serve     --exp E [--secs S]  QoS serving demo: batching server with a
+                                power-budget trace driving OP switches
+  report    <fig1|fig2|fig3> --exp E   dump figure data series
+  selftest  --exp E             cross-layer integration checks
+
+COMMON FLAGS
+  --artifacts DIR   artifacts directory (default: artifacts)
+  --limit N         cap evaluation set size
+  --batch N         engine batch size (default 32)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse(&["search", "--exp", "quick", "--verbose", "--limit", "10"]);
+        assert_eq!(a.command, "search");
+        assert_eq!(a.get("exp"), Some("quick"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("limit", 0), 10);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["report", "fig3", "--exp", "table4_mnv2"]);
+        assert_eq!(a.positional, vec!["fig3"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["eval"]);
+        assert_eq!(a.get_or("exp", "quick"), "quick");
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,226 @@
+//! Blocked LUT matmul — the L3 hot loop (native mirror of the L1 kernel).
+//!
+//! Computes  acc[m, n] = sum_k lut[a[m, k], w[k, n]]  over u8 codes held
+//! in i32, exactly like the Pallas kernel / ref.py oracle.
+//!
+//! Layout strategy (see EXPERIMENTS.md §Perf for the measured iteration):
+//!   * the LUT is transposed once per multiplier to w-major order
+//!     (`wlut[w * 256 + a]`), so for a fixed weight code the 256-entry
+//!     row is one KiB of hot cache;
+//!   * A is transposed to (K, M) so the inner m-loop reads contiguous
+//!     indices; W is transposed to (N, K) so each output column walks a
+//!     contiguous code row;
+//!   * M is tiled so the A^T tile stays cache-resident while all N
+//!     columns sweep over it.
+
+pub const M_TILE: usize = 256;
+
+/// Transpose a row-major (256, 256) LUT to w-major order.
+pub fn transpose_lut(lut: &[i32]) -> Vec<i32> {
+    debug_assert_eq!(lut.len(), 65536);
+    let mut t = vec![0i32; 65536];
+    for a in 0..256 {
+        for w in 0..256 {
+            t[w * 256 + a] = lut[a * 256 + w];
+        }
+    }
+    t
+}
+
+/// Raw accumulation: `at` is A transposed (K, M), `wt` is W transposed
+/// (N, K), `wlut` is the w-major LUT. Output row-major (M, N).
+pub fn lut_matmul_acc(at: &[i32], wt: &[i32], wlut: &[i32], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    debug_assert_eq!(at.len(), k * m);
+    debug_assert_eq!(wt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let mut acc_col = [0i32; M_TILE];
+    let mut m0 = 0;
+    while m0 < m {
+        let mt = (m - m0).min(M_TILE);
+        for nn in 0..n {
+            let col = &mut acc_col[..mt];
+            col.fill(0);
+            let wrow = &wt[nn * k..(nn + 1) * k];
+            // 2-way k-unroll: two independent gather streams per pass to
+            // hide L1 load latency (the strided write to `out` happens
+            // once per column tile, amortized over K)
+            let mut kk = 0;
+            while kk + 1 < k {
+                let r0 = (wrow[kk] as usize) << 8;
+                let r1 = (wrow[kk + 1] as usize) << 8;
+                let row0 = &wlut[r0..r0 + 256];
+                let row1 = &wlut[r1..r1 + 256];
+                let a0 = &at[kk * m + m0..kk * m + m0 + mt];
+                let a1 = &at[(kk + 1) * m + m0..(kk + 1) * m + m0 + mt];
+                for i in 0..mt {
+                    unsafe {
+                        *col.get_unchecked_mut(i) += *row0.get_unchecked(*a0.get_unchecked(i) as usize)
+                            + *row1.get_unchecked(*a1.get_unchecked(i) as usize);
+                    }
+                }
+                kk += 2;
+            }
+            if kk < k {
+                let r0 = (wrow[kk] as usize) << 8;
+                let row = &wlut[r0..r0 + 256];
+                let arow = &at[kk * m + m0..kk * m + m0 + mt];
+                for (acc, &a) in col.iter_mut().zip(arow) {
+                    *acc += unsafe { *row.get_unchecked(a as usize) };
+                }
+            }
+            for (mm, &v) in col.iter().enumerate() {
+                out[(m0 + mm) * n + nn] = v;
+            }
+        }
+        m0 += mt;
+    }
+}
+
+/// Exact-multiplier fast path: integer matmul on zero-point-shifted codes
+/// (bit-identical to lut accumulation + correction with the exact LUT).
+pub fn exact_matmul_corrected(
+    at: &[i32],
+    wt: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    za: i32,
+    zw: i32,
+    out: &mut [i32],
+) {
+    let mut acc_col = [0i32; M_TILE];
+    let mut m0 = 0;
+    while m0 < m {
+        let mt = (m - m0).min(M_TILE);
+        for nn in 0..n {
+            let col = &mut acc_col[..mt];
+            col.fill(0);
+            let wrow = &wt[nn * k..(nn + 1) * k];
+            for kk in 0..k {
+                let wv = wrow[kk] - zw;
+                if wv == 0 {
+                    continue;
+                }
+                let arow = &at[kk * m + m0..kk * m + m0 + mt];
+                for (acc, &a) in col.iter_mut().zip(arow) {
+                    *acc += (a - za) * wv;
+                }
+            }
+            for (mm, &v) in col.iter().enumerate() {
+                out[(m0 + mm) * n + nn] = v;
+            }
+        }
+        m0 += mt;
+    }
+}
+
+/// Zero-point correction in place:
+/// corr = acc - za * SW[n] - zw * SA[m] + K * za * zw.
+pub fn apply_corrections(
+    acc: &mut [i32],
+    sa: &[i32],
+    sw: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    za: i32,
+    zw: i32,
+) {
+    let kzz = (k as i32) * za * zw;
+    for mm in 0..m {
+        let base = -zw * sa[mm] + kzz;
+        let row = &mut acc[mm * n..(mm + 1) * n];
+        for nn in 0..n {
+            row[nn] += base - za * sw[nn];
+        }
+    }
+}
+
+/// Column sums of A^T (per-m code sums) and row sums of W^T (per-n).
+pub fn code_sums(at: &[i32], wt: &[i32], m: usize, k: usize, n: usize) -> (Vec<i32>, Vec<i32>) {
+    let sa = row_code_sums(at, m, k);
+    let mut sw = vec![0i32; n];
+    for (nn, chunk) in wt.chunks_exact(k).enumerate() {
+        sw[nn] = chunk.iter().sum();
+    }
+    (sa, sw)
+}
+
+/// Per-m code sums of A^T alone (the W^T sums are cached by the engine).
+pub fn row_code_sums(at: &[i32], m: usize, k: usize) -> Vec<i32> {
+    let mut sa = vec![0i32; m];
+    for kk in 0..k {
+        let arow = &at[kk * m..(kk + 1) * m];
+        for (mm, &a) in arow.iter().enumerate() {
+            sa[mm] += a;
+        }
+    }
+    sa
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::muldb::MulDb;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[i32], w: &[i32], lut: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for mm in 0..m {
+            for nn in 0..n {
+                let mut acc = 0;
+                for kk in 0..k {
+                    acc += lut[(a[mm * k + kk] as usize) * 256 + w[kk * n + nn] as usize];
+                }
+                out[mm * n + nn] = acc;
+            }
+        }
+        out
+    }
+
+    fn transpose(x: &[i32], rows: usize, cols: usize) -> Vec<i32> {
+        let mut t = vec![0i32; x.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = x[r * cols + c];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let db = MulDb::generate();
+        let mut rng = Rng::new(5);
+        for &(m, k, n, mid) in &[(3usize, 7usize, 5usize, 9usize), (300, 33, 17, 19), (64, 64, 64, 23)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+            let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+            let at = transpose(&a, m, k);
+            let wt = transpose(&w, k, n);
+            let wlut = transpose_lut(db.lut(mid));
+            let mut out = vec![0i32; m * n];
+            lut_matmul_acc(&at, &wt, &wlut, m, k, n, &mut out);
+            assert_eq!(out, naive(&a, &w, db.lut(mid), m, k, n), "m{m} k{k} n{n} mid{mid}");
+        }
+    }
+
+    #[test]
+    fn exact_fast_path_equals_lut_plus_corrections() {
+        let db = MulDb::generate();
+        let mut rng = Rng::new(6);
+        let (m, k, n) = (17usize, 29usize, 13usize);
+        let (za, zw) = (128i32, 117i32);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+        let at = transpose(&a, m, k);
+        let wt = transpose(&w, k, n);
+        let wlut = transpose_lut(db.lut(0));
+        let mut lut_out = vec![0i32; m * n];
+        lut_matmul_acc(&at, &wt, &wlut, m, k, n, &mut lut_out);
+        let (sa, sw) = code_sums(&at, &wt, m, k, n);
+        apply_corrections(&mut lut_out, &sa, &sw, m, k, n, za, zw);
+        let mut fast = vec![0i32; m * n];
+        exact_matmul_corrected(&at, &wt, m, k, n, za, zw, &mut fast);
+        assert_eq!(lut_out, fast);
+    }
+}

@@ -1,0 +1,394 @@
+//! Native quantized inference engine: executes the exported graph with
+//! bit-exact LUT arithmetic (the deployment semantics of the paper's
+//! approximate hardware).
+//!
+//! Data flow per approximable layer (conv / dense):
+//!   f32 input -> u8 codes (round-half-even, clamp) -> im2col ->
+//!   LUT accumulation -> zero-point corrections -> fused
+//!   dequant*BN scale + bias -> activation -> f32 output.
+//! `add` / `gap` nodes run in f32 between layers, matching the L2
+//! executor's semantics (quantization happens at layer *inputs*).
+//!
+//! Operating-point switching is a pointer swap: `OperatingPoint` bundles
+//! the per-layer multiplier assignment + the BN overlay parameters; the
+//! engine holds all LUTs (transposed, cached) so switching costs nothing
+//! on the data path.
+
+pub mod lutmm;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::muldb::MulDb;
+use crate::nn::{Graph, ModelParams, Node, NodeKind};
+
+/// One runtime configuration: multiplier per layer + parameter set.
+#[derive(Debug, Clone)]
+pub struct OperatingPoint {
+    pub name: String,
+    /// layer name -> multiplier id
+    pub assignment: HashMap<String, usize>,
+    pub params: ModelParams,
+    /// MAC-weighted relative multiplication power (from the search).
+    pub relative_power: f64,
+}
+
+pub struct Engine {
+    graph: Arc<Graph>,
+    db: Arc<MulDb>,
+    /// transposed (w-major) LUT cache, built lazily per multiplier id
+    wluts: Vec<Option<Vec<i32>>>,
+    /// per-(op, layer, group) transposed weight codes + column sums,
+    /// rebuilt only when the operating point changes (serving hot path)
+    wt_cache: HashMap<(String, String, usize), (Vec<i32>, Vec<i32>)>,
+}
+
+#[derive(Debug, Clone)]
+struct Act {
+    shape: Vec<usize>, // [B, H, W, C] or [B, C]
+    data: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(graph: Arc<Graph>, db: Arc<MulDb>) -> Self {
+        let n = db.len();
+        Engine {
+            graph,
+            db,
+            wluts: vec![None; n],
+            wt_cache: HashMap::new(),
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    #[allow(dead_code)]
+    fn wlut(&mut self, mid: usize) -> &[i32] {
+        if self.wluts[mid].is_none() {
+            self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
+        }
+        self.wluts[mid].as_ref().unwrap()
+    }
+
+    /// Forward a batch: images [B, H, W, C] f32 -> logits [B, classes].
+    pub fn forward(&mut self, op: &OperatingPoint, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let ishape = &self.graph.input_shape;
+        let expect = batch * ishape.iter().product::<usize>();
+        if images.len() != expect {
+            bail!("input size {} != expected {}", images.len(), expect);
+        }
+        let mut vals: HashMap<usize, Act> = HashMap::new();
+        vals.insert(
+            0,
+            Act {
+                shape: vec![batch, ishape[0], ishape[1], ishape[2]],
+                data: images.to_vec(),
+            },
+        );
+
+        let mut logits = None;
+        // clone the node list so conv/dense can borrow &mut self (LUT cache)
+        let nodes: Vec<Node> = self.graph.nodes.clone();
+        for node in &nodes {
+            match node.kind {
+                NodeKind::Input => {}
+                NodeKind::Conv => {
+                    let x = vals.get(&node.inputs[0]).context("conv input")?;
+                    let y = self.conv(node, op, x)?;
+                    vals.insert(node.id, y);
+                }
+                NodeKind::Dense => {
+                    let x = vals.get(&node.inputs[0]).context("dense input")?;
+                    let y = self.dense(node, op, x)?;
+                    vals.insert(node.id, y);
+                }
+                NodeKind::Add => {
+                    let a = vals.get(&node.inputs[0]).context("add lhs")?;
+                    let b = vals.get(&node.inputs[1]).context("add rhs")?;
+                    let data: Vec<f32> = a
+                        .data
+                        .iter()
+                        .zip(&b.data)
+                        .map(|(x, y)| node.act.apply(x + y))
+                        .collect();
+                    vals.insert(
+                        node.id,
+                        Act {
+                            shape: a.shape.clone(),
+                            data,
+                        },
+                    );
+                }
+                NodeKind::Gap => {
+                    let x = vals.get(&node.inputs[0]).context("gap input")?;
+                    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+                    let mut out = vec![0f32; b * c];
+                    for bi in 0..b {
+                        for pos in 0..h * w {
+                            let base = (bi * h * w + pos) * c;
+                            for ci in 0..c {
+                                out[bi * c + ci] += x.data[base + ci];
+                            }
+                        }
+                        for ci in 0..c {
+                            out[bi * c + ci] /= (h * w) as f32;
+                        }
+                    }
+                    vals.insert(
+                        node.id,
+                        Act {
+                            shape: vec![b, c],
+                            data: out,
+                        },
+                    );
+                }
+                NodeKind::Output => {
+                    logits = vals.get(&node.inputs[0]).cloned();
+                }
+            }
+        }
+        Ok(logits.context("no output produced")?.data)
+    }
+
+    fn quantize(x: &[f32], scale: f32, zp: i32) -> Vec<i32> {
+        x.iter()
+            .map(|&v| ((v / scale).round_ties_even() as i32 + zp).clamp(0, 255))
+            .collect()
+    }
+
+    /// im2col producing the *transposed* (K, M) code matrix the hot loop
+    /// wants, with padding taps filled by the zero-point code.
+    #[allow(clippy::too_many_arguments)]
+    fn im2col_t(
+        codes: &[i32],
+        b: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        za: i32,
+        group: usize,
+        groups: usize,
+    ) -> (Vec<i32>, usize, usize, usize) {
+        let oh = (h + 2 * pad - ksize) / stride + 1;
+        let ow = (w + 2 * pad - ksize) / stride + 1;
+        let cg = cin / groups;
+        let k = ksize * ksize * cg;
+        let m = b * oh * ow;
+        let mut at = vec![za; k * m];
+        let c0 = group * cg;
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mm = (bi * oh + oy) * ow + ox;
+                    for ky in 0..ksize {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..ksize {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let src = ((bi * h + iy as usize) * w + ix as usize) * cin + c0;
+                            for ci in 0..cg {
+                                let kk = (ky * ksize + kx) * cg + ci;
+                                at[kk * m + mm] = codes[src + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (at, k, m, oh * ow)
+    }
+
+    fn conv(&mut self, node: &Node, op: &OperatingPoint, x: &Act) -> Result<Act> {
+        let lp = op
+            .params
+            .layers
+            .get(&node.name)
+            .with_context(|| format!("{}: missing params", node.name))?;
+        let mid = *op.assignment.get(&node.name).unwrap_or(&0);
+        let qin = node.quant_in.context("quant_in")?;
+        let qw = node.quant_w.context("quant_w")?;
+        let (b, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+        let codes = Self::quantize(&x.data, qin.scale, qin.zero_point);
+
+        let groups = node.groups;
+        let cg_out = node.cout / groups;
+        let oh = (h + 2 * node.pad - node.ksize) / node.stride + 1;
+        let ow = (w + 2 * node.pad - node.ksize) / node.stride + 1;
+        let m = b * oh * ow;
+        let mut out = vec![0f32; m * node.cout];
+
+        // weight codes: [kh, kw, cin/groups, cout] row-major; per group the
+        // output slice is cout columns [g*cg_out, (g+1)*cg_out).
+        let kfull = node.ksize * node.ksize * (node.cin / groups);
+        let mut acc = vec![0i32; m * cg_out];
+        for g in 0..groups {
+            let (at, k, m2, _) = Self::im2col_t(
+                &codes,
+                b,
+                h,
+                w,
+                node.cin,
+                node.ksize,
+                node.stride,
+                node.pad,
+                qin.zero_point,
+                g,
+                groups,
+            );
+            debug_assert_eq!(k, kfull);
+            debug_assert_eq!(m2, m);
+            // W^T (cg_out, K) for this group's columns (cached per OP)
+            let key = (op.name.clone(), node.name.clone(), g);
+            if !self.wt_cache.contains_key(&key) {
+                let mut wt = vec![0i32; cg_out * k];
+                for kk in 0..k {
+                    for nn in 0..cg_out {
+                        wt[nn * k + kk] = lp.w_codes[kk * node.cout + g * cg_out + nn];
+                    }
+                }
+                let sw: Vec<i32> = wt.chunks_exact(k).map(|c| c.iter().sum()).collect();
+                self.wt_cache.insert(key.clone(), (wt, sw));
+            }
+            if mid != 0 && self.wluts[mid].is_none() {
+                self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
+            }
+            let (wt, sw) = self.wt_cache.get(&key).unwrap();
+            acc.resize(m * cg_out, 0);
+            if mid == 0 {
+                lutmm::exact_matmul_corrected(&at, wt, m, k, cg_out, qin.zero_point, qw.zero_point, &mut acc);
+            } else {
+                let wlut = self.wluts[mid].as_ref().unwrap();
+                lutmm::lut_matmul_acc(&at, wt, wlut, m, k, cg_out, &mut acc);
+                let sa = lutmm::row_code_sums(&at, m, k);
+                lutmm::apply_corrections(&mut acc, &sa, sw, m, k, cg_out, qin.zero_point, qw.zero_point);
+            }
+            for mm in 0..m {
+                for nn in 0..cg_out {
+                    let c = g * cg_out + nn;
+                    let v = lp.post_scale[c] * acc[mm * cg_out + nn] as f32 + lp.post_bias[c];
+                    out[mm * node.cout + c] = node.act.apply(v);
+                }
+            }
+        }
+        Ok(Act {
+            shape: vec![b, oh, ow, node.cout],
+            data: out,
+        })
+    }
+
+    fn dense(&mut self, node: &Node, op: &OperatingPoint, x: &Act) -> Result<Act> {
+        let lp = op
+            .params
+            .layers
+            .get(&node.name)
+            .with_context(|| format!("{}: missing params", node.name))?;
+        let mid = *op.assignment.get(&node.name).unwrap_or(&0);
+        let qin = node.quant_in.context("quant_in")?;
+        let qw = node.quant_w.context("quant_w")?;
+        let b = x.shape[0];
+        let k = node.cin;
+        let n = node.cout;
+        let codes = Self::quantize(&x.data, qin.scale, qin.zero_point);
+        // A^T (K, B)
+        let mut at = vec![0i32; k * b];
+        for bi in 0..b {
+            for kk in 0..k {
+                at[kk * b + bi] = codes[bi * k + kk];
+            }
+        }
+        // W^T (N, K): weights stored (K, N); cached per OP
+        let key = (op.name.clone(), node.name.clone(), 0usize);
+        if !self.wt_cache.contains_key(&key) {
+            let mut wt = vec![0i32; n * k];
+            for kk in 0..k {
+                for nn in 0..n {
+                    wt[nn * k + kk] = lp.w_codes[kk * n + nn];
+                }
+            }
+            let sw: Vec<i32> = wt.chunks_exact(k).map(|c| c.iter().sum()).collect();
+            self.wt_cache.insert(key.clone(), (wt, sw));
+        }
+        if mid != 0 && self.wluts[mid].is_none() {
+            self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
+        }
+        let (wt, sw) = self.wt_cache.get(&key).unwrap();
+        let mut acc = vec![0i32; b * n];
+        if mid == 0 {
+            lutmm::exact_matmul_corrected(&at, wt, b, k, n, qin.zero_point, qw.zero_point, &mut acc);
+        } else {
+            let wlut = self.wluts[mid].as_ref().unwrap();
+            lutmm::lut_matmul_acc(&at, wt, wlut, b, k, n, &mut acc);
+            let sa = lutmm::row_code_sums(&at, b, k);
+            lutmm::apply_corrections(&mut acc, &sa, sw, b, k, n, qin.zero_point, qw.zero_point);
+        }
+        let mut out = vec![0f32; b * n];
+        for bi in 0..b {
+            for nn in 0..n {
+                let v = lp.post_scale[nn] * acc[bi * n + nn] as f32 + lp.post_bias[nn];
+                out[bi * n + nn] = node.act.apply(v);
+            }
+        }
+        Ok(Act {
+            shape: vec![b, n],
+            data: out,
+        })
+    }
+}
+
+/// Top-1/Top-5 accuracy over an evaluation set.
+pub struct EvalResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+pub fn evaluate(
+    engine: &mut Engine,
+    op: &OperatingPoint,
+    images: &[f32],
+    labels: &[i32],
+    image_elems: usize,
+    num_classes: usize,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<EvalResult> {
+    let n = limit.unwrap_or(labels.len()).min(labels.len());
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let chunk = &images[i * image_elems..(i + b) * image_elems];
+        let logits = engine.forward(op, chunk, b)?;
+        for bi in 0..b {
+            let row = &logits[bi * num_classes..(bi + 1) * num_classes];
+            let label = labels[i + bi] as usize;
+            let mut idx: Vec<usize> = (0..num_classes).collect();
+            idx.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
+            if idx[0] == label {
+                top1 += 1;
+            }
+            if idx[..5.min(num_classes)].contains(&label) {
+                top5 += 1;
+            }
+        }
+        i += b;
+    }
+    Ok(EvalResult {
+        top1: top1 as f64 / n as f64,
+        top5: top5 as f64 / n as f64,
+        n,
+    })
+}

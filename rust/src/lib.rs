@@ -1,0 +1,29 @@
+//! QoS-Nets: adaptive approximate neural-network inference.
+//!
+//! Rust coordinator (L3) of the three-layer reproduction — see DESIGN.md.
+//! Modules:
+//!   * [`muldb`]     approximate-multiplier family (LUTs, power model)
+//!   * [`nn`]        model graph / parameter / statistics loading
+//!   * [`errmodel`]  sigma_e error model (paper Fig. 1)
+//!   * [`selection`] preference vectors + k-means search (Sec. 3.1, 3.2)
+//!   * [`baselines`] ALWANN GA, homogeneous, gradient search, LVRM/PNAM/TPM
+//!   * [`engine`]    native bit-exact LUT inference engine
+//!   * [`runtime`]   PJRT loader/executor for the AOT HLO artifacts
+//!   * [`qos`]       operating-point controller (budget + hysteresis)
+//!   * [`server`]    batching inference server with live OP switching
+//!   * [`pipeline`]  artifact-level orchestration
+//!   * [`cli`]       flag parsing for the `qos-nets` binary
+//!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
+
+pub mod baselines;
+pub mod cli;
+pub mod engine;
+pub mod errmodel;
+pub mod muldb;
+pub mod nn;
+pub mod pipeline;
+pub mod qos;
+pub mod runtime;
+pub mod selection;
+pub mod server;
+pub mod util;

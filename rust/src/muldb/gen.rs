@@ -1,0 +1,227 @@
+//! Behavioural multiplier definitions — must stay bit-identical to
+//! `python/compile/muldb.py` (guarded by the SHA-256 golden test).
+
+use super::{MulSpec, Technique};
+
+pub const N_OPERAND: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Scalar behavioural models (u8 codes in, exact integer out).
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn mul_exact(a: u32, b: u32) -> u32 {
+    a * b
+}
+
+#[inline]
+pub fn mul_trunc_op(a: u32, b: u32, k: u32) -> u32 {
+    let mask = !((1u32 << k) - 1) & 0xFF;
+    (a & mask) * (b & mask)
+}
+
+pub fn mul_bam(a: u32, b: u32, h: u32) -> u32 {
+    let mut acc = 0u32;
+    for i in 0..8 {
+        if (a >> i) & 1 == 0 {
+            continue;
+        }
+        for j in 0..8 {
+            if (b >> j) & 1 == 1 && i + j >= h {
+                acc += 1 << (i + j);
+            }
+        }
+    }
+    acc
+}
+
+pub fn bam_compensation(h: u32) -> u32 {
+    let mut total = 0u32;
+    for i in 0..8 {
+        for j in 0..8 {
+            if i + j < h {
+                total += 1 << (i + j);
+            }
+        }
+    }
+    (total + 2) / 4
+}
+
+pub fn mul_bamc(a: u32, b: u32, h: u32) -> u32 {
+    mul_bam(a, b, h) + bam_compensation(h)
+}
+
+#[inline]
+fn bit_length(x: u32) -> u32 {
+    32 - x.leading_zeros()
+}
+
+fn drum_approx_operand(x: u32, k: u32) -> u32 {
+    if x < (1 << k) {
+        return x;
+    }
+    let msb = bit_length(x) - 1;
+    let shift = msb - k + 1;
+    ((x >> shift) | 1) << shift
+}
+
+pub fn mul_drum(a: u32, b: u32, k: u32) -> u32 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    drum_approx_operand(a, k) * drum_approx_operand(b, k)
+}
+
+pub fn mul_mitchell(a: u32, b: u32, frac_bits: u32) -> u32 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let f = frac_bits;
+    let la = bit_length(a) - 1;
+    let lb = bit_length(b) - 1;
+    let fa = ((a - (1 << la)) << f) >> la;
+    let fb = ((b - (1 << lb)) << f) >> lb;
+    let lsum = ((la + lb) << f) + fa + fb;
+    let k = lsum >> f;
+    let frac = lsum & ((1 << f) - 1);
+    (((1 << f) + frac) << k) >> f
+}
+
+pub fn mul_loa(a: u32, b: u32, h: u32) -> u32 {
+    let mask = (1u32 << h) - 1;
+    let (ah, al) = (a >> h, a & mask);
+    let (bh, bl) = (b >> h, b & mask);
+    ((ah * bh) << (2 * h)) + (((ah * bl) + (bh * al)) << h) + (al | bl)
+}
+
+#[inline]
+pub fn mul_otrunc(a: u32, b: u32, k: u32) -> u32 {
+    (a * b) & !((1u32 << k) - 1)
+}
+
+#[inline]
+pub fn mul_otruncc(a: u32, b: u32, k: u32) -> u32 {
+    mul_otrunc(a, b, k) + (1 << (k - 1))
+}
+
+pub fn eval(tech: Technique, param: u32, a: u32, b: u32) -> u32 {
+    match tech {
+        Technique::Exact => mul_exact(a, b),
+        Technique::Trunc => mul_trunc_op(a, b, param),
+        Technique::Bam => mul_bam(a, b, param),
+        Technique::Bamc => mul_bamc(a, b, param),
+        Technique::Drum => mul_drum(a, b, param),
+        Technique::Mitch => mul_mitchell(a, b, param),
+        Technique::Loa => mul_loa(a, b, param),
+        Technique::Otrunc => mul_otrunc(a, b, param),
+        Technique::Otruncc => mul_otruncc(a, b, param),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Power model (structural proxy; identical formulas to the Python side).
+// ---------------------------------------------------------------------------
+
+fn bam_power(h: u32) -> f64 {
+    let mut kept = 0;
+    for i in 0..8u32 {
+        for j in 0..8u32 {
+            if i + j >= h {
+                kept += 1;
+            }
+        }
+    }
+    kept as f64 / 64.0
+}
+
+pub fn power_model(tech: Technique, param: u32) -> f64 {
+    let p = param as f64;
+    match tech {
+        Technique::Exact => 1.0,
+        Technique::Trunc => ((8.0 - p) / 8.0) * ((8.0 - p) / 8.0),
+        Technique::Bam => bam_power(param),
+        Technique::Bamc => bam_power(param) + 0.01,
+        Technique::Drum => (p * p) / 64.0 + 0.08,
+        Technique::Mitch => 0.11 + p * 0.012,
+        Technique::Loa => (64.0 - p * p) / 64.0 + 0.008,
+        Technique::Otrunc => 1.0 - p * 0.06,
+        Technique::Otruncc => 1.0 - p * 0.06 + 0.005,
+    }
+}
+
+/// The fixed 37-instance search space (order defines the dense ids).
+pub fn family() -> Vec<MulSpec> {
+    let mut specs: Vec<(Technique, u32)> = vec![(Technique::Exact, 0)];
+    specs.extend((1..=4).map(|k| (Technique::Trunc, k)));
+    specs.extend((3..=10).map(|h| (Technique::Bam, h)));
+    specs.extend((3..=8).map(|h| (Technique::Bamc, h)));
+    specs.extend((3..=6).map(|k| (Technique::Drum, k)));
+    specs.extend([7, 5, 3].map(|f| (Technique::Mitch, f)));
+    specs.extend([3, 4, 5, 6].map(|h| (Technique::Loa, h)));
+    specs.extend([2, 4, 6, 8].map(|k| (Technique::Otrunc, k)));
+    specs.extend([4, 6, 8].map(|k| (Technique::Otruncc, k)));
+    assert_eq!(specs.len(), 37);
+    specs
+        .into_iter()
+        .enumerate()
+        .map(|(id, (tech, param))| MulSpec {
+            id,
+            name: if tech == Technique::Exact {
+                "am8u_exact".to_string()
+            } else {
+                format!("am8u_{}{}", tech.as_str(), param)
+            },
+            technique: tech,
+            param,
+            power: power_model(tech, param),
+        })
+        .collect()
+}
+
+/// Materialize one instance's 256x256 LUT (row-major, lut[a*256+b]).
+pub fn build_lut(spec: &MulSpec) -> Vec<i32> {
+    let mut lut = vec![0i32; N_OPERAND * N_OPERAND];
+    for a in 0..N_OPERAND as u32 {
+        for b in 0..N_OPERAND as u32 {
+            lut[(a as usize) * N_OPERAND + b as usize] =
+                eval(spec.technique, spec.param, a, b) as i32;
+        }
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drum_unbiasing_sets_lsb() {
+        // 0b11010000 with k=4 keeps 1101 and forces the kept LSB to 1
+        assert_eq!(drum_approx_operand(0b1101_0000, 4), 0b1101_0000);
+        assert_eq!(drum_approx_operand(0b1100_0000, 4), 0b1101_0000);
+        assert_eq!(drum_approx_operand(7, 4), 7); // below 2^k untouched
+    }
+
+    #[test]
+    fn mitchell_exact_on_powers_of_two() {
+        for (a, b) in [(1u32, 1u32), (2, 4), (16, 8), (128, 2)] {
+            assert_eq!(mul_mitchell(a, b, 7), a * b, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn bam_upper_bound_is_exact() {
+        // h = 0 drops nothing
+        for (a, b) in [(0u32, 0u32), (255, 255), (13, 77)] {
+            assert_eq!(mul_bam(a, b, 0), a * b);
+        }
+    }
+
+    #[test]
+    fn otrunc_only_clears_low_bits() {
+        for (a, b) in [(255u32, 255u32), (17, 31)] {
+            let p = a * b;
+            assert_eq!(mul_otrunc(a, b, 4), p & !0xF);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Approximate-multiplier database — bit-exact Rust mirror of
+//! `python/compile/muldb.py` (the EvoApprox8b substitute).
+//!
+//! Both sides generate the same 37 u8 x u8 -> u32 behavioural models and
+//! the same 256x256 LUT stack; the SHA-256 of the serialized stack is the
+//! cross-language golden value (`tests::digest_matches_python` +
+//! `python/tests/test_muldb.py`).  The Rust side can therefore either
+//! load `artifacts/luts.bin` or regenerate the family offline.
+
+mod gen;
+
+pub use gen::*;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// One multiplier instance in the search space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MulSpec {
+    pub id: usize,
+    pub name: String,
+    pub technique: Technique,
+    pub param: u32,
+    /// Relative power vs the accurate multiplier (structural proxy).
+    pub power: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Technique {
+    Exact,
+    Trunc,
+    Bam,
+    Bamc,
+    Drum,
+    Mitch,
+    Loa,
+    Otrunc,
+    Otruncc,
+}
+
+impl Technique {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Technique::Exact => "exact",
+            Technique::Trunc => "trunc",
+            Technique::Bam => "bam",
+            Technique::Bamc => "bamc",
+            Technique::Drum => "drum",
+            Technique::Mitch => "mitch",
+            Technique::Loa => "loa",
+            Technique::Otrunc => "otrunc",
+            Technique::Otruncc => "otruncc",
+        }
+    }
+}
+
+/// The whole family with materialized LUTs.
+pub struct MulDb {
+    pub specs: Vec<MulSpec>,
+    /// specs.len() x 65536, row-major lut[id][a * 256 + b].
+    pub luts: Vec<Vec<i32>>,
+}
+
+impl MulDb {
+    /// Regenerate the family from the behavioural definitions.
+    pub fn generate() -> Self {
+        let specs = family();
+        let luts = specs.iter().map(|s| build_lut(s)).collect();
+        MulDb { specs, luts }
+    }
+
+    /// Load `luts.bin` + `muldb.json` from the artifacts directory and
+    /// verify the digest matches our own generator (drift check).
+    pub fn load(artifacts: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts.as_ref();
+        let meta_raw = std::fs::read_to_string(dir.join("muldb.json"))
+            .with_context(|| format!("read {}/muldb.json", dir.display()))?;
+        let meta = json::parse(&meta_raw).map_err(anyhow::Error::msg)?;
+        let blob = std::fs::read(dir.join("luts.bin"))?;
+        if blob.len() < 12 || &blob[..4] != b"QLUT" {
+            bail!("luts.bin: bad magic");
+        }
+        let count = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
+        let entries = u32::from_le_bytes(blob[8..12].try_into().unwrap()) as usize;
+        if entries != 65536 {
+            bail!("luts.bin: expected 65536 entries per LUT, got {entries}");
+        }
+        let body = &blob[12..];
+        if body.len() != count * entries * 4 {
+            bail!("luts.bin: truncated body");
+        }
+        let mut luts = Vec::with_capacity(count);
+        for i in 0..count {
+            let lut: Vec<i32> = body[i * entries * 4..(i + 1) * entries * 4]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            luts.push(lut);
+        }
+        let mut specs = Vec::new();
+        for m in meta.req("multipliers").map_err(anyhow::Error::msg)?.as_arr().unwrap_or(&[]) {
+            let tech = match m.get("technique").and_then(|v| v.as_str()).unwrap_or("") {
+                "exact" => Technique::Exact,
+                "trunc" => Technique::Trunc,
+                "bam" => Technique::Bam,
+                "bamc" => Technique::Bamc,
+                "drum" => Technique::Drum,
+                "mitch" => Technique::Mitch,
+                "loa" => Technique::Loa,
+                "otrunc" => Technique::Otrunc,
+                "otruncc" => Technique::Otruncc,
+                other => bail!("unknown technique {other}"),
+            };
+            specs.push(MulSpec {
+                id: m.get("id").and_then(|v| v.as_usize()).context("id")?,
+                name: m.get("name").and_then(|v| v.as_str()).context("name")?.to_string(),
+                technique: tech,
+                param: m.get("param").and_then(|v| v.as_i64()).unwrap_or(0) as u32,
+                power: m.get("power").and_then(|v| v.as_f64()).context("power")?,
+            });
+        }
+        if specs.len() != luts.len() {
+            bail!("muldb.json count {} != luts.bin count {}", specs.len(), luts.len());
+        }
+        let db = MulDb { specs, luts };
+        // drift check against our own generator
+        let own = MulDb::generate();
+        if own.digest() != db.digest() {
+            bail!(
+                "LUT digest mismatch: artifacts {} vs generator {} — python/rust muldb drift",
+                &db.digest()[..16],
+                &own.digest()[..16]
+            );
+        }
+        Ok(db)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn lut(&self, id: usize) -> &[i32] {
+        &self.luts[id]
+    }
+
+    pub fn power(&self, id: usize) -> f64 {
+        self.specs[id].power
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&MulSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// SHA-256 over the Python-compatible serialization.
+    pub fn digest(&self) -> String {
+        use sha2::{Digest, Sha256};
+        let mut h = Sha256::new();
+        h.update(b"QLUT");
+        h.update((self.luts.len() as u32).to_le_bytes());
+        h.update(65536u32.to_le_bytes());
+        for lut in &self.luts {
+            for v in lut {
+                h.update(v.to_le_bytes());
+            }
+        }
+        let out = h.finalize();
+        out.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    /// Error statistics over the uniform operand distribution.
+    pub fn error_stats(&self, id: usize) -> ErrorStats {
+        let lut = &self.luts[id];
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        let mut abs = 0.0f64;
+        let mut wce = 0.0f64;
+        let mut red_sum = 0.0f64;
+        let mut red_n = 0usize;
+        for a in 0..256usize {
+            for b in 0..256usize {
+                let exact = (a * b) as f64;
+                let e = lut[a * 256 + b] as f64 - exact;
+                sum += e;
+                sq += e * e;
+                abs += e.abs();
+                wce = wce.max(e.abs());
+                if exact > 0.0 {
+                    red_sum += e.abs() / exact;
+                    red_n += 1;
+                }
+            }
+        }
+        let n = 65536.0;
+        let mean = sum / n;
+        ErrorStats {
+            mean,
+            std: (sq / n - mean * mean).max(0.0).sqrt(),
+            med: abs / n,
+            mred: red_sum / red_n as f64,
+            wce,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorStats {
+    pub mean: f64,
+    pub std: f64,
+    pub med: f64,
+    pub mred: f64,
+    pub wce: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_has_37_instances() {
+        let db = MulDb::generate();
+        assert_eq!(db.len(), 37);
+        assert_eq!(db.specs[0].name, "am8u_exact");
+        assert!((db.specs[0].power - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_lut_is_product() {
+        let db = MulDb::generate();
+        let lut = db.lut(0);
+        for a in 0..256usize {
+            for b in 0..256usize {
+                assert_eq!(lut[a * 256 + b], (a * b) as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn approximate_luts_bounded_error() {
+        let db = MulDb::generate();
+        for s in &db.specs {
+            let st = db.error_stats(s.id);
+            // every instance is sane: wce below full-scale product
+            assert!(st.wce < 65025.0, "{}: wce {}", s.name, st.wce);
+            if s.technique != Technique::Exact {
+                assert!(st.med > 0.0, "{}: degenerate error", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn power_spread_covers_pareto_range() {
+        let db = MulDb::generate();
+        let min = db.specs.iter().map(|s| s.power).fold(f64::MAX, f64::min);
+        let max = db.specs.iter().map(|s| s.power).fold(f64::MIN, f64::max);
+        assert!(min < 0.2, "cheapest instance {min}");
+        assert!((max - 1.0).abs() < 1e-12);
+    }
+
+    /// Golden digest, generated by python/compile/muldb.py.  If this
+    /// fails, the two behavioural models have drifted apart.
+    #[test]
+    fn digest_matches_python() {
+        let db = MulDb::generate();
+        assert_eq!(
+            db.digest(),
+            "351117ce8837aa4c469a02f8a2c6d5f6a3a9aab0cba8f4c4c29d05926d27c723"
+        );
+    }
+}

@@ -1,0 +1,373 @@
+//! Model description + parameter loading (the Rust view of graph.json,
+//! params.qten and layer_stats.json exported by the Python build path).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::tensorio::{self, Tensor};
+
+pub const BN_EPS: f32 = 1e-5;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Activation {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "relu6" => Activation::Relu6,
+            other => bail!("unknown activation {other}"),
+        })
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::None => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Relu6 => x.clamp(0.0, 6.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    Input,
+    Conv,
+    Dense,
+    Add,
+    Gap,
+    Output,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub kind: NodeKind,
+    pub inputs: Vec<usize>,
+    pub name: String,
+    pub out_shape: Vec<usize>, // HWC for spatial, [C] for vectors
+    pub act: Activation,
+    // conv / dense attrs
+    pub cin: usize,
+    pub cout: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub has_bn: bool,
+    pub macs_per_out: usize,
+    pub macs_total: usize,
+    pub quant_in: Option<QParams>,
+    pub quant_w: Option<QParams>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<Node>,
+    pub total_macs: usize,
+}
+
+impl Graph {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v.get("name").and_then(|x| x.as_str()).unwrap_or("model").to_string();
+        let input_shape: Vec<usize> = v
+            .req("input_shape")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("input_shape")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let mut nodes = Vec::new();
+        for n in v.req("nodes").map_err(anyhow::Error::msg)?.as_arr().unwrap_or(&[]) {
+            let kind = match n.get("kind").and_then(|x| x.as_str()).unwrap_or("") {
+                "input" => NodeKind::Input,
+                "conv" => NodeKind::Conv,
+                "dense" => NodeKind::Dense,
+                "add" => NodeKind::Add,
+                "gap" => NodeKind::Gap,
+                "output" => NodeKind::Output,
+                other => bail!("unknown node kind {other}"),
+            };
+            let get_usize = |k: &str| n.get(k).and_then(|x| x.as_usize()).unwrap_or(0);
+            let quant = n.get("quant");
+            let parse_qp = |which: &str| -> Option<QParams> {
+                quant.and_then(|q| q.get(which)).map(|q| QParams {
+                    scale: q.get("scale").and_then(|x| x.as_f64()).unwrap_or(1.0) as f32,
+                    zero_point: q.get("zero_point").and_then(|x| x.as_i64()).unwrap_or(0) as i32,
+                })
+            };
+            nodes.push(Node {
+                id: get_usize("id"),
+                kind,
+                inputs: n
+                    .get("inputs")
+                    .and_then(|x| x.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                name: n.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                out_shape: n
+                    .get("out_shape")
+                    .and_then(|x| x.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                act: Activation::parse(n.get("act").and_then(|x| x.as_str()).unwrap_or("none"))?,
+                cin: get_usize("cin"),
+                cout: get_usize("cout"),
+                ksize: get_usize("ksize"),
+                stride: get_usize("stride").max(1),
+                pad: get_usize("pad"),
+                groups: get_usize("groups").max(1),
+                has_bn: n.get("has_bn").and_then(|x| x.as_bool()).unwrap_or(false),
+                macs_per_out: get_usize("macs_per_out"),
+                macs_total: get_usize("macs_total"),
+                quant_in: parse_qp("in"),
+                quant_w: parse_qp("w"),
+            });
+        }
+        let total_macs = v.get("total_macs").and_then(|x| x.as_usize()).unwrap_or(0);
+        Ok(Graph {
+            name,
+            input_shape,
+            nodes,
+            total_macs,
+        })
+    }
+
+    /// The l approximable layers, in graph order.
+    pub fn approx_layers(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Conv | NodeKind::Dense))
+            .collect()
+    }
+
+    pub fn layer_index(&self) -> HashMap<String, usize> {
+        self.approx_layers()
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), i))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameters
+// ---------------------------------------------------------------------------
+
+/// Per-layer parameters in deployment form.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// Weight codes (u8 stored widened to i32 for the LUT hot loop),
+    /// conv: [kh, kw, cin/groups, cout] flattened; dense: [cin, cout].
+    pub w_codes: Vec<i32>,
+    pub w_shape: Vec<usize>,
+    /// Per-channel fused output transform: out_f = post_scale[c] * acc_corrected + post_bias[c]
+    pub post_scale: Vec<f32>,
+    pub post_bias: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub layers: HashMap<String, LayerParams>,
+}
+
+impl ModelParams {
+    /// Build deployment parameters from a params.qten (+ optional BN
+    /// overlay replacing gamma/beta/b — the per-operating-point tensors).
+    pub fn load(
+        graph: &Graph,
+        params_path: impl AsRef<Path>,
+        overlay_path: Option<&Path>,
+    ) -> Result<Self> {
+        let tensors = tensorio::load(params_path)?;
+        let overlay = match overlay_path {
+            Some(p) => tensorio::load(p)?,
+            None => HashMap::new(),
+        };
+        Self::from_tensors(graph, &tensors, &overlay)
+    }
+
+    pub fn from_tensors(
+        graph: &Graph,
+        tensors: &HashMap<String, Tensor>,
+        overlay: &HashMap<String, Tensor>,
+    ) -> Result<Self> {
+        let mut layers = HashMap::new();
+        for node in graph.approx_layers() {
+            let name = &node.name;
+            let get = |suffix: &str| -> Option<&Tensor> {
+                overlay
+                    .get(&format!("{name}.{suffix}"))
+                    .or_else(|| tensors.get(&format!("{name}.{suffix}")))
+            };
+            let w = get("w").with_context(|| format!("{name}: missing weights"))?;
+            let wq = node.quant_w.with_context(|| format!("{name}: missing weight qparams"))?;
+            let w_f = w.as_f32()?;
+            let w_codes: Vec<i32> = w_f
+                .iter()
+                .map(|&x| ((x / wq.scale).round() as i32 + wq.zero_point).clamp(0, 255))
+                .collect();
+
+            // fused output transform: dequant * BN (eval stats) + bias
+            let sa = node.quant_in.with_context(|| format!("{name}: missing act qparams"))?;
+            let deq = sa.scale * wq.scale;
+            let (post_scale, post_bias) = if node.has_bn {
+                let gamma = get("gamma").context("gamma")?.as_f32()?.to_vec();
+                let beta = get("beta").context("beta")?.as_f32()?.to_vec();
+                let mean = tensors
+                    .get(&format!("{name}.mean"))
+                    .context("mean")?
+                    .as_f32()?
+                    .to_vec();
+                let var = tensors
+                    .get(&format!("{name}.var"))
+                    .context("var")?
+                    .as_f32()?
+                    .to_vec();
+                let mut ps = vec![0.0f32; node.cout];
+                let mut pb = vec![0.0f32; node.cout];
+                for c in 0..node.cout {
+                    let inv = gamma[c] / (var[c] + BN_EPS).sqrt();
+                    ps[c] = deq * inv;
+                    pb[c] = beta[c] - mean[c] * inv;
+                }
+                (ps, pb)
+            } else {
+                let b = get("b").context("bias")?.as_f32()?.to_vec();
+                (vec![deq; node.cout], b)
+            };
+
+            layers.insert(
+                name.clone(),
+                LayerParams {
+                    w_codes,
+                    w_shape: w.shape().to_vec(),
+                    post_scale,
+                    post_bias,
+                },
+            );
+        }
+        Ok(ModelParams { layers })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer statistics (error-model inputs)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub name: String,
+    pub act_hist: Vec<f64>, // 256 probabilities
+    pub w_hist: Vec<f64>,   // 256 probabilities
+    pub k_fanin: usize,
+    pub macs_total: usize,
+    pub s_act: f64,
+    pub z_act: i32,
+    pub s_w: f64,
+    pub z_w: i32,
+    pub bn_scale: f64,
+    pub out_rms: f64,
+}
+
+pub fn load_layer_stats(path: impl AsRef<Path>, order: &[String]) -> Result<Vec<LayerStats>> {
+    let raw = std::fs::read_to_string(path.as_ref())?;
+    let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
+    let mut out = Vec::new();
+    for name in order {
+        let s = v.req(name).map_err(anyhow::Error::msg)?;
+        out.push(LayerStats {
+            name: name.clone(),
+            act_hist: s.req("act_hist").map_err(anyhow::Error::msg)?.f64_vec().context("act_hist")?,
+            w_hist: s.req("w_hist").map_err(anyhow::Error::msg)?.f64_vec().context("w_hist")?,
+            k_fanin: s.get("k_fanin").and_then(|x| x.as_usize()).context("k_fanin")?,
+            macs_total: s.get("macs_total").and_then(|x| x.as_usize()).context("macs_total")?,
+            s_act: s.get("s_act").and_then(|x| x.as_f64()).context("s_act")?,
+            z_act: s.get("z_act").and_then(|x| x.as_i64()).unwrap_or(0) as i32,
+            s_w: s.get("s_w").and_then(|x| x.as_f64()).context("s_w")?,
+            z_w: s.get("z_w").and_then(|x| x.as_i64()).unwrap_or(0) as i32,
+            bn_scale: s.get("bn_scale").and_then(|x| x.as_f64()).unwrap_or(1.0),
+            out_rms: s.get("out_rms").and_then(|x| x.as_f64()).unwrap_or(1.0),
+        });
+    }
+    Ok(out)
+}
+
+/// sigma_g vector from sensitivity.json, ordered like `order`.
+pub fn load_sensitivity(path: impl AsRef<Path>) -> Result<(Vec<String>, Vec<f64>)> {
+    let raw = std::fs::read_to_string(path.as_ref())?;
+    let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
+    let layers: Vec<String> = v
+        .req("layers")
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .context("layers")?
+        .iter()
+        .map(|x| x.as_str().unwrap_or("").to_string())
+        .collect();
+    let sigma = v.req("sigma_g").map_err(anyhow::Error::msg)?.f64_vec().context("sigma_g")?;
+    if layers.len() != sigma.len() {
+        bail!("sensitivity.json: layers/sigma length mismatch");
+    }
+    Ok((layers, sigma))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_semantics() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu6.apply(9.0), 6.0);
+        assert_eq!(Activation::None.apply(-3.5), -3.5);
+    }
+
+    #[test]
+    fn graph_from_json_minimal() {
+        let src = r#"{
+          "name": "tiny", "input_shape": [4,4,3], "total_macs": 432,
+          "nodes": [
+            {"id":0,"kind":"input","inputs":[],"name":"input","out_shape":[4,4,3]},
+            {"id":1,"kind":"conv","inputs":[0],"name":"c1","out_shape":[4,4,8],
+             "cin":3,"cout":8,"ksize":3,"stride":1,"pad":1,"groups":1,
+             "has_bn":true,"act":"relu","macs_per_out":27,"macs_total":432,
+             "quant":{"in":{"scale":0.01,"zero_point":128},"w":{"scale":0.005,"zero_point":120}}},
+            {"id":2,"kind":"output","inputs":[1],"name":"output","out_shape":[4,4,8]}
+          ]}"#;
+        let g = Graph::from_json(&json::parse(src).unwrap()).unwrap();
+        assert_eq!(g.approx_layers().len(), 1);
+        let c = &g.approx_layers()[0];
+        assert_eq!(c.quant_in.unwrap().zero_point, 128);
+        assert_eq!(c.act, Activation::Relu);
+    }
+}

@@ -1,0 +1,236 @@
+//! End-to-end orchestration: glue between exported artifacts, the search
+//! algorithms, the native engine and the report generators.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{self, Engine, OperatingPoint};
+use crate::errmodel::{self, SigmaE};
+use crate::muldb::MulDb;
+use crate::nn::{self, Graph, LayerStats, ModelParams};
+use crate::selection::{self, SearchConfig, Solution};
+use crate::util::json::{self, Json};
+use crate::util::tensorio::{self, Tensor};
+
+/// Everything stage A exported for one experiment.
+pub struct Experiment {
+    pub name: String,
+    pub dir: PathBuf,
+    pub artifacts: PathBuf,
+    pub graph: Arc<Graph>,
+    pub layer_names: Vec<String>,
+    pub sigma_g: Vec<f64>,
+    pub stats: Vec<LayerStats>,
+    pub config: Json,
+}
+
+impl Experiment {
+    pub fn load(artifacts: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let artifacts = artifacts.as_ref().to_path_buf();
+        let dir = artifacts.join(name);
+        let graph = Arc::new(Graph::load(dir.join("graph.json"))?);
+        let (layer_names, mut sigma_g) = nn::load_sensitivity(dir.join("sensitivity.json"))?;
+        // deterministic-error safety factor (see configs.py tolerance_factor)
+        let exp_raw_cfg = std::fs::read_to_string(dir.join("exp.json"))?;
+        let exp_cfg = json::parse(&exp_raw_cfg).map_err(anyhow::Error::msg)?;
+        let kappa = exp_cfg
+            .get("config")
+            .and_then(|c| c.get("tolerance_factor"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.3);
+        for s in sigma_g.iter_mut() {
+            *s *= kappa;
+        }
+        let stats = nn::load_layer_stats(dir.join("layer_stats.json"), &layer_names)?;
+        let exp_raw = std::fs::read_to_string(dir.join("exp.json"))?;
+        let exp = json::parse(&exp_raw).map_err(anyhow::Error::msg)?;
+        let config = exp.req("config").map_err(anyhow::Error::msg)?.clone();
+        Ok(Experiment {
+            name: name.to_string(),
+            dir,
+            artifacts,
+            graph,
+            layer_names,
+            sigma_g,
+            stats,
+            config,
+        })
+    }
+
+    pub fn scales(&self) -> Vec<f64> {
+        self.config
+            .get("scales")
+            .and_then(|v| v.f64_vec())
+            .unwrap_or_else(|| vec![1.0])
+    }
+
+    pub fn n_multipliers(&self) -> usize {
+        self.config
+            .get("n_multipliers")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(4)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.config.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64
+    }
+
+    pub fn num_classes(&self) -> usize {
+        // classifier output width
+        self.graph
+            .approx_layers()
+            .last()
+            .map(|n| n.cout)
+            .unwrap_or(10)
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.graph.input_shape.iter().product()
+    }
+
+    pub fn load_testset(&self) -> Result<(Vec<f32>, Vec<i32>)> {
+        let t = tensorio::load(self.dir.join("testset.qten"))?;
+        let images = t.get("images").context("images")?.as_f32()?.to_vec();
+        let labels = t.get("labels").context("labels")?.as_i32()?.to_vec();
+        Ok((images, labels))
+    }
+
+    pub fn load_params_tensors(&self) -> Result<HashMap<String, Tensor>> {
+        tensorio::load(self.dir.join("params.qten"))
+    }
+}
+
+/// Run the QoS-Nets search for an experiment; returns (sigma_e, solution).
+pub fn run_search(exp: &Experiment, db: &MulDb) -> (SigmaE, Solution) {
+    let se = errmodel::sigma_e(db, &exp.stats);
+    let cfg = SearchConfig {
+        n_multipliers: exp.n_multipliers(),
+        scales: exp.scales(),
+        seed: exp.seed(),
+        restarts: 8,
+    };
+    let sol = selection::search(db, &se, &exp.sigma_g, &exp.stats, &cfg);
+    (se, sol)
+}
+
+/// assignment.json payload consumed by the Python stage B and by `eval`.
+pub fn solution_to_json(exp: &Experiment, db: &MulDb, sol: &Solution) -> Json {
+    let scales = exp.scales();
+    let ops: Vec<Json> = sol
+        .assignment
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let amap: Vec<(String, Json)> = exp
+                .layer_names
+                .iter()
+                .zip(a)
+                .map(|(name, &mid)| (name.clone(), Json::num(mid as f64)))
+                .collect();
+            Json::obj(vec![
+                ("index", Json::num(i as f64)),
+                ("scale", Json::num(scales[i])),
+                ("relative_power", Json::num(sol.power[i])),
+                ("assignment", Json::Obj(amap)),
+            ])
+        })
+        .collect();
+    let subset: Vec<Json> = sol
+        .subset
+        .iter()
+        .map(|&mid| {
+            Json::obj(vec![
+                ("id", Json::num(mid as f64)),
+                ("name", Json::str(db.specs[mid].name.clone())),
+                ("power", Json::num(db.power(mid))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str(exp.name.clone())),
+        ("n_multipliers", Json::num(exp.n_multipliers() as f64)),
+        ("subset", Json::Arr(subset)),
+        ("operating_points", Json::Arr(ops)),
+        ("kmeans_inertia", Json::num(sol.kmeans_inertia)),
+    ])
+}
+
+pub fn write_assignment(exp: &Experiment, db: &MulDb, sol: &Solution) -> Result<PathBuf> {
+    let path = exp.dir.join("assignment.json");
+    std::fs::write(&path, json::to_string_pretty(&solution_to_json(exp, db, sol)))?;
+    Ok(path)
+}
+
+/// Read assignment.json back (ours or hand-edited).
+pub fn read_assignment(exp: &Experiment) -> Result<Vec<(f64, f64, HashMap<String, usize>)>> {
+    let raw = std::fs::read_to_string(exp.dir.join("assignment.json"))?;
+    let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
+    let mut out = Vec::new();
+    for op in v
+        .req("operating_points")
+        .map_err(anyhow::Error::msg)?
+        .as_arr()
+        .unwrap_or(&[])
+    {
+        let scale = op.get("scale").and_then(|x| x.as_f64()).unwrap_or(1.0);
+        let power = op.get("relative_power").and_then(|x| x.as_f64()).unwrap_or(1.0);
+        let mut amap = HashMap::new();
+        if let Some(Json::Obj(pairs)) = op.get("assignment") {
+            for (k, val) in pairs {
+                amap.insert(k.clone(), val.as_usize().unwrap_or(0));
+            }
+        }
+        out.push((scale, power, amap));
+    }
+    Ok(out)
+}
+
+/// Build an engine OperatingPoint from an assignment map + optional BN
+/// overlay file (bn_op{idx}.qten from stage B).
+pub fn build_operating_point(
+    exp: &Experiment,
+    name: &str,
+    assignment: HashMap<String, usize>,
+    relative_power: f64,
+    overlay: Option<&Path>,
+) -> Result<OperatingPoint> {
+    let params = ModelParams::load(&exp.graph, exp.dir.join("params.qten"), overlay)?;
+    Ok(OperatingPoint {
+        name: name.to_string(),
+        assignment,
+        params,
+        relative_power,
+    })
+}
+
+/// Evaluate one operating point on the exported test set.
+pub fn eval_operating_point(
+    exp: &Experiment,
+    db: &Arc<MulDb>,
+    op: &OperatingPoint,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<engine::EvalResult> {
+    let (images, labels) = exp.load_testset()?;
+    let mut eng = Engine::new(exp.graph.clone(), db.clone());
+    engine::evaluate(
+        &mut eng,
+        op,
+        &images,
+        &labels,
+        exp.image_elems(),
+        exp.num_classes(),
+        batch,
+        limit,
+    )
+}
+
+/// The exact-everywhere baseline OP (quantized but accurate multipliers).
+pub fn exact_operating_point(exp: &Experiment) -> Result<OperatingPoint> {
+    let assignment: HashMap<String, usize> =
+        exp.layer_names.iter().map(|n| (n.clone(), 0usize)).collect();
+    build_operating_point(exp, "exact", assignment, 1.0, None)
+}

@@ -1,0 +1,214 @@
+//! Environmental simulator: the "changing environmental conditions" the
+//! paper's QoS scaling reacts to, made concrete.
+//!
+//! Models a battery-powered edge platform:
+//!   * battery state-of-charge drained by (base load + inference power),
+//!     optionally recharged by a diurnal harvest profile (solar-ish);
+//!   * a first-order thermal RC node heated by compute power with
+//!     ambient coupling;
+//!   * a governor that converts (SoC, temperature) into the relative
+//!     multiplication-power *budget* the QosController consumes:
+//!     plenty of charge + cool die => budget 1.0; low charge or thermal
+//!     throttling => budget shrinks toward the cheapest operating point.
+//!
+//! Deterministic given the seed/config — used by the serving example and
+//! the failure-injection tests.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EnvConfig {
+    /// battery capacity in joule-equivalents (arbitrary units)
+    pub battery_capacity: f64,
+    pub initial_soc: f64, // 0..1
+    /// watts drawn at budget 1.0 by the accelerator (a.u.)
+    pub full_power_draw: f64,
+    pub base_draw: f64,
+    /// harvest amplitude (0 disables recharging)
+    pub harvest_peak: f64,
+    /// thermal RC
+    pub thermal_r: f64,   // K per watt
+    pub thermal_c: f64,   // J per K
+    pub ambient: f64,     // deg C
+    pub throttle_start: f64, // deg C where the governor starts cutting
+    pub throttle_full: f64,  // deg C where only the cheapest OP fits
+    /// SoC below which the governor degrades linearly
+    pub soc_knee: f64,
+    pub seed: u64,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            battery_capacity: 2000.0,
+            initial_soc: 0.9,
+            full_power_draw: 10.0,
+            base_draw: 1.0,
+            harvest_peak: 4.0,
+            thermal_r: 4.0,
+            thermal_c: 20.0,
+            ambient: 25.0,
+            throttle_start: 70.0,
+            throttle_full: 95.0,
+            soc_knee: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EnvState {
+    pub t: f64, // seconds
+    pub soc: f64,
+    pub temperature: f64,
+    pub budget: f64,
+}
+
+pub struct EnvSimulator {
+    cfg: EnvConfig,
+    state: EnvState,
+    rng: Rng,
+}
+
+impl EnvSimulator {
+    pub fn new(cfg: EnvConfig) -> Self {
+        let state = EnvState {
+            t: 0.0,
+            soc: cfg.initial_soc,
+            temperature: cfg.ambient,
+            budget: 1.0,
+        };
+        let rng = Rng::new(cfg.seed);
+        EnvSimulator { cfg, state, rng }
+    }
+
+    pub fn state(&self) -> EnvState {
+        self.state
+    }
+
+    /// Harvest power at time t: half-sine "daylight" with noise.
+    fn harvest(&mut self, t: f64) -> f64 {
+        let day = (2.0 * std::f64::consts::PI * t / 600.0).sin().max(0.0);
+        (self.cfg.harvest_peak * day * (1.0 + 0.1 * self.rng.normal())).max(0.0)
+    }
+
+    /// Advance by dt seconds while the platform runs at `power_frac` of
+    /// full accelerator power (i.e. the mean relative multiplication
+    /// power actually served). Returns the new budget.
+    pub fn step(&mut self, dt: f64, power_frac: f64) -> f64 {
+        let c = self.cfg.clone();
+        let draw = c.base_draw + c.full_power_draw * power_frac.clamp(0.0, 1.0);
+        let harvest = self.harvest(self.state.t);
+        let net = harvest - draw;
+        self.state.soc = (self.state.soc + net * dt / c.battery_capacity).clamp(0.0, 1.0);
+
+        // first-order thermal node: C dT/dt = P - (T - Ta)/R
+        let p_heat = draw;
+        let dtemp = (p_heat - (self.state.temperature - c.ambient) / c.thermal_r) / c.thermal_c;
+        self.state.temperature += dtemp * dt;
+
+        // governor
+        let soc_factor = if self.state.soc >= c.soc_knee {
+            1.0
+        } else {
+            (self.state.soc / c.soc_knee).max(0.0)
+        };
+        let thermal_factor = if self.state.temperature <= c.throttle_start {
+            1.0
+        } else if self.state.temperature >= c.throttle_full {
+            0.0
+        } else {
+            1.0 - (self.state.temperature - c.throttle_start) / (c.throttle_full - c.throttle_start)
+        };
+        // budget floor > 0: the cheapest OP must always be schedulable
+        self.state.budget = (soc_factor * thermal_factor).max(0.05);
+        self.state.t += dt;
+        self.state.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_battery_cool_die_gives_full_budget() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            harvest_peak: 0.0,
+            ..Default::default()
+        });
+        let b = sim.step(0.1, 0.5);
+        assert!(b > 0.95, "budget {b}");
+    }
+
+    #[test]
+    fn sustained_load_drains_battery_and_cuts_budget() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            battery_capacity: 100.0,
+            harvest_peak: 0.0,
+            initial_soc: 0.6,
+            ..Default::default()
+        });
+        let mut budget = 1.0;
+        for _ in 0..2000 {
+            budget = sim.step(0.1, 1.0);
+        }
+        assert!(sim.state().soc < 0.3);
+        assert!(budget < 0.6, "budget should degrade, got {budget}");
+        assert!(budget >= 0.05, "budget floor");
+    }
+
+    #[test]
+    fn thermal_throttling_engages_under_heavy_load() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            battery_capacity: 1e9, // battery not the limit
+            full_power_draw: 30.0, // hot accelerator
+            harvest_peak: 0.0,
+            thermal_r: 3.0,
+            thermal_c: 5.0,
+            ..Default::default()
+        });
+        for _ in 0..5000 {
+            sim.step(0.1, 1.0);
+        }
+        assert!(sim.state().temperature > 70.0, "temp {}", sim.state().temperature);
+        assert!(sim.state().budget < 1.0);
+    }
+
+    #[test]
+    fn idle_platform_cools_back_down() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            battery_capacity: 1e9,
+            full_power_draw: 30.0,
+            harvest_peak: 0.0,
+            thermal_r: 3.0,
+            thermal_c: 5.0,
+            ..Default::default()
+        });
+        for _ in 0..5000 {
+            sim.step(0.1, 1.0);
+        }
+        let hot = sim.state().temperature;
+        for _ in 0..10000 {
+            sim.step(0.1, 0.0);
+        }
+        assert!(sim.state().temperature < hot - 10.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // harvest noise differs per seed -> SoC trajectories differ, but
+        // the same seed reproduces them exactly
+        let run = |seed| {
+            let mut sim = EnvSimulator::new(EnvConfig { seed, ..Default::default() });
+            (0..100)
+                .map(|_| {
+                    sim.step(1.0, 0.7);
+                    sim.state().soc
+                })
+                .collect::<Vec<f64>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+}

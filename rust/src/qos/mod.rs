@@ -1,0 +1,221 @@
+//! QoS controller: runtime operating-point selection (the paper's
+//! "gracefully adjusting the platform's Quality of Service").
+//!
+//! The ladder holds the searched operating points sorted from most
+//! accurate (highest power) to most frugal.  The controller receives a
+//! time-varying *power budget* (relative multiplication power the
+//! platform can currently afford — e.g. from a battery / thermal
+//! governor) and picks the most accurate OP that fits, with hysteresis
+//! (switch margin + minimum dwell time) so budget noise does not cause
+//! oscillation.
+
+pub mod envsim;
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LadderEntry {
+    pub name: String,
+    /// MAC-weighted relative multiplication power of this OP.
+    pub power: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Extra headroom a *more expensive* OP must have before we upgrade
+    /// (fraction of budget).  Downgrades happen immediately.
+    pub upgrade_margin: f64,
+    /// Minimum time between switches.
+    pub min_dwell: Duration,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            upgrade_margin: 0.05,
+            min_dwell: Duration::from_millis(100),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct QosController {
+    ladder: Vec<LadderEntry>, // sorted by power descending (most accurate first)
+    cfg: QosConfig,
+    current: usize,
+    last_switch: Option<Instant>,
+    pub switches: u64,
+    pub budget_violations: u64,
+}
+
+impl QosController {
+    /// `ladder` entries are sorted internally by descending power.
+    pub fn new(mut ladder: Vec<LadderEntry>, cfg: QosConfig) -> Self {
+        assert!(!ladder.is_empty());
+        ladder.sort_by(|a, b| b.power.partial_cmp(&a.power).unwrap());
+        // start at the most frugal OP until a budget arrives
+        let current = ladder.len() - 1;
+        QosController {
+            ladder,
+            cfg,
+            current,
+            last_switch: None,
+            switches: 0,
+            budget_violations: 0,
+        }
+    }
+
+    pub fn ladder(&self) -> &[LadderEntry] {
+        &self.ladder
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn current_entry(&self) -> &LadderEntry {
+        &self.ladder[self.current]
+    }
+
+    /// Ideal OP for a budget: most accurate entry with power <= budget;
+    /// falls back to the most frugal one if nothing fits.
+    pub fn ideal_for(&self, budget: f64) -> usize {
+        self.ladder
+            .iter()
+            .position(|e| e.power <= budget)
+            .unwrap_or(self.ladder.len() - 1)
+    }
+
+    /// Feed a budget sample; returns Some(new index) when a switch fires.
+    pub fn observe(&mut self, budget: f64, now: Instant) -> Option<usize> {
+        let cur_power = self.ladder[self.current].power;
+        if cur_power > budget {
+            self.budget_violations += 1;
+        }
+        let ideal = self.ideal_for(budget);
+        if ideal == self.current {
+            return None;
+        }
+        let upgrading = ideal < self.current; // towards higher accuracy/power
+        if upgrading {
+            // hysteresis: require headroom and dwell time
+            let target_power = self.ladder[ideal].power;
+            if target_power > budget * (1.0 - self.cfg.upgrade_margin) {
+                return None;
+            }
+            if let Some(t) = self.last_switch {
+                if now.duration_since(t) < self.cfg.min_dwell {
+                    return None;
+                }
+            }
+        }
+        // downgrades (over budget) are immediate
+        self.current = ideal;
+        self.last_switch = Some(now);
+        self.switches += 1;
+        Some(ideal)
+    }
+}
+
+/// Deterministic synthetic budget traces for experiments and the serving
+/// example: diurnal-ish sinusoid, step pattern, and random walk.
+pub fn budget_trace(kind: &str, steps: usize, seed: u64) -> Vec<f64> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    match kind {
+        "sine" => (0..steps)
+            .map(|i| {
+                let t = i as f64 / steps.max(1) as f64;
+                0.75 + 0.25 * (2.0 * std::f64::consts::PI * 3.0 * t).sin()
+            })
+            .collect(),
+        "steps" => (0..steps)
+            .map(|i| match (i * 4) / steps.max(1) {
+                0 => 1.0,
+                1 => 0.7,
+                2 => 0.55,
+                _ => 0.85,
+            })
+            .collect(),
+        "walk" => {
+            let mut v = 0.8;
+            (0..steps)
+                .map(|_| {
+                    v = (v + 0.06 * rng.normal()).clamp(0.4, 1.0);
+                    v
+                })
+                .collect()
+        }
+        other => panic!("unknown budget trace {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> Vec<LadderEntry> {
+        vec![
+            LadderEntry { name: "op0".into(), power: 0.85 },
+            LadderEntry { name: "op1".into(), power: 0.69 },
+            LadderEntry { name: "op2".into(), power: 0.57 },
+        ]
+    }
+
+    #[test]
+    fn picks_most_accurate_within_budget() {
+        let c = QosController::new(ladder(), QosConfig::default());
+        assert_eq!(c.ideal_for(1.0), 0);
+        assert_eq!(c.ideal_for(0.7), 1);
+        assert_eq!(c.ideal_for(0.6), 2);
+        assert_eq!(c.ideal_for(0.1), 2); // nothing fits -> most frugal
+    }
+
+    #[test]
+    fn downgrades_immediately_upgrades_with_dwell() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::from_millis(50),
+            },
+        );
+        let t0 = Instant::now();
+        // plenty of budget: upgrade allowed (no prior switch)
+        assert_eq!(c.observe(1.0, t0), Some(0));
+        // budget collapse: immediate downgrade
+        assert_eq!(c.observe(0.58, t0), Some(2));
+        // budget back up, but dwell not elapsed
+        assert_eq!(c.observe(1.0, t0 + Duration::from_millis(1)), None);
+        // after dwell: upgrade
+        assert_eq!(c.observe(1.0, t0 + Duration::from_millis(60)), Some(0));
+        assert_eq!(c.switches, 3);
+    }
+
+    #[test]
+    fn margin_blocks_borderline_upgrades() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.10,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        c.observe(0.6, t); // settle at op2
+        // op1 costs 0.69; budget 0.70 fits but not with 10% margin
+        assert_eq!(c.observe(0.70, t), None);
+        // 0.69/(1-0.1)=0.766...: now it clears the margin
+        assert_eq!(c.observe(0.78, t), Some(1));
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_bounded() {
+        for kind in ["sine", "steps", "walk"] {
+            let a = budget_trace(kind, 200, 9);
+            let b = budget_trace(kind, 200, 9);
+            assert_eq!(a, b);
+            assert!(a.iter().all(|&v| (0.0..=1.01).contains(&v)), "{kind}");
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute
+//! them on the CPU PJRT client (the `xla` crate).
+//!
+//! One `PjRtLoadedExecutable` per artifact, compiled once at startup.
+//! Operating-point switching = swapping the per-layer U/V/BN input
+//! literals (the executable itself is OP-agnostic — DESIGN.md
+//! "reconfiguration = input buffers").
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+use crate::util::tensorio::Tensor;
+
+/// Ordered input description mirrored from hlo_signature.json.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub signature: Vec<InputSpec>,
+    pub export_batch: usize,
+    pub rank: usize,
+}
+
+/// Per-operating-point input bundle (everything after `x` in signature
+/// order), kept as host buffers; literals are minted per execution.
+pub struct OpBuffers {
+    pub tensors: Vec<(Vec<f32>, Vec<usize>)>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact with its signature entry
+    /// (`which` = "model" | "kernel").
+    pub fn load(&self, exp_dir: impl AsRef<Path>, which: &str) -> Result<LoadedModel> {
+        let dir = exp_dir.as_ref();
+        let sig_raw = std::fs::read_to_string(dir.join("hlo_signature.json"))
+            .with_context(|| format!("read {}/hlo_signature.json", dir.display()))?;
+        let sig_json = json::parse(&sig_raw).map_err(anyhow::Error::msg)?;
+        let entries = sig_json
+            .req(which)
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("signature array")?;
+        let signature: Vec<InputSpec> = entries
+            .iter()
+            .map(|e| InputSpec {
+                name: e.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: e.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32").to_string(),
+            })
+            .collect();
+
+        let hlo_file = match which {
+            "model" => "model.hlo.txt",
+            "kernel" => "kernel.hlo.txt",
+            other => bail!("unknown artifact kind {other}"),
+        };
+        let proto = xla::HloModuleProto::from_text_file(
+            dir.join(hlo_file).to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        let export_batch = sig_json
+            .get("export_batch")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(1);
+        let rank = sig_json.get("rank").and_then(|v| v.as_usize()).unwrap_or(8);
+        Ok(LoadedModel {
+            exe,
+            signature,
+            export_batch,
+            rank,
+        })
+    }
+}
+
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl LoadedModel {
+    /// Execute with literal inputs in signature order; returns the f32
+    /// payload of the first tuple element.
+    pub fn execute_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        if inputs.len() != self.signature.len() {
+            bail!(
+                "input count {} != signature {}",
+                inputs.len(),
+                self.signature.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with a borrowed OP bundle: x literal + the bundle's tail.
+    pub fn execute_with_op(&self, x: xla::Literal, op: &OpBuffers) -> Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(1 + op.tensors.len());
+        inputs.push(x);
+        for (data, shape) in &op.tensors {
+            inputs.push(literal_f32(data, shape)?);
+        }
+        self.execute_f32(&inputs)
+    }
+
+    /// Execute and return i32 payload (kernel artifact).
+    pub fn execute_i32(&self, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// Build the per-OP input literals (everything after `x`) for the model
+/// artifact: U/V from the low-rank tables for the assigned multiplier,
+/// gamma/beta/b from the (overlaid) parameter tensors.
+pub fn build_op_buffers(
+    model: &LoadedModel,
+    assignment: &HashMap<String, usize>,
+    lowrank_u: &[Vec<f32>], // per multiplier: 256 * max_rank, row-major
+    lowrank_v: &[Vec<f32>],
+    max_rank: usize,
+    tensors: &HashMap<String, Tensor>,
+    overlay: &HashMap<String, Tensor>,
+) -> Result<OpBuffers> {
+    let rank = model.rank;
+    let mut tensors_out: Vec<(Vec<f32>, Vec<usize>)> = Vec::new();
+    for spec in model.signature.iter().skip(1) {
+        let (layer, field) = spec
+            .name
+            .rsplit_once('.')
+            .with_context(|| format!("bad signature name {}", spec.name))?;
+        match field {
+            "U" | "V" => {
+                let mid = *assignment.get(layer).unwrap_or(&0);
+                let table = if field == "U" { &lowrank_u[mid] } else { &lowrank_v[mid] };
+                // exact multiplier (id 0) has an all-zero error table
+                let mut buf = vec![0f32; 256 * rank];
+                if mid != 0 {
+                    for a in 0..256 {
+                        for r in 0..rank.min(max_rank) {
+                            buf[a * rank + r] = table[a * max_rank + r];
+                        }
+                    }
+                }
+                tensors_out.push((buf, spec.shape.clone()));
+            }
+            "gamma" | "beta" | "b" => {
+                let key = format!("{layer}.{field}");
+                let t = overlay
+                    .get(&key)
+                    .or_else(|| tensors.get(&key))
+                    .with_context(|| format!("missing tensor {key}"))?;
+                tensors_out.push((t.as_f32()?.to_vec(), spec.shape.clone()));
+            }
+            other => bail!("unknown signature field {other}"),
+        }
+    }
+    Ok(OpBuffers { tensors: tensors_out })
+}
+
+/// Load lowrank.bin: per-multiplier U and V tables (256 x rank, f32).
+pub fn load_lowrank(artifacts: impl AsRef<Path>) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, usize)> {
+    let blob = std::fs::read(artifacts.as_ref().join("lowrank.bin"))?;
+    if blob.len() < 16 || &blob[..4] != b"QLRK" {
+        bail!("lowrank.bin: bad magic");
+    }
+    let count = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
+    let nop = u32::from_le_bytes(blob[8..12].try_into().unwrap()) as usize;
+    let rank = u32::from_le_bytes(blob[12..16].try_into().unwrap()) as usize;
+    let body = &blob[16..];
+    let per = nop * rank * 4;
+    if body.len() != 2 * count * per {
+        bail!("lowrank.bin: truncated");
+    }
+    let read = |off: usize| -> Vec<f32> {
+        body[off..off + per]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let u: Vec<Vec<f32>> = (0..count).map(|i| read(i * per)).collect();
+    let v: Vec<Vec<f32>> = (0..count).map(|i| read(count * per + i * per)).collect();
+    Ok((u, v, rank))
+}

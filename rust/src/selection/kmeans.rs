@@ -1,0 +1,183 @@
+//! Lloyd's k-Means with k-means++ seeding (deterministic PRNG).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub centroids: Vec<Vec<f64>>,
+    pub assignment: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ initial centroids.
+fn seed_centroids(points: &[Vec<f64>], k: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len())].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| dist2(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all points coincide with a centroid: pick uniformly
+            points[rng.below(points.len())].clone()
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = points.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            points[chosen].clone()
+        };
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(dist2(p, &next));
+        }
+        centroids.push(next);
+    }
+    centroids
+}
+
+/// One full Lloyd run.
+fn lloyd(points: &[Vec<f64>], k: usize, rng: &mut Rng, max_iter: usize) -> KMeansResult {
+    let dim = points[0].len();
+    let mut centroids = seed_centroids(points, k, rng);
+    let mut assignment = vec![0usize; points.len()];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // assign
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut bestd = f64::MAX;
+            for (c, cen) in centroids.iter().enumerate() {
+                let d = dist2(p, cen);
+                if d < bestd {
+                    bestd = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (p, &a) in points.iter().zip(&assignment) {
+            counts[a] += 1;
+            for (s, v) in sums[a].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the point farthest from its centroid
+                let far = points
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        dist2(a, &centroids[assignment[0]])
+                            .partial_cmp(&dist2(b, &centroids[assignment[0]]))
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                centroids[c] = points[far].clone();
+            } else {
+                for (j, s) in sums[c].iter().enumerate() {
+                    centroids[c][j] = s / counts[c] as f64;
+                }
+            }
+        }
+    }
+    let inertia = points
+        .iter()
+        .zip(&assignment)
+        .map(|(p, &a)| dist2(p, &centroids[a]))
+        .sum();
+    KMeansResult {
+        centroids,
+        assignment,
+        inertia,
+        iterations,
+    }
+}
+
+/// k-Means with `restarts` independent k-means++ seeds; best inertia wins.
+/// `k` is clamped to the number of distinct points.
+pub fn kmeans(points: &[Vec<f64>], k: usize, seed: u64, restarts: usize) -> KMeansResult {
+    assert!(!points.is_empty(), "kmeans on empty input");
+    let k = k.min(points.len()).max(1);
+    let mut rng = Rng::new(seed);
+    let mut best: Option<KMeansResult> = None;
+    for _ in 0..restarts.max(1) {
+        let res = lloyd(points, k, &mut rng, 100);
+        if best.as_ref().map(|b| res.inertia < b.inertia).unwrap_or(true) {
+            best = Some(res);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(rng: &mut Rng, center: &[f64], n: usize, spread: f64) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| center.iter().map(|c| c + spread * rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn separates_clear_blobs() {
+        let mut rng = Rng::new(1);
+        let mut pts = blob(&mut rng, &[0.0, 0.0], 30, 0.1);
+        pts.extend(blob(&mut rng, &[10.0, 10.0], 30, 0.1));
+        pts.extend(blob(&mut rng, &[-10.0, 10.0], 30, 0.1));
+        let res = kmeans(&pts, 3, 42, 4);
+        // each blob is one cluster
+        for chunk in 0..3 {
+            let first = res.assignment[chunk * 30];
+            for i in 0..30 {
+                assert_eq!(res.assignment[chunk * 30 + i], first, "blob {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_point_count() {
+        let pts = vec![vec![1.0], vec![2.0]];
+        let res = kmeans(&pts, 10, 0, 2);
+        assert!(res.centroids.len() <= 2);
+    }
+
+    #[test]
+    fn inertia_zero_for_k_equals_n_distinct() {
+        let pts = vec![vec![0.0], vec![5.0], vec![9.0]];
+        let res = kmeans(&pts, 3, 7, 8);
+        assert!(res.inertia < 1e-18, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(9);
+        let pts = blob(&mut rng, &[0.0, 1.0, 2.0], 50, 1.0);
+        let a = kmeans(&pts, 4, 123, 3);
+        let b = kmeans(&pts, 4, 123, 3);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.inertia, b.inertia);
+    }
+}

@@ -1,0 +1,258 @@
+//! QoS-Nets multiplier selection (paper Sec. 3.1 + 3.2).
+//!
+//! Pipeline: sigma_e matrix + sigma_g vector
+//!   -> per-(layer, operating point) preference vectors  (Eq. 1, Eq. 4)
+//!   -> outlier reweighting f(x) = x | 1 + ln(x)          (Eq. 3)
+//!   -> k-Means into n clusters                           (Sec. 3.1)
+//!   -> per-centroid multiplier pick (cheapest accurate-enough entry)
+//!   -> assignment of one AM instance per (layer, OP).
+
+pub mod kmeans;
+
+use std::collections::BTreeSet;
+
+use crate::errmodel::SigmaE;
+use crate::muldb::MulDb;
+use crate::nn::LayerStats;
+
+/// Eq. 3: squash insufficient-accuracy entries (x > 1) logarithmically so
+/// they keep their ordering but lose their drag on the clustering.
+#[inline]
+pub fn reweight(x: f64) -> f64 {
+    if x <= 1.0 {
+        x
+    } else {
+        1.0 + x.ln()
+    }
+}
+
+/// Filter step from Sec. 3.1: drop multipliers that are not accurate
+/// enough for *any* layer at the most accurate operating point — they can
+/// never be part of a solution.  Returns the retained multiplier ids.
+pub fn usable_multipliers(se: &SigmaE, sigma_g: &[f64], scales: &[f64]) -> Vec<usize> {
+    let smin = scales.iter().cloned().fold(f64::MAX, f64::min);
+    (0..se.m)
+        .filter(|&j| {
+            (0..se.l).any(|k| se.get(j, k) <= smin * sigma_g[k])
+        })
+        .collect()
+}
+
+/// One preference vector per (operating point, layer): entry per usable
+/// multiplier, sigma_e / (s * sigma_g), reweighted (Eq. 1, 3, 4).
+pub fn preference_vectors(
+    se: &SigmaE,
+    sigma_g: &[f64],
+    scales: &[f64],
+    usable: &[usize],
+) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(scales.len() * se.l);
+    for &s in scales {
+        for k in 0..se.l {
+            let tol = (s * sigma_g[k]).max(1e-12);
+            let v: Vec<f64> = usable.iter().map(|&j| reweight(se.get(j, k) / tol)).collect();
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Pick, for one centroid, the cheapest usable multiplier whose centroid
+/// entry signals sufficient accuracy (< 1).  Falls back to the most
+/// accurate entry if none qualifies (soft-constraint escape hatch).
+pub fn pick_for_centroid(centroid: &[f64], usable: &[usize], db: &MulDb) -> usize {
+    let mut best: Option<(f64, usize)> = None;
+    for (i, &j) in usable.iter().enumerate() {
+        if centroid[i] < 1.0 {
+            let p = db.power(j);
+            if best.map(|(bp, _)| p < bp).unwrap_or(true) {
+                best = Some((p, j));
+            }
+        }
+    }
+    if let Some((_, j)) = best {
+        return j;
+    }
+    // no entry accurate enough on average: take the most accurate one
+    usable[centroid
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)]
+}
+
+/// Full QoS-Nets solution.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Multiplier id chosen per cluster.
+    pub cluster_muls: Vec<usize>,
+    /// assignment[op][layer] = multiplier id.
+    pub assignment: Vec<Vec<usize>>,
+    /// Distinct multipliers used (<= n).
+    pub subset: Vec<usize>,
+    /// MAC-weighted relative power per operating point.
+    pub power: Vec<f64>,
+    pub kmeans_inertia: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub n_multipliers: usize,
+    pub scales: Vec<f64>,
+    pub seed: u64,
+    pub restarts: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            n_multipliers: 4,
+            scales: vec![1.0],
+            seed: 0,
+            restarts: 8,
+        }
+    }
+}
+
+/// The constrained multi-operating-point search (paper Sec. 3.1 + 3.2).
+pub fn search(
+    db: &MulDb,
+    se: &SigmaE,
+    sigma_g: &[f64],
+    stats: &[LayerStats],
+    cfg: &SearchConfig,
+) -> Solution {
+    assert_eq!(se.l, sigma_g.len());
+    assert_eq!(se.l, stats.len());
+    let usable = usable_multipliers(se, sigma_g, &cfg.scales);
+    assert!(!usable.is_empty(), "no usable multipliers in search space");
+
+    let points = preference_vectors(se, sigma_g, &cfg.scales, &usable);
+    let km = kmeans::kmeans(&points, cfg.n_multipliers, cfg.seed, cfg.restarts);
+
+    let cluster_muls: Vec<usize> = km
+        .centroids
+        .iter()
+        .map(|c| pick_for_centroid(c, &usable, db))
+        .collect();
+
+    let o = cfg.scales.len();
+    let l = se.l;
+    let mut assignment = vec![vec![0usize; l]; o];
+    for (idx, &cluster) in km.assignment.iter().enumerate() {
+        let op = idx / l;
+        let layer = idx % l;
+        assignment[op][layer] = cluster_muls[cluster];
+    }
+
+    let power: Vec<f64> = assignment
+        .iter()
+        .map(|a| crate::errmodel::relative_power(db, stats, a))
+        .collect();
+
+    let subset: Vec<usize> = {
+        let s: BTreeSet<usize> = assignment.iter().flatten().cloned().collect();
+        s.into_iter().collect()
+    };
+
+    Solution {
+        cluster_muls,
+        assignment,
+        subset,
+        power,
+        kmeans_inertia: km.inertia,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errmodel::sigma_e;
+    use crate::muldb::MulDb;
+    use crate::nn::LayerStats;
+
+    fn fake_stats(n: usize) -> Vec<LayerStats> {
+        (0..n)
+            .map(|i| LayerStats {
+                name: format!("l{i}"),
+                act_hist: vec![1.0 / 256.0; 256],
+                w_hist: vec![1.0 / 256.0; 256],
+                k_fanin: 64 * (i + 1),
+                macs_total: 10_000 * (i + 1),
+                s_act: 0.02,
+                z_act: 128,
+                s_w: 0.01,
+                z_w: 128,
+                bn_scale: 0.5,
+                out_rms: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reweight_monotone_and_continuous() {
+        assert_eq!(reweight(0.5), 0.5);
+        assert_eq!(reweight(1.0), 1.0);
+        assert!((reweight(1.0 + 1e-12) - 1.0).abs() < 1e-9);
+        let mut prev = 0.0;
+        for i in 1..1000 {
+            let x = i as f64 * 0.01;
+            let y = reweight(x);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn solution_respects_n_constraint() {
+        let db = MulDb::generate();
+        let stats = fake_stats(12);
+        let se = sigma_e(&db, &stats);
+        // generous tolerances so plenty of multipliers are usable
+        let sigma_g: Vec<f64> = (0..12).map(|i| 0.05 + 0.03 * i as f64).collect();
+        for n in [2usize, 3, 4] {
+            let cfg = SearchConfig {
+                n_multipliers: n,
+                scales: vec![0.3, 1.0],
+                seed: 1,
+                restarts: 4,
+            };
+            let sol = search(&db, &se, &sigma_g, &stats, &cfg);
+            assert!(sol.subset.len() <= n, "n={n}: got {:?}", sol.subset);
+            assert_eq!(sol.assignment.len(), 2);
+            assert_eq!(sol.assignment[0].len(), 12);
+        }
+    }
+
+    #[test]
+    fn more_aggressive_scale_never_costs_more_power_on_average() {
+        let db = MulDb::generate();
+        let stats = fake_stats(10);
+        let se = sigma_e(&db, &stats);
+        let sigma_g: Vec<f64> = (0..10).map(|i| 0.08 + 0.05 * i as f64).collect();
+        let cfg = SearchConfig {
+            n_multipliers: 4,
+            scales: vec![0.1, 1.0],
+            seed: 3,
+            restarts: 6,
+        };
+        let sol = search(&db, &se, &sigma_g, &stats, &cfg);
+        // scale 0.1 = accuracy-first OP; scale 1.0 = power-first OP
+        assert!(
+            sol.power[0] >= sol.power[1] - 1e-9,
+            "power {:?} not ordered",
+            sol.power
+        );
+    }
+
+    #[test]
+    fn exact_always_usable() {
+        let db = MulDb::generate();
+        let stats = fake_stats(4);
+        let se = sigma_e(&db, &stats);
+        let sigma_g = vec![1e-9; 4]; // impossibly tight
+        let usable = usable_multipliers(&se, &sigma_g, &[1.0]);
+        assert!(usable.contains(&0), "exact must survive the filter");
+    }
+}

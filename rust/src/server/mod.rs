@@ -1,0 +1,276 @@
+//! Inference server: request queue -> dynamic batcher -> worker pool,
+//! with live operating-point switching driven by the QoS controller.
+//!
+//! Architecture (std threads + mpsc; tokio is unavailable offline):
+//!
+//!   clients ---> ingress channel ---> batcher thread ---> worker channel
+//!                                                     \--> N worker threads
+//!                                                          (one Engine each)
+//!
+//! The current operating point is an `Arc<AtomicUsize>` index into a
+//! shared OP table; switching is a single atomic store (the engine holds
+//! every LUT already — the paper's "lightweight switching" realized).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::{Engine, OperatingPoint};
+use crate::muldb::MulDb;
+use crate::nn::Graph;
+use crate::util::stats::LatencyHistogram;
+
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub op_index: usize,
+    pub queue_us: u64,
+    pub total_us: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            workers: 2,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServerMetrics {
+    pub completed: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub latency: LatencyHistogram,
+    pub queue_latency: LatencyHistogram,
+    pub per_op_requests: Vec<u64>,
+}
+
+impl ServerMetrics {
+    fn new(n_ops: usize) -> Self {
+        ServerMetrics {
+            per_op_requests: vec![0; n_ops],
+            latency: LatencyHistogram::new(),
+            queue_latency: LatencyHistogram::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+pub struct Server {
+    ingress: mpsc::Sender<Request>,
+    current_op: Arc<AtomicUsize>,
+    ops: Arc<Vec<OperatingPoint>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicUsize,
+}
+
+impl Server {
+    pub fn start(
+        graph: Arc<Graph>,
+        db: Arc<MulDb>,
+        ops: Vec<OperatingPoint>,
+        cfg: BatcherConfig,
+    ) -> Result<Self> {
+        assert!(!ops.is_empty());
+        let ops = Arc::new(ops);
+        let current_op = Arc::new(AtomicUsize::new(0));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len())));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::new();
+
+        // batcher thread: size- or deadline-triggered batch formation
+        {
+            let stop = stop.clone();
+            let cfg2 = cfg.clone();
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(ingress_rx, batch_tx, cfg2, stop);
+            }));
+        }
+
+        // workers
+        for _w in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let graph = graph.clone();
+            let db = db.clone();
+            let ops = ops.clone();
+            let current = current_op.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut engine = Engine::new(graph, db);
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let op_idx = current.load(Ordering::Acquire);
+                    let op = &ops[op_idx];
+                    let started = Instant::now();
+                    let b = batch.len();
+                    let elems = batch[0].image.len();
+                    let mut images = Vec::with_capacity(b * elems);
+                    for r in &batch {
+                        images.extend_from_slice(&r.image);
+                    }
+                    let logits = match engine.forward(op, &images, b) {
+                        Ok(l) => l,
+                        Err(_) => continue,
+                    };
+                    let classes = logits.len() / b;
+                    let done = Instant::now();
+                    let mut m = metrics.lock().unwrap();
+                    m.batches += 1;
+                    m.batch_size_sum += b as u64;
+                    for (i, r) in batch.into_iter().enumerate() {
+                        let queue_us = started.duration_since(r.enqueued).as_micros() as u64;
+                        let total_us = done.duration_since(r.enqueued).as_micros() as u64;
+                        m.completed += 1;
+                        m.per_op_requests[op_idx] += 1;
+                        m.latency.record_us(total_us);
+                        m.queue_latency.record_us(queue_us);
+                        let _ = r.resp.send(Response {
+                            id: r.id,
+                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                            op_index: op_idx,
+                            queue_us,
+                            total_us,
+                        });
+                    }
+                }
+            }));
+        }
+
+        Ok(Server {
+            ingress: ingress_tx,
+            current_op,
+            ops,
+            metrics,
+            stop,
+            threads,
+            next_id: AtomicUsize::new(0),
+        })
+    }
+
+    /// Submit one image; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
+        self.ingress.send(Request {
+            id,
+            image,
+            enqueued: Instant::now(),
+            resp: tx,
+        })?;
+        Ok(rx)
+    }
+
+    /// Atomically switch the serving operating point.
+    pub fn set_operating_point(&self, idx: usize) {
+        assert!(idx < self.ops.len());
+        self.current_op.store(idx, Ordering::Release);
+    }
+
+    pub fn operating_point(&self) -> usize {
+        self.current_op.load(Ordering::Acquire)
+    }
+
+    pub fn ops(&self) -> &[OperatingPoint] {
+        &self.ops
+    }
+
+    pub fn metrics(&self) -> ServerMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Drain and stop; joins all threads.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.stop.store(true, Ordering::Release);
+        drop(self.ingress);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let m = self.metrics.lock().unwrap().clone();
+        m
+    }
+}
+
+fn batcher_loop(
+    ingress: mpsc::Receiver<Request>,
+    out: mpsc::Sender<Vec<Request>>,
+    cfg: BatcherConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<Request> = Vec::new();
+    let mut deadline: Option<Instant> = None;
+    loop {
+        if stop.load(Ordering::Acquire) && pending.is_empty() {
+            // keep draining until the channel disconnects
+        }
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_millis(50),
+        };
+        match ingress.recv_timeout(timeout) {
+            Ok(req) => {
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + cfg.max_wait);
+                }
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    let _ = out.send(std::mem::take(&mut pending));
+                    deadline = None;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    let _ = out.send(std::mem::take(&mut pending));
+                    deadline = None;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    let _ = out.send(std::mem::take(&mut pending));
+                }
+                break;
+            }
+        }
+    }
+}

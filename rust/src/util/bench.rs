@@ -1,0 +1,73 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `benches/*.rs` binaries with `harness = false`;
+//! they use this module for warmup + repeated timing with mean/p50/p95.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_s: samples[0],
+    }
+}
+
+/// Pretty-print with an optional throughput annotation.
+pub fn report(r: &BenchResult, throughput: Option<(f64, &str)>) {
+    let tp = throughput
+        .map(|(items, unit)| format!("  {:>10.2} {unit}", items / r.mean_s))
+        .unwrap_or_default();
+    println!(
+        "{:40} mean {:>9.3}ms  p50 {:>9.3}ms  p95 {:>9.3}ms  min {:>9.3}ms{}",
+        r.name,
+        r.mean_s * 1e3,
+        r.p50_s * 1e3,
+        r.p95_s * 1e3,
+        r.min_s * 1e3,
+        tp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("sleep", 1, 5, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.mean_s >= 0.002);
+        assert!(r.p50_s <= r.p95_s + 1e-9);
+    }
+}

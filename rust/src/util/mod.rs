@@ -1,0 +1,9 @@
+//! Shared substrates: JSON codec, tensor container IO, deterministic PRNG,
+//! statistics helpers.  These stand in for `serde`/`rand`/`hdrhistogram`,
+//! which are unavailable in the offline build (DESIGN.md substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensorio;

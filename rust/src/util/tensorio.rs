@@ -1,0 +1,192 @@
+//! QTEN named-tensor container reader/writer (Python: compile/tensorio.py).
+//!
+//! Layout: b"QTEN" | u32 header_len | header JSON | raw little-endian data.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// f32 view with i32/u8 promotion (labels are stored as i32).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data.clone(),
+            Tensor::I32 { data, .. } => data.iter().map(|&v| v as f32).collect(),
+            Tensor::U8 { data, .. } => data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    fn dtype_str(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+            Tensor::U8 { .. } => "u8",
+        }
+    }
+
+    fn raw_bytes(&self) -> Vec<u8> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            Tensor::I32 { data, .. } => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            Tensor::U8 { data, .. } => data.clone(),
+        }
+    }
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<HashMap<String, Tensor>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"QTEN" {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let mut lenb = [0u8; 4];
+    f.read_exact(&mut lenb)?;
+    let hlen = u32::from_le_bytes(lenb) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = json::parse(std::str::from_utf8(&hbuf)?).map_err(|e| anyhow::anyhow!(e))?;
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+
+    let mut out = HashMap::new();
+    for e in header.req("tensors").map_err(anyhow::Error::msg)?.as_arr().unwrap_or(&[]) {
+        let name = e.get("name").and_then(|v| v.as_str()).context("tensor name")?.to_string();
+        let dtype = e.get("dtype").and_then(|v| v.as_str()).context("dtype")?;
+        let shape: Vec<usize> = e
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let offset = e.get("offset").and_then(|v| v.as_usize()).context("offset")?;
+        let nbytes = e.get("nbytes").and_then(|v| v.as_usize()).context("nbytes")?;
+        let raw = rest
+            .get(offset..offset + nbytes)
+            .with_context(|| format!("{name}: out-of-bounds tensor data"))?;
+        let t = match dtype {
+            "f32" => Tensor::F32 {
+                shape,
+                data: raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            "i32" => Tensor::I32 {
+                shape,
+                data: raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            "u8" => Tensor::U8 {
+                shape,
+                data: raw.to_vec(),
+            },
+            other => bail!("{name}: unsupported dtype {other}"),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+pub fn save(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut blob = Vec::new();
+    for (name, t) in tensors {
+        let raw = t.raw_bytes();
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name.clone())),
+            ("dtype", Json::str(t.dtype_str())),
+            (
+                "shape",
+                Json::Arr(t.shape().iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("offset", Json::num(blob.len() as f64)),
+            ("nbytes", Json::num(raw.len() as f64)),
+        ]));
+        blob.extend_from_slice(&raw);
+    }
+    let header = json::to_string(&Json::obj(vec![("tensors", Json::Arr(entries))]));
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"QTEN")?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&blob)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qten_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.qten");
+        let tensors = vec![
+            (
+                "a".to_string(),
+                Tensor::F32 {
+                    shape: vec![2, 3],
+                    data: vec![1.0, -2.5, 3.0, 0.0, 1e-9, 7.25],
+                },
+            ),
+            (
+                "b".to_string(),
+                Tensor::I32 {
+                    shape: vec![4],
+                    data: vec![-1, 0, 255, 1 << 20],
+                },
+            ),
+            (
+                "c".to_string(),
+                Tensor::U8 {
+                    shape: vec![3],
+                    data: vec![0, 128, 255],
+                },
+            ),
+        ];
+        save(&path, &tensors).unwrap();
+        let loaded = load(&path).unwrap();
+        for (name, t) in &tensors {
+            assert_eq!(loaded.get(name).unwrap(), t, "{name}");
+        }
+    }
+}

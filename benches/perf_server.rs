@@ -5,6 +5,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
 use qos_nets::server::{BatcherConfig, Server};
@@ -28,10 +29,10 @@ fn main() -> anyhow::Result<()> {
     );
     for &workers in &[1usize, 2, 4] {
         for &max_batch in &[1usize, 8, 16, 32] {
-            let server = Server::start(
+            let server = Server::start_native(
                 exp.graph.clone(),
                 db.clone(),
-                vec![op.clone()],
+                OpTable::new(vec![op.clone()]),
                 BatcherConfig {
                     max_batch,
                     max_wait: Duration::from_millis(3),
@@ -71,10 +72,10 @@ fn main() -> anyhow::Result<()> {
     let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
     if let Some((_, power, amap)) = assignments.last() {
         let op2 = pipeline::build_operating_point(&exp, "op", amap.clone(), *power, None)?;
-        let server = Server::start(
+        let server = Server::start_native(
             exp.graph.clone(),
             db.clone(),
-            vec![op.clone(), op2],
+            OpTable::new(vec![op.clone(), op2]),
             BatcherConfig::default(),
         )?;
         let t0 = Instant::now();

@@ -12,10 +12,11 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
 use qos_nets::qos::envsim::{EnvConfig, EnvSimulator};
-use qos_nets::qos::{LadderEntry, QosConfig, QosController};
+use qos_nets::qos::{QosConfig, QosController};
 use qos_nets::server::{BatcherConfig, Server};
 use qos_nets::util::rng::Rng;
 
@@ -26,29 +27,14 @@ fn main() -> anyhow::Result<()> {
 
     let exp = Experiment::load("artifacts", exp_name)?;
     let db = Arc::new(MulDb::load("artifacts")?);
-    let assignments = pipeline::read_assignment(&exp)?;
-    anyhow::ensure!(!assignments.is_empty(), "run `qos-nets search --exp {exp_name}` first");
-
-    let mut ops = Vec::new();
-    for (i, (_s, power, amap)) in assignments.into_iter().enumerate() {
-        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
-        ops.push(pipeline::build_operating_point(
-            &exp,
-            &format!("op{i}"),
-            amap,
-            power,
-            overlay.exists().then_some(overlay.as_path()),
-        )?);
-    }
-    let ladder: Vec<LadderEntry> = ops
-        .iter()
-        .map(|o| LadderEntry { name: o.name.clone(), power: o.relative_power })
-        .collect();
-    let mut controller = QosController::new(ladder, QosConfig::default());
-    let server = Server::start(
+    let ops = pipeline::load_operating_points(&exp, "bn")?;
+    anyhow::ensure!(!ops.is_empty(), "run `qos-nets search --exp {exp_name}` first");
+    let table = OpTable::new(ops);
+    let mut controller = QosController::new(table.ladder(), QosConfig::default());
+    let server = Server::start_native(
         exp.graph.clone(),
         db,
-        ops,
+        table,
         BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4), workers: 1 },
     )?;
 

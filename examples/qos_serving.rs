@@ -14,9 +14,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
-use qos_nets::qos::{budget_trace, LadderEntry, QosConfig, QosController};
+use qos_nets::qos::{budget_trace, QosConfig, QosController};
 use qos_nets::server::{BatcherConfig, Server};
 use qos_nets::util::rng::Rng;
 
@@ -28,30 +29,15 @@ fn main() -> anyhow::Result<()> {
 
     let exp = Experiment::load("artifacts", exp_name)?;
     let db = Arc::new(MulDb::load("artifacts")?);
-    let assignments = pipeline::read_assignment(&exp)?;
-    anyhow::ensure!(!assignments.is_empty(), "run `qos-nets search --exp {exp_name}` first");
-
     // operating points, BN-tuned when stage B overlays exist
-    let mut ops = Vec::new();
-    for (i, (_s, power, amap)) in assignments.into_iter().enumerate() {
-        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
-        ops.push(pipeline::build_operating_point(
-            &exp,
-            &format!("op{i}"),
-            amap,
-            power,
-            overlay.exists().then_some(overlay.as_path()),
-        )?);
-    }
-    let ladder: Vec<LadderEntry> = ops
-        .iter()
-        .map(|o| LadderEntry { name: o.name.clone(), power: o.relative_power })
-        .collect();
-    let mut controller = QosController::new(ladder, QosConfig::default());
+    let ops = pipeline::load_operating_points(&exp, "bn")?;
+    anyhow::ensure!(!ops.is_empty(), "run `qos-nets search --exp {exp_name}` first");
+    let table = OpTable::new(ops);
+    let mut controller = QosController::new(table.ladder(), QosConfig::default());
 
     // measure per-OP accuracy up front (what QoS the user gets per rung)
     println!("operating-point ladder:");
-    for (i, op) in ops.iter().enumerate() {
+    for op in table.ops() {
         let r = pipeline::eval_operating_point(&exp, &db, op, 32, Some(128))?;
         println!(
             "  {} power={:.1}% top1={:.1}%",
@@ -59,13 +45,12 @@ fn main() -> anyhow::Result<()> {
             100.0 * op.relative_power,
             100.0 * r.top1
         );
-        let _ = i;
     }
 
-    let server = Server::start(
+    let server = Server::start_native(
         exp.graph.clone(),
         db.clone(),
-        ops,
+        table,
         BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(4), workers: 2 },
     )?;
 

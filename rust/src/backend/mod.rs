@@ -1,0 +1,193 @@
+//! Unified inference backend: one serving/eval API over every execution
+//! substrate.
+//!
+//! The paper's core claim is that operating-point switching is cheap
+//! because the *same* multiplier instances are reassigned to layers at
+//! runtime (QoS-Nets Sec. 4).  The repo realizes inference twice — the
+//! bit-exact native LUT engine and the PJRT low-rank path — and this
+//! module is the seam that lets the server, the QoS controller and the
+//! eval loops run on either substrate through a single trait:
+//!
+//!   * [`Backend`]       prepare an OP ladder once, then `forward` by index
+//!   * [`OpTable`]       the shared, immutable ladder of operating points
+//!   * [`NativeBackend`] wraps [`crate::engine::Engine`] (bit-exact LUTs)
+//!   * [`PjrtBackend`]   wraps [`crate::runtime`] (AOT HLO, low-rank error)
+//!   * [`StubBackend`]   deterministic in-memory backend for tests/benches
+//!   * [`evaluate`]      top-1/top-5 accuracy, written once against the trait
+//!
+//! Any future substrate (SIMD-blocked LUTs, sharded multi-process,
+//! remote RPC) plugs in by implementing [`Backend`]; the server and CLI
+//! pick it up unchanged.
+
+pub mod native;
+pub mod pjrt;
+pub mod stub;
+
+use anyhow::Result;
+
+use crate::engine::OperatingPoint;
+use crate::qos::LadderEntry;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+pub use stub::StubBackend;
+
+/// One inference/serving substrate.
+///
+/// The contract mirrors the paper's runtime model: `prepare` is called
+/// once with the full operating-point ladder (reconfiguration data is
+/// made resident — LUT transposes, weight transposes, PJRT input
+/// buffers), after which `forward` selects an OP *by index* and must not
+/// allocate or compile anything OP-dependent on the hot path.
+pub trait Backend {
+    /// Make every operating point resident; called once before serving.
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()>;
+
+    /// Forward a batch under the `op_idx`-th prepared operating point:
+    /// images `[batch, H, W, C]` f32 -> logits `[batch, classes]`.
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Short stable identifier ("native", "pjrt", ...).
+    fn name(&self) -> &str;
+
+    /// Classifier output width of the loaded model.
+    fn num_classes(&self) -> usize;
+}
+
+/// The shared ladder of operating points, cheap to clone and hand to
+/// every worker/controller: the single source of truth the QoS
+/// controller indexes into and every [`Backend`] prepares from.
+#[derive(Clone)]
+pub struct OpTable {
+    ops: std::sync::Arc<Vec<OperatingPoint>>,
+}
+
+impl OpTable {
+    /// Wrap a non-empty ladder. Order is significant: index 0 is the
+    /// most accurate rung by convention (the search writes them that way).
+    pub fn new(ops: Vec<OperatingPoint>) -> Self {
+        assert!(!ops.is_empty(), "operating-point table must be non-empty");
+        OpTable {
+            ops: std::sync::Arc::new(ops),
+        }
+    }
+
+    pub fn ops(&self) -> &[OperatingPoint] {
+        &self.ops
+    }
+
+    pub fn get(&self, idx: usize) -> &OperatingPoint {
+        &self.ops[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The (name, power) ladder the QoS controller consumes.
+    pub fn ladder(&self) -> Vec<LadderEntry> {
+        self.ops
+            .iter()
+            .map(|o| LadderEntry {
+                name: o.name.clone(),
+                power: o.relative_power,
+            })
+            .collect()
+    }
+}
+
+/// Top-1/Top-5 accuracy over an evaluation set.
+pub struct EvalResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+/// Indices of the `k` largest entries of `row`, descending; ties keep
+/// the earlier index first.  Partial selection — O(C·k) instead of the
+/// full O(C log C) sort, which matters at ImageNet class counts under
+/// serving load.
+pub fn top_k_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(row.len());
+    let mut top: Vec<usize> = Vec::with_capacity(k + 1);
+    for (i, &v) in row.iter().enumerate() {
+        // entries are sorted by (value desc, index asc); every resident
+        // index is < i, so ties sort before the candidate
+        let pos = top.partition_point(|&j| row[j] >= v);
+        if pos < k {
+            top.insert(pos, i);
+            top.truncate(k);
+        }
+    }
+    top
+}
+
+/// Top-1/Top-5 accuracy of one prepared operating point, written once
+/// against the [`Backend`] trait (native and PJRT share this code path).
+pub fn evaluate<B: Backend + ?Sized>(
+    backend: &mut B,
+    op_idx: usize,
+    images: &[f32],
+    labels: &[i32],
+    image_elems: usize,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<EvalResult> {
+    let num_classes = backend.num_classes();
+    let n = limit.unwrap_or(labels.len()).min(labels.len());
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = batch.min(n - i);
+        let chunk = &images[i * image_elems..(i + b) * image_elems];
+        let logits = backend.forward(op_idx, chunk, b)?;
+        for bi in 0..b {
+            let row = &logits[bi * num_classes..(bi + 1) * num_classes];
+            let label = labels[i + bi] as usize;
+            let top = top_k_indices(row, 5);
+            if top.first() == Some(&label) {
+                top1 += 1;
+            }
+            if top.contains(&label) {
+                top5 += 1;
+            }
+        }
+        i += b;
+    }
+    Ok(EvalResult {
+        top1: top1 as f64 / n as f64,
+        top5: top5 as f64 / n as f64,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_matches_full_sort() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for classes in [1usize, 4, 5, 6, 100] {
+            for _ in 0..20 {
+                let row: Vec<f32> = (0..classes).map(|_| rng.normal() as f32).collect();
+                let got = top_k_indices(&row, 5);
+                let mut idx: Vec<usize> = (0..classes).collect();
+                idx.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
+                assert_eq!(got, idx[..5.min(classes)].to_vec());
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_ties_prefer_earlier_index() {
+        let row = [1.0f32, 3.0, 3.0, 2.0, 3.0];
+        assert_eq!(top_k_indices(&row, 3), vec![1, 2, 4]);
+        assert_eq!(top_k_indices(&row, 5), vec![1, 2, 4, 3, 0]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Native LUT backend: the bit-exact deployment semantics of the paper's
+//! approximate hardware, behind the unified [`Backend`] trait.
+//!
+//! `prepare` precompiles the per-OP transposed-weight caches and every
+//! assigned multiplier's transposed LUT via [`Engine::prepare_op`], so
+//! `forward` is a pure compute path — no allocation or cache population
+//! happens per batch, and OP switching is just a different index.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::backend::Backend;
+use crate::engine::{Engine, OperatingPoint};
+use crate::muldb::MulDb;
+use crate::nn::Graph;
+
+pub struct NativeBackend {
+    engine: Engine,
+    ops: Vec<OperatingPoint>,
+    num_classes: usize,
+}
+
+impl NativeBackend {
+    pub fn new(graph: Arc<Graph>, db: Arc<MulDb>) -> Self {
+        let num_classes = graph.approx_layers().last().map(|n| n.cout).unwrap_or(10);
+        NativeBackend {
+            engine: Engine::new(graph, db),
+            ops: Vec::new(),
+            num_classes,
+        }
+    }
+
+    /// The underlying engine (selftest-style direct access).
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}
+
+impl Backend for NativeBackend {
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
+        for op in ops {
+            self.engine.prepare_op(op)?;
+        }
+        self.ops = ops.to_vec();
+        Ok(())
+    }
+
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let op = self
+            .ops
+            .get(op_idx)
+            .with_context(|| format!("operating point {op_idx} not prepared"))?;
+        self.engine.forward(op, images, batch)
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+}

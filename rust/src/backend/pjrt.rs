@@ -1,0 +1,169 @@
+//! PJRT backend: the AOT-compiled HLO artifact (low-rank error
+//! surrogate) behind the unified [`Backend`] trait.
+//!
+//! The executable is OP-agnostic; reconfiguration = input buffers
+//! (DESIGN.md).  `prepare` builds one [`runtime::OpBuffers`] bundle per
+//! ladder rung — U/V low-rank error tables for the assigned multiplier
+//! plus the (BN-overlaid) gamma/beta/bias tensors — so `forward` only
+//! mints the `x` literal and executes.
+//!
+//! The artifact is compiled for a fixed `export_batch`; `forward`
+//! accepts any batch size by chunking, zero-padding the final partial
+//! chunk and truncating its logits, which is what lets the batching
+//! server drive this backend with the same code path as the native one.
+//!
+//! BN overlays: an operating point named `op{i}` picks up
+//! `bn_op{i}.qten` from the experiment directory when stage B has
+//! produced it (full-retrain overlays change conv weights, which the
+//! AOT artifact cannot absorb — only the native backend honors those).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::Backend;
+use crate::engine::OperatingPoint;
+use crate::runtime::{self, LoadedModel, OpBuffers, Runtime};
+use crate::util::tensorio::{self, Tensor};
+
+pub struct PjrtBackend {
+    // the client must outlive the executable compiled on it
+    runtime: Runtime,
+    model: LoadedModel,
+    /// one input bundle per prepared operating point
+    bufs: Vec<OpBuffers>,
+    lowrank_u: Vec<Vec<f32>>,
+    lowrank_v: Vec<Vec<f32>>,
+    max_rank: usize,
+    tensors: HashMap<String, Tensor>,
+    exp_dir: PathBuf,
+    /// [H, W, C]
+    input_shape: Vec<usize>,
+    num_classes: usize,
+    /// apply `bn_op{i}.qten` overlays in `prepare` (mode != "none")
+    bn_overlays: bool,
+}
+
+impl PjrtBackend {
+    /// Load + compile the model artifact of one experiment.
+    ///
+    /// `artifacts` is the root artifacts directory (holds `lowrank.bin`),
+    /// `exp_dir` the experiment directory (holds `model.hlo.txt`,
+    /// `hlo_signature.json`, `params.qten` and the BN overlays).
+    pub fn open(
+        artifacts: impl AsRef<Path>,
+        exp_dir: impl AsRef<Path>,
+        input_shape: &[usize],
+        num_classes: usize,
+    ) -> Result<Self> {
+        let exp_dir = exp_dir.as_ref().to_path_buf();
+        if input_shape.len() != 3 {
+            bail!("input shape must be [H, W, C], got {input_shape:?}");
+        }
+        let rt = Runtime::cpu()?;
+        let model = rt.load(&exp_dir, "model")?;
+        let (lowrank_u, lowrank_v, max_rank) = runtime::load_lowrank(&artifacts)?;
+        let tensors = tensorio::load(exp_dir.join("params.qten"))?;
+        Ok(PjrtBackend {
+            runtime: rt,
+            model,
+            bufs: Vec::new(),
+            lowrank_u,
+            lowrank_v,
+            max_rank,
+            tensors,
+            exp_dir,
+            input_shape: input_shape.to_vec(),
+            num_classes,
+            bn_overlays: true,
+        })
+    }
+
+    /// Enable/disable the BN overlay lookup (the `--mode none` path);
+    /// takes effect at the next `prepare`.
+    pub fn set_bn_overlays(&mut self, enabled: bool) {
+        self.bn_overlays = enabled;
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    pub fn export_batch(&self) -> usize {
+        self.model.export_batch
+    }
+
+    /// BN overlay tensors for one OP: `op{i}` -> `bn_op{i}.qten` when the
+    /// stage-B retraining has produced it; empty otherwise.
+    fn overlay_for(&self, op: &OperatingPoint) -> Result<HashMap<String, Tensor>> {
+        if !self.bn_overlays {
+            return Ok(HashMap::new());
+        }
+        if let Some(idx) = op.name.strip_prefix("op").and_then(|s| s.parse::<usize>().ok()) {
+            let path = self.exp_dir.join(format!("bn_op{idx}.qten"));
+            if path.exists() {
+                return tensorio::load(&path);
+            }
+        }
+        Ok(HashMap::new())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
+        let mut bufs = Vec::with_capacity(ops.len());
+        for op in ops {
+            let overlay = self.overlay_for(op)?;
+            bufs.push(runtime::build_op_buffers(
+                &self.model,
+                &op.assignment,
+                &self.lowrank_u,
+                &self.lowrank_v,
+                self.max_rank,
+                &self.tensors,
+                &overlay,
+            )?);
+        }
+        self.bufs = bufs;
+        Ok(())
+    }
+
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let bufs = self
+            .bufs
+            .get(op_idx)
+            .with_context(|| format!("operating point {op_idx} not prepared"))?;
+        let elems: usize = self.input_shape.iter().product();
+        if images.len() != batch * elems {
+            bail!("input size {} != expected {}", images.len(), batch * elems);
+        }
+        let eb = self.model.export_batch;
+        let shape = [eb, self.input_shape[0], self.input_shape[1], self.input_shape[2]];
+        let mut out = Vec::with_capacity(batch * self.num_classes);
+        let mut i = 0;
+        while i < batch {
+            let b = eb.min(batch - i);
+            let x = if b == eb {
+                runtime::literal_f32(&images[i * elems..(i + eb) * elems], &shape)?
+            } else {
+                // partial tail: zero-pad to the compiled batch, truncate below
+                let mut padded = vec![0f32; eb * elems];
+                padded[..b * elems].copy_from_slice(&images[i * elems..(i + b) * elems]);
+                runtime::literal_f32(&padded, &shape)?
+            };
+            let logits = self.model.execute_with_op(x, bufs)?;
+            out.extend_from_slice(&logits[..b * self.num_classes]);
+            i += b;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+}

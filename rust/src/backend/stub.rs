@@ -1,0 +1,73 @@
+//! Stub backend: a deterministic, model-free [`Backend`] for unit tests
+//! and benchmarks of everything *around* inference — the batching
+//! server, the QoS controller, the evaluate loop.
+//!
+//! Logits are a pure function of each image's first element: with C
+//! classes and `x0 = image[0] as usize % C`, class `c` scores
+//! `C - ((c - x0) mod C)`, i.e. strictly descending from `x0` cycling
+//! upward.  So argmax == `x0` and the top-5 set is `{x0, x0+1, ..,
+//! x0+4} mod C` — accuracy expectations can be computed by hand.
+
+use anyhow::{bail, Result};
+
+use crate::backend::Backend;
+use crate::engine::OperatingPoint;
+
+pub struct StubBackend {
+    classes: usize,
+    /// number of operating points seen by `prepare`; 0 = not prepared
+    /// (forward then accepts any index, for trait-free harness tests)
+    prepared: usize,
+    /// (op_idx, batch) log of every forward call, for assertions
+    pub forward_calls: Vec<(usize, usize)>,
+}
+
+impl StubBackend {
+    pub fn new(classes: usize) -> Self {
+        assert!(classes > 0);
+        StubBackend {
+            classes,
+            prepared: 0,
+            forward_calls: Vec::new(),
+        }
+    }
+
+    pub fn prepared_ops(&self) -> usize {
+        self.prepared
+    }
+}
+
+impl Backend for StubBackend {
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
+        self.prepared = ops.len();
+        Ok(())
+    }
+
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if self.prepared > 0 && op_idx >= self.prepared {
+            bail!("operating point {op_idx} not prepared (have {})", self.prepared);
+        }
+        if batch == 0 || images.len() % batch != 0 || images.is_empty() {
+            bail!("bad stub input: {} elems for batch {batch}", images.len());
+        }
+        self.forward_calls.push((op_idx, batch));
+        let elems = images.len() / batch;
+        let c = self.classes;
+        let mut out = Vec::with_capacity(batch * c);
+        for bi in 0..batch {
+            let x0 = images[bi * elems].max(0.0) as usize % c;
+            for cls in 0..c {
+                out.push((c - ((cls + c - x0) % c)) as f32);
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        "stub"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+}

@@ -1,0 +1,72 @@
+//! `qos-nets baselines`: run every baseline mapping algorithm on the
+//! same error model and print the power/penalty table.
+
+use anyhow::Result;
+
+use crate::baselines::{self, alwann};
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::errmodel;
+use crate::pipeline;
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let db = load_db(args)?;
+    let se = errmodel::sigma_e(&db, &exp.stats);
+    let scale = args.get_f64("scale", 1.0);
+
+    let mut rows: Vec<(String, Vec<usize>)> = Vec::new();
+    rows.push((
+        "gradient_search[16]".into(),
+        baselines::gradient_search(&db, &se, &exp.sigma_g, scale),
+    ));
+    rows.push((
+        "lvrm_style[15]".into(),
+        baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, scale),
+    ));
+    rows.push((
+        "pnam_style[14]".into(),
+        baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, scale),
+    ));
+    rows.push((
+        "tpm_style[13]".into(),
+        baselines::tpm_threshold(&db, &se, &exp.sigma_g, scale),
+    ));
+    let hom = baselines::homogeneous_pick(&db, &se, &exp.sigma_g, &exp.stats, 0.0);
+    rows.push((format!("homogeneous[2]:{}", db.specs[hom].name), vec![hom; se.l]));
+    let ga = alwann::evolve(
+        &db,
+        &se,
+        &exp.sigma_g,
+        &exp.stats,
+        &alwann::GaConfig {
+            n_tiles: exp.n_multipliers(),
+            seed: exp.seed(),
+            ..Default::default()
+        },
+    );
+    if let Some(best) = alwann::pick_feasible(&ga) {
+        rows.push(("alwann_ga[9]".into(), best.chromosome.assignment()));
+    }
+    let (_, sol) = pipeline::run_search(&exp, &db);
+    rows.push(("qos_nets(op_last)".into(), sol.assignment.last().unwrap().clone()));
+
+    println!(
+        "{:28} {:>8} {:>9} {:>7} {:>6}",
+        "method", "power", "penalty", "#AMs", "layers"
+    );
+    for (name, a) in &rows {
+        let power = errmodel::relative_power(&db, &exp.stats, a);
+        let pen = baselines::quality_penalty(&se, &exp.sigma_g, a);
+        let distinct: std::collections::BTreeSet<usize> = a.iter().cloned().collect();
+        println!(
+            "{:28} {:>7.2}% {:>9.4} {:>7} {:>6}",
+            name,
+            100.0 * power,
+            pen,
+            distinct.len(),
+            a.len()
+        );
+    }
+    Ok(())
+}

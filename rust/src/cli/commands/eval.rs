@@ -1,0 +1,92 @@
+//! `qos-nets eval --backend native|pjrt`: evaluate the exact baseline
+//! plus every searched operating point through the unified [`Backend`]
+//! trait — the native LUT engine and the PJRT runtime share this exact
+//! code path (the old `eval` / `eval-pjrt` pair collapsed into one).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::backend::{self, Backend, NativeBackend, PjrtBackend};
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::pipeline::{self, Experiment};
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args.get_or("backend", "native").to_string();
+    run_with_backend(args, &which, None)
+}
+
+/// Build the requested backend for an experiment.  `mode` controls
+/// whether the PJRT backend applies BN overlays ("none" disables them,
+/// mirroring the native backend's overlay-free operating points).
+pub(crate) fn make_backend(
+    args: &Args,
+    exp: &Experiment,
+    which: &str,
+    mode: &str,
+) -> Result<Box<dyn Backend>> {
+    match which {
+        "native" => Ok(Box::new(NativeBackend::new(exp.graph.clone(), load_db(args)?))),
+        "pjrt" => {
+            let mut be = PjrtBackend::open(
+                &exp.artifacts,
+                &exp.dir,
+                &exp.graph.input_shape,
+                exp.num_classes(),
+            )?;
+            be.set_bn_overlays(mode != "none");
+            println!("PJRT platform: {}", be.platform());
+            Ok(Box::new(be))
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// `default_limit` preserves the deprecated `eval-pjrt` behavior (cap
+/// at 64 samples unless --limit is given); `eval` itself passes None.
+pub fn run_with_backend(args: &Args, which: &str, default_limit: Option<usize>) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let mode = args.get_or("mode", "bn");
+    let batch = args.get_usize("batch", 32);
+    let limit = args.get("limit").and_then(|s| s.parse().ok()).or(default_limit);
+
+    // table[0] is the exact 8-bit baseline, table[1..] the OP ladder
+    let mut table = vec![pipeline::exact_operating_point(&exp)?];
+    table.extend(pipeline::load_operating_points(&exp, mode)?);
+
+    let mut be = make_backend(args, &exp, which, mode)?;
+    be.prepare(&table)?;
+
+    let (images, labels) = exp.load_testset()?;
+    let elems = exp.image_elems();
+
+    let base = backend::evaluate(be.as_mut(), 0, &images, &labels, elems, batch, limit)?;
+    println!(
+        "[{}] baseline (8-bit, exact mult, {} backend): top1={:.2}% top5={:.2}% (n={})",
+        exp.name,
+        be.name(),
+        100.0 * base.top1,
+        100.0 * base.top5,
+        base.n
+    );
+
+    for (i, op) in table.iter().enumerate().skip(1) {
+        let t0 = Instant::now();
+        let r = backend::evaluate(be.as_mut(), i, &images, &labels, elems, batch, limit)?;
+        println!(
+            "[{}] {} ({} mode, {} backend): power={:.2}% top1={:.2}% ({:+.2}pp) top5={:.2}% ({:+.2}pp) [{:?}]",
+            exp.name,
+            op.name,
+            mode,
+            be.name(),
+            100.0 * op.relative_power,
+            100.0 * r.top1,
+            100.0 * (r.top1 - base.top1),
+            100.0 * r.top5,
+            100.0 * (r.top5 - base.top5),
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}

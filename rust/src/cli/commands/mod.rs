@@ -1,0 +1,63 @@
+//! `qos-nets` subcommand implementations, one module per command.
+//!
+//! Every inference-carrying command (`eval`, `serve`) goes through the
+//! unified [`crate::backend::Backend`] trait, selected with
+//! `--backend native|pjrt`; `dispatch` is the single entry the binary
+//! calls.
+
+mod baselines;
+mod eval;
+mod muldb;
+mod report;
+mod search;
+mod selftest;
+mod serve;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::cli::{Args, USAGE};
+use crate::muldb::MulDb;
+use crate::pipeline::Experiment;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "muldb" => muldb::run(args),
+        "search" => search::run(args),
+        "baselines" => baselines::run(args),
+        "eval" => eval::run(args),
+        "eval-pjrt" => {
+            eprintln!(
+                "note: `eval-pjrt` is deprecated; use `eval --backend pjrt` \
+                 (keeping the old default of --limit 64)"
+            );
+            eval::run_with_backend(args, "pjrt", Some(64))
+        }
+        "serve" => serve::run(args),
+        "report" => report::run(args),
+        "selftest" => selftest::run(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// The multiplier family: the exported LUT bundle when present, else the
+/// generated in-memory family (identical content, see `MulDb::digest`).
+pub(crate) fn load_db(args: &Args) -> Result<Arc<MulDb>> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let db = if Path::new(artifacts).join("luts.bin").exists() {
+        MulDb::load(artifacts)?
+    } else {
+        MulDb::generate()
+    };
+    Ok(Arc::new(db))
+}
+
+pub(crate) fn load_experiment(args: &Args) -> Result<Experiment> {
+    Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))
+}

@@ -1,0 +1,23 @@
+//! `qos-nets muldb`: print the approximate-multiplier family.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::muldb::MulDb;
+
+pub fn run(_args: &Args) -> Result<()> {
+    let db = MulDb::generate();
+    println!(
+        "{:>3} {:16} {:>8} {:>10} {:>10} {:>10}",
+        "id", "name", "power", "MED", "MRED", "bias"
+    );
+    for s in &db.specs {
+        let st = db.error_stats(s.id);
+        println!(
+            "{:>3} {:16} {:>8.3} {:>10.2} {:>10.5} {:>10.2}",
+            s.id, s.name, s.power, st.med, st.mred, st.mean
+        );
+    }
+    println!("digest: {}", db.digest());
+    Ok(())
+}

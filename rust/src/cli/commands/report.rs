@@ -1,0 +1,75 @@
+//! `qos-nets report <fig1|fig2|fig3>`: dump the paper-figure data series.
+
+use anyhow::{bail, Result};
+
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::errmodel;
+use crate::pipeline;
+use crate::selection;
+use crate::util::json::{self, Json};
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig3");
+    let exp = load_experiment(args)?;
+    let db = load_db(args)?;
+    match which {
+        "fig1" => {
+            // sigma_g vector + sigma_e matrix dump (the Fig. 1 pipeline output)
+            let se = errmodel::sigma_e(&db, &exp.stats);
+            let mut rows = Vec::new();
+            for (k, name) in exp.layer_names.iter().enumerate() {
+                rows.push(Json::obj(vec![
+                    ("layer", Json::str(name.clone())),
+                    ("sigma_g", Json::num(exp.sigma_g[k])),
+                    (
+                        "sigma_e",
+                        Json::Arr(se.column(k).into_iter().map(Json::num).collect()),
+                    ),
+                ]));
+            }
+            println!("{}", json::to_string_pretty(&Json::Arr(rows)));
+        }
+        "fig2" => {
+            // scaled preference vectors + cluster assignment per (OP, layer)
+            let se = errmodel::sigma_e(&db, &exp.stats);
+            let usable = selection::usable_multipliers(&se, &exp.sigma_g, &exp.scales());
+            let points =
+                selection::preference_vectors(&se, &exp.sigma_g, &exp.scales(), &usable);
+            let (_, sol) = pipeline::run_search(&exp, &db);
+            let l = exp.layer_names.len();
+            let mut rows = Vec::new();
+            for (idx, p) in points.iter().enumerate() {
+                rows.push(Json::obj(vec![
+                    ("op", Json::num((idx / l) as f64)),
+                    ("layer", Json::str(exp.layer_names[idx % l].clone())),
+                    (
+                        "preference",
+                        Json::Arr(p.iter().map(|&x| Json::num(x)).collect()),
+                    ),
+                    (
+                        "multiplier",
+                        Json::num(sol.assignment[idx / l][idx % l] as f64),
+                    ),
+                ]));
+            }
+            println!("{}", json::to_string_pretty(&Json::Arr(rows)));
+        }
+        "fig3" => {
+            // per-layer multiplier assignment per OP + power lines (paper Fig. 3)
+            let assignments = pipeline::read_assignment(&exp)?;
+            anyhow::ensure!(!assignments.is_empty(), "run `search` first");
+            for (i, (scale, power, amap)) in assignments.iter().enumerate() {
+                println!("# OP{i} scale={scale} relative_power={:.4}", power);
+                println!("layer_index,layer,multiplier_id,multiplier,power");
+                for (k, name) in exp.layer_names.iter().enumerate() {
+                    let mid = *amap.get(name).unwrap_or(&0);
+                    println!("{k},{name},{mid},{},{:.3}", db.specs[mid].name, db.power(mid));
+                }
+                println!();
+            }
+        }
+        other => bail!("unknown report {other:?} (fig1|fig2|fig3)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! `qos-nets search`: the QoS-Nets clustered multi-OP search.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::pipeline;
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let db = load_db(args)?;
+    let t0 = Instant::now();
+    let (se, sol) = pipeline::run_search(&exp, &db);
+    let path = pipeline::write_assignment(&exp, &db, &sol)?;
+    println!(
+        "[{}] search over {} layers x {} multipliers, {} operating points in {:?}",
+        exp.name,
+        se.l,
+        se.m,
+        exp.scales().len(),
+        t0.elapsed()
+    );
+    println!(
+        "subset ({} of n={}): {}",
+        sol.subset.len(),
+        exp.n_multipliers(),
+        sol.subset
+            .iter()
+            .map(|&m| db.specs[m].name.clone())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    for (i, p) in sol.power.iter().enumerate() {
+        println!(
+            "  OP{i} (scale {:.2}): relative multiplication power {:.2}% (saving {:.1}%)",
+            exp.scales()[i],
+            100.0 * p,
+            100.0 * (1.0 - p)
+        );
+    }
+    println!("wrote {}", path.display());
+    Ok(())
+}

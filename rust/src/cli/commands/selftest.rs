@@ -1,0 +1,116 @@
+//! `qos-nets selftest`: cross-layer integration checks — PJRT kernel
+//! artifact vs the native LUT hot loop (bit-exact), and the PJRT model
+//! artifact vs the native engine through the unified [`Backend`] trait.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::backend::{Backend, NativeBackend, PjrtBackend};
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::engine::lutmm;
+use crate::pipeline;
+use crate::runtime;
+use crate::util::rng::Rng;
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let db = load_db(args)?;
+    let rt = runtime::Runtime::cpu()?;
+
+    // --- kernel artifact vs native hot loop (bit-exact) ---
+    let kernel = rt.load(&exp.dir, "kernel")?;
+    let (m, k, n) = {
+        let s = &kernel.signature;
+        (s[0].shape[0], s[0].shape[1], s[1].shape[1])
+    };
+    let mut rng = Rng::new(1);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+    let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+    let mid = 9; // bam7
+    let (za, zw, zo) = (128i32, 117i32, 30i32);
+    let s_req = 1e-4f32;
+    let inputs = vec![
+        runtime::literal_i32(&a, &[m, k])?,
+        runtime::literal_i32(&w, &[k, n])?,
+        runtime::literal_i32(db.lut(mid), &[256, 256])?,
+        runtime::literal_f32(&[s_req], &[1])?,
+        runtime::literal_i32(&[za, zw, zo], &[3])?,
+    ];
+    let pjrt_out = kernel.execute_i32(&inputs)?;
+
+    // native recompute
+    let mut at = vec![0i32; k * m];
+    for mm in 0..m {
+        for kk in 0..k {
+            at[kk * m + mm] = a[mm * k + kk];
+        }
+    }
+    let mut wt = vec![0i32; n * k];
+    for kk in 0..k {
+        for nn in 0..n {
+            wt[nn * k + kk] = w[kk * n + nn];
+        }
+    }
+    let wlut = lutmm::transpose_lut(db.lut(mid));
+    let mut acc = vec![0i32; m * n];
+    lutmm::lut_matmul_acc(&at, &wt, &wlut, m, k, n, &mut acc);
+    let (sa, sw) = lutmm::code_sums(&at, &wt, m, k, n);
+    lutmm::apply_corrections(&mut acc, &sa, &sw, m, k, n, za, zw);
+    let native: Vec<i32> = acc
+        .iter()
+        .map(|&c| {
+            let q = (c as f32 * s_req).round_ties_even() + zo as f32;
+            q.clamp(0.0, 255.0) as i32
+        })
+        .collect();
+    anyhow::ensure!(pjrt_out == native, "kernel artifact != native lutmm");
+    println!("selftest: PJRT kernel artifact == native LUT matmul ({m}x{k}x{n}) OK");
+
+    // --- model artifact vs native engine, both through the Backend trait ---
+    let (images, labels) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let classes = exp.num_classes();
+    let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
+    let amap: HashMap<String, usize> = if assignments.is_empty() {
+        exp.layer_names.iter().map(|l| (l.clone(), 0usize)).collect()
+    } else {
+        assignments.last().unwrap().2.clone()
+    };
+    let op = pipeline::build_operating_point(&exp, "st", amap, 1.0, None)?;
+    let table = [op];
+
+    let mut pjrt =
+        PjrtBackend::open(&exp.artifacts, &exp.dir, &exp.graph.input_shape, classes)?;
+    pjrt.prepare(&table)?;
+    let batch = pjrt.export_batch();
+    let pjrt_logits = pjrt.forward(0, &images[..batch * elems], batch)?;
+
+    let mut native = NativeBackend::new(exp.graph.clone(), db.clone());
+    native.prepare(&table)?;
+    let native_logits = native.forward(0, &images[..batch * elems], batch)?;
+
+    let mut agree = 0;
+    for b in 0..batch {
+        let arg = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        let p = arg(&pjrt_logits[b * classes..(b + 1) * classes]);
+        let nl = arg(&native_logits[b * classes..(b + 1) * classes]);
+        if p == nl {
+            agree += 1;
+        }
+    }
+    println!(
+        "selftest: PJRT model vs native engine top-1 agreement {agree}/{batch} (labels {:?})",
+        &labels[..batch.min(4)]
+    );
+    anyhow::ensure!(agree * 10 >= batch * 7, "PJRT/native agreement too low");
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! `qos-nets serve --backend native|pjrt`: QoS serving demo — the
+//! batching server (generic over [`Backend`]) under a synthetic
+//! power-budget trace, the QoS controller walking the OP ladder live.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::backend::{Backend, NativeBackend, OpTable, PjrtBackend};
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::pipeline::{self, Experiment};
+use crate::qos::{budget_trace, QosConfig, QosController};
+use crate::server::{BatcherConfig, Server};
+use crate::util::rng::Rng;
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let mode = args.get_or("mode", "bn");
+    let which = args.get_or("backend", "native");
+
+    let ops = pipeline::load_operating_points(&exp, mode)?;
+    anyhow::ensure!(!ops.is_empty(), "no operating points; run `search` first");
+    let table = OpTable::new(ops);
+    let controller = QosController::new(table.ladder(), QosConfig::default());
+
+    let cfg = BatcherConfig {
+        max_batch: args.get_usize("max-batch", 16),
+        max_wait: Duration::from_millis(4),
+        workers: args.get_usize("workers", 2),
+    };
+
+    // the worker factory runs on each worker's own thread; capture only
+    // cheap cloneable state so the closure is Send + Sync
+    match which {
+        "native" => {
+            let graph = exp.graph.clone();
+            let db = load_db(args)?;
+            let server = Server::start(
+                move |_w| Ok(NativeBackend::new(graph.clone(), db.clone())),
+                table,
+                cfg,
+            )?;
+            drive(args, &exp, server, controller)
+        }
+        "pjrt" => {
+            let artifacts = exp.artifacts.clone();
+            let dir = exp.dir.clone();
+            let ishape = exp.graph.input_shape.clone();
+            let classes = exp.num_classes();
+            let use_bn = mode != "none";
+            let server = Server::start(
+                move |_w| {
+                    let mut be = PjrtBackend::open(&artifacts, &dir, &ishape, classes)?;
+                    be.set_bn_overlays(use_bn);
+                    Ok(be)
+                },
+                table,
+                cfg,
+            )?;
+            drive(args, &exp, server, controller)
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// The serving loop itself, written once for every backend.
+fn drive<B: Backend + 'static>(
+    args: &Args,
+    exp: &Experiment,
+    server: Server<B>,
+    mut controller: QosController,
+) -> Result<()> {
+    let secs = args.get_f64("secs", 3.0);
+    let rate = args.get_f64("rate", 200.0); // requests/second
+    let trace_kind = args.get_or("trace", "sine");
+
+    let (images, _) = exp.load_testset()?;
+    let elems = exp.image_elems();
+    let n_img = images.len() / elems;
+
+    let steps = (secs * 20.0) as usize; // budget update every 50 ms
+    let trace = budget_trace(trace_kind, steps, exp.seed());
+    let mut receivers = Vec::new();
+    let mut rng = Rng::new(42);
+    let started = Instant::now();
+    let mut submitted = 0u64;
+    let mut energy = 0.0f64; // sum of per-request relative power
+    for (step, &budget) in trace.iter().enumerate() {
+        if let Some(idx) = controller.observe(budget, Instant::now()) {
+            server.set_operating_point(idx);
+        }
+        let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
+        while Instant::now() < step_end {
+            let i = rng.below(n_img);
+            let img = images[i * elems..(i + 1) * elems].to_vec();
+            receivers.push(server.submit(img)?);
+            submitted += 1;
+            energy += server.ops()[server.operating_point()].relative_power;
+            let gap = Duration::from_secs_f64(rng.exp(rate));
+            std::thread::sleep(gap.min(Duration::from_millis(20)));
+        }
+    }
+    // drain
+    let mut ok = 0u64;
+    for rx in receivers {
+        if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = started.elapsed();
+    let m = server.shutdown();
+    println!(
+        "[{}] serve: {} requests in {:.2}s ({:.1} req/s), {} completed",
+        exp.name,
+        submitted,
+        wall.as_secs_f64(),
+        submitted as f64 / wall.as_secs_f64(),
+        ok
+    );
+    println!(
+        "  latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms max={:.2}ms  queue mean={:.2}ms",
+        m.latency.mean_us() / 1e3,
+        m.latency.percentile_us(50.0) as f64 / 1e3,
+        m.latency.percentile_us(99.0) as f64 / 1e3,
+        m.latency.max_us() as f64 / 1e3,
+        m.queue_latency.mean_us() / 1e3,
+    );
+    println!(
+        "  mean batch={:.2}  OP switches={} budget violations={}",
+        m.mean_batch(),
+        controller.switches,
+        controller.budget_violations
+    );
+    for (i, c) in m.per_op_requests.iter().enumerate() {
+        println!(
+            "  OP{i}: {c} requests ({:.1}%)",
+            100.0 * *c as f64 / m.completed.max(1) as f64
+        );
+    }
+    println!(
+        "  mean relative multiplication power over run: {:.2}%",
+        100.0 * energy / submitted.max(1) as f64
+    );
+    Ok(())
+}

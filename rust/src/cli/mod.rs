@@ -1,5 +1,8 @@
-//! Hand-rolled CLI (clap is unavailable offline): flag parser + the
-//! subcommand implementations live in `commands`.
+//! Hand-rolled CLI (clap is unavailable offline): the `Args` flag parser
+//! lives here; the subcommand implementations live in [`commands`], one
+//! file per subcommand, dispatched by [`commands::dispatch`].
+
+pub mod commands;
 
 use std::collections::HashMap;
 
@@ -66,13 +69,20 @@ COMMANDS
   search    --exp E             run the QoS-Nets clustered search, write
                                 artifacts/E/assignment.json
   baselines --exp E             run all baseline mapping algorithms
-  eval      --exp E [--mode M]  evaluate operating points with the native
-                                LUT engine (M: none|bn|full, default bn)
-  eval-pjrt --exp E             evaluate through the AOT PJRT artifact
-  serve     --exp E [--secs S]  QoS serving demo: batching server with a
+  eval      --exp E [--backend B] [--mode M]
+                                evaluate every operating point through the
+                                unified Backend trait (B: native|pjrt,
+                                default native; M: none|bn|full, default bn
+                                — pjrt honors bn overlays only)
+  serve     --exp E [--backend B] [--secs S]
+                                QoS serving demo: batching server with a
                                 power-budget trace driving OP switches
+                                (B: native|pjrt, default native)
   report    <fig1|fig2|fig3> --exp E   dump figure data series
   selftest  --exp E             cross-layer integration checks
+
+DEPRECATED
+  eval-pjrt --exp E             alias for `eval --backend pjrt`
 
 COMMON FLAGS
   --artifacts DIR   artifacts directory (default: artifacts)

@@ -12,7 +12,10 @@
 //! Operating-point switching is a pointer swap: `OperatingPoint` bundles
 //! the per-layer multiplier assignment + the BN overlay parameters; the
 //! engine holds all LUTs (transposed, cached) so switching costs nothing
-//! on the data path.
+//! on the data path.  [`Engine::prepare_op`] precompiles the per-OP
+//! weight/LUT caches up front (the serving path via
+//! `backend::NativeBackend` calls it for every ladder rung) so `forward`
+//! never builds them lazily on the hot path.
 
 pub mod lutmm;
 
@@ -22,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::muldb::MulDb;
-use crate::nn::{Graph, ModelParams, Node, NodeKind};
+use crate::nn::{Graph, LayerParams, ModelParams, Node, NodeKind};
 
 /// One runtime configuration: multiplier per layer + parameter set.
 #[derive(Debug, Clone)]
@@ -66,12 +69,66 @@ impl Engine {
         &self.graph
     }
 
-    #[allow(dead_code)]
-    fn wlut(&mut self, mid: usize) -> &[i32] {
-        if self.wluts[mid].is_none() {
+    /// Ensure the transposed LUT for a multiplier id is resident.
+    fn ensure_wlut(&mut self, mid: usize) {
+        if mid != 0 && self.wluts[mid].is_none() {
             self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
         }
-        self.wluts[mid].as_ref().unwrap()
+    }
+
+    /// Transposed weight codes + per-output-column code sums for one
+    /// (layer, group); weights are stored (K, cout) row-major and the
+    /// group's columns are [g*cg_out, (g+1)*cg_out).
+    fn build_wt(lp: &LayerParams, k: usize, cout: usize, g: usize, cg_out: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut wt = vec![0i32; cg_out * k];
+        for kk in 0..k {
+            for nn in 0..cg_out {
+                wt[nn * k + kk] = lp.w_codes[kk * cout + g * cg_out + nn];
+            }
+        }
+        let sw: Vec<i32> = wt.chunks_exact(k).map(|c| c.iter().sum()).collect();
+        (wt, sw)
+    }
+
+    /// Populate the weight/LUT caches for one layer under an operating
+    /// point; `forward` also calls this lazily so direct Engine users
+    /// keep working, but [`Engine::prepare_op`] front-loads the cost.
+    fn ensure_layer_caches(&mut self, op: &OperatingPoint, node: &Node) -> Result<()> {
+        let lp = op
+            .params
+            .layers
+            .get(&node.name)
+            .with_context(|| format!("{}: missing params", node.name))?;
+        let mid = *op.assignment.get(&node.name).unwrap_or(&0);
+        self.ensure_wlut(mid);
+        let (groups, k, cg_out) = match node.kind {
+            NodeKind::Dense => (1usize, node.cin, node.cout),
+            _ => (
+                node.groups,
+                node.ksize * node.ksize * (node.cin / node.groups),
+                node.cout / node.groups,
+            ),
+        };
+        for g in 0..groups {
+            let key = (op.name.clone(), node.name.clone(), g);
+            if !self.wt_cache.contains_key(&key) {
+                let built = Self::build_wt(lp, k, node.cout, g, cg_out);
+                self.wt_cache.insert(key, built);
+            }
+        }
+        Ok(())
+    }
+
+    /// Precompile every per-layer weight transpose and LUT for an
+    /// operating point so the serving hot path never builds them lazily.
+    pub fn prepare_op(&mut self, op: &OperatingPoint) -> Result<()> {
+        let graph = Arc::clone(&self.graph);
+        for node in &graph.nodes {
+            if matches!(node.kind, NodeKind::Conv | NodeKind::Dense) {
+                self.ensure_layer_caches(op, node)?;
+            }
+        }
+        Ok(())
     }
 
     /// Forward a batch: images [B, H, W, C] f32 -> logits [B, classes].
@@ -91,9 +148,10 @@ impl Engine {
         );
 
         let mut logits = None;
-        // clone the node list so conv/dense can borrow &mut self (LUT cache)
-        let nodes: Vec<Node> = self.graph.nodes.clone();
-        for node in &nodes {
+        // hold the graph by Arc so conv/dense can borrow &mut self
+        // (caches) without cloning every node each batch
+        let graph = Arc::clone(&self.graph);
+        for node in &graph.nodes {
             match node.kind {
                 NodeKind::Input => {}
                 NodeKind::Conv => {
@@ -211,6 +269,7 @@ impl Engine {
     }
 
     fn conv(&mut self, node: &Node, op: &OperatingPoint, x: &Act) -> Result<Act> {
+        self.ensure_layer_caches(op, node)?;
         let lp = op
             .params
             .layers
@@ -251,20 +310,7 @@ impl Engine {
             debug_assert_eq!(m2, m);
             // W^T (cg_out, K) for this group's columns (cached per OP)
             let key = (op.name.clone(), node.name.clone(), g);
-            if !self.wt_cache.contains_key(&key) {
-                let mut wt = vec![0i32; cg_out * k];
-                for kk in 0..k {
-                    for nn in 0..cg_out {
-                        wt[nn * k + kk] = lp.w_codes[kk * node.cout + g * cg_out + nn];
-                    }
-                }
-                let sw: Vec<i32> = wt.chunks_exact(k).map(|c| c.iter().sum()).collect();
-                self.wt_cache.insert(key.clone(), (wt, sw));
-            }
-            if mid != 0 && self.wluts[mid].is_none() {
-                self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
-            }
-            let (wt, sw) = self.wt_cache.get(&key).unwrap();
+            let (wt, sw) = self.wt_cache.get(&key).context("weight cache")?;
             acc.resize(m * cg_out, 0);
             if mid == 0 {
                 lutmm::exact_matmul_corrected(&at, wt, m, k, cg_out, qin.zero_point, qw.zero_point, &mut acc);
@@ -289,6 +335,7 @@ impl Engine {
     }
 
     fn dense(&mut self, node: &Node, op: &OperatingPoint, x: &Act) -> Result<Act> {
+        self.ensure_layer_caches(op, node)?;
         let lp = op
             .params
             .layers
@@ -310,20 +357,7 @@ impl Engine {
         }
         // W^T (N, K): weights stored (K, N); cached per OP
         let key = (op.name.clone(), node.name.clone(), 0usize);
-        if !self.wt_cache.contains_key(&key) {
-            let mut wt = vec![0i32; n * k];
-            for kk in 0..k {
-                for nn in 0..n {
-                    wt[nn * k + kk] = lp.w_codes[kk * n + nn];
-                }
-            }
-            let sw: Vec<i32> = wt.chunks_exact(k).map(|c| c.iter().sum()).collect();
-            self.wt_cache.insert(key.clone(), (wt, sw));
-        }
-        if mid != 0 && self.wluts[mid].is_none() {
-            self.wluts[mid] = Some(lutmm::transpose_lut(self.db.lut(mid)));
-        }
-        let (wt, sw) = self.wt_cache.get(&key).unwrap();
+        let (wt, sw) = self.wt_cache.get(&key).context("weight cache")?;
         let mut acc = vec![0i32; b * n];
         if mid == 0 {
             lutmm::exact_matmul_corrected(&at, wt, b, k, n, qin.zero_point, qw.zero_point, &mut acc);
@@ -347,48 +381,6 @@ impl Engine {
     }
 }
 
-/// Top-1/Top-5 accuracy over an evaluation set.
-pub struct EvalResult {
-    pub top1: f64,
-    pub top5: f64,
-    pub n: usize,
-}
-
-pub fn evaluate(
-    engine: &mut Engine,
-    op: &OperatingPoint,
-    images: &[f32],
-    labels: &[i32],
-    image_elems: usize,
-    num_classes: usize,
-    batch: usize,
-    limit: Option<usize>,
-) -> Result<EvalResult> {
-    let n = limit.unwrap_or(labels.len()).min(labels.len());
-    let mut top1 = 0usize;
-    let mut top5 = 0usize;
-    let mut i = 0;
-    while i < n {
-        let b = batch.min(n - i);
-        let chunk = &images[i * image_elems..(i + b) * image_elems];
-        let logits = engine.forward(op, chunk, b)?;
-        for bi in 0..b {
-            let row = &logits[bi * num_classes..(bi + 1) * num_classes];
-            let label = labels[i + bi] as usize;
-            let mut idx: Vec<usize> = (0..num_classes).collect();
-            idx.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
-            if idx[0] == label {
-                top1 += 1;
-            }
-            if idx[..5.min(num_classes)].contains(&label) {
-                top5 += 1;
-            }
-        }
-        i += b;
-    }
-    Ok(EvalResult {
-        top1: top1 as f64 / n as f64,
-        top5: top5 as f64 / n as f64,
-        n,
-    })
-}
+// Accuracy evaluation lives in `crate::backend::evaluate`, written once
+// against the `Backend` trait so it drives this engine and the PJRT
+// runtime through the same code path.

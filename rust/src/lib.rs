@@ -9,12 +9,14 @@
 //!   * [`baselines`] ALWANN GA, homogeneous, gradient search, LVRM/PNAM/TPM
 //!   * [`engine`]    native bit-exact LUT inference engine
 //!   * [`runtime`]   PJRT loader/executor for the AOT HLO artifacts
+//!   * [`backend`]   unified `Backend` trait + OpTable over both engines
 //!   * [`qos`]       operating-point controller (budget + hysteresis)
-//!   * [`server`]    batching inference server with live OP switching
+//!   * [`server`]    batching inference server, generic over `Backend`
 //!   * [`pipeline`]  artifact-level orchestration
-//!   * [`cli`]       flag parsing for the `qos-nets` binary
+//!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
 
+pub mod backend;
 pub mod baselines;
 pub mod cli;
 pub mod engine;

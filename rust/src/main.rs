@@ -1,26 +1,11 @@
 //! qos-nets — L3 coordinator CLI.
 //!
-//! The leader entrypoint: search / baselines / eval (native + PJRT) /
-//! serve / report / selftest.  See `cli::USAGE`.
+//! Thin entrypoint: flag parsing lives in `qos_nets::cli`, the
+//! subcommand implementations in `qos_nets::cli::commands` (search /
+//! baselines / eval / serve / report / selftest, each generic over the
+//! unified inference `Backend`).  See `cli::USAGE`.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-use anyhow::{bail, Result};
-
-use qos_nets::baselines::{self, alwann};
-use qos_nets::cli::{Args, USAGE};
-use qos_nets::engine::OperatingPoint;
-use qos_nets::errmodel;
-use qos_nets::muldb::MulDb;
-use qos_nets::pipeline::{self, Experiment};
-use qos_nets::qos::{budget_trace, LadderEntry, QosConfig, QosController};
-use qos_nets::runtime;
-use qos_nets::server::{BatcherConfig, Server};
-use qos_nets::util::json::{self, Json};
-use qos_nets::util::tensorio;
+use qos_nets::cli::{commands, Args, USAGE};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -29,561 +14,8 @@ fn main() {
         std::process::exit(2);
     }
     let args = Args::parse(&argv);
-    if let Err(e) = dispatch(&args) {
+    if let Err(e) = commands::dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn dispatch(args: &Args) -> Result<()> {
-    match args.command.as_str() {
-        "muldb" => cmd_muldb(),
-        "search" => cmd_search(args),
-        "baselines" => cmd_baselines(args),
-        "eval" => cmd_eval(args),
-        "eval-pjrt" => cmd_eval_pjrt(args),
-        "serve" => cmd_serve(args),
-        "report" => cmd_report(args),
-        "selftest" => cmd_selftest(args),
-        "help" | "--help" | "-h" => {
-            print!("{USAGE}");
-            Ok(())
-        }
-        other => bail!("unknown command {other:?}\n{USAGE}"),
-    }
-}
-
-fn load_db(args: &Args) -> Result<Arc<MulDb>> {
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let db = if Path::new(artifacts).join("luts.bin").exists() {
-        MulDb::load(artifacts)?
-    } else {
-        MulDb::generate()
-    };
-    Ok(Arc::new(db))
-}
-
-fn cmd_muldb() -> Result<()> {
-    let db = MulDb::generate();
-    println!(
-        "{:>3} {:16} {:>8} {:>10} {:>10} {:>10}",
-        "id", "name", "power", "MED", "MRED", "bias"
-    );
-    for s in &db.specs {
-        let st = db.error_stats(s.id);
-        println!(
-            "{:>3} {:16} {:>8.3} {:>10.2} {:>10.5} {:>10.2}",
-            s.id, s.name, s.power, st.med, st.mred, st.mean
-        );
-    }
-    println!("digest: {}", db.digest());
-    Ok(())
-}
-
-fn cmd_search(args: &Args) -> Result<()> {
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let exp = Experiment::load(artifacts, args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    let t0 = Instant::now();
-    let (se, sol) = pipeline::run_search(&exp, &db);
-    let path = pipeline::write_assignment(&exp, &db, &sol)?;
-    println!(
-        "[{}] search over {} layers x {} multipliers, {} operating points in {:?}",
-        exp.name,
-        se.l,
-        se.m,
-        exp.scales().len(),
-        t0.elapsed()
-    );
-    println!(
-        "subset ({} of n={}): {}",
-        sol.subset.len(),
-        exp.n_multipliers(),
-        sol.subset
-            .iter()
-            .map(|&m| db.specs[m].name.clone())
-            .collect::<Vec<_>>()
-            .join(", ")
-    );
-    for (i, p) in sol.power.iter().enumerate() {
-        println!(
-            "  OP{i} (scale {:.2}): relative multiplication power {:.2}% (saving {:.1}%)",
-            exp.scales()[i],
-            100.0 * p,
-            100.0 * (1.0 - p)
-        );
-    }
-    println!("wrote {}", path.display());
-    Ok(())
-}
-
-fn cmd_baselines(args: &Args) -> Result<()> {
-    let exp = Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    let se = errmodel::sigma_e(&db, &exp.stats);
-    let scale = args.get_f64("scale", 1.0);
-
-    let mut rows: Vec<(String, Vec<usize>)> = Vec::new();
-    rows.push((
-        "gradient_search[16]".into(),
-        baselines::gradient_search(&db, &se, &exp.sigma_g, scale),
-    ));
-    rows.push((
-        "lvrm_style[15]".into(),
-        baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, scale),
-    ));
-    rows.push((
-        "pnam_style[14]".into(),
-        baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, scale),
-    ));
-    rows.push((
-        "tpm_style[13]".into(),
-        baselines::tpm_threshold(&db, &se, &exp.sigma_g, scale),
-    ));
-    let hom = baselines::homogeneous_pick(&db, &se, &exp.sigma_g, &exp.stats, 0.0);
-    rows.push((format!("homogeneous[2]:{}", db.specs[hom].name), vec![hom; se.l]));
-    let ga = alwann::evolve(
-        &db,
-        &se,
-        &exp.sigma_g,
-        &exp.stats,
-        &alwann::GaConfig {
-            n_tiles: exp.n_multipliers(),
-            seed: exp.seed(),
-            ..Default::default()
-        },
-    );
-    if let Some(best) = alwann::pick_feasible(&ga) {
-        rows.push(("alwann_ga[9]".into(), best.chromosome.assignment()));
-    }
-    let (_, sol) = pipeline::run_search(&exp, &db);
-    rows.push(("qos_nets(op_last)".into(), sol.assignment.last().unwrap().clone()));
-
-    println!(
-        "{:28} {:>8} {:>9} {:>7} {:>6}",
-        "method", "power", "penalty", "#AMs", "layers"
-    );
-    for (name, a) in &rows {
-        let power = errmodel::relative_power(&db, &exp.stats, a);
-        let pen = baselines::quality_penalty(&se, &exp.sigma_g, a);
-        let distinct: std::collections::BTreeSet<usize> = a.iter().cloned().collect();
-        println!(
-            "{:28} {:>7.2}% {:>9.4} {:>7} {:>6}",
-            name,
-            100.0 * power,
-            pen,
-            distinct.len(),
-            a.len()
-        );
-    }
-    Ok(())
-}
-
-/// Build the OP list for an experiment from assignment.json (+ overlays).
-fn load_ops(exp: &Experiment, mode: &str) -> Result<Vec<OperatingPoint>> {
-    let assignments = pipeline::read_assignment(exp)?;
-    let mut ops = Vec::new();
-    for (i, (_scale, power, amap)) in assignments.into_iter().enumerate() {
-        let overlay = match mode {
-            "bn" => {
-                let p = exp.dir.join(format!("bn_op{i}.qten"));
-                p.exists().then_some(p)
-            }
-            "full" => {
-                let p = exp.dir.join(format!("params_full_op{i}.qten"));
-                p.exists().then_some(p)
-            }
-            _ => None,
-        };
-        if matches!(mode, "bn" | "full") && overlay.is_none() {
-            eprintln!(
-                "warning: OP{i}: no {mode} overlay found (run stage B retraining); using base params"
-            );
-        }
-        ops.push(pipeline::build_operating_point(
-            exp,
-            &format!("op{i}"),
-            amap,
-            power,
-            overlay.as_deref(),
-        )?);
-    }
-    Ok(ops)
-}
-
-fn cmd_eval(args: &Args) -> Result<()> {
-    let exp = Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    let mode = args.get_or("mode", "bn");
-    let batch = args.get_usize("batch", 32);
-    let limit = args.get("limit").and_then(|s| s.parse().ok());
-
-    let exact = pipeline::exact_operating_point(&exp)?;
-    let base = pipeline::eval_operating_point(&exp, &db, &exact, batch, limit)?;
-    println!(
-        "[{}] baseline (8-bit, exact mult): top1={:.2}% top5={:.2}% (n={})",
-        exp.name,
-        100.0 * base.top1,
-        100.0 * base.top5,
-        base.n
-    );
-
-    for (i, op) in load_ops(&exp, mode)?.iter().enumerate() {
-        let t0 = Instant::now();
-        let r = pipeline::eval_operating_point(&exp, &db, op, batch, limit)?;
-        println!(
-            "[{}] OP{i} ({} mode): power={:.2}% top1={:.2}% ({:+.2}pp) top5={:.2}% ({:+.2}pp) [{:?}]",
-            exp.name,
-            mode,
-            100.0 * op.relative_power,
-            100.0 * r.top1,
-            100.0 * (r.top1 - base.top1),
-            100.0 * r.top5,
-            100.0 * (r.top5 - base.top5),
-            t0.elapsed()
-        );
-    }
-    Ok(())
-}
-
-fn cmd_eval_pjrt(args: &Args) -> Result<()> {
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let exp = Experiment::load(artifacts, args.get_or("exp", "quick"))?;
-    let rt = runtime::Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let model = rt.load(&exp.dir, "model")?;
-    let batch = model.export_batch;
-    let limit = args.get_usize("limit", 64);
-
-    let (lr_u, lr_v, max_rank) = runtime::load_lowrank(artifacts)?;
-    let tensors = exp.load_params_tensors()?;
-    let assignments = pipeline::read_assignment(&exp)?;
-    let (images, labels) = exp.load_testset()?;
-    let elems = exp.image_elems();
-    let classes = exp.num_classes();
-
-    for (i, (_s, power, amap)) in assignments.iter().enumerate() {
-        let overlay_path = exp.dir.join(format!("bn_op{i}.qten"));
-        let overlay = if overlay_path.exists() {
-            tensorio::load(&overlay_path)?
-        } else {
-            HashMap::new()
-        };
-        let bufs =
-            runtime::build_op_buffers(&model, amap, &lr_u, &lr_v, max_rank, &tensors, &overlay)?;
-        let n = (limit.min(labels.len()) / batch).max(1) * batch;
-        let mut top1 = 0usize;
-        let t0 = Instant::now();
-        for s in (0..n).step_by(batch) {
-            let x = runtime::literal_f32(
-                &images[s * elems..(s + batch) * elems],
-                &[
-                    batch,
-                    exp.graph.input_shape[0],
-                    exp.graph.input_shape[1],
-                    exp.graph.input_shape[2],
-                ],
-            )?;
-            let logits = model.execute_with_op(x, &bufs)?;
-            for b in 0..batch {
-                let row = &logits[b * classes..(b + 1) * classes];
-                let arg = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
-                    .map(|(j, _)| j)
-                    .unwrap();
-                if arg == labels[s + b] as usize {
-                    top1 += 1;
-                }
-            }
-        }
-        println!(
-            "[{}] PJRT OP{i}: power={:.2}% top1={:.2}% (n={}) in {:?}",
-            exp.name,
-            100.0 * power,
-            100.0 * top1 as f64 / n as f64,
-            n,
-            t0.elapsed()
-        );
-    }
-    Ok(())
-}
-
-fn cmd_serve(args: &Args) -> Result<()> {
-    let exp = Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    let mode = args.get_or("mode", "bn");
-    let secs = args.get_f64("secs", 3.0);
-    let rate = args.get_f64("rate", 200.0); // requests/second
-    let trace_kind = args.get_or("trace", "sine");
-
-    let ops = load_ops(&exp, mode)?;
-    anyhow::ensure!(!ops.is_empty(), "no operating points; run `search` first");
-    let ladder: Vec<LadderEntry> = ops
-        .iter()
-        .map(|o| LadderEntry {
-            name: o.name.clone(),
-            power: o.relative_power,
-        })
-        .collect();
-    let mut controller = QosController::new(ladder, QosConfig::default());
-
-    let server = Server::start(
-        exp.graph.clone(),
-        db.clone(),
-        ops,
-        BatcherConfig {
-            max_batch: args.get_usize("max-batch", 16),
-            max_wait: Duration::from_millis(4),
-            workers: args.get_usize("workers", 2),
-        },
-    )?;
-
-    let (images, _) = exp.load_testset()?;
-    let elems = exp.image_elems();
-    let n_img = images.len() / elems;
-
-    let steps = (secs * 20.0) as usize; // budget update every 50 ms
-    let trace = budget_trace(trace_kind, steps, exp.seed());
-    let mut receivers = Vec::new();
-    let mut rng = qos_nets::util::rng::Rng::new(42);
-    let started = Instant::now();
-    let mut submitted = 0u64;
-    let mut energy = 0.0f64; // sum of per-request relative power
-    for (step, &budget) in trace.iter().enumerate() {
-        if let Some(idx) = controller.observe(budget, Instant::now()) {
-            server.set_operating_point(idx);
-        }
-        let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
-        while Instant::now() < step_end {
-            let i = rng.below(n_img);
-            let img = images[i * elems..(i + 1) * elems].to_vec();
-            receivers.push(server.submit(img)?);
-            submitted += 1;
-            energy += server.ops()[server.operating_point()].relative_power;
-            let gap = Duration::from_secs_f64(rng.exp(rate));
-            std::thread::sleep(gap.min(Duration::from_millis(20)));
-        }
-    }
-    // drain
-    let mut ok = 0u64;
-    for rx in receivers {
-        if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
-            ok += 1;
-        }
-    }
-    let wall = started.elapsed();
-    let m = server.shutdown();
-    println!(
-        "[{}] serve: {} requests in {:.2}s ({:.1} req/s), {} completed",
-        exp.name,
-        submitted,
-        wall.as_secs_f64(),
-        submitted as f64 / wall.as_secs_f64(),
-        ok
-    );
-    println!(
-        "  latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms max={:.2}ms  queue mean={:.2}ms",
-        m.latency.mean_us() / 1e3,
-        m.latency.percentile_us(50.0) as f64 / 1e3,
-        m.latency.percentile_us(99.0) as f64 / 1e3,
-        m.latency.max_us() as f64 / 1e3,
-        m.queue_latency.mean_us() / 1e3,
-    );
-    println!(
-        "  mean batch={:.2}  OP switches={} budget violations={}",
-        m.mean_batch(),
-        controller.switches,
-        controller.budget_violations
-    );
-    for (i, c) in m.per_op_requests.iter().enumerate() {
-        println!(
-            "  OP{i}: {c} requests ({:.1}%)",
-            100.0 * *c as f64 / m.completed.max(1) as f64
-        );
-    }
-    println!(
-        "  mean relative multiplication power over run: {:.2}%",
-        100.0 * energy / submitted.max(1) as f64
-    );
-    Ok(())
-}
-
-fn cmd_report(args: &Args) -> Result<()> {
-    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig3");
-    let exp = Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    match which {
-        "fig1" => {
-            // sigma_g vector + sigma_e matrix dump (the Fig. 1 pipeline output)
-            let se = errmodel::sigma_e(&db, &exp.stats);
-            let mut rows = Vec::new();
-            for (k, name) in exp.layer_names.iter().enumerate() {
-                rows.push(Json::obj(vec![
-                    ("layer", Json::str(name.clone())),
-                    ("sigma_g", Json::num(exp.sigma_g[k])),
-                    (
-                        "sigma_e",
-                        Json::Arr(se.column(k).into_iter().map(Json::num).collect()),
-                    ),
-                ]));
-            }
-            println!("{}", json::to_string_pretty(&Json::Arr(rows)));
-        }
-        "fig2" => {
-            // scaled preference vectors + cluster assignment per (OP, layer)
-            let se = errmodel::sigma_e(&db, &exp.stats);
-            let usable =
-                qos_nets::selection::usable_multipliers(&se, &exp.sigma_g, &exp.scales());
-            let points =
-                qos_nets::selection::preference_vectors(&se, &exp.sigma_g, &exp.scales(), &usable);
-            let (_, sol) = pipeline::run_search(&exp, &db);
-            let l = exp.layer_names.len();
-            let mut rows = Vec::new();
-            for (idx, p) in points.iter().enumerate() {
-                rows.push(Json::obj(vec![
-                    ("op", Json::num((idx / l) as f64)),
-                    ("layer", Json::str(exp.layer_names[idx % l].clone())),
-                    (
-                        "preference",
-                        Json::Arr(p.iter().map(|&x| Json::num(x)).collect()),
-                    ),
-                    (
-                        "multiplier",
-                        Json::num(sol.assignment[idx / l][idx % l] as f64),
-                    ),
-                ]));
-            }
-            println!("{}", json::to_string_pretty(&Json::Arr(rows)));
-        }
-        "fig3" => {
-            // per-layer multiplier assignment per OP + power lines (paper Fig. 3)
-            let assignments = pipeline::read_assignment(&exp)?;
-            anyhow::ensure!(!assignments.is_empty(), "run `search` first");
-            for (i, (scale, power, amap)) in assignments.iter().enumerate() {
-                println!("# OP{i} scale={scale} relative_power={:.4}", power);
-                println!("layer_index,layer,multiplier_id,multiplier,power");
-                for (k, name) in exp.layer_names.iter().enumerate() {
-                    let mid = *amap.get(name).unwrap_or(&0);
-                    println!("{k},{name},{mid},{},{:.3}", db.specs[mid].name, db.power(mid));
-                }
-                println!();
-            }
-        }
-        other => bail!("unknown report {other:?} (fig1|fig2|fig3)"),
-    }
-    Ok(())
-}
-
-/// Integration self-test: PJRT kernel artifact vs native lutmm, and PJRT
-/// model artifact vs native engine on a handful of images.
-fn cmd_selftest(args: &Args) -> Result<()> {
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let exp = Experiment::load(artifacts, args.get_or("exp", "quick"))?;
-    let db = load_db(args)?;
-    let rt = runtime::Runtime::cpu()?;
-
-    // --- kernel artifact vs native hot loop (bit-exact) ---
-    let kernel = rt.load(&exp.dir, "kernel")?;
-    let (m, k, n) = {
-        let s = &kernel.signature;
-        (s[0].shape[0], s[0].shape[1], s[1].shape[1])
-    };
-    let mut rng = qos_nets::util::rng::Rng::new(1);
-    let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
-    let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
-    let mid = 9; // bam7
-    let (za, zw, zo) = (128i32, 117i32, 30i32);
-    let s_req = 1e-4f32;
-    let inputs = vec![
-        runtime::literal_i32(&a, &[m, k])?,
-        runtime::literal_i32(&w, &[k, n])?,
-        runtime::literal_i32(db.lut(mid), &[256, 256])?,
-        runtime::literal_f32(&[s_req], &[1])?,
-        runtime::literal_i32(&[za, zw, zo], &[3])?,
-    ];
-    let pjrt_out = kernel.execute_i32(&inputs)?;
-
-    // native recompute
-    use qos_nets::engine::lutmm;
-    let mut at = vec![0i32; k * m];
-    for mm in 0..m {
-        for kk in 0..k {
-            at[kk * m + mm] = a[mm * k + kk];
-        }
-    }
-    let mut wt = vec![0i32; n * k];
-    for kk in 0..k {
-        for nn in 0..n {
-            wt[nn * k + kk] = w[kk * n + nn];
-        }
-    }
-    let wlut = lutmm::transpose_lut(db.lut(mid));
-    let mut acc = vec![0i32; m * n];
-    lutmm::lut_matmul_acc(&at, &wt, &wlut, m, k, n, &mut acc);
-    let (sa, sw) = lutmm::code_sums(&at, &wt, m, k, n);
-    lutmm::apply_corrections(&mut acc, &sa, &sw, m, k, n, za, zw);
-    let native: Vec<i32> = acc
-        .iter()
-        .map(|&c| {
-            let q = (c as f32 * s_req).round_ties_even() + zo as f32;
-            q.clamp(0.0, 255.0) as i32
-        })
-        .collect();
-    anyhow::ensure!(pjrt_out == native, "kernel artifact != native lutmm");
-    println!("selftest: PJRT kernel artifact == native LUT matmul ({m}x{k}x{n}) OK");
-
-    // --- model artifact vs native engine (surrogate-vs-exact tolerance) ---
-    let model = rt.load(&exp.dir, "model")?;
-    let batch = model.export_batch;
-    let (images, labels) = exp.load_testset()?;
-    let elems = exp.image_elems();
-    let classes = exp.num_classes();
-    let (lr_u, lr_v, max_rank) = runtime::load_lowrank(artifacts)?;
-    let tensors = exp.load_params_tensors()?;
-    let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-    let amap: HashMap<String, usize> = if assignments.is_empty() {
-        exp.layer_names.iter().map(|l| (l.clone(), 0usize)).collect()
-    } else {
-        assignments.last().unwrap().2.clone()
-    };
-    let bufs =
-        runtime::build_op_buffers(&model, &amap, &lr_u, &lr_v, max_rank, &tensors, &HashMap::new())?;
-    let x = runtime::literal_f32(
-        &images[..batch * elems],
-        &[
-            batch,
-            exp.graph.input_shape[0],
-            exp.graph.input_shape[1],
-            exp.graph.input_shape[2],
-        ],
-    )?;
-    let pjrt_logits = model.execute_with_op(x, &bufs)?;
-
-    let op = pipeline::build_operating_point(&exp, "st", amap, 1.0, None)?;
-    let mut eng = qos_nets::engine::Engine::new(exp.graph.clone(), db.clone());
-    let native_logits = eng.forward(&op, &images[..batch * elems], batch)?;
-    let mut agree = 0;
-    for b in 0..batch {
-        let arg = |v: &[f32]| {
-            v.iter()
-                .enumerate()
-                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
-        };
-        let p = arg(&pjrt_logits[b * classes..(b + 1) * classes]);
-        let nl = arg(&native_logits[b * classes..(b + 1) * classes]);
-        if p == nl {
-            agree += 1;
-        }
-    }
-    println!(
-        "selftest: PJRT model vs native engine top-1 agreement {agree}/{batch} (labels {:?})",
-        &labels[..batch.min(4)]
-    );
-    anyhow::ensure!(agree * 10 >= batch * 7, "PJRT/native agreement too low");
-    println!("selftest OK");
-    Ok(())
 }

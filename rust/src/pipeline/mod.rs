@@ -1,5 +1,5 @@
 //! End-to-end orchestration: glue between exported artifacts, the search
-//! algorithms, the native engine and the report generators.
+//! algorithms, the unified inference backends and the report generators.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -7,7 +7,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{self, Engine, OperatingPoint};
+use crate::backend::{self, Backend, NativeBackend};
+use crate::engine::OperatingPoint;
 use crate::errmodel::{self, SigmaE};
 use crate::muldb::MulDb;
 use crate::nn::{self, Graph, LayerStats, ModelParams};
@@ -206,26 +207,53 @@ pub fn build_operating_point(
     })
 }
 
-/// Evaluate one operating point on the exported test set.
+/// Build the full OP ladder for an experiment from assignment.json,
+/// applying the per-OP retraining overlays when present (`mode`:
+/// "none" | "bn" | "full").
+pub fn load_operating_points(exp: &Experiment, mode: &str) -> Result<Vec<OperatingPoint>> {
+    let assignments = read_assignment(exp)?;
+    let mut ops = Vec::new();
+    for (i, (_scale, power, amap)) in assignments.into_iter().enumerate() {
+        let overlay = match mode {
+            "bn" => {
+                let p = exp.dir.join(format!("bn_op{i}.qten"));
+                p.exists().then_some(p)
+            }
+            "full" => {
+                let p = exp.dir.join(format!("params_full_op{i}.qten"));
+                p.exists().then_some(p)
+            }
+            _ => None,
+        };
+        if matches!(mode, "bn" | "full") && overlay.is_none() {
+            eprintln!(
+                "warning: OP{i}: no {mode} overlay found (run stage B retraining); using base params"
+            );
+        }
+        ops.push(build_operating_point(
+            exp,
+            &format!("op{i}"),
+            amap,
+            power,
+            overlay.as_deref(),
+        )?);
+    }
+    Ok(ops)
+}
+
+/// Evaluate one operating point on the exported test set (native
+/// backend; `backend::evaluate` is the shared implementation).
 pub fn eval_operating_point(
     exp: &Experiment,
     db: &Arc<MulDb>,
     op: &OperatingPoint,
     batch: usize,
     limit: Option<usize>,
-) -> Result<engine::EvalResult> {
+) -> Result<backend::EvalResult> {
     let (images, labels) = exp.load_testset()?;
-    let mut eng = Engine::new(exp.graph.clone(), db.clone());
-    engine::evaluate(
-        &mut eng,
-        op,
-        &images,
-        &labels,
-        exp.image_elems(),
-        exp.num_classes(),
-        batch,
-        limit,
-    )
+    let mut be = NativeBackend::new(exp.graph.clone(), db.clone());
+    be.prepare(std::slice::from_ref(op))?;
+    backend::evaluate(&mut be, 0, &images, &labels, exp.image_elems(), batch, limit)
 }
 
 /// The exact-everywhere baseline OP (quantized but accurate multipliers).

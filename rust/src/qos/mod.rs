@@ -210,6 +210,51 @@ mod tests {
     }
 
     #[test]
+    fn counts_budget_violations_while_over_budget() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        assert_eq!(c.observe(1.0, t), Some(0)); // op0 (0.85), within budget
+        assert_eq!(c.budget_violations, 0);
+        // budget collapses below even the cheapest rung: violation is
+        // counted and the controller falls to the most frugal OP
+        assert_eq!(c.observe(0.5, t), Some(2));
+        assert_eq!(c.budget_violations, 1);
+        // still over budget at the floor: every sample counts a violation
+        assert_eq!(c.observe(0.5, t), None);
+        assert_eq!(c.observe(0.5, t), None);
+        assert_eq!(c.budget_violations, 3);
+        // back within budget: no further violations accrue
+        assert_eq!(c.observe(0.6, t), None);
+        assert_eq!(c.budget_violations, 3);
+    }
+
+    #[test]
+    fn min_dwell_blocks_upgrade_until_elapsed_then_allows_it() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::from_millis(100),
+            },
+        );
+        let t0 = Instant::now();
+        assert_eq!(c.observe(1.0, t0), Some(0)); // first upgrade: no prior switch
+        assert_eq!(c.observe(0.58, t0), Some(2)); // collapse: immediate downgrade
+        // ample budget again, but dwell not elapsed: upgrade deferred
+        for ms in [1u64, 20, 50, 99] {
+            assert_eq!(c.observe(1.0, t0 + Duration::from_millis(ms)), None);
+        }
+        assert_eq!(c.observe(1.0, t0 + Duration::from_millis(101)), Some(0));
+        assert_eq!(c.switches, 3);
+    }
+
+    #[test]
     fn traces_are_deterministic_and_bounded() {
         for kind in ["sine", "steps", "walk"] {
             let a = budget_trace(kind, 200, 9);

@@ -5,19 +5,29 @@
 //!
 //!   clients ---> ingress channel ---> batcher thread ---> worker channel
 //!                                                     \--> N worker threads
-//!                                                          (one Engine each)
+//!                                                          (one Backend each)
 //!
-//! The current operating point is an `Arc<AtomicUsize>` index into a
-//! shared OP table; switching is a single atomic store (the engine holds
-//! every LUT already — the paper's "lightweight switching" realized).
+//! The server is generic over [`Backend`], so the same batching /
+//! switching / metrics machinery serves the native LUT engine, the PJRT
+//! runtime, or any future substrate.  Each worker constructs its own
+//! backend via a factory *inside* its thread (backends need not be
+//! `Send`) and calls `prepare` on the shared [`OpTable`] before taking
+//! work, so the hot path never compiles or caches anything.
+//!
+//! The current operating point is an `Arc<AtomicUsize>` index into the
+//! shared OP table; switching is a single atomic store (every backend
+//! holds all OPs resident — the paper's "lightweight switching"
+//! realized).
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::engine::{Engine, OperatingPoint};
+use crate::backend::{Backend, NativeBackend, OpTable};
+use crate::engine::OperatingPoint;
 use crate::muldb::MulDb;
 use crate::nn::Graph;
 use crate::util::stats::LatencyHistogram;
@@ -84,25 +94,29 @@ impl ServerMetrics {
     }
 }
 
-pub struct Server {
+pub struct Server<B: Backend> {
     ingress: mpsc::Sender<Request>,
     current_op: Arc<AtomicUsize>,
-    ops: Arc<Vec<OperatingPoint>>,
+    ops: OpTable,
     metrics: Arc<Mutex<ServerMetrics>>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicUsize,
+    _backend: PhantomData<fn() -> B>,
 }
 
-impl Server {
-    pub fn start(
-        graph: Arc<Graph>,
-        db: Arc<MulDb>,
-        ops: Vec<OperatingPoint>,
-        cfg: BatcherConfig,
-    ) -> Result<Self> {
-        assert!(!ops.is_empty());
-        let ops = Arc::new(ops);
+impl<B: Backend + 'static> Server<B> {
+    /// Start the batcher + `cfg.workers` workers.  `factory(w)` runs on
+    /// worker `w`'s own thread to build its backend (backends need not
+    /// be `Send`); each backend then `prepare`s the shared OP table
+    /// before serving.  Blocks until every worker has reported its
+    /// prepare outcome and fails if none came up — a server with zero
+    /// live workers would otherwise accept requests and answer nothing.
+    pub fn start<F>(factory: F, ops: OpTable, cfg: BatcherConfig) -> Result<Self>
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
         let current_op = Arc::new(AtomicUsize::new(0));
         let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len())));
         let stop = Arc::new(AtomicBool::new(false));
@@ -122,60 +136,55 @@ impl Server {
             }));
         }
 
-        // workers
-        for _w in 0..cfg.workers.max(1) {
+        // workers; each reports construction/prepare success or failure
+        let n_workers = cfg.workers.max(1);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..n_workers {
+            let factory = factory.clone();
             let rx = batch_rx.clone();
-            let graph = graph.clone();
-            let db = db.clone();
             let ops = ops.clone();
             let current = current_op.clone();
             let metrics = metrics.clone();
+            let ready = ready_tx.clone();
             threads.push(std::thread::spawn(move || {
-                let mut engine = Engine::new(graph, db);
-                loop {
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    if batch.is_empty() {
-                        continue;
+                let built = (*factory)(w).and_then(|mut b| {
+                    b.prepare(ops.ops())?;
+                    Ok(b)
+                });
+                let mut backend = match built {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
                     }
-                    let op_idx = current.load(Ordering::Acquire);
-                    let op = &ops[op_idx];
-                    let started = Instant::now();
-                    let b = batch.len();
-                    let elems = batch[0].image.len();
-                    let mut images = Vec::with_capacity(b * elems);
-                    for r in &batch {
-                        images.extend_from_slice(&r.image);
+                    Err(e) => {
+                        eprintln!("worker {w}: backend init failed: {e:#}");
+                        let _ = ready.send(Err(e));
+                        return;
                     }
-                    let logits = match engine.forward(op, &images, b) {
-                        Ok(l) => l,
-                        Err(_) => continue,
-                    };
-                    let classes = logits.len() / b;
-                    let done = Instant::now();
-                    let mut m = metrics.lock().unwrap();
-                    m.batches += 1;
-                    m.batch_size_sum += b as u64;
-                    for (i, r) in batch.into_iter().enumerate() {
-                        let queue_us = started.duration_since(r.enqueued).as_micros() as u64;
-                        let total_us = done.duration_since(r.enqueued).as_micros() as u64;
-                        m.completed += 1;
-                        m.per_op_requests[op_idx] += 1;
-                        m.latency.record_us(total_us);
-                        m.queue_latency.record_us(queue_us);
-                        let _ = r.resp.send(Response {
-                            id: r.id,
-                            logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                            op_index: op_idx,
-                            queue_us,
-                            total_us,
-                        });
-                    }
-                }
+                };
+                worker_loop(&mut backend, &rx, &current, &metrics);
             }));
+        }
+        drop(ready_tx);
+
+        let mut live = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => live += 1,
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => break, // worker died without reporting
+            }
+        }
+        if live == 0 {
+            stop.store(true, Ordering::Release);
+            drop(ingress_tx);
+            for t in threads.drain(..) {
+                let _ = t.join();
+            }
+            return Err(first_err
+                .unwrap_or_else(|| anyhow!("no inference worker came up"))
+                .context("server start: every worker failed"));
         }
 
         Ok(Server {
@@ -186,6 +195,7 @@ impl Server {
             stop,
             threads,
             next_id: AtomicUsize::new(0),
+            _backend: PhantomData,
         })
     }
 
@@ -213,6 +223,10 @@ impl Server {
     }
 
     pub fn ops(&self) -> &[OperatingPoint] {
+        self.ops.ops()
+    }
+
+    pub fn op_table(&self) -> &OpTable {
         &self.ops
     }
 
@@ -227,8 +241,77 @@ impl Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        let m = self.metrics.lock().unwrap().clone();
-        m
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Server<NativeBackend> {
+    /// Convenience: serve the native bit-exact LUT engine (one per
+    /// worker) over a shared operating-point table.
+    pub fn start_native(
+        graph: Arc<Graph>,
+        db: Arc<MulDb>,
+        ops: OpTable,
+        cfg: BatcherConfig,
+    ) -> Result<Self> {
+        Server::start(
+            move |_w| Ok(NativeBackend::new(graph.clone(), db.clone())),
+            ops,
+            cfg,
+        )
+    }
+}
+
+fn worker_loop<B: Backend>(
+    backend: &mut B,
+    rx: &Arc<Mutex<mpsc::Receiver<Vec<Request>>>>,
+    current: &Arc<AtomicUsize>,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { break };
+        if batch.is_empty() {
+            continue;
+        }
+        let op_idx = current.load(Ordering::Acquire);
+        let started = Instant::now();
+        let b = batch.len();
+        let elems = batch[0].image.len();
+        let mut images = Vec::with_capacity(b * elems);
+        for r in &batch {
+            images.extend_from_slice(&r.image);
+        }
+        let logits = match backend.forward(op_idx, &images, b) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("{} backend: dropping batch of {b}: {e:#}", backend.name());
+                continue;
+            }
+        };
+        let classes = logits.len() / b;
+        let done = Instant::now();
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.batch_size_sum += b as u64;
+        for (i, r) in batch.into_iter().enumerate() {
+            let queue_us = started.duration_since(r.enqueued).as_micros() as u64;
+            let total_us = done.duration_since(r.enqueued).as_micros() as u64;
+            m.completed += 1;
+            m.per_op_requests[op_idx] += 1;
+            m.latency.record_us(total_us);
+            m.queue_latency.record_us(queue_us);
+            let _ = r.resp.send(Response {
+                id: r.id,
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                op_index: op_idx,
+                queue_us,
+                total_us,
+            });
+        }
     }
 }
 
@@ -241,8 +324,20 @@ fn batcher_loop(
     let mut pending: Vec<Request> = Vec::new();
     let mut deadline: Option<Instant> = None;
     loop {
-        if stop.load(Ordering::Acquire) && pending.is_empty() {
-            // keep draining until the channel disconnects
+        if stop.load(Ordering::Acquire) {
+            // stop requested: drain whatever is already queued, flush the
+            // final partial batch and exit promptly (shutdown no longer
+            // relies solely on channel disconnect)
+            while let Ok(req) = ingress.try_recv() {
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    let _ = out.send(std::mem::take(&mut pending));
+                }
+            }
+            if !pending.is_empty() {
+                let _ = out.send(std::mem::take(&mut pending));
+            }
+            break;
         }
         let timeout = match deadline {
             Some(d) => d.saturating_duration_since(Instant::now()),
@@ -272,5 +367,110 @@ fn batcher_loop(
                 break;
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(val: f32) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id: 0,
+                image: vec![val, 0.0],
+                enqueued: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    fn spawn_batcher(
+        cfg: BatcherConfig,
+    ) -> (
+        mpsc::Sender<Request>,
+        mpsc::Receiver<Vec<Request>>,
+        Arc<AtomicBool>,
+        std::thread::JoinHandle<()>,
+    ) {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || batcher_loop(in_rx, out_tx, cfg, stop2));
+        (in_tx, out_rx, stop, h)
+    }
+
+    #[test]
+    fn batcher_flushes_when_size_reached() {
+        // deadline far away: only the size trigger can flush
+        let (in_tx, out_rx, _stop, h) = spawn_batcher(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(30),
+            workers: 1,
+        });
+        let mut resp_rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i as f32);
+            resp_rxs.push(rx);
+            in_tx.send(r).unwrap();
+        }
+        let batch = out_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch.len(), 4);
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_flushes_partial_batch_at_deadline() {
+        // size trigger unreachable: only the deadline can flush
+        let (in_tx, out_rx, _stop, h) = spawn_batcher(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(20),
+            workers: 1,
+        });
+        let mut resp_rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i as f32);
+            resp_rxs.push(rx);
+            in_tx.send(r).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = out_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "deadline flush took {:?}",
+            t0.elapsed()
+        );
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_exits_promptly_when_stopped_and_drained() {
+        let (in_tx, out_rx, stop, h) = spawn_batcher(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+        });
+        let (r, _resp_rx) = req(1.0);
+        in_tx.send(r).unwrap();
+        stop.store(true, Ordering::Release);
+        let t0 = Instant::now();
+        // the ingress sender stays alive: only the stop flag can end the
+        // loop (this is the dead-branch regression test)
+        let batches: Vec<Vec<Request>> = out_rx.iter().collect();
+        h.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "stop took {:?}",
+            t0.elapsed()
+        );
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 1, "pending request must be flushed, not dropped");
+        drop(in_tx);
     }
 }

@@ -1,0 +1,208 @@
+//! Backend-trait tests: the unified inference API over the native
+//! engine, plus the stub backend driving the evaluate loop, the generic
+//! batching server and the QoS controller.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use common::{build_tiny, stub_op};
+use qos_nets::backend::{self, Backend, NativeBackend, OpTable, StubBackend};
+use qos_nets::engine::Engine;
+use qos_nets::qos::{QosConfig, QosController};
+use qos_nets::server::{BatcherConfig, Server};
+
+/// Acceptance check: OP switching through the trait produces logits
+/// identical to the pre-refactor direct-engine path on a fixed seed.
+#[test]
+fn native_backend_op_switching_matches_direct_engine() {
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut frugal = op.clone();
+    frugal.name = "frugal".into();
+    frugal.assignment.insert("c1".to_string(), 9); // bam7
+    frugal.relative_power = 0.6;
+    let ops = vec![op, frugal];
+
+    let mut be = NativeBackend::new(graph.clone(), db.clone());
+    be.prepare(&ops).unwrap();
+
+    // the reference path: one engine, per-OP forward (what `evaluate`
+    // and the server did before the Backend trait existed)
+    let mut eng = Engine::new(graph, db);
+
+    // interleave indices to exercise live switching in both directions
+    for &i in &[0usize, 1, 0, 1, 1, 0] {
+        let got = be.forward(i, &images, 2).unwrap();
+        let want = eng.forward(&ops[i], &images, 2).unwrap();
+        assert_eq!(got, want, "op {i}: trait path diverged from engine path");
+    }
+    // both rungs must actually differ, or the switch test is vacuous
+    let a = be.forward(0, &images, 2).unwrap();
+    let b = be.forward(1, &images, 2).unwrap();
+    assert_ne!(a, b, "operating points produced identical logits");
+}
+
+#[test]
+fn native_backend_rejects_unprepared_index() {
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut be = NativeBackend::new(graph, db);
+    be.prepare(std::slice::from_ref(&op)).unwrap();
+    assert!(be.forward(1, &images, 2).is_err());
+}
+
+#[test]
+fn backend_reports_model_classes() {
+    let (graph, db, ..) = build_tiny();
+    let be = NativeBackend::new(graph, db);
+    assert_eq!(be.num_classes(), 2);
+    assert_eq!(be.name(), "native");
+}
+
+#[test]
+fn evaluate_counts_top1_and_top5_via_stub() {
+    // stub scoring: argmax == first pixel, top-5 == {x0 .. x0+4} mod C
+    let classes = 10usize;
+    let mut be = StubBackend::new(classes);
+    let n = 10usize;
+    let images: Vec<f32> = (0..n).map(|i| i as f32).collect(); // 1 elem/image
+    let labels: Vec<i32> = (0..n)
+        .map(|i| match i {
+            0..=4 => i as i32,                      // top-1 hits
+            5..=7 => ((i + 2) % classes) as i32,    // top-5 only
+            _ => ((i + 7) % classes) as i32,        // misses
+        })
+        .collect();
+    let r = backend::evaluate(&mut be, 0, &images, &labels, 1, 4, None).unwrap();
+    assert_eq!(r.n, 10);
+    assert!((r.top1 - 0.5).abs() < 1e-9, "top1 {}", r.top1);
+    assert!((r.top5 - 0.8).abs() < 1e-9, "top5 {}", r.top5);
+    // batch 4 over 10 samples -> 4 + 4 + 2
+    assert_eq!(be.forward_calls, vec![(0, 4), (0, 4), (0, 2)]);
+}
+
+#[test]
+fn evaluate_limit_caps_the_sample_count() {
+    let mut be = StubBackend::new(4);
+    let images: Vec<f32> = (0..8).map(|i| (i % 4) as f32).collect();
+    let labels: Vec<i32> = (0..8).map(|i| (i % 4) as i32).collect();
+    let r = backend::evaluate(&mut be, 0, &images, &labels, 1, 3, Some(5)).unwrap();
+    assert_eq!(r.n, 5);
+    assert!((r.top1 - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn generic_server_routes_batches_through_stub_backend() {
+    let table = OpTable::new(vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4)),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(3),
+            workers: 1,
+        },
+    )
+    .unwrap();
+
+    // phase 1 on OP0, then switch and serve phase 2 on OP1
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        if i == 4 {
+            std::thread::sleep(Duration::from_millis(40)); // drain phase 1
+            server.set_operating_point(1);
+        }
+        rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+    }
+    let mut per_op = [0usize; 2];
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.logits.len(), 4);
+        // stub semantics: argmax == first pixel
+        let arg = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        assert_eq!(arg, i % 4);
+        per_op[resp.op_index] += 1;
+    }
+    assert!(per_op[0] >= 4, "per_op {per_op:?}");
+    assert!(per_op[1] >= 1, "per_op {per_op:?}");
+    let m = server.shutdown();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.per_op_requests.iter().sum::<u64>(), 8);
+}
+
+#[test]
+fn server_deadline_flush_completes_partial_batches() {
+    // a single sub-max_batch request must still complete, via the
+    // deadline-triggered flush
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(3)),
+        table,
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            workers: 1,
+        },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let rx = server.submit(vec![2.0, 0.0]).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(2));
+    assert_eq!(resp.logits.len(), 3);
+    let m = server.shutdown();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.batches, 1);
+}
+
+#[test]
+fn server_start_fails_when_every_worker_fails() {
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let res = Server::<StubBackend>::start(
+        |w| Err(anyhow::anyhow!("worker {w}: no accelerator")),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+        },
+    );
+    let err = format!("{:#}", res.err().expect("start must fail with zero live workers"));
+    assert!(err.contains("every worker failed"), "unexpected error: {err}");
+}
+
+#[test]
+fn qos_controller_drives_generic_server_op_ladder() {
+    let table = OpTable::new(vec![
+        stub_op("accurate", 0.9),
+        stub_op("mid", 0.7),
+        stub_op("frugal", 0.5),
+    ]);
+    let mut controller = QosController::new(
+        table.ladder(),
+        QosConfig {
+            upgrade_margin: 0.0,
+            min_dwell: Duration::ZERO,
+        },
+    );
+    let server = Server::start(|_w| Ok(StubBackend::new(4)), table, BatcherConfig::default()).unwrap();
+
+    // budget walk: plenty -> collapse -> recovery; the controller output
+    // is applied to the server verbatim
+    let t = Instant::now();
+    for (budget, expect_op) in [(1.0, 0usize), (0.55, 2), (0.75, 1), (1.0, 0)] {
+        if let Some(idx) = controller.observe(budget, t + Duration::from_millis(1)) {
+            server.set_operating_point(idx);
+        }
+        assert_eq!(server.operating_point(), expect_op, "budget {budget}");
+        let rx = server.submit(vec![1.0, 0.0]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.op_index, expect_op);
+    }
+    server.shutdown();
+}

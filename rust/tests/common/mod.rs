@@ -1,0 +1,144 @@
+//! Shared in-memory fixtures for the integration test crates: a tiny
+//! 1-conv + dense graph with hand-built parameters, plus a naive f32
+//! reference convolution to check the engine against.
+
+#![allow(dead_code)] // each test crate uses a subset of these helpers
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use qos_nets::engine::OperatingPoint;
+use qos_nets::muldb::MulDb;
+use qos_nets::nn::{Graph, LayerParams, ModelParams};
+use qos_nets::util::json;
+
+pub fn tiny_graph_json() -> json::Json {
+    json::parse(
+        r#"{
+        "name": "tiny", "input_shape": [4, 4, 2], "total_macs": 1184,
+        "nodes": [
+          {"id":0,"kind":"input","inputs":[],"name":"input","out_shape":[4,4,2]},
+          {"id":1,"kind":"conv","inputs":[0],"name":"c1","out_shape":[4,4,4],
+           "cin":2,"cout":4,"ksize":3,"stride":1,"pad":1,"groups":1,
+           "has_bn":false,"act":"relu","macs_per_out":18,"macs_total":1152,
+           "quant":{"in":{"scale":0.01,"zero_point":128},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":2,"kind":"gap","inputs":[1],"name":"gap","out_shape":[4]},
+          {"id":3,"kind":"dense","inputs":[2],"name":"fc","out_shape":[2],
+           "cin":4,"cout":2,"ksize":0,"stride":1,"pad":0,"groups":1,
+           "has_bn":false,"act":"none","macs_per_out":4,"macs_total":8,
+           "quant":{"in":{"scale":0.02,"zero_point":100},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":4,"kind":"output","inputs":[3],"name":"output","out_shape":[2]}
+        ]}"#,
+    )
+    .unwrap()
+}
+
+/// Naive float conv reference with quantize->dequantize operand semantics.
+#[allow(clippy::needless_range_loop)]
+pub fn naive_reference(images: &[f32], w1: &[f32], wfc: &[f32]) -> Vec<f32> {
+    let (h, wd, cin, cout) = (4usize, 4usize, 2usize, 4usize);
+    let q = |x: f32, s: f32, z: i32| -> f32 {
+        let code = ((x / s).round_ties_even() as i32 + z).clamp(0, 255);
+        s * (code - z) as f32
+    };
+    // conv, pad 1, stride 1, relu
+    let mut conv = vec![0f32; h * wd * cout];
+    for oy in 0..h {
+        for ox in 0..wd {
+            for oc in 0..cout {
+                let mut acc = 0f32;
+                for ky in 0..3usize {
+                    for kx in 0..3usize {
+                        let iy = oy as isize + ky as isize - 1;
+                        let ix = ox as isize + kx as isize - 1;
+                        if iy < 0 || iy >= h as isize || ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        for ic in 0..cin {
+                            let xv = q(images[((iy as usize) * wd + ix as usize) * cin + ic], 0.01, 128);
+                            let wv = q(w1[((ky * 3 + kx) * cin + ic) * cout + oc], 0.02, 128);
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                conv[(oy * wd + ox) * cout + oc] = acc.max(0.0);
+            }
+        }
+    }
+    // gap
+    let mut pooled = vec![0f32; cout];
+    for pos in 0..h * wd {
+        for c in 0..cout {
+            pooled[c] += conv[pos * cout + c];
+        }
+    }
+    for c in 0..cout {
+        pooled[c] /= (h * wd) as f32;
+    }
+    // dense
+    let mut out = vec![0f32; 2];
+    for n in 0..2 {
+        for k in 0..cout {
+            out[n] += q(pooled[k], 0.02, 100) * q(wfc[k * 2 + n], 0.02, 128);
+        }
+    }
+    out
+}
+
+/// The tiny fixture: graph + multiplier family + exact OP + a batch of
+/// two images (and the raw float weights for the naive reference).
+pub fn build_tiny() -> (Arc<Graph>, Arc<MulDb>, OperatingPoint, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let graph = Arc::new(Graph::from_json(&tiny_graph_json()).unwrap());
+    let db = Arc::new(MulDb::generate());
+    let mut rng = qos_nets::util::rng::Rng::new(11);
+    let w1: Vec<f32> = (0..3 * 3 * 2 * 4).map(|_| rng.normal() as f32 * 0.2).collect();
+    let wfc: Vec<f32> = (0..4 * 2).map(|_| rng.normal() as f32 * 0.3).collect();
+    let images: Vec<f32> = (0..2 * 4 * 4 * 2).map(|_| rng.f64() as f32).collect();
+
+    let q_codes = |w: &[f32], s: f32, z: i32| -> Vec<i32> {
+        w.iter()
+            .map(|&x| ((x / s).round_ties_even() as i32 + z).clamp(0, 255))
+            .collect()
+    };
+    let mut layers = HashMap::new();
+    layers.insert(
+        "c1".to_string(),
+        LayerParams {
+            w_codes: q_codes(&w1, 0.02, 128),
+            w_shape: vec![3, 3, 2, 4],
+            post_scale: vec![0.01 * 0.02; 4],
+            post_bias: vec![0.0; 4],
+        },
+    );
+    layers.insert(
+        "fc".to_string(),
+        LayerParams {
+            w_codes: q_codes(&wfc, 0.02, 128),
+            w_shape: vec![4, 2],
+            post_scale: vec![0.02 * 0.02; 2],
+            post_bias: vec![0.0; 2],
+        },
+    );
+    let op = OperatingPoint {
+        name: "exact".into(),
+        assignment: [("c1".to_string(), 0usize), ("fc".to_string(), 0usize)]
+            .into_iter()
+            .collect(),
+        params: ModelParams { layers },
+        relative_power: 1.0,
+    };
+    (graph, db, op, images, w1, wfc)
+}
+
+/// A parameter-free OperatingPoint for stub-backend tests (the stub
+/// never reads params; only name/power drive the ladder).
+pub fn stub_op(name: &str, relative_power: f64) -> OperatingPoint {
+    OperatingPoint {
+        name: name.to_string(),
+        assignment: HashMap::new(),
+        params: ModelParams {
+            layers: HashMap::new(),
+        },
+        relative_power,
+    }
+}

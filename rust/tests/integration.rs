@@ -2,141 +2,20 @@
 //!
 //! Tests that need the exported `artifacts/quick` bundle skip gracefully
 //! when it is absent (run `make artifacts` first); everything else builds
-//! its fixtures in-memory.
+//! its fixtures in-memory (see `tests/common/mod.rs`).
 
-use std::collections::HashMap;
+mod common;
+
 use std::path::Path;
 use std::sync::Arc;
 
-use qos_nets::engine::{Engine, OperatingPoint};
+use common::{build_tiny, naive_reference};
+use qos_nets::engine::Engine;
 use qos_nets::muldb::MulDb;
-use qos_nets::nn::{Graph, LayerParams, ModelParams};
 use qos_nets::pipeline::{self, Experiment};
-use qos_nets::util::json;
 
 fn artifacts_ready() -> bool {
     Path::new("artifacts/quick/exp.json").exists()
-}
-
-// ---------------------------------------------------------------------------
-// In-memory fixture: a 1-conv + dense graph with hand-built parameters,
-// checked against a naive f32 reference convolution.
-// ---------------------------------------------------------------------------
-
-fn tiny_graph_json() -> json::Json {
-    json::parse(
-        r#"{
-        "name": "tiny", "input_shape": [4, 4, 2], "total_macs": 1184,
-        "nodes": [
-          {"id":0,"kind":"input","inputs":[],"name":"input","out_shape":[4,4,2]},
-          {"id":1,"kind":"conv","inputs":[0],"name":"c1","out_shape":[4,4,4],
-           "cin":2,"cout":4,"ksize":3,"stride":1,"pad":1,"groups":1,
-           "has_bn":false,"act":"relu","macs_per_out":18,"macs_total":1152,
-           "quant":{"in":{"scale":0.01,"zero_point":128},"w":{"scale":0.02,"zero_point":128}}},
-          {"id":2,"kind":"gap","inputs":[1],"name":"gap","out_shape":[4]},
-          {"id":3,"kind":"dense","inputs":[2],"name":"fc","out_shape":[2],
-           "cin":4,"cout":2,"ksize":0,"stride":1,"pad":0,"groups":1,
-           "has_bn":false,"act":"none","macs_per_out":4,"macs_total":8,
-           "quant":{"in":{"scale":0.02,"zero_point":100},"w":{"scale":0.02,"zero_point":128}}},
-          {"id":4,"kind":"output","inputs":[3],"name":"output","out_shape":[2]}
-        ]}"#,
-    )
-    .unwrap()
-}
-
-/// Naive float conv reference with quantize->dequantize operand semantics.
-#[allow(clippy::needless_range_loop)]
-fn naive_reference(images: &[f32], w1: &[f32], wfc: &[f32]) -> Vec<f32> {
-    let (h, wd, cin, cout) = (4usize, 4usize, 2usize, 4usize);
-    let q = |x: f32, s: f32, z: i32| -> f32 {
-        let code = ((x / s).round_ties_even() as i32 + z).clamp(0, 255);
-        s * (code - z) as f32
-    };
-    // conv, pad 1, stride 1, relu
-    let mut conv = vec![0f32; h * wd * cout];
-    for oy in 0..h {
-        for ox in 0..wd {
-            for oc in 0..cout {
-                let mut acc = 0f32;
-                for ky in 0..3usize {
-                    for kx in 0..3usize {
-                        let iy = oy as isize + ky as isize - 1;
-                        let ix = ox as isize + kx as isize - 1;
-                        if iy < 0 || iy >= h as isize || ix < 0 || ix >= wd as isize {
-                            continue;
-                        }
-                        for ic in 0..cin {
-                            let xv = q(images[((iy as usize) * wd + ix as usize) * cin + ic], 0.01, 128);
-                            let wv = q(w1[((ky * 3 + kx) * cin + ic) * cout + oc], 0.02, 128);
-                            acc += xv * wv;
-                        }
-                    }
-                }
-                conv[(oy * wd + ox) * cout + oc] = acc.max(0.0);
-            }
-        }
-    }
-    // gap
-    let mut pooled = vec![0f32; cout];
-    for pos in 0..h * wd {
-        for c in 0..cout {
-            pooled[c] += conv[pos * cout + c];
-        }
-    }
-    for c in 0..cout {
-        pooled[c] /= (h * wd) as f32;
-    }
-    // dense
-    let mut out = vec![0f32; 2];
-    for n in 0..2 {
-        for k in 0..cout {
-            out[n] += q(pooled[k], 0.02, 100) * q(wfc[k * 2 + n], 0.02, 128);
-        }
-    }
-    out
-}
-
-fn build_tiny() -> (Arc<Graph>, Arc<MulDb>, OperatingPoint, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let graph = Arc::new(Graph::from_json(&tiny_graph_json()).unwrap());
-    let db = Arc::new(MulDb::generate());
-    let mut rng = qos_nets::util::rng::Rng::new(11);
-    let w1: Vec<f32> = (0..3 * 3 * 2 * 4).map(|_| rng.normal() as f32 * 0.2).collect();
-    let wfc: Vec<f32> = (0..4 * 2).map(|_| rng.normal() as f32 * 0.3).collect();
-    let images: Vec<f32> = (0..2 * 4 * 4 * 2).map(|_| rng.f64() as f32).collect();
-
-    let q_codes = |w: &[f32], s: f32, z: i32| -> Vec<i32> {
-        w.iter()
-            .map(|&x| ((x / s).round_ties_even() as i32 + z).clamp(0, 255))
-            .collect()
-    };
-    let mut layers = HashMap::new();
-    layers.insert(
-        "c1".to_string(),
-        LayerParams {
-            w_codes: q_codes(&w1, 0.02, 128),
-            w_shape: vec![3, 3, 2, 4],
-            post_scale: vec![0.01 * 0.02; 4],
-            post_bias: vec![0.0; 4],
-        },
-    );
-    layers.insert(
-        "fc".to_string(),
-        LayerParams {
-            w_codes: q_codes(&wfc, 0.02, 128),
-            w_shape: vec![4, 2],
-            post_scale: vec![0.02 * 0.02; 2],
-            post_bias: vec![0.0; 2],
-        },
-    );
-    let op = OperatingPoint {
-        name: "exact".into(),
-        assignment: [("c1".to_string(), 0usize), ("fc".to_string(), 0usize)]
-            .into_iter()
-            .collect(),
-        params: ModelParams { layers },
-        relative_power: 1.0,
-    };
-    (graph, db, op, images, w1, wfc)
 }
 
 #[test]
@@ -164,6 +43,7 @@ fn engine_approximate_differs_but_is_close() {
     let exact = eng.forward(&op, &images, 2).unwrap();
 
     let mut approx_op = op.clone();
+    approx_op.name = "approx".into();
     approx_op.assignment.insert("c1".to_string(), 13); // bamc3: tiny unbiased error
     let approx = eng.forward(&approx_op, &images, 2).unwrap();
     let max_delta: f32 = exact
@@ -187,6 +67,18 @@ fn engine_batch_invariance() {
         let single = eng.forward(&op, &images[b * 32..(b + 1) * 32], 1).unwrap();
         assert_eq!(&joint[b * 2..(b + 1) * 2], &single[..]);
     }
+}
+
+#[test]
+fn engine_prepare_op_is_equivalent_to_lazy_caching() {
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut lazy = Engine::new(graph.clone(), db.clone());
+    let want = lazy.forward(&op, &images, 2).unwrap();
+
+    let mut eager = Engine::new(graph, db);
+    eager.prepare_op(&op).unwrap();
+    let got = eager.forward(&op, &images, 2).unwrap();
+    assert_eq!(got, want);
 }
 
 // ---------------------------------------------------------------------------
@@ -248,11 +140,12 @@ fn assignment_roundtrip_through_json() {
 }
 
 // ---------------------------------------------------------------------------
-// Server integration (in-memory model).
+// Server integration (in-memory model, native backend).
 // ---------------------------------------------------------------------------
 
 #[test]
 fn server_round_trip_and_op_switching() {
+    use qos_nets::backend::OpTable;
     use qos_nets::server::{BatcherConfig, Server};
     use std::time::Duration;
 
@@ -262,10 +155,10 @@ fn server_round_trip_and_op_switching() {
     op2.assignment.insert("c1".to_string(), 9);
     op2.relative_power = 0.6;
 
-    let server = Server::start(
+    let server = Server::start_native(
         graph,
         db,
-        vec![op, op2],
+        OpTable::new(vec![op, op2]),
         BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(2),

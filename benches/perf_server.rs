@@ -1,19 +1,74 @@
 //! Server/coordinator benchmarks (§Perf deliverable, L3 coordination):
 //! throughput + latency percentiles vs offered load, batcher settings and
-//! worker counts; OP-switch cost.
+//! worker counts; elastic scaling under a burst (stub-backed, always
+//! runs); OP-switch cost for both switch modes.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use qos_nets::backend::OpTable;
+use qos_nets::backend::stub::stub_op;
+use qos_nets::backend::{OpTable, StubBackend};
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
-use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::server::{BatcherConfig, Server, SwitchMode};
 use qos_nets::util::rng::Rng;
 
+/// Elastic scaling under a burst: stub backend with a fixed per-batch
+/// cost, so the numbers isolate the supervisor/batcher behaviour.
+fn elastic_stub_section() -> anyhow::Result<()> {
+    println!("=== elastic scaling under a burst (stub backend, 5 ms/batch) ===");
+    println!(
+        "{:>12} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "max_workers", "reqs", "wall ms", "p99 ms", "peak", "scale +/-"
+    );
+    for &max_workers in &[1usize, 2, 4] {
+        let server = Server::start(
+            |_w| Ok(StubBackend::new(10).with_delay(Duration::from_millis(5))),
+            OpTable::new(vec![stub_op("only", 1.0)]),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                min_workers: 1,
+                max_workers,
+                scale_interval: Duration::from_millis(10),
+                scale_up_queue: 8,
+                scale_up_wait: Duration::from_millis(10),
+                scale_up_after: 1,
+                scale_down_after: 10,
+            },
+        )?;
+        let n = 400usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|i| server.submit(vec![(i % 10) as f32]).unwrap())
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv_timeout(Duration::from_secs(30));
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown();
+        println!(
+            "{:>12} {:>8} {:>10.1} {:>10.2} {:>10} {:>7}/{}",
+            max_workers,
+            n,
+            wall.as_secs_f64() * 1e3,
+            m.latency.percentile_us(99.0) as f64 / 1e3,
+            m.peak_workers,
+            m.scale_ups,
+            m.scale_downs
+        );
+    }
+    println!();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    // the stub sections need no artifacts, so the bench always reports
+    elastic_stub_section()?;
+
     let Ok(exp) = Experiment::load("artifacts", "quick") else {
-        println!("artifacts/quick missing — server bench skipped");
+        println!("artifacts/quick missing — model-backed server bench skipped");
         return Ok(());
     };
     let db = Arc::new(MulDb::load("artifacts")?);
@@ -37,6 +92,7 @@ fn main() -> anyhow::Result<()> {
                     max_batch,
                     max_wait: Duration::from_millis(3),
                     workers,
+                    ..BatcherConfig::default()
                 },
             )?;
             let rate = 400.0f64;
@@ -84,8 +140,40 @@ fn main() -> anyhow::Result<()> {
             server.set_operating_point(i % 2);
         }
         let per = t0.elapsed().as_nanos() as f64 / iters as f64;
-        println!("set_operating_point: {per:.1} ns/switch (atomic store)");
-        server.shutdown();
+        println!("set_operating_point(Immediate): {per:.1} ns/switch (atomic store)");
+
+        // the draining barrier round-trips through the batcher thread
+        let t0 = Instant::now();
+        let drain_iters = 200;
+        for i in 0..drain_iters {
+            server.set_operating_point_with(i % 2, SwitchMode::Drain)?;
+        }
+        let per_us = t0.elapsed().as_micros() as f64 / drain_iters as f64;
+        println!("set_operating_point(Drain):     {per_us:.1} us/switch (barrier round-trip)");
+
+        // exercise both OPs so the per-OP attribution shows up
+        for phase in 0..2usize {
+            server.set_operating_point_with(phase, SwitchMode::Drain)?;
+            let rxs: Vec<_> = (0..64)
+                .map(|j| {
+                    let i = j % n_img;
+                    server.submit(images[i * elems..(i + 1) * elems].to_vec()).unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv_timeout(Duration::from_secs(20));
+            }
+        }
+        let m = server.shutdown();
+        println!("per-OP latency attribution:");
+        for (i, h) in m.per_op_latency.iter().enumerate() {
+            println!(
+                "  OP{i}: {} requests  mean={:.2} ms  p99<={:.2} ms",
+                h.count(),
+                h.mean_us() / 1e3,
+                h.percentile_us(99.0) as f64 / 1e3
+            );
+        }
     }
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! Edge-platform simulation: battery + thermal environment driving QoS.
 //!
 //! Couples the environmental simulator (battery SoC, thermal RC node,
-//! governor) to the QoS controller and the batching server: as the
-//! battery drains / the die heats, the governor shrinks the power budget
-//! and the controller walks DOWN the operating-point ladder (graceful
-//! degradation instead of the paper's "binary failure mode"); harvest
-//! or idle periods recover the budget and accuracy climbs back.
+//! governor) to the QoS controller and the elastic batching server: as
+//! the battery drains / the die heats, the governor shrinks the power
+//! budget and the controller walks DOWN the operating-point ladder with
+//! immediate switches (graceful degradation instead of the paper's
+//! "binary failure mode"); harvest or idle periods recover the budget
+//! and accuracy climbs back through draining switches that never let a
+//! batch span the OP change.
 //!
 //!   cargo run --release --example edge_platform -- [exp] [sim_secs]
 
@@ -31,11 +33,20 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(!ops.is_empty(), "run `qos-nets search --exp {exp_name}` first");
     let table = OpTable::new(ops);
     let mut controller = QosController::new(table.ladder(), QosConfig::default());
+    // an elastic 1..3 worker pool: the edge box also sheds compute
+    // threads when the queue is empty
     let server = Server::start_native(
         exp.graph.clone(),
         db,
         table,
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(4), workers: 1 },
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(4),
+            workers: 1,
+            min_workers: 1,
+            max_workers: 3,
+            ..BatcherConfig::default()
+        },
     )?;
 
     // a small battery under heavy load: forces the full QoS ladder walk
@@ -52,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let n_img = images.len() / elems;
     let mut rng = Rng::new(1);
 
-    println!("t[s]  SoC    temp°C  budget  OP  power");
+    println!("t[s]  SoC    temp°C  budget  OP  power  workers");
     let started = Instant::now();
     let mut receivers = Vec::new();
     let mut last_op = usize::MAX;
@@ -61,20 +72,21 @@ fn main() -> anyhow::Result<()> {
         // each wall 50 ms simulates 10 s of platform time (battery scale)
         let served_power = server.ops()[server.operating_point()].relative_power;
         let budget = env.step(10.0, served_power);
-        if let Some(idx) = controller.observe(budget, Instant::now()) {
-            server.set_operating_point(idx);
+        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
+            server.set_operating_point_with(idx, mode)?;
         }
         if server.operating_point() != last_op || step % 20 == 0 {
             last_op = server.operating_point();
             let st = env.state();
             println!(
-                "{:5.1} {:6.2} {:7.1} {:7.2} {:>3} {:6.1}%",
+                "{:5.1} {:6.2} {:7.1} {:7.2} {:>3} {:6.1}% {:>8}",
                 st.t,
                 st.soc,
                 st.temperature,
                 st.budget,
                 last_op,
-                100.0 * server.ops()[last_op].relative_power
+                100.0 * server.ops()[last_op].relative_power,
+                server.live_workers()
             );
         }
         let deadline = started + Duration::from_millis(50 * (step as u64 + 1));
@@ -93,10 +105,13 @@ fn main() -> anyhow::Result<()> {
     let m = server.shutdown();
     println!(
         "\ncompleted {done} requests; OP switches {}; budget violations {}; \
-         mean latency {:.2} ms",
+         mean latency {:.2} ms; peak workers {} (+{}/-{})",
         controller.switches,
         controller.budget_violations,
-        m.latency.mean_us() / 1e3
+        m.latency.mean_us() / 1e3,
+        m.peak_workers,
+        m.scale_ups,
+        m.scale_downs
     );
     Ok(())
 }

@@ -1,23 +1,23 @@
 //! End-to-end QoS serving driver (the repo's headline example).
 //!
-//! Loads a searched + fine-tuned experiment, starts the batching
+//! Loads a searched + fine-tuned experiment, starts the elastic batching
 //! inference server with all operating points resident, replays a
-//! synthetic power-budget trace through the QoS controller, and reports
-//! latency / throughput / per-OP accuracy — the runtime behaviour the
-//! paper's "QoS scaling" section describes.
+//! synthetic power-budget trace through the QoS controller (draining
+//! upgrades, immediate downgrades), and reports latency / throughput /
+//! per-OP latency attribution / worker-scaling activity — the runtime
+//! behaviour the paper's "QoS scaling" section describes.
 //!
 //!   cargo run --release --example qos_serving -- [exp] [secs] [trace]
 //!
 //! Defaults: quick, 6 seconds, "steps" trace.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
-use qos_nets::qos::{budget_trace, QosConfig, QosController};
+use qos_nets::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use qos_nets::server::{BatcherConfig, Server};
 use qos_nets::util::rng::Rng;
 
@@ -47,16 +47,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    let op_names: Vec<String> = table.ops().iter().map(|o| o.name.clone()).collect();
     let server = Server::start_native(
         exp.graph.clone(),
         db.clone(),
         table,
-        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(4), workers: 2 },
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(4),
+            workers: 2,
+            min_workers: 1,
+            max_workers: 4,
+            ..BatcherConfig::default()
+        },
     )?;
 
     let (images, labels) = exp.load_testset()?;
     let elems = exp.image_elems();
-    let classes = exp.num_classes();
     let n_img = labels.len();
 
     let steps = (secs * 20.0) as usize;
@@ -68,9 +75,9 @@ fn main() -> anyhow::Result<()> {
     let mut switch_log = Vec::new();
 
     for (step, &budget) in trace.iter().enumerate() {
-        if let Some(idx) = controller.observe(budget, Instant::now()) {
-            server.set_operating_point(idx);
-            switch_log.push((started.elapsed().as_millis(), budget, idx));
+        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
+            server.set_operating_point_with(idx, mode)?;
+            switch_log.push((started.elapsed().as_millis(), budget, idx, mode));
         }
         let deadline = started + Duration::from_millis(50 * (step as u64 + 1));
         while Instant::now() < deadline {
@@ -97,15 +104,18 @@ fn main() -> anyhow::Result<()> {
             if arg == labels[img_idx] as usize {
                 correct += 1;
             }
-            let _ = classes;
         }
     }
     let wall = started.elapsed().as_secs_f64();
+    let live = server.live_workers();
     let m = server.shutdown();
 
     println!("\n=== serving report ({trace_kind} budget trace, {:.1}s) ===", wall);
     println!("requests: {submitted} submitted, {done} completed ({:.1} req/s)", done as f64 / wall);
-    println!("online top-1 accuracy across OP switches: {:.2}%", 100.0 * correct as f64 / done.max(1) as f64);
+    println!(
+        "online top-1 accuracy across OP switches: {:.2}%",
+        100.0 * correct as f64 / done.max(1) as f64
+    );
     println!(
         "latency: mean {:.2} ms | p50 <= {:.2} ms | p99 <= {:.2} ms | max {:.2} ms",
         m.latency.mean_us() / 1e3,
@@ -114,14 +124,30 @@ fn main() -> anyhow::Result<()> {
         m.latency.max_us() as f64 / 1e3
     );
     println!("mean batch size: {:.2}", m.mean_batch());
-    let mut per_op: HashMap<usize, u64> = HashMap::new();
+    println!(
+        "workers: live={live} peak={} scale-ups={} scale-downs={}",
+        m.peak_workers, m.scale_ups, m.scale_downs
+    );
+    println!("per-OP latency attribution:");
     for (i, c) in m.per_op_requests.iter().enumerate() {
-        per_op.insert(i, *c);
+        let h = &m.per_op_latency[i];
+        println!(
+            "  OP{i} ({}): {c} requests  mean={:.2} ms  p99<={:.2} ms",
+            op_names[i],
+            h.mean_us() / 1e3,
+            h.percentile_us(99.0) as f64 / 1e3
+        );
     }
-    println!("per-OP request counts: {:?}", per_op);
-    println!("OP switches: {} (budget violations {})", controller.switches, controller.budget_violations);
-    for (ms, budget, idx) in switch_log {
-        println!("  t={ms:>6}ms budget={budget:.2} -> OP{idx}");
+    println!(
+        "OP switches: {} (budget violations {})",
+        controller.switches, controller.budget_violations
+    );
+    for (ms, budget, idx, mode) in switch_log {
+        let tag = match mode {
+            SwitchMode::Drain => "drain",
+            SwitchMode::Immediate => "immediate",
+        };
+        println!("  t={ms:>6}ms budget={budget:.2} -> OP{idx} ({tag})");
     }
     Ok(())
 }

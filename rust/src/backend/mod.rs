@@ -72,29 +72,38 @@ impl OpTable {
         }
     }
 
+    /// The full ladder, in table order (index = `forward` op index).
     pub fn ops(&self) -> &[OperatingPoint] {
         &self.ops
     }
 
+    /// One operating point by table index (panics when out of range).
     pub fn get(&self, idx: usize) -> &OperatingPoint {
         &self.ops[idx]
     }
 
+    /// Number of operating points in the table.
     pub fn len(&self) -> usize {
         self.ops.len()
     }
 
+    /// Always false — the constructor rejects empty tables.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }
 
-    /// The (name, power) ladder the QoS controller consumes.
+    /// The (name, power, table-index) ladder the QoS controller
+    /// consumes.  Each entry carries its index in this table, so
+    /// controller answers remain valid `forward`/server indices even
+    /// when the table is not stored in power-descending order.
     pub fn ladder(&self) -> Vec<LadderEntry> {
         self.ops
             .iter()
-            .map(|o| LadderEntry {
+            .enumerate()
+            .map(|(i, o)| LadderEntry {
                 name: o.name.clone(),
                 power: o.relative_power,
+                table_index: i,
             })
             .collect()
     }
@@ -102,8 +111,11 @@ impl OpTable {
 
 /// Top-1/Top-5 accuracy over an evaluation set.
 pub struct EvalResult {
+    /// Fraction of samples whose argmax logit matched the label.
     pub top1: f64,
+    /// Fraction of samples whose label was among the 5 largest logits.
     pub top5: f64,
+    /// Number of samples evaluated (after the `limit` cap).
     pub n: usize,
 }
 

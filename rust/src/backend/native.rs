@@ -15,6 +15,8 @@ use crate::engine::{Engine, OperatingPoint};
 use crate::muldb::MulDb;
 use crate::nn::Graph;
 
+/// The bit-exact LUT engine behind the [`Backend`] trait; see the
+/// module docs for the prepare/forward contract.
 pub struct NativeBackend {
     engine: Engine,
     ops: Vec<OperatingPoint>,
@@ -22,6 +24,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Wrap a model graph + multiplier family.  Cheap — all per-OP
+    /// caches are built later, in `prepare`.
     pub fn new(graph: Arc<Graph>, db: Arc<MulDb>) -> Self {
         let num_classes = graph.approx_layers().last().map(|n| n.cout).unwrap_or(10);
         NativeBackend {

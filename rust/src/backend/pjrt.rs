@@ -27,6 +27,8 @@ use crate::engine::OperatingPoint;
 use crate::runtime::{self, LoadedModel, OpBuffers, Runtime};
 use crate::util::tensorio::{self, Tensor};
 
+/// The AOT-compiled HLO artifact (low-rank error surrogate) behind the
+/// [`Backend`] trait; see the module docs for the buffer strategy.
 pub struct PjrtBackend {
     // the client must outlive the executable compiled on it
     runtime: Runtime,
@@ -86,10 +88,13 @@ impl PjrtBackend {
         self.bn_overlays = enabled;
     }
 
+    /// PJRT platform name the runtime compiled for (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.runtime.platform()
     }
 
+    /// Batch size the HLO artifact was exported with; `forward` chunks
+    /// and zero-pads arbitrary batch sizes onto this.
     pub fn export_batch(&self) -> usize {
         self.model.export_batch
     }

@@ -1,6 +1,7 @@
 //! Stub backend: a deterministic, model-free [`Backend`] for unit tests
 //! and benchmarks of everything *around* inference — the batching
-//! server, the QoS controller, the evaluate loop.
+//! server, the scaling supervisor, the QoS controller, the evaluate
+//! loop.
 //!
 //! Logits are a pure function of each image's first element: with C
 //! classes and `x0 = image[0] as usize % C`, class `c` scores
@@ -8,30 +9,63 @@
 //! upward.  So argmax == `x0` and the top-5 set is `{x0, x0+1, ..,
 //! x0+4} mod C` — accuracy expectations can be computed by hand.
 
+use std::collections::HashMap;
+use std::time::Duration;
+
 use anyhow::{bail, Result};
 
 use crate::backend::Backend;
 use crate::engine::OperatingPoint;
+use crate::nn::ModelParams;
 
+/// A parameter-free [`OperatingPoint`] for stub-backed tests and
+/// benches: the stub never reads params, so only `name` and
+/// `relative_power` (which drive the QoS ladder) matter.
+pub fn stub_op(name: &str, relative_power: f64) -> OperatingPoint {
+    OperatingPoint {
+        name: name.to_string(),
+        assignment: HashMap::new(),
+        params: ModelParams {
+            layers: HashMap::new(),
+        },
+        relative_power,
+    }
+}
+
+/// Deterministic in-memory [`Backend`] (see the module docs for the
+/// logit function).
 pub struct StubBackend {
     classes: usize,
     /// number of operating points seen by `prepare`; 0 = not prepared
     /// (forward then accepts any index, for trait-free harness tests)
     prepared: usize,
+    /// simulated compute time per `forward` call (zero by default)
+    delay: Duration,
     /// (op_idx, batch) log of every forward call, for assertions
     pub forward_calls: Vec<(usize, usize)>,
 }
 
 impl StubBackend {
+    /// A stub classifier with `classes` output classes.
     pub fn new(classes: usize) -> Self {
         assert!(classes > 0);
         StubBackend {
             classes,
             prepared: 0,
+            delay: Duration::ZERO,
             forward_calls: Vec::new(),
         }
     }
 
+    /// Make every `forward` call sleep for `delay`, simulating a slow
+    /// substrate — lets server tests build real queue pressure (and
+    /// exercise the scaling supervisor) without a model.
+    pub fn with_delay(mut self, delay: Duration) -> Self {
+        self.delay = delay;
+        self
+    }
+
+    /// Number of operating points the last `prepare` made resident.
     pub fn prepared_ops(&self) -> usize {
         self.prepared
     }
@@ -51,6 +85,9 @@ impl Backend for StubBackend {
             bail!("bad stub input: {} elems for batch {batch}", images.len());
         }
         self.forward_calls.push((op_idx, batch));
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
         let elems = images.len() / batch;
         let c = self.classes;
         let mut out = Vec::with_capacity(batch * c);

@@ -1,6 +1,8 @@
 //! `qos-nets serve --backend native|pjrt`: QoS serving demo — the
-//! batching server (generic over [`Backend`]) under a synthetic
-//! power-budget trace, the QoS controller walking the OP ladder live.
+//! elastic batching server (generic over [`Backend`]) under a synthetic
+//! power-budget trace, the QoS controller walking the OP ladder live
+//! (draining upgrades, immediate downgrades) while the scaling
+//! supervisor grows/shrinks the worker pool with the offered load.
 
 use std::time::{Duration, Instant};
 
@@ -10,7 +12,7 @@ use crate::backend::{Backend, NativeBackend, OpTable, PjrtBackend};
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
 use crate::pipeline::{self, Experiment};
-use crate::qos::{budget_trace, QosConfig, QosController};
+use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
 use crate::util::rng::Rng;
 
@@ -24,10 +26,18 @@ pub fn run(args: &Args) -> Result<()> {
     let table = OpTable::new(ops);
     let controller = QosController::new(table.ladder(), QosConfig::default());
 
+    let workers = args.get_usize("workers", 2);
+    let max_workers = args.get_usize("max-workers", workers);
     let cfg = BatcherConfig {
         max_batch: args.get_usize("max-batch", 16),
         max_wait: Duration::from_millis(4),
-        workers: args.get_usize("workers", 2),
+        workers,
+        // fixed pool unless bounds are passed explicitly, so plain
+        // `--workers N` keeps its pre-elastic meaning; the min default
+        // stays under an explicit ceiling so --max-workers is honored
+        min_workers: args.get_usize("min-workers", workers.min(max_workers)),
+        max_workers,
+        ..BatcherConfig::default()
     };
 
     // the worker factory runs on each worker's own thread; capture only
@@ -85,10 +95,14 @@ fn drive<B: Backend + 'static>(
     let mut rng = Rng::new(42);
     let started = Instant::now();
     let mut submitted = 0u64;
+    let mut drains = 0u64;
     let mut energy = 0.0f64; // sum of per-request relative power
     for (step, &budget) in trace.iter().enumerate() {
-        if let Some(idx) = controller.observe(budget, Instant::now()) {
-            server.set_operating_point(idx);
+        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
+            if mode == SwitchMode::Drain {
+                drains += 1;
+            }
+            server.set_operating_point_with(idx, mode)?;
         }
         let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
         while Instant::now() < step_end {
@@ -109,6 +123,8 @@ fn drive<B: Backend + 'static>(
         }
     }
     let wall = started.elapsed();
+    let live = server.live_workers();
+    let op_names: Vec<String> = server.ops().iter().map(|o| o.name.clone()).collect();
     let m = server.shutdown();
     println!(
         "[{}] serve: {} requests in {:.2}s ({:.1} req/s), {} completed",
@@ -127,15 +143,24 @@ fn drive<B: Backend + 'static>(
         m.queue_latency.mean_us() / 1e3,
     );
     println!(
-        "  mean batch={:.2}  OP switches={} budget violations={}",
+        "  mean batch={:.2}  OP switches={} ({} draining) budget violations={}",
         m.mean_batch(),
         controller.switches,
+        drains,
         controller.budget_violations
     );
+    println!(
+        "  workers: live={live} peak={} scale-ups={} scale-downs={} spawn-failures={}",
+        m.peak_workers, m.scale_ups, m.scale_downs, m.spawn_failures
+    );
     for (i, c) in m.per_op_requests.iter().enumerate() {
+        let h = &m.per_op_latency[i];
         println!(
-            "  OP{i}: {c} requests ({:.1}%)",
-            100.0 * *c as f64 / m.completed.max(1) as f64
+            "  OP{i} ({}): {c} requests ({:.1}%)  latency mean={:.2}ms p99<={:.2}ms",
+            op_names[i],
+            100.0 * *c as f64 / m.completed.max(1) as f64,
+            h.mean_us() / 1e3,
+            h.percentile_us(99.0) as f64 / 1e3,
         );
     }
     println!(

@@ -75,9 +75,12 @@ COMMANDS
                                 default native; M: none|bn|full, default bn
                                 — pjrt honors bn overlays only)
   serve     --exp E [--backend B] [--secs S]
-                                QoS serving demo: batching server with a
-                                power-budget trace driving OP switches
-                                (B: native|pjrt, default native)
+            [--workers N] [--min-workers N] [--max-workers N]
+                                QoS serving demo: elastic batching server
+                                with a power-budget trace driving OP
+                                switches (draining upgrades / immediate
+                                downgrades) and load-driven worker
+                                scaling (B: native|pjrt, default native)
   report    <fig1|fig2|fig3> --exp E   dump figure data series
   selftest  --exp E             cross-layer integration checks
 

@@ -115,7 +115,7 @@ pub fn exact_matmul_corrected(
 }
 
 /// Zero-point correction in place:
-/// corr = acc - za * SW[n] - zw * SA[m] + K * za * zw.
+/// `corr = acc - za * SW[n] - zw * SA[m] + K * za * zw`.
 pub fn apply_corrections(
     acc: &mut [i32],
     sa: &[i32],

@@ -6,7 +6,7 @@
 //! For multiplier j with error e_j(a, w) = lut_j[a, w] - a*w and layer k
 //! with operand histograms pa_k, pw_k, fan-in K_k and scales s_a, s_w:
 //!
-//!   mean_j,k = E[e_j]            (under pa_k (x) pw_k)
+//!   mean_j,k = `E[e_j]`            (under pa_k (x) pw_k)
 //!   var_j,k  = E[e_j^2] - mean^2
 //!   sigma_e[j, k] = sqrt(K_k * var_j,k) * s_a * s_w * bn_scale_k
 //!
@@ -19,7 +19,7 @@
 //!   sigma_eff^2 = K * var  +  (BIAS_RESIDUAL * K * |mean|)^2
 //!
 //! with BIAS_RESIDUAL = 0.1 (the fraction of the systematic shift that
-//! varies with the input and thus cannot be folded into b' = b - E[X]).
+//! varies with the input and thus cannot be folded into `b' = b - E[X]`).
 //! Setting it to 0 recovers the paper's model exactly; the ablation bench
 //! quantifies the difference.
 

@@ -1,6 +1,19 @@
 //! QoS-Nets: adaptive approximate neural-network inference.
 //!
-//! Rust coordinator (L3) of the three-layer reproduction — see DESIGN.md.
+//! A reproduction of *QoS-Nets: Adaptive Approximate Neural Network
+//! Inference* (arXiv 2410.07762): a searched ladder of **operating
+//! points** (assignments of approximate-multiplier instances to layers)
+//! lets a platform trade accuracy against multiplication power at
+//! runtime, switching rungs cheaply as environmental conditions change.
+//!
+//! This crate is the Rust coordinator (L3) of the three-layer
+//! reproduction — see DESIGN.md for the layer split and
+//! `docs/ARCHITECTURE.md` for the serving architecture (ingress →
+//! batcher → elastic worker pool → backend, the OpTable/ladder
+//! relationship to the QoS controller, the LUT-transpose layout, and
+//! how the native and PJRT backends realize one [`backend::Backend`]
+//! trait).
+//!
 //! Modules:
 //!   * [`muldb`]     approximate-multiplier family (LUTs, power model)
 //!   * [`nn`]        model graph / parameter / statistics loading
@@ -10,8 +23,11 @@
 //!   * [`engine`]    native bit-exact LUT inference engine
 //!   * [`runtime`]   PJRT loader/executor for the AOT HLO artifacts
 //!   * [`backend`]   unified `Backend` trait + OpTable over both engines
-//!   * [`qos`]       operating-point controller (budget + hysteresis)
-//!   * [`server`]    batching inference server, generic over `Backend`
+//!   * [`qos`]       operating-point controller (budget + hysteresis +
+//!     switch-mode policy)
+//!   * [`server`]    elastic batching inference server, generic over
+//!     `Backend`: load-driven worker scaling, per-OP latency
+//!     attribution, draining OP-switch barriers
 //!   * [`pipeline`]  artifact-level orchestration
 //!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates

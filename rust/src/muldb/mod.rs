@@ -60,7 +60,7 @@ impl Technique {
 /// The whole family with materialized LUTs.
 pub struct MulDb {
     pub specs: Vec<MulSpec>,
-    /// specs.len() x 65536, row-major lut[id][a * 256 + b].
+    /// specs.len() x 65536, row-major `lut[id][a * 256 + b]`.
     pub luts: Vec<Vec<i32>>,
 }
 

@@ -190,7 +190,8 @@ pub struct LayerParams {
     /// conv: [kh, kw, cin/groups, cout] flattened; dense: [cin, cout].
     pub w_codes: Vec<i32>,
     pub w_shape: Vec<usize>,
-    /// Per-channel fused output transform: out_f = post_scale[c] * acc_corrected + post_bias[c]
+    /// Per-channel fused output transform:
+    /// `out_f = post_scale[c] * acc_corrected + post_bias[c]`
     pub post_scale: Vec<f32>,
     pub post_bias: Vec<f32>,
 }

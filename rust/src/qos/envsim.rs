@@ -16,13 +16,16 @@
 
 use crate::util::rng::Rng;
 
+/// Platform parameters for [`EnvSimulator`].
 #[derive(Debug, Clone)]
 pub struct EnvConfig {
     /// battery capacity in joule-equivalents (arbitrary units)
     pub battery_capacity: f64,
-    pub initial_soc: f64, // 0..1
+    /// starting state of charge, 0..1
+    pub initial_soc: f64,
     /// watts drawn at budget 1.0 by the accelerator (a.u.)
     pub full_power_draw: f64,
+    /// constant platform draw independent of inference load (a.u.)
     pub base_draw: f64,
     /// harvest amplitude (0 disables recharging)
     pub harvest_peak: f64,
@@ -34,6 +37,7 @@ pub struct EnvConfig {
     pub throttle_full: f64,  // deg C where only the cheapest OP fits
     /// SoC below which the governor degrades linearly
     pub soc_knee: f64,
+    /// PRNG seed for the harvest noise (trajectories are reproducible)
     pub seed: u64,
 }
 
@@ -56,14 +60,20 @@ impl Default for EnvConfig {
     }
 }
 
+/// Instantaneous platform state, readable after every `step`.
 #[derive(Debug, Clone, Copy)]
 pub struct EnvState {
-    pub t: f64, // seconds
+    /// simulated time, seconds
+    pub t: f64,
+    /// battery state of charge, 0..1
     pub soc: f64,
+    /// die temperature, deg C
     pub temperature: f64,
+    /// power budget the governor currently grants, 0.05..1
     pub budget: f64,
 }
 
+/// Battery + thermal + governor model; see the module docs.
 pub struct EnvSimulator {
     cfg: EnvConfig,
     state: EnvState,
@@ -71,6 +81,7 @@ pub struct EnvSimulator {
 }
 
 impl EnvSimulator {
+    /// A fresh platform at `cfg.initial_soc` charge and ambient temp.
     pub fn new(cfg: EnvConfig) -> Self {
         let state = EnvState {
             t: 0.0,
@@ -82,6 +93,7 @@ impl EnvSimulator {
         EnvSimulator { cfg, state, rng }
     }
 
+    /// The current platform state.
     pub fn state(&self) -> EnvState {
         self.state
     }

@@ -8,18 +8,57 @@
 //! governor) and picks the most accurate OP that fits, with hysteresis
 //! (switch margin + minimum dwell time) so budget noise does not cause
 //! oscillation.
+//!
+//! Besides *which* OP to run, the controller also decides *how* the
+//! switch is applied ([`SwitchMode`]): budget-driven downgrades are
+//! urgent and applied immediately, while upgrades drain the in-flight
+//! work first so every batch stays strictly OP-tagged.  See
+//! `docs/ARCHITECTURE.md` for how this couples to the serving stack.
 
 pub mod envsim;
 
 use std::time::{Duration, Instant};
 
+/// How an operating-point switch is applied by the serving stack
+/// (consumed by `crate::server::Server::set_operating_point_with`).
+///
+/// Either way a single batch never mixes logits from two OPs — batches
+/// are OP-tagged at formation time.  The modes differ in what happens
+/// to requests that are already queued when the switch fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchMode {
+    /// Apply at the next batch formation: requests still waiting in the
+    /// batcher run under the *new* OP.  This is a single atomic store —
+    /// the right choice for urgent downgrades (budget collapse), where
+    /// honoring the power budget beats finishing the queue at the old
+    /// accuracy.  Batches already formed and queued to workers keep
+    /// their old tag, so a deep backlog rides out the switch at the old
+    /// power for those batches — the price of strict OP-tagging.
+    Immediate,
+    /// Install a barrier: the batcher first flushes every request
+    /// enqueued before the switch as batches tagged with the *old* OP,
+    /// then applies the new index.  Requests submitted after the
+    /// barrier is installed are guaranteed to run under the new OP —
+    /// strict OP-tagging for accounting and accuracy attribution.
+    Drain,
+}
+
+/// One rung of the operating-point ladder as the controller sees it.
 #[derive(Debug, Clone)]
 pub struct LadderEntry {
+    /// Operating-point name (matches `OperatingPoint::name`).
     pub name: String,
     /// MAC-weighted relative multiplication power of this OP.
     pub power: f64,
+    /// Index of this entry in the `OpTable` it was built from.  The
+    /// controller sorts its ladder internally by power; this field is
+    /// what [`QosController::observe`] reports, so results stay valid
+    /// for servers/backends even when the table is not stored in
+    /// power-descending order.
+    pub table_index: usize,
 }
 
+/// Hysteresis knobs for [`QosController`].
 #[derive(Debug, Clone)]
 pub struct QosConfig {
     /// Extra headroom a *more expensive* OP must have before we upgrade
@@ -38,18 +77,29 @@ impl Default for QosConfig {
     }
 }
 
+/// Budget-driven operating-point selector with hysteresis.
+///
+/// Feed it budget samples via [`observe`](QosController::observe) (or
+/// [`observe_with_mode`](QosController::observe_with_mode) when driving
+/// a live server); it answers with the `OpTable` index to switch to.
 #[derive(Debug)]
 pub struct QosController {
     ladder: Vec<LadderEntry>, // sorted by power descending (most accurate first)
     cfg: QosConfig,
-    current: usize,
+    current: usize, // position in the sorted ladder, NOT a table index
     last_switch: Option<Instant>,
+    /// Number of switches fired so far.
     pub switches: u64,
+    /// Number of budget samples observed while the current OP exceeded
+    /// the budget (including samples where nothing cheaper existed).
     pub budget_violations: u64,
 }
 
 impl QosController {
-    /// `ladder` entries are sorted internally by descending power.
+    /// Build a controller from a ladder (e.g. `OpTable::ladder()`).
+    /// Entries are sorted internally by descending power; the original
+    /// table indices are preserved in [`LadderEntry::table_index`] and
+    /// used for every externally visible answer.
     pub fn new(mut ladder: Vec<LadderEntry>, cfg: QosConfig) -> Self {
         assert!(!ladder.is_empty());
         ladder.sort_by(|a, b| b.power.partial_cmp(&a.power).unwrap());
@@ -65,20 +115,31 @@ impl QosController {
         }
     }
 
+    /// The internally sorted ladder (power descending).
     pub fn ladder(&self) -> &[LadderEntry] {
         &self.ladder
     }
 
+    /// Position of the current OP in the *sorted* ladder (0 = most
+    /// accurate).  Use [`current_table_index`](Self::current_table_index)
+    /// when indexing an `OpTable` or a server.
     pub fn current(&self) -> usize {
         self.current
     }
 
+    /// `OpTable` index of the current OP.
+    pub fn current_table_index(&self) -> usize {
+        self.ladder[self.current].table_index
+    }
+
+    /// The current OP's ladder entry.
     pub fn current_entry(&self) -> &LadderEntry {
         &self.ladder[self.current]
     }
 
-    /// Ideal OP for a budget: most accurate entry with power <= budget;
-    /// falls back to the most frugal one if nothing fits.
+    /// Ideal rung for a budget: position (in the sorted ladder) of the
+    /// most accurate entry with power <= budget; falls back to the most
+    /// frugal one if nothing fits.
     pub fn ideal_for(&self, budget: f64) -> usize {
         self.ladder
             .iter()
@@ -86,7 +147,10 @@ impl QosController {
             .unwrap_or(self.ladder.len() - 1)
     }
 
-    /// Feed a budget sample; returns Some(new index) when a switch fires.
+    /// Feed a budget sample; returns `Some(table_index)` when a switch
+    /// fires.  The returned value indexes the original `OpTable` (see
+    /// [`LadderEntry::table_index`]), so it can be handed to
+    /// `Server::set_operating_point` verbatim.
     pub fn observe(&mut self, budget: f64, now: Instant) -> Option<usize> {
         let cur_power = self.ladder[self.current].power;
         if cur_power > budget {
@@ -113,7 +177,23 @@ impl QosController {
         self.current = ideal;
         self.last_switch = Some(now);
         self.switches += 1;
-        Some(ideal)
+        Some(self.ladder[ideal].table_index)
+    }
+
+    /// Like [`observe`](Self::observe), but also chooses how the switch
+    /// should be applied: downgrades (towards lower power) are urgent
+    /// and return [`SwitchMode::Immediate`]; upgrades can afford the
+    /// draining barrier and return [`SwitchMode::Drain`].
+    pub fn observe_with_mode(&mut self, budget: f64, now: Instant) -> Option<(usize, SwitchMode)> {
+        let before = self.ladder[self.current].power;
+        let idx = self.observe(budget, now)?;
+        let after = self.ladder[self.current].power;
+        let mode = if after > before {
+            SwitchMode::Drain
+        } else {
+            SwitchMode::Immediate
+        };
+        Some((idx, mode))
     }
 }
 
@@ -156,9 +236,9 @@ mod tests {
 
     fn ladder() -> Vec<LadderEntry> {
         vec![
-            LadderEntry { name: "op0".into(), power: 0.85 },
-            LadderEntry { name: "op1".into(), power: 0.69 },
-            LadderEntry { name: "op2".into(), power: 0.57 },
+            LadderEntry { name: "op0".into(), power: 0.85, table_index: 0 },
+            LadderEntry { name: "op1".into(), power: 0.69, table_index: 1 },
+            LadderEntry { name: "op2".into(), power: 0.57, table_index: 2 },
         ]
     }
 
@@ -252,6 +332,53 @@ mod tests {
         }
         assert_eq!(c.observe(1.0, t0 + Duration::from_millis(101)), Some(0));
         assert_eq!(c.switches, 3);
+    }
+
+    #[test]
+    fn observe_returns_table_indices_for_shuffled_ladder() {
+        // the table is NOT power-descending: the controller must answer
+        // with table indices, not positions in its internally sorted
+        // ladder (the ROADMAP-flagged index fragility)
+        let shuffled = vec![
+            LadderEntry { name: "mid".into(), power: 0.69, table_index: 0 },
+            LadderEntry { name: "accurate".into(), power: 0.85, table_index: 1 },
+            LadderEntry { name: "frugal".into(), power: 0.57, table_index: 2 },
+        ];
+        let mut c = QosController::new(
+            shuffled,
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        // most accurate OP lives at table slot 1
+        assert_eq!(c.observe(1.0, t), Some(1));
+        assert_eq!(c.current_entry().name, "accurate");
+        assert_eq!(c.current_table_index(), 1);
+        // collapse to the most frugal (table slot 2)
+        assert_eq!(c.observe(0.58, t), Some(2));
+        // recover to the middle rung (table slot 0)
+        assert_eq!(c.observe(0.75, t), Some(0));
+        assert_eq!(c.current_entry().name, "mid");
+    }
+
+    #[test]
+    fn observe_with_mode_drains_upgrades_and_drops_immediately() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        // first move is an upgrade from the frugal floor: drain
+        assert_eq!(c.observe_with_mode(1.0, t), Some((0, SwitchMode::Drain)));
+        // budget collapse: the downgrade must be immediate
+        assert_eq!(c.observe_with_mode(0.58, t), Some((2, SwitchMode::Immediate)));
+        // steady budget: no switch, no mode
+        assert_eq!(c.observe_with_mode(0.58, t), None);
     }
 
     #[test]

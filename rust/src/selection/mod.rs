@@ -87,7 +87,7 @@ pub fn pick_for_centroid(centroid: &[f64], usable: &[usize], db: &MulDb) -> usiz
 pub struct Solution {
     /// Multiplier id chosen per cluster.
     pub cluster_muls: Vec<usize>,
-    /// assignment[op][layer] = multiplier id.
+    /// `assignment[op][layer]` = multiplier id.
     pub assignment: Vec<Vec<usize>>,
     /// Distinct multipliers used (<= n).
     pub subset: Vec<usize>,

@@ -1,26 +1,42 @@
-//! Inference server: request queue -> dynamic batcher -> worker pool,
-//! with live operating-point switching driven by the QoS controller.
+//! Elastic inference server: request queue -> dynamic batcher -> worker
+//! pool, with live operating-point switching driven by the QoS
+//! controller and load-driven worker scaling driven by a supervisor.
 //!
-//! Architecture (std threads + mpsc; tokio is unavailable offline):
+//! Architecture (std threads + mpsc; tokio is unavailable offline — see
+//! `docs/ARCHITECTURE.md` for the full picture):
 //!
-//!   clients ---> ingress channel ---> batcher thread ---> worker channel
-//!                                                     \--> N worker threads
-//!                                                          (one Backend each)
+//! ```text
+//!   clients --> ingress channel --> batcher thread --> worker channel
+//!                    |                                   \--> N workers
+//!                    |                                  (one Backend each)
+//!   supervisor ------+--- spawns/retires workers on queue pressure
+//! ```
 //!
 //! The server is generic over [`Backend`], so the same batching /
-//! switching / metrics machinery serves the native LUT engine, the PJRT
-//! runtime, or any future substrate.  Each worker constructs its own
-//! backend via a factory *inside* its thread (backends need not be
-//! `Send`) and calls `prepare` on the shared [`OpTable`] before taking
-//! work, so the hot path never compiles or caches anything.
+//! switching / scaling / metrics machinery serves the native LUT engine,
+//! the PJRT runtime, or any future substrate.  Each worker constructs
+//! its own backend via a factory *inside* its thread (backends need not
+//! be `Send`) and calls `prepare` on the shared [`OpTable`] before
+//! taking work, so the hot path never compiles or caches anything.
 //!
-//! The current operating point is an `Arc<AtomicUsize>` index into the
-//! shared OP table; switching is a single atomic store (every backend
-//! holds all OPs resident — the paper's "lightweight switching"
-//! realized).
+//! Three runtime properties this module guarantees:
+//!
+//! * **OP-tagged batches.**  The batcher stamps every batch with the
+//!   current operating point at *formation* time; a batch never mixes
+//!   logits from two OPs, and [`Response::op_index`] is exact.
+//! * **Two switch disciplines.**  [`Server::set_operating_point_with`]
+//!   takes a [`SwitchMode`]: `Immediate` is a single atomic store (the
+//!   paper's "lightweight switching"); `Drain` installs a barrier in
+//!   the batcher so every request enqueued before the switch runs under
+//!   the old OP and every request after it under the new one.
+//! * **Elastic workers.**  When [`BatcherConfig`] allows a worker range,
+//!   a supervisor thread samples queue depth and batcher wait-time
+//!   watermarks every `scale_interval` and spawns (up to `max_workers`)
+//!   or retires (down to `min_workers`) workers, with consecutive-tick
+//!   hysteresis so the pool does not flap.
 
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -32,27 +48,79 @@ use crate::muldb::MulDb;
 use crate::nn::Graph;
 use crate::util::stats::LatencyHistogram;
 
+pub use crate::qos::SwitchMode;
+
+/// One enqueued inference request.
 pub struct Request {
+    /// Server-assigned sequence number (monotonic per server).
     pub id: u64,
+    /// Flattened `[H, W, C]` image.
     pub image: Vec<f32>,
+    /// Submission timestamp; queue/total latency is measured from here.
     pub enqueued: Instant,
+    /// Channel the worker answers on.
     pub resp: mpsc::Sender<Response>,
 }
 
+/// The answer to one [`Request`].
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Echo of the request id.
     pub id: u64,
+    /// One logit per class of the served model.
     pub logits: Vec<f32>,
+    /// `OpTable` index of the operating point the batch ran under
+    /// (stamped at batch formation — exact even across switches).
     pub op_index: usize,
+    /// Identifier of the batch this request was served in; all
+    /// responses sharing a `batch_seq` ran in one `forward` call and
+    /// therefore carry the same `op_index`.
+    pub batch_seq: u64,
+    /// Time from submission to batch formation, microseconds.
     pub queue_us: u64,
+    /// Time from submission to logits, microseconds.
     pub total_us: u64,
 }
 
+/// Batcher + worker-pool configuration.
+///
+/// The scaling fields are inert by default: `min_workers`/`max_workers`
+/// of 0 mean "same as `workers`", i.e. a fixed pool and no supervisor
+/// thread.  Set `max_workers > min_workers` to let the pool breathe.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Flush a batch as soon as it reaches this many requests.
     pub max_batch: usize,
+    /// Flush a partial batch this long after its first request.
     pub max_wait: Duration,
+    /// Initial worker count (clamped into `[min_workers, max_workers]`).
     pub workers: usize,
+    /// Scaling floor; 0 (default) means "same as `workers`".  When it
+    /// conflicts with an explicit `max_workers`, the ceiling wins.
+    pub min_workers: usize,
+    /// Scaling ceiling; 0 (default) means "same as `workers`".
+    pub max_workers: usize,
+    /// Supervisor sampling period.
+    pub scale_interval: Duration,
+    /// Scale up when in-flight requests exceed this many per live
+    /// worker (effective threshold is at least `max_batch` per worker,
+    /// so the requests inside one executing batch never count as
+    /// queue pressure)...
+    pub scale_up_queue: usize,
+    /// ...or when the oldest request in an executing batch waited
+    /// longer than `max_wait + scale_up_wait` between submission and
+    /// execution start (the wait-time watermark — grows with the
+    /// worker-channel backlog; the threshold sits on top of the
+    /// intentional `max_wait` batching delay, so no `max_wait` value
+    /// can make an unloaded server look pressured).
+    pub scale_up_wait: Duration,
+    /// Consecutive pressured supervisor ticks before spawning
+    /// (hysteresis against transient spikes).
+    pub scale_up_after: u32,
+    /// Consecutive idle supervisor ticks (no meaningful backlog: at
+    /// most `live/2` requests in flight and sub-threshold waits)
+    /// before retiring one worker (hysteresis against brief lulls).
+    pub scale_down_after: u32,
 }
 
 impl Default for BatcherConfig {
@@ -61,30 +129,58 @@ impl Default for BatcherConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(5),
             workers: 2,
+            min_workers: 0,
+            max_workers: 0,
+            scale_interval: Duration::from_millis(20),
+            scale_up_queue: 8,
+            scale_up_wait: Duration::from_millis(20),
+            scale_up_after: 2,
+            scale_down_after: 25,
         }
     }
 }
 
+/// Aggregate serving metrics, cloned out under a lock.
 #[derive(Debug, Default, Clone)]
 pub struct ServerMetrics {
+    /// Requests answered.
     pub completed: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Sum of executed batch sizes (for [`mean_batch`](Self::mean_batch)).
     pub batch_size_sum: u64,
+    /// End-to-end latency over all requests.
     pub latency: LatencyHistogram,
+    /// Submission-to-batch-formation latency over all requests.
     pub queue_latency: LatencyHistogram,
+    /// Requests served per `OpTable` index.
     pub per_op_requests: Vec<u64>,
+    /// End-to-end latency split by the `OpTable` index each batch
+    /// actually ran under — the per-OP cost attribution the QoS
+    /// power/accuracy trade-off analysis needs.
+    pub per_op_latency: Vec<LatencyHistogram>,
+    /// Workers spawned by the scaling supervisor.
+    pub scale_ups: u64,
+    /// Workers retired by the scaling supervisor.
+    pub scale_downs: u64,
+    /// Supervisor-spawned workers whose backend failed to initialize.
+    pub spawn_failures: u64,
+    /// Highest concurrently live worker count observed.
+    pub peak_workers: usize,
 }
 
 impl ServerMetrics {
     fn new(n_ops: usize) -> Self {
         ServerMetrics {
             per_op_requests: vec![0; n_ops],
+            per_op_latency: vec![LatencyHistogram::new(); n_ops],
             latency: LatencyHistogram::new(),
             queue_latency: LatencyHistogram::new(),
             ..Default::default()
         }
     }
 
+    /// Mean executed batch size (0.0 before any batch completes).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -94,82 +190,164 @@ impl ServerMetrics {
     }
 }
 
+/// State shared between the batcher, workers, supervisor and handle.
+struct Shared {
+    /// Current `OpTable` index; batches are stamped from this at
+    /// formation time.
+    current_op: AtomicUsize,
+    /// Requests submitted but not yet answered (queue-depth signal).
+    inflight: AtomicUsize,
+    /// Workers that completed `prepare` and are serving (supervisor
+    /// reservations included, see `spawn_worker`).
+    live_workers: AtomicUsize,
+    /// Next worker id handed to the factory.
+    next_worker: AtomicUsize,
+    /// Max submission-to-execution age (us) of the oldest request in
+    /// any batch a worker started since the supervisor last sampled —
+    /// the wait-time watermark (includes worker-channel backlog, not
+    /// just time in the batcher).
+    queue_watermark_us: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    fn new(first_worker: usize) -> Self {
+        Shared {
+            current_op: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            live_workers: AtomicUsize::new(0),
+            next_worker: AtomicUsize::new(first_worker),
+            queue_watermark_us: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Ingress-channel message: a request, or a draining switch barrier.
+enum Ingress {
+    Req(Request),
+    /// Flush everything enqueued so far under the old OP, then apply
+    /// `idx` and ack.
+    Switch { idx: usize, ack: mpsc::Sender<()> },
+}
+
+/// A formed batch, OP-tagged at formation time.
+struct Batch {
+    reqs: Vec<Request>,
+    op_idx: usize,
+    seq: u64,
+}
+
+/// Worker-channel message: work, or an orderly retirement request.
+enum WorkerMsg {
+    Batch(Batch),
+    Retire,
+}
+
+/// Everything a worker (or the supervisor spawning workers) needs;
+/// cheap to clone per thread.
+struct WorkerCtx<B, F> {
+    factory: Arc<F>,
+    ops: OpTable,
+    rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    shared: Arc<Shared>,
+    _backend: PhantomData<fn() -> B>,
+}
+
+impl<B, F> Clone for WorkerCtx<B, F> {
+    fn clone(&self) -> Self {
+        WorkerCtx {
+            factory: self.factory.clone(),
+            ops: self.ops.clone(),
+            rx: self.rx.clone(),
+            metrics: self.metrics.clone(),
+            shared: self.shared.clone(),
+            _backend: PhantomData,
+        }
+    }
+}
+
+/// Handle to a running server; dropping it without
+/// [`shutdown`](Server::shutdown) leaks the threads.
 pub struct Server<B: Backend> {
-    ingress: mpsc::Sender<Request>,
-    current_op: Arc<AtomicUsize>,
+    ingress: mpsc::Sender<Ingress>,
+    shared: Arc<Shared>,
     ops: OpTable,
     metrics: Arc<Mutex<ServerMetrics>>,
-    stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    /// Supervisor-spawned worker handles, joined at shutdown.
+    scaled: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     next_id: AtomicUsize,
     _backend: PhantomData<fn() -> B>,
 }
 
 impl<B: Backend + 'static> Server<B> {
-    /// Start the batcher + `cfg.workers` workers.  `factory(w)` runs on
+    /// Start the batcher + initial workers (+ the scaling supervisor
+    /// when `cfg` allows an elastic range).  `factory(w)` runs on
     /// worker `w`'s own thread to build its backend (backends need not
     /// be `Send`); each backend then `prepare`s the shared OP table
-    /// before serving.  Blocks until every worker has reported its
-    /// prepare outcome and fails if none came up — a server with zero
-    /// live workers would otherwise accept requests and answer nothing.
+    /// before serving.  Blocks until every initial worker has reported
+    /// its prepare outcome and fails if none came up — a server with
+    /// zero live workers would otherwise accept requests and answer
+    /// nothing.
     pub fn start<F>(factory: F, ops: OpTable, cfg: BatcherConfig) -> Result<Self>
     where
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
     {
-        let factory = Arc::new(factory);
-        let current_op = Arc::new(AtomicUsize::new(0));
-        let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len())));
-        let stop = Arc::new(AtomicBool::new(false));
+        let mut cfg = cfg;
+        // normalize the worker range: 0 bounds mean "same as workers"
+        let initial = cfg.workers.max(1);
+        cfg.min_workers = match cfg.min_workers {
+            0 => initial,
+            m => m.max(1),
+        };
+        cfg.max_workers = match cfg.max_workers {
+            0 => initial,
+            m => m.max(1),
+        };
+        // an explicitly set ceiling wins over a conflicting floor: never
+        // run more workers than the caller capped the pool at
+        cfg.min_workers = cfg.min_workers.min(cfg.max_workers);
+        cfg.workers = initial.clamp(cfg.min_workers, cfg.max_workers);
 
-        let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
-        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len())));
+        let shared = Arc::new(Shared::new(cfg.workers));
+
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
+        let (batch_tx, batch_rx) = mpsc::channel::<WorkerMsg>();
+
+        let ctx = WorkerCtx::<B, F> {
+            factory: Arc::new(factory),
+            ops: ops.clone(),
+            rx: Arc::new(Mutex::new(batch_rx)),
+            metrics: metrics.clone(),
+            shared: shared.clone(),
+            _backend: PhantomData,
+        };
 
         let mut threads = Vec::new();
 
         // batcher thread: size- or deadline-triggered batch formation
         {
-            let stop = stop.clone();
             let cfg2 = cfg.clone();
+            let shared2 = shared.clone();
+            let out = batch_tx.clone();
             threads.push(std::thread::spawn(move || {
-                batcher_loop(ingress_rx, batch_tx, cfg2, stop);
+                batcher_loop(ingress_rx, out, cfg2, shared2);
             }));
         }
 
-        // workers; each reports construction/prepare success or failure
-        let n_workers = cfg.workers.max(1);
+        // initial workers; each reports construction/prepare outcome
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for w in 0..n_workers {
-            let factory = factory.clone();
-            let rx = batch_rx.clone();
-            let ops = ops.clone();
-            let current = current_op.clone();
-            let metrics = metrics.clone();
-            let ready = ready_tx.clone();
-            threads.push(std::thread::spawn(move || {
-                let built = (*factory)(w).and_then(|mut b| {
-                    b.prepare(ops.ops())?;
-                    Ok(b)
-                });
-                let mut backend = match built {
-                    Ok(b) => {
-                        let _ = ready.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        eprintln!("worker {w}: backend init failed: {e:#}");
-                        let _ = ready.send(Err(e));
-                        return;
-                    }
-                };
-                worker_loop(&mut backend, &rx, &current, &metrics);
-            }));
+        for w in 0..cfg.workers {
+            threads.push(spawn_worker(ctx.clone(), w, false, Some(ready_tx.clone())));
         }
         drop(ready_tx);
 
         let mut live = 0usize;
         let mut first_err: Option<anyhow::Error> = None;
-        for _ in 0..n_workers {
+        for _ in 0..cfg.workers {
             match ready_rx.recv() {
                 Ok(Ok(())) => live += 1,
                 Ok(Err(e)) => first_err = first_err.or(Some(e)),
@@ -177,8 +355,9 @@ impl<B: Backend + 'static> Server<B> {
             }
         }
         if live == 0 {
-            stop.store(true, Ordering::Release);
+            shared.stop.store(true, Ordering::Release);
             drop(ingress_tx);
+            drop(batch_tx);
             for t in threads.drain(..) {
                 let _ = t.join();
             }
@@ -186,14 +365,28 @@ impl<B: Backend + 'static> Server<B> {
                 .unwrap_or_else(|| anyhow!("no inference worker came up"))
                 .context("server start: every worker failed"));
         }
+        metrics.lock().unwrap().peak_workers = live;
+
+        // the scaling supervisor only exists when the pool is elastic
+        let scaled = Arc::new(Mutex::new(Vec::new()));
+        if cfg.max_workers > cfg.min_workers {
+            let ctx2 = ctx.clone();
+            let cfg2 = cfg.clone();
+            let scaled2 = scaled.clone();
+            threads.push(std::thread::spawn(move || {
+                supervisor_loop(ctx2, batch_tx, cfg2, scaled2);
+            }));
+        } else {
+            drop(batch_tx);
+        }
 
         Ok(Server {
             ingress: ingress_tx,
-            current_op,
+            shared,
             ops,
             metrics,
-            stop,
             threads,
+            scaled,
             next_id: AtomicUsize::new(0),
             _backend: PhantomData,
         })
@@ -203,44 +396,98 @@ impl<B: Backend + 'static> Server<B> {
     pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
-        self.ingress.send(Request {
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        let sent = self.ingress.send(Ingress::Req(Request {
             id,
             image,
             enqueued: Instant::now(),
             resp: tx,
-        })?;
+        }));
+        if sent.is_err() {
+            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow!("server stopped"));
+        }
         Ok(rx)
     }
 
-    /// Atomically switch the serving operating point.
+    /// Switch the serving operating point immediately (a single atomic
+    /// store; batches formed from here on are tagged with `idx`).
     pub fn set_operating_point(&self, idx: usize) {
         assert!(idx < self.ops.len());
-        self.current_op.store(idx, Ordering::Release);
+        self.shared.current_op.store(idx, Ordering::Release);
     }
 
+    /// Switch the serving operating point under an explicit
+    /// [`SwitchMode`].  `Immediate` is the atomic store of
+    /// [`set_operating_point`](Self::set_operating_point).  `Drain`
+    /// installs a barrier in the batcher and blocks until it is
+    /// applied: every request submitted before this call completes
+    /// under the old OP, every request submitted after it returns runs
+    /// under the new one, and no batch spans the switch.
+    pub fn set_operating_point_with(&self, idx: usize, mode: SwitchMode) -> Result<()> {
+        assert!(idx < self.ops.len());
+        match mode {
+            SwitchMode::Immediate => {
+                self.shared.current_op.store(idx, Ordering::Release);
+                Ok(())
+            }
+            SwitchMode::Drain => {
+                let (ack_tx, ack_rx) = mpsc::channel();
+                self.ingress
+                    .send(Ingress::Switch { idx, ack: ack_tx })
+                    .map_err(|_| anyhow!("server stopped"))?;
+                ack_rx
+                    .recv()
+                    .map_err(|_| anyhow!("batcher exited before applying the switch"))?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Current `OpTable` index batches are being tagged with.
     pub fn operating_point(&self) -> usize {
-        self.current_op.load(Ordering::Acquire)
+        self.shared.current_op.load(Ordering::Acquire)
     }
 
+    /// The served operating points, in table order.
     pub fn ops(&self) -> &[OperatingPoint] {
         self.ops.ops()
     }
 
+    /// The shared operating-point table.
     pub fn op_table(&self) -> &OpTable {
         &self.ops
     }
 
+    /// Workers currently serving (floor <= n <= ceiling when elastic).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live_workers.load(Ordering::Acquire)
+    }
+
+    /// Requests submitted but not yet answered.
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// Snapshot of the aggregate metrics.
     pub fn metrics(&self) -> ServerMetrics {
         self.metrics.lock().unwrap().clone()
     }
 
-    /// Drain and stop; joins all threads.
+    /// Drain and stop; joins all threads (including supervisor-spawned
+    /// workers) and returns the final metrics.
     pub fn shutdown(mut self) -> ServerMetrics {
-        self.stop.store(true, Ordering::Release);
+        self.shared.stop.store(true, Ordering::Release);
         drop(self.ingress);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        // the supervisor has exited by now, so no new handles appear
+        let mut scaled = self.scaled.lock().unwrap();
+        for t in scaled.drain(..) {
+            let _ = t.join();
+        }
+        drop(scaled);
         self.metrics.lock().unwrap().clone()
     }
 }
@@ -262,81 +509,184 @@ impl Server<NativeBackend> {
     }
 }
 
-fn worker_loop<B: Backend>(
-    backend: &mut B,
-    rx: &Arc<Mutex<mpsc::Receiver<Vec<Request>>>>,
-    current: &Arc<AtomicUsize>,
-    metrics: &Arc<Mutex<ServerMetrics>>,
-) {
+/// Spawn one worker thread.  `reserved` marks a supervisor spawn whose
+/// `live_workers` slot was incremented up front (to keep scaling
+/// decisions race-free); such a worker releases the slot on any exit,
+/// including init failure.  Initial workers instead claim their slot
+/// after a successful `prepare` and report through `ready`.
+fn spawn_worker<B, F>(
+    ctx: WorkerCtx<B, F>,
+    w: usize,
+    reserved: bool,
+    ready: Option<mpsc::Sender<Result<()>>>,
+) -> std::thread::JoinHandle<()>
+where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    std::thread::spawn(move || {
+        let built = (*ctx.factory)(w).and_then(|mut b| {
+            b.prepare(ctx.ops.ops())?;
+            Ok(b)
+        });
+        match built {
+            Ok(mut backend) => {
+                if !reserved {
+                    ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
+                }
+                if let Some(tx) = &ready {
+                    let _ = tx.send(Ok(()));
+                }
+                worker_loop(&mut backend, &ctx);
+                ctx.shared.live_workers.fetch_sub(1, Ordering::AcqRel);
+            }
+            Err(e) => {
+                eprintln!("worker {w}: backend init failed: {e:#}");
+                if reserved {
+                    ctx.shared.live_workers.fetch_sub(1, Ordering::AcqRel);
+                    ctx.metrics.lock().unwrap().spawn_failures += 1;
+                }
+                if let Some(tx) = ready {
+                    let _ = tx.send(Err(e));
+                }
+            }
+        }
+    })
+}
+
+fn worker_loop<B, F>(backend: &mut B, ctx: &WorkerCtx<B, F>)
+where
+    B: Backend,
+{
     loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
+        let msg = {
+            let guard = ctx.rx.lock().unwrap();
             guard.recv()
         };
-        let Ok(batch) = batch else { break };
-        if batch.is_empty() {
+        let Ok(msg) = msg else { break };
+        let batch = match msg {
+            WorkerMsg::Batch(b) => b,
+            WorkerMsg::Retire => break,
+        };
+        let b = batch.reqs.len();
+        if b == 0 {
             continue;
         }
-        let op_idx = current.load(Ordering::Acquire);
+        let op_idx = batch.op_idx;
         let started = Instant::now();
-        let b = batch.len();
-        let elems = batch[0].image.len();
+        // wait-time watermark for the supervisor: submission-to-execution
+        // age of the batch's oldest request, which keeps growing with the
+        // worker-channel backlog (unlike time-in-batcher, capped at
+        // max_wait)
+        let oldest_us = started
+            .saturating_duration_since(batch.reqs[0].enqueued)
+            .as_micros() as u64;
+        ctx.shared
+            .queue_watermark_us
+            .fetch_max(oldest_us, Ordering::AcqRel);
+        let elems = batch.reqs[0].image.len();
         let mut images = Vec::with_capacity(b * elems);
-        for r in &batch {
+        for r in &batch.reqs {
             images.extend_from_slice(&r.image);
         }
         let logits = match backend.forward(op_idx, &images, b) {
             Ok(l) => l,
             Err(e) => {
                 eprintln!("{} backend: dropping batch of {b}: {e:#}", backend.name());
+                ctx.shared.inflight.fetch_sub(b, Ordering::AcqRel);
                 continue;
             }
         };
         let classes = logits.len() / b;
         let done = Instant::now();
-        let mut m = metrics.lock().unwrap();
-        m.batches += 1;
-        m.batch_size_sum += b as u64;
-        for (i, r) in batch.into_iter().enumerate() {
-            let queue_us = started.duration_since(r.enqueued).as_micros() as u64;
-            let total_us = done.duration_since(r.enqueued).as_micros() as u64;
-            m.completed += 1;
-            m.per_op_requests[op_idx] += 1;
-            m.latency.record_us(total_us);
-            m.queue_latency.record_us(queue_us);
+        let times: Vec<(u64, u64)> = batch
+            .reqs
+            .iter()
+            .map(|r| {
+                (
+                    started.duration_since(r.enqueued).as_micros() as u64,
+                    done.duration_since(r.enqueued).as_micros() as u64,
+                )
+            })
+            .collect();
+        // record metrics in one short critical section, then send the
+        // responses with the lock released — the metrics mutex must not
+        // serialize the (elastic) worker pool on allocation + channel work
+        {
+            let mut m = ctx.metrics.lock().unwrap();
+            m.batches += 1;
+            m.batch_size_sum += b as u64;
+            for &(queue_us, total_us) in &times {
+                m.completed += 1;
+                m.per_op_requests[op_idx] += 1;
+                m.latency.record_us(total_us);
+                m.queue_latency.record_us(queue_us);
+                m.per_op_latency[op_idx].record_us(total_us);
+            }
+        }
+        for ((i, r), &(queue_us, total_us)) in batch.reqs.into_iter().enumerate().zip(&times) {
             let _ = r.resp.send(Response {
                 id: r.id,
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 op_index: op_idx,
+                batch_seq: batch.seq,
                 queue_us,
                 total_us,
             });
         }
+        ctx.shared.inflight.fetch_sub(b, Ordering::AcqRel);
     }
 }
 
+/// Flush `pending` as one OP-tagged batch.
+fn flush_batch(
+    pending: &mut Vec<Request>,
+    out: &mpsc::Sender<WorkerMsg>,
+    shared: &Shared,
+    seq: &mut u64,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let batch = Batch {
+        reqs: std::mem::take(pending),
+        op_idx: shared.current_op.load(Ordering::Acquire),
+        seq: *seq,
+    };
+    *seq += 1;
+    let _ = out.send(WorkerMsg::Batch(batch));
+}
+
 fn batcher_loop(
-    ingress: mpsc::Receiver<Request>,
-    out: mpsc::Sender<Vec<Request>>,
+    ingress: mpsc::Receiver<Ingress>,
+    out: mpsc::Sender<WorkerMsg>,
     cfg: BatcherConfig,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
 ) {
     let mut pending: Vec<Request> = Vec::new();
     let mut deadline: Option<Instant> = None;
+    let mut seq: u64 = 0;
     loop {
-        if stop.load(Ordering::Acquire) {
+        if shared.stop.load(Ordering::Acquire) {
             // stop requested: drain whatever is already queued, flush the
             // final partial batch and exit promptly (shutdown no longer
             // relies solely on channel disconnect)
-            while let Ok(req) = ingress.try_recv() {
-                pending.push(req);
-                if pending.len() >= cfg.max_batch {
-                    let _ = out.send(std::mem::take(&mut pending));
+            while let Ok(msg) = ingress.try_recv() {
+                match msg {
+                    Ingress::Req(req) => {
+                        pending.push(req);
+                        if pending.len() >= cfg.max_batch {
+                            flush_batch(&mut pending, &out, &shared, &mut seq);
+                        }
+                    }
+                    Ingress::Switch { idx, ack } => {
+                        flush_batch(&mut pending, &out, &shared, &mut seq);
+                        shared.current_op.store(idx, Ordering::Release);
+                        let _ = ack.send(());
+                    }
                 }
             }
-            if !pending.is_empty() {
-                let _ = out.send(std::mem::take(&mut pending));
-            }
+            flush_batch(&mut pending, &out, &shared, &mut seq);
             break;
         }
         let timeout = match deadline {
@@ -344,28 +694,139 @@ fn batcher_loop(
             None => Duration::from_millis(50),
         };
         match ingress.recv_timeout(timeout) {
-            Ok(req) => {
+            Ok(Ingress::Req(req)) => {
                 if pending.is_empty() {
                     deadline = Some(Instant::now() + cfg.max_wait);
                 }
                 pending.push(req);
                 if pending.len() >= cfg.max_batch {
-                    let _ = out.send(std::mem::take(&mut pending));
+                    flush_batch(&mut pending, &out, &shared, &mut seq);
                     deadline = None;
                 }
             }
+            Ok(Ingress::Switch { idx, ack }) => {
+                // the drain barrier: everything enqueued before the
+                // switch leaves as batches tagged with the old OP, then
+                // the new index takes effect
+                flush_batch(&mut pending, &out, &shared, &mut seq);
+                deadline = None;
+                shared.current_op.store(idx, Ordering::Release);
+                let _ = ack.send(());
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    let _ = out.send(std::mem::take(&mut pending));
+                    flush_batch(&mut pending, &out, &shared, &mut seq);
                     deadline = None;
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    let _ = out.send(std::mem::take(&mut pending));
-                }
+                flush_batch(&mut pending, &out, &shared, &mut seq);
                 break;
             }
+        }
+    }
+}
+
+/// Track a supervisor-spawned worker handle, pruning handles whose
+/// threads already exited (dropping a finished handle just detaches
+/// it) so a persistently failing factory cannot grow the vec forever.
+fn push_handle(
+    handles: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    handle: std::thread::JoinHandle<()>,
+) {
+    let mut hs = handles.lock().unwrap();
+    hs.retain(|h| !h.is_finished());
+    hs.push(handle);
+}
+
+/// The scaling supervisor: samples queue depth (in-flight requests per
+/// live worker) and the wait-time watermark (submission-to-execution
+/// age recorded by workers) every `scale_interval`, spawning a worker
+/// after `scale_up_after` consecutive pressured ticks and retiring one
+/// after `scale_down_after` consecutive idle ticks; a pool below
+/// `min_workers` (partial init failure, worker death) is healed back
+/// to the floor unconditionally.  Spawns reserve their `live_workers`
+/// slot before the thread starts so decisions never overshoot
+/// `max_workers`; retirements go through the work queue, so a worker
+/// only leaves once everything queued ahead is served.
+fn supervisor_loop<B, F>(
+    ctx: WorkerCtx<B, F>,
+    batch_tx: mpsc::Sender<WorkerMsg>,
+    cfg: BatcherConfig,
+    handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    let mut up_streak = 0u32;
+    let mut idle_streak = 0u32;
+    loop {
+        std::thread::sleep(cfg.scale_interval);
+        if ctx.shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let live = ctx.shared.live_workers.load(Ordering::Acquire);
+        let inflight = ctx.shared.inflight.load(Ordering::Acquire);
+        let wait_us = ctx.shared.queue_watermark_us.swap(0, Ordering::AcqRel);
+        {
+            let mut m = ctx.metrics.lock().unwrap();
+            m.peak_workers = m.peak_workers.max(live);
+        }
+        // heal to the floor first: partial init failure or worker death
+        // must not leave an elastic pool below min_workers (retried once
+        // per tick while the factory keeps failing)
+        if live < cfg.min_workers {
+            ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
+            let w = ctx.shared.next_worker.fetch_add(1, Ordering::AcqRel);
+            let handle = spawn_worker(ctx.clone(), w, true, None);
+            push_handle(&handles, handle);
+            ctx.metrics.lock().unwrap().scale_ups += 1;
+            continue;
+        }
+        // the watermark includes the intentional max_wait batching
+        // delay, so the trigger is measured beyond it — otherwise
+        // max_wait >= scale_up_wait would pin the pool at the ceiling
+        // under trivial load
+        let wait_thresh = (cfg.scale_up_wait + cfg.max_wait).as_micros() as u64;
+        // inflight counts executing requests too, so the depth threshold
+        // is at least one full batch per worker — a single slow
+        // in-progress batch must not read as queue pressure
+        let depth_thresh = cfg
+            .scale_up_queue
+            .max(cfg.max_batch)
+            .saturating_mul(live.max(1));
+        let pressured = inflight > depth_thresh || wait_us > wait_thresh;
+        // idle: no meaningful backlog — a steady trickle must not pin a
+        // post-burst pool at its peak, so "idle" tolerates a handful of
+        // in-flight requests and deadline-flushed (sub-threshold) waits
+        let idle = inflight <= live / 2 && wait_us <= wait_thresh;
+        if pressured {
+            up_streak += 1;
+            idle_streak = 0;
+        } else if idle {
+            idle_streak += 1;
+            up_streak = 0;
+        } else {
+            up_streak = 0;
+            idle_streak = 0;
+        }
+        if pressured && up_streak >= cfg.scale_up_after && live < cfg.max_workers {
+            up_streak = 0;
+            // reserve the slot before the thread exists (see spawn_worker)
+            ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
+            let w = ctx.shared.next_worker.fetch_add(1, Ordering::AcqRel);
+            let handle = spawn_worker(ctx.clone(), w, true, None);
+            push_handle(&handles, handle);
+            let mut m = ctx.metrics.lock().unwrap();
+            m.scale_ups += 1;
+            m.peak_workers = m.peak_workers.max(live + 1);
+        }
+        if idle && idle_streak >= cfg.scale_down_after && live > cfg.min_workers {
+            idle_streak = 0;
+            // FIFO retirement: the token queues behind any in-flight
+            // work, so retiring never drops batches
+            let _ = batch_tx.send(WorkerMsg::Retire);
+            ctx.metrics.lock().unwrap().scale_downs += 1;
         }
     }
 }
@@ -390,35 +851,45 @@ mod tests {
     fn spawn_batcher(
         cfg: BatcherConfig,
     ) -> (
-        mpsc::Sender<Request>,
-        mpsc::Receiver<Vec<Request>>,
-        Arc<AtomicBool>,
+        mpsc::Sender<Ingress>,
+        mpsc::Receiver<WorkerMsg>,
+        Arc<Shared>,
         std::thread::JoinHandle<()>,
     ) {
         let (in_tx, in_rx) = mpsc::channel();
         let (out_tx, out_rx) = mpsc::channel();
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let h = std::thread::spawn(move || batcher_loop(in_rx, out_tx, cfg, stop2));
-        (in_tx, out_rx, stop, h)
+        let shared = Arc::new(Shared::new(0));
+        let shared2 = shared.clone();
+        let h = std::thread::spawn(move || batcher_loop(in_rx, out_tx, cfg, shared2));
+        (in_tx, out_rx, shared, h)
+    }
+
+    fn recv_batch(rx: &mpsc::Receiver<WorkerMsg>) -> Batch {
+        loop {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                WorkerMsg::Batch(b) => return b,
+                WorkerMsg::Retire => continue,
+            }
+        }
     }
 
     #[test]
     fn batcher_flushes_when_size_reached() {
         // deadline far away: only the size trigger can flush
-        let (in_tx, out_rx, _stop, h) = spawn_batcher(BatcherConfig {
+        let (in_tx, out_rx, _shared, h) = spawn_batcher(BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_secs(30),
             workers: 1,
+            ..BatcherConfig::default()
         });
         let mut resp_rxs = Vec::new();
         for i in 0..4 {
             let (r, rx) = req(i as f32);
             resp_rxs.push(rx);
-            in_tx.send(r).unwrap();
+            in_tx.send(Ingress::Req(r)).unwrap();
         }
-        let batch = out_rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(batch.len(), 4);
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.reqs.len(), 4);
         drop(in_tx);
         h.join().unwrap();
     }
@@ -426,20 +897,21 @@ mod tests {
     #[test]
     fn batcher_flushes_partial_batch_at_deadline() {
         // size trigger unreachable: only the deadline can flush
-        let (in_tx, out_rx, _stop, h) = spawn_batcher(BatcherConfig {
+        let (in_tx, out_rx, _shared, h) = spawn_batcher(BatcherConfig {
             max_batch: 100,
             max_wait: Duration::from_millis(20),
             workers: 1,
+            ..BatcherConfig::default()
         });
         let mut resp_rxs = Vec::new();
         for i in 0..3 {
             let (r, rx) = req(i as f32);
             resp_rxs.push(rx);
-            in_tx.send(r).unwrap();
+            in_tx.send(Ingress::Req(r)).unwrap();
         }
         let t0 = Instant::now();
-        let batch = out_rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(batch.len(), 3);
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.reqs.len(), 3);
         assert!(
             t0.elapsed() < Duration::from_secs(2),
             "deadline flush took {:?}",
@@ -451,26 +923,68 @@ mod tests {
 
     #[test]
     fn batcher_exits_promptly_when_stopped_and_drained() {
-        let (in_tx, out_rx, stop, h) = spawn_batcher(BatcherConfig {
+        let (in_tx, out_rx, shared, h) = spawn_batcher(BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             workers: 1,
+            ..BatcherConfig::default()
         });
         let (r, _resp_rx) = req(1.0);
-        in_tx.send(r).unwrap();
-        stop.store(true, Ordering::Release);
+        in_tx.send(Ingress::Req(r)).unwrap();
+        shared.stop.store(true, Ordering::Release);
         let t0 = Instant::now();
         // the ingress sender stays alive: only the stop flag can end the
         // loop (this is the dead-branch regression test)
-        let batches: Vec<Vec<Request>> = out_rx.iter().collect();
+        let batches: Vec<WorkerMsg> = out_rx.iter().collect();
         h.join().unwrap();
         assert!(
             t0.elapsed() < Duration::from_secs(2),
             "stop took {:?}",
             t0.elapsed()
         );
-        let total: usize = batches.iter().map(|b| b.len()).sum();
+        let total: usize = batches
+            .iter()
+            .map(|m| match m {
+                WorkerMsg::Batch(b) => b.reqs.len(),
+                WorkerMsg::Retire => 0,
+            })
+            .sum();
         assert_eq!(total, 1, "pending request must be flushed, not dropped");
         drop(in_tx);
+    }
+
+    #[test]
+    fn batcher_switch_barrier_flushes_old_op_then_applies_new() {
+        let (in_tx, out_rx, shared, h) = spawn_batcher(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(30), // only the barrier can flush
+            workers: 1,
+            ..BatcherConfig::default()
+        });
+        let mut resp_rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i as f32);
+            resp_rxs.push(rx);
+            in_tx.send(Ingress::Req(r)).unwrap();
+        }
+        let (ack_tx, ack_rx) = mpsc::channel();
+        in_tx.send(Ingress::Switch { idx: 1, ack: ack_tx }).unwrap();
+        ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // the pre-switch batch left tagged with the old OP...
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.reqs.len(), 3);
+        assert_eq!(batch.op_idx, 0);
+        // ...and the new OP is in effect for later batches
+        assert_eq!(shared.current_op.load(Ordering::Acquire), 1);
+        let (r, _rx) = req(9.0);
+        in_tx.send(Ingress::Req(r)).unwrap();
+        let (ack_tx, ack_rx) = mpsc::channel();
+        in_tx.send(Ingress::Switch { idx: 0, ack: ack_tx }).unwrap();
+        ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.reqs.len(), 1);
+        assert_eq!(batch.op_idx, 1);
+        drop(in_tx);
+        h.join().unwrap();
     }
 }

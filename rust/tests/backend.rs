@@ -100,6 +100,7 @@ fn generic_server_routes_batches_through_stub_backend() {
             max_batch: 4,
             max_wait: Duration::from_millis(3),
             workers: 1,
+            ..BatcherConfig::default()
         },
     )
     .unwrap();
@@ -147,6 +148,7 @@ fn server_deadline_flush_completes_partial_batches() {
             max_batch: 64,
             max_wait: Duration::from_millis(10),
             workers: 1,
+            ..BatcherConfig::default()
         },
     )
     .unwrap();
@@ -170,10 +172,47 @@ fn server_start_fails_when_every_worker_fails() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            ..BatcherConfig::default()
         },
     );
     let err = format!("{:#}", res.err().expect("start must fail with zero live workers"));
     assert!(err.contains("every worker failed"), "unexpected error: {err}");
+}
+
+#[test]
+fn qos_controller_drives_server_with_shuffled_op_table() {
+    // the OpTable is NOT power-descending: controller answers must be
+    // table indices (carried in LadderEntry), or the server would serve
+    // the wrong rung (the ROADMAP-flagged observe() fragility)
+    let table = OpTable::new(vec![
+        stub_op("mid", 0.7),
+        stub_op("accurate", 0.9),
+        stub_op("frugal", 0.5),
+    ]);
+    let mut controller = QosController::new(
+        table.ladder(),
+        QosConfig {
+            upgrade_margin: 0.0,
+            min_dwell: Duration::ZERO,
+        },
+    );
+    let server =
+        Server::start(|_w| Ok(StubBackend::new(4)), table.clone(), BatcherConfig::default())
+            .unwrap();
+    let t = Instant::now();
+    for (budget, expect_name) in [(1.0, "accurate"), (0.55, "frugal"), (0.75, "mid")] {
+        if let Some(idx) = controller.observe(budget, t + Duration::from_millis(1)) {
+            server.set_operating_point(idx);
+        }
+        assert_eq!(
+            table.get(server.operating_point()).name,
+            expect_name,
+            "budget {budget}"
+        );
+        assert_eq!(controller.current_entry().name, expect_name);
+        assert_eq!(controller.current_table_index(), server.operating_point());
+    }
+    server.shutdown();
 }
 
 #[test]

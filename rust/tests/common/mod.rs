@@ -130,15 +130,8 @@ pub fn build_tiny() -> (Arc<Graph>, Arc<MulDb>, OperatingPoint, Vec<f32>, Vec<f3
     (graph, db, op, images, w1, wfc)
 }
 
-/// A parameter-free OperatingPoint for stub-backend tests (the stub
-/// never reads params; only name/power drive the ladder).
+/// A parameter-free OperatingPoint for stub-backend tests — the shared
+/// constructor lives next to the stub backend itself.
 pub fn stub_op(name: &str, relative_power: f64) -> OperatingPoint {
-    OperatingPoint {
-        name: name.to_string(),
-        assignment: HashMap::new(),
-        params: ModelParams {
-            layers: HashMap::new(),
-        },
-        relative_power,
-    }
+    qos_nets::backend::stub::stub_op(name, relative_power)
 }

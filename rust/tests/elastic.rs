@@ -1,0 +1,199 @@
+//! Elastic-server tests: the scaling supervisor (burst -> grow, idle ->
+//! retire), the draining OP-switch barrier, and per-OP latency
+//! attribution — all stub-backed, no model artifacts needed.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use common::stub_op;
+use qos_nets::backend::{OpTable, StubBackend};
+use qos_nets::server::{BatcherConfig, Server, SwitchMode};
+
+/// Poll `cond` until it holds or `secs` elapse; panics with `what` on
+/// timeout.  Scaling is asynchronous, so assertions must wait, not race.
+fn wait_for(what: &str, secs: u64, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn elastic_cfg() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        min_workers: 1,
+        max_workers: 4,
+        scale_interval: Duration::from_millis(10),
+        scale_up_queue: 4,
+        scale_up_wait: Duration::from_millis(10),
+        scale_up_after: 1,
+        scale_down_after: 5,
+    }
+}
+
+#[test]
+fn worker_pool_grows_under_burst_and_retires_when_idle() {
+    // a slow stub: every batch costs 5 ms, so a burst builds real queue
+    // depth that one worker cannot absorb
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(5))),
+        table,
+        elastic_cfg(),
+    )
+    .unwrap();
+    assert_eq!(server.live_workers(), 1, "pool must start at the floor");
+
+    let mut rxs = Vec::new();
+    for i in 0..300 {
+        rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+    }
+    wait_for("worker pool to grow above its floor", 20, || {
+        server.live_workers() > 1
+    });
+
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    // burst served: the supervisor must retire back down to the floor
+    wait_for("worker pool to retire to its floor", 20, || {
+        server.live_workers() == 1
+    });
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 300);
+    assert!(m.scale_ups >= 1, "scale_ups {}", m.scale_ups);
+    assert!(m.scale_downs >= 1, "scale_downs {}", m.scale_downs);
+    assert!(m.peak_workers >= 2, "peak_workers {}", m.peak_workers);
+    assert!(m.peak_workers <= 4, "peak_workers {}", m.peak_workers);
+}
+
+#[test]
+fn static_pool_never_scales() {
+    // default bounds (0/0 = "same as workers"): no supervisor, fixed pool
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(2))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..100 {
+        rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    assert_eq!(server.live_workers(), 2);
+    let m = server.shutdown();
+    assert_eq!(m.scale_ups, 0);
+    assert_eq!(m.scale_downs, 0);
+    assert_eq!(m.peak_workers, 2);
+}
+
+#[test]
+fn drain_switch_never_lets_a_batch_span_the_op_change() {
+    // single slow worker so batches queue up across the switch point
+    let table = OpTable::new(vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(2))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+
+    // alternate request waves and draining switches; every wave must be
+    // answered entirely under the OP that was current when it was
+    // submitted, with no batch mixing op_index values
+    let mut waves = Vec::new();
+    for wave in 0..4usize {
+        let op = wave % 2;
+        let mut rxs = Vec::new();
+        for i in 0..25 {
+            rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+        }
+        waves.push((op, rxs));
+        server.set_operating_point_with((op + 1) % 2, SwitchMode::Drain).unwrap();
+    }
+
+    let mut batch_ops: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    for (expect_op, rxs) in waves {
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(
+                resp.op_index, expect_op,
+                "a drained switch leaked a request onto the wrong OP"
+            );
+            // two responses sharing a batch_seq must share an op_index
+            let prev = batch_ops.insert(resp.batch_seq, resp.op_index);
+            if let Some(p) = prev {
+                assert_eq!(p, resp.op_index, "batch {} spans an OP switch", resp.batch_seq);
+            }
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 100);
+    assert_eq!(m.per_op_requests, vec![50, 50]);
+}
+
+#[test]
+fn per_op_latency_histograms_attribute_every_request() {
+    let table = OpTable::new(vec![
+        stub_op("accurate", 0.9),
+        stub_op("mid", 0.7),
+        stub_op("frugal", 0.5),
+    ]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4)),
+        table,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+
+    // serve a few requests under every OP, separated by drain barriers
+    // so the attribution is exact
+    for op in 0..3usize {
+        server.set_operating_point_with(op, SwitchMode::Drain).unwrap();
+        let rxs: Vec<_> = (0..10)
+            .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.op_index, op);
+        }
+    }
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 30);
+    assert_eq!(m.per_op_requests, vec![10, 10, 10]);
+    for op in 0..3 {
+        assert_eq!(
+            m.per_op_latency[op].count(),
+            10,
+            "per-OP histogram {op} must hold exactly its requests"
+        );
+        assert!(m.per_op_latency[op].mean_us() > 0.0);
+    }
+    // the aggregate histogram is the union of the per-OP ones
+    assert_eq!(m.latency.count(), 30);
+}

@@ -163,6 +163,7 @@ fn server_round_trip_and_op_switching() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            ..BatcherConfig::default()
         },
     )
     .unwrap();

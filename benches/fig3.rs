@@ -9,8 +9,8 @@ use std::sync::Arc;
 
 use qos_nets::errmodel;
 use qos_nets::muldb::MulDb;
-use qos_nets::pipeline::{self, Experiment};
-use qos_nets::selection;
+use qos_nets::pipeline::Experiment;
+use qos_nets::selection::{self, SearchConfig};
 
 fn main() -> anyhow::Result<()> {
     let name = std::env::var("FIG3_EXP").unwrap_or_else(|_| "table4_mnv2".into());
@@ -41,7 +41,21 @@ fn run(name: &str) -> anyhow::Result<()> {
     let points = selection::preference_vectors(&se, &exp.sigma_g, &exp.scales(), &usable);
     println!("\n# Fig2: clustering space: {} preference vectors (o={} x l={}), dim={}",
         points.len(), exp.scales().len(), se.l, usable.len());
-    let (_, sol) = pipeline::run_search(&exp, &db);
+    // this figure reports search *internals* (cluster -> multiplier
+    // picks), so it calls selection::search directly; the plan-level
+    // view of the same run lives in `report fig3` / the OpPlan artifact
+    let sol = selection::search(
+        &db,
+        &se,
+        &exp.sigma_g,
+        &exp.stats,
+        &SearchConfig {
+            n_multipliers: exp.n_multipliers(),
+            scales: exp.scales(),
+            seed: exp.seed(),
+            restarts: 8,
+        },
+    );
     println!("clusters -> multipliers: {:?}",
         sol.cluster_muls.iter().map(|&m| db.specs[m].name.as_str()).collect::<Vec<_>>());
 

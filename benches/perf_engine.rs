@@ -48,9 +48,15 @@ fn main() -> anyhow::Result<()> {
     for (label, op) in [
         ("exact OP", pipeline::exact_operating_point(&exp)?),
         ("approx OP", {
-            let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-            if let Some((_, power, amap)) = assignments.last() {
-                pipeline::build_operating_point(&exp, "approx", amap.clone(), *power, None)?
+            let plan = qos_nets::plan::OpPlan::load_for(&exp).ok();
+            if let Some((p, pop)) = plan.as_ref().and_then(|p| p.ops.last().map(|o| (p, o))) {
+                pipeline::build_operating_point(
+                    &exp,
+                    "approx",
+                    p.assignment_map(p.ops.len() - 1),
+                    pop.relative_power,
+                    None,
+                )?
             } else {
                 pipeline::exact_operating_point(&exp)?
             }

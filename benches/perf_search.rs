@@ -1,0 +1,85 @@
+//! Planner benchmarks: wall time of every registered mapper over the
+//! generated multiplier family at several layer counts, so future
+//! planner work has a perf trajectory.  Entirely in-memory (synthetic
+//! layer statistics), so this bench always runs — no artifacts needed.
+//!
+//!   cargo bench --bench perf_search
+
+use std::time::Instant;
+
+use qos_nets::errmodel;
+use qos_nets::muldb::MulDb;
+use qos_nets::nn::LayerStats;
+use qos_nets::plan::{self, PlanInputs, Planner};
+
+fn synthetic_stats(l: usize) -> Vec<LayerStats> {
+    (0..l)
+        .map(|i| LayerStats {
+            name: format!("l{i}"),
+            act_hist: vec![1.0 / 256.0; 256],
+            w_hist: vec![1.0 / 256.0; 256],
+            k_fanin: 32 << (i % 4),
+            macs_total: 50_000 * (1 + i % 5),
+            s_act: 0.02,
+            z_act: 128,
+            s_w: 0.01,
+            z_w: 128,
+            bn_scale: 0.4,
+            out_rms: 1.0,
+        })
+        .collect()
+}
+
+fn main() {
+    let db = MulDb::generate();
+    println!(
+        "=== planner wall time ({} multipliers, scales [0.3, 1.0], n=4) ===",
+        db.len()
+    );
+    println!(
+        "{:>6} {:>14} {:>12} {:>12} {:>8} {:>6}",
+        "layers", "planner", "plan ms", "sigma_e ms", "power%", "#AMs"
+    );
+    for &l in &[8usize, 16, 32, 64] {
+        let stats = synthetic_stats(l);
+        let t0 = Instant::now();
+        let se = errmodel::sigma_e(&db, &stats);
+        let sigma_e_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sigma_g: Vec<f64> = (0..l).map(|i| 0.05 + 0.02 * (i % 7) as f64).collect();
+        let layer_names: Vec<String> = (0..l).map(|i| format!("l{i}")).collect();
+        let inputs = PlanInputs {
+            db: &db,
+            se: &se,
+            sigma_g: &sigma_g,
+            stats: &stats,
+            layer_names: &layer_names,
+            scales: vec![0.3, 1.0],
+            n_multipliers: 4,
+            seed: 7,
+            experiment: "synthetic".into(),
+        };
+        for planner in plan::all_planners() {
+            // best-of-3: planners are deterministic, so the spread is
+            // allocator/cache noise only
+            let mut best = f64::MAX;
+            let mut last = None;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let p = planner.plan(&inputs).expect("planner failed");
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+                last = Some(p);
+            }
+            let p = last.unwrap();
+            let frugal = p.ops.last().unwrap();
+            println!(
+                "{:>6} {:>14} {:>12.3} {:>12.1} {:>7.1}% {:>6}",
+                l,
+                planner.name(),
+                best,
+                sigma_e_ms,
+                100.0 * frugal.relative_power,
+                p.subset.len()
+            );
+        }
+    }
+}

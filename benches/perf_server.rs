@@ -125,9 +125,15 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n=== operating-point switch cost ===");
-    let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-    if let Some((_, power, amap)) = assignments.last() {
-        let op2 = pipeline::build_operating_point(&exp, "op", amap.clone(), *power, None)?;
+    let plan = qos_nets::plan::OpPlan::load_for(&exp).ok();
+    if let Some((p, pop)) = plan.as_ref().and_then(|p| p.ops.last().map(|o| (p, o))) {
+        let op2 = pipeline::build_operating_point(
+            &exp,
+            "op",
+            p.assignment_map(p.ops.len() - 1),
+            pop.relative_power,
+            None,
+        )?;
         let server = Server::start_native(
             exp.graph.clone(),
             db.clone(),

@@ -16,6 +16,7 @@ use qos_nets::baselines::{self, alwann};
 use qos_nets::errmodel;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan::OpPlan;
 
 // Paper Table 2 reference rows: (model, method, power reduction %, top-1 loss pp)
 const PAPER: &[(&str, &str, f64, f64)] = &[
@@ -67,10 +68,9 @@ fn main() -> anyhow::Result<()> {
         methods.push((format!("Homogeneous [2] ({})", db.specs[hom].name), vec![hom; se.l]));
         methods.push(("LVRM-style [15]".into(), baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, 1.0)));
         methods.push(("PNAM-style [14]".into(), baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, 1.0)));
-        let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-        if let Some((_, _, amap)) = assignments.last() {
-            let a: Vec<usize> = exp.layer_names.iter().map(|n| amap[n]).collect();
-            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), a));
+        let plan = OpPlan::load_for(&exp).ok();
+        if let Some(op) = plan.as_ref().and_then(|p| p.ops.last()) {
+            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), op.assignment.clone()));
         }
 
         println!(
@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
             let raw = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(512))?;
             // the QoS-Nets row additionally gets its stage-B retrained overlay
             let tuned = if mname.starts_with("QoS-Nets") {
-                let idx = assignments.len() - 1;
+                let idx = plan.as_ref().map(|p| p.ops.len()).unwrap_or(1) - 1;
                 let overlay = exp.dir.join(format!("params_full_op{idx}.qten"));
                 if overlay.exists() {
                     let op2 = pipeline::build_operating_point(&exp, &mname, amap, power, Some(&overlay))?;

@@ -39,10 +39,9 @@ fn main() -> anyhow::Result<()> {
             ("TPM-style [13]".into(), baselines::tpm_threshold(&db, &se, &exp.sigma_g, 1.0)),
             ("PNAM-style [14]".into(), baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, 1.0)),
         ];
-        let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-        if let Some((_, _, amap)) = assignments.last() {
-            let a: Vec<usize> = exp.layer_names.iter().map(|n| amap[n]).collect();
-            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), a));
+        let plan = qos_nets::plan::OpPlan::load_for(&exp).ok();
+        if let Some(op) = plan.as_ref().and_then(|p| p.ops.last()) {
+            methods.push((format!("QoS-Nets o=1 n={}", exp.n_multipliers()), op.assignment.clone()));
         }
 
         println!("{:28} {:>10} {:>7} {:>14}", "method", "power red.", "#AMs", "top1 loss[pp]");
@@ -57,7 +56,7 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             // use the full-retrained overlay for QoS-Nets when available
             let overlay = if mname.starts_with("QoS-Nets") {
-                let idx = assignments.len() - 1;
+                let idx = plan.as_ref().map(|p| p.ops.len()).unwrap_or(1) - 1;
                 let p = exp.dir.join(format!("params_full_op{idx}.qten"));
                 p.exists().then_some(p)
             } else {

@@ -10,6 +10,7 @@ use qos_nets::baselines;
 use qos_nets::errmodel;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan::OpPlan;
 use qos_nets::util::json;
 
 fn main() -> anyhow::Result<()> {
@@ -37,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         n_params / 1e6
     );
 
-    let assignments = pipeline::read_assignment(&exp)?;
+    let plan = OpPlan::load_for(&exp)?;
     println!(
         "{:30} {:>6} {:>22} {:>22} {:>6} {:>9}",
         "method", "", "rel. power / OP", "top5 loss [pp] / OP", "#AMs", "params"
@@ -52,17 +53,23 @@ fn main() -> anyhow::Result<()> {
         let mut powers = Vec::new();
         let mut losses = Vec::new();
         let mut used: std::collections::BTreeSet<usize> = Default::default();
-        for (i, (_s, power, amap)) in assignments.iter().enumerate() {
-            used.extend(amap.values().cloned());
+        for (i, pop) in plan.ops.iter().enumerate() {
+            used.extend(pop.assignment.iter().cloned());
             let overlay = match mode {
                 "bn" => Some(exp.dir.join(format!("bn_op{i}.qten"))),
                 "full" => Some(exp.dir.join(format!("params_full_op{i}.qten"))),
                 _ => None,
             }
             .filter(|p| p.exists());
-            let op = pipeline::build_operating_point(&exp, &format!("op{i}"), amap.clone(), *power, overlay.as_deref())?;
+            let op = pipeline::build_operating_point(
+                &exp,
+                &pop.name,
+                plan.assignment_map(i),
+                pop.relative_power,
+                overlay.as_deref(),
+            )?;
             let r = pipeline::eval_operating_point(&exp, &db, &op, 16, Some(limit))?;
-            powers.push(format!("{:.1}%", 100.0 * power));
+            powers.push(format!("{:.1}%", 100.0 * pop.relative_power));
             losses.push(format!("{:.2}", 100.0 * (base.top5 - r.top5)));
         }
         println!(
@@ -112,8 +119,9 @@ fn main() -> anyhow::Result<()> {
         let mut powers = Vec::new();
         let mut losses = Vec::new();
         let mut used: std::collections::BTreeSet<usize> = Default::default();
-        for (_s, power, _) in &assignments {
+        for pop in &plan.ops {
             // pick the single instance whose network power is closest
+            let power = pop.relative_power;
             let sweep = baselines::homogeneous_sweep(&db, &se, &exp.sigma_g, &exp.stats);
             let (mid, p, _) = sweep
                 .into_iter()

@@ -1,16 +1,16 @@
-//! Baseline shoot-out on one experiment: every mapping algorithm from
-//! paper Table 1 run on identical inputs, evaluated with the bit-exact
-//! LUT engine (no retraining — isolates the *mapping* quality).
+//! Baseline shoot-out on one experiment: **every registered planner**
+//! (paper Table 1) run through the one `Planner` code path on identical
+//! inputs, evaluated with the bit-exact LUT engine (no retraining —
+//! isolates the *mapping* quality).
 //!
 //!   cargo run --release --example compare_baselines -- [exp] [limit]
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
-use qos_nets::baselines::{self, alwann};
 use qos_nets::errmodel;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan::{self, PlanInputs, Planner};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -20,65 +20,33 @@ fn main() -> anyhow::Result<()> {
     let exp = Experiment::load("artifacts", exp_name)?;
     let db = Arc::new(MulDb::load("artifacts")?);
     let se = errmodel::sigma_e(&db, &exp.stats);
-
-    let mut methods: Vec<(String, Vec<usize>)> = vec![
-        (
-            "gradient_search[16]".into(),
-            baselines::gradient_search(&db, &se, &exp.sigma_g, 1.0),
-        ),
-        (
-            "lvrm_style[15]".into(),
-            baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, 1.0),
-        ),
-        (
-            "pnam_style[14]".into(),
-            baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, 1.0),
-        ),
-        (
-            "tpm_style[13]".into(),
-            baselines::tpm_threshold(&db, &se, &exp.sigma_g, 1.0),
-        ),
-    ];
-    let hom = baselines::homogeneous_pick(&db, &se, &exp.sigma_g, &exp.stats, 0.0);
-    methods.push((format!("homogeneous[2] ({})", db.specs[hom].name), vec![hom; se.l]));
-    let front = alwann::evolve(
-        &db,
-        &se,
-        &exp.sigma_g,
-        &exp.stats,
-        &alwann::GaConfig { n_tiles: exp.n_multipliers(), seed: 1, ..Default::default() },
-    );
-    if let Some(best) = alwann::pick_feasible(&front) {
-        methods.push(("alwann_ga[9]".into(), best.chromosome.assignment()));
-    }
-    let (_, sol) = pipeline::run_search(&exp, &db);
-    methods.push((
-        format!("qos_nets (n={})", exp.n_multipliers()),
-        sol.assignment.last().unwrap().clone(),
-    ));
+    let inputs = PlanInputs::from_experiment(&exp, &db, &se);
 
     let exact = pipeline::exact_operating_point(&exp)?;
     let base = pipeline::eval_operating_point(&exp, &db, &exact, 32, Some(limit))?;
     println!("baseline top1 {:.2}% (n={})\n", 100.0 * base.top1, base.n);
     println!(
-        "{:32} {:>8} {:>7} {:>9} {:>10}",
-        "method", "power", "#AMs", "top1", "loss[pp]"
+        "{:14} {:>8} {:>7} {:>9} {:>10}",
+        "planner", "power", "#AMs", "top1", "loss[pp]"
     );
-    for (name, assignment) in methods {
-        let amap: HashMap<String, usize> = exp
-            .layer_names
-            .iter()
-            .cloned()
-            .zip(assignment.iter().cloned())
-            .collect();
-        let power = errmodel::relative_power(&db, &exp.stats, &assignment);
-        let distinct: std::collections::BTreeSet<usize> = assignment.iter().cloned().collect();
-        let op = pipeline::build_operating_point(&exp, &name, amap, power, None)?;
+    for planner in plan::all_planners() {
+        let p = planner.plan(&inputs)?;
+        // judge every method at the same tolerance: the scale-1.0 rung
+        let pop = p.ops.last().expect("plan has no operating points");
+        let op = pipeline::build_operating_point(
+            &exp,
+            planner.name(),
+            p.assignment_map(p.ops.len() - 1),
+            pop.relative_power,
+            None,
+        )?;
         let r = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(limit))?;
+        let distinct: std::collections::BTreeSet<usize> =
+            pop.assignment.iter().cloned().collect();
         println!(
-            "{:32} {:>7.2}% {:>7} {:>8.2}% {:>10.2}",
-            name,
-            100.0 * power,
+            "{:14} {:>7.2}% {:>7} {:>8.2}% {:>10.2}",
+            planner.name(),
+            100.0 * pop.relative_power,
             distinct.len(),
             100.0 * r.top1,
             100.0 * (base.top1 - r.top1)

@@ -16,7 +16,8 @@ use std::time::{Duration, Instant};
 
 use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
-use qos_nets::pipeline::{self, Experiment};
+use qos_nets::pipeline::Experiment;
+use qos_nets::plan::OpPlan;
 use qos_nets::qos::envsim::{EnvConfig, EnvSimulator};
 use qos_nets::qos::{QosConfig, QosController};
 use qos_nets::server::{BatcherConfig, Server};
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     let exp = Experiment::load("artifacts", exp_name)?;
     let db = Arc::new(MulDb::load("artifacts")?);
-    let ops = pipeline::load_operating_points(&exp, "bn")?;
+    let ops = OpPlan::load_for(&exp)?.load_operating_points(&exp, "bn")?;
     anyhow::ensure!(!ops.is_empty(), "run `qos-nets search --exp {exp_name}` first");
     let table = OpTable::new(ops);
     let mut controller = QosController::new(table.ladder(), QosConfig::default());

@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 use qos_nets::backend::OpTable;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan::OpPlan;
 use qos_nets::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use qos_nets::server::{BatcherConfig, Server};
 use qos_nets::util::rng::Rng;
@@ -29,8 +30,9 @@ fn main() -> anyhow::Result<()> {
 
     let exp = Experiment::load("artifacts", exp_name)?;
     let db = Arc::new(MulDb::load("artifacts")?);
-    // operating points, BN-tuned when stage B overlays exist
-    let ops = pipeline::load_operating_points(&exp, "bn")?;
+    // the stored plan's operating points, BN-tuned when stage B
+    // overlays exist (same handoff the `serve` command uses)
+    let ops = OpPlan::load_for(&exp)?.load_operating_points(&exp, "bn")?;
     anyhow::ensure!(!ops.is_empty(), "run `qos-nets search --exp {exp_name}` first");
     let table = OpTable::new(ops);
     let mut controller = QosController::new(table.ladder(), QosConfig::default());

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -20,13 +21,14 @@ fn main() -> anyhow::Result<()> {
     println!("experiment: {} ({} approximable layers)", exp.name, exp.layer_names.len());
     println!("search space: {} multipliers, n = {}, scales = {:?}", db.len(), exp.n_multipliers(), exp.scales());
 
-    // 1. constrained multi-OP search (error model -> preference vectors
-    //    -> k-means -> per-centroid multiplier pick)
-    let (_, sol) = pipeline::run_search(&exp, &db);
-    pipeline::write_assignment(&exp, &db, &sol)?;
+    // 1. constrained multi-OP search through the unified Planner API
+    //    (error model -> preference vectors -> k-means -> per-centroid
+    //    multiplier pick); any registered --algo goes through this path
+    let plan = plan::plan_experiment("qos", &exp, &db)?;
+    plan.save_for(&exp)?;
     println!("\nselected subset:");
-    for &mid in &sol.subset {
-        println!("  {} (relative power {:.3})", db.specs[mid].name, db.power(mid));
+    for m in &plan.subset {
+        println!("  {} (relative power {:.3})", m.name, m.power);
     }
 
     // 2. evaluate the exact baseline + every operating point
@@ -34,29 +36,17 @@ fn main() -> anyhow::Result<()> {
     let base = pipeline::eval_operating_point(&exp, &db, &exact, 32, Some(256))?;
     println!("\n8-bit baseline (exact multipliers): top1 {:.2}%", 100.0 * base.top1);
 
-    for (i, assignment) in sol.assignment.iter().enumerate() {
-        let amap = exp
-            .layer_names
-            .iter()
-            .cloned()
-            .zip(assignment.iter().cloned())
-            .collect();
-        // use the BN-tuned overlay when stage B has produced one
-        let overlay = exp.dir.join(format!("bn_op{i}.qten"));
-        let op = pipeline::build_operating_point(
-            &exp,
-            &format!("op{i}"),
-            amap,
-            sol.power[i],
-            overlay.exists().then_some(overlay.as_path()),
-        )?;
-        let r = pipeline::eval_operating_point(&exp, &db, &op, 32, Some(256))?;
+    // the same plan -> OperatingPoint handoff eval/serve use ("bn"
+    // picks up the stage-B overlays when they exist)
+    for (op, pop) in plan.load_operating_points(&exp, "bn")?.iter().zip(&plan.ops) {
+        let r = pipeline::eval_operating_point(&exp, &db, op, 32, Some(256))?;
         println!(
-            "OP{i}: multiplication power {:.1}% | top1 {:.2}% ({:+.2}pp vs baseline){}",
-            100.0 * sol.power[i],
+            "{}: multiplication power {:.1}% | top1 {:.2}% ({:+.2}pp vs baseline) [scale {:.2}]",
+            pop.name,
+            100.0 * pop.relative_power,
             100.0 * r.top1,
             100.0 * (r.top1 - base.top1),
-            if overlay.exists() { " [BN-tuned]" } else { " [no retraining]" },
+            pop.scale,
         );
     }
     println!("\n(run `python -m compile.aot retrain --exp quick` for the BN overlays)");

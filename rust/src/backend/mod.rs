@@ -11,7 +11,9 @@
 //!   * [`Backend`]       prepare an OP ladder once, then `forward` by index
 //!   * [`OpTable`]       the shared, immutable ladder of operating points
 //!   * [`NativeBackend`] wraps [`crate::engine::Engine`] (bit-exact LUTs)
-//!   * [`PjrtBackend`]   wraps [`crate::runtime`] (AOT HLO, low-rank error)
+//!   * `PjrtBackend`     wraps the PJRT runtime (AOT HLO, low-rank error);
+//!     behind the `pjrt` cargo feature, which needs the `xla_extension`
+//!     archive at build time
 //!   * [`StubBackend`]   deterministic in-memory backend for tests/benches
 //!   * [`evaluate`]      top-1/top-5 accuracy, written once against the trait
 //!
@@ -20,6 +22,7 @@
 //! pick it up unchanged.
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod stub;
 
@@ -29,6 +32,7 @@ use crate::engine::OperatingPoint;
 use crate::qos::LadderEntry;
 
 pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use stub::StubBackend;
 

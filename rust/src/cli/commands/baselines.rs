@@ -1,71 +1,55 @@
-//! `qos-nets baselines`: run every baseline mapping algorithm on the
-//! same error model and print the power/penalty table.
+//! `qos-nets baselines`: run **every registered planner** (baselines
+//! and QoS-Nets alike) through the one [`crate::plan::Planner`] code
+//! path on identical inputs and print the comparison table — the
+//! paper's Table 1 shape, with QoS-Nets as the last row.
 
 use anyhow::Result;
 
-use crate::baselines::{self, alwann};
+use crate::baselines;
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
 use crate::errmodel;
-use crate::pipeline;
+use crate::plan::{self, PlanInputs, Planner};
 
 pub fn run(args: &Args) -> Result<()> {
     let exp = load_experiment(args)?;
     let db = load_db(args)?;
     let se = errmodel::sigma_e(&db, &exp.stats);
-    let scale = args.get_f64("scale", 1.0);
-
-    let mut rows: Vec<(String, Vec<usize>)> = Vec::new();
-    rows.push((
-        "gradient_search[16]".into(),
-        baselines::gradient_search(&db, &se, &exp.sigma_g, scale),
-    ));
-    rows.push((
-        "lvrm_style[15]".into(),
-        baselines::lvrm_divide_conquer(&db, &se, &exp.sigma_g, scale),
-    ));
-    rows.push((
-        "pnam_style[14]".into(),
-        baselines::pnam_mapping(&db, &se, &exp.sigma_g, &exp.stats, scale),
-    ));
-    rows.push((
-        "tpm_style[13]".into(),
-        baselines::tpm_threshold(&db, &se, &exp.sigma_g, scale),
-    ));
-    let hom = baselines::homogeneous_pick(&db, &se, &exp.sigma_g, &exp.stats, 0.0);
-    rows.push((format!("homogeneous[2]:{}", db.specs[hom].name), vec![hom; se.l]));
-    let ga = alwann::evolve(
-        &db,
-        &se,
-        &exp.sigma_g,
-        &exp.stats,
-        &alwann::GaConfig {
-            n_tiles: exp.n_multipliers(),
-            seed: exp.seed(),
-            ..Default::default()
-        },
-    );
-    if let Some(best) = alwann::pick_feasible(&ga) {
-        rows.push(("alwann_ga[9]".into(), best.chromosome.assignment()));
-    }
-    let (_, sol) = pipeline::run_search(&exp, &db);
-    rows.push(("qos_nets(op_last)".into(), sol.assignment.last().unwrap().clone()));
+    let inputs = PlanInputs::from_experiment(&exp, &db, &se);
 
     println!(
-        "{:28} {:>8} {:>9} {:>7} {:>6}",
-        "method", "power", "penalty", "#AMs", "layers"
+        "[{}] {} layers x {} multipliers, scales {:?}, budget n={}",
+        exp.name,
+        se.l,
+        se.m,
+        inputs.scales,
+        inputs.n_multipliers
     );
-    for (name, a) in &rows {
-        let power = errmodel::relative_power(&db, &exp.stats, a);
-        let pen = baselines::quality_penalty(&se, &exp.sigma_g, a);
-        let distinct: std::collections::BTreeSet<usize> = a.iter().cloned().collect();
+    println!(
+        "{:14} {:>8} {:>9} {:>7} {:>5}  description",
+        "planner", "power", "penalty", "#AMs", "OPs"
+    );
+    for planner in plan::all_planners() {
+        let p = match planner.plan(&inputs) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{}: planning failed: {e:#}", planner.name());
+                continue;
+            }
+        };
+        // report the scale-1.0 rung (last by convention) so every row
+        // is judged against the same tolerance
+        let op = p.ops.last().expect("planner produced no operating points");
+        let scaled: Vec<f64> = exp.sigma_g.iter().map(|g| op.scale * g).collect();
+        let pen = baselines::quality_penalty(&se, &scaled, &op.assignment);
         println!(
-            "{:28} {:>7.2}% {:>9.4} {:>7} {:>6}",
-            name,
-            100.0 * power,
+            "{:14} {:>7.2}% {:>9.4} {:>7} {:>5}  {}",
+            planner.name(),
+            100.0 * op.relative_power,
             pen,
-            distinct.len(),
-            a.len()
+            p.subset.len(),
+            p.ops.len(),
+            planner.describe()
         );
     }
     Ok(())

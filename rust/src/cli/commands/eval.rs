@@ -7,10 +7,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::backend::{self, Backend, NativeBackend, PjrtBackend};
+#[cfg(feature = "pjrt")]
+use crate::backend::PjrtBackend;
+use crate::backend::{self, Backend, NativeBackend};
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
 use crate::pipeline::{self, Experiment};
+use crate::plan::OpPlan;
 
 pub fn run(args: &Args) -> Result<()> {
     let which = args.get_or("backend", "native").to_string();
@@ -28,6 +31,7 @@ pub(crate) fn make_backend(
 ) -> Result<Box<dyn Backend>> {
     match which {
         "native" => Ok(Box::new(NativeBackend::new(exp.graph.clone(), load_db(args)?))),
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let mut be = PjrtBackend::open(
                 &exp.artifacts,
@@ -38,6 +42,11 @@ pub(crate) fn make_backend(
             be.set_bn_overlays(mode != "none");
             println!("PJRT platform: {}", be.platform());
             Ok(Box::new(be))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = mode;
+            bail!("this build has no PJRT support (rebuild with the `pjrt` feature)")
         }
         other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
@@ -52,8 +61,10 @@ pub fn run_with_backend(args: &Args, which: &str, default_limit: Option<usize>) 
     let limit = args.get("limit").and_then(|s| s.parse().ok()).or(default_limit);
 
     // table[0] is the exact 8-bit baseline, table[1..] the OP ladder
+    // from the stored plan (any registered planner writes the same shape)
+    let plan = OpPlan::load_for(&exp)?;
     let mut table = vec![pipeline::exact_operating_point(&exp)?];
-    table.extend(pipeline::load_operating_points(&exp, mode)?);
+    table.extend(plan.load_operating_points(&exp, mode)?);
 
     let mut be = make_backend(args, &exp, which, mode)?;
     be.prepare(&table)?;

@@ -5,7 +5,7 @@ use anyhow::{bail, Result};
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
 use crate::errmodel;
-use crate::pipeline;
+use crate::plan::{self, OpPlan};
 use crate::selection;
 use crate::util::json::{self, Json};
 
@@ -36,7 +36,7 @@ pub fn run(args: &Args) -> Result<()> {
             let usable = selection::usable_multipliers(&se, &exp.sigma_g, &exp.scales());
             let points =
                 selection::preference_vectors(&se, &exp.sigma_g, &exp.scales(), &usable);
-            let (_, sol) = pipeline::run_search(&exp, &db);
+            let sol = plan::plan_experiment("qos", &exp, &db)?;
             let l = exp.layer_names.len();
             let mut rows = Vec::new();
             for (idx, p) in points.iter().enumerate() {
@@ -49,7 +49,7 @@ pub fn run(args: &Args) -> Result<()> {
                     ),
                     (
                         "multiplier",
-                        Json::num(sol.assignment[idx / l][idx % l] as f64),
+                        Json::num(sol.ops[idx / l].assignment[idx % l] as f64),
                     ),
                 ]));
             }
@@ -57,16 +57,22 @@ pub fn run(args: &Args) -> Result<()> {
         }
         "fig3" => {
             // per-layer multiplier assignment per OP + power lines (paper Fig. 3)
-            let assignments = pipeline::read_assignment(&exp)?;
-            anyhow::ensure!(!assignments.is_empty(), "run `search` first");
-            for (i, (scale, power, amap)) in assignments.iter().enumerate() {
-                println!("# OP{i} scale={scale} relative_power={:.4}", power);
+            let plan = OpPlan::load_for(&exp)?;
+            anyhow::ensure!(!plan.ops.is_empty(), "plan has no operating points; re-run `search`");
+            for op in &plan.ops {
+                println!(
+                    "# {} scale={} relative_power={:.4}",
+                    op.name, op.scale, op.relative_power
+                );
                 println!("layer_index,layer,multiplier_id,multiplier,power");
-                for (k, name) in exp.layer_names.iter().enumerate() {
-                    let mid = *amap.get(name).unwrap_or(&0);
+                for (k, name) in plan.layer_names.iter().enumerate() {
+                    let mid = op.assignment[k];
                     println!("{k},{name},{mid},{},{:.3}", db.specs[mid].name, db.power(mid));
                 }
                 println!();
+            }
+            if let Some(p) = &plan.provenance {
+                println!("# planner={} seed={} config_hash={}", p.planner, p.seed, p.config_hash);
             }
         }
         other => bail!("unknown report {other:?} (fig1|fig2|fig3)"),

@@ -1,4 +1,8 @@
-//! `qos-nets search`: the QoS-Nets clustered multi-OP search.
+//! `qos-nets search --algo <planner>`: run any registered mapper — the
+//! QoS-Nets clustered search (default) or one of the baselines — and
+//! write the typed, versioned `OpPlan` to `assignment.json`.  Every
+//! algorithm goes through the same [`crate::plan::Planner`] code path,
+//! so the artifact that reaches eval/serving is identical in shape.
 
 use std::time::Instant;
 
@@ -6,40 +10,42 @@ use anyhow::Result;
 
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
-use crate::pipeline;
+use crate::plan;
 
 pub fn run(args: &Args) -> Result<()> {
     let exp = load_experiment(args)?;
     let db = load_db(args)?;
+    let algo = args.get_or("algo", "qos");
     let t0 = Instant::now();
-    let (se, sol) = pipeline::run_search(&exp, &db);
-    let path = pipeline::write_assignment(&exp, &db, &sol)?;
+    let plan = plan::plan_experiment(algo, &exp, &db)?;
+    let path = plan.save_for(&exp)?;
     println!(
-        "[{}] search over {} layers x {} multipliers, {} operating points in {:?}",
+        "[{}] planner `{algo}` over {} layers x {} multipliers, {} operating points in {:?}",
         exp.name,
-        se.l,
-        se.m,
-        exp.scales().len(),
+        plan.layer_names.len(),
+        db.len(),
+        plan.ops.len(),
         t0.elapsed()
     );
     println!(
-        "subset ({} of n={}): {}",
-        sol.subset.len(),
-        exp.n_multipliers(),
-        sol.subset
+        "subset ({} of budget {}): {}",
+        plan.subset.len(),
+        plan.n_multipliers,
+        plan.subset
             .iter()
-            .map(|&m| db.specs[m].name.clone())
+            .map(|m| m.name.as_str())
             .collect::<Vec<_>>()
             .join(", ")
     );
-    for (i, p) in sol.power.iter().enumerate() {
+    for op in &plan.ops {
         println!(
-            "  OP{i} (scale {:.2}): relative multiplication power {:.2}% (saving {:.1}%)",
-            exp.scales()[i],
-            100.0 * p,
-            100.0 * (1.0 - p)
+            "  {} (scale {:.2}): relative multiplication power {:.2}% (saving {:.1}%)",
+            op.name,
+            op.scale,
+            100.0 * op.relative_power,
+            100.0 * (1.0 - op.relative_power)
         );
     }
-    println!("wrote {}", path.display());
+    println!("wrote {} (plan version {})", path.display(), plan::PLAN_VERSION);
     Ok(())
 }

@@ -1,19 +1,39 @@
 //! `qos-nets selftest`: cross-layer integration checks — PJRT kernel
 //! artifact vs the native LUT hot loop (bit-exact), and the PJRT model
-//! artifact vs the native engine through the unified [`Backend`] trait.
+//! artifact vs the native engine through the unified `Backend` trait.
+//! Requires the `pjrt` cargo feature (the whole point is the
+//! cross-substrate comparison).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::backend::{Backend, NativeBackend, PjrtBackend};
+#[cfg(feature = "pjrt")]
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
+#[cfg(feature = "pjrt")]
 use crate::engine::lutmm;
+#[cfg(feature = "pjrt")]
 use crate::pipeline;
+#[cfg(feature = "pjrt")]
+use crate::plan::OpPlan;
+#[cfg(feature = "pjrt")]
 use crate::runtime;
+#[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
 
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "selftest compares the PJRT artifacts against the native engine; \
+         rebuild with the `pjrt` feature (on by default)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 pub fn run(args: &Args) -> Result<()> {
     let exp = load_experiment(args)?;
     let db = load_db(args)?;
@@ -72,11 +92,9 @@ pub fn run(args: &Args) -> Result<()> {
     let (images, labels) = exp.load_testset()?;
     let elems = exp.image_elems();
     let classes = exp.num_classes();
-    let assignments = pipeline::read_assignment(&exp).unwrap_or_default();
-    let amap: HashMap<String, usize> = if assignments.is_empty() {
-        exp.layer_names.iter().map(|l| (l.clone(), 0usize)).collect()
-    } else {
-        assignments.last().unwrap().2.clone()
+    let amap: HashMap<String, usize> = match OpPlan::load_for(&exp) {
+        Ok(plan) if !plan.ops.is_empty() => plan.assignment_map(plan.ops.len() - 1),
+        _ => exp.layer_names.iter().map(|l| (l.clone(), 0usize)).collect(),
     };
     let op = pipeline::build_operating_point(&exp, "st", amap, 1.0, None)?;
     let table = [op];

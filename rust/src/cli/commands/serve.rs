@@ -8,10 +8,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::backend::{Backend, NativeBackend, OpTable, PjrtBackend};
+#[cfg(feature = "pjrt")]
+use crate::backend::PjrtBackend;
+use crate::backend::{Backend, NativeBackend, OpTable};
 use crate::cli::commands::{load_db, load_experiment};
 use crate::cli::Args;
-use crate::pipeline::{self, Experiment};
+use crate::pipeline::Experiment;
+use crate::plan::OpPlan;
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
 use crate::util::rng::Rng;
@@ -21,8 +24,10 @@ pub fn run(args: &Args) -> Result<()> {
     let mode = args.get_or("mode", "bn");
     let which = args.get_or("backend", "native");
 
-    let ops = pipeline::load_operating_points(&exp, mode)?;
-    anyhow::ensure!(!ops.is_empty(), "no operating points; run `search` first");
+    // the stored plan (written by any registered planner) is the single
+    // source of the served OP ladder
+    let ops = OpPlan::load_for(&exp)?.load_operating_points(&exp, mode)?;
+    anyhow::ensure!(!ops.is_empty(), "plan has no operating points; re-run `search`");
     let table = OpTable::new(ops);
     let controller = QosController::new(table.ladder(), QosConfig::default());
 
@@ -53,6 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
             )?;
             drive(args, &exp, server, controller)
         }
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let artifacts = exp.artifacts.clone();
             let dir = exp.dir.clone();
@@ -70,6 +76,8 @@ pub fn run(args: &Args) -> Result<()> {
             )?;
             drive(args, &exp, server, controller)
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT support (rebuild with the `pjrt` feature)"),
         other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
 }

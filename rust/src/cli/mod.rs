@@ -66,9 +66,14 @@ USAGE: qos-nets <command> [--flags]
 
 COMMANDS
   muldb                         print the approximate-multiplier family
-  search    --exp E             run the QoS-Nets clustered search, write
-                                artifacts/E/assignment.json
-  baselines --exp E             run all baseline mapping algorithms
+  search    --exp E [--algo A]  run a registered planner and write the
+                                typed OpPlan to artifacts/E/assignment.json
+                                (A: qos|alwann|homogeneous|lvrm|pnam|tpm|
+                                gradient, default qos; every algorithm
+                                goes through the same Planner code path)
+  baselines --exp E             run every registered planner on identical
+                                inputs, print one comparison table
+                                (paper Table 1 shape, qos included)
   eval      --exp E [--backend B] [--mode M]
                                 evaluate every operating point through the
                                 unified Backend trait (B: native|pjrt,

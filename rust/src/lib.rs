@@ -20,8 +20,12 @@
 //!   * [`errmodel`]  sigma_e error model (paper Fig. 1)
 //!   * [`selection`] preference vectors + k-means search (Sec. 3.1, 3.2)
 //!   * [`baselines`] ALWANN GA, homogeneous, gradient search, LVRM/PNAM/TPM
+//!   * [`plan`]      unified `Planner` trait + typed `OpPlan` artifact: one
+//!     planning API over the QoS-Nets search and every baseline mapper
 //!   * [`engine`]    native bit-exact LUT inference engine
-//!   * [`runtime`]   PJRT loader/executor for the AOT HLO artifacts
+//!   * `runtime`     PJRT loader/executor for the AOT HLO artifacts
+//!     (behind the `pjrt` feature; `--no-default-features` builds the
+//!     native + stub paths without the `xla_extension` archive)
 //!   * [`backend`]   unified `Backend` trait + OpTable over both engines
 //!   * [`qos`]       operating-point controller (budget + hysteresis +
 //!     switch-mode policy)
@@ -40,7 +44,9 @@ pub mod errmodel;
 pub mod muldb;
 pub mod nn;
 pub mod pipeline;
+pub mod plan;
 pub mod qos;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod selection;
 pub mod server;

@@ -1,5 +1,9 @@
-//! End-to-end orchestration: glue between exported artifacts, the search
-//! algorithms, the unified inference backends and the report generators.
+//! End-to-end orchestration: loading stage-A artifacts into an
+//! [`Experiment`] and turning stored assignments into engine
+//! [`OperatingPoint`]s.  Planning itself (search algorithms and the
+//! `assignment.json` round trip) lives behind the [`crate::plan`]
+//! `Planner`/`OpPlan` seam; this module keeps the artifact-level
+//! building blocks those plans are materialized with.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -9,10 +13,8 @@ use anyhow::{Context, Result};
 
 use crate::backend::{self, Backend, NativeBackend};
 use crate::engine::OperatingPoint;
-use crate::errmodel::{self, SigmaE};
 use crate::muldb::MulDb;
 use crate::nn::{self, Graph, LayerStats, ModelParams};
-use crate::selection::{self, SearchConfig, Solution};
 use crate::util::json::{self, Json};
 use crate::util::tensorio::{self, Tensor};
 
@@ -34,21 +36,20 @@ impl Experiment {
         let dir = artifacts.join(name);
         let graph = Arc::new(Graph::load(dir.join("graph.json"))?);
         let (layer_names, mut sigma_g) = nn::load_sensitivity(dir.join("sensitivity.json"))?;
+        // exp.json is read and parsed exactly once; both the tolerance
+        // factor and the retained config come from the same parse
+        let exp_raw = std::fs::read_to_string(dir.join("exp.json"))?;
+        let exp = json::parse(&exp_raw).map_err(anyhow::Error::msg)?;
+        let config = exp.req("config").map_err(anyhow::Error::msg)?.clone();
         // deterministic-error safety factor (see configs.py tolerance_factor)
-        let exp_raw_cfg = std::fs::read_to_string(dir.join("exp.json"))?;
-        let exp_cfg = json::parse(&exp_raw_cfg).map_err(anyhow::Error::msg)?;
-        let kappa = exp_cfg
-            .get("config")
-            .and_then(|c| c.get("tolerance_factor"))
+        let kappa = config
+            .get("tolerance_factor")
             .and_then(|v| v.as_f64())
             .unwrap_or(0.3);
         for s in sigma_g.iter_mut() {
             *s *= kappa;
         }
         let stats = nn::load_layer_stats(dir.join("layer_stats.json"), &layer_names)?;
-        let exp_raw = std::fs::read_to_string(dir.join("exp.json"))?;
-        let exp = json::parse(&exp_raw).map_err(anyhow::Error::msg)?;
-        let config = exp.req("config").map_err(anyhow::Error::msg)?.clone();
         Ok(Experiment {
             name: name.to_string(),
             dir,
@@ -104,91 +105,6 @@ impl Experiment {
     }
 }
 
-/// Run the QoS-Nets search for an experiment; returns (sigma_e, solution).
-pub fn run_search(exp: &Experiment, db: &MulDb) -> (SigmaE, Solution) {
-    let se = errmodel::sigma_e(db, &exp.stats);
-    let cfg = SearchConfig {
-        n_multipliers: exp.n_multipliers(),
-        scales: exp.scales(),
-        seed: exp.seed(),
-        restarts: 8,
-    };
-    let sol = selection::search(db, &se, &exp.sigma_g, &exp.stats, &cfg);
-    (se, sol)
-}
-
-/// assignment.json payload consumed by the Python stage B and by `eval`.
-pub fn solution_to_json(exp: &Experiment, db: &MulDb, sol: &Solution) -> Json {
-    let scales = exp.scales();
-    let ops: Vec<Json> = sol
-        .assignment
-        .iter()
-        .enumerate()
-        .map(|(i, a)| {
-            let amap: Vec<(String, Json)> = exp
-                .layer_names
-                .iter()
-                .zip(a)
-                .map(|(name, &mid)| (name.clone(), Json::num(mid as f64)))
-                .collect();
-            Json::obj(vec![
-                ("index", Json::num(i as f64)),
-                ("scale", Json::num(scales[i])),
-                ("relative_power", Json::num(sol.power[i])),
-                ("assignment", Json::Obj(amap)),
-            ])
-        })
-        .collect();
-    let subset: Vec<Json> = sol
-        .subset
-        .iter()
-        .map(|&mid| {
-            Json::obj(vec![
-                ("id", Json::num(mid as f64)),
-                ("name", Json::str(db.specs[mid].name.clone())),
-                ("power", Json::num(db.power(mid))),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("experiment", Json::str(exp.name.clone())),
-        ("n_multipliers", Json::num(exp.n_multipliers() as f64)),
-        ("subset", Json::Arr(subset)),
-        ("operating_points", Json::Arr(ops)),
-        ("kmeans_inertia", Json::num(sol.kmeans_inertia)),
-    ])
-}
-
-pub fn write_assignment(exp: &Experiment, db: &MulDb, sol: &Solution) -> Result<PathBuf> {
-    let path = exp.dir.join("assignment.json");
-    std::fs::write(&path, json::to_string_pretty(&solution_to_json(exp, db, sol)))?;
-    Ok(path)
-}
-
-/// Read assignment.json back (ours or hand-edited).
-pub fn read_assignment(exp: &Experiment) -> Result<Vec<(f64, f64, HashMap<String, usize>)>> {
-    let raw = std::fs::read_to_string(exp.dir.join("assignment.json"))?;
-    let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
-    let mut out = Vec::new();
-    for op in v
-        .req("operating_points")
-        .map_err(anyhow::Error::msg)?
-        .as_arr()
-        .unwrap_or(&[])
-    {
-        let scale = op.get("scale").and_then(|x| x.as_f64()).unwrap_or(1.0);
-        let power = op.get("relative_power").and_then(|x| x.as_f64()).unwrap_or(1.0);
-        let mut amap = HashMap::new();
-        if let Some(Json::Obj(pairs)) = op.get("assignment") {
-            for (k, val) in pairs {
-                amap.insert(k.clone(), val.as_usize().unwrap_or(0));
-            }
-        }
-        out.push((scale, power, amap));
-    }
-    Ok(out)
-}
-
 /// Build an engine OperatingPoint from an assignment map + optional BN
 /// overlay file (bn_op{idx}.qten from stage B).
 pub fn build_operating_point(
@@ -205,40 +121,6 @@ pub fn build_operating_point(
         params,
         relative_power,
     })
-}
-
-/// Build the full OP ladder for an experiment from assignment.json,
-/// applying the per-OP retraining overlays when present (`mode`:
-/// "none" | "bn" | "full").
-pub fn load_operating_points(exp: &Experiment, mode: &str) -> Result<Vec<OperatingPoint>> {
-    let assignments = read_assignment(exp)?;
-    let mut ops = Vec::new();
-    for (i, (_scale, power, amap)) in assignments.into_iter().enumerate() {
-        let overlay = match mode {
-            "bn" => {
-                let p = exp.dir.join(format!("bn_op{i}.qten"));
-                p.exists().then_some(p)
-            }
-            "full" => {
-                let p = exp.dir.join(format!("params_full_op{i}.qten"));
-                p.exists().then_some(p)
-            }
-            _ => None,
-        };
-        if matches!(mode, "bn" | "full") && overlay.is_none() {
-            eprintln!(
-                "warning: OP{i}: no {mode} overlay found (run stage B retraining); using base params"
-            );
-        }
-        ops.push(build_operating_point(
-            exp,
-            &format!("op{i}"),
-            amap,
-            power,
-            overlay.as_deref(),
-        )?);
-    }
-    Ok(ops)
 }
 
 /// Evaluate one operating point on the exported test set (native

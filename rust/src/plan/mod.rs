@@ -1,0 +1,858 @@
+//! Unified planning API: one `Planner` trait from search to serving.
+//!
+//! The paper's contribution is a *search algorithm* evaluated against a
+//! family of baseline mappers on identical inputs (Table 1).  This
+//! module is the planning-side mirror of the [`crate::backend`] seam:
+//! every mapper — the QoS-Nets clustered search, the ALWANN genetic
+//! baseline, and the simple single-OP baselines — implements
+//! [`Planner`] and produces the same first-class artifact, a typed,
+//! versioned [`OpPlan`]:
+//!
+//!   * [`Planner`]        `plan(&PlanInputs) -> OpPlan` + `name`/`describe`
+//!   * [`PlanInputs`]     the shared search inputs (error model, tolerances,
+//!     layer stats, scale ladder, budget, seed)
+//!   * [`OpPlan`]         the artifact: per-OP assignments over an explicit
+//!     `layer_names` header, the multiplier subset, provenance, and a
+//!     JSON round-trip that stays wire-compatible with `assignment.json`
+//!   * [`planner_by_name`] the string-keyed registry behind
+//!     `search --algo qos|alwann|homogeneous|lvrm|pnam|tpm|gradient`
+//!
+//! Downstream, an `OpPlan` feeds everything the old tuple plumbing fed:
+//! [`OpPlan::load_operating_points`] builds the `Vec<OperatingPoint>`
+//! that `OpTable::new` / `Backend::prepare` take, and [`OpPlan::ladder`]
+//! builds the `LadderEntry` list the QoS controller consumes — so a
+//! stored plan drives eval, serving, and reporting through one path.
+
+use std::collections::{BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{self, alwann};
+use crate::engine::OperatingPoint;
+use crate::errmodel::{self, SigmaE};
+use crate::muldb::MulDb;
+use crate::nn::LayerStats;
+use crate::pipeline::{self, Experiment};
+use crate::qos::LadderEntry;
+use crate::selection::{self, SearchConfig};
+use crate::util::json::{self, Json};
+
+/// Wire-format version written by [`OpPlan::to_json`].  Legacy
+/// `assignment.json` files (PR 0–2) carry no `version` field and parse
+/// as version 0; writing always upgrades to the current version.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Every registered planner name, in the order the `baselines`
+/// comparison table prints them (qos last, like the paper's Table 1).
+pub const PLANNER_NAMES: [&str; 7] = [
+    "homogeneous",
+    "gradient",
+    "lvrm",
+    "pnam",
+    "tpm",
+    "alwann",
+    "qos",
+];
+
+// ---------------------------------------------------------------------------
+// Inputs
+// ---------------------------------------------------------------------------
+
+/// Everything a mapper needs, shared verbatim across all of them so the
+/// comparison stays honest: the same error model, tolerances, layer
+/// statistics, scale ladder, instance budget and seed.
+pub struct PlanInputs<'a> {
+    /// The multiplier family (LUT error maps + power model).
+    pub db: &'a MulDb,
+    /// sigma_e error-model matrix (multiplier x layer).
+    pub se: &'a SigmaE,
+    /// Per-layer tolerance vector (kappa-scaled, see `Experiment::load`).
+    pub sigma_g: &'a [f64],
+    /// Per-layer operand statistics (MAC counts drive the power model).
+    pub stats: &'a [LayerStats],
+    /// Layer names, in graph order — the `OpPlan::layer_names` header.
+    pub layer_names: &'a [String],
+    /// Operating-point tolerance scales, most accurate first.
+    pub scales: Vec<f64>,
+    /// Multiplier-instance budget (the paper's n).
+    pub n_multipliers: usize,
+    pub seed: u64,
+    /// Experiment name stamped into the plan.
+    pub experiment: String,
+}
+
+impl<'a> PlanInputs<'a> {
+    /// Borrow the planning inputs out of a loaded experiment.  The
+    /// caller owns the sigma_e matrix (`errmodel::sigma_e(db, &exp.stats)`)
+    /// so several planners can share one computation.
+    pub fn from_experiment(exp: &'a Experiment, db: &'a MulDb, se: &'a SigmaE) -> PlanInputs<'a> {
+        PlanInputs {
+            db,
+            se,
+            sigma_g: &exp.sigma_g,
+            stats: &exp.stats,
+            layer_names: &exp.layer_names,
+            scales: exp.scales(),
+            n_multipliers: exp.n_multipliers(),
+            seed: exp.seed(),
+            experiment: exp.name.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The artifact
+// ---------------------------------------------------------------------------
+
+/// One multiplier instance a plan deploys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MulRef {
+    /// Id in the [`MulDb`] the plan was searched against.
+    pub id: usize,
+    pub name: String,
+    /// Relative power vs the accurate multiplier.
+    pub power: f64,
+}
+
+/// One operating point of a plan: a full layer -> multiplier assignment
+/// at one tolerance scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanOp {
+    /// OP name; `op{i}` by convention (the retraining overlays
+    /// `bn_op{i}.qten` / `params_full_op{i}.qten` key off the index).
+    pub name: String,
+    /// Tolerance scale this OP was searched at.
+    pub scale: f64,
+    /// MAC-weighted relative multiplication power.
+    pub relative_power: f64,
+    /// Multiplier id per layer, aligned with [`OpPlan::layer_names`].
+    pub assignment: Vec<usize>,
+}
+
+/// Where a plan came from: which mapper, under what seed and config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Registered planner name (see [`PLANNER_NAMES`]).
+    pub planner: String,
+    pub seed: u64,
+    /// FNV-1a hash of the planning configuration (scales, budget, seed,
+    /// problem shape) — cheap staleness detection for stored plans.
+    pub config_hash: String,
+}
+
+/// The typed, versioned planning artifact: what every [`Planner`]
+/// produces and what eval/serving/reporting consume.
+///
+/// Serialized as `assignment.json`, wire-compatible with the legacy
+/// format (the Python stage-B retrainer keeps reading the per-OP
+/// `assignment` objects; a `version` field plus the `layer_names`
+/// header and `provenance` are additive).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpPlan {
+    /// Wire-format version this plan was parsed from (0 = legacy file).
+    pub version: u64,
+    /// Experiment the plan belongs to.
+    pub experiment: String,
+    /// Instance budget the planner ran under; `subset.len()` never
+    /// exceeds it.
+    pub n_multipliers: usize,
+    /// Layer names, in graph order; every `PlanOp::assignment` indexes
+    /// parallel to this header.
+    pub layer_names: Vec<String>,
+    /// Distinct multiplier instances the plan deploys.
+    pub subset: Vec<MulRef>,
+    /// The operating-point ladder, most accurate first.
+    pub ops: Vec<PlanOp>,
+    /// k-means inertia of the clustering (QoS-Nets planner only).
+    pub kmeans_inertia: Option<f64>,
+    /// Planner provenance (absent on legacy files).
+    pub provenance: Option<Provenance>,
+}
+
+impl OpPlan {
+    /// The `layer name -> multiplier id` map of one OP (the shape
+    /// `pipeline::build_operating_point` and stage B consume).
+    pub fn assignment_map(&self, op_idx: usize) -> HashMap<String, usize> {
+        self.layer_names
+            .iter()
+            .cloned()
+            .zip(self.ops[op_idx].assignment.iter().copied())
+            .collect()
+    }
+
+    /// The QoS ladder of this plan: one [`LadderEntry`] per OP, with
+    /// `table_index` = position in `ops` — valid `OpTable`/`forward`
+    /// indices when the plan is loaded in order (as
+    /// [`load_operating_points`](Self::load_operating_points) does).
+    pub fn ladder(&self) -> Vec<LadderEntry> {
+        self.ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| LadderEntry {
+                name: op.name.clone(),
+                power: op.relative_power,
+                table_index: i,
+            })
+            .collect()
+    }
+
+    // -- JSON round trip ----------------------------------------------------
+
+    /// Serialize to the `assignment.json` wire format (always the
+    /// current [`PLAN_VERSION`], even for plans parsed from legacy
+    /// files — writing upgrades).
+    pub fn to_json(&self) -> Json {
+        let ops: Vec<Json> = self
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| {
+                let amap: Vec<(String, Json)> = self
+                    .layer_names
+                    .iter()
+                    .zip(&op.assignment)
+                    .map(|(name, &mid)| (name.clone(), Json::num(mid as f64)))
+                    .collect();
+                Json::obj(vec![
+                    ("index", Json::num(i as f64)),
+                    ("name", Json::str(op.name.clone())),
+                    ("scale", Json::num(op.scale)),
+                    ("relative_power", Json::num(op.relative_power)),
+                    ("assignment", Json::Obj(amap)),
+                ])
+            })
+            .collect();
+        let subset: Vec<Json> = self
+            .subset
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("id", Json::num(m.id as f64)),
+                    ("name", Json::str(m.name.clone())),
+                    ("power", Json::num(m.power)),
+                ])
+            })
+            .collect();
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("version", Json::num(PLAN_VERSION as f64)),
+            ("experiment", Json::str(self.experiment.clone())),
+            ("n_multipliers", Json::num(self.n_multipliers as f64)),
+            (
+                "layer_names",
+                Json::Arr(self.layer_names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+            ("subset", Json::Arr(subset)),
+            ("operating_points", Json::Arr(ops)),
+        ];
+        if let Some(k) = self.kmeans_inertia {
+            pairs.push(("kmeans_inertia", Json::num(k)));
+        }
+        if let Some(p) = &self.provenance {
+            pairs.push((
+                "provenance",
+                Json::obj(vec![
+                    ("planner", Json::str(p.planner.clone())),
+                    ("seed", Json::num(p.seed as f64)),
+                    ("config_hash", Json::str(p.config_hash.clone())),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a plan from the wire format.  Legacy files (no `version`,
+    /// no `layer_names`, no per-OP `name`) still load: the layer header
+    /// is recovered from the first OP's assignment-object key order
+    /// (the JSON codec preserves it) and OPs are named `op{i}`.
+    pub fn from_json(v: &Json) -> Result<OpPlan> {
+        let version = v.get("version").and_then(|x| x.as_usize()).unwrap_or(0) as u64;
+        // refuse files from a newer format instead of silently parsing
+        // them into defaulted fields (every layer would fall back to
+        // the exact multiplier and serve a wrong ladder)
+        anyhow::ensure!(
+            version <= PLAN_VERSION,
+            "assignment.json is plan version {version}, this build reads <= {PLAN_VERSION}"
+        );
+        let experiment = v
+            .get("experiment")
+            .and_then(|x| x.as_str())
+            .unwrap_or("")
+            .to_string();
+        let ops_json = v
+            .req("operating_points")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("operating_points must be an array")?;
+        let layer_names: Vec<String> = match v.get("layer_names").and_then(|x| x.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect(),
+            None => match ops_json.first().and_then(|op| op.get("assignment")) {
+                Some(Json::Obj(pairs)) => pairs.iter().map(|(k, _)| k.clone()).collect(),
+                _ => Vec::new(),
+            },
+        };
+        let mut ops = Vec::with_capacity(ops_json.len());
+        for (i, op) in ops_json.iter().enumerate() {
+            let name = op
+                .get("name")
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("op{i}"));
+            let scale = op.get("scale").and_then(|x| x.as_f64()).unwrap_or(1.0);
+            let relative_power = op
+                .get("relative_power")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(1.0);
+            let amap: HashMap<&str, usize> = match op.get("assignment") {
+                Some(Json::Obj(pairs)) => pairs
+                    .iter()
+                    .map(|(k, val)| (k.as_str(), val.as_usize().unwrap_or(0)))
+                    .collect(),
+                _ => HashMap::new(),
+            };
+            let assignment: Vec<usize> = layer_names
+                .iter()
+                .map(|n| amap.get(n.as_str()).copied().unwrap_or(0))
+                .collect();
+            ops.push(PlanOp {
+                name,
+                scale,
+                relative_power,
+                assignment,
+            });
+        }
+        let subset: Vec<MulRef> = match v.get("subset").and_then(|x| x.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|e| MulRef {
+                    id: e.get("id").and_then(|x| x.as_usize()).unwrap_or(0),
+                    name: e
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    power: e.get("power").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let n_multipliers = v
+            .get("n_multipliers")
+            .and_then(|x| x.as_usize())
+            .unwrap_or_else(|| subset.len().max(1));
+        let kmeans_inertia = v.get("kmeans_inertia").and_then(|x| x.as_f64());
+        let provenance = v.get("provenance").map(|p| Provenance {
+            planner: p
+                .get("planner")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            seed: p.get("seed").and_then(|x| x.as_usize()).unwrap_or(0) as u64,
+            config_hash: p
+                .get("config_hash")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+        });
+        Ok(OpPlan {
+            version,
+            experiment,
+            n_multipliers,
+            layer_names,
+            subset,
+            ops,
+            kmeans_inertia,
+            provenance,
+        })
+    }
+
+    /// Write the plan to `path` (pretty-printed, like stage A's files).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), json::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("write {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    /// Read a plan back from `path` (ours, legacy, or hand-edited).
+    pub fn load(path: impl AsRef<Path>) -> Result<OpPlan> {
+        let raw = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        let v = json::parse(&raw).map_err(anyhow::Error::msg)?;
+        OpPlan::from_json(&v)
+    }
+
+    /// Write the plan to the experiment's canonical `assignment.json`.
+    pub fn save_for(&self, exp: &Experiment) -> Result<PathBuf> {
+        let path = exp.dir.join("assignment.json");
+        self.save(&path)?;
+        Ok(path)
+    }
+
+    /// Load the experiment's stored plan.
+    pub fn load_for(exp: &Experiment) -> Result<OpPlan> {
+        OpPlan::load(exp.dir.join("assignment.json"))
+            .with_context(|| format!("no plan for {:?}; run `search --exp {}` first", exp.name, exp.name))
+    }
+
+    // -- Serving handoff ----------------------------------------------------
+
+    /// Build the full engine OP ladder from this plan, applying the
+    /// per-OP retraining overlays when present (`mode`: "none" | "bn" |
+    /// "full").  The returned vector is in plan order, so its indices
+    /// match [`ladder`](Self::ladder) and feed `OpTable::new` /
+    /// `Backend::prepare` directly.
+    pub fn load_operating_points(&self, exp: &Experiment, mode: &str) -> Result<Vec<OperatingPoint>> {
+        let mut out = Vec::with_capacity(self.ops.len());
+        for (i, op) in self.ops.iter().enumerate() {
+            let overlay = match mode {
+                "bn" => {
+                    let p = exp.dir.join(format!("bn_op{i}.qten"));
+                    p.exists().then_some(p)
+                }
+                "full" => {
+                    let p = exp.dir.join(format!("params_full_op{i}.qten"));
+                    p.exists().then_some(p)
+                }
+                _ => None,
+            };
+            if matches!(mode, "bn" | "full") && overlay.is_none() {
+                eprintln!(
+                    "warning: OP{i}: no {mode} overlay found (run stage B retraining); using base params"
+                );
+            }
+            out.push(pipeline::build_operating_point(
+                exp,
+                &op.name,
+                self.assignment_map(i),
+                op.relative_power,
+                overlay.as_deref(),
+            )?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait + shared assembly
+// ---------------------------------------------------------------------------
+
+/// One mapping algorithm: consumes the shared [`PlanInputs`], produces
+/// a typed [`OpPlan`].  Implementations must be deterministic in
+/// `inputs.seed`.
+pub trait Planner {
+    /// Registry key (`search --algo <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for tables and `--help`-style output.
+    fn describe(&self) -> &'static str;
+
+    /// Run the mapper.
+    fn plan(&self, inputs: &PlanInputs) -> Result<OpPlan>;
+}
+
+/// FNV-1a over the canonical config description (see
+/// [`Provenance::config_hash`]).
+fn config_hash(planner: &str, inputs: &PlanInputs) -> String {
+    let desc = format!(
+        "planner={planner};n={};scales={:?};seed={};layers={};muldb={}",
+        inputs.n_multipliers,
+        inputs.scales,
+        inputs.seed,
+        inputs.layer_names.len(),
+        inputs.db.len()
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in desc.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Assemble a plan from per-OP assignment rows — the shared tail of
+/// every planner: per-OP MAC-weighted power, the deployed subset,
+/// provenance.  `budget` is the instance budget the plan is audited
+/// against (`subset.len() <= budget` is asserted).
+pub fn plan_from_assignments(
+    planner: &str,
+    inputs: &PlanInputs,
+    assignments: Vec<Vec<usize>>,
+    budget: usize,
+    kmeans_inertia: Option<f64>,
+) -> OpPlan {
+    let ops: Vec<PlanOp> = assignments
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| PlanOp {
+            name: format!("op{i}"),
+            scale: inputs.scales.get(i).copied().unwrap_or(1.0),
+            relative_power: errmodel::relative_power(inputs.db, inputs.stats, &a),
+            assignment: a,
+        })
+        .collect();
+    let ids: BTreeSet<usize> = ops.iter().flat_map(|o| o.assignment.iter().copied()).collect();
+    let subset: Vec<MulRef> = ids
+        .into_iter()
+        .map(|id| MulRef {
+            id,
+            name: inputs.db.specs[id].name.clone(),
+            power: inputs.db.power(id),
+        })
+        .collect();
+    assert!(
+        subset.len() <= budget,
+        "{planner}: {} distinct instances exceed the declared budget {budget}",
+        subset.len()
+    );
+    OpPlan {
+        version: PLAN_VERSION,
+        experiment: inputs.experiment.clone(),
+        n_multipliers: budget,
+        layer_names: inputs.layer_names.to_vec(),
+        subset,
+        ops,
+        kmeans_inertia,
+        provenance: Some(Provenance {
+            planner: planner.to_string(),
+            seed: inputs.seed,
+            config_hash: config_hash(planner, inputs),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planners
+// ---------------------------------------------------------------------------
+
+/// The QoS-Nets clustered multi-OP search (paper Sec. 3.1 + 3.2),
+/// wrapping [`selection::search`]: one shared instance subset across
+/// every operating point — the paper's contribution.
+pub struct QosNetsPlanner;
+
+impl Planner for QosNetsPlanner {
+    fn name(&self) -> &'static str {
+        "qos"
+    }
+
+    fn describe(&self) -> &'static str {
+        "QoS-Nets clustered search: preference vectors -> k-means -> shared n-instance subset across all OPs"
+    }
+
+    fn plan(&self, inputs: &PlanInputs) -> Result<OpPlan> {
+        let cfg = SearchConfig {
+            n_multipliers: inputs.n_multipliers,
+            scales: inputs.scales.clone(),
+            seed: inputs.seed,
+            restarts: 8,
+        };
+        let sol = selection::search(inputs.db, inputs.se, inputs.sigma_g, inputs.stats, &cfg);
+        Ok(plan_from_assignments(
+            self.name(),
+            inputs,
+            sol.assignment,
+            inputs.n_multipliers,
+            Some(sol.kmeans_inertia),
+        ))
+    }
+}
+
+/// The ALWANN genetic tile-mapping baseline [Mrazek et al. 2019],
+/// wrapping [`alwann::evolve`]: one evolved Pareto front, then one OP
+/// per tolerance scale picked from it (cheapest front member feasible
+/// at that scale).  Each pick re-tiles independently, so the honest
+/// cross-OP budget is `n_multipliers * scales.len()` — exactly the
+/// instance-sharing gap QoS-Nets closes.
+pub struct AlwannPlanner;
+
+impl Planner for AlwannPlanner {
+    fn name(&self) -> &'static str {
+        "alwann"
+    }
+
+    fn describe(&self) -> &'static str {
+        "ALWANN NSGA-II tile mapping: evolved Pareto front, one OP per scale (no cross-OP instance sharing)"
+    }
+
+    fn plan(&self, inputs: &PlanInputs) -> Result<OpPlan> {
+        let cfg = alwann::GaConfig {
+            n_tiles: inputs.n_multipliers,
+            seed: inputs.seed,
+            ..Default::default()
+        };
+        let front = alwann::evolve(inputs.db, inputs.se, inputs.sigma_g, inputs.stats, &cfg);
+        anyhow::ensure!(!front.is_empty(), "ALWANN evolution produced an empty front");
+        let mut assignments = Vec::with_capacity(inputs.scales.len());
+        for &s in &inputs.scales {
+            let scaled: Vec<f64> = inputs.sigma_g.iter().map(|g| s * g).collect();
+            let scored: Vec<(f64, &alwann::Evaluated)> = front
+                .iter()
+                .map(|e| {
+                    (
+                        baselines::quality_penalty(inputs.se, &scaled, &e.chromosome.assignment()),
+                        e,
+                    )
+                })
+                .collect();
+            // cheapest feasible member; most accurate one as the
+            // escape hatch (mirrors selection::pick_for_centroid)
+            let best = scored
+                .iter()
+                .filter(|(pen, _)| *pen <= 1e-9)
+                .min_by(|a, b| a.1.power.partial_cmp(&b.1.power).unwrap())
+                .or_else(|| scored.iter().min_by(|a, b| a.0.partial_cmp(&b.0).unwrap()))
+                .map(|(_, e)| *e)
+                .expect("non-empty front");
+            assignments.push(best.chromosome.assignment());
+        }
+        let budget = inputs.n_multipliers * inputs.scales.len().max(1);
+        Ok(plan_from_assignments(self.name(), inputs, assignments, budget, None))
+    }
+}
+
+/// Which simple baseline a [`BaselinePlanner`] adapts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// One multiplier for the whole network [De la Parra et al. 2020].
+    Homogeneous,
+    /// Unconstrained per-layer gradient search [Trommer et al. 2022].
+    Gradient,
+    /// LVRM-style divide & conquer at layer granularity.
+    Lvrm,
+    /// PNAM-style positive/negative error pairing.
+    Pnam,
+    /// TPM-style global threshold query.
+    Tpm,
+}
+
+/// Adapter that lifts the free-function baselines in
+/// [`crate::baselines`] into the [`Planner`] trait: one assignment per
+/// tolerance scale, each produced by the wrapped mapper.
+pub struct BaselinePlanner(pub Baseline);
+
+impl BaselinePlanner {
+    fn assignment_at(&self, inputs: &PlanInputs, scale: f64) -> Vec<usize> {
+        let (db, se, sg, stats) = (inputs.db, inputs.se, inputs.sigma_g, inputs.stats);
+        match self.0 {
+            Baseline::Homogeneous => {
+                let scaled: Vec<f64> = sg.iter().map(|g| scale * g).collect();
+                let j = baselines::homogeneous_pick(db, se, &scaled, stats, 0.0);
+                vec![j; se.l]
+            }
+            Baseline::Gradient => baselines::gradient_search(db, se, sg, scale),
+            Baseline::Lvrm => baselines::lvrm_divide_conquer(db, se, sg, scale),
+            Baseline::Pnam => baselines::pnam_mapping(db, se, sg, stats, scale),
+            Baseline::Tpm => baselines::tpm_threshold(db, se, sg, scale),
+        }
+    }
+
+    /// The honest instance budget of the wrapped mapper: homogeneous
+    /// deploys one instance per OP; the per-layer mappers are
+    /// unconstrained (up to one instance per (layer, OP), capped by the
+    /// family size) — the impracticality QoS-Nets' n-constraint fixes.
+    fn budget(&self, inputs: &PlanInputs) -> usize {
+        let o = inputs.scales.len().max(1);
+        match self.0 {
+            Baseline::Homogeneous => o,
+            _ => inputs.db.len().min(inputs.se.l * o),
+        }
+    }
+}
+
+impl Planner for BaselinePlanner {
+    fn name(&self) -> &'static str {
+        match self.0 {
+            Baseline::Homogeneous => "homogeneous",
+            Baseline::Gradient => "gradient",
+            Baseline::Lvrm => "lvrm",
+            Baseline::Pnam => "pnam",
+            Baseline::Tpm => "tpm",
+        }
+    }
+
+    fn describe(&self) -> &'static str {
+        match self.0 {
+            Baseline::Homogeneous => "one multiplier for the whole network (cheapest zero-penalty instance)",
+            Baseline::Gradient => "unconstrained per-layer pick (cheapest tolerance-respecting instance per layer)",
+            Baseline::Lvrm => "LVRM-style divide & conquer over layer segments",
+            Baseline::Pnam => "PNAM-style positive/negative error-mean pairing",
+            Baseline::Tpm => "TPM-style binary-searched global threshold",
+        }
+    }
+
+    fn plan(&self, inputs: &PlanInputs) -> Result<OpPlan> {
+        let assignments: Vec<Vec<usize>> = inputs
+            .scales
+            .iter()
+            .map(|&s| self.assignment_at(inputs, s))
+            .collect();
+        Ok(plan_from_assignments(
+            self.name(),
+            inputs,
+            assignments,
+            self.budget(inputs),
+            None,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Resolve a registered planner by name (`search --algo <name>`).
+pub fn planner_by_name(name: &str) -> Option<Box<dyn Planner>> {
+    match name {
+        "qos" | "qos-nets" | "qosnets" => Some(Box::new(QosNetsPlanner)),
+        "alwann" | "ga" => Some(Box::new(AlwannPlanner)),
+        "homogeneous" => Some(Box::new(BaselinePlanner(Baseline::Homogeneous))),
+        "gradient" => Some(Box::new(BaselinePlanner(Baseline::Gradient))),
+        "lvrm" => Some(Box::new(BaselinePlanner(Baseline::Lvrm))),
+        "pnam" => Some(Box::new(BaselinePlanner(Baseline::Pnam))),
+        "tpm" => Some(Box::new(BaselinePlanner(Baseline::Tpm))),
+        _ => None,
+    }
+}
+
+/// Every registered planner, in [`PLANNER_NAMES`] order.
+pub fn all_planners() -> Vec<Box<dyn Planner>> {
+    PLANNER_NAMES
+        .iter()
+        .map(|n| planner_by_name(n).expect("registered planner"))
+        .collect()
+}
+
+/// End-to-end convenience for the CLI: build the shared inputs for an
+/// experiment and run one registered planner.
+pub fn plan_experiment(algo: &str, exp: &Experiment, db: &MulDb) -> Result<OpPlan> {
+    let planner = planner_by_name(algo).with_context(|| {
+        format!(
+            "unknown planner {algo:?} (one of: {})",
+            PLANNER_NAMES.join("|")
+        )
+    })?;
+    let se = errmodel::sigma_e(db, &exp.stats);
+    let inputs = PlanInputs::from_experiment(exp, db, &se);
+    planner.plan(&inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats(n: usize) -> Vec<LayerStats> {
+        (0..n)
+            .map(|i| LayerStats {
+                name: format!("l{i}"),
+                act_hist: vec![1.0 / 256.0; 256],
+                w_hist: vec![1.0 / 256.0; 256],
+                k_fanin: 64 * (i + 1),
+                macs_total: 10_000 * (i + 1),
+                s_act: 0.02,
+                z_act: 128,
+                s_w: 0.01,
+                z_w: 128,
+                bn_scale: 0.5,
+                out_rms: 1.0,
+            })
+            .collect()
+    }
+
+    fn fixture(l: usize) -> (MulDb, SigmaE, Vec<f64>, Vec<LayerStats>, Vec<String>) {
+        let db = MulDb::generate();
+        let stats = fake_stats(l);
+        let se = errmodel::sigma_e(&db, &stats);
+        let sigma_g: Vec<f64> = (0..l).map(|i| 0.05 + 0.03 * i as f64).collect();
+        let names: Vec<String> = (0..l).map(|i| format!("l{i}")).collect();
+        (db, se, sigma_g, stats, names)
+    }
+
+    #[test]
+    fn qos_planner_matches_direct_search() {
+        let (db, se, sigma_g, stats, names) = fixture(8);
+        let inputs = PlanInputs {
+            db: &db,
+            se: &se,
+            sigma_g: &sigma_g,
+            stats: &stats,
+            layer_names: &names,
+            scales: vec![0.3, 1.0],
+            n_multipliers: 4,
+            seed: 1,
+            experiment: "t".into(),
+        };
+        let plan = QosNetsPlanner.plan(&inputs).unwrap();
+        let sol = selection::search(
+            &db,
+            &se,
+            &sigma_g,
+            &stats,
+            &SearchConfig {
+                n_multipliers: 4,
+                scales: vec![0.3, 1.0],
+                seed: 1,
+                restarts: 8,
+            },
+        );
+        assert_eq!(plan.ops.len(), 2);
+        for (op, a) in plan.ops.iter().zip(&sol.assignment) {
+            assert_eq!(&op.assignment, a);
+        }
+        assert_eq!(
+            plan.subset.iter().map(|m| m.id).collect::<Vec<_>>(),
+            sol.subset
+        );
+        assert_eq!(plan.kmeans_inertia, Some(sol.kmeans_inertia));
+        let prov = plan.provenance.as_ref().unwrap();
+        assert_eq!(prov.planner, "qos");
+        assert_eq!(prov.seed, 1);
+        assert!(!prov.config_hash.is_empty());
+    }
+
+    #[test]
+    fn ladder_mirrors_ops_in_table_order() {
+        let (db, se, sigma_g, stats, names) = fixture(6);
+        let inputs = PlanInputs {
+            db: &db,
+            se: &se,
+            sigma_g: &sigma_g,
+            stats: &stats,
+            layer_names: &names,
+            scales: vec![0.3, 1.0],
+            n_multipliers: 3,
+            seed: 2,
+            experiment: "t".into(),
+        };
+        let plan = QosNetsPlanner.plan(&inputs).unwrap();
+        let ladder = plan.ladder();
+        assert_eq!(ladder.len(), plan.ops.len());
+        for (i, (e, op)) in ladder.iter().zip(&plan.ops).enumerate() {
+            assert_eq!(e.table_index, i);
+            assert_eq!(e.name, op.name);
+            assert_eq!(e.power, op.relative_power);
+        }
+    }
+
+    #[test]
+    fn config_hash_is_sensitive_to_seed_and_budget() {
+        let (db, se, sigma_g, stats, names) = fixture(4);
+        let mk = |seed: u64, n: usize| PlanInputs {
+            db: &db,
+            se: &se,
+            sigma_g: &sigma_g,
+            stats: &stats,
+            layer_names: &names,
+            scales: vec![1.0],
+            n_multipliers: n,
+            seed,
+            experiment: "t".into(),
+        };
+        let a = config_hash("qos", &mk(0, 4));
+        assert_eq!(a, config_hash("qos", &mk(0, 4)));
+        assert_ne!(a, config_hash("qos", &mk(1, 4)));
+        assert_ne!(a, config_hash("qos", &mk(0, 3)));
+        assert_ne!(a, config_hash("tpm", &mk(0, 4)));
+    }
+}

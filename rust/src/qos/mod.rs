@@ -44,6 +44,11 @@ pub enum SwitchMode {
 }
 
 /// One rung of the operating-point ladder as the controller sees it.
+///
+/// Ladders come from a live `OpTable` (`crate::backend::OpTable::ladder`)
+/// or straight from a stored plan (`crate::plan::OpPlan::ladder`); both
+/// hand out the same table indices, so a controller can be built before
+/// any backend exists.
 #[derive(Debug, Clone)]
 pub struct LadderEntry {
     /// Operating-point name (matches `OperatingPoint::name`).

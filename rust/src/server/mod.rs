@@ -33,7 +33,11 @@
 //!   a supervisor thread samples queue depth and batcher wait-time
 //!   watermarks every `scale_interval` and spawns (up to `max_workers`)
 //!   or retires (down to `min_workers`) workers, with consecutive-tick
-//!   hysteresis so the pool does not flap.
+//!   hysteresis so the pool does not flap.  Scale-ups are *batched*: a
+//!   pressured tick spawns one worker per full multiple of the depth
+//!   threshold sitting in the queue ([`scale_up_count`]), so a deep
+//!   burst reaches the ceiling in one tick instead of one worker per
+//!   tick.
 
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -115,7 +119,9 @@ pub struct BatcherConfig {
     /// can make an unloaded server look pressured).
     pub scale_up_wait: Duration,
     /// Consecutive pressured supervisor ticks before spawning
-    /// (hysteresis against transient spikes).
+    /// (hysteresis against transient spikes).  A qualifying tick may
+    /// spawn several workers at once under a deep backlog — see
+    /// [`scale_up_count`].
     pub scale_up_after: u32,
     /// Consecutive idle supervisor ticks (no meaningful backlog: at
     /// most `live/2` requests in flight and sub-threshold waits)
@@ -727,6 +733,22 @@ fn batcher_loop(
     }
 }
 
+/// How many workers one pressured supervisor tick may spawn: one per
+/// full multiple of the queue-depth threshold currently in flight
+/// (scale-up batching — a queue three thresholds deep gets three
+/// workers at once instead of one per tick), at least one when there is
+/// any headroom (wait-time pressure alone still spawns a single
+/// worker), and never past the `max_workers` ceiling.
+pub fn scale_up_count(
+    inflight: usize,
+    depth_threshold: usize,
+    live: usize,
+    max_workers: usize,
+) -> usize {
+    let headroom = max_workers.saturating_sub(live);
+    (inflight / depth_threshold.max(1)).max(1).min(headroom)
+}
+
 /// Track a supervisor-spawned worker handle, pruning handles whose
 /// threads already exited (dropping a finished handle just detaches
 /// it) so a persistently failing factory cannot grow the vec forever.
@@ -741,8 +763,10 @@ fn push_handle(
 
 /// The scaling supervisor: samples queue depth (in-flight requests per
 /// live worker) and the wait-time watermark (submission-to-execution
-/// age recorded by workers) every `scale_interval`, spawning a worker
-/// after `scale_up_after` consecutive pressured ticks and retiring one
+/// age recorded by workers) every `scale_interval`, spawning
+/// [`scale_up_count`] workers (scale-up batching: one per full
+/// depth-threshold multiple in the queue) after `scale_up_after`
+/// consecutive pressured ticks and retiring one worker
 /// after `scale_down_after` consecutive idle ticks; a pool below
 /// `min_workers` (partial init failure, worker death) is healed back
 /// to the floor unconditionally.  Spawns reserve their `live_workers`
@@ -812,14 +836,20 @@ fn supervisor_loop<B, F>(
         }
         if pressured && up_streak >= cfg.scale_up_after && live < cfg.max_workers {
             up_streak = 0;
-            // reserve the slot before the thread exists (see spawn_worker)
-            ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
-            let w = ctx.shared.next_worker.fetch_add(1, Ordering::AcqRel);
-            let handle = spawn_worker(ctx.clone(), w, true, None);
-            push_handle(&handles, handle);
+            // scale-up batching: one worker per full depth-threshold
+            // multiple in the queue, so a deep burst reaches the
+            // ceiling in a single tick instead of one worker per tick
+            let n = scale_up_count(inflight, depth_thresh, live, cfg.max_workers);
+            for _ in 0..n {
+                // reserve the slot before the thread exists (see spawn_worker)
+                ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
+                let w = ctx.shared.next_worker.fetch_add(1, Ordering::AcqRel);
+                let handle = spawn_worker(ctx.clone(), w, true, None);
+                push_handle(&handles, handle);
+            }
             let mut m = ctx.metrics.lock().unwrap();
-            m.scale_ups += 1;
-            m.peak_workers = m.peak_workers.max(live + 1);
+            m.scale_ups += n as u64;
+            m.peak_workers = m.peak_workers.max(live + n);
         }
         if idle && idle_streak >= cfg.scale_down_after && live > cfg.min_workers {
             idle_streak = 0;

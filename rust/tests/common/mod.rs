@@ -9,8 +9,28 @@ use std::sync::Arc;
 
 use qos_nets::engine::OperatingPoint;
 use qos_nets::muldb::MulDb;
-use qos_nets::nn::{Graph, LayerParams, ModelParams};
+use qos_nets::nn::{Graph, LayerParams, LayerStats, ModelParams};
 use qos_nets::util::json;
+
+/// Synthetic per-layer statistics for planner/error-model tests: flat
+/// operand histograms, growing fan-in and MAC counts.
+pub fn synthetic_stats(n: usize) -> Vec<LayerStats> {
+    (0..n)
+        .map(|i| LayerStats {
+            name: format!("l{i}"),
+            act_hist: vec![1.0 / 256.0; 256],
+            w_hist: vec![1.0 / 256.0; 256],
+            k_fanin: 64 * (i + 1),
+            macs_total: 10_000 * (i + 1),
+            s_act: 0.02,
+            z_act: 128,
+            s_w: 0.01,
+            z_w: 128,
+            bn_scale: 0.5,
+            out_rms: 1.0,
+        })
+        .collect()
+}
 
 pub fn tiny_graph_json() -> json::Json {
     json::parse(

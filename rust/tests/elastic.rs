@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 
 use common::stub_op;
 use qos_nets::backend::{OpTable, StubBackend};
-use qos_nets::server::{BatcherConfig, Server, SwitchMode};
+use qos_nets::server::{scale_up_count, BatcherConfig, Server, SwitchMode};
 
 /// Poll `cond` until it holds or `secs` elapse; panics with `what` on
 /// timeout.  Scaling is asynchronous, so assertions must wait, not race.
@@ -70,6 +70,68 @@ fn worker_pool_grows_under_burst_and_retires_when_idle() {
     assert!(m.scale_downs >= 1, "scale_downs {}", m.scale_downs);
     assert!(m.peak_workers >= 2, "peak_workers {}", m.peak_workers);
     assert!(m.peak_workers <= 4, "peak_workers {}", m.peak_workers);
+}
+
+#[test]
+fn scale_up_count_spawns_one_worker_per_depth_threshold_multiple() {
+    // wait-time pressure alone (queue shallower than one threshold):
+    // a single spawn, as before scale-up batching
+    assert_eq!(scale_up_count(5, 8, 1, 4), 1);
+    // one full multiple -> 1, two -> 2, clamped by the ceiling headroom
+    assert_eq!(scale_up_count(8, 8, 1, 4), 1);
+    assert_eq!(scale_up_count(16, 8, 1, 4), 2);
+    assert_eq!(scale_up_count(80, 8, 1, 4), 3);
+    assert_eq!(scale_up_count(80, 8, 3, 4), 1);
+    // no headroom: nothing to spawn
+    assert_eq!(scale_up_count(80, 8, 4, 4), 0);
+    // degenerate threshold must not divide by zero
+    assert_eq!(scale_up_count(10, 0, 1, 4), 3);
+}
+
+#[test]
+fn deep_burst_reaches_the_ceiling_in_one_pressured_tick() {
+    // a long supervisor interval so only one or two ticks fire while
+    // the burst is deep: reaching the 4-worker ceiling from the floor
+    // requires the batched (multi-worker) spawn path
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(5))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            min_workers: 1,
+            max_workers: 4,
+            scale_interval: Duration::from_millis(100),
+            scale_up_queue: 4,
+            scale_up_wait: Duration::from_millis(10),
+            scale_up_after: 1,
+            scale_down_after: 10_000, // never retire during the test
+        },
+    )
+    .unwrap();
+    assert_eq!(server.live_workers(), 1);
+
+    // ~2000 requests at 5 ms per batch of 4 = seconds of single-worker
+    // backlog: every supervisor tick sees hundreds of threshold
+    // multiples until the pool catches up
+    let mut rxs = Vec::new();
+    for i in 0..2000 {
+        rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+    }
+    wait_for("pool to reach the ceiling", 20, || server.live_workers() == 4);
+
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2000);
+    assert_eq!(m.peak_workers, 4);
+    // floor -> ceiling is exactly three spawns; batching must not
+    // overshoot the ceiling or double-count
+    assert_eq!(m.scale_ups, 3, "scale_ups {}", m.scale_ups);
+    assert_eq!(m.scale_downs, 0);
 }
 
 #[test]

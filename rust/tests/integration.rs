@@ -13,6 +13,7 @@ use common::{build_tiny, naive_reference};
 use qos_nets::engine::Engine;
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
+use qos_nets::plan::{self, OpPlan};
 
 fn artifacts_ready() -> bool {
     Path::new("artifacts/quick/exp.json").exists()
@@ -94,16 +95,17 @@ fn quick_experiment_loads_and_searches() {
     let exp = Experiment::load("artifacts", "quick").unwrap();
     let db = Arc::new(MulDb::load("artifacts").unwrap());
     assert_eq!(exp.layer_names.len(), exp.sigma_g.len());
-    let (se, sol) = pipeline::run_search(&exp, &db);
-    assert_eq!(se.m, 37);
+    assert_eq!(db.len(), 37);
+    let sol = plan::plan_experiment("qos", &exp, &db).unwrap();
     assert!(sol.subset.len() <= exp.n_multipliers());
-    assert_eq!(sol.assignment.len(), exp.scales().len());
-    for p in &sol.power {
-        assert!(*p > 0.0 && *p <= 1.0);
+    assert_eq!(sol.ops.len(), exp.scales().len());
+    for op in &sol.ops {
+        assert!(op.relative_power > 0.0 && op.relative_power <= 1.0);
+        assert_eq!(op.assignment.len(), exp.layer_names.len());
     }
-    // determinism
-    let (_, sol2) = pipeline::run_search(&exp, &db);
-    assert_eq!(sol.assignment, sol2.assignment);
+    // determinism: the whole typed artifact, provenance included
+    let sol2 = plan::plan_experiment("qos", &exp, &db).unwrap();
+    assert_eq!(sol, sol2);
 }
 
 #[test]
@@ -127,14 +129,16 @@ fn assignment_roundtrip_through_json() {
     }
     let exp = Experiment::load("artifacts", "quick").unwrap();
     let db = Arc::new(MulDb::load("artifacts").unwrap());
-    let (_, sol) = pipeline::run_search(&exp, &db);
-    pipeline::write_assignment(&exp, &db, &sol).unwrap();
-    let read = pipeline::read_assignment(&exp).unwrap();
-    assert_eq!(read.len(), sol.assignment.len());
-    for (op_idx, (_, power, amap)) in read.iter().enumerate() {
-        assert!((power - sol.power[op_idx]).abs() < 1e-9);
+    let plan = plan::plan_experiment("qos", &exp, &db).unwrap();
+    plan.save_for(&exp).unwrap();
+    let read = OpPlan::load_for(&exp).unwrap();
+    // the full typed artifact survives the disk round trip
+    assert_eq!(read, plan);
+    // and the assignment maps keep the layer -> multiplier pairing
+    for (op_idx, op) in plan.ops.iter().enumerate() {
+        let amap = read.assignment_map(op_idx);
         for (k, name) in exp.layer_names.iter().enumerate() {
-            assert_eq!(amap[name], sol.assignment[op_idx][k]);
+            assert_eq!(amap[name], op.assignment[k]);
         }
     }
 }

@@ -1,0 +1,201 @@
+//! Planner/OpPlan tests: the JSON round trip, legacy `assignment.json`
+//! compatibility, and the registry contract (every registered planner
+//! resolves and produces a budget-respecting plan) — all in-memory, no
+//! exported artifacts needed.
+
+mod common;
+
+use common::synthetic_stats;
+use qos_nets::errmodel::{self, SigmaE};
+use qos_nets::muldb::MulDb;
+use qos_nets::nn::LayerStats;
+use qos_nets::plan::{self, OpPlan, PlanInputs, Planner, QosNetsPlanner};
+use qos_nets::util::json;
+
+struct Fixture {
+    db: MulDb,
+    se: SigmaE,
+    sigma_g: Vec<f64>,
+    stats: Vec<LayerStats>,
+    layer_names: Vec<String>,
+}
+
+fn fixture(l: usize) -> Fixture {
+    let db = MulDb::generate();
+    let stats = synthetic_stats(l);
+    let se = errmodel::sigma_e(&db, &stats);
+    // generous tolerances so every mapper has room to move
+    let sigma_g: Vec<f64> = (0..l).map(|i| 0.05 + 0.03 * i as f64).collect();
+    let layer_names: Vec<String> = (0..l).map(|i| format!("l{i}")).collect();
+    Fixture {
+        db,
+        se,
+        sigma_g,
+        stats,
+        layer_names,
+    }
+}
+
+fn inputs(f: &Fixture) -> PlanInputs<'_> {
+    PlanInputs {
+        db: &f.db,
+        se: &f.se,
+        sigma_g: &f.sigma_g,
+        stats: &f.stats,
+        layer_names: &f.layer_names,
+        scales: vec![0.3, 1.0],
+        n_multipliers: 4,
+        seed: 7,
+        experiment: "synthetic".into(),
+    }
+}
+
+#[test]
+fn opplan_json_roundtrip_is_lossless() {
+    let f = fixture(10);
+    let plan = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+    assert!(plan.kmeans_inertia.is_some());
+    assert!(plan.provenance.is_some());
+
+    // serialize -> print -> parse -> deserialize must reproduce the
+    // typed artifact exactly (version, provenance, floats included)
+    let text = json::to_string_pretty(&plan.to_json());
+    let parsed = json::parse(&text).unwrap();
+    let back = OpPlan::from_json(&parsed).unwrap();
+    assert_eq!(back, plan);
+
+    // and a second hop stays fixed (no drift through the writer)
+    let text2 = json::to_string_pretty(&back.to_json());
+    assert_eq!(text2, text);
+}
+
+#[test]
+fn opplan_save_load_roundtrip_on_disk() {
+    let f = fixture(6);
+    let plan = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+    let path = std::env::temp_dir().join(format!("qos_nets_plan_test_{}.json", std::process::id()));
+    plan.save(&path).unwrap();
+    let back = OpPlan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back, plan);
+}
+
+#[test]
+fn legacy_assignment_without_version_still_loads() {
+    // the exact shape solution_to_json wrote in PR 0-2: no version, no
+    // layer_names header, no per-OP names, no provenance
+    let legacy = r#"{
+        "experiment": "quick",
+        "n_multipliers": 3,
+        "subset": [
+            {"id": 0, "name": "am8u_exact", "power": 1.0},
+            {"id": 9, "name": "am8u_bam7", "power": 0.55}
+        ],
+        "operating_points": [
+            {"index": 0, "scale": 0.3, "relative_power": 0.9,
+             "assignment": {"c1": 0, "c2": 9, "fc": 0}},
+            {"index": 1, "scale": 1.0, "relative_power": 0.6,
+             "assignment": {"c1": 9, "c2": 9, "fc": 0}}
+        ],
+        "kmeans_inertia": 1.25
+    }"#;
+    let plan = OpPlan::from_json(&json::parse(legacy).unwrap()).unwrap();
+    assert_eq!(plan.version, 0, "legacy files parse as version 0");
+    assert_eq!(plan.experiment, "quick");
+    assert_eq!(plan.n_multipliers, 3);
+    // the layer header is recovered from assignment key order
+    assert_eq!(plan.layer_names, vec!["c1", "c2", "fc"]);
+    assert_eq!(plan.ops.len(), 2);
+    assert_eq!(plan.ops[0].name, "op0");
+    assert_eq!(plan.ops[0].scale, 0.3);
+    assert_eq!(plan.ops[0].assignment, vec![0, 9, 0]);
+    assert_eq!(plan.ops[1].assignment, vec![9, 9, 0]);
+    assert_eq!(plan.ops[1].relative_power, 0.6);
+    assert_eq!(plan.subset.len(), 2);
+    assert_eq!(plan.subset[1].id, 9);
+    assert_eq!(plan.kmeans_inertia, Some(1.25));
+    assert!(plan.provenance.is_none());
+
+    // re-serializing a legacy plan upgrades it to the current version
+    let upgraded = OpPlan::from_json(&plan.to_json()).unwrap();
+    assert_eq!(upgraded.version, plan::PLAN_VERSION);
+    assert_eq!(upgraded.layer_names, plan.layer_names);
+    assert_eq!(upgraded.ops, plan.ops);
+}
+
+#[test]
+fn newer_plan_versions_are_rejected_not_defaulted() {
+    // a future format must fail loudly instead of parsing into
+    // defaulted (exact-multiplier) assignments
+    let future = r#"{"version": 2, "operating_points": []}"#;
+    let err = OpPlan::from_json(&json::parse(future).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("version 2"), "{err:#}");
+}
+
+#[test]
+fn registry_resolves_every_planner_and_plans_respect_budgets() {
+    let f = fixture(8);
+    let ins = inputs(&f);
+    for name in plan::PLANNER_NAMES {
+        let planner = plan::planner_by_name(name)
+            .unwrap_or_else(|| panic!("registered planner {name:?} must resolve"));
+        assert_eq!(planner.name(), name);
+        assert!(!planner.describe().is_empty());
+
+        let p = planner.plan(&ins).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(p.version, plan::PLAN_VERSION);
+        assert_eq!(p.experiment, "synthetic");
+        assert_eq!(p.layer_names, f.layer_names);
+        assert_eq!(p.ops.len(), 2, "{name}: one OP per scale");
+        for op in &p.ops {
+            assert_eq!(op.assignment.len(), f.layer_names.len(), "{name}");
+            assert!(op.relative_power > 0.0 && op.relative_power <= 1.0, "{name}");
+            for &mid in &op.assignment {
+                assert!(mid < f.db.len(), "{name}: multiplier id {mid} out of range");
+            }
+        }
+        // the deployed subset never exceeds the budget the plan declares
+        assert!(!p.subset.is_empty(), "{name}");
+        assert!(
+            p.subset.len() <= p.n_multipliers,
+            "{name}: subset {} > declared budget {}",
+            p.subset.len(),
+            p.n_multipliers
+        );
+        // the QoS-Nets planner additionally honors the *shared* budget n
+        if name == "qos" {
+            assert!(p.subset.len() <= ins.n_multipliers);
+            assert!(p.kmeans_inertia.is_some());
+        }
+        let prov = p.provenance.expect("planners stamp provenance");
+        assert_eq!(prov.planner, name);
+        assert_eq!(prov.seed, ins.seed);
+    }
+}
+
+#[test]
+fn unknown_planner_name_does_not_resolve() {
+    assert!(plan::planner_by_name("nope").is_none());
+    assert!(plan::planner_by_name("").is_none());
+}
+
+#[test]
+fn plan_ladder_feeds_the_qos_controller() {
+    use qos_nets::qos::{QosConfig, QosController};
+
+    let f = fixture(8);
+    let p = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+    let ladder = p.ladder();
+    assert_eq!(ladder.len(), p.ops.len());
+    for (i, e) in ladder.iter().enumerate() {
+        assert_eq!(e.table_index, i);
+        assert_eq!(e.name, p.ops[i].name);
+    }
+    // a controller built straight from the stored plan answers in plan
+    // (= OpTable) indices
+    let mut c = QosController::new(ladder, QosConfig::default());
+    let idx = c
+        .observe(1.0, std::time::Instant::now())
+        .unwrap_or_else(|| c.current_table_index());
+    assert!(idx < p.ops.len());
+}

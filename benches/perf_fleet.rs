@@ -1,0 +1,124 @@
+//! Fleet serving benchmarks (stub-backed, always runs): loopback
+//! scatter/gather throughput vs a direct in-process backend at several
+//! worker counts and batch sizes, plus the cost of the two fleet-wide
+//! switch broadcasts (Immediate fire-and-forget vs Drain acked by every
+//! worker).
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use qos_nets::backend::stub::stub_op;
+use qos_nets::backend::{Backend, StubBackend};
+use qos_nets::engine::OperatingPoint;
+use qos_nets::fleet::{worker, FleetBackend, WorkerHandle};
+use qos_nets::qos::SwitchMode;
+
+fn catalog() -> Vec<OperatingPoint> {
+    vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]
+}
+
+fn spawn_workers(n: usize, delay: Duration) -> (Vec<WorkerHandle>, Vec<String>) {
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = worker::spawn(listener, "bench-worker", "", catalog(), move |_conn| {
+            Ok(StubBackend::new(10).with_delay(delay))
+        })
+        .unwrap();
+        addrs.push(handle.addr().to_string());
+        handles.push(handle);
+    }
+    (handles, addrs)
+}
+
+fn throughput_section() -> anyhow::Result<()> {
+    println!("=== loopback fleet scatter/gather throughput (stub, 1 ms/chunk) ===");
+    println!(
+        "{:>8} {:>7} {:>9} {:>12} {:>12}",
+        "workers", "batch", "rounds", "images/s", "ms/forward"
+    );
+    let elems = 64usize;
+    let delay = Duration::from_millis(1);
+    for &workers in &[1usize, 2, 4] {
+        let (handles, addrs) = spawn_workers(workers, delay);
+        let mut fleet = FleetBackend::connect(&addrs)?;
+        fleet.prepare(&catalog())?;
+        for &batch in &[8usize, 64] {
+            let images: Vec<f32> = (0..batch * elems).map(|i| (i % 10) as f32).collect();
+            let rounds = 50usize;
+            // warmup
+            fleet.forward(0, &images, batch)?;
+            let t0 = Instant::now();
+            for _ in 0..rounds {
+                fleet.forward(0, &images, batch)?;
+            }
+            let wall = t0.elapsed();
+            println!(
+                "{:>8} {:>7} {:>9} {:>12.0} {:>12.3}",
+                workers,
+                batch,
+                rounds,
+                (rounds * batch) as f64 / wall.as_secs_f64(),
+                wall.as_secs_f64() * 1e3 / rounds as f64,
+            );
+        }
+        fleet.shutdown_fleet();
+        for h in handles {
+            h.join();
+        }
+    }
+    // the in-process baseline the fleet overhead is measured against
+    let mut local = StubBackend::new(10).with_delay(delay);
+    local.prepare(&catalog())?;
+    let images: Vec<f32> = (0..64 * elems).map(|i| (i % 10) as f32).collect();
+    let t0 = Instant::now();
+    for _ in 0..50 {
+        local.forward(0, &images, 64)?;
+    }
+    println!(
+        "   local      64        50 {:>12.0} {:>12.3}   (no wire)",
+        (50.0 * 64.0) / t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() * 1e3 / 50.0,
+    );
+    Ok(())
+}
+
+fn switch_broadcast_section() -> anyhow::Result<()> {
+    println!();
+    println!("=== fleet-wide OP switch broadcast cost (idle workers) ===");
+    println!("{:>8} {:>16} {:>16}", "workers", "immediate us", "drain us");
+    for &workers in &[1usize, 2, 4] {
+        let (handles, addrs) = spawn_workers(workers, Duration::ZERO);
+        let mut fleet = FleetBackend::connect(&addrs)?;
+        fleet.prepare(&catalog())?;
+        let rounds = 200usize;
+        let t0 = Instant::now();
+        for i in 0..rounds {
+            fleet.set_operating_point(i % 2, SwitchMode::Immediate)?;
+        }
+        let imm = t0.elapsed();
+        let t0 = Instant::now();
+        for i in 0..rounds {
+            fleet.set_operating_point(i % 2, SwitchMode::Drain)?;
+        }
+        let drain = t0.elapsed();
+        println!(
+            "{:>8} {:>16.1} {:>16.1}",
+            workers,
+            imm.as_micros() as f64 / rounds as f64,
+            drain.as_micros() as f64 / rounds as f64,
+        );
+        fleet.shutdown_fleet();
+        for h in handles {
+            h.join();
+        }
+    }
+    println!("(immediate = fire-and-forget writes; drain = every worker acks a barrier)");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    throughput_section()?;
+    switch_broadcast_section()
+}

@@ -36,6 +36,7 @@ fn elastic_stub_section() -> anyhow::Result<()> {
                 scale_up_wait: Duration::from_millis(10),
                 scale_up_after: 1,
                 scale_down_after: 10,
+                ..BatcherConfig::default()
             },
         )?;
         let n = 400usize;

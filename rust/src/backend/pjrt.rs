@@ -4,8 +4,10 @@
 //! The executable is OP-agnostic; reconfiguration = input buffers
 //! (DESIGN.md).  `prepare` builds one [`runtime::OpBuffers`] bundle per
 //! ladder rung — U/V low-rank error tables for the assigned multiplier
-//! plus the (BN-overlaid) gamma/beta/bias tensors — so `forward` only
-//! mints the `x` literal and executes.
+//! plus the (BN-overlaid) gamma/beta/bias tensors, *pre-minted as
+//! literals* — so `forward` only mints the `x` literal and executes;
+//! the zero-pad scratch for partial tail chunks is likewise kept
+//! resident per export batch instead of reallocated per call.
 //!
 //! The artifact is compiled for a fixed `export_batch`; `forward`
 //! accepts any batch size by chunking, zero-padding the final partial
@@ -45,6 +47,9 @@ pub struct PjrtBackend {
     num_classes: usize,
     /// apply `bn_op{i}.qten` overlays in `prepare` (mode != "none")
     bn_overlays: bool,
+    /// reusable `[export_batch * elems]` buffer for zero-padding the
+    /// final partial chunk of a batch (allocated once, per export batch)
+    pad_scratch: Vec<f32>,
 }
 
 impl PjrtBackend {
@@ -79,6 +84,7 @@ impl PjrtBackend {
             input_shape: input_shape.to_vec(),
             num_classes,
             bn_overlays: true,
+            pad_scratch: Vec::new(),
         })
     }
 
@@ -152,10 +158,15 @@ impl Backend for PjrtBackend {
             let x = if b == eb {
                 runtime::literal_f32(&images[i * elems..(i + eb) * elems], &shape)?
             } else {
-                // partial tail: zero-pad to the compiled batch, truncate below
-                let mut padded = vec![0f32; eb * elems];
-                padded[..b * elems].copy_from_slice(&images[i * elems..(i + b) * elems]);
-                runtime::literal_f32(&padded, &shape)?
+                // partial tail: zero-pad to the compiled batch (reusing
+                // the resident scratch buffer), truncate logits below
+                if self.pad_scratch.len() != eb * elems {
+                    self.pad_scratch = vec![0f32; eb * elems];
+                }
+                self.pad_scratch[..b * elems]
+                    .copy_from_slice(&images[i * elems..(i + b) * elems]);
+                self.pad_scratch[b * elems..].fill(0.0);
+                runtime::literal_f32(&self.pad_scratch, &shape)?
             };
             let logits = self.model.execute_with_op(x, bufs)?;
             out.extend_from_slice(&logits[..b * self.num_classes]);

@@ -10,8 +10,9 @@ use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::{self, Backend, NativeBackend};
-use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::commands::{fleet_addrs, load_db, load_experiment};
 use crate::cli::Args;
+use crate::fleet::FleetBackend;
 use crate::pipeline::{self, Experiment};
 use crate::plan::OpPlan;
 
@@ -22,13 +23,21 @@ pub fn run(args: &Args) -> Result<()> {
 
 /// Build the requested backend for an experiment.  `mode` controls
 /// whether the PJRT backend applies BN overlays ("none" disables them,
-/// mirroring the native backend's overlay-free operating points).
+/// mirroring the native backend's overlay-free operating points).  A
+/// `--fleet host:port,...` flag overrides `--backend`: evaluation then
+/// scatters over remote worker daemons instead of a local substrate.
 pub(crate) fn make_backend(
     args: &Args,
     exp: &Experiment,
     which: &str,
     mode: &str,
 ) -> Result<Box<dyn Backend>> {
+    if let Some(addrs) = fleet_addrs(args)? {
+        let be = FleetBackend::connect(&addrs)?;
+        be.check_mode(mode)?;
+        println!("fleet: {} worker(s) connected", be.live_workers());
+        return Ok(Box::new(be));
+    }
     match which {
         "native" => Ok(Box::new(NativeBackend::new(exp.graph.clone(), load_db(args)?))),
         #[cfg(feature = "pjrt")]

@@ -1,17 +1,20 @@
 //! `qos-nets` subcommand implementations, one module per command.
 //!
-//! Every inference-carrying command (`eval`, `serve`) goes through the
-//! unified [`crate::backend::Backend`] trait, selected with
-//! `--backend native|pjrt`; `dispatch` is the single entry the binary
-//! calls.
+//! Every inference-carrying command (`eval`, `serve`, `worker`) goes
+//! through the unified [`crate::backend::Backend`] trait, selected with
+//! `--backend native|pjrt` (plus `--fleet host:port,...` to serve or
+//! evaluate over remote fleet workers); `dispatch` is the single entry
+//! the binary calls.
 
 mod baselines;
 mod eval;
 mod muldb;
+mod plan;
 mod report;
 mod search;
 mod selftest;
 mod serve;
+mod worker;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -36,6 +39,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
             eval::run_with_backend(args, "pjrt", Some(64))
         }
         "serve" => serve::run(args),
+        "worker" => worker::run(args),
+        "plan" => plan::run(args),
         "report" => report::run(args),
         "selftest" => selftest::run(args),
         "help" | "--help" | "-h" => {
@@ -60,4 +65,20 @@ pub(crate) fn load_db(args: &Args) -> Result<Arc<MulDb>> {
 
 pub(crate) fn load_experiment(args: &Args) -> Result<Experiment> {
     Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))
+}
+
+/// Parse the `--fleet host:port,host:port,...` flag shared by `serve`
+/// and `eval`; `Ok(None)` when the flag is absent.
+pub(crate) fn fleet_addrs(args: &Args) -> Result<Option<Vec<String>>> {
+    let Some(fleet) = args.get("fleet") else {
+        return Ok(None);
+    };
+    let addrs: Vec<String> = fleet
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--fleet needs at least one host:port");
+    Ok(Some(addrs))
 }

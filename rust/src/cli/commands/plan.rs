@@ -1,0 +1,126 @@
+//! `qos-nets plan diff a.json b.json`: compare two stored `OpPlan`
+//! artifacts — per-layer assignment deltas per operating point, per-OP
+//! power deltas, subset and provenance differences.  Useful for
+//! auditing what a planner change (or a re-run under a new seed)
+//! actually did to a deployment before serving it.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::plan::{OpPlan, PlanDiff, Provenance};
+
+pub fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("diff") => diff(args),
+        Some(other) => bail!("unknown plan subcommand {other:?} (expected: diff)"),
+        None => bail!("usage: qos-nets plan diff <a.json> <b.json>"),
+    }
+}
+
+fn provenance_line(p: &Option<Provenance>) -> String {
+    match p {
+        Some(p) => format!(
+            "planner={} seed={} config_hash={}",
+            p.planner, p.seed, p.config_hash
+        ),
+        None => "(none — legacy plan)".to_string(),
+    }
+}
+
+fn mul_label(plan: &OpPlan, id: Option<usize>) -> String {
+    match id {
+        None => "-".to_string(),
+        Some(id) => match plan.mul_name(id) {
+            Some(name) => format!("{id} ({name})"),
+            None => id.to_string(),
+        },
+    }
+}
+
+fn diff(args: &Args) -> Result<()> {
+    let [path_a, path_b] = match &args.positional[1..] {
+        [a, b] => [a, b],
+        _ => bail!("usage: qos-nets plan diff <a.json> <b.json>"),
+    };
+    let a = OpPlan::load(path_a)?;
+    let b = OpPlan::load(path_b)?;
+    let d: PlanDiff = a.diff(&b);
+
+    println!("plan diff: {path_a} (a) vs {path_b} (b)");
+    println!(
+        "  a: experiment={} version={} ops={} budget n={}",
+        a.experiment,
+        a.version,
+        a.ops.len(),
+        a.n_multipliers
+    );
+    println!(
+        "  b: experiment={} version={} ops={} budget n={}",
+        b.experiment,
+        b.version,
+        b.ops.len(),
+        b.n_multipliers
+    );
+    println!("  provenance a: {}", provenance_line(&d.provenance_a));
+    println!("  provenance b: {}", provenance_line(&d.provenance_b));
+
+    if !d.subset_only_a.is_empty() || !d.subset_only_b.is_empty() {
+        let fmt = |plan: &OpPlan, ids: &[usize]| -> String {
+            ids.iter()
+                .map(|&id| mul_label(plan, Some(id)))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        if !d.subset_only_a.is_empty() {
+            println!("  multipliers only in a: {}", fmt(&a, &d.subset_only_a));
+        }
+        if !d.subset_only_b.is_empty() {
+            println!("  multipliers only in b: {}", fmt(&b, &d.subset_only_b));
+        }
+    } else {
+        println!("  deployed multiplier subset: identical");
+    }
+
+    let mut changed_layers = 0usize;
+    for (i, op) in d.ops.iter().enumerate() {
+        let label = match (&op.name_a, &op.name_b) {
+            (Some(na), Some(nb)) if na == nb => na.clone(),
+            (Some(na), Some(nb)) => format!("{na} -> {nb}"),
+            (Some(na), None) => format!("{na} (only in a)"),
+            (None, Some(nb)) => format!("{nb} (only in b)"),
+            (None, None) => "?".to_string(),
+        };
+        match (op.power_a, op.power_b) {
+            (Some(pa), Some(pb)) => println!(
+                "  OP{i} [{label}]: power {:.2}% -> {:.2}% ({:+.2}pp), {} layer(s) changed",
+                100.0 * pa,
+                100.0 * pb,
+                100.0 * (pb - pa),
+                op.changed.len()
+            ),
+            (Some(pa), None) => println!("  OP{i} [{label}]: power {:.2}% -> (absent)", 100.0 * pa),
+            (None, Some(pb)) => println!("  OP{i} [{label}]: (absent) -> power {:.2}%", 100.0 * pb),
+            (None, None) => {}
+        }
+        for delta in &op.changed {
+            println!(
+                "      {}: {} -> {}",
+                delta.layer,
+                mul_label(&a, delta.from),
+                mul_label(&b, delta.to)
+            );
+            changed_layers += 1;
+        }
+    }
+
+    if d.is_same_deployment() {
+        println!("  verdict: identical deployments (assignments, powers, subset)");
+    } else {
+        println!(
+            "  verdict: {} assignment delta(s) across {} operating point(s)",
+            changed_layers,
+            d.ops.len()
+        );
+    }
+    Ok(())
+}

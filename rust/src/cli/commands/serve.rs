@@ -1,8 +1,16 @@
-//! `qos-nets serve --backend native|pjrt`: QoS serving demo — the
-//! elastic batching server (generic over [`Backend`]) under a synthetic
-//! power-budget trace, the QoS controller walking the OP ladder live
-//! (draining upgrades, immediate downgrades) while the scaling
-//! supervisor grows/shrinks the worker pool with the offered load.
+//! `qos-nets serve --backend native|pjrt [--fleet host:port,...]`: QoS
+//! serving demo — the elastic batching server (generic over
+//! [`Backend`]) under a synthetic power-budget trace, the QoS
+//! controller walking the OP ladder live (draining upgrades, immediate
+//! downgrades) while the scaling supervisor grows/shrinks the worker
+//! pool with the offered load.
+//!
+//! With `--fleet`, the backend inside each server worker is a
+//! [`FleetBackend`] scattering batches across remote worker daemons
+//! (`qos-nets worker`), a separate control-plane connection broadcasts
+//! every controller switch fleet-wide (drained upgrades are acked by
+//! every surviving worker before the local switch applies), and the
+//! final report adds per-remote-worker attribution.
 
 use std::time::{Duration, Instant};
 
@@ -11,8 +19,9 @@ use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::{Backend, NativeBackend, OpTable};
-use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::commands::{fleet_addrs, load_db, load_experiment};
 use crate::cli::Args;
+use crate::fleet::{FleetBackend, FleetStats};
 use crate::pipeline::Experiment;
 use crate::plan::OpPlan;
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
@@ -31,7 +40,10 @@ pub fn run(args: &Args) -> Result<()> {
     let table = OpTable::new(ops);
     let controller = QosController::new(table.ladder(), QosConfig::default());
 
-    let workers = args.get_usize("workers", 2);
+    // a fleet provides its own parallelism, so the local pool defaults
+    // to a single scatter/gather worker there
+    let default_workers = if args.has("fleet") { 1 } else { 2 };
+    let workers = args.get_usize("workers", default_workers);
     let max_workers = args.get_usize("max-workers", workers);
     let cfg = BatcherConfig {
         max_batch: args.get_usize("max-batch", 16),
@@ -42,8 +54,29 @@ pub fn run(args: &Args) -> Result<()> {
         // stays under an explicit ceiling so --max-workers is honored
         min_workers: args.get_usize("min-workers", workers.min(max_workers)),
         max_workers,
+        retag_downgrades: args.has("retag-downgrades"),
         ..BatcherConfig::default()
     };
+
+    if let Some(addrs) = fleet_addrs(args)? {
+        let stats = FleetStats::default();
+        // control plane: its own connections, so switch broadcasts and
+        // heartbeats never interleave with in-flight batches
+        let control = FleetBackend::connect_with(&addrs, stats.clone())?;
+        control.check_mode(mode)?;
+        println!(
+            "fleet: {} worker(s) connected ({})",
+            control.live_workers(),
+            addrs.join(", ")
+        );
+        let st = stats.clone();
+        let server = Server::start(
+            move |_w| FleetBackend::connect_with(&addrs, st.clone()),
+            table,
+            cfg,
+        )?;
+        return drive(args, &exp, server, controller, Some((control, stats)));
+    }
 
     // the worker factory runs on each worker's own thread; capture only
     // cheap cloneable state so the closure is Send + Sync
@@ -56,7 +89,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller)
+            drive(args, &exp, server, controller, None)
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
@@ -74,7 +107,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller)
+            drive(args, &exp, server, controller, None)
         }
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => bail!("this build has no PJRT support (rebuild with the `pjrt` feature)"),
@@ -82,12 +115,16 @@ pub fn run(args: &Args) -> Result<()> {
     }
 }
 
-/// The serving loop itself, written once for every backend.
+/// The serving loop itself, written once for every backend.  With a
+/// fleet control plane attached, every controller switch is broadcast
+/// fleet-wide first (Drain = acked by every surviving worker) and the
+/// fleet is heartbeat-probed once per second.
 fn drive<B: Backend + 'static>(
     args: &Args,
     exp: &Experiment,
     server: Server<B>,
     mut controller: QosController,
+    mut fleet: Option<(FleetBackend, FleetStats)>,
 ) -> Result<()> {
     let secs = args.get_f64("secs", 3.0);
     let rate = args.get_f64("rate", 200.0); // requests/second
@@ -104,13 +141,27 @@ fn drive<B: Backend + 'static>(
     let started = Instant::now();
     let mut submitted = 0u64;
     let mut drains = 0u64;
+    let mut fleet_acks = 0u64;
     let mut energy = 0.0f64; // sum of per-request relative power
     for (step, &budget) in trace.iter().enumerate() {
         if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
             if mode == SwitchMode::Drain {
                 drains += 1;
             }
+            if let Some((control, _)) = fleet.as_mut() {
+                // fleet first: a drained upgrade is only reported once
+                // every surviving remote worker has acked the barrier
+                let n = control.set_operating_point(idx, mode)? as u64;
+                if mode == SwitchMode::Drain {
+                    fleet_acks += n;
+                }
+            }
             server.set_operating_point_with(idx, mode)?;
+        }
+        if let Some((control, _)) = fleet.as_mut() {
+            if step % 20 == 19 {
+                control.heartbeat(Duration::from_millis(500));
+            }
         }
         let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
         while Instant::now() < step_end {
@@ -158,8 +209,8 @@ fn drive<B: Backend + 'static>(
         controller.budget_violations
     );
     println!(
-        "  workers: live={live} peak={} scale-ups={} scale-downs={} spawn-failures={}",
-        m.peak_workers, m.scale_ups, m.scale_downs, m.spawn_failures
+        "  workers: live={live} peak={} scale-ups={} scale-downs={} spawn-failures={} retagged-batches={}",
+        m.peak_workers, m.scale_ups, m.scale_downs, m.spawn_failures, m.retagged_batches
     );
     for (i, c) in m.per_op_requests.iter().enumerate() {
         let h = &m.per_op_latency[i];
@@ -175,5 +226,22 @@ fn drive<B: Backend + 'static>(
         "  mean relative multiplication power over run: {:.2}%",
         100.0 * energy / submitted.max(1) as f64
     );
+    if let Some((control, stats)) = fleet {
+        let (workers, requeues, evictions) = stats.snapshot();
+        println!(
+            "  fleet: {} worker(s) live at end, drain acks={fleet_acks} requeued chunks={requeues} evictions={evictions}",
+            control.live_workers()
+        );
+        for (addr, w) in workers {
+            println!(
+                "    {addr}: {} requests in {} batches  mean={:.2}ms errors={}{}",
+                w.requests,
+                w.batches,
+                w.mean_latency_us() / 1e3,
+                w.errors,
+                if w.evicted { "  [evicted]" } else { "" }
+            );
+        }
+    }
     Ok(())
 }

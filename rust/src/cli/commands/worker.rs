@@ -1,0 +1,73 @@
+//! `qos-nets worker --listen ADDR --backend native|pjrt`: one fleet
+//! worker daemon.
+//!
+//! The worker loads its experiment artifacts and stored plan *locally*
+//! (weights never cross the wire), builds an OP catalog — the exact
+//! 8-bit baseline plus every rung of the plan's ladder, with the
+//! retraining overlays of `--mode` applied — and then answers the
+//! fleet wire protocol until a coordinator sends `Shutdown`.  Pair it
+//! with `serve --fleet` or `eval --fleet` on the coordinator side.
+
+use std::net::TcpListener;
+
+use anyhow::{bail, Result};
+
+#[cfg(feature = "pjrt")]
+use crate::backend::PjrtBackend;
+use crate::backend::NativeBackend;
+use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::Args;
+use crate::fleet::worker;
+use crate::pipeline;
+use crate::plan::OpPlan;
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = load_experiment(args)?;
+    let mode = args.get_or("mode", "bn");
+    let which = args.get_or("backend", "native");
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+
+    // the catalog: everything a coordinator may ask this worker to make
+    // resident — the exact baseline (eval ladders start with it) plus
+    // the stored plan's OPs, resolved by name at Prepare time
+    let plan = OpPlan::load_for(&exp)?;
+    let mut catalog = vec![pipeline::exact_operating_point(&exp)?];
+    catalog.extend(plan.load_operating_points(&exp, mode)?);
+
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    let name = format!("{}@{addr}", exp.name);
+    let names: Vec<&str> = catalog.iter().map(|o| o.name.as_str()).collect();
+    println!(
+        "[{}] fleet worker `{name}`: backend={which} mode={mode} listening on {addr}",
+        exp.name
+    );
+    println!("  catalog ({} OPs): {}", names.len(), names.join(", "));
+    println!("  stop with a coordinator Shutdown frame (e.g. fleet teardown)");
+
+    match which {
+        "native" => {
+            let graph = exp.graph.clone();
+            let db = load_db(args)?;
+            worker::run(listener, name, mode, catalog, move |_conn| {
+                Ok(NativeBackend::new(graph.clone(), db.clone()))
+            })
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let artifacts = exp.artifacts.clone();
+            let dir = exp.dir.clone();
+            let ishape = exp.graph.input_shape.clone();
+            let classes = exp.num_classes();
+            let use_bn = mode != "none";
+            worker::run(listener, name, mode, catalog, move |_conn| {
+                let mut be = PjrtBackend::open(&artifacts, &dir, &ishape, classes)?;
+                be.set_bn_overlays(use_bn);
+                Ok(be)
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT support (rebuild with the `pjrt` feature)"),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}

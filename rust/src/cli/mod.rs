@@ -74,18 +74,34 @@ COMMANDS
   baselines --exp E             run every registered planner on identical
                                 inputs, print one comparison table
                                 (paper Table 1 shape, qos included)
-  eval      --exp E [--backend B] [--mode M]
+  eval      --exp E [--backend B] [--mode M] [--fleet H:P,...]
                                 evaluate every operating point through the
                                 unified Backend trait (B: native|pjrt,
                                 default native; M: none|bn|full, default bn
-                                — pjrt honors bn overlays only)
+                                — pjrt honors bn overlays only; --fleet
+                                evaluates over remote fleet workers)
   serve     --exp E [--backend B] [--secs S]
             [--workers N] [--min-workers N] [--max-workers N]
+            [--fleet H:P,H:P,...] [--retag-downgrades]
                                 QoS serving demo: elastic batching server
                                 with a power-budget trace driving OP
                                 switches (draining upgrades / immediate
                                 downgrades) and load-driven worker
-                                scaling (B: native|pjrt, default native)
+                                scaling (B: native|pjrt, default native;
+                                --fleet scatters batches across remote
+                                workers and broadcasts OP switches
+                                fleet-wide; --retag-downgrades lets an
+                                immediate downgrade retag already-formed
+                                batches to the cheaper OP)
+  worker    --exp E [--listen ADDR] [--backend B] [--mode M]
+                                fleet worker daemon: serves the
+                                experiment's OP catalog (exact baseline
+                                + plan ladder) over the fleet wire
+                                protocol until a coordinator sends
+                                Shutdown (default ADDR 127.0.0.1:7070)
+  plan      diff A.json B.json  compare two stored OpPlans: per-layer
+                                assignment deltas per OP, per-OP power
+                                deltas, subset + provenance differences
   report    <fig1|fig2|fig3> --exp E   dump figure data series
   selftest  --exp E             cross-layer integration checks
 

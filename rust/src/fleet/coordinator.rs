@@ -1,0 +1,625 @@
+//! Coordinator side of the fleet: [`FleetBackend`] implements the
+//! unified [`Backend`] trait over a set of remote workers.
+//!
+//! * **Scatter/gather.**  `forward` splits a batch into contiguous
+//!   chunks, one per live worker, runs them in parallel (scoped
+//!   threads, one per peer connection) and reassembles the logits in
+//!   submission order — so the fleet is bit-identical to a single
+//!   backend serving the same stream, regardless of how the batch was
+//!   split.
+//! * **Failure semantics.**  A chunk whose worker dies mid-call evicts
+//!   that worker and is *requeued* onto the survivors (round-robin,
+//!   bounded by [`FleetBackend::with_max_retries`]); the forward only
+//!   fails once a chunk exhausts its retries or no workers remain.  No
+//!   request is ever silently dropped.
+//! * **Fleet-wide switching.**  [`FleetBackend::set_operating_point`]
+//!   broadcasts `SetOp` with the PR-2 [`SwitchMode`] semantics: `Drain`
+//!   writes the barrier frame to every live worker first (so they all
+//!   drain concurrently), then collects one ack per surviving worker
+//!   before returning; `Immediate` is fire-and-forget.
+//! * **Attribution.**  Every instance records per-worker request/batch
+//!   counts, cumulative latency and eviction state into a shared
+//!   [`FleetStats`]; `serve --fleet` hands one handle to every server
+//!   worker's backend and prints the per-worker table at the end (the
+//!   heterogeneous-pool attribution follow-on from the elastic-server
+//!   PR).
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::Backend;
+use crate::engine::OperatingPoint;
+use crate::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
+use crate::qos::SwitchMode;
+
+/// Default socket read/write timeout for data-plane calls; a hung
+/// worker is indistinguishable from a dead one past this.
+const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-worker serving statistics (see [`FleetStats`]).
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    /// Images this worker served.
+    pub requests: u64,
+    /// Forward calls (chunks) this worker served.
+    pub batches: u64,
+    /// I/O or protocol failures observed talking to this worker.
+    pub errors: u64,
+    /// Cumulative wall time of successful forward calls, microseconds.
+    pub latency_us_sum: u64,
+    /// Whether some coordinator connection evicted this worker.
+    pub evicted: bool,
+}
+
+impl WorkerStats {
+    /// Mean per-chunk forward latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct FleetStatsInner {
+    workers: BTreeMap<String, WorkerStats>,
+    requeues: u64,
+    evictions: u64,
+}
+
+/// Shared per-worker attribution registry, keyed by worker address.
+/// Cheap to clone; every [`FleetBackend`] built from the same handle
+/// (e.g. one per server worker thread) folds into the same table.
+#[derive(Clone, Default)]
+pub struct FleetStats {
+    inner: Arc<Mutex<FleetStatsInner>>,
+}
+
+impl FleetStats {
+    fn with_worker(&self, addr: &str, f: impl FnOnce(&mut WorkerStats)) {
+        let mut inner = self.inner.lock().unwrap();
+        f(inner.workers.entry(addr.to_string()).or_default());
+    }
+
+    fn record_requeue(&self) {
+        self.inner.lock().unwrap().requeues += 1;
+    }
+
+    /// Mark one worker evicted.  The counter is per *worker*, not per
+    /// coordinator connection: several backends sharing this registry
+    /// (one per server worker thread + the control plane) all losing
+    /// the same dead worker still count one eviction.
+    fn record_eviction(&self, addr: &str) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let w = inner.workers.entry(addr.to_string()).or_default();
+        if !w.evicted {
+            w.evicted = true;
+            inner.evictions += 1;
+        }
+    }
+
+    /// Snapshot: per-worker stats (sorted by address), total requeued
+    /// chunks, total evictions.
+    pub fn snapshot(&self) -> (Vec<(String, WorkerStats)>, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (
+            inner.workers.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            inner.requeues,
+            inner.evictions,
+        )
+    }
+}
+
+/// One remote worker as this coordinator sees it.
+struct Peer {
+    addr: String,
+    /// Overlay mode the worker advertised in `HelloAck` (empty = not
+    /// applicable, e.g. in-process test workers).
+    mode: String,
+    /// `None` once evicted.
+    stream: Option<TcpStream>,
+}
+
+/// One scatter/gather work item: images `[start..start + len)` of the
+/// current forward call, with its requeue budget consumed so far.
+#[derive(Clone, Copy)]
+struct Chunk {
+    start: usize,
+    len: usize,
+    attempts: usize,
+}
+
+/// What one chunk call produced.
+enum ChunkOutcome {
+    Logits(Vec<f32>),
+    /// Worker-side application error (bad OP index, backend failure):
+    /// deterministic, so retrying elsewhere would fail too — fatal.
+    App(String),
+    /// Transport failure: the worker is gone; requeue the chunk.
+    Io,
+}
+
+/// Drop a peer's connection and account the failure — the single place
+/// eviction bookkeeping lives (the `evictions` counter stays per
+/// worker, deduplicated inside [`FleetStats`]).
+fn evict(peer: &mut Peer, stats: &FleetStats) {
+    peer.stream = None;
+    stats.with_worker(&peer.addr, |w| w.errors += 1);
+    stats.record_eviction(&peer.addr);
+}
+
+/// Strict request/response exchange with one peer; evicts on transport
+/// failure (the stream is poisoned mid-frame, so it cannot be reused).
+fn call(
+    peer: &mut Peer,
+    stats: &FleetStats,
+    frame: &Frame,
+    payload: &[f32],
+) -> Result<(Frame, Vec<f32>)> {
+    let Some(stream) = peer.stream.as_mut() else {
+        bail!("worker {} already evicted", peer.addr);
+    };
+    let r = wire::write_frame(stream, frame, payload).and_then(|()| wire::read_frame(stream));
+    match r {
+        Ok(reply) => Ok(reply),
+        Err(e) => {
+            evict(peer, stats);
+            Err(e.context(format!("worker {}", peer.addr)))
+        }
+    }
+}
+
+/// A remote-fleet [`Backend`]: scatter/gather over TCP workers with
+/// failover, plus the fleet-wide control plane (switch broadcast,
+/// heartbeats, shutdown).  See the module docs.
+pub struct FleetBackend {
+    peers: Vec<Peer>,
+    classes: usize,
+    stats: FleetStats,
+    /// Requeue budget per chunk after its first failed attempt.
+    max_retries: usize,
+    io_timeout: Duration,
+}
+
+impl FleetBackend {
+    /// Connect to every worker and run the `Hello` handshake.  All
+    /// workers must agree on the classifier width; any unreachable
+    /// address fails the whole connect (a misspelled fleet member
+    /// should not silently shrink the fleet at startup).
+    pub fn connect(addrs: &[String]) -> Result<FleetBackend> {
+        Self::connect_with(addrs, FleetStats::default())
+    }
+
+    /// [`connect`](Self::connect) into a shared [`FleetStats`] registry
+    /// (one per serving process, many backends).
+    pub fn connect_with(addrs: &[String], stats: FleetStats) -> Result<FleetBackend> {
+        anyhow::ensure!(!addrs.is_empty(), "fleet: no worker addresses given");
+        let mut peers = Vec::with_capacity(addrs.len());
+        let mut classes: Option<usize> = None;
+        for addr in addrs {
+            let mut stream = TcpStream::connect(addr.as_str())
+                .with_context(|| format!("connect to fleet worker {addr}"))?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
+            stream.set_write_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
+            wire::write_frame(&mut stream, &Frame::Hello { version: PROTOCOL_VERSION }, &[])
+                .with_context(|| format!("hello to fleet worker {addr}"))?;
+            let (reply, _) = wire::read_frame(&mut stream)
+                .with_context(|| format!("hello ack from fleet worker {addr}"))?;
+            let (c, mode) = match reply {
+                Frame::HelloAck { classes, mode, .. } => (classes, mode),
+                Frame::Err { message } => bail!("fleet worker {addr} refused hello: {message}"),
+                other => bail!("fleet worker {addr}: unexpected {} to hello", other.type_name()),
+            };
+            match classes {
+                None => classes = Some(c),
+                Some(prev) if prev != c => bail!(
+                    "fleet workers disagree on classifier width ({prev} vs {c} at {addr}) — mixed experiments?"
+                ),
+                Some(_) => {}
+            }
+            stats.with_worker(addr, |_| {}); // register for attribution
+            peers.push(Peer {
+                addr: addr.clone(),
+                mode,
+                stream: Some(stream),
+            });
+        }
+        Ok(FleetBackend {
+            peers,
+            classes: classes.expect("at least one worker"),
+            stats,
+            max_retries: 2,
+            io_timeout: DEFAULT_IO_TIMEOUT,
+        })
+    }
+
+    /// Override the per-chunk requeue budget (default 2).
+    pub fn with_max_retries(mut self, retries: usize) -> Self {
+        self.max_retries = retries;
+        self
+    }
+
+    /// Workers still connected.
+    pub fn live_workers(&self) -> usize {
+        self.peers.iter().filter(|p| p.stream.is_some()).count()
+    }
+
+    /// The shared attribution registry this backend records into.
+    pub fn stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Cross-check the coordinator's retraining-overlay mode against
+    /// what every worker advertised in its handshake.  `Prepare` alone
+    /// cannot catch this: relative powers are mode-independent (the
+    /// overlays only swap tensors), so a `--mode` mismatch would
+    /// silently serve different logits.  Workers advertising an empty
+    /// mode (in-process test workers) are skipped.
+    pub fn check_mode(&self, expected: &str) -> Result<()> {
+        for peer in &self.peers {
+            if !peer.mode.is_empty() && peer.mode != expected {
+                bail!(
+                    "fleet worker {} serves mode {:?} but this coordinator runs --mode {:?}; \
+                     restart the worker with the matching --mode",
+                    peer.addr,
+                    peer.mode,
+                    expected
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Broadcast an operating-point switch fleet-wide.
+    ///
+    /// `Drain` first writes the barrier frame to every live worker (so
+    /// the whole fleet drains concurrently), then reads one ack per
+    /// worker; workers that fail either phase are evicted.  Returns the
+    /// number of surviving workers that acked — the coordinator only
+    /// reports the switch complete once every survivor has.
+    /// `Immediate` is a fire-and-forget store on every worker.
+    pub fn set_operating_point(&mut self, op: usize, mode: SwitchMode) -> Result<usize> {
+        let drain = mode == SwitchMode::Drain;
+        let frame = Frame::SetOp { op, drain };
+        let stats = self.stats.clone();
+        let mut sent = Vec::new();
+        for (i, peer) in self.peers.iter_mut().enumerate() {
+            let Some(stream) = peer.stream.as_mut() else { continue };
+            match wire::write_frame(stream, &frame, &[]) {
+                Ok(()) => sent.push(i),
+                Err(_) => evict(peer, &stats),
+            }
+        }
+        if sent.is_empty() {
+            bail!("fleet: no live workers to switch");
+        }
+        if !drain {
+            return Ok(sent.len());
+        }
+        // collect one ack per worker *before* reporting any failure —
+        // bailing mid-loop would leave the remaining workers' buffered
+        // acks unread and desynchronize their request/response streams
+        let mut acks = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for i in sent {
+            let peer = &mut self.peers[i];
+            let Some(stream) = peer.stream.as_mut() else { continue };
+            match wire::read_frame(stream) {
+                Ok((Frame::Ok, _)) => acks += 1,
+                Ok((other, _)) => {
+                    // a worker that rejects (or mangles) the switch is
+                    // evicted: leaving it serving a different OP than
+                    // the rest of the fleet would be silently wrong
+                    let msg = match other {
+                        Frame::Err { message } => message,
+                        other => format!("unexpected {} to drain switch", other.type_name()),
+                    };
+                    evict(peer, &stats);
+                    if first_err.is_none() {
+                        first_err =
+                            Some(anyhow!("fleet worker {}: {msg}", peer.addr));
+                    }
+                }
+                Err(_) => evict(peer, &stats),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e.context("fleet drain switch rejected"));
+        }
+        if acks == 0 {
+            bail!("fleet: every worker died during the drain switch");
+        }
+        Ok(acks)
+    }
+
+    /// Probe every live worker with a `Heartbeat` under `timeout`;
+    /// workers that fail to `Pong` in time are evicted.  Returns the
+    /// live count afterwards.
+    pub fn heartbeat(&mut self, timeout: Duration) -> usize {
+        let stats = self.stats.clone();
+        for peer in &mut self.peers {
+            let Some(stream) = peer.stream.as_mut() else { continue };
+            stream.set_read_timeout(Some(timeout)).ok();
+            let ok = wire::write_frame(stream, &Frame::Heartbeat, &[]).is_ok()
+                && matches!(wire::read_frame(stream), Ok((Frame::Pong { .. }, _)));
+            if ok {
+                stream.set_read_timeout(Some(self.io_timeout)).ok();
+            } else {
+                evict(peer, &stats);
+            }
+        }
+        self.live_workers()
+    }
+
+    /// Fleet-wide barrier without a switch: every surviving worker acks
+    /// once it has no forward in flight.  Returns the ack count.
+    pub fn drain_fleet(&mut self) -> Result<usize> {
+        let stats = self.stats.clone();
+        let mut acks = 0usize;
+        for peer in &mut self.peers {
+            if peer.stream.is_none() {
+                continue;
+            }
+            match call(peer, &stats, &Frame::Drain, &[]) {
+                Ok((Frame::Ok, _)) => acks += 1,
+                Ok((Frame::Err { message }, _)) => {
+                    bail!("fleet worker {} failed to drain: {message}", peer.addr)
+                }
+                Ok(_) | Err(_) => {} // evicted by `call`
+            }
+        }
+        Ok(acks)
+    }
+
+    /// Ask every live worker daemon to wind down; returns how many
+    /// acked.  Used by operators tearing a fleet down from the
+    /// coordinator side.
+    pub fn shutdown_fleet(&mut self) -> usize {
+        let stats = self.stats.clone();
+        let mut acks = 0usize;
+        for peer in &mut self.peers {
+            if peer.stream.is_none() {
+                continue;
+            }
+            if let Ok((Frame::Ok, _)) = call(peer, &stats, &Frame::Shutdown, &[]) {
+                acks += 1;
+            }
+            peer.stream = None;
+        }
+        acks
+    }
+
+    /// Split `batch` into one contiguous chunk per live worker (the
+    /// first `batch % live` chunks get the extra image).
+    fn split(batch: usize, live: usize) -> Vec<Chunk> {
+        let base = batch / live;
+        let extra = batch % live;
+        let mut chunks = Vec::new();
+        let mut start = 0;
+        for i in 0..live {
+            let len = base + usize::from(i < extra);
+            if len > 0 {
+                chunks.push(Chunk { start, len, attempts: 0 });
+            }
+            start += len;
+        }
+        chunks
+    }
+
+    /// Run one round of chunk calls, one scoped thread per live peer
+    /// (each peer serves its assigned chunks sequentially on its own
+    /// connection).  Returns every chunk with its outcome.
+    fn scatter_round(
+        peers: &mut [Peer],
+        stats: &FleetStats,
+        assignments: Vec<Vec<Chunk>>,
+        op_idx: usize,
+        images: &[f32],
+        elems: usize,
+    ) -> Vec<(Chunk, ChunkOutcome)> {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (peer, chunks) in peers.iter_mut().zip(assignments) {
+                if chunks.is_empty() {
+                    continue;
+                }
+                let stats = stats.clone();
+                handles.push(s.spawn(move || {
+                    let mut out = Vec::with_capacity(chunks.len());
+                    for chunk in chunks {
+                        let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
+                        let frame = Frame::Forward { op: Some(op_idx), batch: chunk.len };
+                        let t0 = Instant::now();
+                        let outcome = match call(peer, &stats, &frame, data) {
+                            Ok((Frame::Logits { .. }, logits)) => {
+                                stats.with_worker(&peer.addr, |w| {
+                                    w.requests += chunk.len as u64;
+                                    w.batches += 1;
+                                    w.latency_us_sum += t0.elapsed().as_micros() as u64;
+                                });
+                                ChunkOutcome::Logits(logits)
+                            }
+                            Ok((Frame::Err { message }, _)) => ChunkOutcome::App(message),
+                            Ok((other, _)) => {
+                                // protocol confusion: poison the stream
+                                evict(peer, &stats);
+                                ChunkOutcome::App(format!(
+                                    "worker {}: unexpected {} to forward",
+                                    peer.addr,
+                                    other.type_name()
+                                ))
+                            }
+                            Err(_) => ChunkOutcome::Io,
+                        };
+                        out.push((chunk, outcome));
+                    }
+                    out
+                }));
+            }
+            handles.into_iter().flat_map(|h| h.join().expect("fleet chunk thread")).collect()
+        })
+    }
+}
+
+impl Backend for FleetBackend {
+    /// Broadcast the ladder to every worker (names + expected powers;
+    /// each worker resolves the OPs from its local catalog and makes
+    /// them resident).  A worker that *rejects* the ladder fails
+    /// prepare — a fleet serving mismatched plans is a configuration
+    /// error, not a failover case; workers that die are evicted.
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
+        anyhow::ensure!(!ops.is_empty(), "fleet prepare: empty ladder");
+        let ladder: Vec<LadderRung> = ops
+            .iter()
+            .map(|o| LadderRung { name: o.name.clone(), power: o.relative_power })
+            .collect();
+        let frame = Frame::Prepare { ladder };
+        let stats = self.stats.clone();
+        let mut prepared = 0usize;
+        for peer in &mut self.peers {
+            if peer.stream.is_none() {
+                continue;
+            }
+            match call(peer, &stats, &frame, &[]) {
+                Ok((Frame::Ok, _)) => prepared += 1,
+                Ok((Frame::Err { message }, _)) => {
+                    bail!("fleet worker {} rejected prepare: {message}", peer.addr)
+                }
+                Ok((other, _)) => bail!(
+                    "fleet worker {}: unexpected {} to prepare",
+                    peer.addr,
+                    other.type_name()
+                ),
+                Err(_) => {} // evicted by `call`
+            }
+        }
+        anyhow::ensure!(prepared > 0, "fleet prepare: no live workers");
+        Ok(())
+    }
+
+    /// Scatter the batch across live workers, gather logits in order,
+    /// rebalancing chunks from dead workers onto survivors (bounded
+    /// retries per chunk).
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch > 0 && !images.is_empty() && images.len() % batch == 0,
+            "bad fleet input: {} elems for batch {batch}",
+            images.len()
+        );
+        let elems = images.len() / batch;
+        let live = self.live_workers();
+        anyhow::ensure!(live > 0, "fleet forward: no live workers");
+        let mut pending = Self::split(batch, live);
+        let mut gathered: Vec<(usize, Vec<f32>)> = Vec::new();
+        while !pending.is_empty() {
+            // assign pending chunks round-robin over the live peers
+            let mut assignments: Vec<Vec<Chunk>> = vec![Vec::new(); self.peers.len()];
+            {
+                let live_idx: Vec<usize> = self
+                    .peers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.stream.is_some())
+                    .map(|(i, _)| i)
+                    .collect();
+                if live_idx.is_empty() {
+                    bail!(
+                        "fleet forward: all workers lost with {} images still queued",
+                        pending.iter().map(|c| c.len).sum::<usize>()
+                    );
+                }
+                for (i, chunk) in pending.drain(..).enumerate() {
+                    assignments[live_idx[i % live_idx.len()]].push(chunk);
+                }
+            }
+            let outcomes = Self::scatter_round(
+                &mut self.peers,
+                &self.stats,
+                assignments,
+                op_idx,
+                images,
+                elems,
+            );
+            for (chunk, outcome) in outcomes {
+                match outcome {
+                    ChunkOutcome::Logits(logits) => {
+                        anyhow::ensure!(
+                            logits.len() == chunk.len * self.classes,
+                            "fleet worker returned {} logits for {} images",
+                            logits.len(),
+                            chunk.len
+                        );
+                        gathered.push((chunk.start, logits));
+                    }
+                    ChunkOutcome::App(message) => bail!("fleet forward failed: {message}"),
+                    ChunkOutcome::Io => {
+                        let attempts = chunk.attempts + 1;
+                        if attempts > self.max_retries {
+                            bail!(
+                                "fleet forward: chunk of {} images failed {} times (retry budget {})",
+                                chunk.len,
+                                attempts,
+                                self.max_retries
+                            );
+                        }
+                        self.stats.record_requeue();
+                        pending.push(Chunk { attempts, ..chunk });
+                    }
+                }
+            }
+        }
+        gathered.sort_by_key(|(start, _)| *start);
+        let mut out = Vec::with_capacity(batch * self.classes);
+        for (_, logits) in gathered {
+            out.extend_from_slice(&logits);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        "fleet"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+}
+
+impl Drop for FleetBackend {
+    fn drop(&mut self) {
+        // orderly close: workers see EOF, not RST, on coordinator exit
+        for peer in &mut self.peers {
+            if let Some(s) = peer.stream.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_the_batch_in_order_without_empty_chunks() {
+        for (batch, live) in [(8usize, 3usize), (2, 4), (1, 1), (7, 7), (16, 2)] {
+            let chunks = FleetBackend::split(batch, live);
+            assert!(chunks.len() <= live);
+            let mut expect_start = 0;
+            for c in &chunks {
+                assert!(c.len > 0);
+                assert_eq!(c.start, expect_start);
+                expect_start += c.len;
+            }
+            assert_eq!(expect_start, batch);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Fleet serving: a coordinator/worker RPC subsystem behind the
+//! unified [`crate::backend::Backend`] trait.
+//!
+//! The paper's runtime story — operating points switched cheaply as
+//! conditions change — scales past one process here: many edge workers,
+//! each wrapping any local backend (native LUT engine or PJRT), are
+//! driven by a coordinator that scatters batches across them, gathers
+//! logits in order, fails over when a worker dies mid-stream, and
+//! broadcasts OP switches fleet-wide with the same `SwitchMode`
+//! semantics the in-process server uses (`Drain` = per-worker barrier
+//! acked before the switch is reported complete; `Immediate` =
+//! fire-and-forget).
+//!
+//!   * [`wire`]        the std-only TCP frame protocol (JSON header +
+//!     raw f32 payload, the QTEN idiom)
+//!   * [`worker`]      the worker daemon (`qos-nets worker`): wraps any
+//!     `Backend` behind the protocol, with a process-wide drain gate
+//!   * [`coordinator`] [`FleetBackend`]: the fleet *as* a `Backend` —
+//!     it slots into `server::Server`, `backend::evaluate` and the CLI
+//!     exactly like the native engine does
+//!
+//! The loopback integration tests (`rust/tests/fleet.rs`) pin the
+//! contract: a fleet of in-process workers is bit-identical to a single
+//! `NativeBackend` over the same request stream, including across a
+//! worker being killed mid-stream.
+
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{FleetBackend, FleetStats, WorkerStats};
+pub use wire::{Frame, LadderRung, PROTOCOL_VERSION};
+pub use worker::WorkerHandle;

@@ -1,0 +1,417 @@
+//! Fleet wire protocol: length-prefixed frames over TCP, std-only.
+//!
+//! Every frame is `b"QFLT" | u32 header_len | header JSON | u32
+//! payload_len | payload bytes`, little-endian lengths, payload a flat
+//! f32 array (images or logits) — the same JSON-header-plus-raw-data
+//! idiom as the QTEN tensor container (`util::tensorio`), reusing the
+//! in-tree codec (`util::json`) so the protocol needs no new
+//! dependencies.
+//!
+//! The conversation is strictly request/response per connection: the
+//! coordinator writes one frame and, when the frame type warrants a
+//! reply ([`Frame::expects_reply`]), reads exactly one frame back.  The
+//! single fire-and-forget frame is `SetOp { drain: false }` — the
+//! paper's "lightweight switching" applied fleet-wide, where waiting
+//! for acks would defeat the point of an urgent downgrade.
+//!
+//! | frame       | direction     | payload  | reply                  |
+//! |-------------|---------------|----------|------------------------|
+//! | `Hello`     | coord → worker| —        | `HelloAck` / `Err`     |
+//! | `Prepare`   | coord → worker| —        | `Ok` / `Err`           |
+//! | `Forward`   | coord → worker| images   | `Logits` / `Err`       |
+//! | `SetOp`     | coord → worker| —        | `Ok` iff `drain`       |
+//! | `Heartbeat` | coord → worker| —        | `Pong`                 |
+//! | `Drain`     | coord → worker| —        | `Ok` (after barrier)   |
+//! | `Shutdown`  | coord → worker| —        | `Ok` (then daemon exits)|
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Wire-format version carried in `Hello`; a worker refuses a
+/// coordinator from a different major version instead of mis-parsing
+/// its frames.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Per-frame magic, so a desynchronized stream fails loudly instead of
+/// interpreting tensor bytes as a header length.
+const MAGIC: &[u8; 4] = b"QFLT";
+
+/// Sanity cap on the JSON header (a ladder of thousands of OPs fits in
+/// a fraction of this).
+const MAX_HEADER_BYTES: usize = 1 << 20;
+
+/// Sanity cap on the f32 payload: 256 Mi elements = 1 GiB, far above
+/// any realistic batch, low enough to refuse garbage lengths.
+const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+
+/// One rung of the ladder as `Prepare` describes it: the OP name the
+/// worker must resolve from its local catalog, plus the relative power
+/// the coordinator expects (cross-checked worker-side, so a fleet never
+/// silently serves mismatched plans).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderRung {
+    pub name: String,
+    pub power: f64,
+}
+
+/// Every frame of the fleet protocol.  See the module table for
+/// direction, payload and reply conventions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Coordinator handshake; `version` must match [`PROTOCOL_VERSION`].
+    Hello { version: u64 },
+    /// Worker's handshake answer: identity, backend kind, the
+    /// retraining-overlay mode its catalog was built with (`bn`,
+    /// `full`, `none`; empty when not applicable, e.g. in-process test
+    /// workers), classifier width, and the OP names it can resolve in
+    /// `Prepare`.
+    HelloAck {
+        worker: String,
+        backend: String,
+        mode: String,
+        classes: usize,
+        catalog: Vec<String>,
+    },
+    /// Make this ladder resident (in order; `Forward::op` indexes it).
+    Prepare { ladder: Vec<LadderRung> },
+    /// Run one batch; payload = `[batch, H, W, C]` images flattened.
+    /// `op` indexes the prepared ladder; `None` uses the worker's
+    /// current OP (set by `SetOp`).
+    Forward { op: Option<usize>, batch: usize },
+    /// `Forward` answer; payload = `[batch, classes]` logits flattened.
+    Logits { classes: usize },
+    /// Fleet-wide switch: `drain` = barrier (worker finishes in-flight
+    /// forwards, applies, acks `Ok`); `!drain` = fire-and-forget store.
+    SetOp { op: usize, drain: bool },
+    /// Liveness probe.
+    Heartbeat,
+    /// `Heartbeat` answer with a peek at the worker's state.
+    Pong { current_op: usize, served: u64 },
+    /// Standalone barrier: ack once no forward is in flight.
+    Drain,
+    /// Stop the worker daemon (acked, then the process winds down).
+    Shutdown,
+    /// Generic success ack.
+    Ok,
+    /// Generic failure answer; the connection stays usable.
+    Err { message: String },
+}
+
+impl Frame {
+    /// The `type` tag this frame serializes under.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
+            Frame::Prepare { .. } => "prepare",
+            Frame::Forward { .. } => "forward",
+            Frame::Logits { .. } => "logits",
+            Frame::SetOp { .. } => "set_op",
+            Frame::Heartbeat => "heartbeat",
+            Frame::Pong { .. } => "pong",
+            Frame::Drain => "drain",
+            Frame::Shutdown => "shutdown",
+            Frame::Ok => "ok",
+            Frame::Err { .. } => "err",
+        }
+    }
+
+    /// Whether the sender should read a response frame after writing
+    /// this one.  `SetOp { drain: false }` is the only fire-and-forget
+    /// request; answer frames never expect replies themselves.
+    pub fn expects_reply(&self) -> bool {
+        match self {
+            Frame::Hello { .. }
+            | Frame::Prepare { .. }
+            | Frame::Forward { .. }
+            | Frame::Heartbeat
+            | Frame::Drain
+            | Frame::Shutdown => true,
+            Frame::SetOp { drain, .. } => *drain,
+            Frame::HelloAck { .. }
+            | Frame::Logits { .. }
+            | Frame::Pong { .. }
+            | Frame::Ok
+            | Frame::Err { .. } => false,
+        }
+    }
+
+    fn to_header(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("type", Json::str(self.type_name()))];
+        match self {
+            Frame::Hello { version } => {
+                pairs.push(("version", Json::num(*version as f64)));
+            }
+            Frame::HelloAck {
+                worker,
+                backend,
+                mode,
+                classes,
+                catalog,
+            } => {
+                pairs.push(("worker", Json::str(worker.clone())));
+                pairs.push(("backend", Json::str(backend.clone())));
+                pairs.push(("mode", Json::str(mode.clone())));
+                pairs.push(("classes", Json::num(*classes as f64)));
+                pairs.push((
+                    "catalog",
+                    Json::Arr(catalog.iter().map(|n| Json::str(n.clone())).collect()),
+                ));
+            }
+            Frame::Prepare { ladder } => {
+                let rungs: Vec<Json> = ladder
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::str(r.name.clone())),
+                            ("power", Json::num(r.power)),
+                        ])
+                    })
+                    .collect();
+                pairs.push(("ladder", Json::Arr(rungs)));
+            }
+            Frame::Forward { op, batch } => {
+                if let Some(op) = op {
+                    pairs.push(("op", Json::num(*op as f64)));
+                }
+                pairs.push(("batch", Json::num(*batch as f64)));
+            }
+            Frame::Logits { classes } => {
+                pairs.push(("classes", Json::num(*classes as f64)));
+            }
+            Frame::SetOp { op, drain } => {
+                pairs.push(("op", Json::num(*op as f64)));
+                pairs.push(("drain", Json::Bool(*drain)));
+            }
+            Frame::Pong { current_op, served } => {
+                pairs.push(("current_op", Json::num(*current_op as f64)));
+                pairs.push(("served", Json::num(*served as f64)));
+            }
+            Frame::Err { message } => {
+                pairs.push(("message", Json::str(message.clone())));
+            }
+            Frame::Heartbeat | Frame::Drain | Frame::Shutdown | Frame::Ok => {}
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_header(v: &Json) -> Result<Frame> {
+        let kind = v
+            .get("type")
+            .and_then(|t| t.as_str())
+            .context("frame header has no type")?;
+        let req_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("{kind} frame: missing {key}"))
+        };
+        Ok(match kind {
+            "hello" => Frame::Hello {
+                version: req_usize("version")? as u64,
+            },
+            "hello_ack" => Frame::HelloAck {
+                worker: v.get("worker").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                backend: v.get("backend").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                mode: v.get("mode").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                classes: req_usize("classes")?,
+                catalog: v
+                    .get("catalog")
+                    .and_then(|x| x.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|n| n.as_str().map(str::to_string))
+                    .collect(),
+            },
+            "prepare" => Frame::Prepare {
+                ladder: v
+                    .get("ladder")
+                    .and_then(|x| x.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|r| LadderRung {
+                        name: r.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                        power: r.get("power").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                    })
+                    .collect(),
+            },
+            "forward" => Frame::Forward {
+                op: v.get("op").and_then(|x| x.as_usize()),
+                batch: req_usize("batch")?,
+            },
+            "logits" => Frame::Logits {
+                classes: req_usize("classes")?,
+            },
+            "set_op" => Frame::SetOp {
+                op: req_usize("op")?,
+                drain: v.get("drain").and_then(|x| x.as_bool()).unwrap_or(false),
+            },
+            "heartbeat" => Frame::Heartbeat,
+            "pong" => Frame::Pong {
+                current_op: req_usize("current_op")?,
+                served: req_usize("served")? as u64,
+            },
+            "drain" => Frame::Drain,
+            "shutdown" => Frame::Shutdown,
+            "ok" => Frame::Ok,
+            "err" => Frame::Err {
+                message: v.get("message").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            },
+            other => bail!("unknown frame type {other:?}"),
+        })
+    }
+}
+
+/// f32 elements converted per `write_all` on the payload path: a stack
+/// buffer of `4 * PAYLOAD_CHUNK_ELEMS` bytes per chunk, so large image
+/// payloads never need a payload-sized intermediate allocation.
+const PAYLOAD_CHUNK_ELEMS: usize = 2048;
+
+/// Write one frame (header + f32 payload) and flush.  Lengths are
+/// validated against the same caps the reader enforces, so an
+/// oversized frame fails loudly sender-side instead of desynchronizing
+/// the peer (and the `u32` length prefixes can never silently wrap).
+pub fn write_frame(w: &mut impl Write, frame: &Frame, payload: &[f32]) -> Result<()> {
+    let header = json::to_string(&frame.to_header());
+    if header.len() > MAX_HEADER_BYTES {
+        bail!("frame header of {} bytes exceeds the {MAX_HEADER_BYTES}-byte cap", header.len());
+    }
+    let payload_bytes = payload.len() * 4;
+    if payload_bytes > MAX_PAYLOAD_BYTES {
+        bail!("frame payload of {payload_bytes} bytes exceeds the {MAX_PAYLOAD_BYTES}-byte cap");
+    }
+    w.write_all(MAGIC)?;
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    w.write_all(&(payload_bytes as u32).to_le_bytes())?;
+    let mut buf = [0u8; 4 * PAYLOAD_CHUNK_ELEMS];
+    for chunk in payload.chunks(PAYLOAD_CHUNK_ELEMS) {
+        for (j, v) in chunk.iter().enumerate() {
+            buf[j * 4..j * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf[..chunk.len() * 4])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read one frame; validates magic and length sanity before allocating.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, Vec<f32>)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read frame magic")?;
+    if &magic != MAGIC {
+        bail!("bad frame magic {magic:?} (stream desynchronized?)");
+    }
+    let hlen = read_u32(r)? as usize;
+    if hlen == 0 || hlen > MAX_HEADER_BYTES {
+        bail!("frame header length {hlen} out of range");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    r.read_exact(&mut hbuf).context("read frame header")?;
+    let header = json::parse(std::str::from_utf8(&hbuf)?).map_err(anyhow::Error::msg)?;
+    let frame = Frame::from_header(&header)?;
+    let plen = read_u32(r)? as usize;
+    if plen % 4 != 0 || plen > MAX_PAYLOAD_BYTES {
+        bail!("frame payload length {plen} invalid (must be 4-aligned, <= 1 GiB)");
+    }
+    let mut pbuf = vec![0u8; plen];
+    r.read_exact(&mut pbuf).context("read frame payload")?;
+    let payload = pbuf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((frame, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: Frame, payload: &[f32]) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame, payload).unwrap();
+        let (got, got_payload) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, frame);
+        assert_eq!(got_payload, payload);
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        roundtrip(Frame::Hello { version: PROTOCOL_VERSION }, &[]);
+        roundtrip(
+            Frame::HelloAck {
+                worker: "w0".into(),
+                backend: "stub".into(),
+                mode: "bn".into(),
+                classes: 10,
+                catalog: vec!["exact".into(), "op0".into()],
+            },
+            &[],
+        );
+        roundtrip(
+            Frame::Prepare {
+                ladder: vec![
+                    LadderRung { name: "op0".into(), power: 0.85 },
+                    LadderRung { name: "op1".into(), power: 0.57 },
+                ],
+            },
+            &[],
+        );
+        roundtrip(Frame::Forward { op: Some(1), batch: 2 }, &[1.0, -2.5, 0.0, 3e-9]);
+        roundtrip(Frame::Forward { op: None, batch: 1 }, &[0.5]);
+        roundtrip(Frame::Logits { classes: 2 }, &[0.1, 0.9]);
+        roundtrip(Frame::SetOp { op: 1, drain: true }, &[]);
+        roundtrip(Frame::SetOp { op: 0, drain: false }, &[]);
+        roundtrip(Frame::Heartbeat, &[]);
+        roundtrip(Frame::Pong { current_op: 2, served: 12345 }, &[]);
+        roundtrip(Frame::Drain, &[]);
+        roundtrip(Frame::Shutdown, &[]);
+        roundtrip(Frame::Ok, &[]);
+        roundtrip(Frame::Err { message: "no such op".into() }, &[]);
+    }
+
+    #[test]
+    fn consecutive_frames_share_a_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Forward { op: Some(0), batch: 1 }, &[7.0]).unwrap();
+        write_frame(&mut buf, &Frame::Heartbeat, &[]).unwrap();
+        let mut cur = Cursor::new(&buf);
+        let (f1, p1) = read_frame(&mut cur).unwrap();
+        let (f2, p2) = read_frame(&mut cur).unwrap();
+        assert_eq!(f1, Frame::Forward { op: Some(0), batch: 1 });
+        assert_eq!(p1, vec![7.0]);
+        assert_eq!(f2, Frame::Heartbeat);
+        assert!(p2.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_garbage_lengths() {
+        let err = read_frame(&mut Cursor::new(b"NOPE\0\0\0\0")).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd header len
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn only_requests_expect_replies_and_immediate_setop_does_not() {
+        assert!(Frame::Hello { version: 1 }.expects_reply());
+        assert!(Frame::Forward { op: None, batch: 1 }.expects_reply());
+        assert!(Frame::SetOp { op: 0, drain: true }.expects_reply());
+        assert!(!Frame::SetOp { op: 0, drain: false }.expects_reply());
+        assert!(!Frame::Ok.expects_reply());
+        assert!(!Frame::Logits { classes: 2 }.expects_reply());
+    }
+}

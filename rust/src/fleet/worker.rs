@@ -1,0 +1,478 @@
+//! Fleet worker daemon: wraps any [`Backend`] behind the wire protocol.
+//!
+//! One daemon owns a `TcpListener` and an *OP catalog* (every operating
+//! point it can serve, by name — for the CLI that is the exact baseline
+//! plus the stored plan's ladder).  Each coordinator connection gets
+//! its own handler thread and its own backend instance built by the
+//! factory *inside* that thread (backends need not be `Send`, exactly
+//! like `server::Server` workers); `Prepare` resolves the requested
+//! ladder against the catalog by name, cross-checks the expected
+//! relative power, and makes it resident.
+//!
+//! Cross-connection semantics live in the daemon's shared state:
+//!
+//! * **Drain barrier.**  Forwards from every connection run inside a
+//!   `Gate` read section; `SetOp { drain: true }` and `Drain` wait
+//!   until no forward is in flight anywhere in the process (new
+//!   forwards block while a drain is pending, so a busy worker cannot
+//!   starve the barrier), then apply and ack — the per-worker barrier
+//!   the coordinator counts before reporting a fleet switch complete.
+//! * **Current OP.**  `SetOp` updates a process-wide index used by
+//!   `Forward` frames that omit `op` (edge clients that rely on the
+//!   fleet-broadcast operating point instead of picking their own).
+//! * **Shutdown.**  A `Shutdown` frame acks, then stops the accept
+//!   loop and closes every registered connection, so the daemon winds
+//!   down promptly even with idle coordinators attached.
+//!
+//! [`WorkerHandle::kill`] closes the listener and every live connection
+//! *without* the ack dance — the failure-injection hook the loopback
+//! tests use to simulate a worker dying mid-stream.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::backend::Backend;
+use crate::engine::OperatingPoint;
+use crate::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
+
+/// Draining gate: forwards enter read sections, a drain waits for all
+/// of them to leave while blocking new entries (writer-preferring, so a
+/// loaded worker cannot starve the barrier the way an `RwLock` could).
+#[derive(Default)]
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    inflight: usize,
+    draining: bool,
+}
+
+impl Gate {
+    /// Begin a forward; blocks while a drain barrier is pending.
+    fn enter(&self) {
+        let mut g = self.state.lock().unwrap();
+        while g.draining {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.inflight += 1;
+    }
+
+    /// End a forward.
+    fn exit(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.inflight -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Run `f` once every in-flight forward has completed; new forwards
+    /// wait until `f` returns.  `draining` is re-asserted on every
+    /// wakeup, so overlapping drains (two coordinator connections
+    /// issuing barriers at once) keep their writer preference even
+    /// after the first drain clears the flag.
+    fn drain<T>(&self, f: impl FnOnce() -> T) -> T {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            g.draining = true;
+            if g.inflight == 0 {
+                break;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let out = f();
+        g.draining = false;
+        drop(g);
+        self.cv.notify_all();
+        out
+    }
+}
+
+/// State shared by every connection handler of one daemon.
+struct WorkerShared {
+    name: String,
+    /// Retraining-overlay mode the catalog was built with (advertised
+    /// in `HelloAck` so coordinators can cross-check their own
+    /// `--mode`); empty when not applicable (in-process test workers).
+    mode: String,
+    /// Index into the *prepared* ladder used by `Forward` frames that
+    /// omit `op`; updated by `SetOp`.
+    current_op: AtomicUsize,
+    /// Images forwarded since startup (reported in `Pong`).
+    served: AtomicU64,
+    stop: AtomicBool,
+    gate: Gate,
+    /// Clones of every *live* connection keyed by connection id, so
+    /// shutdown/kill can unblock handler threads stuck in a read; each
+    /// handler removes its entry on exit, so closed peers do not leak
+    /// file descriptors in a long-running daemon.
+    conns: Mutex<Vec<(usize, TcpStream)>>,
+}
+
+impl WorkerShared {
+    fn close_all(&self) {
+        self.stop.store(true, Ordering::Release);
+        for (_, c) in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn forget_conn(&self, conn_id: usize) {
+        self.conns.lock().unwrap().retain(|(id, _)| *id != conn_id);
+    }
+}
+
+/// Handle to a spawned worker daemon (in-process use and tests; the
+/// `qos-nets worker` CLI wraps [`run`] instead).
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    shared: Arc<WorkerShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// The bound address (resolves `127.0.0.1:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Images forwarded so far.
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Acquire)
+    }
+
+    /// Abrupt death: close the listener and every live connection
+    /// without acking anything — coordinators see I/O errors on
+    /// whatever was in flight.  Joins the daemon threads before
+    /// returning.
+    pub fn kill(mut self) {
+        self.shared.close_all();
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Wait for the daemon to wind down (a coordinator's `Shutdown`
+    /// frame, or a prior `kill`).
+    pub fn join(mut self) {
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn a worker daemon on `listener`.  `catalog` is every operating
+/// point this worker can make resident, resolved by name at `Prepare`
+/// time; `mode` is the overlay mode the catalog was built with (empty
+/// = not applicable), advertised in `HelloAck` for coordinator-side
+/// cross-checks; `factory(conn_id)` builds one backend per coordinator
+/// connection on that connection's own thread.
+pub fn spawn<B, F>(
+    listener: TcpListener,
+    name: impl Into<String>,
+    mode: impl Into<String>,
+    catalog: Vec<OperatingPoint>,
+    factory: F,
+) -> Result<WorkerHandle>
+where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    let addr = listener.local_addr().context("worker listener address")?;
+    listener
+        .set_nonblocking(true)
+        .context("worker listener nonblocking")?;
+    let shared = Arc::new(WorkerShared {
+        name: name.into(),
+        mode: mode.into(),
+        current_op: AtomicUsize::new(0),
+        served: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        gate: Gate::default(),
+        conns: Mutex::new(Vec::new()),
+    });
+    let shared2 = shared.clone();
+    let catalog = Arc::new(catalog);
+    let factory = Arc::new(factory);
+    let accept = std::thread::spawn(move || {
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_conn = 0usize;
+        while !shared2.stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_nonblocking(false);
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        shared2.conns.lock().unwrap().push((conn_id, clone));
+                    }
+                    let shared3 = shared2.clone();
+                    let catalog3 = catalog.clone();
+                    let factory3 = factory.clone();
+                    handlers.retain(|h| !h.is_finished());
+                    handlers.push(std::thread::spawn(move || {
+                        handle_conn(stream, conn_id, &shared3, &catalog3, factory3.as_ref());
+                        shared3.forget_conn(conn_id);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        // stop requested: unblock handlers stuck in reads, then join
+        shared2.close_all();
+        for h in handlers {
+            let _ = h.join();
+        }
+    });
+    Ok(WorkerHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+    })
+}
+
+/// Blocking daemon entry for the CLI: spawn + wait until a `Shutdown`
+/// frame (or `kill`) winds the daemon down.
+pub fn run<B, F>(
+    listener: TcpListener,
+    name: impl Into<String>,
+    mode: impl Into<String>,
+    catalog: Vec<OperatingPoint>,
+    factory: F,
+) -> Result<()>
+where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    spawn(listener, name, mode, catalog, factory)?.join();
+    Ok(())
+}
+
+/// Resolve a `Prepare` ladder against the catalog: every rung by name,
+/// with the coordinator's expected relative power cross-checked so
+/// mismatched plans fail loudly at prepare time, not as silently wrong
+/// logits.
+fn resolve_ladder(
+    catalog: &[OperatingPoint],
+    ladder: &[LadderRung],
+) -> std::result::Result<Vec<OperatingPoint>, String> {
+    if ladder.is_empty() {
+        return Err("prepare: empty ladder".to_string());
+    }
+    let mut out = Vec::with_capacity(ladder.len());
+    for rung in ladder {
+        let Some(op) = catalog.iter().find(|o| o.name == rung.name) else {
+            let names: Vec<&str> = catalog.iter().map(|o| o.name.as_str()).collect();
+            return Err(format!(
+                "prepare: OP {:?} not in this worker's catalog [{}]",
+                rung.name,
+                names.join(", ")
+            ));
+        };
+        if (op.relative_power - rung.power).abs() > 1e-6 {
+            return Err(format!(
+                "prepare: OP {:?} power mismatch (worker plan {:.6}, coordinator {:.6}) — stale assignment.json?",
+                rung.name, op.relative_power, rung.power
+            ));
+        }
+        out.push(op.clone());
+    }
+    Ok(out)
+}
+
+/// One coordinator connection: strict request/response until the stream
+/// closes, errors, or the daemon stops.
+fn handle_conn<B, F>(
+    mut stream: TcpStream,
+    conn_id: usize,
+    shared: &WorkerShared,
+    catalog: &[OperatingPoint],
+    factory: &F,
+) where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    let mut backend = match factory(conn_id) {
+        Ok(b) => b,
+        Err(e) => {
+            // answer whatever arrives first with the init failure
+            if let Ok((_frame, _)) = wire::read_frame(&mut stream) {
+                let msg = format!("worker {}: backend init failed: {e:#}", shared.name);
+                let _ = wire::write_frame(&mut stream, &Frame::Err { message: msg }, &[]);
+            }
+            return;
+        }
+    };
+    let mut prepared = 0usize;
+    loop {
+        let (frame, payload) = match wire::read_frame(&mut stream) {
+            Ok(x) => x,
+            Err(_) => break, // connection closed / daemon stopping
+        };
+        let reply: Option<(Frame, Vec<f32>)> = match frame {
+            Frame::Hello { version } => {
+                if version == PROTOCOL_VERSION {
+                    Some((
+                        Frame::HelloAck {
+                            worker: shared.name.clone(),
+                            backend: backend.name().to_string(),
+                            mode: shared.mode.clone(),
+                            classes: backend.num_classes(),
+                            catalog: catalog.iter().map(|o| o.name.clone()).collect(),
+                        },
+                        Vec::new(),
+                    ))
+                } else {
+                    let message = format!(
+                        "protocol version mismatch: worker {PROTOCOL_VERSION}, coordinator {version}"
+                    );
+                    Some((Frame::Err { message }, Vec::new()))
+                }
+            }
+            Frame::Prepare { ladder } => match resolve_ladder(catalog, &ladder) {
+                Ok(ops) => match backend.prepare(&ops) {
+                    Ok(()) => {
+                        prepared = ops.len();
+                        Some((Frame::Ok, Vec::new()))
+                    }
+                    Err(e) => Some((Frame::Err { message: format!("{e:#}") }, Vec::new())),
+                },
+                Err(message) => Some((Frame::Err { message }, Vec::new())),
+            },
+            Frame::Forward { op, batch } => {
+                let op_idx = op.unwrap_or_else(|| shared.current_op.load(Ordering::Acquire));
+                if prepared == 0 {
+                    let message = "forward before prepare".to_string();
+                    Some((Frame::Err { message }, Vec::new()))
+                } else if batch == 0 || payload.is_empty() || payload.len() % batch != 0 {
+                    let message = format!("bad forward: {} elems for batch {batch}", payload.len());
+                    Some((Frame::Err { message }, Vec::new()))
+                } else {
+                    shared.gate.enter();
+                    let r = backend.forward(op_idx, &payload, batch);
+                    shared.gate.exit();
+                    match r {
+                        Ok(logits) => {
+                            shared.served.fetch_add(batch as u64, Ordering::AcqRel);
+                            Some((Frame::Logits { classes: backend.num_classes() }, logits))
+                        }
+                        Err(e) => Some((Frame::Err { message: format!("{e:#}") }, Vec::new())),
+                    }
+                }
+            }
+            Frame::SetOp { op, drain } => {
+                if drain {
+                    shared.gate.drain(|| shared.current_op.store(op, Ordering::Release));
+                    Some((Frame::Ok, Vec::new()))
+                } else {
+                    shared.current_op.store(op, Ordering::Release);
+                    None // fire-and-forget
+                }
+            }
+            Frame::Heartbeat => Some((
+                Frame::Pong {
+                    current_op: shared.current_op.load(Ordering::Acquire),
+                    served: shared.served.load(Ordering::Acquire),
+                },
+                Vec::new(),
+            )),
+            Frame::Drain => {
+                shared.gate.drain(|| ());
+                Some((Frame::Ok, Vec::new()))
+            }
+            Frame::Shutdown => {
+                let _ = wire::write_frame(&mut stream, &Frame::Ok, &[]);
+                shared.close_all();
+                break;
+            }
+            other => {
+                let message = format!("unexpected {} frame from coordinator", other.type_name());
+                Some((Frame::Err { message }, Vec::new()))
+            }
+        };
+        if let Some((frame, payload)) = reply {
+            if wire::write_frame(&mut stream, &frame, &payload).is_err() {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn gate_blocks_drain_until_inflight_work_exits() {
+        let gate = Arc::new(Gate::default());
+        let progress = Arc::new(AtomicU32::new(0));
+        gate.enter();
+        let g2 = gate.clone();
+        let p2 = progress.clone();
+        let drainer = std::thread::spawn(move || {
+            g2.drain(|| p2.store(1, Ordering::Release));
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(progress.load(Ordering::Acquire), 0, "drain ran with work in flight");
+        gate.exit();
+        drainer.join().unwrap();
+        assert_eq!(progress.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn gate_defers_new_entries_while_draining() {
+        let gate = Arc::new(Gate::default());
+        gate.enter();
+        let g2 = gate.clone();
+        let drainer = std::thread::spawn(move || g2.drain(|| ()));
+        let g3 = gate.clone();
+        let entered = Arc::new(AtomicU32::new(0));
+        let e3 = entered.clone();
+        std::thread::sleep(Duration::from_millis(10));
+        let late = std::thread::spawn(move || {
+            g3.enter();
+            e3.store(1, Ordering::Release);
+            g3.exit();
+        });
+        // the late entry must wait behind the pending drain
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(entered.load(Ordering::Acquire), 0, "entry slipped past a pending drain");
+        gate.exit();
+        drainer.join().unwrap();
+        late.join().unwrap();
+        assert_eq!(entered.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn resolve_ladder_checks_names_and_powers() {
+        let cat = vec![
+            crate::backend::stub::stub_op("op0", 0.8),
+            crate::backend::stub::stub_op("op1", 0.5),
+        ];
+        let ok = resolve_ladder(
+            &cat,
+            &[
+                LadderRung { name: "op1".into(), power: 0.5 },
+                LadderRung { name: "op0".into(), power: 0.8 },
+            ],
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[0].name, "op1"); // coordinator order, not catalog order
+        let missing = resolve_ladder(&cat, &[LadderRung { name: "nope".into(), power: 0.5 }]);
+        assert!(missing.unwrap_err().contains("not in this worker's catalog"));
+        let drift = resolve_ladder(&cat, &[LadderRung { name: "op0".into(), power: 0.9 }]);
+        assert!(drift.unwrap_err().contains("power mismatch"));
+        assert!(resolve_ladder(&cat, &[]).unwrap_err().contains("empty ladder"));
+    }
+}

@@ -32,6 +32,10 @@
 //!   * [`server`]    elastic batching inference server, generic over
 //!     `Backend`: load-driven worker scaling, per-OP latency
 //!     attribution, draining OP-switch barriers
+//!   * [`fleet`]     coordinator/worker RPC serving: a TCP wire
+//!     protocol, a worker daemon wrapping any `Backend`, and
+//!     `FleetBackend` — scatter/gather with failover plus fleet-wide
+//!     OP-switch broadcast, itself a `Backend`
 //!   * [`pipeline`]  artifact-level orchestration
 //!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
@@ -41,6 +45,7 @@ pub mod baselines;
 pub mod cli;
 pub mod engine;
 pub mod errmodel;
+pub mod fleet;
 pub mod muldb;
 pub mod nn;
 pub mod pipeline;

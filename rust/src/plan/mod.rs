@@ -393,8 +393,9 @@ impl OpPlan {
 
     /// Load the experiment's stored plan.
     pub fn load_for(exp: &Experiment) -> Result<OpPlan> {
-        OpPlan::load(exp.dir.join("assignment.json"))
-            .with_context(|| format!("no plan for {:?}; run `search --exp {}` first", exp.name, exp.name))
+        OpPlan::load(exp.dir.join("assignment.json")).with_context(|| {
+            format!("no plan for {:?}; run `search --exp {}` first", exp.name, exp.name)
+        })
     }
 
     // -- Serving handoff ----------------------------------------------------
@@ -404,7 +405,11 @@ impl OpPlan {
     /// "full").  The returned vector is in plan order, so its indices
     /// match [`ladder`](Self::ladder) and feed `OpTable::new` /
     /// `Backend::prepare` directly.
-    pub fn load_operating_points(&self, exp: &Experiment, mode: &str) -> Result<Vec<OperatingPoint>> {
+    pub fn load_operating_points(
+        &self,
+        exp: &Experiment,
+        mode: &str,
+    ) -> Result<Vec<OperatingPoint>> {
         let mut out = Vec::with_capacity(self.ops.len());
         for (i, op) in self.ops.iter().enumerate() {
             let overlay = match mode {
@@ -432,6 +437,129 @@ impl OpPlan {
             )?);
         }
         Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan diffing
+// ---------------------------------------------------------------------------
+
+/// One layer whose assignment differs between two plans within one
+/// operating point.  `None` marks a layer absent from that side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDelta {
+    pub layer: String,
+    pub from: Option<usize>,
+    pub to: Option<usize>,
+}
+
+/// One operating point compared across two plans (matched by ladder
+/// position — plan index is the `OpTable`/`forward` index).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpDelta {
+    /// `a_name -> b_name` (they usually agree; both are kept so renames
+    /// are visible).
+    pub name_a: Option<String>,
+    pub name_b: Option<String>,
+    pub power_a: Option<f64>,
+    pub power_b: Option<f64>,
+    /// Layers whose multiplier assignment changed, in `a`'s layer order
+    /// (layers only in `b` follow).
+    pub changed: Vec<LayerDelta>,
+}
+
+impl OpDelta {
+    /// Relative-power delta `b - a` when both sides have this OP.
+    pub fn power_delta(&self) -> Option<f64> {
+        Some(self.power_b? - self.power_a?)
+    }
+}
+
+/// Structured comparison of two [`OpPlan`]s — what `qos-nets plan diff`
+/// prints: per-layer assignment deltas, per-OP power deltas, and the
+/// provenance of each side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanDiff {
+    /// One entry per ladder position of the longer plan.
+    pub ops: Vec<OpDelta>,
+    /// Multiplier ids deployed only by `a` / only by `b`.
+    pub subset_only_a: Vec<usize>,
+    pub subset_only_b: Vec<usize>,
+    pub provenance_a: Option<Provenance>,
+    pub provenance_b: Option<Provenance>,
+}
+
+impl PlanDiff {
+    /// True when the plans deploy identical assignments and powers
+    /// (provenance may still differ — two planners can agree).
+    pub fn is_same_deployment(&self) -> bool {
+        self.subset_only_a.is_empty()
+            && self.subset_only_b.is_empty()
+            && self.ops.iter().all(|op| {
+                op.changed.is_empty()
+                    && op.name_a.is_some()
+                    && op.name_b.is_some()
+                    && op.power_delta().is_some_and(|d| d.abs() < 1e-12)
+            })
+    }
+}
+
+impl OpPlan {
+    /// Compare `self` (side `a`) against `other` (side `b`): per-OP
+    /// per-layer assignment deltas, power deltas, subset and provenance
+    /// differences.  OPs are matched by ladder position, layers by
+    /// name, so plans over different layer headers diff meaningfully.
+    pub fn diff(&self, other: &OpPlan) -> PlanDiff {
+        let n_ops = self.ops.len().max(other.ops.len());
+        let mut ops = Vec::with_capacity(n_ops);
+        for i in 0..n_ops {
+            let a = self.ops.get(i);
+            let b = other.ops.get(i);
+            let amap = a.map(|_| self.assignment_map(i));
+            let bmap = b.map(|_| other.assignment_map(i));
+            let mut changed = Vec::new();
+            // a's layer order first, then layers b alone knows about
+            for layer in self.layer_names.iter().chain(
+                other
+                    .layer_names
+                    .iter()
+                    .filter(|l| !self.layer_names.contains(*l)),
+            ) {
+                let from = amap.as_ref().and_then(|m| m.get(layer.as_str()).copied());
+                let to = bmap.as_ref().and_then(|m| m.get(layer.as_str()).copied());
+                if from != to {
+                    changed.push(LayerDelta {
+                        layer: layer.clone(),
+                        from,
+                        to,
+                    });
+                }
+            }
+            ops.push(OpDelta {
+                name_a: a.map(|o| o.name.clone()),
+                name_b: b.map(|o| o.name.clone()),
+                power_a: a.map(|o| o.relative_power),
+                power_b: b.map(|o| o.relative_power),
+                changed,
+            });
+        }
+        let ids_a: BTreeSet<usize> = self.subset.iter().map(|m| m.id).collect();
+        let ids_b: BTreeSet<usize> = other.subset.iter().map(|m| m.id).collect();
+        PlanDiff {
+            ops,
+            subset_only_a: ids_a.difference(&ids_b).copied().collect(),
+            subset_only_b: ids_b.difference(&ids_a).copied().collect(),
+            provenance_a: self.provenance.clone(),
+            provenance_b: other.provenance.clone(),
+        }
+    }
+
+    /// Human name of a deployed multiplier id, from this plan's subset.
+    pub fn mul_name(&self, id: usize) -> Option<&str> {
+        self.subset
+            .iter()
+            .find(|m| m.id == id)
+            .map(|m| m.name.as_str())
     }
 }
 

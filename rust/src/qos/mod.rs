@@ -20,7 +20,11 @@ pub mod envsim;
 use std::time::{Duration, Instant};
 
 /// How an operating-point switch is applied by the serving stack
-/// (consumed by `crate::server::Server::set_operating_point_with`).
+/// (consumed by `crate::server::Server::set_operating_point_with` and,
+/// fleet-wide, by `crate::fleet::FleetBackend::set_operating_point`,
+/// where `Drain` means every surviving remote worker acks a barrier
+/// before the switch is reported complete and `Immediate` is a
+/// fire-and-forget broadcast).
 ///
 /// Either way a single batch never mixes logits from two OPs — batches
 /// are OP-tagged at formation time.  The modes differ in what happens

@@ -34,9 +34,12 @@ pub struct LoadedModel {
 }
 
 /// Per-operating-point input bundle (everything after `x` in signature
-/// order), kept as host buffers; literals are minted per execution.
+/// order), kept as *pre-minted literals*: `build_op_buffers` converts
+/// each host buffer to an `xla::Literal` once per `prepare`, so the
+/// execute hot path only mints the `x` literal instead of rebuilding
+/// the whole U/V/BN bundle on every call.
 pub struct OpBuffers {
-    pub tensors: Vec<(Vec<f32>, Vec<usize>)>,
+    pub literals: Vec<xla::Literal>,
 }
 
 impl Runtime {
@@ -128,14 +131,23 @@ impl LoadedModel {
         Ok(out.to_vec::<f32>()?)
     }
 
-    /// Execute with a borrowed OP bundle: x literal + the bundle's tail.
+    /// Execute with a borrowed OP bundle: the freshly minted `x`
+    /// literal plus the bundle's cached tail literals (no per-execute
+    /// conversion of the OP tensors).
     pub fn execute_with_op(&self, x: xla::Literal, op: &OpBuffers) -> Result<Vec<f32>> {
-        let mut inputs = Vec::with_capacity(1 + op.tensors.len());
-        inputs.push(x);
-        for (data, shape) in &op.tensors {
-            inputs.push(literal_f32(data, shape)?);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(1 + op.literals.len());
+        inputs.push(&x);
+        inputs.extend(op.literals.iter());
+        if inputs.len() != self.signature.len() {
+            bail!(
+                "input count {} != signature {}",
+                inputs.len(),
+                self.signature.len()
+            );
         }
-        self.execute_f32(&inputs)
+        let result = self.exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
     }
 
     /// Execute and return i32 payload (kernel artifact).
@@ -148,7 +160,8 @@ impl LoadedModel {
 
 /// Build the per-OP input literals (everything after `x`) for the model
 /// artifact: U/V from the low-rank tables for the assigned multiplier,
-/// gamma/beta/b from the (overlaid) parameter tensors.
+/// gamma/beta/b from the (overlaid) parameter tensors.  Literals are
+/// minted here, once per prepare, and reused by every execute.
 pub fn build_op_buffers(
     model: &LoadedModel,
     assignment: &HashMap<String, usize>,
@@ -159,7 +172,7 @@ pub fn build_op_buffers(
     overlay: &HashMap<String, Tensor>,
 ) -> Result<OpBuffers> {
     let rank = model.rank;
-    let mut tensors_out: Vec<(Vec<f32>, Vec<usize>)> = Vec::new();
+    let mut literals: Vec<xla::Literal> = Vec::new();
     for spec in model.signature.iter().skip(1) {
         let (layer, field) = spec
             .name
@@ -178,7 +191,7 @@ pub fn build_op_buffers(
                         }
                     }
                 }
-                tensors_out.push((buf, spec.shape.clone()));
+                literals.push(literal_f32(&buf, &spec.shape)?);
             }
             "gamma" | "beta" | "b" => {
                 let key = format!("{layer}.{field}");
@@ -186,12 +199,12 @@ pub fn build_op_buffers(
                     .get(&key)
                     .or_else(|| tensors.get(&key))
                     .with_context(|| format!("missing tensor {key}"))?;
-                tensors_out.push((t.as_f32()?.to_vec(), spec.shape.clone()));
+                literals.push(literal_f32(t.as_f32()?, &spec.shape)?);
             }
             other => bail!("unknown signature field {other}"),
         }
     }
-    Ok(OpBuffers { tensors: tensors_out })
+    Ok(OpBuffers { literals })
 }
 
 /// Load lowrank.bin: per-multiplier U and V tables (256 x rank, f32).

@@ -28,7 +28,11 @@
 //!   takes a [`SwitchMode`]: `Immediate` is a single atomic store (the
 //!   paper's "lightweight switching"); `Drain` installs a barrier in
 //!   the batcher so every request enqueued before the switch runs under
-//!   the old OP and every request after it under the new one.
+//!   the old OP and every request after it under the new one.  With
+//!   [`BatcherConfig::retag_downgrades`], already-formed batches are
+//!   retagged to the current OP at execution time when it is *cheaper*
+//!   than their formation tag, so an `Immediate` downgrade reaches a
+//!   deep backlog too (upgrades never retag).
 //! * **Elastic workers.**  When [`BatcherConfig`] allows a worker range,
 //!   a supervisor thread samples queue depth and batcher wait-time
 //!   watermarks every `scale_interval` and spawns (up to `max_workers`)
@@ -127,6 +131,20 @@ pub struct BatcherConfig {
     /// most `live/2` requests in flight and sub-threshold waits)
     /// before retiring one worker (hysteresis against brief lulls).
     pub scale_down_after: u32,
+    /// Immediate-downgrade policy for *already-formed* batches.  Off
+    /// (the default), a batch keeps its formation-time OP tag, so a
+    /// deep backlog rides out an `Immediate` switch at the old power —
+    /// strict OP-tagging's documented trade-off.  On, a worker about to
+    /// execute a batch re-reads the current OP and retags the batch to
+    /// it when it is *cheaper* than the formation tag (a downgrade —
+    /// upgrades never retag, so accuracy is never silently spent on
+    /// requests that were promised the cheaper rung).  Only `Immediate`
+    /// switches arm the policy: a `Drain` switch explicitly promises
+    /// pre-barrier requests the old OP, and that promise is kept even
+    /// with this flag on.  The batch stays uniform and
+    /// `Response::op_index` still reports the OP the batch actually ran
+    /// under.
+    pub retag_downgrades: bool,
 }
 
 impl Default for BatcherConfig {
@@ -142,6 +160,7 @@ impl Default for BatcherConfig {
             scale_up_wait: Duration::from_millis(20),
             scale_up_after: 2,
             scale_down_after: 25,
+            retag_downgrades: false,
         }
     }
 }
@@ -173,6 +192,9 @@ pub struct ServerMetrics {
     pub spawn_failures: u64,
     /// Highest concurrently live worker count observed.
     pub peak_workers: usize,
+    /// Batches retagged to a cheaper OP at execution time under the
+    /// [`BatcherConfig::retag_downgrades`] policy.
+    pub retagged_batches: u64,
 }
 
 impl ServerMetrics {
@@ -201,6 +223,12 @@ struct Shared {
     /// Current `OpTable` index; batches are stamped from this at
     /// formation time.
     current_op: AtomicUsize,
+    /// Whether the last OP switch was applied `Immediate` (true) or
+    /// through the draining barrier (false).  The retag policy only
+    /// fires after an Immediate switch — a Drain switch *guarantees*
+    /// pre-barrier requests run under the old OP, so retagging them
+    /// would break that contract.
+    last_switch_immediate: AtomicBool,
     /// Requests submitted but not yet answered (queue-depth signal).
     inflight: AtomicUsize,
     /// Workers that completed `prepare` and are serving (supervisor
@@ -220,6 +248,7 @@ impl Shared {
     fn new(first_worker: usize) -> Self {
         Shared {
             current_op: AtomicUsize::new(0),
+            last_switch_immediate: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             live_workers: AtomicUsize::new(0),
             next_worker: AtomicUsize::new(first_worker),
@@ -258,6 +287,8 @@ struct WorkerCtx<B, F> {
     rx: Arc<Mutex<mpsc::Receiver<WorkerMsg>>>,
     metrics: Arc<Mutex<ServerMetrics>>,
     shared: Arc<Shared>,
+    /// See [`BatcherConfig::retag_downgrades`].
+    retag_downgrades: bool,
     _backend: PhantomData<fn() -> B>,
 }
 
@@ -269,6 +300,7 @@ impl<B, F> Clone for WorkerCtx<B, F> {
             rx: self.rx.clone(),
             metrics: self.metrics.clone(),
             shared: self.shared.clone(),
+            retag_downgrades: self.retag_downgrades,
             _backend: PhantomData,
         }
     }
@@ -329,6 +361,7 @@ impl<B: Backend + 'static> Server<B> {
             rx: Arc::new(Mutex::new(batch_rx)),
             metrics: metrics.clone(),
             shared: shared.clone(),
+            retag_downgrades: cfg.retag_downgrades,
             _backend: PhantomData,
         };
 
@@ -421,6 +454,9 @@ impl<B: Backend + 'static> Server<B> {
     pub fn set_operating_point(&self, idx: usize) {
         assert!(idx < self.ops.len());
         self.shared.current_op.store(idx, Ordering::Release);
+        self.shared
+            .last_switch_immediate
+            .store(true, Ordering::Release);
     }
 
     /// Switch the serving operating point under an explicit
@@ -434,7 +470,7 @@ impl<B: Backend + 'static> Server<B> {
         assert!(idx < self.ops.len());
         match mode {
             SwitchMode::Immediate => {
-                self.shared.current_op.store(idx, Ordering::Release);
+                self.set_operating_point(idx);
                 Ok(())
             }
             SwitchMode::Drain => {
@@ -578,7 +614,27 @@ where
         if b == 0 {
             continue;
         }
-        let op_idx = batch.op_idx;
+        let mut op_idx = batch.op_idx;
+        // Immediate-downgrade policy: a queued batch about to execute
+        // under a *more expensive* OP than the current one is retagged
+        // to the cheaper rung, so a deep backlog honors the power
+        // budget instead of finishing at the old power.  Only fires
+        // after an *Immediate* switch — a Drain barrier guarantees
+        // pre-switch batches the old OP, and upgrades never retag
+        // (strict formation-time tagging is kept in that direction).
+        // The batch stays uniform either way.
+        let mut retagged = false;
+        if ctx.retag_downgrades
+            && ctx.shared.last_switch_immediate.load(Ordering::Acquire)
+        {
+            let cur = ctx.shared.current_op.load(Ordering::Acquire);
+            if cur != op_idx
+                && ctx.ops.get(cur).relative_power < ctx.ops.get(op_idx).relative_power
+            {
+                op_idx = cur;
+                retagged = true;
+            }
+        }
         let started = Instant::now();
         // wait-time watermark for the supervisor: submission-to-execution
         // age of the batch's oldest request, which keeps growing with the
@@ -622,6 +678,9 @@ where
             let mut m = ctx.metrics.lock().unwrap();
             m.batches += 1;
             m.batch_size_sum += b as u64;
+            if retagged {
+                m.retagged_batches += 1;
+            }
             for &(queue_us, total_us) in &times {
                 m.completed += 1;
                 m.per_op_requests[op_idx] += 1;
@@ -688,6 +747,7 @@ fn batcher_loop(
                     Ingress::Switch { idx, ack } => {
                         flush_batch(&mut pending, &out, &shared, &mut seq);
                         shared.current_op.store(idx, Ordering::Release);
+                        shared.last_switch_immediate.store(false, Ordering::Release);
                         let _ = ack.send(());
                     }
                 }
@@ -713,10 +773,12 @@ fn batcher_loop(
             Ok(Ingress::Switch { idx, ack }) => {
                 // the drain barrier: everything enqueued before the
                 // switch leaves as batches tagged with the old OP, then
-                // the new index takes effect
+                // the new index takes effect (and the retag policy is
+                // disarmed — Drain promises those batches the old OP)
                 flush_batch(&mut pending, &out, &shared, &mut seq);
                 deadline = None;
                 shared.current_op.store(idx, Ordering::Release);
+                shared.last_switch_immediate.store(false, Ordering::Release);
                 let _ = ack.send(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {

@@ -32,6 +32,7 @@ fn elastic_cfg() -> BatcherConfig {
         scale_up_wait: Duration::from_millis(10),
         scale_up_after: 1,
         scale_down_after: 5,
+        ..BatcherConfig::default()
     }
 }
 
@@ -108,6 +109,7 @@ fn deep_burst_reaches_the_ceiling_in_one_pressured_tick() {
             scale_up_wait: Duration::from_millis(10),
             scale_up_after: 1,
             scale_down_after: 10_000, // never retire during the test
+            ..BatcherConfig::default()
         },
     )
     .unwrap();
@@ -211,6 +213,140 @@ fn drain_switch_never_lets_a_batch_span_the_op_change() {
     let m = server.shutdown();
     assert_eq!(m.completed, 100);
     assert_eq!(m.per_op_requests, vec![50, 50]);
+}
+
+/// Build a deep already-formed backlog under OP0, then switch
+/// immediately to `target`; returns the per-OP request counts and the
+/// retagged-batch count.  The slow single worker guarantees most
+/// batches are still queued (formed, worker-channel) when the switch
+/// fires, and every request is submitted *before* it — so any response
+/// tagged with the new OP can only come from execution-time retagging.
+fn immediate_switch_over_backlog(retag: bool, target: usize) -> (Vec<u64>, u64, Vec<usize>) {
+    let table = OpTable::new(vec![stub_op("expensive", 1.0), stub_op("cheap", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(10))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            retag_downgrades: retag,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..80)
+        .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+        .collect();
+    // let the batcher form every batch (size-triggered, fast) and the
+    // worker chew through a few of them under OP0
+    std::thread::sleep(Duration::from_millis(40));
+    server.set_operating_point(target); // Immediate switch
+    let op_indices: Vec<usize> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().op_index)
+        .collect();
+    let m = server.shutdown();
+    assert_eq!(m.completed, 80);
+    (m.per_op_requests.clone(), m.retagged_batches, op_indices)
+}
+
+#[test]
+fn immediate_downgrade_retags_already_formed_batches_when_enabled() {
+    // policy ON, downgrade (1.0 -> 0.5): the queued backlog must not
+    // all finish at the old power
+    let (per_op, retagged, op_indices) = immediate_switch_over_backlog(true, 1);
+    assert!(
+        per_op[1] > 0,
+        "no request ran under the cheaper OP despite retagging: {per_op:?}"
+    );
+    assert!(retagged > 0, "retagged_batches must count the policy's work");
+    // early batches legitimately ran under OP0 before the switch; after
+    // the first OP1 response the backlog must stay on the cheap rung
+    let first_cheap = op_indices.iter().position(|&op| op == 1).unwrap();
+    assert!(
+        op_indices[first_cheap..].iter().all(|&op| op == 1),
+        "backlog bounced back to the expensive OP after the downgrade"
+    );
+}
+
+#[test]
+fn immediate_downgrade_without_retag_finishes_backlog_at_old_power() {
+    // policy OFF (strict formation-time tagging, the PR-2 trade-off):
+    // every request was submitted and formed before the switch, so the
+    // whole backlog completes under OP0
+    let (per_op, retagged, _) = immediate_switch_over_backlog(false, 1);
+    assert_eq!(per_op, vec![80, 0], "formation tags must be honored verbatim");
+    assert_eq!(retagged, 0);
+}
+
+#[test]
+fn drain_switch_never_retags_even_with_policy_enabled() {
+    // a Drain switch promises every pre-barrier request the old OP;
+    // the retag policy must not break that promise (it only arms on
+    // Immediate switches)
+    let table = OpTable::new(vec![stub_op("expensive", 1.0), stub_op("cheap", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(10))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            retag_downgrades: true,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..40)
+        .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    // drained downgrade over a deep backlog: pre-barrier batches keep OP0
+    server.set_operating_point_with(1, SwitchMode::Drain).unwrap();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.op_index, 0, "a Drain switch must honor formation tags");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.retagged_batches, 0);
+    assert_eq!(m.per_op_requests, vec![40, 0]);
+}
+
+#[test]
+fn immediate_upgrade_never_retags_queued_batches() {
+    // policy ON, but the switch goes cheap -> expensive: the backlog
+    // formed under the cheap rung must keep its tag — retagging only
+    // ever *lowers* power, never spends accuracy requests were not
+    // promised
+    let table = OpTable::new(vec![stub_op("expensive", 1.0), stub_op("cheap", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(10))),
+        table,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            retag_downgrades: true,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    server.set_operating_point(1); // start on the cheap rung
+    let rxs: Vec<_> = (0..40)
+        .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    server.set_operating_point(0); // Immediate *upgrade*
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            resp.op_index, 1,
+            "an upgrade retagged a batch that was promised the cheap rung"
+        );
+    }
+    let m = server.shutdown();
+    assert_eq!(m.retagged_batches, 0);
 }
 
 #[test]

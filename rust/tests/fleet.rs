@@ -1,0 +1,448 @@
+//! Fleet integration tests: loopback worker daemons on `127.0.0.1:0`
+//! driven by a coordinator `FleetBackend` — bit-exactness against a
+//! single local `NativeBackend`, failure injection (a worker killed
+//! mid-stream must not lose a request), heartbeat-timeout eviction,
+//! fleet-wide drain-barrier ordering, and the raw wire conversation.
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{build_tiny, stub_op};
+use qos_nets::backend::{Backend, NativeBackend, OpTable, StubBackend};
+use qos_nets::engine::OperatingPoint;
+use qos_nets::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
+use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle};
+use qos_nets::qos::SwitchMode;
+use qos_nets::server::{BatcherConfig, Server};
+
+/// Spawn one loopback stub worker; returns its handle and address.
+fn stub_worker(
+    classes: usize,
+    delay: Duration,
+    catalog: Vec<OperatingPoint>,
+) -> (WorkerHandle, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = worker::spawn(listener, "stub-worker", "", catalog, move |_conn| {
+        Ok(StubBackend::new(classes).with_delay(delay))
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+fn stub_catalog() -> Vec<OperatingPoint> {
+    vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]
+}
+
+#[test]
+fn loopback_fleet_is_bit_identical_to_single_native_backend() {
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut frugal = op.clone();
+    frugal.name = "frugal".into();
+    frugal.assignment.insert("c1".to_string(), 9); // bam7
+    frugal.relative_power = 0.6;
+    let ops = vec![op, frugal];
+
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let g = graph.clone();
+        let d = db.clone();
+        let handle = worker::spawn(listener, "native-worker", "bn", ops.clone(), move |_conn| {
+            Ok(NativeBackend::new(g.clone(), d.clone()))
+        })
+        .unwrap();
+        addrs.push(handle.addr().to_string());
+        handles.push(handle);
+    }
+
+    let mut fleet = FleetBackend::connect(&addrs).unwrap();
+    fleet.prepare(&ops).unwrap();
+    assert_eq!(fleet.name(), "fleet");
+
+    let mut local = NativeBackend::new(graph, db);
+    local.prepare(&ops).unwrap();
+    assert_eq!(fleet.num_classes(), local.num_classes());
+
+    // the same request stream through both paths, interleaving OP
+    // switches and batch sizes (1 exercises batch < workers; odd sizes
+    // exercise uneven splits)
+    let elems = images.len() / 2;
+    for round in 0..4usize {
+        for &op_idx in &[0usize, 1, 0] {
+            let batch = 1 + (round + op_idx) % 5;
+            let mut buf = Vec::with_capacity(batch * elems);
+            for i in 0..batch {
+                let src = (i + round) % 2;
+                buf.extend_from_slice(&images[src * elems..(src + 1) * elems]);
+            }
+            let got = fleet.forward(op_idx, &buf, batch).unwrap();
+            let want = local.forward(op_idx, &buf, batch).unwrap();
+            assert_eq!(got, want, "round {round} op {op_idx} batch {batch}: fleet diverged");
+        }
+    }
+
+    // orderly teardown: every worker daemon acks Shutdown and exits
+    assert_eq!(fleet.shutdown_fleet(), 2);
+    for handle in handles {
+        handle.join();
+    }
+}
+
+#[test]
+fn worker_killed_mid_stream_loses_no_request_and_logits_match() {
+    let classes = 7usize;
+    let catalog = vec![stub_op("only", 1.0)];
+    let mut handles: Vec<Option<WorkerHandle>> = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        // a slow-ish stub so the kill lands while a forward is in flight
+        let (h, addr) = stub_worker(classes, Duration::from_millis(30), catalog.clone());
+        handles.push(Some(h));
+        addrs.push(addr);
+    }
+    let mut fleet = FleetBackend::connect(&addrs).unwrap();
+    fleet.prepare(&catalog).unwrap();
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+
+    let mut completed = 0usize;
+    let mut killer = None;
+    for step in 0..20usize {
+        let batch = 9usize;
+        let images: Vec<f32> = (0..batch)
+            .flat_map(|i| {
+                let x0 = ((step + i) % classes) as f32;
+                [x0, 0.0, 0.0]
+            })
+            .collect();
+        if step == 8 {
+            // kill one worker while the next forward is on the wire
+            let victim = handles[1].take().unwrap();
+            killer = Some(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10));
+                victim.kill();
+            }));
+        }
+        let got = fleet.forward(0, &images, batch).unwrap();
+        let want = local.forward(0, &images, batch).unwrap();
+        assert_eq!(got, want, "step {step}: logits diverged after failover");
+        completed += batch;
+        assert_eq!(got.len(), batch * classes);
+    }
+    killer.unwrap().join().unwrap();
+
+    assert_eq!(completed, 20 * 9, "every request must complete despite the kill");
+    assert_eq!(fleet.live_workers(), 2, "the killed worker must be evicted");
+    let (workers, requeues, evictions) = fleet.stats().snapshot();
+    assert_eq!(evictions, 1);
+    assert!(requeues >= 1, "the dead worker's chunk must have been requeued");
+    let survivors: u64 = workers
+        .iter()
+        .filter(|(_, w)| !w.evicted)
+        .map(|(_, w)| w.requests)
+        .sum();
+    assert!(survivors > 0);
+
+    for handle in handles.into_iter().flatten() {
+        handle.kill();
+    }
+}
+
+#[test]
+fn heartbeat_timeout_evicts_unresponsive_worker() {
+    let (healthy, addr0) = stub_worker(4, Duration::ZERO, stub_catalog());
+
+    // a worker that answers the handshake and then goes silent: the
+    // timeout path, not the connection-reset path
+    let silent = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr1 = silent.local_addr().unwrap().to_string();
+    let silent_thread = std::thread::spawn(move || {
+        let (mut s, _) = silent.accept().unwrap();
+        let (frame, _) = wire::read_frame(&mut s).unwrap();
+        assert!(matches!(frame, Frame::Hello { .. }));
+        wire::write_frame(
+            &mut s,
+            &Frame::HelloAck {
+                worker: "silent".into(),
+                backend: "stub".into(),
+                mode: String::new(),
+                classes: 4,
+                catalog: vec!["hi".into(), "lo".into()],
+            },
+            &[],
+        )
+        .unwrap();
+        // swallow every later frame without answering
+        use std::io::Read;
+        let mut buf = [0u8; 1024];
+        while let Ok(n) = s.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    });
+
+    let addrs = vec![addr0, addr1.clone()];
+    let mut fleet = FleetBackend::connect(&addrs).unwrap();
+    assert_eq!(fleet.live_workers(), 2);
+
+    let t0 = Instant::now();
+    let live = fleet.heartbeat(Duration::from_millis(100));
+    assert_eq!(live, 1, "the silent worker must be evicted by timeout");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "heartbeat must time out promptly, took {:?}",
+        t0.elapsed()
+    );
+    let (workers, _, evictions) = fleet.stats().snapshot();
+    assert_eq!(evictions, 1);
+    assert!(workers.iter().any(|(a, w)| *a == addr1 && w.evicted));
+
+    // a healthy fleet member keeps answering after the probe
+    assert_eq!(fleet.heartbeat(Duration::from_millis(500)), 1);
+
+    drop(fleet); // closes the silent socket; the thread sees EOF
+    silent_thread.join().unwrap();
+    healthy.kill();
+}
+
+#[test]
+fn fleet_drain_switch_acks_only_after_inflight_forwards_complete() {
+    let delay = Duration::from_millis(400);
+    let (handle, addr) = stub_worker(4, delay, stub_catalog());
+    let catalog = stub_catalog();
+
+    let mut data = FleetBackend::connect(std::slice::from_ref(&addr)).unwrap();
+    data.prepare(&catalog).unwrap();
+    // the control plane has its own connections (like `serve --fleet`)
+    let mut control = FleetBackend::connect(std::slice::from_ref(&addr)).unwrap();
+
+    let forward_ok = Arc::new(AtomicBool::new(false));
+    let started = Instant::now();
+    std::thread::scope(|s| {
+        let flag = forward_ok.clone();
+        let data_ref = &mut data;
+        s.spawn(move || {
+            data_ref.forward(0, &[1.0, 0.0], 1).unwrap();
+            flag.store(true, Ordering::Release);
+        });
+        // give the forward ample time to be in flight worker-side
+        std::thread::sleep(Duration::from_millis(100));
+        let acks = control.set_operating_point(1, SwitchMode::Drain).unwrap();
+        let t_ack = started.elapsed();
+        assert_eq!(acks, 1, "the surviving worker must ack the drain switch");
+        assert!(
+            t_ack >= Duration::from_millis(300),
+            "drain acked after {t_ack:?}, before the in-flight forward could have finished"
+        );
+    });
+    assert!(forward_ok.load(Ordering::Acquire));
+
+    // an Immediate broadcast is fire-and-forget: it returns while a
+    // fresh slow forward is still in flight
+    std::thread::scope(|s| {
+        let data_ref = &mut data;
+        s.spawn(move || {
+            data_ref.forward(0, &[2.0, 0.0], 1).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        let n = control.set_operating_point(0, SwitchMode::Immediate).unwrap();
+        assert_eq!(n, 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(300),
+            "immediate switch must not wait for in-flight work ({:?})",
+            t0.elapsed()
+        );
+    });
+
+    handle.kill();
+}
+
+#[test]
+fn raw_wire_conversation_covers_setop_current_op_and_drain() {
+    let (handle, addr) = stub_worker(4, Duration::ZERO, stub_catalog());
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+
+    // handshake
+    wire::write_frame(&mut s, &Frame::Hello { version: PROTOCOL_VERSION }, &[]).unwrap();
+    let (ack, _) = wire::read_frame(&mut s).unwrap();
+    match ack {
+        Frame::HelloAck { classes, catalog, .. } => {
+            assert_eq!(classes, 4);
+            assert_eq!(catalog, vec!["hi".to_string(), "lo".to_string()]);
+        }
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+
+    // prepare the worker's own ladder order (reversed on purpose)
+    wire::write_frame(
+        &mut s,
+        &Frame::Prepare {
+            ladder: vec![
+                LadderRung { name: "lo".into(), power: 0.5 },
+                LadderRung { name: "hi".into(), power: 1.0 },
+            ],
+        },
+        &[],
+    )
+    .unwrap();
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
+
+    // fire-and-forget SetOp, then a Forward that omits `op`: it must
+    // run under the worker's current OP — observable via Pong
+    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: false }, &[]).unwrap();
+    wire::write_frame(&mut s, &Frame::Forward { op: None, batch: 2 }, &[1.0, 0.0, 3.0, 0.0])
+        .unwrap();
+    let (logits, payload) = wire::read_frame(&mut s).unwrap();
+    assert!(matches!(logits, Frame::Logits { classes: 4 }));
+    assert_eq!(payload.len(), 2 * 4);
+
+    wire::write_frame(&mut s, &Frame::Heartbeat, &[]).unwrap();
+    match wire::read_frame(&mut s).unwrap().0 {
+        Frame::Pong { current_op, served } => {
+            assert_eq!(current_op, 1, "fire-and-forget SetOp must have applied");
+            assert_eq!(served, 2);
+        }
+        other => panic!("expected Pong, got {other:?}"),
+    }
+
+    // standalone drain barrier acks on an idle worker
+    wire::write_frame(&mut s, &Frame::Drain, &[]).unwrap();
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
+
+    // version mismatch is refused
+    wire::write_frame(&mut s, &Frame::Hello { version: 999 }, &[]).unwrap();
+    match wire::read_frame(&mut s).unwrap().0 {
+        Frame::Err { message } => assert!(message.contains("version"), "{message}"),
+        other => panic!("expected Err, got {other:?}"),
+    }
+
+    // shutdown winds the daemon down
+    wire::write_frame(&mut s, &Frame::Shutdown, &[]).unwrap();
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
+    handle.join();
+}
+
+#[test]
+fn prepare_rejects_catalog_and_power_mismatches_but_connection_survives() {
+    let (handle, addr) = stub_worker(4, Duration::ZERO, stub_catalog());
+    let addrs = vec![addr];
+    let mut fleet = FleetBackend::connect(&addrs).unwrap();
+
+    let err = fleet.prepare(&[stub_op("nope", 1.0)]).unwrap_err();
+    assert!(format!("{err:#}").contains("not in this worker's catalog"), "{err:#}");
+
+    let err = fleet.prepare(&[stub_op("hi", 0.25)]).unwrap_err();
+    assert!(format!("{err:#}").contains("power mismatch"), "{err:#}");
+
+    // an application-level rejection must not poison the connection
+    fleet.prepare(&[stub_op("hi", 1.0), stub_op("lo", 0.5)]).unwrap();
+    let out = fleet.forward(1, &[2.0, 0.0], 1).unwrap();
+    assert_eq!(out.len(), 4);
+    assert_eq!(fleet.live_workers(), 1);
+    handle.kill();
+}
+
+#[test]
+fn coordinator_mode_cross_check_catches_mismatched_workers() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = worker::spawn(listener, "w", "none", stub_catalog(), move |_conn| {
+        Ok(StubBackend::new(4))
+    })
+    .unwrap();
+    let addrs = vec![handle.addr().to_string()];
+    let fleet = FleetBackend::connect(&addrs).unwrap();
+    // powers are mode-independent, so Prepare alone cannot catch this;
+    // the handshake-advertised mode can
+    let err = fleet.check_mode("bn").unwrap_err();
+    assert!(format!("{err:#}").contains("--mode"), "{err:#}");
+    fleet.check_mode("none").unwrap();
+    drop(fleet);
+
+    // workers advertising no mode (in-process tests) are skipped
+    let (h2, addr2) = stub_worker(4, Duration::ZERO, stub_catalog());
+    let fleet = FleetBackend::connect(&[addr2]).unwrap();
+    fleet.check_mode("bn").unwrap();
+    drop(fleet);
+    handle.kill();
+    h2.kill();
+}
+
+#[test]
+fn fleet_workers_must_agree_on_classifier_width() {
+    let (h4, addr4) = stub_worker(4, Duration::ZERO, stub_catalog());
+    let (h6, addr6) = stub_worker(6, Duration::ZERO, stub_catalog());
+    let err = FleetBackend::connect(&[addr4, addr6]).unwrap_err();
+    assert!(format!("{err:#}").contains("disagree"), "{err:#}");
+    h4.kill();
+    h6.kill();
+}
+
+#[test]
+fn server_over_fleet_serves_waves_across_a_drain_switch() {
+    let catalog = stub_catalog();
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let (h, addr) = stub_worker(4, Duration::from_millis(2), catalog.clone());
+        handles.push(h);
+        addrs.push(addr);
+    }
+
+    let stats = FleetStats::default();
+    let control_stats = stats.clone();
+    let factory_addrs = addrs.clone();
+    let factory_stats = stats.clone();
+    let server = Server::start(
+        move |_w| FleetBackend::connect_with(&factory_addrs, factory_stats.clone()),
+        OpTable::new(catalog),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let mut control = FleetBackend::connect_with(&addrs, control_stats).unwrap();
+
+    // wave 1 under OP0, then a coordinator-initiated fleet-wide drain
+    // switch that every worker acks, then wave 2 under OP1
+    let wave1: Vec<_> = (0..20)
+        .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+        .collect();
+    let acks = control.set_operating_point(1, SwitchMode::Drain).unwrap();
+    assert_eq!(acks, 2, "every surviving worker must ack before the switch is reported");
+    server.set_operating_point_with(1, SwitchMode::Drain).unwrap();
+    let wave2: Vec<_> = (0..20)
+        .map(|i| server.submit(vec![(i % 4) as f32, 0.0]).unwrap())
+        .collect();
+
+    for rx in wave1 {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.op_index, 0);
+        assert_eq!(resp.logits.len(), 4);
+    }
+    for rx in wave2 {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.op_index, 1);
+    }
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 40);
+    let (workers, _requeues, evictions) = stats.snapshot();
+    assert_eq!(evictions, 0);
+    let served: u64 = workers.iter().map(|(_, w)| w.requests).sum();
+    assert_eq!(served, 40, "per-worker attribution must cover every request");
+
+    for handle in handles {
+        handle.kill();
+    }
+}

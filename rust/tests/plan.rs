@@ -174,6 +174,104 @@ fn registry_resolves_every_planner_and_plans_respect_budgets() {
 }
 
 #[test]
+fn diff_of_identical_plans_is_empty() {
+    let f = fixture(8);
+    let plan = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+    let d = plan.diff(&plan.clone());
+    assert!(d.is_same_deployment(), "{d:?}");
+    assert_eq!(d.ops.len(), plan.ops.len());
+    for op in &d.ops {
+        assert!(op.changed.is_empty());
+        assert_eq!(op.power_delta(), Some(0.0));
+    }
+    assert!(d.subset_only_a.is_empty());
+    assert!(d.subset_only_b.is_empty());
+    // provenance travels on both sides
+    assert_eq!(d.provenance_a, plan.provenance);
+    assert_eq!(d.provenance_b, plan.provenance);
+}
+
+#[test]
+fn diff_reports_layer_power_subset_and_ladder_length_deltas() {
+    let f = fixture(6);
+    let a = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+
+    // b: perturb one layer of OP0, change its power, and drop the last
+    // OP from the ladder entirely
+    let mut b = a.clone();
+    let old_mid = b.ops[0].assignment[2];
+    let new_mid = old_mid + 1;
+    b.ops[0].assignment[2] = new_mid;
+    b.ops[0].relative_power = a.ops[0].relative_power + 0.05;
+    let dropped = b.ops.pop().expect("fixture plans have two OPs");
+
+    let d = a.diff(&b);
+    assert!(!d.is_same_deployment());
+    assert_eq!(d.ops.len(), a.ops.len());
+
+    // OP0: exactly the perturbed layer, with the exact from/to ids
+    let op0 = &d.ops[0];
+    assert_eq!(op0.changed.len(), 1);
+    assert_eq!(op0.changed[0].layer, f.layer_names[2]);
+    assert_eq!(op0.changed[0].from, Some(old_mid));
+    assert_eq!(op0.changed[0].to, Some(new_mid));
+    let delta = op0.power_delta().unwrap();
+    assert!((delta - 0.05).abs() < 1e-12, "power delta {delta}");
+
+    // the dropped OP shows up as a-only with every layer changed to None
+    let last = d.ops.last().unwrap();
+    assert_eq!(last.name_a.as_deref(), Some(dropped.name.as_str()));
+    assert_eq!(last.name_b, None);
+    assert_eq!(last.power_delta(), None);
+    assert_eq!(last.changed.len(), f.layer_names.len());
+    assert!(last.changed.iter().all(|c| c.to.is_none()));
+}
+
+#[test]
+fn diff_tracks_subset_membership_changes() {
+    let f = fixture(6);
+    let a = QosNetsPlanner.plan(&inputs(&f)).unwrap();
+    let mut b = a.clone();
+    // retarget every use of one approximate subset member to id 0 (the
+    // exact multiplier) and rebuild b's subset; the subset is derived
+    // from the assignments, so the member is guaranteed to be in use
+    let Some(gone) = b.subset.iter().map(|m| m.id).rfind(|&id| id != 0) else {
+        // an all-exact plan has nothing to retarget; the fixture's
+        // generous tolerances make this unreachable in practice
+        return;
+    };
+    for op in &mut b.ops {
+        for mid in &mut op.assignment {
+            if *mid == gone {
+                *mid = 0;
+            }
+        }
+    }
+    b.subset.retain(|m| m.id != gone);
+    if !b.subset.iter().any(|m| m.id == 0) {
+        b.subset.insert(
+            0,
+            plan::MulRef {
+                id: 0,
+                name: "am8u_exact".into(),
+                power: 1.0,
+            },
+        );
+    }
+    let d = a.diff(&b);
+    assert!(d.subset_only_a.contains(&gone), "{:?}", d.subset_only_a);
+    assert!(!d.subset_only_b.contains(&gone));
+    // and the assignment deltas point at the retargeted layers
+    let total_changed: usize = d.ops.iter().map(|o| o.changed.len()).sum();
+    assert!(total_changed > 0);
+    assert!(d
+        .ops
+        .iter()
+        .flat_map(|o| o.changed.iter())
+        .all(|c| c.from == Some(gone) && c.to == Some(0)));
+}
+
+#[test]
 fn unknown_planner_name_does_not_resolve() {
     assert!(plan::planner_by_name("nope").is_none());
     assert!(plan::planner_by_name("").is_none());

@@ -1,23 +1,34 @@
 //! Engine micro/macro benchmarks (§Perf deliverable, L3 hot path).
 //!
-//! * blocked LUT matmul GMAC/s across shapes (the hot loop)
-//! * exact-multiplier fast path vs LUT path
+//! * per-kernel throughput: every registered `LutKernel` (scalar, AVX2
+//!   where detected, threaded) across the blocked-matmul shapes, LUT
+//!   path and exact-multiplier fast path
+//! * the free-function scalar entry points on one shape (API smoke)
 //! * end-to-end engine images/s on the quick model per operating point
+//!   and per kernel
 
 use std::sync::Arc;
 
+use qos_nets::engine::lutmm::LutKernel;
 use qos_nets::engine::{lutmm, Engine};
 use qos_nets::muldb::MulDb;
 use qos_nets::pipeline::{self, Experiment};
 use qos_nets::util::bench::{bench, report};
 use qos_nets::util::rng::Rng;
 
+const SHAPES: [(usize, usize, usize); 4] =
+    [(1024, 144, 64), (4096, 288, 64), (256, 1152, 128), (4096, 64, 64)];
+
 fn main() -> anyhow::Result<()> {
     let db = Arc::new(MulDb::generate());
     let mut rng = Rng::new(0);
 
-    println!("=== LUT matmul hot loop ===");
-    for &(m, k, n) in &[(1024usize, 144usize, 64usize), (4096, 288, 64), (256, 1152, 128), (4096, 64, 64)] {
+    // one shape through the free-function scalar entry points (the
+    // per-kernel section below covers scalar across all of SHAPES —
+    // this only keeps the selftest/test-facing API exercised)
+    println!("=== free-function scalar entry points ===");
+    {
+        let (m, k, n) = SHAPES[0];
         let at: Vec<i32> = (0..k * m).map(|_| rng.below(256) as i32).collect();
         let wt: Vec<i32> = (0..n * k).map(|_| rng.below(256) as i32).collect();
         let wlut = lutmm::transpose_lut(db.lut(9));
@@ -33,6 +44,32 @@ fn main() -> anyhow::Result<()> {
             lutmm::exact_matmul_corrected(&at, &wt, m, k, n, 128, 128, &mut out2);
         });
         report(&r2, Some((macs / 1e9, "GMAC/s")));
+    }
+
+    println!("\n=== per-kernel LUT matmul throughput ===");
+    let kernels = lutmm::available_kernels();
+    println!(
+        "registered kernels: {} (auto resolves to {})",
+        kernels.iter().map(|k| k.name().to_string()).collect::<Vec<_>>().join(", "),
+        lutmm::detect_kernel().name()
+    );
+    for &(m, k, n) in &SHAPES {
+        let at: Vec<i32> = (0..k * m).map(|_| rng.below(256) as i32).collect();
+        let wt: Vec<i32> = (0..n * k).map(|_| rng.below(256) as i32).collect();
+        let wlut = lutmm::transpose_lut(db.lut(9));
+        let macs = (m * k * n) as f64;
+        for kernel in &kernels {
+            let mut out = vec![0i32; m * n];
+            let r = bench(&format!("lut[{}] {m}x{k}x{n}", kernel.name()), 1, 5, || {
+                kernel.matmul_acc(&at, &wt, &wlut, m, k, n, &mut out);
+            });
+            report(&r, Some((macs / 1e9, "GMAC/s")));
+            let mut out2 = vec![0i32; m * n];
+            let r2 = bench(&format!("exact[{}] {m}x{k}x{n}", kernel.name()), 1, 5, || {
+                kernel.exact_corrected(&at, &wt, m, k, n, 128, 128, &mut out2);
+            });
+            report(&r2, Some((macs / 1e9, "GMAC/s")));
+        }
     }
 
     println!("\n=== end-to-end engine (quick model) ===");
@@ -62,11 +99,14 @@ fn main() -> anyhow::Result<()> {
             }
         }),
     ] {
-        let mut eng = Engine::new(exp.graph.clone(), db.clone());
-        let r = bench(&format!("engine fwd b{batch} [{label}]"), 1, 5, || {
-            eng.forward(&op, &images[..batch * elems], batch).unwrap();
-        });
-        report(&r, Some((batch as f64, "img/s")));
+        for kernel in lutmm::available_kernels() {
+            let kname = kernel.name().to_string();
+            let mut eng = Engine::with_kernel(exp.graph.clone(), db.clone(), kernel);
+            let r = bench(&format!("engine fwd b{batch} [{label}] [{kname}]"), 1, 5, || {
+                eng.forward(&op, &images[..batch * elems], batch).unwrap();
+            });
+            report(&r, Some((batch as f64, "img/s")));
+        }
     }
 
     // MAC-rate view of the end-to-end number

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::backend::Backend;
+use crate::engine::lutmm::LutKernel;
 use crate::engine::{Engine, OperatingPoint};
 use crate::muldb::MulDb;
 use crate::nn::Graph;
@@ -25,7 +26,8 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     /// Wrap a model graph + multiplier family.  Cheap — all per-OP
-    /// caches are built later, in `prepare`.
+    /// caches are built later, in `prepare`.  Runs the host's default
+    /// matmul kernel (`lutmm::default_kernel`).
     pub fn new(graph: Arc<Graph>, db: Arc<MulDb>) -> Self {
         let num_classes = graph.approx_layers().last().map(|n| n.cout).unwrap_or(10);
         NativeBackend {
@@ -33,6 +35,19 @@ impl NativeBackend {
             ops: Vec::new(),
             num_classes,
         }
+    }
+
+    /// Like [`new`](Self::new), but running a specific [`LutKernel`]
+    /// (the CLI's `--kernel scalar|avx2|threaded|auto`).
+    pub fn with_kernel(graph: Arc<Graph>, db: Arc<MulDb>, kernel: Arc<dyn LutKernel>) -> Self {
+        let mut be = Self::new(graph, db);
+        be.engine.set_kernel(kernel);
+        be
+    }
+
+    /// Name of the matmul kernel the engine dispatches to.
+    pub fn kernel_name(&self) -> &str {
+        self.engine.kernel().name()
     }
 
     /// The underlying engine (selftest-style direct access).

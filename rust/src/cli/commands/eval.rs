@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::{self, Backend, NativeBackend};
-use crate::cli::commands::{fleet_addrs, load_db, load_experiment};
+use crate::cli::commands::{fleet_addrs, load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::FleetBackend;
 use crate::pipeline::{self, Experiment};
@@ -39,7 +39,11 @@ pub(crate) fn make_backend(
         return Ok(Box::new(be));
     }
     match which {
-        "native" => Ok(Box::new(NativeBackend::new(exp.graph.clone(), load_db(args)?))),
+        "native" => {
+            let be = NativeBackend::with_kernel(exp.graph.clone(), load_db(args)?, native_kernel(args)?);
+            println!("native kernel: {}", be.kernel_name());
+            Ok(Box::new(be))
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             let mut be = PjrtBackend::open(

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::cli::{Args, USAGE};
+use crate::engine::lutmm::{self, LutKernel};
 use crate::muldb::MulDb;
 use crate::pipeline::Experiment;
 
@@ -65,6 +66,17 @@ pub(crate) fn load_db(args: &Args) -> Result<Arc<MulDb>> {
 
 pub(crate) fn load_experiment(args: &Args) -> Result<Experiment> {
     Experiment::load(args.get_or("artifacts", "artifacts"), args.get_or("exp", "quick"))
+}
+
+/// Resolve the `--kernel scalar|avx2|threaded|auto` flag shared by the
+/// native-backend commands (`eval`, `serve`, `worker`).  Absent =
+/// [`lutmm::default_kernel`]: the `QOS_NETS_KERNEL` env var when set,
+/// else feature detection.
+pub(crate) fn native_kernel(args: &Args) -> Result<Arc<dyn LutKernel>> {
+    match args.get("kernel") {
+        Some(name) => lutmm::kernel_by_name(name),
+        None => Ok(lutmm::default_kernel()),
+    }
 }
 
 /// Parse the `--fleet host:port,host:port,...` flag shared by `serve`

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::{Backend, NativeBackend, OpTable};
-use crate::cli::commands::{fleet_addrs, load_db, load_experiment};
+use crate::cli::commands::{fleet_addrs, load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::{FleetBackend, FleetStats};
 use crate::pipeline::Experiment;
@@ -84,8 +84,10 @@ pub fn run(args: &Args) -> Result<()> {
         "native" => {
             let graph = exp.graph.clone();
             let db = load_db(args)?;
+            let kernel = native_kernel(args)?;
+            println!("native kernel: {}", kernel.name());
             let server = Server::start(
-                move |_w| Ok(NativeBackend::new(graph.clone(), db.clone())),
+                move |_w| Ok(NativeBackend::with_kernel(graph.clone(), db.clone(), kernel.clone())),
                 table,
                 cfg,
             )?;

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::NativeBackend;
-use crate::cli::commands::{load_db, load_experiment};
+use crate::cli::commands::{load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::worker;
 use crate::pipeline;
@@ -49,8 +49,10 @@ pub fn run(args: &Args) -> Result<()> {
         "native" => {
             let graph = exp.graph.clone();
             let db = load_db(args)?;
+            let kernel = native_kernel(args)?;
+            println!("  native kernel: {}", kernel.name());
             worker::run(listener, name, mode, catalog, move |_conn| {
-                Ok(NativeBackend::new(graph.clone(), db.clone()))
+                Ok(NativeBackend::with_kernel(graph.clone(), db.clone(), kernel.clone()))
             })
         }
         #[cfg(feature = "pjrt")]

@@ -74,13 +74,13 @@ COMMANDS
   baselines --exp E             run every registered planner on identical
                                 inputs, print one comparison table
                                 (paper Table 1 shape, qos included)
-  eval      --exp E [--backend B] [--mode M] [--fleet H:P,...]
+  eval      --exp E [--backend B] [--mode M] [--kernel K] [--fleet H:P,...]
                                 evaluate every operating point through the
                                 unified Backend trait (B: native|pjrt,
                                 default native; M: none|bn|full, default bn
                                 — pjrt honors bn overlays only; --fleet
                                 evaluates over remote fleet workers)
-  serve     --exp E [--backend B] [--secs S]
+  serve     --exp E [--backend B] [--kernel K] [--secs S]
             [--workers N] [--min-workers N] [--max-workers N]
             [--fleet H:P,H:P,...] [--retag-downgrades]
                                 QoS serving demo: elastic batching server
@@ -93,7 +93,7 @@ COMMANDS
                                 fleet-wide; --retag-downgrades lets an
                                 immediate downgrade retag already-formed
                                 batches to the cheaper OP)
-  worker    --exp E [--listen ADDR] [--backend B] [--mode M]
+  worker    --exp E [--listen ADDR] [--backend B] [--mode M] [--kernel K]
                                 fleet worker daemon: serves the
                                 experiment's OP catalog (exact baseline
                                 + plan ladder) over the fleet wire
@@ -112,6 +112,11 @@ COMMON FLAGS
   --artifacts DIR   artifacts directory (default: artifacts)
   --limit N         cap evaluation set size
   --batch N         engine batch size (default 32)
+  --kernel K        native LUT matmul kernel: scalar|avx2|threaded|auto
+                    (native backend only; default auto = runtime feature
+                    detection, AVX2 where the CPU has it; threaded shards
+                    M-tiles across all hardware threads; the
+                    QOS_NETS_KERNEL env var sets the default)
 ";
 
 #[cfg(test)]

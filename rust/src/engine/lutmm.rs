@@ -1,6 +1,7 @@
-//! Blocked LUT matmul — the L3 hot loop (native mirror of the L1 kernel).
+//! Blocked LUT matmul — the L3 hot loop (native mirror of the L1 kernel),
+//! behind a runtime-selected [`LutKernel`] dispatch.
 //!
-//! Computes  acc[m, n] = sum_k lut[a[m, k], w[k, n]]  over u8 codes held
+//! Computes  out[m, n] = sum_k lut[a[m, k], w[k, n]]  over u8 codes held
 //! in i32, exactly like the Pallas kernel / ref.py oracle.
 //!
 //! Layout strategy (see EXPERIMENTS.md §Perf for the measured iteration):
@@ -12,8 +13,28 @@
 //!     contiguous code row;
 //!   * M is tiled so the A^T tile stays cache-resident while all N
 //!     columns sweep over it.
+//!
+//! Three kernels implement that strategy (all bit-identical — integer
+//! accumulation is exact, so every kernel must agree with the naive
+//! oracle, pinned in `rust/tests/kernels.rs`):
+//!   * [`ScalarKernel`] — the portable 2-way-k-unrolled baseline;
+//!   * [`Avx2Kernel`] — `std::arch` AVX2 `vpgatherdd` over the w-major
+//!     KiB LUT rows (x86_64 only, constructed only when
+//!     `is_x86_feature_detected!("avx2")` holds);
+//!   * [`ThreadedKernel`] — shards M-tiles across `std::thread::scope`
+//!     workers over any inner kernel, for large im2col matrices.
+//!
+//! [`kernel_by_name`] resolves `--kernel scalar|avx2|threaded|auto`;
+//! [`default_kernel`] additionally honors the `QOS_NETS_KERNEL`
+//! environment variable (how CI forces the scalar kernel).
+
+use std::sync::Arc;
 
 pub const M_TILE: usize = 256;
+
+/// Environment variable consulted by [`default_kernel`]; same values as
+/// the `--kernel` CLI flag (`scalar|avx2|threaded|auto`).
+pub const KERNEL_ENV: &str = "QOS_NETS_KERNEL";
 
 /// Transpose a row-major (256, 256) LUT to w-major order.
 pub fn transpose_lut(lut: &[i32]) -> Vec<i32> {
@@ -27,16 +48,177 @@ pub fn transpose_lut(lut: &[i32]) -> Vec<i32> {
     t
 }
 
-/// Raw accumulation: `at` is A transposed (K, M), `wt` is W transposed
-/// (N, K), `wlut` is the w-major LUT. Output row-major (M, N).
-pub fn lut_matmul_acc(at: &[i32], wt: &[i32], wlut: &[i32], m: usize, k: usize, n: usize, out: &mut [i32]) {
-    debug_assert_eq!(at.len(), k * m);
-    debug_assert_eq!(wt.len(), n * k);
-    debug_assert_eq!(out.len(), m * n);
+// ---------------------------------------------------------------------------
+// The dispatch trait
+// ---------------------------------------------------------------------------
+
+/// One implementation of the LUT-matmul hot loop.
+///
+/// Contract (every kernel, pinned bit-exact in `rust/tests/kernels.rs`):
+///
+/// * **Kernels overwrite `out`; they do not accumulate into it.**  The
+///   historical name `matmul_acc` refers to the LUT *accumulation over
+///   k* inside the kernel — the output buffer needs no zeroing between
+///   calls (the engine reuses one scratch buffer across conv groups for
+///   exactly this reason).
+/// * Operand codes are u8 values held in i32.  Kernels mask indices to
+///   `0..=255` before the LUT gather, so out-of-range codes are a
+///   caller bug but never an out-of-bounds read.
+/// * `wlut` is the **w-major** transpose ([`transpose_lut`]): row
+///   `wlut[w * 256 ..]` holds `lut[a, w]` for all `a` — one KiB per
+///   weight code, the unit both the scalar streams and the AVX2
+///   gathers operate on.
+/// * Integer accumulation is associative, so tiling/sharding choices
+///   (M-tile size, thread shard boundaries) can never change results:
+///   every kernel is bit-identical to the naive oracle.
+///
+/// The `*_block` methods compute a contiguous row range of the full
+/// (M, N) output: `at`/`m` still describe the *full* (K, M) operand
+/// (rows are strided by `m`), `m_lo` is the first output row this call
+/// covers, and `out` holds `out.len() / n` rows starting there.  They
+/// are the unit [`ThreadedKernel`] shards across workers.
+pub trait LutKernel: Send + Sync {
+    /// Kernel name for reports and flags ("scalar", "avx2", ...).
+    fn name(&self) -> &str;
+
+    /// LUT path for output rows `m_lo .. m_lo + out.len() / n`.
+    #[allow(clippy::too_many_arguments)]
+    fn lut_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        wlut: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        m_lo: usize,
+        out: &mut [i32],
+    );
+
+    /// Exact-multiplier fast path for output rows
+    /// `m_lo .. m_lo + out.len() / n`: integer matmul on
+    /// zero-point-shifted codes (bit-identical to LUT accumulation +
+    /// correction with the exact LUT).
+    #[allow(clippy::too_many_arguments)]
+    fn exact_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        za: i32,
+        zw: i32,
+        m_lo: usize,
+        out: &mut [i32],
+    );
+
+    /// Full-matrix LUT accumulation: `at` is A transposed (K, M), `wt`
+    /// is W transposed (N, K), `wlut` the w-major LUT; `out` is the
+    /// row-major (M, N) result, **overwritten** (see the trait docs).
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_acc(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        wlut: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [i32],
+    ) {
+        self.lut_block(at, wt, wlut, m, k, n, 0, out);
+    }
+
+    /// Full-matrix exact fast path (see [`exact_block`](Self::exact_block)).
+    #[allow(clippy::too_many_arguments)]
+    fn exact_corrected(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        za: i32,
+        zw: i32,
+        out: &mut [i32],
+    ) {
+        self.exact_block(at, wt, m, k, n, za, zw, 0, out);
+    }
+}
+
+/// Shared operand validation for a block call; returns the row count.
+fn check_block(at: &[i32], wt: &[i32], m: usize, k: usize, n: usize, m_lo: usize, out: &[i32]) -> usize {
+    assert!(n > 0 && out.len() % n == 0, "out length {} not a multiple of n {n}", out.len());
+    let rows = out.len() / n;
+    assert!(at.len() >= k * m, "A^T too short: {} < {k}*{m}", at.len());
+    assert!(wt.len() >= n * k, "W^T too short: {} < {n}*{k}", wt.len());
+    assert!(m_lo + rows <= m, "row range {m_lo}..{} exceeds M {m}", m_lo + rows);
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Scalar kernel (portable baseline)
+// ---------------------------------------------------------------------------
+
+/// The portable 2-way-k-unrolled scalar kernel — the baseline every
+/// other kernel is checked against, and the fallback on hosts without
+/// AVX2.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernel;
+
+impl LutKernel for ScalarKernel {
+    fn name(&self) -> &str {
+        "scalar"
+    }
+
+    fn lut_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        wlut: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        scalar_lut_block(at, wt, wlut, m, k, n, m_lo, out);
+    }
+
+    fn exact_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        za: i32,
+        zw: i32,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        scalar_exact_block(at, wt, m, k, n, za, zw, m_lo, out);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scalar_lut_block(
+    at: &[i32],
+    wt: &[i32],
+    wlut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    m_lo: usize,
+    out: &mut [i32],
+) {
+    let rows = check_block(at, wt, m, k, n, m_lo, out);
     let mut acc_col = [0i32; M_TILE];
-    let mut m0 = 0;
-    while m0 < m {
-        let mt = (m - m0).min(M_TILE);
+    let mut m0 = m_lo;
+    let end = m_lo + rows;
+    while m0 < end {
+        let mt = (end - m0).min(M_TILE);
         for nn in 0..n {
             let col = &mut acc_col[..mt];
             col.fill(0);
@@ -46,39 +228,41 @@ pub fn lut_matmul_acc(at: &[i32], wt: &[i32], wlut: &[i32], m: usize, k: usize, 
             // once per column tile, amortized over K)
             let mut kk = 0;
             while kk + 1 < k {
-                let r0 = (wrow[kk] as usize) << 8;
-                let r1 = (wrow[kk + 1] as usize) << 8;
+                let r0 = ((wrow[kk] as usize) & 0xff) << 8;
+                let r1 = ((wrow[kk + 1] as usize) & 0xff) << 8;
                 let row0 = &wlut[r0..r0 + 256];
                 let row1 = &wlut[r1..r1 + 256];
                 let a0 = &at[kk * m + m0..kk * m + m0 + mt];
                 let a1 = &at[(kk + 1) * m + m0..(kk + 1) * m + m0 + mt];
                 for i in 0..mt {
+                    // indices are masked to 0..=255, so the unchecked
+                    // reads stay inside the 256-entry rows
                     unsafe {
-                        *col.get_unchecked_mut(i) += *row0.get_unchecked(*a0.get_unchecked(i) as usize)
-                            + *row1.get_unchecked(*a1.get_unchecked(i) as usize);
+                        *col.get_unchecked_mut(i) += *row0
+                            .get_unchecked((*a0.get_unchecked(i) as usize) & 0xff)
+                            + *row1.get_unchecked((*a1.get_unchecked(i) as usize) & 0xff);
                     }
                 }
                 kk += 2;
             }
             if kk < k {
-                let r0 = (wrow[kk] as usize) << 8;
+                let r0 = ((wrow[kk] as usize) & 0xff) << 8;
                 let row = &wlut[r0..r0 + 256];
                 let arow = &at[kk * m + m0..kk * m + m0 + mt];
                 for (acc, &a) in col.iter_mut().zip(arow) {
-                    *acc += unsafe { *row.get_unchecked(a as usize) };
+                    *acc += unsafe { *row.get_unchecked((a as usize) & 0xff) };
                 }
             }
             for (mm, &v) in col.iter().enumerate() {
-                out[(m0 + mm) * n + nn] = v;
+                out[(m0 - m_lo + mm) * n + nn] = v;
             }
         }
         m0 += mt;
     }
 }
 
-/// Exact-multiplier fast path: integer matmul on zero-point-shifted codes
-/// (bit-identical to lut accumulation + correction with the exact LUT).
-pub fn exact_matmul_corrected(
+#[allow(clippy::too_many_arguments)]
+fn scalar_exact_block(
     at: &[i32],
     wt: &[i32],
     m: usize,
@@ -86,12 +270,15 @@ pub fn exact_matmul_corrected(
     n: usize,
     za: i32,
     zw: i32,
+    m_lo: usize,
     out: &mut [i32],
 ) {
+    let rows = check_block(at, wt, m, k, n, m_lo, out);
     let mut acc_col = [0i32; M_TILE];
-    let mut m0 = 0;
-    while m0 < m {
-        let mt = (m - m0).min(M_TILE);
+    let mut m0 = m_lo;
+    let end = m_lo + rows;
+    while m0 < end {
+        let mt = (end - m0).min(M_TILE);
         for nn in 0..n {
             let col = &mut acc_col[..mt];
             col.fill(0);
@@ -107,11 +294,425 @@ pub fn exact_matmul_corrected(
                 }
             }
             for (mm, &v) in col.iter().enumerate() {
-                out[(m0 + mm) * n + nn] = v;
+                out[(m0 - m_lo + mm) * n + nn] = v;
             }
         }
         m0 += mt;
     }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 gather kernel (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+/// AVX2 kernel: the w-major KiB LUT rows are gathered eight lanes at a
+/// time with `vpgatherdd`, two independent gather streams per k-pair
+/// exactly like the scalar unroll.  Only constructible when the CPU
+/// reports AVX2 ([`Avx2Kernel::detect`]), so the `unsafe` target-feature
+/// calls inside are always valid.
+#[cfg(target_arch = "x86_64")]
+#[derive(Debug, Clone, Copy)]
+pub struct Avx2Kernel {
+    _guard: (), // proof of successful detection; see `detect`
+}
+
+#[cfg(target_arch = "x86_64")]
+impl Avx2Kernel {
+    /// The kernel, if this CPU supports AVX2.
+    pub fn detect() -> Option<Avx2Kernel> {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Some(Avx2Kernel { _guard: () })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+impl LutKernel for Avx2Kernel {
+    fn name(&self) -> &str {
+        "avx2"
+    }
+
+    fn lut_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        wlut: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        check_block(at, wt, m, k, n, m_lo, out);
+        assert!(wlut.len() >= 65536, "w-major LUT too short: {}", wlut.len());
+        // SAFETY: construction proves AVX2 is available; bounds are
+        // checked above and gather indices are masked to 0..=255.
+        unsafe { avx2_lut_block(at, wt, wlut, m, k, n, m_lo, out) }
+    }
+
+    fn exact_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        za: i32,
+        zw: i32,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        check_block(at, wt, m, k, n, m_lo, out);
+        // SAFETY: construction proves AVX2 is available.
+        unsafe { avx2_exact_block(at, wt, m, k, n, za, zw, m_lo, out) }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `at`/`wt` cover
+/// `(K, M)`/`(N, K)`, `wlut.len() >= 65536`, and `out` holds whole rows
+/// of width `n` starting at row `m_lo` with `m_lo + rows <= m`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn avx2_lut_block(
+    at: &[i32],
+    wt: &[i32],
+    wlut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    m_lo: usize,
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let rows = out.len() / n;
+    let byte_mask = _mm256_set1_epi32(0xff);
+    let mut acc_col = [0i32; M_TILE];
+    let mut m0 = m_lo;
+    let end = m_lo + rows;
+    while m0 < end {
+        let mt = (end - m0).min(M_TILE);
+        for nn in 0..n {
+            let col = &mut acc_col[..mt];
+            col.fill(0);
+            let wrow = &wt[nn * k..(nn + 1) * k];
+            let mut kk = 0;
+            while kk + 1 < k {
+                let r0 = ((wrow[kk] as usize) & 0xff) << 8;
+                let r1 = ((wrow[kk + 1] as usize) & 0xff) << 8;
+                let row0 = wlut[r0..r0 + 256].as_ptr();
+                let row1 = wlut[r1..r1 + 256].as_ptr();
+                let a0 = at[kk * m + m0..kk * m + m0 + mt].as_ptr();
+                let a1 = at[(kk + 1) * m + m0..(kk + 1) * m + m0 + mt].as_ptr();
+                let cp = col.as_mut_ptr();
+                let mut i = 0;
+                // SAFETY: every load/store covers 8 lanes at offsets
+                // < mt (loop bound); gather indices are masked to
+                // 0..=255 inside 256-entry rows.
+                unsafe {
+                    while i + 8 <= mt {
+                        let idx0 = _mm256_and_si256(
+                            _mm256_loadu_si256(a0.add(i) as *const __m256i),
+                            byte_mask,
+                        );
+                        let idx1 = _mm256_and_si256(
+                            _mm256_loadu_si256(a1.add(i) as *const __m256i),
+                            byte_mask,
+                        );
+                        let g0 = _mm256_i32gather_epi32::<4>(row0, idx0);
+                        let g1 = _mm256_i32gather_epi32::<4>(row1, idx1);
+                        let acc = _mm256_loadu_si256(cp.add(i) as *const __m256i);
+                        let sum = _mm256_add_epi32(acc, _mm256_add_epi32(g0, g1));
+                        _mm256_storeu_si256(cp.add(i) as *mut __m256i, sum);
+                        i += 8;
+                    }
+                    // tail lanes (mt % 8)
+                    while i < mt {
+                        *cp.add(i) += *row0.add((*a0.add(i) as usize) & 0xff)
+                            + *row1.add((*a1.add(i) as usize) & 0xff);
+                        i += 1;
+                    }
+                }
+                kk += 2;
+            }
+            if kk < k {
+                let r0 = ((wrow[kk] as usize) & 0xff) << 8;
+                let row = &wlut[r0..r0 + 256];
+                let arow = &at[kk * m + m0..kk * m + m0 + mt];
+                for (acc, &a) in col.iter_mut().zip(arow) {
+                    *acc += row[(a as usize) & 0xff];
+                }
+            }
+            for (mm, &v) in col.iter().enumerate() {
+                out[(m0 - m_lo + mm) * n + nn] = v;
+            }
+        }
+        m0 += mt;
+    }
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and the operand bounds of
+/// [`avx2_lut_block`] (minus the LUT, which this path does not read).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn avx2_exact_block(
+    at: &[i32],
+    wt: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    za: i32,
+    zw: i32,
+    m_lo: usize,
+    out: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let rows = out.len() / n;
+    let za_v = _mm256_set1_epi32(za);
+    let mut acc_col = [0i32; M_TILE];
+    let mut m0 = m_lo;
+    let end = m_lo + rows;
+    while m0 < end {
+        let mt = (end - m0).min(M_TILE);
+        for nn in 0..n {
+            let col = &mut acc_col[..mt];
+            col.fill(0);
+            let wrow = &wt[nn * k..(nn + 1) * k];
+            for kk in 0..k {
+                let wv = wrow[kk] - zw;
+                if wv == 0 {
+                    continue;
+                }
+                let arow = at[kk * m + m0..kk * m + m0 + mt].as_ptr();
+                let cp = col.as_mut_ptr();
+                // SAFETY: 8-lane accesses bounded by mt; wrapping i32
+                // lane arithmetic matches the scalar release semantics.
+                unsafe {
+                    let wv_v = _mm256_set1_epi32(wv);
+                    let mut i = 0;
+                    while i + 8 <= mt {
+                        let a = _mm256_loadu_si256(arow.add(i) as *const __m256i);
+                        let prod = _mm256_mullo_epi32(_mm256_sub_epi32(a, za_v), wv_v);
+                        let acc = _mm256_loadu_si256(cp.add(i) as *const __m256i);
+                        _mm256_storeu_si256(cp.add(i) as *mut __m256i, _mm256_add_epi32(acc, prod));
+                        i += 8;
+                    }
+                    while i < mt {
+                        *cp.add(i) += ((*arow.add(i)).wrapping_sub(za)).wrapping_mul(wv);
+                        i += 1;
+                    }
+                }
+            }
+            for (mm, &v) in col.iter().enumerate() {
+                out[(m0 - m_lo + mm) * n + nn] = v;
+            }
+        }
+        m0 += mt;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded wrapper (M-tile sharding)
+// ---------------------------------------------------------------------------
+
+/// Shards the output's M dimension across `std::thread::scope` workers,
+/// delegating each contiguous tile-aligned row range to an inner
+/// kernel.  Integer accumulation makes shard boundaries invisible in
+/// the result, so this is bit-identical to the inner kernel by
+/// construction.  Small blocks (under two M-tiles per worker-pair) run
+/// inline — the scope overhead only pays off on large im2col matrices
+/// (big serving batches, fleet worker chunks).
+pub struct ThreadedKernel {
+    inner: Arc<dyn LutKernel>,
+    threads: usize,
+    name: String,
+}
+
+impl ThreadedKernel {
+    /// Wrap `inner`, sharding across up to `threads` workers (values
+    /// below 2 make this a pass-through).
+    pub fn new(inner: Arc<dyn LutKernel>, threads: usize) -> ThreadedKernel {
+        let name = format!("threaded({}x{})", inner.name(), threads.max(1));
+        ThreadedKernel {
+            inner,
+            threads: threads.max(1),
+            name,
+        }
+    }
+
+    /// Wrap `inner` with one worker per available hardware thread.
+    pub fn with_available_parallelism(inner: Arc<dyn LutKernel>) -> ThreadedKernel {
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        ThreadedKernel::new(inner, threads)
+    }
+
+    /// Split `out` (rows starting at `m_lo`) into tile-aligned shards
+    /// and run `f` on each concurrently.
+    fn shard(&self, n: usize, m_lo: usize, out: &mut [i32], f: impl Fn(usize, &mut [i32]) + Sync) {
+        let rows = out.len() / n;
+        let tiles = rows.div_ceil(M_TILE);
+        let shards = self.threads.min(tiles);
+        let chunk_rows = tiles.div_ceil(shards) * M_TILE;
+        std::thread::scope(|s| {
+            let mut rest = out;
+            let mut lo = m_lo;
+            while !rest.is_empty() {
+                let take = (chunk_rows * n).min(rest.len());
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                let lo_here = lo;
+                lo += take / n;
+                rest = tail;
+                let f = &f;
+                s.spawn(move || f(lo_here, head));
+            }
+        });
+    }
+}
+
+impl LutKernel for ThreadedKernel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lut_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        wlut: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        let rows = check_block(at, wt, m, k, n, m_lo, out);
+        if self.threads < 2 || rows < 2 * M_TILE {
+            return self.inner.lut_block(at, wt, wlut, m, k, n, m_lo, out);
+        }
+        self.shard(n, m_lo, out, |lo, block| {
+            self.inner.lut_block(at, wt, wlut, m, k, n, lo, block)
+        });
+    }
+
+    fn exact_block(
+        &self,
+        at: &[i32],
+        wt: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        za: i32,
+        zw: i32,
+        m_lo: usize,
+        out: &mut [i32],
+    ) {
+        let rows = check_block(at, wt, m, k, n, m_lo, out);
+        if self.threads < 2 || rows < 2 * M_TILE {
+            return self.inner.exact_block(at, wt, m, k, n, za, zw, m_lo, out);
+        }
+        self.shard(n, m_lo, out, |lo, block| {
+            self.inner.exact_block(at, wt, m, k, n, za, zw, lo, block)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// The best single-threaded kernel this host supports: AVX2 when the
+/// CPU reports it, the portable scalar kernel otherwise.  This is what
+/// `--kernel auto` resolves to — threading is opt-in (`--kernel
+/// threaded`) because the serving stack already parallelizes across
+/// worker backends and nesting both oversubscribes the host.
+pub fn detect_kernel() -> Arc<dyn LutKernel> {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(k) = Avx2Kernel::detect() {
+        return Arc::new(k);
+    }
+    Arc::new(ScalarKernel)
+}
+
+/// Resolve a `--kernel` flag value.  `auto` = [`detect_kernel`];
+/// `threaded` wraps the detected kernel with one worker per hardware
+/// thread; an explicit `avx2` on a host without AVX2 is an error (use
+/// `auto` for graceful fallback).
+pub fn kernel_by_name(name: &str) -> anyhow::Result<Arc<dyn LutKernel>> {
+    match name {
+        "auto" => Ok(detect_kernel()),
+        "scalar" => Ok(Arc::new(ScalarKernel)),
+        "threaded" => Ok(Arc::new(ThreadedKernel::with_available_parallelism(detect_kernel()))),
+        "avx2" => {
+            #[cfg(target_arch = "x86_64")]
+            if let Some(k) = Avx2Kernel::detect() {
+                return Ok(Arc::new(k));
+            }
+            anyhow::bail!("this host has no AVX2 (use --kernel auto for detection with fallback)")
+        }
+        other => anyhow::bail!("unknown kernel {other:?} (scalar|avx2|threaded|auto)"),
+    }
+}
+
+/// The kernel new engines use when nothing is specified: the
+/// `QOS_NETS_KERNEL` environment variable when set (invalid values warn
+/// and fall back), else [`detect_kernel`].
+pub fn default_kernel() -> Arc<dyn LutKernel> {
+    if let Ok(name) = std::env::var(KERNEL_ENV) {
+        if !name.is_empty() {
+            match kernel_by_name(&name) {
+                Ok(k) => return k,
+                Err(e) => eprintln!("warning: {KERNEL_ENV}={name}: {e}; using auto-detection"),
+            }
+        }
+    }
+    detect_kernel()
+}
+
+/// Every kernel this host can run, for benches and cross-kernel tests:
+/// scalar always, AVX2 when detected, and the threaded wrapper over the
+/// detected kernel.
+pub fn available_kernels() -> Vec<Arc<dyn LutKernel>> {
+    let mut out: Vec<Arc<dyn LutKernel>> = vec![Arc::new(ScalarKernel)];
+    #[cfg(target_arch = "x86_64")]
+    if let Some(k) = Avx2Kernel::detect() {
+        out.push(Arc::new(k));
+    }
+    out.push(Arc::new(ThreadedKernel::with_available_parallelism(detect_kernel())));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Free-function scalar entry points (selftest / benches / tests)
+// ---------------------------------------------------------------------------
+
+/// Scalar LUT accumulation over the full matrix: `at` is A transposed
+/// (K, M), `wt` is W transposed (N, K), `wlut` the w-major LUT; `out`
+/// is row-major (M, N) and **overwritten** (see [`LutKernel`] for the
+/// full contract — the "acc" names the accumulation over k).
+pub fn lut_matmul_acc(at: &[i32], wt: &[i32], wlut: &[i32], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    scalar_lut_block(at, wt, wlut, m, k, n, 0, out);
+}
+
+/// Scalar exact-multiplier fast path: integer matmul on
+/// zero-point-shifted codes (bit-identical to lut accumulation +
+/// correction with the exact LUT).  `out` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn exact_matmul_corrected(
+    at: &[i32],
+    wt: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    za: i32,
+    zw: i32,
+    out: &mut [i32],
+) {
+    scalar_exact_block(at, wt, m, k, n, za, zw, 0, out);
 }
 
 /// Zero-point correction in place:
@@ -222,5 +823,63 @@ mod tests {
         let mut fast = vec![0i32; m * n];
         exact_matmul_corrected(&at, &wt, m, k, n, za, zw, &mut fast);
         assert_eq!(lut_out, fast);
+    }
+
+    #[test]
+    fn kernel_registry_resolves_flag_values() {
+        assert_eq!(kernel_by_name("scalar").unwrap().name(), "scalar");
+        assert!(kernel_by_name("auto").is_ok());
+        assert!(kernel_by_name("threaded").unwrap().name().starts_with("threaded("));
+        assert!(kernel_by_name("simd128").is_err());
+        // every host runs at least scalar + the threaded wrapper
+        assert!(available_kernels().len() >= 2);
+    }
+
+    #[test]
+    fn threaded_kernel_matches_inner_on_tail_shapes() {
+        // rows not a multiple of M_TILE and more threads than tiles
+        let db = MulDb::generate();
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (3 * M_TILE + 37, 9usize, 5usize);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+        let at = transpose(&a, m, k);
+        let wt = transpose(&w, k, n);
+        let wlut = transpose_lut(db.lut(11));
+        let mut want = vec![0i32; m * n];
+        ScalarKernel.matmul_acc(&at, &wt, &wlut, m, k, n, &mut want);
+        for threads in [2usize, 3, 64] {
+            let tk = ThreadedKernel::new(Arc::new(ScalarKernel), threads);
+            let mut got = vec![0i32; m * n];
+            tk.matmul_acc(&at, &wt, &wlut, m, k, n, &mut got);
+            assert_eq!(got, want, "threads={threads}");
+            let mut ex_want = vec![0i32; m * n];
+            ScalarKernel.exact_corrected(&at, &wt, m, k, n, 128, 120, &mut ex_want);
+            let mut ex_got = vec![0i32; m * n];
+            tk.exact_corrected(&at, &wt, m, k, n, 128, 120, &mut ex_got);
+            assert_eq!(ex_got, ex_want, "exact threads={threads}");
+        }
+    }
+
+    #[test]
+    fn kernels_overwrite_out_rather_than_accumulate() {
+        // the LutKernel contract: a poisoned output buffer must not
+        // leak into results (the engine reuses one scratch across
+        // conv groups relying on this)
+        let db = MulDb::generate();
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (19usize, 6usize, 4usize);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+        let at = transpose(&a, m, k);
+        let wt = transpose(&w, k, n);
+        let wlut = transpose_lut(db.lut(3));
+        for kernel in available_kernels() {
+            let mut clean = vec![0i32; m * n];
+            kernel.matmul_acc(&at, &wt, &wlut, m, k, n, &mut clean);
+            let mut poisoned = vec![i32::MAX; m * n];
+            kernel.matmul_acc(&at, &wt, &wlut, m, k, n, &mut poisoned);
+            assert_eq!(poisoned, clean, "{} accumulated into out", kernel.name());
+        }
     }
 }

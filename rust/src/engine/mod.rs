@@ -16,6 +16,12 @@
 //! weight/LUT caches up front (the serving path via
 //! `backend::NativeBackend` calls it for every ladder rung) so `forward`
 //! never builds them lazily on the hot path.
+//!
+//! The arithmetic itself is dispatched through a runtime-selected
+//! [`lutmm::LutKernel`] (scalar / AVX2 / threaded — see the `lutmm`
+//! module docs); [`Engine::new`] picks [`lutmm::default_kernel`] and
+//! [`Engine::with_kernel`] / [`Engine::set_kernel`] override it (the
+//! CLI's `--kernel` flag).
 
 pub mod lutmm;
 
@@ -24,6 +30,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::engine::lutmm::LutKernel;
 use crate::muldb::MulDb;
 use crate::nn::{Graph, LayerParams, ModelParams, Node, NodeKind};
 
@@ -44,8 +51,37 @@ pub struct Engine {
     /// transposed (w-major) LUT cache, built lazily per multiplier id
     wluts: Vec<Option<Vec<i32>>>,
     /// per-(op, layer, group) transposed weight codes + column sums,
-    /// rebuilt only when the operating point changes (serving hot path)
-    wt_cache: HashMap<(String, String, usize), (Vec<i32>, Vec<i32>)>,
+    /// rebuilt only when the operating point changes (serving hot path);
+    /// each entry carries the fingerprint of the weight codes it was
+    /// built from, so re-preparing a same-named OP with different
+    /// weights (reloaded plan, full-retrain overlay) replaces the stale
+    /// entry instead of silently serving it
+    wt_cache: HashMap<(String, String, usize), WtEntry>,
+    /// the matmul hot-loop implementation (see [`lutmm`])
+    kernel: Arc<dyn LutKernel>,
+}
+
+/// One cached weight transpose: W^T codes + per-column code sums, tagged
+/// with the fingerprint of the `w_codes` they were derived from.
+struct WtEntry {
+    fingerprint: u64,
+    wt: Vec<i32>,
+    sw: Vec<i32>,
+}
+
+/// FNV-1a over a layer's weight codes — the staleness tag for
+/// [`Engine`]'s weight-transpose cache.  Only `w_codes` feed the cache
+/// (post-scale/bias are read fresh from the operating point every
+/// forward), so only they are hashed.
+///
+/// Recomputed on every `ensure_layer_caches` call by design: a pointer
+/// identity short-circuit would serve stale codes when a reloaded
+/// plan's `Vec` lands on a freed predecessor's address — exactly the
+/// staleness class this tag exists to kill.  The cost is one
+/// multiply/XOR per weight, a vanishing fraction of the layer's
+/// `m*k*n` matmul work.
+fn params_fingerprint(lp: &LayerParams) -> u64 {
+    crate::util::hash::fnv1a_words(lp.w_codes.iter().map(|&c| c as u32 as u64))
 }
 
 #[derive(Debug, Clone)]
@@ -55,14 +91,33 @@ struct Act {
 }
 
 impl Engine {
+    /// An engine with the host's default kernel ([`lutmm::default_kernel`]:
+    /// the `QOS_NETS_KERNEL` env var when set, else feature detection).
     pub fn new(graph: Arc<Graph>, db: Arc<MulDb>) -> Self {
+        Self::with_kernel(graph, db, lutmm::default_kernel())
+    }
+
+    /// An engine running a specific [`LutKernel`] (the `--kernel` flag).
+    pub fn with_kernel(graph: Arc<Graph>, db: Arc<MulDb>, kernel: Arc<dyn LutKernel>) -> Self {
         let n = db.len();
         Engine {
             graph,
             db,
             wluts: vec![None; n],
             wt_cache: HashMap::new(),
+            kernel,
         }
+    }
+
+    /// Swap the matmul kernel (safe at any time — kernels share no
+    /// state and are bit-identical, so caches stay valid).
+    pub fn set_kernel(&mut self, kernel: Arc<dyn LutKernel>) {
+        self.kernel = kernel;
+    }
+
+    /// The active matmul kernel.
+    pub fn kernel(&self) -> &dyn LutKernel {
+        self.kernel.as_ref()
     }
 
     pub fn graph(&self) -> &Graph {
@@ -109,11 +164,17 @@ impl Engine {
                 node.cout / node.groups,
             ),
         };
+        let fingerprint = params_fingerprint(lp);
         for g in 0..groups {
             let key = (op.name.clone(), node.name.clone(), g);
-            if !self.wt_cache.contains_key(&key) {
-                let built = Self::build_wt(lp, k, node.cout, g, cg_out);
-                self.wt_cache.insert(key, built);
+            let fresh = self
+                .wt_cache
+                .get(&key)
+                .is_some_and(|e| e.fingerprint == fingerprint);
+            if !fresh {
+                let (wt, sw) = Self::build_wt(lp, k, node.cout, g, cg_out);
+                // insert replaces (= evicts) any stale entry for this key
+                self.wt_cache.insert(key, WtEntry { fingerprint, wt, sw });
             }
         }
         Ok(())
@@ -151,7 +212,17 @@ impl Engine {
         // hold the graph by Arc so conv/dense can borrow &mut self
         // (caches) without cloning every node each batch
         let graph = Arc::clone(&self.graph);
-        for node in &graph.nodes {
+        // last consumer position per node id: activations are dropped
+        // right after their final consumer runs, so residual-heavy
+        // graphs hold only the live frontier instead of every
+        // intermediate for the whole pass
+        let mut last_use: HashMap<usize, usize> = HashMap::new();
+        for (pos, node) in graph.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                last_use.insert(inp, pos);
+            }
+        }
+        for (pos, node) in graph.nodes.iter().enumerate() {
             match node.kind {
                 NodeKind::Input => {}
                 NodeKind::Conv => {
@@ -205,7 +276,18 @@ impl Engine {
                     );
                 }
                 NodeKind::Output => {
-                    logits = vals.get(&node.inputs[0]).cloned();
+                    // take (not clone) when this is the input's last use
+                    logits = if last_use.get(&node.inputs[0]) == Some(&pos) {
+                        vals.remove(&node.inputs[0])
+                    } else {
+                        vals.get(&node.inputs[0]).cloned()
+                    };
+                }
+            }
+            // free every activation whose final consumer just ran
+            for &inp in &node.inputs {
+                if last_use.get(&inp) == Some(&pos) {
+                    vals.remove(&inp);
                 }
             }
         }
@@ -308,15 +390,17 @@ impl Engine {
             );
             debug_assert_eq!(k, kfull);
             debug_assert_eq!(m2, m);
-            // W^T (cg_out, K) for this group's columns (cached per OP)
+            // W^T (cg_out, K) for this group's columns (cached per OP);
+            // kernels overwrite `acc`, so one scratch serves every group
             let key = (op.name.clone(), node.name.clone(), g);
-            let (wt, sw) = self.wt_cache.get(&key).context("weight cache")?;
-            acc.resize(m * cg_out, 0);
+            let entry = self.wt_cache.get(&key).context("weight cache")?;
+            let (wt, sw) = (&entry.wt, &entry.sw);
             if mid == 0 {
-                lutmm::exact_matmul_corrected(&at, wt, m, k, cg_out, qin.zero_point, qw.zero_point, &mut acc);
+                self.kernel
+                    .exact_corrected(&at, wt, m, k, cg_out, qin.zero_point, qw.zero_point, &mut acc);
             } else {
                 let wlut = self.wluts[mid].as_ref().unwrap();
-                lutmm::lut_matmul_acc(&at, wt, wlut, m, k, cg_out, &mut acc);
+                self.kernel.matmul_acc(&at, wt, wlut, m, k, cg_out, &mut acc);
                 let sa = lutmm::row_code_sums(&at, m, k);
                 lutmm::apply_corrections(&mut acc, &sa, sw, m, k, cg_out, qin.zero_point, qw.zero_point);
             }
@@ -357,13 +441,15 @@ impl Engine {
         }
         // W^T (N, K): weights stored (K, N); cached per OP
         let key = (op.name.clone(), node.name.clone(), 0usize);
-        let (wt, sw) = self.wt_cache.get(&key).context("weight cache")?;
+        let entry = self.wt_cache.get(&key).context("weight cache")?;
+        let (wt, sw) = (&entry.wt, &entry.sw);
         let mut acc = vec![0i32; b * n];
         if mid == 0 {
-            lutmm::exact_matmul_corrected(&at, wt, b, k, n, qin.zero_point, qw.zero_point, &mut acc);
+            self.kernel
+                .exact_corrected(&at, wt, b, k, n, qin.zero_point, qw.zero_point, &mut acc);
         } else {
             let wlut = self.wluts[mid].as_ref().unwrap();
-            lutmm::lut_matmul_acc(&at, wt, wlut, b, k, n, &mut acc);
+            self.kernel.matmul_acc(&at, wt, wlut, b, k, n, &mut acc);
             let sa = lutmm::row_code_sums(&at, b, k);
             lutmm::apply_corrections(&mut acc, &sa, sw, b, k, n, qin.zero_point, qw.zero_point);
         }

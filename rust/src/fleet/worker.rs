@@ -54,21 +54,32 @@ struct GateState {
     draining: bool,
 }
 
+/// An in-flight read section of a [`Gate`], from [`Gate::enter`].  The
+/// count is decremented on drop, so a forward that *panics* (backend
+/// bug, malformed payload tripping an internal assert) unwinds the
+/// handler thread without leaving the in-flight count stuck nonzero —
+/// which would wedge every future drain barrier process-wide.
+struct GateSection<'a>(&'a Gate);
+
+impl Drop for GateSection<'_> {
+    fn drop(&mut self) {
+        let mut g = self.0.state.lock().unwrap();
+        g.inflight -= 1;
+        self.0.cv.notify_all();
+    }
+}
+
 impl Gate {
-    /// Begin a forward; blocks while a drain barrier is pending.
-    fn enter(&self) {
+    /// Begin a forward; blocks while a drain barrier is pending.  The
+    /// section ends when the returned handle drops (including by
+    /// unwind).
+    fn enter(&self) -> GateSection<'_> {
         let mut g = self.state.lock().unwrap();
         while g.draining {
             g = self.cv.wait(g).unwrap();
         }
         g.inflight += 1;
-    }
-
-    /// End a forward.
-    fn exit(&self) {
-        let mut g = self.state.lock().unwrap();
-        g.inflight -= 1;
-        self.cv.notify_all();
+        GateSection(self)
     }
 
     /// Run `f` once every in-flight forward has completed; new forwards
@@ -357,9 +368,9 @@ fn handle_conn<B, F>(
                     let message = format!("bad forward: {} elems for batch {batch}", payload.len());
                     Some((Frame::Err { message }, Vec::new()))
                 } else {
-                    shared.gate.enter();
+                    let section = shared.gate.enter();
                     let r = backend.forward(op_idx, &payload, batch);
-                    shared.gate.exit();
+                    drop(section);
                     match r {
                         Ok(logits) => {
                             shared.served.fetch_add(batch as u64, Ordering::AcqRel);
@@ -416,7 +427,7 @@ mod tests {
     fn gate_blocks_drain_until_inflight_work_exits() {
         let gate = Arc::new(Gate::default());
         let progress = Arc::new(AtomicU32::new(0));
-        gate.enter();
+        let section = gate.enter();
         let g2 = gate.clone();
         let p2 = progress.clone();
         let drainer = std::thread::spawn(move || {
@@ -424,7 +435,7 @@ mod tests {
         });
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(progress.load(Ordering::Acquire), 0, "drain ran with work in flight");
-        gate.exit();
+        drop(section);
         drainer.join().unwrap();
         assert_eq!(progress.load(Ordering::Acquire), 1);
     }
@@ -432,7 +443,7 @@ mod tests {
     #[test]
     fn gate_defers_new_entries_while_draining() {
         let gate = Arc::new(Gate::default());
-        gate.enter();
+        let section = gate.enter();
         let g2 = gate.clone();
         let drainer = std::thread::spawn(move || g2.drain(|| ()));
         let g3 = gate.clone();
@@ -440,17 +451,32 @@ mod tests {
         let e3 = entered.clone();
         std::thread::sleep(Duration::from_millis(10));
         let late = std::thread::spawn(move || {
-            g3.enter();
+            let s = g3.enter();
             e3.store(1, Ordering::Release);
-            g3.exit();
+            drop(s);
         });
         // the late entry must wait behind the pending drain
         std::thread::sleep(Duration::from_millis(20));
         assert_eq!(entered.load(Ordering::Acquire), 0, "entry slipped past a pending drain");
-        gate.exit();
+        drop(section);
         drainer.join().unwrap();
         late.join().unwrap();
         assert_eq!(entered.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn gate_survives_a_panicking_forward() {
+        // a forward that panics must still release its read section
+        // (RAII), or every future drain barrier wedges process-wide
+        let gate = Arc::new(Gate::default());
+        let g2 = gate.clone();
+        let panicker = std::thread::spawn(move || {
+            let _section = g2.enter();
+            panic!("backend blew up mid-forward");
+        });
+        assert!(panicker.join().is_err());
+        // the barrier must complete promptly despite the panic
+        gate.drain(|| ());
     }
 
     #[test]

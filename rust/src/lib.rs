@@ -22,7 +22,9 @@
 //!   * [`baselines`] ALWANN GA, homogeneous, gradient search, LVRM/PNAM/TPM
 //!   * [`plan`]      unified `Planner` trait + typed `OpPlan` artifact: one
 //!     planning API over the QoS-Nets search and every baseline mapper
-//!   * [`engine`]    native bit-exact LUT inference engine
+//!   * [`engine`]    native bit-exact LUT inference engine, with a
+//!     runtime-selected matmul kernel (`engine::lutmm::LutKernel`:
+//!     scalar / AVX2 gather / threaded M-tile sharding)
 //!   * `runtime`     PJRT loader/executor for the AOT HLO artifacts
 //!     (behind the `pjrt` feature; `--no-default-features` builds the
 //!     native + stub paths without the `xla_extension` archive)

@@ -306,6 +306,13 @@ impl OpPlan {
                 .get("relative_power")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(1.0);
+            // the power ladder feeds the QoS controller's sort and every
+            // budget comparison — refuse NaN/inf here, at load time,
+            // instead of serving a ladder that can never be selected
+            anyhow::ensure!(
+                relative_power.is_finite(),
+                "operating_points[{i}] ({name:?}): non-finite relative_power {relative_power}"
+            );
             let amap: HashMap<&str, usize> = match op.get("assignment") {
                 Some(Json::Obj(pairs)) => pairs
                     .iter()
@@ -582,7 +589,8 @@ pub trait Planner {
 }
 
 /// FNV-1a over the canonical config description (see
-/// [`Provenance::config_hash`]).
+/// [`Provenance::config_hash`]).  Uses the shared byte-wise form so
+/// hashes stay identical to the ones stamped into existing plans.
 fn config_hash(planner: &str, inputs: &PlanInputs) -> String {
     let desc = format!(
         "planner={planner};n={};scales={:?};seed={};layers={};muldb={}",
@@ -592,12 +600,7 @@ fn config_hash(planner: &str, inputs: &PlanInputs) -> String {
         inputs.layer_names.len(),
         inputs.db.len()
     );
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in desc.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0100_0000_01b3);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", crate::util::hash::fnv1a_bytes(desc.bytes()))
 }
 
 /// Assemble a plan from per-OP assignment rows — the shared tail of
@@ -960,6 +963,32 @@ mod tests {
             assert_eq!(e.table_index, i);
             assert_eq!(e.name, op.name);
             assert_eq!(e.power, op.relative_power);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_non_finite_power() {
+        use crate::util::json::Json;
+        let mk = |power: f64| {
+            Json::obj(vec![
+                ("version", Json::num(PLAN_VERSION as f64)),
+                ("experiment", Json::str("t")),
+                ("n_multipliers", Json::num(1.0)),
+                ("layer_names", Json::Arr(vec![Json::str("l0")])),
+                (
+                    "operating_points",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("name", Json::str("op0")),
+                        ("relative_power", Json::num(power)),
+                        ("assignment", Json::Obj(vec![("l0".to_string(), Json::num(0.0))])),
+                    ])]),
+                ),
+            ])
+        };
+        assert!(OpPlan::from_json(&mk(0.7)).is_ok());
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = OpPlan::from_json(&mk(bad)).unwrap_err().to_string();
+            assert!(err.contains("non-finite relative_power"), "{err}");
         }
     }
 

@@ -109,9 +109,14 @@ impl QosController {
     /// Entries are sorted internally by descending power; the original
     /// table indices are preserved in [`LadderEntry::table_index`] and
     /// used for every externally visible answer.
+    ///
+    /// Sorting uses `total_cmp`, so non-finite powers cannot panic here;
+    /// they are rejected upstream, at `OpPlan` load time (a NaN rung
+    /// would sort as "most accurate" but can never satisfy
+    /// `power <= budget`, so it is simply never selected).
     pub fn new(mut ladder: Vec<LadderEntry>, cfg: QosConfig) -> Self {
         assert!(!ladder.is_empty());
-        ladder.sort_by(|a, b| b.power.partial_cmp(&a.power).unwrap());
+        ladder.sort_by(|a, b| b.power.total_cmp(&a.power));
         // start at the most frugal OP until a budget arrives
         let current = ladder.len() - 1;
         QosController {
@@ -388,6 +393,26 @@ mod tests {
         assert_eq!(c.observe_with_mode(0.58, t), Some((2, SwitchMode::Immediate)));
         // steady budget: no switch, no mode
         assert_eq!(c.observe_with_mode(0.58, t), None);
+    }
+
+    #[test]
+    fn controller_survives_non_finite_powers() {
+        // a NaN rung (rejected at OpPlan load, but hand-built ladders
+        // can still carry one) must not panic the sort and must never
+        // be selected by a budget
+        let mut l = ladder();
+        l.push(LadderEntry { name: "broken".into(), power: f64::NAN, table_index: 3 });
+        let mut c = QosController::new(
+            l,
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        assert_eq!(c.observe(1.0, t), Some(0));
+        assert_eq!(c.observe(0.58, t), Some(2));
+        assert_ne!(c.current_table_index(), 3);
     }
 
     #[test]

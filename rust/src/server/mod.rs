@@ -218,17 +218,21 @@ impl ServerMetrics {
     }
 }
 
+/// Bit of [`Shared::op_word`] marking the last switch as `Immediate`.
+const OP_IMMEDIATE_FLAG: u64 = 1 << 63;
+
 /// State shared between the batcher, workers, supervisor and handle.
 struct Shared {
-    /// Current `OpTable` index; batches are stamped from this at
-    /// formation time.
-    current_op: AtomicUsize,
-    /// Whether the last OP switch was applied `Immediate` (true) or
-    /// through the draining barrier (false).  The retag policy only
+    /// Current `OpTable` index (batches are stamped from this at
+    /// formation time) packed with how the last switch was applied:
+    /// bit 63 set = `Immediate`, clear = draining barrier.  One word so
+    /// the retag policy reads a coherent (op, mode) pair — with two
+    /// separate atomics a worker could pair a stale Immediate flag
+    /// with a Drain switch's fresh index and retag a pre-barrier batch
+    /// the barrier had promised the old OP.  The retag policy only
     /// fires after an Immediate switch — a Drain switch *guarantees*
-    /// pre-barrier requests run under the old OP, so retagging them
-    /// would break that contract.
-    last_switch_immediate: AtomicBool,
+    /// pre-barrier requests run under the old OP.
+    op_word: AtomicU64,
     /// Requests submitted but not yet answered (queue-depth signal).
     inflight: AtomicUsize,
     /// Workers that completed `prepare` and are serving (supervisor
@@ -247,14 +251,26 @@ struct Shared {
 impl Shared {
     fn new(first_worker: usize) -> Self {
         Shared {
-            current_op: AtomicUsize::new(0),
-            last_switch_immediate: AtomicBool::new(false),
+            op_word: AtomicU64::new(0),
             inflight: AtomicUsize::new(0),
             live_workers: AtomicUsize::new(0),
             next_worker: AtomicUsize::new(first_worker),
             queue_watermark_us: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         }
+    }
+
+    /// Publish an OP switch: the new index + whether it was `Immediate`,
+    /// in one store (see [`Shared::op_word`]).
+    fn store_op(&self, idx: usize, immediate: bool) {
+        let word = idx as u64 | if immediate { OP_IMMEDIATE_FLAG } else { 0 };
+        self.op_word.store(word, Ordering::Release);
+    }
+
+    /// The coherent (current OP index, last-switch-was-Immediate) pair.
+    fn load_op(&self) -> (usize, bool) {
+        let word = self.op_word.load(Ordering::Acquire);
+        ((word & !OP_IMMEDIATE_FLAG) as usize, word & OP_IMMEDIATE_FLAG != 0)
     }
 }
 
@@ -453,10 +469,7 @@ impl<B: Backend + 'static> Server<B> {
     /// store; batches formed from here on are tagged with `idx`).
     pub fn set_operating_point(&self, idx: usize) {
         assert!(idx < self.ops.len());
-        self.shared.current_op.store(idx, Ordering::Release);
-        self.shared
-            .last_switch_immediate
-            .store(true, Ordering::Release);
+        self.shared.store_op(idx, true);
     }
 
     /// Switch the serving operating point under an explicit
@@ -488,7 +501,7 @@ impl<B: Backend + 'static> Server<B> {
 
     /// Current `OpTable` index batches are being tagged with.
     pub fn operating_point(&self) -> usize {
-        self.shared.current_op.load(Ordering::Acquire)
+        self.shared.load_op().0
     }
 
     /// The served operating points, in table order.
@@ -624,11 +637,13 @@ where
         // (strict formation-time tagging is kept in that direction).
         // The batch stays uniform either way.
         let mut retagged = false;
-        if ctx.retag_downgrades
-            && ctx.shared.last_switch_immediate.load(Ordering::Acquire)
-        {
-            let cur = ctx.shared.current_op.load(Ordering::Acquire);
-            if cur != op_idx
+        if ctx.retag_downgrades {
+            // one load: the (op, mode) pair is coherent, so a Drain
+            // switch landing between two separate reads can never be
+            // misattributed to an earlier Immediate switch
+            let (cur, immediate) = ctx.shared.load_op();
+            if immediate
+                && cur != op_idx
                 && ctx.ops.get(cur).relative_power < ctx.ops.get(op_idx).relative_power
             {
                 op_idx = cur;
@@ -715,7 +730,7 @@ fn flush_batch(
     }
     let batch = Batch {
         reqs: std::mem::take(pending),
-        op_idx: shared.current_op.load(Ordering::Acquire),
+        op_idx: shared.load_op().0,
         seq: *seq,
     };
     *seq += 1;
@@ -746,8 +761,7 @@ fn batcher_loop(
                     }
                     Ingress::Switch { idx, ack } => {
                         flush_batch(&mut pending, &out, &shared, &mut seq);
-                        shared.current_op.store(idx, Ordering::Release);
-                        shared.last_switch_immediate.store(false, Ordering::Release);
+                        shared.store_op(idx, false);
                         let _ = ack.send(());
                     }
                 }
@@ -777,8 +791,7 @@ fn batcher_loop(
                 // disarmed — Drain promises those batches the old OP)
                 flush_batch(&mut pending, &out, &shared, &mut seq);
                 deadline = None;
-                shared.current_op.store(idx, Ordering::Release);
-                shared.last_switch_immediate.store(false, Ordering::Release);
+                shared.store_op(idx, false);
                 let _ = ack.send(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -1067,7 +1080,7 @@ mod tests {
         assert_eq!(batch.reqs.len(), 3);
         assert_eq!(batch.op_idx, 0);
         // ...and the new OP is in effect for later batches
-        assert_eq!(shared.current_op.load(Ordering::Acquire), 1);
+        assert_eq!(shared.load_op().0, 1);
         let (r, _rx) = req(9.0);
         in_tx.send(Ingress::Req(r)).unwrap();
         let (ack_tx, ack_rx) = mpsc::channel();

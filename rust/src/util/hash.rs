@@ -1,0 +1,39 @@
+//! FNV-1a hashing, shared by every fingerprint in the codebase (plan
+//! `config_hash` provenance, the engine's weight-cache staleness tags).
+//! One home for the constants so a future widening touches one file.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+
+/// FNV-1a over a byte stream (the canonical formulation).
+pub fn fnv1a_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    bytes.into_iter().fold(FNV_OFFSET, |h, b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+}
+
+/// FNV-1a folding whole `u64` words per step — same constants, ~4-8x
+/// fewer multiplies than the byte form for wide integer payloads (the
+/// engine hashes weight-code vectors on a warm-ish path).  Not
+/// byte-compatible with [`fnv1a_bytes`]; pick one per use and stick
+/// with it.
+pub fn fnv1a_words(words: impl IntoIterator<Item = u64>) -> u64 {
+    words.into_iter().fold(FNV_OFFSET, |h, w| (h ^ w).wrapping_mul(FNV_PRIME))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_form_matches_known_vectors() {
+        // FNV-1a test vectors: empty input = offset basis, "a" = well-known
+        assert_eq!(fnv1a_bytes([]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_bytes(*b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn word_form_is_order_and_content_sensitive() {
+        assert_ne!(fnv1a_words([1u64, 2]), fnv1a_words([2u64, 1]));
+        assert_ne!(fnv1a_words([1u64, 2]), fnv1a_words([1u64, 3]));
+        assert_eq!(fnv1a_words([1u64, 2]), fnv1a_words([1u64, 2]));
+    }
+}

@@ -3,6 +3,7 @@
 //! which are unavailable in the offline build (DESIGN.md substitutions).
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

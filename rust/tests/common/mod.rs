@@ -155,3 +155,84 @@ pub fn build_tiny() -> (Arc<Graph>, Arc<MulDb>, OperatingPoint, Vec<f32>, Vec<f3
 pub fn stub_op(name: &str, relative_power: f64) -> OperatingPoint {
     qos_nets::backend::stub::stub_op(name, relative_power)
 }
+
+fn residual_grouped_graph_json() -> json::Json {
+    json::parse(
+        r#"{
+        "name": "resgrp", "input_shape": [4, 4, 2], "total_macs": 3896,
+        "nodes": [
+          {"id":0,"kind":"input","inputs":[],"name":"input","out_shape":[4,4,2]},
+          {"id":1,"kind":"conv","inputs":[0],"name":"c1","out_shape":[4,4,4],
+           "cin":2,"cout":4,"ksize":3,"stride":1,"pad":1,"groups":1,
+           "has_bn":false,"act":"relu","macs_per_out":18,"macs_total":1152,
+           "quant":{"in":{"scale":0.01,"zero_point":128},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":2,"kind":"conv","inputs":[1],"name":"c2","out_shape":[4,4,4],
+           "cin":4,"cout":4,"ksize":3,"stride":1,"pad":1,"groups":2,
+           "has_bn":false,"act":"relu","macs_per_out":18,"macs_total":1152,
+           "quant":{"in":{"scale":0.02,"zero_point":120},"w":{"scale":0.02,"zero_point":130}}},
+          {"id":3,"kind":"add","inputs":[1,2],"name":"res","out_shape":[4,4,4],"act":"relu"},
+          {"id":4,"kind":"gap","inputs":[3],"name":"gap","out_shape":[4]},
+          {"id":5,"kind":"dense","inputs":[4],"name":"fc","out_shape":[2],
+           "cin":4,"cout":2,"ksize":0,"stride":1,"pad":0,"groups":1,
+           "has_bn":false,"act":"none","macs_per_out":4,"macs_total":8,
+           "quant":{"in":{"scale":0.02,"zero_point":100},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":6,"kind":"output","inputs":[5],"name":"output","out_shape":[2]}
+        ]}"#,
+    )
+    .unwrap()
+}
+
+/// A residual fixture with a *grouped* conv: c1 feeds both c2 and the
+/// add node (multi-consumer activation), c2 runs groups=2.  Exercises
+/// the engine's grouped im2col path and the activation last-use
+/// dropping in `forward` — returns graph, family, exact OP, and a
+/// batch of two images.
+pub fn build_residual_grouped() -> (Arc<Graph>, Arc<MulDb>, OperatingPoint, Vec<f32>) {
+    let graph = Arc::new(Graph::from_json(&residual_grouped_graph_json()).unwrap());
+    let db = Arc::new(MulDb::generate());
+    let mut rng = qos_nets::util::rng::Rng::new(23);
+    let mut codes = |n: usize| -> Vec<i32> { (0..n).map(|_| rng.below(256) as i32).collect() };
+    let mut layers = HashMap::new();
+    // weight codes are stored (K, cout) row-major; K = kh*kw*cin/groups
+    layers.insert(
+        "c1".to_string(),
+        LayerParams {
+            w_codes: codes(3 * 3 * 2 * 4),
+            w_shape: vec![3, 3, 2, 4],
+            post_scale: vec![0.01 * 0.02; 4],
+            post_bias: vec![0.01; 4],
+        },
+    );
+    layers.insert(
+        "c2".to_string(),
+        LayerParams {
+            w_codes: codes(3 * 3 * 2 * 4),
+            w_shape: vec![3, 3, 2, 4],
+            post_scale: vec![0.02 * 0.02; 4],
+            post_bias: vec![-0.01; 4],
+        },
+    );
+    layers.insert(
+        "fc".to_string(),
+        LayerParams {
+            w_codes: codes(4 * 2),
+            w_shape: vec![4, 2],
+            post_scale: vec![0.02 * 0.02; 2],
+            post_bias: vec![0.0; 2],
+        },
+    );
+    let op = OperatingPoint {
+        name: "exact".into(),
+        assignment: [
+            ("c1".to_string(), 0usize),
+            ("c2".to_string(), 0usize),
+            ("fc".to_string(), 0usize),
+        ]
+        .into_iter()
+        .collect(),
+        params: ModelParams { layers },
+        relative_power: 1.0,
+    };
+    let images: Vec<f32> = (0..2 * 4 * 4 * 2).map(|_| rng.f64() as f32).collect();
+    (graph, db, op, images)
+}

@@ -71,6 +71,45 @@ fn engine_batch_invariance() {
 }
 
 #[test]
+fn repreparing_a_same_named_op_with_new_weights_evicts_the_stale_cache() {
+    // the wt_cache is keyed by (op, layer, group) but tagged with a
+    // weight-code fingerprint: a reloaded plan / full-retrain overlay
+    // that changes weights under the same OP name must not be served
+    // from the stale transposed codes
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut eng = Engine::new(graph.clone(), db.clone());
+    eng.prepare_op(&op).unwrap();
+    let before = eng.forward(&op, &images, 2).unwrap();
+
+    let mut overlaid = op.clone(); // same name, different weights
+    let lp = overlaid.params.layers.get_mut("c1").unwrap();
+    for c in lp.w_codes.iter_mut() {
+        *c = 255 - *c;
+    }
+    eng.prepare_op(&overlaid).unwrap();
+    let after = eng.forward(&overlaid, &images, 2).unwrap();
+    assert_ne!(before, after, "stale weight cache served the old codes");
+
+    // a fresh engine that never saw the original weights agrees
+    let mut fresh = Engine::new(graph, db);
+    assert_eq!(fresh.forward(&overlaid, &images, 2).unwrap(), after);
+}
+
+#[test]
+fn lazy_forward_detects_weight_flips_without_prepare() {
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut eng = Engine::new(graph, db);
+    let before = eng.forward(&op, &images, 2).unwrap();
+    let mut overlaid = op.clone();
+    let lp = overlaid.params.layers.get_mut("c1").unwrap();
+    for c in lp.w_codes.iter_mut() {
+        *c = 255 - *c;
+    }
+    let after = eng.forward(&overlaid, &images, 2).unwrap();
+    assert_ne!(before, after, "lazy cache path served stale codes");
+}
+
+#[test]
 fn engine_prepare_op_is_equivalent_to_lazy_caching() {
     let (graph, db, op, images, _, _) = build_tiny();
     let mut lazy = Engine::new(graph.clone(), db.clone());

@@ -1,0 +1,177 @@
+//! Cross-kernel bit-exactness: every registered [`LutKernel`] (scalar,
+//! AVX2 where the host has it, threaded over both) must agree with the
+//! naive LUT oracle on every shape — tail M-tiles, odd/even K (the
+//! unroll remainder), grouped convs, and whole `Backend::forward`
+//! passes across `--kernel` values.  Integer accumulation is exact, so
+//! "agree" means `assert_eq!`, not a tolerance.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{build_residual_grouped, build_tiny};
+use qos_nets::backend::{Backend, NativeBackend};
+use qos_nets::engine::lutmm::{self, LutKernel, ScalarKernel, ThreadedKernel, M_TILE};
+use qos_nets::engine::Engine;
+use qos_nets::muldb::MulDb;
+use qos_nets::util::rng::Rng;
+
+/// The naive oracle straight off the math: `out[m,n] = Σ_k lut[a, w]`.
+fn naive(a: &[i32], w: &[i32], lut: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for mm in 0..m {
+        for nn in 0..n {
+            let mut acc = 0;
+            for kk in 0..k {
+                acc += lut[(a[mm * k + kk] as usize) * 256 + w[kk * n + nn] as usize];
+            }
+            out[mm * n + nn] = acc;
+        }
+    }
+    out
+}
+
+fn transpose(x: &[i32], rows: usize, cols: usize) -> Vec<i32> {
+    let mut t = vec![0i32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = x[r * cols + c];
+        }
+    }
+    t
+}
+
+/// Every kernel under test: the host registry (scalar, avx2 when
+/// detected, threaded over the detected kernel) plus explicit threaded
+/// configurations that force shard-boundary edge cases.
+fn kernels_under_test() -> Vec<Arc<dyn LutKernel>> {
+    let mut out = lutmm::available_kernels();
+    for threads in [2usize, 3, 64] {
+        out.push(Arc::new(ThreadedKernel::new(Arc::new(ScalarKernel), threads)));
+        out.push(Arc::new(ThreadedKernel::new(lutmm::detect_kernel(), threads)));
+    }
+    out
+}
+
+#[test]
+fn every_kernel_matches_the_naive_oracle_across_the_shape_matrix() {
+    let db = MulDb::generate();
+    let mut rng = Rng::new(0xC0FFEE);
+    let kernels = kernels_under_test();
+    // deliberate edges: m around/above M_TILE (tail tiles), odd and
+    // even K (2-way unroll remainder), K=1, N=1, single row
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize),
+        (1, 7, 3),
+        (5, 2, 9),
+        (33, 17, 4),
+        (M_TILE - 1, 8, 6),
+        (M_TILE, 9, 5),
+        (M_TILE + 1, 10, 4),
+        (2 * M_TILE + 37, 11, 7),
+        (3 * M_TILE, 6, 3),
+    ];
+    // plus a random sweep
+    for _ in 0..6 {
+        shapes.push((1 + rng.below(700), 1 + rng.below(40), 1 + rng.below(24)));
+    }
+    for (m, k, n) in shapes {
+        let mid = 1 + rng.below(db.len() - 1);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.below(256) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.below(256) as i32).collect();
+        let at = transpose(&a, m, k);
+        let wt = transpose(&w, k, n);
+        let wlut = lutmm::transpose_lut(db.lut(mid));
+        let want = naive(&a, &w, db.lut(mid), m, k, n);
+        let (za, zw) = (128i32, 117i32);
+        let exact_want = {
+            let mut out = vec![0i32; m * n];
+            ScalarKernel.exact_corrected(&at, &wt, m, k, n, za, zw, &mut out);
+            out
+        };
+        for kernel in &kernels {
+            let mut got = vec![0i32; m * n];
+            kernel.matmul_acc(&at, &wt, &wlut, m, k, n, &mut got);
+            assert_eq!(got, want, "{}: lut path m{m} k{k} n{n} mid{mid}", kernel.name());
+            let mut exact = vec![0i32; m * n];
+            kernel.exact_corrected(&at, &wt, m, k, n, za, zw, &mut exact);
+            assert_eq!(exact, exact_want, "{}: exact path m{m} k{k} n{n}", kernel.name());
+        }
+    }
+}
+
+#[test]
+fn backend_forward_is_identical_across_kernel_flags() {
+    // the `--kernel` acceptance check: NativeBackend over each kernel
+    // produces bit-identical logits for every prepared OP, on both the
+    // exact fast path (multiplier 0) and the LUT path
+    let (graph, db, op, images, _, _) = build_tiny();
+    let mut approx = op.clone();
+    approx.name = "approx".into();
+    approx.assignment.insert("c1".to_string(), 9);
+    approx.relative_power = 0.6;
+    let ops = vec![op, approx];
+
+    let mut reference = NativeBackend::with_kernel(graph.clone(), db.clone(), Arc::new(ScalarKernel));
+    reference.prepare(&ops).unwrap();
+    let want: Vec<Vec<f32>> = (0..ops.len())
+        .map(|i| reference.forward(i, &images, 2).unwrap())
+        .collect();
+
+    for kernel in kernels_under_test() {
+        let name = kernel.name().to_string();
+        let mut be = NativeBackend::with_kernel(graph.clone(), db.clone(), kernel);
+        be.prepare(&ops).unwrap();
+        for (i, w) in want.iter().enumerate() {
+            let got = be.forward(i, &images, 2).unwrap();
+            assert_eq!(&got, w, "{name}: OP{i} logits diverged");
+        }
+    }
+}
+
+#[test]
+fn grouped_conv_and_residual_graph_agree_across_kernels() {
+    let (graph, db, op, images) = build_residual_grouped();
+    let mut approx = op.clone();
+    approx.name = "approx".into();
+    approx.assignment.insert("c2".to_string(), 9); // the grouped layer
+    approx.assignment.insert("fc".to_string(), 13);
+
+    let mut reference = Engine::with_kernel(graph.clone(), db.clone(), Arc::new(ScalarKernel));
+    let want_exact = reference.forward(&op, &images, 2).unwrap();
+    let want_approx = reference.forward(&approx, &images, 2).unwrap();
+    assert_ne!(want_exact, want_approx, "approx assignment had no effect");
+
+    for kernel in kernels_under_test() {
+        let name = kernel.name().to_string();
+        let mut eng = Engine::with_kernel(graph.clone(), db.clone(), kernel);
+        assert_eq!(eng.forward(&op, &images, 2).unwrap(), want_exact, "{name}: exact");
+        assert_eq!(eng.forward(&approx, &images, 2).unwrap(), want_approx, "{name}: approx");
+    }
+}
+
+#[test]
+fn residual_graph_batch_invariance_with_activation_dropping() {
+    // one batch of 4 == four batches of 1 on the multi-consumer graph:
+    // pins that the last-use activation dropping never frees a value a
+    // later consumer (the add node) still needs
+    let (graph, db, op, _) = build_residual_grouped();
+    let mut rng = Rng::new(31);
+    let elems = 4 * 4 * 2;
+    let images: Vec<f32> = (0..4 * elems).map(|_| rng.f64() as f32).collect();
+    let mut eng = Engine::with_kernel(graph, db, Arc::new(ScalarKernel));
+    let joint = eng.forward(&op, &images, 4).unwrap();
+    for b in 0..4 {
+        let single = eng.forward(&op, &images[b * elems..(b + 1) * elems], 1).unwrap();
+        assert_eq!(&joint[b * 2..(b + 1) * 2], &single[..], "batch member {b}");
+    }
+}
+
+#[test]
+fn default_kernel_is_always_available() {
+    // `--kernel auto` must resolve on every host (AVX2 or not)
+    let k = lutmm::detect_kernel();
+    assert!(!k.name().is_empty());
+    let d = lutmm::default_kernel();
+    assert!(!d.name().is_empty());
+}

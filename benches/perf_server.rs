@@ -48,13 +48,13 @@ fn elastic_stub_section() -> anyhow::Result<()> {
             let _ = rx.recv_timeout(Duration::from_secs(30));
         }
         let wall = t0.elapsed();
-        let m = server.shutdown();
+        let m = server.shutdown().snapshot();
         println!(
             "{:>12} {:>8} {:>10.1} {:>10.2} {:>10} {:>7}/{}",
             max_workers,
             n,
             wall.as_secs_f64() * 1e3,
-            m.latency.percentile_us(99.0) as f64 / 1e3,
+            m.latency.p99_us as f64 / 1e3,
             m.peak_workers,
             m.scale_ups,
             m.scale_downs
@@ -110,17 +110,17 @@ fn main() -> anyhow::Result<()> {
                 let _ = rx.recv_timeout(Duration::from_secs(20));
             }
             let wall = started.elapsed().as_secs_f64();
-            let m = server.shutdown();
+            let m = server.shutdown().snapshot();
             println!(
                 "{:>8} {:>10} {:>8.0} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>8.2}",
                 workers,
                 max_batch,
                 submitted as f64 / wall,
                 m.completed as f64 / wall,
-                m.latency.mean_us() / 1e3,
-                m.latency.percentile_us(50.0) as f64 / 1e3,
-                m.latency.percentile_us(99.0) as f64 / 1e3,
-                m.mean_batch()
+                m.latency.mean_us / 1e3,
+                m.latency.p50_us as f64 / 1e3,
+                m.latency.p99_us as f64 / 1e3,
+                m.mean_batch
             );
         }
     }
@@ -171,14 +171,14 @@ fn main() -> anyhow::Result<()> {
                 let _ = rx.recv_timeout(Duration::from_secs(20));
             }
         }
-        let m = server.shutdown();
+        let m = server.shutdown().snapshot();
         println!("per-OP latency attribution:");
-        for (i, h) in m.per_op_latency.iter().enumerate() {
+        for (i, o) in m.per_op.iter().enumerate() {
             println!(
                 "  OP{i}: {} requests  mean={:.2} ms  p99<={:.2} ms",
-                h.count(),
-                h.mean_us() / 1e3,
-                h.percentile_us(99.0) as f64 / 1e3
+                o.latency.count,
+                o.latency.mean_us / 1e3,
+                o.latency.p99_us as f64 / 1e3
             );
         }
     }

@@ -1,0 +1,159 @@
+//! Open-loop arrival traces: the scenario's arrival schedule expanded
+//! into a concrete, fully materialized list of (time, image-count,
+//! image-index) events *before* the run starts.
+//!
+//! Materializing up front is what makes runs replayable: the trace is a
+//! pure function of (scenario, seed, duration), its FNV-1a hash goes
+//! into the report's provenance block, and the same seed reproduces the
+//! same byte-identical trace on any machine — the load generator never
+//! consults the clock to decide *what* to send, only *when*.
+
+use crate::bench::scenario::{ArrivalProcess, Scenario};
+use crate::util::hash::fnv1a_words;
+use crate::util::rng::Rng;
+
+/// One arrival event: at `at_us` microseconds into the run, submit
+/// `count` copies drawn from pool image `image`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub at_us: u64,
+    pub count: u32,
+    pub image: u32,
+}
+
+/// Expand the scenario's arrival phases into a trace covering
+/// `duration_s` seconds (phases cycle if the duration outlives the
+/// schedule).  `image_pool` is the number of distinct images the
+/// deployment can serve; indices are sampled uniformly from it.
+///
+/// Determinism contract: identical `(scenario arrivals/batch_mix,
+/// seed, duration_s, image_pool)` inputs yield an identical trace.
+/// Three decorrelated PRNG streams are forked from the seed so adding
+/// a mix entry cannot perturb the arrival *times*.
+pub fn generate(sc: &Scenario, duration_s: f64, seed: u64, image_pool: u32) -> Vec<Arrival> {
+    let mut root = Rng::new(seed);
+    let mut gaps = root.fork(1);
+    let mut mix = root.fork(2);
+    let mut imgs = root.fork(3);
+
+    let horizon_us = (duration_s * 1e6) as u64;
+    let mut out = Vec::new();
+    let mut t_us = 0u64;
+    let mut phase = 0usize;
+    let mut phase_end_us = (sc.arrivals[0].dur_s * 1e6) as u64;
+    while t_us < horizon_us {
+        let p = sc.arrivals[phase % sc.arrivals.len()];
+        let events = match p.process {
+            ArrivalProcess::Burst { size } => size,
+            _ => 1,
+        };
+        for _ in 0..events {
+            out.push(Arrival {
+                at_us: t_us,
+                count: sample_mix(sc, &mut mix),
+                image: imgs.below(image_pool as usize) as u32,
+            });
+        }
+        let gap_s = match p.process {
+            ArrivalProcess::Poisson => gaps.exp(p.rate_rps),
+            ArrivalProcess::Uniform => 1.0 / p.rate_rps,
+            ArrivalProcess::Burst { size } => size as f64 / p.rate_rps,
+        };
+        // floor of 1 us so a pathological rate cannot stall the clock
+        t_us += ((gap_s * 1e6) as u64).max(1);
+        while t_us >= phase_end_us {
+            phase += 1;
+            phase_end_us += (sc.arrivals[phase % sc.arrivals.len()].dur_s * 1e6) as u64;
+        }
+    }
+    out
+}
+
+/// Weighted pick from the batch-size mix.
+fn sample_mix(sc: &Scenario, rng: &mut Rng) -> u32 {
+    let total: f64 = sc.batch_mix.iter().map(|m| m.weight).sum();
+    let mut x = rng.f64() * total;
+    for m in &sc.batch_mix {
+        x -= m.weight;
+        if x <= 0.0 {
+            return m.size as u32;
+        }
+    }
+    sc.batch_mix.last().map(|m| m.size as u32).unwrap_or(1)
+}
+
+/// FNV-1a over the trace's (at_us, count, image) triples — the
+/// provenance fingerprint recorded in `BENCH_*.json`.
+pub fn trace_hash(trace: &[Arrival]) -> u64 {
+    fnv1a_words(
+        trace
+            .iter()
+            .flat_map(|a| [a.at_us, a.count as u64, a.image as u64]),
+    )
+}
+
+/// Offered images across the whole trace (sum of counts).
+pub fn offered_images(trace: &[Arrival]) -> u64 {
+    trace.iter().map(|a| a.count as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::builtin;
+
+    #[test]
+    fn same_seed_means_identical_trace_and_hash() {
+        let sc = builtin("steady_state").unwrap();
+        let a = generate(&sc, 2.0, 7, 16);
+        let b = generate(&sc, 2.0, 7, 16);
+        assert_eq!(a, b);
+        assert_eq!(trace_hash(&a), trace_hash(&b));
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let sc = builtin("steady_state").unwrap();
+        let a = generate(&sc, 2.0, 7, 16);
+        let b = generate(&sc, 2.0, 8, 16);
+        assert_ne!(trace_hash(&a), trace_hash(&b));
+    }
+
+    #[test]
+    fn uniform_arrivals_tick_like_a_metronome() {
+        let sc = builtin("ladder_thrash").unwrap(); // uniform 200 rps
+        let trace = generate(&sc, 1.0, 5, 16);
+        let gap = trace[1].at_us - trace[0].at_us;
+        assert_eq!(gap, 5_000, "200 rps -> 5 ms gaps");
+        for w in trace.windows(2) {
+            assert_eq!(w[1].at_us - w[0].at_us, gap);
+        }
+    }
+
+    #[test]
+    fn burst_phases_emit_simultaneous_fronts() {
+        let sc = builtin("incast_burst").unwrap(); // bursts of 48
+        let trace = generate(&sc, 2.0, 5, 16);
+        let first_at = trace[0].at_us;
+        let front: Vec<_> = trace.iter().take_while(|a| a.at_us == first_at).collect();
+        assert_eq!(front.len(), 48);
+    }
+
+    #[test]
+    fn phases_cycle_when_the_duration_outlives_the_schedule() {
+        let sc = builtin("steady_state").unwrap(); // single 10 s phase
+        let trace = generate(&sc, 25.0, 7, 16);
+        let last = trace.last().unwrap().at_us;
+        assert!(last >= 24_000_000, "trace should reach ~25 s, got {last} us");
+    }
+
+    #[test]
+    fn mix_sampling_respects_the_declared_sizes() {
+        let sc = builtin("steady_state").unwrap(); // sizes 1 and 4
+        let trace = generate(&sc, 3.0, 7, 16);
+        assert!(trace.iter().all(|a| a.count == 1 || a.count == 4));
+        assert!(trace.iter().any(|a| a.count == 1));
+        assert!(trace.iter().any(|a| a.count == 4));
+    }
+}

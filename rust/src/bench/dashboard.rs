@@ -1,0 +1,110 @@
+//! Live ANSI terminal dashboard for `qos-nets bench --dashboard`.
+//!
+//! Plain escape-code rendering (cursor-up + clear-line), no terminal
+//! crate: a fixed block of lines is redrawn in place once per sampling
+//! interval, with a unicode sparkline of recent throughput.  Purely
+//! additive — the recorded report is identical with or without it.
+
+use crate::bench::report::Interval;
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+/// Sparkline width (most recent intervals shown).
+const SPARK_WIDTH: usize = 30;
+/// Lines the panel occupies (header + spark + latency + pool).
+const PANEL_LINES: usize = 4;
+
+/// Redraws a small metrics panel in place.
+pub struct Dashboard {
+    drawn_once: bool,
+}
+
+impl Default for Dashboard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dashboard {
+    pub fn new() -> Self {
+        Dashboard { drawn_once: false }
+    }
+
+    /// Render the panel for the newest interval.  `history` is the full
+    /// interval list so far (newest last); `op_name` names the rung in
+    /// force at the snapshot.
+    pub fn render(&mut self, scenario: &str, history: &[Interval], op_name: &str) {
+        let Some(snap) = history.last() else {
+            return;
+        };
+        if self.drawn_once {
+            // move back to the top of the panel and overwrite it
+            print!("\x1b[{PANEL_LINES}A");
+        }
+        self.drawn_once = true;
+        let clear = "\x1b[2K";
+        println!(
+            "{clear}bench {scenario}  t={:>6.1}s  op={} ({op_name})  budget={:.2}",
+            snap.t_s, snap.op, snap.budget
+        );
+        println!("{clear}  {:>8.1} img/s  {}", snap.img_per_s, sparkline(history));
+        println!(
+            "{clear}  p99<={:.2} ms (cumulative)  inflight={}",
+            snap.p99_us as f64 / 1e3,
+            snap.inflight
+        );
+        println!(
+            "{clear}  workers={}  submitted={}  completed={}",
+            snap.workers, snap.submitted, snap.completed
+        );
+    }
+
+    /// Leave the panel on screen and move on (end of run).
+    pub fn finish(&mut self) {
+        if self.drawn_once {
+            println!();
+        }
+    }
+}
+
+/// Throughput sparkline over the most recent intervals, scaled to the
+/// window's own maximum.
+fn sparkline(history: &[Interval]) -> String {
+    let window = &history[history.len().saturating_sub(SPARK_WIDTH)..];
+    let max = window.iter().map(|i| i.img_per_s).fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return SPARK[0].to_string().repeat(window.len().max(1));
+    }
+    window
+        .iter()
+        .map(|i| {
+            let level = (i.img_per_s / max * (SPARK.len() - 1) as f64).round() as usize;
+            SPARK[level.min(SPARK.len() - 1)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(img_per_s: f64) -> Interval {
+        Interval { img_per_s, ..Default::default() }
+    }
+
+    #[test]
+    fn sparkline_scales_to_the_window_max() {
+        let hist: Vec<Interval> = [0.0, 50.0, 100.0].into_iter().map(iv).collect();
+        let s: Vec<char> = sparkline(&hist).chars().collect();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], SPARK[0]);
+        assert_eq!(s[2], SPARK[7]);
+    }
+
+    #[test]
+    fn sparkline_windows_long_histories_and_survives_all_zero() {
+        let hist: Vec<Interval> = (0..100).map(|i| iv(i as f64)).collect();
+        assert_eq!(sparkline(&hist).chars().count(), SPARK_WIDTH);
+        let flat: Vec<Interval> = (0..3).map(|_| iv(0.0)).collect();
+        assert_eq!(sparkline(&flat).chars().count(), 3);
+    }
+}

@@ -1,0 +1,428 @@
+//! The bench run loop: spin up the deployment a scenario describes,
+//! replay its materialized arrival trace open-loop against the elastic
+//! server, walk the OP ladder from the scenario's budget source, and
+//! condense everything observed into a [`BenchReport`].
+//!
+//! One generic loop ([`run_on`]) serves every deployment shape — the
+//! native synthetic model, the delayed stub, and a loopback fleet of
+//! stub workers — exactly like the `serve` command's `drive`, so the
+//! harness measures the same code paths production serving uses.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::backend::{Backend, NativeBackend, OpTable, StubBackend};
+use crate::bench::arrivals::{self, Arrival};
+use crate::bench::dashboard::Dashboard;
+use crate::bench::report::{
+    BenchReport, FleetReport, FleetWorkerReport, Interval, OpReport, Provenance, Scaling,
+    SwitchRecord, Switches, Throughput, REPORT_VERSION,
+};
+use crate::bench::scenario::{BackendKind, EventKind, QosSource, Scenario};
+use crate::bench::synthetic;
+use crate::fleet::worker::{self, WorkerHandle, WorkerOptions};
+use crate::fleet::{FleetBackend, FleetStats};
+use crate::qos::envsim::{EnvConfig, EnvEvent, EnvSimulator};
+use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
+use crate::server::{BatcherConfig, Server};
+
+/// CLI-level overrides for one bench run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    /// Replaces the scenario's seed (recorded in provenance).
+    pub seed: Option<u64>,
+    /// Replaces the scenario's duration (arrival phases cycle).
+    pub secs: Option<f64>,
+    /// Render the live ANSI dashboard while running.
+    pub dashboard: bool,
+}
+
+/// Where each tick's power budget comes from at run time.
+enum BudgetSource {
+    Constant(f64),
+    /// Pre-sampled synthetic trace, one value per tick.
+    Trace(Vec<f64>),
+    /// Live simulator advanced `scale` sim-seconds per wall-second.
+    Env(Box<EnvSimulator>, f64),
+}
+
+impl BudgetSource {
+    fn build(sc: &Scenario, seed: u64, total_ticks: usize) -> BudgetSource {
+        match &sc.qos.source {
+            QosSource::Constant(b) => BudgetSource::Constant(*b),
+            QosSource::Trace(kind) => BudgetSource::Trace(budget_trace(kind, total_ticks, seed)),
+            QosSource::Env => {
+                let sim = EnvSimulator::new(EnvConfig { seed, ..EnvConfig::default() });
+                BudgetSource::Env(Box::new(sim), sc.qos.env_time_scale)
+            }
+        }
+    }
+
+    /// The budget for tick `i`; `power_frac` is the relative power of
+    /// the OP currently in force (drains the simulated battery).
+    fn sample(&mut self, i: usize, tick_s: f64, power_frac: f64) -> f64 {
+        match self {
+            BudgetSource::Constant(b) => *b,
+            BudgetSource::Trace(v) => v[i.min(v.len() - 1)],
+            BudgetSource::Env(sim, scale) => sim.step(tick_s * *scale, power_frac),
+        }
+    }
+}
+
+/// Fleet control plane + spawned loopback workers (teardown handle).
+struct FleetRig {
+    control: FleetBackend,
+    stats: FleetStats,
+    handles: Vec<WorkerHandle>,
+}
+
+/// Everything [`run_on`] needs besides the server itself.
+struct RunCtx<'a> {
+    sc: &'a Scenario,
+    seed: u64,
+    duration_s: f64,
+    dashboard: bool,
+    pool: Vec<f32>,
+    elems: usize,
+}
+
+/// Execute one scenario end to end and return its report.
+pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
+    sc.validate()?;
+    let seed = opts.seed.unwrap_or(sc.seed);
+    let duration_s = opts.secs.unwrap_or(sc.duration_s);
+    anyhow::ensure!(
+        duration_s.is_finite() && duration_s > 0.0,
+        "bench duration must be finite and > 0"
+    );
+    let cfg = batcher_config(sc);
+
+    match sc.deployment.backend {
+        BackendKind::Native => {
+            let (graph, db, ops) = synthetic::native_ladder();
+            let (pool, elems) = synthetic::native_image_pool(seed);
+            let server = Server::start(
+                move |_w| Ok(NativeBackend::new(graph.clone(), db.clone())),
+                OpTable::new(ops),
+                cfg,
+            )?;
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            run_on(ctx, server, None)
+        }
+        BackendKind::Stub if sc.deployment.fleet.is_empty() => {
+            let delay = Duration::from_micros(sc.deployment.stub_delay_us);
+            let (pool, elems) = synthetic::stub_image_pool();
+            let server = Server::start(
+                move |_w| Ok(StubBackend::new(synthetic::STUB_CLASSES).with_delay(delay)),
+                OpTable::new(synthetic::stub_ladder()),
+                cfg,
+            )?;
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            run_on(ctx, server, None)
+        }
+        BackendKind::Stub => {
+            let rig_ops = synthetic::stub_ladder();
+            let mut handles = Vec::new();
+            let mut addrs = Vec::new();
+            for (i, w) in sc.deployment.fleet.iter().enumerate() {
+                let listener =
+                    TcpListener::bind("127.0.0.1:0").context("binding loopback fleet worker")?;
+                addrs.push(listener.local_addr()?.to_string());
+                let delay = Duration::from_micros(w.delay_us);
+                let wopts = WorkerOptions::new(format!("bench-w{i}"), "").heartbeat(
+                    Duration::from_millis(w.hb_interval_ms),
+                    Duration::from_millis(w.hb_timeout_ms),
+                );
+                handles.push(worker::spawn_with(listener, wopts, rig_ops.clone(), move |_c| {
+                    Ok(StubBackend::new(synthetic::STUB_CLASSES).with_delay(delay))
+                })?);
+            }
+            let stats = FleetStats::default();
+            let control = FleetBackend::connect_with(&addrs, stats.clone())?;
+            let st = stats.clone();
+            let server = Server::start(
+                move |_w| FleetBackend::connect_with(&addrs, st.clone()),
+                OpTable::new(rig_ops),
+                cfg,
+            )?;
+            let (pool, elems) = synthetic::stub_image_pool();
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            run_on(ctx, server, Some(FleetRig { control, stats, handles }))
+        }
+    }
+}
+
+fn batcher_config(sc: &Scenario) -> BatcherConfig {
+    let d = &sc.deployment;
+    BatcherConfig {
+        max_batch: d.max_batch,
+        max_wait: Duration::from_millis(d.max_wait_ms),
+        workers: d.workers,
+        min_workers: d.min_workers,
+        max_workers: d.max_workers,
+        retag_downgrades: d.retag_downgrades,
+        ..BatcherConfig::default()
+    }
+}
+
+/// The measurement loop, written once for every backend.
+fn run_on<B: Backend + 'static>(
+    ctx: RunCtx<'_>,
+    server: Server<B>,
+    mut fleet: Option<FleetRig>,
+) -> Result<BenchReport> {
+    let sc = ctx.sc;
+    let trace = arrivals::generate(sc, ctx.duration_s, ctx.seed, synthetic::POOL_IMAGES as u32);
+    let tick = Duration::from_millis(sc.tick_ms);
+    let tick_s = sc.tick_ms as f64 / 1000.0;
+    let total_ticks = (ctx.duration_s * 1000.0 / sc.tick_ms as f64).ceil() as usize;
+    let ticks_per_interval = (sc.interval_ms / sc.tick_ms) as usize;
+
+    let mut controller = QosController::new(
+        server.op_table().ladder(),
+        QosConfig {
+            upgrade_margin: sc.qos.upgrade_margin,
+            min_dwell: Duration::from_millis(sc.qos.min_dwell_ms),
+        },
+    );
+    let mut source = BudgetSource::build(sc, ctx.seed, total_ticks);
+    let powers: Vec<f64> = server.ops().iter().map(|o| o.relative_power).collect();
+    let op_names: Vec<String> = server.ops().iter().map(|o| o.name.clone()).collect();
+
+    // scripted events, time-sorted, consumed front to back
+    let mut events = sc.events.clone();
+    events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    let mut next_event = 0usize;
+
+    let mut timeline: Vec<SwitchRecord> = Vec::new();
+    let mut receivers = Vec::new();
+    let mut intervals: Vec<Interval> = Vec::new();
+    let mut dash = Dashboard::new();
+    let mut submitted = 0u64;
+    let mut next_arrival = 0usize;
+    let mut last_completed = 0u64;
+    let mut budget = 1.0f64;
+    let started = Instant::now();
+
+    for i in 0..total_ticks {
+        let t_s = i as f64 * tick_s;
+
+        // 1. scripted events due this tick
+        while next_event < events.len() && events[next_event].at_s <= t_s {
+            match events[next_event].kind {
+                EventKind::Budget(b) => {
+                    if let BudgetSource::Constant(cur) = &mut source {
+                        *cur = b;
+                    }
+                }
+                EventKind::SetOp { op, drain } => {
+                    let mode = if drain { SwitchMode::Drain } else { SwitchMode::Immediate };
+                    if let Some(rig) = fleet.as_mut() {
+                        rig.control.set_operating_point(op, mode)?;
+                    }
+                    server.set_operating_point_with(op, mode)?;
+                    timeline.push(SwitchRecord {
+                        t_s,
+                        op,
+                        mode: mode_tag(mode).to_string(),
+                        forced: true,
+                    });
+                }
+                EventKind::BatteryDrop(delta) => {
+                    apply_env(&mut source, EnvEvent::BatteryDrop { delta })
+                }
+                EventKind::ThermalSpike(delta_c) => {
+                    apply_env(&mut source, EnvEvent::ThermalSpike { delta_c })
+                }
+                EventKind::HarvestScale(factor) => {
+                    apply_env(&mut source, EnvEvent::HarvestScale { factor })
+                }
+            }
+            next_event += 1;
+        }
+
+        // 2. budget sample + controller walk (fleet hears first, so a
+        //    drained upgrade is acked fleet-wide before the local flip)
+        budget = source.sample(i, tick_s, powers[server.operating_point()]);
+        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
+            if let Some(rig) = fleet.as_mut() {
+                rig.control.set_operating_point(idx, mode)?;
+            }
+            server.set_operating_point_with(idx, mode)?;
+            timeline.push(SwitchRecord {
+                t_s,
+                op: idx,
+                mode: mode_tag(mode).to_string(),
+                forced: false,
+            });
+        }
+
+        // 3. replay arrivals due before this tick's deadline
+        let deadline = started + tick * (i as u32 + 1);
+        loop {
+            let now = Instant::now();
+            let elapsed_us = now.duration_since(started).as_micros() as u64;
+            while next_arrival < trace.len() && trace[next_arrival].at_us <= elapsed_us {
+                let a: Arrival = trace[next_arrival];
+                let at = a.image as usize * ctx.elems;
+                let img = &ctx.pool[at..at + ctx.elems];
+                for _ in 0..a.count {
+                    receivers.push(server.submit(img.to_vec())?);
+                    submitted += 1;
+                }
+                next_arrival += 1;
+            }
+            if now >= deadline {
+                break;
+            }
+            let mut sleep = deadline - now;
+            if next_arrival < trace.len() {
+                let next_at = started + Duration::from_micros(trace[next_arrival].at_us);
+                if next_at <= now {
+                    continue; // more arrivals already due
+                }
+                sleep = sleep.min(next_at - now);
+            }
+            std::thread::sleep(sleep.min(Duration::from_millis(5)));
+        }
+
+        // 4. interval snapshot
+        if (i + 1) % ticks_per_interval == 0 || i + 1 == total_ticks {
+            let m = server.metrics();
+            let interval_s = if (i + 1) % ticks_per_interval == 0 {
+                ticks_per_interval as f64 * tick_s
+            } else {
+                ((i + 1) % ticks_per_interval) as f64 * tick_s
+            };
+            let snap = Interval {
+                t_s: (i + 1) as f64 * tick_s,
+                img_per_s: (m.completed - last_completed) as f64 / interval_s,
+                submitted,
+                completed: m.completed,
+                inflight: server.inflight(),
+                workers: server.live_workers(),
+                op: server.operating_point(),
+                budget,
+                p99_us: m.latency.percentile_us(99.0),
+            };
+            last_completed = m.completed;
+            intervals.push(snap);
+            if ctx.dashboard {
+                dash.render(&sc.name, &intervals, &op_names[snap.op]);
+            }
+        }
+    }
+
+    // drain: wait for every outstanding response
+    let mut ok = 0u64;
+    for rx in receivers {
+        if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+            ok += 1;
+        }
+    }
+    if ctx.dashboard {
+        dash.finish();
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let final_workers = server.live_workers();
+    let m = server.shutdown().snapshot();
+
+    let fleet_report = if let Some(mut rig) = fleet.take() {
+        rig.control.shutdown_fleet();
+        let (workers, requeues, evictions) = rig.stats.snapshot();
+        for h in rig.handles {
+            h.join();
+        }
+        let workers = workers
+            .into_iter()
+            .map(|(addr, w)| FleetWorkerReport {
+                addr,
+                requests: w.requests,
+                batches: w.batches,
+                errors: w.errors,
+                mean_latency_us: w.mean_latency_us(),
+                evicted: w.evicted,
+            })
+            .collect();
+        Some(FleetReport { requeues, evictions, workers })
+    } else {
+        None
+    };
+
+    let per_op = m
+        .per_op
+        .iter()
+        .enumerate()
+        .map(|(i, o)| OpReport {
+            index: i,
+            name: op_names[i].clone(),
+            power: powers[i],
+            requests: o.requests,
+            latency: o.latency,
+        })
+        .collect();
+    let drain = timeline.iter().filter(|r| r.mode == "drain").count() as u64;
+    let forced = timeline.iter().filter(|r| r.forced).count() as u64;
+    let created_unix = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+
+    Ok(BenchReport {
+        version: REPORT_VERSION,
+        scenario: sc.name.clone(),
+        description: sc.description.clone(),
+        provenance: Provenance {
+            seed: ctx.seed,
+            config_hash: format!("{:016x}", sc.config_hash()),
+            trace_hash: format!("{:016x}", arrivals::trace_hash(&trace)),
+            created_unix,
+            generator: format!("qos-nets bench {}", env!("CARGO_PKG_VERSION")),
+        },
+        duration_s: wall,
+        throughput: Throughput {
+            submitted,
+            completed: m.completed,
+            ok,
+            img_per_s: m.completed as f64 / wall.max(1e-9),
+            batches: m.batches,
+            mean_batch: m.mean_batch,
+        },
+        latency: m.latency,
+        queue: m.queue,
+        per_op,
+        switches: Switches {
+            total: timeline.len() as u64,
+            drain,
+            immediate: timeline.len() as u64 - drain,
+            forced,
+            budget_violations: controller.budget_violations,
+            retagged_batches: m.retagged_batches,
+            timeline,
+        },
+        scaling: Scaling {
+            scale_ups: m.scale_ups,
+            scale_downs: m.scale_downs,
+            spawn_failures: m.spawn_failures,
+            peak_workers: m.peak_workers,
+            final_workers,
+        },
+        fleet: fleet_report,
+        intervals,
+    })
+}
+
+fn mode_tag(mode: SwitchMode) -> &'static str {
+    match mode {
+        SwitchMode::Drain => "drain",
+        SwitchMode::Immediate => "immediate",
+    }
+}
+
+fn apply_env(source: &mut BudgetSource, event: EnvEvent) {
+    if let BudgetSource::Env(sim, _) = source {
+        sim.apply(event);
+    }
+}

@@ -1,0 +1,33 @@
+//! Scenario-driven load harness: `qos-nets bench`.
+//!
+//! Answers "how does the serving stack behave under *this* load
+//! pattern?" with a recorded, replayable artifact instead of an
+//! anecdote.  The moving parts:
+//!
+//!   * [`scenario`] — the declarative JSON schema (arrival process,
+//!     batch mix, deployment shape, scripted QoS/environment events)
+//!     plus six built-in scenarios covering the interesting regimes;
+//!   * [`arrivals`] — scenarios expand into a fully materialized,
+//!     seeded arrival trace before the run, so identical seeds replay
+//!     identical request streams (the trace hash lands in provenance);
+//!   * [`synthetic`] — self-contained deployments: a tiny native model
+//!     with a three-rung multiplier ladder, a delayed stub, or a
+//!     loopback fleet of stub workers — no on-disk artifacts needed;
+//!   * [`driver`] — one generic measurement loop over [`crate::server`]
+//!     replaying the trace open-loop while the QoS controller walks the
+//!     ladder from the scenario's budget source;
+//!   * [`report`] — the versioned `BENCH_<scenario>.json` perf record
+//!     (throughput, per-OP quantiles, switch timeline, scale events,
+//!     per-worker attribution) CI stores as a trend artifact;
+//!   * [`dashboard`] — optional live ANSI panel (`--dashboard`).
+
+pub mod arrivals;
+pub mod dashboard;
+pub mod driver;
+pub mod report;
+pub mod scenario;
+pub mod synthetic;
+
+pub use driver::{run_scenario, BenchOpts};
+pub use report::{BenchReport, REPORT_VERSION};
+pub use scenario::{builtin, Scenario, BUILTIN_NAMES};

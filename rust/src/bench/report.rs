@@ -1,0 +1,592 @@
+//! `BENCH_<scenario>.json`: the machine-readable perf-trajectory
+//! record one bench run emits.
+//!
+//! The report is versioned ([`REPORT_VERSION`]) and carries full
+//! provenance — seed, a hash of the exact scenario config, and a hash
+//! of the materialized arrival trace — so two reports are comparable
+//! iff their provenance matches.  [`BenchReport::from_json`] validates
+//! as strictly as the scenario parser: CI trend tooling should fail
+//! loudly on a schema drift, not chart garbage.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::LatencySummary;
+
+/// Bump on any incompatible schema change to the report JSON.
+pub const REPORT_VERSION: u64 = 1;
+
+/// Everything needed to decide whether two reports are comparable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    pub seed: u64,
+    /// Hex FNV-1a of the canonical scenario JSON.
+    pub config_hash: String,
+    /// Hex FNV-1a of the materialized arrival trace.
+    pub trace_hash: String,
+    /// Wall-clock seconds since the Unix epoch at run end.
+    pub created_unix: u64,
+    /// Tool + version string, e.g. `qos-nets bench 0.1.0`.
+    pub generator: String,
+}
+
+/// Whole-run throughput counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Throughput {
+    /// Images submitted by the load generator.
+    pub submitted: u64,
+    /// Images the server completed (from its own metrics).
+    pub completed: u64,
+    /// Responses actually received by the generator before the drain
+    /// timeout.
+    pub ok: u64,
+    pub img_per_s: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+}
+
+/// Per-rung serving slice: requests + latency under one ladder index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpReport {
+    pub index: usize,
+    pub name: String,
+    pub power: f64,
+    pub requests: u64,
+    pub latency: LatencySummary,
+}
+
+/// One OP switch as it happened, for replaying the ladder walk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchRecord {
+    pub t_s: f64,
+    /// Destination `OpTable` index.
+    pub op: usize,
+    /// `"drain"` or `"immediate"`.
+    pub mode: String,
+    /// True for scripted `set_op` events (bypassed the controller).
+    pub forced: bool,
+}
+
+/// Ladder-walk counters plus the full switch timeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Switches {
+    pub total: u64,
+    pub drain: u64,
+    pub immediate: u64,
+    pub forced: u64,
+    pub budget_violations: u64,
+    pub retagged_batches: u64,
+    pub timeline: Vec<SwitchRecord>,
+}
+
+/// Elastic-pool activity over the run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Scaling {
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub spawn_failures: u64,
+    pub peak_workers: usize,
+    pub final_workers: usize,
+}
+
+/// Per-remote-worker attribution when the run served through a fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetWorkerReport {
+    pub addr: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub evicted: bool,
+}
+
+/// Fleet-level counters (absent for in-process deployments).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetReport {
+    pub requeues: u64,
+    pub evictions: u64,
+    pub workers: Vec<FleetWorkerReport>,
+}
+
+/// One sampling-interval snapshot: the trajectory the dashboard draws
+/// and trend tooling charts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Interval {
+    /// Interval end, seconds into the run.
+    pub t_s: f64,
+    /// Completion rate over this interval.
+    pub img_per_s: f64,
+    /// Cumulative counters at the interval boundary.
+    pub submitted: u64,
+    pub completed: u64,
+    pub inflight: usize,
+    pub workers: usize,
+    /// Ladder index in force at the boundary.
+    pub op: usize,
+    /// Budget sampled at the boundary.
+    pub budget: f64,
+    /// Cumulative p99, microseconds (log2-bucket upper bound).
+    pub p99_us: u64,
+}
+
+/// The full record of one bench run; see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub version: u64,
+    pub scenario: String,
+    pub description: String,
+    pub provenance: Provenance,
+    /// Wall-clock run length, seconds.
+    pub duration_s: f64,
+    pub throughput: Throughput,
+    /// End-to-end latency over all completed requests.
+    pub latency: LatencySummary,
+    /// Queue (submit -> batch formation) latency.
+    pub queue: LatencySummary,
+    pub per_op: Vec<OpReport>,
+    pub switches: Switches,
+    pub scaling: Scaling,
+    pub fleet: Option<FleetReport>,
+    pub intervals: Vec<Interval>,
+}
+
+fn summary_to_json(s: &LatencySummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("mean_us", Json::num(s.mean_us)),
+        ("p50_us", Json::num(s.p50_us as f64)),
+        ("p95_us", Json::num(s.p95_us as f64)),
+        ("p99_us", Json::num(s.p99_us as f64)),
+        ("max_us", Json::num(s.max_us as f64)),
+    ])
+}
+
+fn summary_from_json(v: &Json, what: &str) -> Result<LatencySummary> {
+    let f = |key: &str| -> Result<f64> {
+        v.get(key)
+            .and_then(|x| x.as_f64())
+            .with_context(|| format!("report: {what}: missing or non-numeric {key:?}"))
+    };
+    Ok(LatencySummary {
+        count: f("count")? as u64,
+        mean_us: f("mean_us")?,
+        p50_us: f("p50_us")? as u64,
+        p95_us: f("p95_us")? as u64,
+        p99_us: f("p99_us")? as u64,
+        max_us: f("max_us")? as u64,
+    })
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .with_context(|| format!("report: missing or non-numeric {key:?}"))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .with_context(|| format!("report: missing or non-string {key:?}"))
+}
+
+impl BenchReport {
+    /// Serialize; [`BenchReport::from_json`] inverts this exactly.
+    pub fn to_json(&self) -> Json {
+        let p = &self.provenance;
+        let provenance = Json::obj(vec![
+            ("seed", Json::num(p.seed as f64)),
+            ("config_hash", Json::str(p.config_hash.clone())),
+            ("trace_hash", Json::str(p.trace_hash.clone())),
+            ("created_unix", Json::num(p.created_unix as f64)),
+            ("generator", Json::str(p.generator.clone())),
+        ]);
+        let t = &self.throughput;
+        let throughput = Json::obj(vec![
+            ("submitted", Json::num(t.submitted as f64)),
+            ("completed", Json::num(t.completed as f64)),
+            ("ok", Json::num(t.ok as f64)),
+            ("img_per_s", Json::num(t.img_per_s)),
+            ("batches", Json::num(t.batches as f64)),
+            ("mean_batch", Json::num(t.mean_batch)),
+        ]);
+        let per_op = self
+            .per_op
+            .iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("index", Json::num(o.index as f64)),
+                    ("name", Json::str(o.name.clone())),
+                    ("power", Json::num(o.power)),
+                    ("requests", Json::num(o.requests as f64)),
+                    ("latency", summary_to_json(&o.latency)),
+                ])
+            })
+            .collect();
+        let s = &self.switches;
+        let timeline = s
+            .timeline
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("t_s", Json::num(r.t_s)),
+                    ("op", Json::num(r.op as f64)),
+                    ("mode", Json::str(r.mode.clone())),
+                    ("forced", Json::Bool(r.forced)),
+                ])
+            })
+            .collect();
+        let switches = Json::obj(vec![
+            ("total", Json::num(s.total as f64)),
+            ("drain", Json::num(s.drain as f64)),
+            ("immediate", Json::num(s.immediate as f64)),
+            ("forced", Json::num(s.forced as f64)),
+            ("budget_violations", Json::num(s.budget_violations as f64)),
+            ("retagged_batches", Json::num(s.retagged_batches as f64)),
+            ("timeline", Json::Arr(timeline)),
+        ]);
+        let sc = &self.scaling;
+        let scaling = Json::obj(vec![
+            ("scale_ups", Json::num(sc.scale_ups as f64)),
+            ("scale_downs", Json::num(sc.scale_downs as f64)),
+            ("spawn_failures", Json::num(sc.spawn_failures as f64)),
+            ("peak_workers", Json::num(sc.peak_workers as f64)),
+            ("final_workers", Json::num(sc.final_workers as f64)),
+        ]);
+        let fleet = match &self.fleet {
+            None => Json::Null,
+            Some(f) => Json::obj(vec![
+                ("requeues", Json::num(f.requeues as f64)),
+                ("evictions", Json::num(f.evictions as f64)),
+                (
+                    "workers",
+                    Json::Arr(
+                        f.workers
+                            .iter()
+                            .map(|w| {
+                                Json::obj(vec![
+                                    ("addr", Json::str(w.addr.clone())),
+                                    ("requests", Json::num(w.requests as f64)),
+                                    ("batches", Json::num(w.batches as f64)),
+                                    ("errors", Json::num(w.errors as f64)),
+                                    ("mean_latency_us", Json::num(w.mean_latency_us)),
+                                    ("evicted", Json::Bool(w.evicted)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let intervals = self
+            .intervals
+            .iter()
+            .map(|i| {
+                Json::obj(vec![
+                    ("t_s", Json::num(i.t_s)),
+                    ("img_per_s", Json::num(i.img_per_s)),
+                    ("submitted", Json::num(i.submitted as f64)),
+                    ("completed", Json::num(i.completed as f64)),
+                    ("inflight", Json::num(i.inflight as f64)),
+                    ("workers", Json::num(i.workers as f64)),
+                    ("op", Json::num(i.op as f64)),
+                    ("budget", Json::num(i.budget)),
+                    ("p99_us", Json::num(i.p99_us as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("description", Json::str(self.description.clone())),
+            ("provenance", provenance),
+            ("duration_s", Json::num(self.duration_s)),
+            ("throughput", throughput),
+            ("latency", summary_to_json(&self.latency)),
+            ("queue", summary_to_json(&self.queue)),
+            ("per_op", Json::Arr(per_op)),
+            ("switches", switches),
+            ("scaling", scaling),
+            ("fleet", fleet),
+            ("intervals", Json::Arr(intervals)),
+        ])
+    }
+
+    /// Parse + validate a report (strict: wrong version or any missing
+    /// required field is an error).
+    pub fn from_json(v: &Json) -> Result<BenchReport> {
+        let version = req_f64(v, "version")? as u64;
+        if version != REPORT_VERSION {
+            bail!("report version {version} unsupported (this build reads {REPORT_VERSION})");
+        }
+        let p = v.get("provenance").context("report: missing provenance")?;
+        let provenance = Provenance {
+            seed: req_f64(p, "seed")? as u64,
+            config_hash: req_str(p, "config_hash")?.to_string(),
+            trace_hash: req_str(p, "trace_hash")?.to_string(),
+            created_unix: req_f64(p, "created_unix")? as u64,
+            generator: req_str(p, "generator")?.to_string(),
+        };
+        let t = v.get("throughput").context("report: missing throughput")?;
+        let throughput = Throughput {
+            submitted: req_f64(t, "submitted")? as u64,
+            completed: req_f64(t, "completed")? as u64,
+            ok: req_f64(t, "ok")? as u64,
+            img_per_s: req_f64(t, "img_per_s")?,
+            batches: req_f64(t, "batches")? as u64,
+            mean_batch: req_f64(t, "mean_batch")?,
+        };
+        let per_op = v
+            .get("per_op")
+            .and_then(|x| x.as_arr())
+            .context("report: missing per_op array")?
+            .iter()
+            .map(|o| {
+                Ok(OpReport {
+                    index: req_f64(o, "index")? as usize,
+                    name: req_str(o, "name")?.to_string(),
+                    power: req_f64(o, "power")?,
+                    requests: req_f64(o, "requests")? as u64,
+                    latency: summary_from_json(
+                        o.get("latency").context("report: per_op entry missing latency")?,
+                        "per_op latency",
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let s = v.get("switches").context("report: missing switches")?;
+        let timeline = s
+            .get("timeline")
+            .and_then(|x| x.as_arr())
+            .context("report: switches missing timeline array")?
+            .iter()
+            .map(|r| {
+                let mode = req_str(r, "mode")?.to_string();
+                if mode != "drain" && mode != "immediate" {
+                    bail!("report: unknown switch mode {mode:?}");
+                }
+                Ok(SwitchRecord {
+                    t_s: req_f64(r, "t_s")?,
+                    op: req_f64(r, "op")? as usize,
+                    mode,
+                    forced: r.get("forced").and_then(|x| x.as_bool()).unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let switches = Switches {
+            total: req_f64(s, "total")? as u64,
+            drain: req_f64(s, "drain")? as u64,
+            immediate: req_f64(s, "immediate")? as u64,
+            forced: req_f64(s, "forced")? as u64,
+            budget_violations: req_f64(s, "budget_violations")? as u64,
+            retagged_batches: req_f64(s, "retagged_batches")? as u64,
+            timeline,
+        };
+        let sc = v.get("scaling").context("report: missing scaling")?;
+        let scaling = Scaling {
+            scale_ups: req_f64(sc, "scale_ups")? as u64,
+            scale_downs: req_f64(sc, "scale_downs")? as u64,
+            spawn_failures: req_f64(sc, "spawn_failures")? as u64,
+            peak_workers: req_f64(sc, "peak_workers")? as usize,
+            final_workers: req_f64(sc, "final_workers")? as usize,
+        };
+        let fleet = match v.get("fleet") {
+            None | Some(Json::Null) => None,
+            Some(f) => {
+                let workers = f
+                    .get("workers")
+                    .and_then(|x| x.as_arr())
+                    .context("report: fleet missing workers array")?
+                    .iter()
+                    .map(|w| {
+                        Ok(FleetWorkerReport {
+                            addr: req_str(w, "addr")?.to_string(),
+                            requests: req_f64(w, "requests")? as u64,
+                            batches: req_f64(w, "batches")? as u64,
+                            errors: req_f64(w, "errors")? as u64,
+                            mean_latency_us: req_f64(w, "mean_latency_us")?,
+                            evicted: w.get("evicted").and_then(|x| x.as_bool()).unwrap_or(false),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Some(FleetReport {
+                    requeues: req_f64(f, "requeues")? as u64,
+                    evictions: req_f64(f, "evictions")? as u64,
+                    workers,
+                })
+            }
+        };
+        let intervals = v
+            .get("intervals")
+            .and_then(|x| x.as_arr())
+            .context("report: missing intervals array")?
+            .iter()
+            .map(|i| {
+                Ok(Interval {
+                    t_s: req_f64(i, "t_s")?,
+                    img_per_s: req_f64(i, "img_per_s")?,
+                    submitted: req_f64(i, "submitted")? as u64,
+                    completed: req_f64(i, "completed")? as u64,
+                    inflight: req_f64(i, "inflight")? as usize,
+                    workers: req_f64(i, "workers")? as usize,
+                    op: req_f64(i, "op")? as usize,
+                    budget: req_f64(i, "budget")?,
+                    p99_us: req_f64(i, "p99_us")? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchReport {
+            version,
+            scenario: req_str(v, "scenario")?.to_string(),
+            description: v.get("description").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+            provenance,
+            duration_s: req_f64(v, "duration_s")?,
+            throughput,
+            latency: summary_from_json(
+                v.get("latency").context("report: missing latency")?,
+                "latency",
+            )?,
+            queue: summary_from_json(v.get("queue").context("report: missing queue")?, "queue")?,
+            per_op,
+            switches,
+            scaling,
+            fleet,
+            intervals,
+        })
+    }
+
+    /// Pretty-print to a file (the `BENCH_<scenario>.json` artifact).
+    pub fn write_to(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("writing bench report to {}", path.display()))
+    }
+
+    /// Parse a report file.
+    pub fn read_from(path: &std::path::Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report from {}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        BenchReport {
+            version: REPORT_VERSION,
+            scenario: "steady_state".into(),
+            description: "test".into(),
+            provenance: Provenance {
+                seed: 7,
+                config_hash: "deadbeef".into(),
+                trace_hash: "cafebabe".into(),
+                created_unix: 1_700_000_000,
+                generator: "qos-nets bench test".into(),
+            },
+            duration_s: 2.0,
+            throughput: Throughput {
+                submitted: 100,
+                completed: 100,
+                ok: 100,
+                img_per_s: 50.0,
+                batches: 30,
+                mean_batch: 3.3,
+            },
+            latency: LatencySummary {
+                count: 100,
+                mean_us: 900.0,
+                p50_us: 1024,
+                p95_us: 2048,
+                p99_us: 4096,
+                max_us: 3000,
+            },
+            queue: LatencySummary::default(),
+            per_op: vec![OpReport {
+                index: 0,
+                name: "exact".into(),
+                power: 1.0,
+                requests: 100,
+                latency: LatencySummary::default(),
+            }],
+            switches: Switches {
+                total: 2,
+                drain: 1,
+                immediate: 1,
+                forced: 0,
+                budget_violations: 0,
+                retagged_batches: 0,
+                timeline: vec![
+                    SwitchRecord { t_s: 0.0, op: 0, mode: "drain".into(), forced: false },
+                    SwitchRecord { t_s: 0.4, op: 2, mode: "immediate".into(), forced: false },
+                ],
+            },
+            scaling: Scaling { peak_workers: 2, final_workers: 2, ..Default::default() },
+            fleet: Some(FleetReport {
+                requeues: 0,
+                evictions: 0,
+                workers: vec![FleetWorkerReport {
+                    addr: "127.0.0.1:9".into(),
+                    requests: 100,
+                    batches: 30,
+                    errors: 0,
+                    mean_latency_us: 800.0,
+                    evicted: false,
+                }],
+            }),
+            intervals: vec![Interval {
+                t_s: 0.5,
+                img_per_s: 50.0,
+                submitted: 25,
+                completed: 25,
+                inflight: 0,
+                workers: 2,
+                op: 0,
+                budget: 1.0,
+                p99_us: 4096,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = sample();
+        let text = json::to_string_pretty(&r.to_json());
+        let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+
+        // and with no fleet section
+        let mut r = sample();
+        r.fleet = None;
+        let back =
+            BenchReport::from_json(&json::parse(&json::to_string(&r.to_json())).unwrap()).unwrap();
+        assert_eq!(back.fleet, None);
+    }
+
+    #[test]
+    fn wrong_version_and_missing_fields_are_rejected() {
+        let mut v = sample().to_json();
+        if let Json::Obj(pairs) = &mut v {
+            pairs[0].1 = Json::num(99.0);
+        }
+        let err = BenchReport::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        let r = sample();
+        let mut v = r.to_json();
+        if let Json::Obj(pairs) = &mut v {
+            pairs.retain(|(k, _)| k != "switches");
+        }
+        assert!(BenchReport::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn unknown_switch_modes_are_rejected() {
+        let mut r = sample();
+        r.switches.timeline[0].mode = "casual".into();
+        let err = BenchReport::from_json(&r.to_json()).unwrap_err();
+        assert!(format!("{err:#}").contains("casual"));
+    }
+}

@@ -1,0 +1,911 @@
+//! Scenario schema: the declarative input of the bench orchestrator.
+//!
+//! A scenario is a JSON file naming everything a load run needs —
+//! arrival process, duration, batch-size mix, deployment shape and a
+//! script of QoS/environment events — so a perf trajectory recorded
+//! today can be replayed bit-identically against next month's code.
+//! Six built-ins cover the serving stack's interesting regimes
+//! ([`BUILTIN_NAMES`]); arbitrary scenarios load from files via
+//! [`Scenario::from_json`], which validates aggressively so a malformed
+//! spec fails before any thread spawns.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::hash::fnv1a_bytes;
+use crate::util::json::{self, Json};
+
+/// Inter-arrival process of one [`ArrivalPhase`].  Rates count arrival
+/// *events* per second; each event submits a [`MixEntry`]-sampled
+/// number of images, so `rate_rps * mean(mix)` is the offered img/s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential gaps (memoryless open-loop clients).
+    Poisson,
+    /// Fixed `1/rate` gaps (a metronome — isolates queueing from
+    /// arrival variance).
+    Uniform,
+    /// `size` simultaneous events, then a `size/rate` silence: the
+    /// incast pattern that stresses batch formation and scale-up.
+    Burst { size: usize },
+}
+
+impl ArrivalProcess {
+    fn tag(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Uniform => "uniform",
+            ArrivalProcess::Burst { .. } => "burst",
+        }
+    }
+}
+
+/// One stretch of the arrival schedule.  Phases play in order and the
+/// schedule cycles when a duration override outlives it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPhase {
+    /// Phase length, seconds.
+    pub dur_s: f64,
+    /// Arrival events per second.
+    pub rate_rps: f64,
+    pub process: ArrivalProcess,
+}
+
+/// One entry of the batch-size mix: an arrival event submits `size`
+/// images with probability proportional to `weight`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MixEntry {
+    pub size: usize,
+    pub weight: f64,
+}
+
+/// Which substrate the deployment under test runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The in-tree synthetic tiny model on the native LUT engine
+    /// ([`crate::bench::synthetic`]) — real inference, no artifacts.
+    Native,
+    /// [`crate::backend::StubBackend`] with a configurable delay —
+    /// isolates the serving machinery from compute.
+    Stub,
+}
+
+/// One loopback fleet worker the driver spawns for the run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetWorkerSpec {
+    /// Simulated compute time per forward call, microseconds.
+    pub delay_us: u64,
+    /// Heartbeat cadence this worker advertises in `HelloAck`.
+    pub hb_interval_ms: u64,
+    pub hb_timeout_ms: u64,
+}
+
+/// Shape of the deployment under test.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deployment {
+    pub backend: BackendKind,
+    /// Initial server worker count.
+    pub workers: usize,
+    /// Elastic-pool bounds (0 = fixed pool, `server::BatcherConfig`
+    /// semantics).
+    pub min_workers: usize,
+    pub max_workers: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub retag_downgrades: bool,
+    /// Stub-backend compute delay, microseconds (ignored for native).
+    pub stub_delay_us: u64,
+    /// Non-empty = spin up these loopback fleet workers and serve
+    /// through a `FleetBackend` (scatter/gather + fleet-wide switch
+    /// broadcast) instead of in-process backends.
+    pub fleet: Vec<FleetWorkerSpec>,
+}
+
+/// Where each tick's power budget comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QosSource {
+    /// A fixed budget, mutated only by scripted `budget` events.
+    Constant(f64),
+    /// A synthetic [`crate::qos::budget_trace`] kind
+    /// (`sine`/`steps`/`walk`), one sample per tick.
+    Trace(String),
+    /// The battery/thermal [`crate::qos::envsim::EnvSimulator`],
+    /// stepped `env_time_scale` sim-seconds per wall-second.
+    Env,
+}
+
+/// QoS-controller and budget-source configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosSpec {
+    pub source: QosSource,
+    pub upgrade_margin: f64,
+    pub min_dwell_ms: u64,
+    /// Simulated seconds per wall second for [`QosSource::Env`] (the
+    /// simulator's diurnal cycle spans 600 sim-seconds; 60 compresses
+    /// a "day" into ten wall seconds).
+    pub env_time_scale: f64,
+}
+
+/// What a scripted [`Event`] does when its time comes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Set the budget (only meaningful with [`QosSource::Constant`]).
+    Budget(f64),
+    /// Force an operating-point switch, bypassing the controller.
+    SetOp { op: usize, drain: bool },
+    /// [`crate::qos::envsim::EnvEvent::BatteryDrop`] (env source only).
+    BatteryDrop(f64),
+    /// [`crate::qos::envsim::EnvEvent::ThermalSpike`] (env source only).
+    ThermalSpike(f64),
+    /// [`crate::qos::envsim::EnvEvent::HarvestScale`] (env source only).
+    HarvestScale(f64),
+}
+
+/// One scripted disturbance, fired once when the run clock passes
+/// `at_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub at_s: f64,
+    pub kind: EventKind,
+}
+
+/// A complete bench scenario; see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Nominal run length, seconds (a `--secs` override cycles the
+    /// arrival phases to cover itself).
+    pub duration_s: f64,
+    /// Default seed; `--seed` overrides without editing the file.
+    pub seed: u64,
+    /// Control-loop tick (budget sampling, event dispatch), ms.
+    pub tick_ms: u64,
+    /// Snapshot interval, ms; must be a multiple of `tick_ms`.
+    pub interval_ms: u64,
+    pub arrivals: Vec<ArrivalPhase>,
+    pub batch_mix: Vec<MixEntry>,
+    pub deployment: Deployment,
+    pub qos: QosSpec,
+    pub events: Vec<Event>,
+}
+
+/// Every built-in scenario name, in presentation order.
+pub const BUILTIN_NAMES: [&str; 6] = [
+    "steady_state",
+    "diurnal_ramp",
+    "incast_burst",
+    "flash_crowd",
+    "ladder_thrash",
+    "heterogeneous_fleet",
+];
+
+/// Rungs every bench ladder has (native synthetic and stub/fleet
+/// alike), so `set_op` events can be validated before a deployment
+/// exists.
+pub const LADDER_RUNGS: usize = 3;
+
+impl Scenario {
+    /// FNV-1a over the canonical JSON encoding — the provenance tag
+    /// that ties a `BENCH_*.json` report to the exact scenario (and
+    /// code-side defaults) that produced it.
+    pub fn config_hash(&self) -> u64 {
+        fnv1a_bytes(json::to_string(&self.to_json()).bytes())
+    }
+
+    /// Serialize; [`Scenario::from_json`] inverts this exactly.
+    pub fn to_json(&self) -> Json {
+        let arrivals = self
+            .arrivals
+            .iter()
+            .map(|p| {
+                let mut pairs = vec![
+                    ("dur_s", Json::num(p.dur_s)),
+                    ("rate_rps", Json::num(p.rate_rps)),
+                    ("process", Json::str(p.process.tag())),
+                ];
+                if let ArrivalProcess::Burst { size } = p.process {
+                    pairs.push(("burst_size", Json::num(size as f64)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let mix = self
+            .batch_mix
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("size", Json::num(m.size as f64)),
+                    ("weight", Json::num(m.weight)),
+                ])
+            })
+            .collect();
+        let fleet = self
+            .deployment
+            .fleet
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("delay_us", Json::num(w.delay_us as f64)),
+                    ("hb_interval_ms", Json::num(w.hb_interval_ms as f64)),
+                    ("hb_timeout_ms", Json::num(w.hb_timeout_ms as f64)),
+                ])
+            })
+            .collect();
+        let backend = match self.deployment.backend {
+            BackendKind::Native => "native",
+            BackendKind::Stub => "stub",
+        };
+        let deployment = Json::obj(vec![
+            ("backend", Json::str(backend)),
+            ("workers", Json::num(self.deployment.workers as f64)),
+            ("min_workers", Json::num(self.deployment.min_workers as f64)),
+            ("max_workers", Json::num(self.deployment.max_workers as f64)),
+            ("max_batch", Json::num(self.deployment.max_batch as f64)),
+            ("max_wait_ms", Json::num(self.deployment.max_wait_ms as f64)),
+            ("retag_downgrades", Json::Bool(self.deployment.retag_downgrades)),
+            ("stub_delay_us", Json::num(self.deployment.stub_delay_us as f64)),
+            ("fleet", Json::Arr(fleet)),
+        ]);
+        let mut qos_pairs: Vec<(&str, Json)> = Vec::new();
+        match &self.qos.source {
+            QosSource::Constant(b) => {
+                qos_pairs.push(("source", Json::str("constant")));
+                qos_pairs.push(("budget", Json::num(*b)));
+            }
+            QosSource::Trace(kind) => {
+                qos_pairs.push(("source", Json::str("trace")));
+                qos_pairs.push(("trace", Json::str(kind.clone())));
+            }
+            QosSource::Env => qos_pairs.push(("source", Json::str("env"))),
+        }
+        qos_pairs.push(("upgrade_margin", Json::num(self.qos.upgrade_margin)));
+        qos_pairs.push(("min_dwell_ms", Json::num(self.qos.min_dwell_ms as f64)));
+        qos_pairs.push(("env_time_scale", Json::num(self.qos.env_time_scale)));
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![("at_s", Json::num(e.at_s))];
+                match e.kind {
+                    EventKind::Budget(b) => {
+                        pairs.push(("kind", Json::str("budget")));
+                        pairs.push(("budget", Json::num(b)));
+                    }
+                    EventKind::SetOp { op, drain } => {
+                        pairs.push(("kind", Json::str("set_op")));
+                        pairs.push(("op", Json::num(op as f64)));
+                        pairs.push(("drain", Json::Bool(drain)));
+                    }
+                    EventKind::BatteryDrop(delta) => {
+                        pairs.push(("kind", Json::str("battery_drop")));
+                        pairs.push(("delta", Json::num(delta)));
+                    }
+                    EventKind::ThermalSpike(delta_c) => {
+                        pairs.push(("kind", Json::str("thermal_spike")));
+                        pairs.push(("delta_c", Json::num(delta_c)));
+                    }
+                    EventKind::HarvestScale(factor) => {
+                        pairs.push(("kind", Json::str("harvest_scale")));
+                        pairs.push(("factor", Json::num(factor)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("description", Json::str(self.description.clone())),
+            ("duration_s", Json::num(self.duration_s)),
+            ("seed", Json::num(self.seed as f64)),
+            ("tick_ms", Json::num(self.tick_ms as f64)),
+            ("interval_ms", Json::num(self.interval_ms as f64)),
+            ("arrivals", Json::Arr(arrivals)),
+            ("batch_mix", Json::Arr(mix)),
+            ("deployment", deployment),
+            ("qos", Json::obj(qos_pairs)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// Parse + validate; every rejection names the offending field.
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let name = req_str(v, "name")?.to_string();
+        let description = v.get("description").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        let duration_s = req_f64(v, "duration_s")?;
+        let seed = req_f64(v, "seed")? as u64;
+        let tick_ms = req_f64(v, "tick_ms")? as u64;
+        let interval_ms = req_f64(v, "interval_ms")? as u64;
+
+        let arrivals = v
+            .get("arrivals")
+            .and_then(|x| x.as_arr())
+            .context("scenario: missing arrivals array")?
+            .iter()
+            .map(parse_phase)
+            .collect::<Result<Vec<_>>>()?;
+        let batch_mix = v
+            .get("batch_mix")
+            .and_then(|x| x.as_arr())
+            .context("scenario: missing batch_mix array")?
+            .iter()
+            .map(parse_mix)
+            .collect::<Result<Vec<_>>>()?;
+        let deployment =
+            parse_deployment(v.get("deployment").context("scenario: missing deployment")?)?;
+        let qos = parse_qos(v.get("qos").context("scenario: missing qos")?)?;
+        let events = v
+            .get("events")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(parse_event)
+            .collect::<Result<Vec<_>>>()?;
+
+        let sc = Scenario {
+            name,
+            description,
+            duration_s,
+            seed,
+            tick_ms,
+            interval_ms,
+            arrivals,
+            batch_mix,
+            deployment,
+            qos,
+            events,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Structural validation (also run by [`from_json`](Self::from_json)).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("scenario: empty name");
+        }
+        if !(self.duration_s.is_finite() && self.duration_s > 0.0) {
+            bail!("scenario {}: duration_s must be finite and > 0", self.name);
+        }
+        if self.tick_ms == 0 {
+            bail!("scenario {}: tick_ms must be > 0", self.name);
+        }
+        if self.interval_ms == 0 || self.interval_ms % self.tick_ms != 0 {
+            bail!(
+                "scenario {}: interval_ms ({}) must be a positive multiple of tick_ms ({})",
+                self.name,
+                self.interval_ms,
+                self.tick_ms
+            );
+        }
+        if self.arrivals.is_empty() {
+            bail!("scenario {}: no arrival phases", self.name);
+        }
+        for (i, p) in self.arrivals.iter().enumerate() {
+            if !(p.dur_s.is_finite() && p.dur_s > 0.0) {
+                bail!("scenario {}: arrival phase {i}: dur_s must be finite and > 0", self.name);
+            }
+            if !(p.rate_rps.is_finite() && p.rate_rps > 0.0) {
+                bail!("scenario {}: arrival phase {i}: rate_rps must be finite and > 0", self.name);
+            }
+            if let ArrivalProcess::Burst { size } = p.process {
+                if size == 0 {
+                    bail!("scenario {}: arrival phase {i}: burst_size must be >= 1", self.name);
+                }
+            }
+        }
+        if self.batch_mix.is_empty() {
+            bail!("scenario {}: empty batch_mix", self.name);
+        }
+        for (i, m) in self.batch_mix.iter().enumerate() {
+            if m.size == 0 {
+                bail!("scenario {}: batch_mix entry {i}: size must be >= 1", self.name);
+            }
+            if !(m.weight.is_finite() && m.weight > 0.0) {
+                bail!("scenario {}: batch_mix entry {i}: weight must be finite and > 0", self.name);
+            }
+        }
+        let d = &self.deployment;
+        if d.workers == 0 {
+            bail!("scenario {}: deployment.workers must be >= 1", self.name);
+        }
+        if d.max_batch == 0 || d.max_wait_ms == 0 {
+            bail!("scenario {}: deployment max_batch and max_wait_ms must be >= 1", self.name);
+        }
+        if d.max_workers > 0 && d.max_workers < d.min_workers {
+            bail!("scenario {}: deployment.max_workers < min_workers", self.name);
+        }
+        if !d.fleet.is_empty() && d.backend != BackendKind::Stub {
+            bail!("scenario {}: loopback fleet workers serve the stub backend", self.name);
+        }
+        for (i, w) in d.fleet.iter().enumerate() {
+            if w.hb_interval_ms == 0 || w.hb_timeout_ms == 0 {
+                bail!("scenario {}: fleet worker {i}: heartbeat cadence must be > 0 ms", self.name);
+            }
+        }
+        match &self.qos.source {
+            QosSource::Constant(b) => {
+                if !(b.is_finite() && *b > 0.0 && *b <= 1.0) {
+                    bail!("scenario {}: constant budget must be in (0, 1]", self.name);
+                }
+            }
+            QosSource::Trace(kind) => {
+                if !matches!(kind.as_str(), "sine" | "steps" | "walk") {
+                    bail!(
+                        "scenario {}: unknown budget trace {kind:?} (sine|steps|walk)",
+                        self.name
+                    );
+                }
+            }
+            QosSource::Env => {}
+        }
+        if !(self.qos.upgrade_margin.is_finite() && self.qos.upgrade_margin >= 0.0) {
+            bail!("scenario {}: upgrade_margin must be finite and >= 0", self.name);
+        }
+        if !(self.qos.env_time_scale.is_finite() && self.qos.env_time_scale > 0.0) {
+            bail!("scenario {}: env_time_scale must be finite and > 0", self.name);
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            if !(e.at_s.is_finite() && e.at_s >= 0.0) {
+                bail!("scenario {}: event {i}: at_s must be finite and >= 0", self.name);
+            }
+            match e.kind {
+                EventKind::Budget(b) => {
+                    if !(b.is_finite() && b > 0.0 && b <= 1.0) {
+                        bail!("scenario {}: event {i}: budget must be in (0, 1]", self.name);
+                    }
+                    if !matches!(self.qos.source, QosSource::Constant(_)) {
+                        bail!(
+                            "scenario {}: event {i}: budget events need qos.source = constant",
+                            self.name
+                        );
+                    }
+                }
+                EventKind::SetOp { op, .. } => {
+                    if op >= LADDER_RUNGS {
+                        bail!(
+                            "scenario {}: event {i}: set_op op {op} out of range (ladders have {LADDER_RUNGS} rungs)",
+                            self.name
+                        );
+                    }
+                }
+                EventKind::BatteryDrop(_)
+                | EventKind::ThermalSpike(_)
+                | EventKind::HarvestScale(_) => {
+                    if self.qos.source != QosSource::Env {
+                        bail!(
+                            "scenario {}: event {i}: environment events need qos.source = env",
+                            self.name
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .with_context(|| format!("scenario: missing or non-numeric {key:?}"))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .with_context(|| format!("scenario: missing or non-string {key:?}"))
+}
+
+fn parse_phase(v: &Json) -> Result<ArrivalPhase> {
+    let process = match req_str(v, "process")? {
+        "poisson" => ArrivalProcess::Poisson,
+        "uniform" => ArrivalProcess::Uniform,
+        "burst" => ArrivalProcess::Burst {
+            size: req_f64(v, "burst_size").context("burst phases need burst_size")? as usize,
+        },
+        other => bail!("unknown arrival process {other:?} (poisson|uniform|burst)"),
+    };
+    Ok(ArrivalPhase {
+        dur_s: req_f64(v, "dur_s")?,
+        rate_rps: req_f64(v, "rate_rps")?,
+        process,
+    })
+}
+
+fn parse_mix(v: &Json) -> Result<MixEntry> {
+    Ok(MixEntry {
+        size: req_f64(v, "size")? as usize,
+        weight: req_f64(v, "weight")?,
+    })
+}
+
+fn parse_deployment(v: &Json) -> Result<Deployment> {
+    let backend = match req_str(v, "backend")? {
+        "native" => BackendKind::Native,
+        "stub" => BackendKind::Stub,
+        other => bail!("unknown deployment backend {other:?} (native|stub)"),
+    };
+    let fleet = v
+        .get("fleet")
+        .and_then(|x| x.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .map(|w| {
+            Ok(FleetWorkerSpec {
+                delay_us: req_f64(w, "delay_us")? as u64,
+                hb_interval_ms: req_f64(w, "hb_interval_ms")? as u64,
+                hb_timeout_ms: req_f64(w, "hb_timeout_ms")? as u64,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Deployment {
+        backend,
+        workers: req_f64(v, "workers")? as usize,
+        min_workers: v.get("min_workers").and_then(|x| x.as_usize()).unwrap_or(0),
+        max_workers: v.get("max_workers").and_then(|x| x.as_usize()).unwrap_or(0),
+        max_batch: req_f64(v, "max_batch")? as usize,
+        max_wait_ms: req_f64(v, "max_wait_ms")? as u64,
+        retag_downgrades: v.get("retag_downgrades").and_then(|x| x.as_bool()).unwrap_or(false),
+        stub_delay_us: v.get("stub_delay_us").and_then(|x| x.as_usize()).unwrap_or(0) as u64,
+        fleet,
+    })
+}
+
+fn parse_qos(v: &Json) -> Result<QosSpec> {
+    let source = match req_str(v, "source")? {
+        "constant" => QosSource::Constant(req_f64(v, "budget")?),
+        "trace" => QosSource::Trace(req_str(v, "trace")?.to_string()),
+        "env" => QosSource::Env,
+        other => bail!("unknown qos source {other:?} (constant|trace|env)"),
+    };
+    Ok(QosSpec {
+        source,
+        upgrade_margin: v.get("upgrade_margin").and_then(|x| x.as_f64()).unwrap_or(0.05),
+        min_dwell_ms: v.get("min_dwell_ms").and_then(|x| x.as_usize()).unwrap_or(100) as u64,
+        env_time_scale: v.get("env_time_scale").and_then(|x| x.as_f64()).unwrap_or(60.0),
+    })
+}
+
+fn parse_event(v: &Json) -> Result<Event> {
+    let kind = match req_str(v, "kind")? {
+        "budget" => EventKind::Budget(req_f64(v, "budget")?),
+        "set_op" => EventKind::SetOp {
+            op: req_f64(v, "op")? as usize,
+            drain: v.get("drain").and_then(|x| x.as_bool()).unwrap_or(true),
+        },
+        "battery_drop" => EventKind::BatteryDrop(req_f64(v, "delta")?),
+        "thermal_spike" => EventKind::ThermalSpike(req_f64(v, "delta_c")?),
+        "harvest_scale" => EventKind::HarvestScale(req_f64(v, "factor")?),
+        other => bail!("unknown event kind {other:?}"),
+    };
+    Ok(Event { at_s: req_f64(v, "at_s")?, kind })
+}
+
+/// Look up a built-in scenario by name.
+pub fn builtin(name: &str) -> Option<Scenario> {
+    let sc = match name {
+        "steady_state" => steady_state(),
+        "diurnal_ramp" => diurnal_ramp(),
+        "incast_burst" => incast_burst(),
+        "flash_crowd" => flash_crowd(),
+        "ladder_thrash" => ladder_thrash(),
+        "heterogeneous_fleet" => heterogeneous_fleet(),
+        _ => return None,
+    };
+    debug_assert!(sc.validate().is_ok(), "builtin {name} must validate");
+    Some(sc)
+}
+
+fn base_deployment(backend: BackendKind) -> Deployment {
+    Deployment {
+        backend,
+        workers: 2,
+        min_workers: 0,
+        max_workers: 0,
+        max_batch: 16,
+        max_wait_ms: 4,
+        retag_downgrades: false,
+        stub_delay_us: 0,
+        fleet: Vec::new(),
+    }
+}
+
+fn base_qos(source: QosSource) -> QosSpec {
+    QosSpec {
+        source,
+        upgrade_margin: 0.05,
+        min_dwell_ms: 100,
+        env_time_scale: 60.0,
+    }
+}
+
+/// The trajectory anchor: fixed pool, Poisson arrivals, sine budget —
+/// the run CI records as `BENCH_steady_state.json` every build.
+fn steady_state() -> Scenario {
+    Scenario {
+        name: "steady_state".into(),
+        description: "fixed pool under steady Poisson load with a sine budget — the \
+                      perf-trajectory anchor run"
+            .into(),
+        duration_s: 10.0,
+        seed: 7,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![ArrivalPhase {
+            dur_s: 10.0,
+            rate_rps: 250.0,
+            process: ArrivalProcess::Poisson,
+        }],
+        batch_mix: vec![
+            MixEntry { size: 1, weight: 0.75 },
+            MixEntry { size: 4, weight: 0.25 },
+        ],
+        deployment: base_deployment(BackendKind::Native),
+        qos: base_qos(QosSource::Trace("sine".into())),
+        events: Vec::new(),
+    }
+}
+
+/// Day/night load swing against the battery/thermal simulator, with a
+/// scripted cloud front killing the harvest mid-run.
+fn diurnal_ramp() -> Scenario {
+    Scenario {
+        name: "diurnal_ramp".into(),
+        description: "slow load ramp against the battery/thermal env simulator; a scripted \
+                      cloud front kills the harvest mid-run"
+            .into(),
+        duration_s: 20.0,
+        seed: 11,
+        tick_ms: 50,
+        interval_ms: 1000,
+        arrivals: vec![
+            ArrivalPhase { dur_s: 6.0, rate_rps: 120.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 8.0, rate_rps: 320.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 6.0, rate_rps: 120.0, process: ArrivalProcess::Poisson },
+        ],
+        batch_mix: vec![MixEntry { size: 1, weight: 1.0 }],
+        deployment: Deployment {
+            min_workers: 1,
+            max_workers: 4,
+            workers: 1,
+            ..base_deployment(BackendKind::Native)
+        },
+        qos: base_qos(QosSource::Env),
+        events: vec![Event { at_s: 12.0, kind: EventKind::HarvestScale(0.0) }],
+    }
+}
+
+/// Synchronized burst arrivals (the incast pattern): batch formation
+/// and scale-up under simultaneous request fronts.
+fn incast_burst() -> Scenario {
+    Scenario {
+        name: "incast_burst".into(),
+        description: "synchronized 48-wide request fronts into an elastic pool — stresses \
+                      batch formation and the scaling supervisor"
+            .into(),
+        duration_s: 8.0,
+        seed: 13,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![ArrivalPhase {
+            dur_s: 8.0,
+            rate_rps: 24.0,
+            process: ArrivalProcess::Burst { size: 48 },
+        }],
+        batch_mix: vec![MixEntry { size: 1, weight: 1.0 }],
+        deployment: Deployment {
+            workers: 1,
+            min_workers: 1,
+            max_workers: 6,
+            stub_delay_us: 300,
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: base_qos(QosSource::Constant(1.0)),
+        events: Vec::new(),
+    }
+}
+
+/// A 16x offered-load spike and recovery, with downgrade retagging on
+/// so immediate switches reach the backlog.
+fn flash_crowd() -> Scenario {
+    Scenario {
+        name: "flash_crowd".into(),
+        description: "16x offered-load spike and recovery under a step budget, with \
+                      retag_downgrades letting immediate switches reach the backlog"
+            .into(),
+        duration_s: 12.0,
+        seed: 17,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![
+            ArrivalPhase { dur_s: 4.0, rate_rps: 50.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 3.0, rate_rps: 800.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 5.0, rate_rps: 50.0, process: ArrivalProcess::Poisson },
+        ],
+        batch_mix: vec![
+            MixEntry { size: 1, weight: 0.5 },
+            MixEntry { size: 2, weight: 0.5 },
+        ],
+        deployment: Deployment {
+            workers: 1,
+            min_workers: 1,
+            max_workers: 8,
+            stub_delay_us: 200,
+            retag_downgrades: true,
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: base_qos(QosSource::Trace("steps".into())),
+        events: Vec::new(),
+    }
+}
+
+/// Scripted budget square wave that forces the controller to alternate
+/// draining upgrades and immediate downgrades every 0.4 s — the
+/// acceptance scenario for recording >= 1 of each switch mode.
+fn ladder_thrash() -> Scenario {
+    let mut events = Vec::new();
+    for i in 0..14u32 {
+        let budget = if i % 2 == 0 { 0.5 } else { 1.0 };
+        events.push(Event {
+            at_s: 0.4 * (i + 1) as f64,
+            kind: EventKind::Budget(budget),
+        });
+    }
+    Scenario {
+        name: "ladder_thrash".into(),
+        description: "0.4 s budget square wave forcing alternating draining upgrades and \
+                      immediate downgrades"
+            .into(),
+        duration_s: 6.0,
+        seed: 19,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![ArrivalPhase {
+            dur_s: 6.0,
+            rate_rps: 200.0,
+            process: ArrivalProcess::Uniform,
+        }],
+        batch_mix: vec![MixEntry { size: 1, weight: 1.0 }],
+        deployment: Deployment {
+            stub_delay_us: 100,
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: base_qos(QosSource::Constant(1.0)),
+        events,
+    }
+}
+
+/// A three-speed loopback fleet with mixed heartbeat leashes: per-worker
+/// attribution under scatter/gather plus the advertised-cadence minimum.
+fn heterogeneous_fleet() -> Scenario {
+    Scenario {
+        name: "heterogeneous_fleet".into(),
+        description: "three loopback fleet workers at 100/400/1200 us with mixed heartbeat \
+                      leashes — per-worker attribution and fast-eviction cadence"
+            .into(),
+        duration_s: 8.0,
+        seed: 23,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![ArrivalPhase {
+            dur_s: 8.0,
+            rate_rps: 150.0,
+            process: ArrivalProcess::Poisson,
+        }],
+        batch_mix: vec![
+            MixEntry { size: 2, weight: 0.5 },
+            MixEntry { size: 6, weight: 0.5 },
+        ],
+        deployment: Deployment {
+            workers: 2,
+            fleet: vec![
+                FleetWorkerSpec { delay_us: 100, hb_interval_ms: 1000, hb_timeout_ms: 500 },
+                FleetWorkerSpec { delay_us: 400, hb_interval_ms: 400, hb_timeout_ms: 200 },
+                FleetWorkerSpec { delay_us: 1200, hb_interval_ms: 150, hb_timeout_ms: 80 },
+            ],
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: base_qos(QosSource::Trace("sine".into())),
+        events: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_round_trips_through_json() {
+        for name in BUILTIN_NAMES {
+            let sc = builtin(name).unwrap();
+            sc.validate().unwrap();
+            let text = json::to_string(&sc.to_json());
+            let back = Scenario::from_json(&json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(back, sc, "{name} changed across a JSON round trip");
+            assert_eq!(back.config_hash(), sc.config_hash());
+        }
+    }
+
+    #[test]
+    fn builtin_lookup_is_total_over_names_and_rejects_unknown() {
+        for name in BUILTIN_NAMES {
+            assert!(builtin(name).is_some(), "{name}");
+        }
+        assert!(builtin("nope").is_none());
+    }
+
+    #[test]
+    fn config_hash_is_sensitive_to_every_field_it_claims_to_cover() {
+        let base = builtin("steady_state").unwrap();
+        let mut v = base.clone();
+        v.seed = 8;
+        assert_ne!(v.config_hash(), base.config_hash());
+        let mut v = base.clone();
+        v.arrivals[0].rate_rps = 251.0;
+        assert_ne!(v.config_hash(), base.config_hash());
+        let mut v = base.clone();
+        v.deployment.max_batch = 8;
+        assert_ne!(v.config_hash(), base.config_hash());
+    }
+
+    #[test]
+    fn malformed_arrival_specs_are_rejected() {
+        let mut sc = builtin("steady_state").unwrap();
+        sc.arrivals.clear();
+        assert!(sc.validate().unwrap_err().to_string().contains("no arrival phases"));
+
+        let mut sc = builtin("steady_state").unwrap();
+        sc.arrivals[0].rate_rps = 0.0;
+        assert!(sc.validate().unwrap_err().to_string().contains("rate_rps"));
+
+        let mut sc = builtin("steady_state").unwrap();
+        sc.arrivals[0].rate_rps = f64::NAN;
+        assert!(sc.validate().is_err());
+
+        let mut sc = builtin("steady_state").unwrap();
+        sc.arrivals[0].dur_s = -1.0;
+        assert!(sc.validate().unwrap_err().to_string().contains("dur_s"));
+
+        let mut sc = builtin("incast_burst").unwrap();
+        sc.arrivals[0].process = ArrivalProcess::Burst { size: 0 };
+        assert!(sc.validate().unwrap_err().to_string().contains("burst_size"));
+
+        // unknown process tag fails at parse time
+        let text = r#"{"name":"x","duration_s":1,"seed":0,"tick_ms":50,"interval_ms":500,
+            "arrivals":[{"dur_s":1,"rate_rps":10,"process":"zipf"}],
+            "batch_mix":[{"size":1,"weight":1}],
+            "deployment":{"backend":"stub","workers":1,"max_batch":4,"max_wait_ms":2},
+            "qos":{"source":"constant","budget":1.0},"events":[]}"#;
+        let err = Scenario::from_json(&json::parse(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("zipf"), "{err:#}");
+    }
+
+    #[test]
+    fn semantic_cross_field_rules_are_enforced() {
+        // budget events need a constant source
+        let mut sc = builtin("ladder_thrash").unwrap();
+        sc.qos.source = QosSource::Trace("sine".into());
+        assert!(sc.validate().unwrap_err().to_string().contains("constant"));
+
+        // env events need the env source
+        let mut sc = builtin("diurnal_ramp").unwrap();
+        sc.qos.source = QosSource::Constant(1.0);
+        assert!(sc.validate().unwrap_err().to_string().contains("env"));
+
+        // fleet workers imply the stub backend
+        let mut sc = builtin("heterogeneous_fleet").unwrap();
+        sc.deployment.backend = BackendKind::Native;
+        assert!(sc.validate().unwrap_err().to_string().contains("stub"));
+
+        // set_op must stay inside the bench ladder
+        let mut sc = builtin("steady_state").unwrap();
+        sc.events.push(Event { at_s: 1.0, kind: EventKind::SetOp { op: 9, drain: false } });
+        assert!(sc.validate().unwrap_err().to_string().contains("out of range"));
+
+        // snapshot interval must tile into ticks
+        let mut sc = builtin("steady_state").unwrap();
+        sc.interval_ms = 75;
+        assert!(sc.validate().unwrap_err().to_string().contains("multiple"));
+    }
+}

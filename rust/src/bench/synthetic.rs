@@ -1,0 +1,173 @@
+//! Self-contained deployments for the bench harness: a tiny native
+//! model with a three-rung OP ladder, and a matching stub ladder.
+//!
+//! The native fixture mirrors the integration-test tiny graph (1 conv +
+//! GAP + dense, 1184 MACs) so `qos-nets bench` runs real LUT inference
+//! with zero on-disk artifacts: weights are generated from a fixed seed
+//! and the ladder swaps the conv/dense multipliers (exact -> bam7) the
+//! same way a stored plan would.  Every bench ladder — native or stub —
+//! has exactly [`LADDER_RUNGS`] rungs at relative powers 1.0/0.8/0.6 so
+//! scenarios and scripted `set_op` events are portable across backends.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::backend::stub::stub_op;
+use crate::bench::scenario::LADDER_RUNGS;
+use crate::engine::OperatingPoint;
+use crate::muldb::MulDb;
+use crate::nn::{Graph, LayerParams, ModelParams};
+use crate::util::json;
+use crate::util::rng::Rng;
+
+/// Image elements per native bench input (4x4x2).
+pub const NATIVE_ELEMS: usize = 32;
+/// Image elements per stub bench input.
+pub const STUB_ELEMS: usize = 2;
+/// Logit classes the stub backend reports.
+pub const STUB_CLASSES: usize = 8;
+/// Distinct images in each deployment's pool.
+pub const POOL_IMAGES: usize = 16;
+
+/// The approximate-multiplier index the frugal rungs use (the bam7
+/// family member in `MulDb::generate()`).
+const FRUGAL_MUL: usize = 9;
+
+fn tiny_graph_json() -> json::Json {
+    json::parse(
+        r#"{
+        "name": "bench-tiny", "input_shape": [4, 4, 2], "total_macs": 1184,
+        "nodes": [
+          {"id":0,"kind":"input","inputs":[],"name":"input","out_shape":[4,4,2]},
+          {"id":1,"kind":"conv","inputs":[0],"name":"c1","out_shape":[4,4,4],
+           "cin":2,"cout":4,"ksize":3,"stride":1,"pad":1,"groups":1,
+           "has_bn":false,"act":"relu","macs_per_out":18,"macs_total":1152,
+           "quant":{"in":{"scale":0.01,"zero_point":128},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":2,"kind":"gap","inputs":[1],"name":"gap","out_shape":[4]},
+          {"id":3,"kind":"dense","inputs":[2],"name":"fc","out_shape":[2],
+           "cin":4,"cout":2,"ksize":0,"stride":1,"pad":0,"groups":1,
+           "has_bn":false,"act":"none","macs_per_out":4,"macs_total":8,
+           "quant":{"in":{"scale":0.02,"zero_point":100},"w":{"scale":0.02,"zero_point":128}}},
+          {"id":4,"kind":"output","inputs":[3],"name":"output","out_shape":[2]}
+        ]}"#,
+    )
+    .unwrap()
+}
+
+/// Build the native bench deployment: graph, multiplier family and a
+/// three-rung ladder sharing one parameter set.
+pub fn native_ladder() -> (Arc<Graph>, Arc<MulDb>, Vec<OperatingPoint>) {
+    let graph = Arc::new(Graph::from_json(&tiny_graph_json()).unwrap());
+    let db = Arc::new(MulDb::generate());
+    let mut rng = Rng::new(11);
+    let w1: Vec<f32> = (0..3 * 3 * 2 * 4).map(|_| rng.normal() as f32 * 0.2).collect();
+    let wfc: Vec<f32> = (0..4 * 2).map(|_| rng.normal() as f32 * 0.3).collect();
+
+    let q_codes = |w: &[f32], s: f32, z: i32| -> Vec<i32> {
+        w.iter()
+            .map(|&x| ((x / s).round_ties_even() as i32 + z).clamp(0, 255))
+            .collect()
+    };
+    let mut layers = HashMap::new();
+    layers.insert(
+        "c1".to_string(),
+        LayerParams {
+            w_codes: q_codes(&w1, 0.02, 128),
+            w_shape: vec![3, 3, 2, 4],
+            post_scale: vec![0.01 * 0.02; 4],
+            post_bias: vec![0.0; 4],
+        },
+    );
+    layers.insert(
+        "fc".to_string(),
+        LayerParams {
+            w_codes: q_codes(&wfc, 0.02, 128),
+            w_shape: vec![4, 2],
+            post_scale: vec![0.02 * 0.02; 2],
+            post_bias: vec![0.0; 2],
+        },
+    );
+    let params = ModelParams { layers };
+
+    let rung = |name: &str, c1: usize, fc: usize, power: f64| OperatingPoint {
+        name: name.to_string(),
+        assignment: [("c1".to_string(), c1), ("fc".to_string(), fc)].into_iter().collect(),
+        params: params.clone(),
+        relative_power: power,
+    };
+    let ops = vec![
+        rung("exact", 0, 0, 1.0),
+        rung("mid", FRUGAL_MUL, 0, 0.8),
+        rung("frugal", FRUGAL_MUL, FRUGAL_MUL, 0.6),
+    ];
+    debug_assert_eq!(ops.len(), LADDER_RUNGS);
+    (graph, db, ops)
+}
+
+/// The stub/fleet ladder: parameter-free rungs at the same powers as
+/// the native one, so QoS trajectories are comparable across backends.
+pub fn stub_ladder() -> Vec<OperatingPoint> {
+    let ops = vec![stub_op("exact", 1.0), stub_op("mid", 0.8), stub_op("frugal", 0.6)];
+    debug_assert_eq!(ops.len(), LADDER_RUNGS);
+    ops
+}
+
+/// A flattened pool of [`POOL_IMAGES`] native inputs (seeded, so the
+/// trace's image indices always resolve to the same pixels).
+pub fn native_image_pool(seed: u64) -> (Vec<f32>, usize) {
+    let mut rng = Rng::new(seed);
+    let images = (0..POOL_IMAGES * NATIVE_ELEMS).map(|_| rng.f64() as f32).collect();
+    (images, NATIVE_ELEMS)
+}
+
+/// A flattened pool of stub inputs; image `i` deterministically argmaxes
+/// to class `i % STUB_CLASSES` under the stub backend.
+pub fn stub_image_pool() -> (Vec<f32>, usize) {
+    let mut images = Vec::with_capacity(POOL_IMAGES * STUB_ELEMS);
+    for i in 0..POOL_IMAGES {
+        images.push((i % STUB_CLASSES) as f32);
+        images.push(0.0);
+    }
+    (images, STUB_ELEMS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, NativeBackend};
+
+    #[test]
+    fn native_ladder_runs_on_the_engine_and_rungs_disagree_with_exact() {
+        let (graph, db, ops) = native_ladder();
+        let (pool, elems) = native_image_pool(3);
+        let mut be = NativeBackend::new(graph, db);
+        be.prepare(&ops).unwrap();
+        let img = &pool[..elems];
+        let exact = be.forward(0, img, 1).unwrap();
+        let frugal = be.forward(2, img, 1).unwrap();
+        assert_eq!(exact.len(), 2);
+        assert_eq!(frugal.len(), 2);
+        assert!(exact.iter().all(|x| x.is_finite()));
+        // bam7 on both layers must actually change the logits
+        assert_ne!(exact, frugal);
+    }
+
+    #[test]
+    fn ladders_share_shape_and_powers() {
+        let (_, _, native) = native_ladder();
+        let stub = stub_ladder();
+        assert_eq!(native.len(), stub.len());
+        for (n, s) in native.iter().zip(&stub) {
+            assert_eq!(n.name, s.name);
+            assert_eq!(n.relative_power, s.relative_power);
+        }
+    }
+
+    #[test]
+    fn image_pools_are_deterministic() {
+        assert_eq!(native_image_pool(3).0, native_image_pool(3).0);
+        let (pool, elems) = stub_image_pool();
+        assert_eq!(pool.len(), POOL_IMAGES * elems);
+        assert_eq!(pool[2 * elems] as usize, 2 % STUB_CLASSES);
+    }
+}

@@ -1,0 +1,133 @@
+//! `qos-nets bench --scenario NAME|FILE.json`: scenario-driven load
+//! harness.
+//!
+//! Resolves the scenario (built-in name first, then a JSON file path),
+//! runs it through [`crate::bench::driver::run_scenario`] and writes
+//! the versioned `BENCH_<scenario>.json` perf record.  `--seed` and
+//! `--secs` override the scenario without editing it (both are
+//! recorded in the report's provenance), `--dashboard` renders the
+//! live ANSI panel, `--list` and `--print-scenario` introspect the
+//! built-ins without running anything.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::bench::driver::{run_scenario, BenchOpts};
+use crate::bench::scenario::{builtin, Scenario, BUILTIN_NAMES};
+use crate::cli::Args;
+use crate::util::json;
+
+pub fn run(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("built-in bench scenarios:");
+        for name in BUILTIN_NAMES {
+            let sc = builtin(name).expect("builtin");
+            println!("  {name:<20} {:.0}s  {}", sc.duration_s, sc.description);
+        }
+        return Ok(());
+    }
+
+    let which = args.get("scenario").context(
+        "bench needs --scenario NAME|FILE.json (see `qos-nets bench --list` for built-ins)",
+    )?;
+    let sc = load_scenario(which)?;
+
+    if args.has("print-scenario") {
+        println!("{}", json::to_string_pretty(&sc.to_json()));
+        return Ok(());
+    }
+
+    let opts = BenchOpts {
+        seed: args.get("seed").and_then(|s| s.parse().ok()),
+        secs: args.get("secs").and_then(|s| s.parse().ok()),
+        dashboard: args.has("dashboard"),
+    };
+    println!(
+        "bench {}: {} (seed {}, {:.1}s)",
+        sc.name,
+        sc.description,
+        opts.seed.unwrap_or(sc.seed),
+        opts.secs.unwrap_or(sc.duration_s)
+    );
+    let report = run_scenario(&sc, &opts)?;
+
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", sc.name)));
+    report.write_to(&out)?;
+
+    let t = &report.throughput;
+    println!(
+        "bench {}: {} submitted, {} completed ({:.1} img/s) in {:.2}s -> {}",
+        report.scenario,
+        t.submitted,
+        t.completed,
+        t.img_per_s,
+        report.duration_s,
+        out.display()
+    );
+    println!(
+        "  latency: mean={:.2}ms p50<={:.2}ms p95<={:.2}ms p99<={:.2}ms",
+        report.latency.mean_us / 1e3,
+        report.latency.p50_us as f64 / 1e3,
+        report.latency.p95_us as f64 / 1e3,
+        report.latency.p99_us as f64 / 1e3
+    );
+    let s = &report.switches;
+    println!(
+        "  switches: {} total ({} drain, {} immediate, {} forced)  budget violations={}  retagged={}",
+        s.total, s.drain, s.immediate, s.forced, s.budget_violations, s.retagged_batches
+    );
+    for o in &report.per_op {
+        println!(
+            "  OP{} ({}, power {:.2}): {} requests  p99<={:.2}ms",
+            o.index,
+            o.name,
+            o.power,
+            o.requests,
+            o.latency.p99_us as f64 / 1e3
+        );
+    }
+    let sc_ = &report.scaling;
+    println!(
+        "  workers: peak={} final={} scale-ups={} scale-downs={}",
+        sc_.peak_workers, sc_.final_workers, sc_.scale_ups, sc_.scale_downs
+    );
+    if let Some(f) = &report.fleet {
+        println!(
+            "  fleet: {} worker(s), requeues={} evictions={}",
+            f.workers.len(),
+            f.requeues,
+            f.evictions
+        );
+        for w in &f.workers {
+            println!(
+                "    {}: {} requests in {} batches  mean={:.2}ms{}",
+                w.addr,
+                w.requests,
+                w.batches,
+                w.mean_latency_us / 1e3,
+                if w.evicted { "  [evicted]" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Built-in name first; anything else is read as a JSON file.
+fn load_scenario(which: &str) -> Result<Scenario> {
+    if let Some(sc) = builtin(which) {
+        return Ok(sc);
+    }
+    let text = std::fs::read_to_string(which).with_context(|| {
+        format!(
+            "no built-in scenario {which:?} and no such file \
+             (built-ins: {})",
+            BUILTIN_NAMES.join(", ")
+        )
+    })?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {which}: {e}"))?;
+    Scenario::from_json(&v).with_context(|| format!("loading scenario from {which}"))
+}

@@ -7,6 +7,7 @@
 //! the binary calls.
 
 mod baselines;
+mod bench;
 mod eval;
 mod muldb;
 mod plan;
@@ -41,6 +42,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         }
         "serve" => serve::run(args),
         "worker" => worker::run(args),
+        "bench" => bench::run(args),
         "plan" => plan::run(args),
         "report" => report::run(args),
         "selftest" => selftest::run(args),

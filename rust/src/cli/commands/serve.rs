@@ -120,7 +120,9 @@ pub fn run(args: &Args) -> Result<()> {
 /// The serving loop itself, written once for every backend.  With a
 /// fleet control plane attached, every controller switch is broadcast
 /// fleet-wide first (Drain = acked by every surviving worker) and the
-/// fleet is heartbeat-probed once per second.
+/// fleet is heartbeat-probed at the cadence the workers advertised in
+/// their handshakes (fleet-wide minimum, so one short-leashed worker
+/// tightens eviction for the whole deployment).
 fn drive<B: Backend + 'static>(
     args: &Args,
     exp: &Experiment,
@@ -138,6 +140,12 @@ fn drive<B: Backend + 'static>(
 
     let steps = (secs * 20.0) as usize; // budget update every 50 ms
     let trace = budget_trace(trace_kind, steps, exp.seed());
+    // probe cadence from the workers' handshakes, quantized to 50 ms
+    // steps (minimum one step)
+    let (hb_every, hb_timeout) = fleet
+        .as_ref()
+        .map(|(c, _)| ((c.hb_interval().as_millis() as u64 / 50).max(1), c.hb_timeout()))
+        .unwrap_or((20, Duration::from_millis(500)));
     let mut receivers = Vec::new();
     let mut rng = Rng::new(42);
     let started = Instant::now();
@@ -161,8 +169,8 @@ fn drive<B: Backend + 'static>(
             server.set_operating_point_with(idx, mode)?;
         }
         if let Some((control, _)) = fleet.as_mut() {
-            if step % 20 == 19 {
-                control.heartbeat(Duration::from_millis(500));
+            if step as u64 % hb_every == hb_every - 1 {
+                control.heartbeat(hb_timeout);
             }
         }
         let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
@@ -195,12 +203,13 @@ fn drive<B: Backend + 'static>(
         submitted as f64 / wall.as_secs_f64(),
         ok
     );
+    let lat = m.latency.summary();
     println!(
         "  latency: mean={:.2}ms p50<={:.2}ms p99<={:.2}ms max={:.2}ms  queue mean={:.2}ms",
-        m.latency.mean_us() / 1e3,
-        m.latency.percentile_us(50.0) as f64 / 1e3,
-        m.latency.percentile_us(99.0) as f64 / 1e3,
-        m.latency.max_us() as f64 / 1e3,
+        lat.mean_us / 1e3,
+        lat.p50_us as f64 / 1e3,
+        lat.p99_us as f64 / 1e3,
+        lat.max_us as f64 / 1e3,
         m.queue_latency.mean_us() / 1e3,
     );
     println!(
@@ -215,13 +224,13 @@ fn drive<B: Backend + 'static>(
         m.peak_workers, m.scale_ups, m.scale_downs, m.spawn_failures, m.retagged_batches
     );
     for (i, c) in m.per_op_requests.iter().enumerate() {
-        let h = &m.per_op_latency[i];
+        let h = m.per_op_latency[i].summary();
         println!(
             "  OP{i} ({}): {c} requests ({:.1}%)  latency mean={:.2}ms p99<={:.2}ms",
             op_names[i],
             100.0 * *c as f64 / m.completed.max(1) as f64,
-            h.mean_us() / 1e3,
-            h.percentile_us(99.0) as f64 / 1e3,
+            h.mean_us / 1e3,
+            h.p99_us as f64 / 1e3,
         );
     }
     println!(

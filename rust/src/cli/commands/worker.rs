@@ -7,8 +7,15 @@
 //! retraining overlays of `--mode` applied — and then answers the
 //! fleet wire protocol until a coordinator sends `Shutdown`.  Pair it
 //! with `serve --fleet` or `eval --fleet` on the coordinator side.
+//!
+//! `--hb-interval-ms` / `--hb-timeout-ms` set the heartbeat cadence
+//! this worker advertises in `HelloAck`; coordinators take the
+//! fleet-wide minimum, so a short leash here shortens eviction time
+//! for the whole deployment (the `heterogeneous_fleet` bench scenario
+//! exercises exactly this).
 
 use std::net::TcpListener;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -18,6 +25,8 @@ use crate::backend::NativeBackend;
 use crate::cli::commands::{load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::worker;
+use crate::fleet::worker::WorkerOptions;
+use crate::fleet::{DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS};
 use crate::pipeline;
 use crate::plan::OpPlan;
 
@@ -26,6 +35,9 @@ pub fn run(args: &Args) -> Result<()> {
     let mode = args.get_or("mode", "bn");
     let which = args.get_or("backend", "native");
     let listen = args.get_or("listen", "127.0.0.1:7070");
+    let hb_interval_ms = args.get_usize("hb-interval-ms", DEFAULT_HB_INTERVAL_MS as usize);
+    let hb_timeout_ms = args.get_usize("hb-timeout-ms", DEFAULT_HB_TIMEOUT_MS as usize);
+    anyhow::ensure!(hb_interval_ms > 0 && hb_timeout_ms > 0, "heartbeat cadence must be > 0 ms");
 
     // the catalog: everything a coordinator may ask this worker to make
     // resident — the exact baseline (eval ladders start with it) plus
@@ -43,15 +55,20 @@ pub fn run(args: &Args) -> Result<()> {
         exp.name
     );
     println!("  catalog ({} OPs): {}", names.len(), names.join(", "));
+    println!("  heartbeat: interval {hb_interval_ms} ms, timeout {hb_timeout_ms} ms (advertised)");
     println!("  stop with a coordinator Shutdown frame (e.g. fleet teardown)");
 
+    let opts = WorkerOptions::new(name, mode).heartbeat(
+        Duration::from_millis(hb_interval_ms as u64),
+        Duration::from_millis(hb_timeout_ms as u64),
+    );
     match which {
         "native" => {
             let graph = exp.graph.clone();
             let db = load_db(args)?;
             let kernel = native_kernel(args)?;
             println!("  native kernel: {}", kernel.name());
-            worker::run(listener, name, mode, catalog, move |_conn| {
+            worker::run_with(listener, opts, catalog, move |_conn| {
                 Ok(NativeBackend::with_kernel(graph.clone(), db.clone(), kernel.clone()))
             })
         }
@@ -62,7 +79,7 @@ pub fn run(args: &Args) -> Result<()> {
             let ishape = exp.graph.input_shape.clone();
             let classes = exp.num_classes();
             let use_bn = mode != "none";
-            worker::run(listener, name, mode, catalog, move |_conn| {
+            worker::run_with(listener, opts, catalog, move |_conn| {
                 let mut be = PjrtBackend::open(&artifacts, &dir, &ishape, classes)?;
                 be.set_bn_overlays(use_bn);
                 Ok(be)

@@ -94,11 +94,27 @@ COMMANDS
                                 immediate downgrade retag already-formed
                                 batches to the cheaper OP)
   worker    --exp E [--listen ADDR] [--backend B] [--mode M] [--kernel K]
+            [--hb-interval-ms N] [--hb-timeout-ms N]
                                 fleet worker daemon: serves the
                                 experiment's OP catalog (exact baseline
                                 + plan ladder) over the fleet wire
                                 protocol until a coordinator sends
-                                Shutdown (default ADDR 127.0.0.1:7070)
+                                Shutdown (default ADDR 127.0.0.1:7070;
+                                the hb flags set the heartbeat cadence
+                                advertised in HelloAck — coordinators
+                                probe at the fleet-wide minimum)
+  bench     --scenario NAME|FILE.json [--seed N] [--secs S] [--out FILE]
+            [--dashboard] [--list] [--print-scenario]
+                                scenario-driven load harness: replays a
+                                seeded open-loop arrival trace against
+                                the deployment the scenario describes
+                                (native synthetic model, delayed stub,
+                                or loopback fleet), walks the OP ladder
+                                from its budget source, and writes the
+                                versioned BENCH_<scenario>.json perf
+                                record (per-OP quantiles, switch
+                                timeline, scale events); --list shows
+                                the six built-in scenarios
   plan      diff A.json B.json  compare two stored OpPlans: per-layer
                                 assignment deltas per OP, per-OP power
                                 deltas, subset + provenance differences

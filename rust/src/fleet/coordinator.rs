@@ -123,6 +123,9 @@ struct Peer {
     /// Overlay mode the worker advertised in `HelloAck` (empty = not
     /// applicable, e.g. in-process test workers).
     mode: String,
+    /// Heartbeat cadence the worker advertised in `HelloAck`.
+    hb_interval_ms: u64,
+    hb_timeout_ms: u64,
     /// `None` once evicted.
     stream: Option<TcpStream>,
 }
@@ -213,8 +216,10 @@ impl FleetBackend {
                 .with_context(|| format!("hello to fleet worker {addr}"))?;
             let (reply, _) = wire::read_frame(&mut stream)
                 .with_context(|| format!("hello ack from fleet worker {addr}"))?;
-            let (c, mode) = match reply {
-                Frame::HelloAck { classes, mode, .. } => (classes, mode),
+            let (c, mode, hb_interval_ms, hb_timeout_ms) = match reply {
+                Frame::HelloAck { classes, mode, hb_interval_ms, hb_timeout_ms, .. } => {
+                    (classes, mode, hb_interval_ms, hb_timeout_ms)
+                }
                 Frame::Err { message } => bail!("fleet worker {addr} refused hello: {message}"),
                 other => bail!("fleet worker {addr}: unexpected {} to hello", other.type_name()),
             };
@@ -229,6 +234,8 @@ impl FleetBackend {
             peers.push(Peer {
                 addr: addr.clone(),
                 mode,
+                hb_interval_ms,
+                hb_timeout_ms,
                 stream: Some(stream),
             });
         }
@@ -255,6 +262,32 @@ impl FleetBackend {
     /// The shared attribution registry this backend records into.
     pub fn stats(&self) -> &FleetStats {
         &self.stats
+    }
+
+    /// Heartbeat probe interval hint: the tightest cadence any peer
+    /// advertised in its handshake — one short-leashed worker speeds up
+    /// eviction for the whole fleet.  Falls back to the wire-level
+    /// default for an (impossible) empty peer set.
+    pub fn hb_interval(&self) -> Duration {
+        let ms = self
+            .peers
+            .iter()
+            .map(|p| p.hb_interval_ms.max(1))
+            .min()
+            .unwrap_or(wire::DEFAULT_HB_INTERVAL_MS);
+        Duration::from_millis(ms)
+    }
+
+    /// Per-probe timeout hint, minimum over the fleet (companion to
+    /// [`hb_interval`](Self::hb_interval)).
+    pub fn hb_timeout(&self) -> Duration {
+        let ms = self
+            .peers
+            .iter()
+            .map(|p| p.hb_timeout_ms.max(1))
+            .min()
+            .unwrap_or(wire::DEFAULT_HB_TIMEOUT_MS);
+        Duration::from_millis(ms)
     }
 
     /// Cross-check the coordinator's retraining-overlay mode against

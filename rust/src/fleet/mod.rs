@@ -29,5 +29,5 @@ pub mod wire;
 pub mod worker;
 
 pub use coordinator::{FleetBackend, FleetStats, WorkerStats};
-pub use wire::{Frame, LadderRung, PROTOCOL_VERSION};
-pub use worker::WorkerHandle;
+pub use wire::{Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION};
+pub use worker::{WorkerHandle, WorkerOptions};

@@ -35,6 +35,15 @@ use crate::util::json::{self, Json};
 /// its frames.
 pub const PROTOCOL_VERSION: u64 = 1;
 
+/// Heartbeat cadence a worker advertises when none was configured, and
+/// the value `HelloAck` parsing assumes for pre-advert workers that
+/// omit the fields — matches the hard-coded probe the serve loop used
+/// before the cadence became configurable.
+pub const DEFAULT_HB_INTERVAL_MS: u64 = 1000;
+
+/// Per-probe timeout companion to [`DEFAULT_HB_INTERVAL_MS`].
+pub const DEFAULT_HB_TIMEOUT_MS: u64 = 500;
+
 /// Per-frame magic, so a desynchronized stream fails loudly instead of
 /// interpreting tensor bytes as a header length.
 const MAGIC: &[u8; 4] = b"QFLT";
@@ -66,14 +75,20 @@ pub enum Frame {
     /// Worker's handshake answer: identity, backend kind, the
     /// retraining-overlay mode its catalog was built with (`bn`,
     /// `full`, `none`; empty when not applicable, e.g. in-process test
-    /// workers), classifier width, and the OP names it can resolve in
-    /// `Prepare`.
+    /// workers), classifier width, the OP names it can resolve in
+    /// `Prepare`, and the heartbeat cadence the worker advertises —
+    /// the probe interval it was launched with plus the per-probe
+    /// timeout after which the coordinator should consider it dead.
+    /// Coordinators take the fleet-wide minimum, so one short-leashed
+    /// worker tightens eviction time for the whole deployment.
     HelloAck {
         worker: String,
         backend: String,
         mode: String,
         classes: usize,
         catalog: Vec<String>,
+        hb_interval_ms: u64,
+        hb_timeout_ms: u64,
     },
     /// Make this ladder resident (in order; `Forward::op` indexes it).
     Prepare { ladder: Vec<LadderRung> },
@@ -151,6 +166,8 @@ impl Frame {
                 mode,
                 classes,
                 catalog,
+                hb_interval_ms,
+                hb_timeout_ms,
             } => {
                 pairs.push(("worker", Json::str(worker.clone())));
                 pairs.push(("backend", Json::str(backend.clone())));
@@ -160,6 +177,8 @@ impl Frame {
                     "catalog",
                     Json::Arr(catalog.iter().map(|n| Json::str(n.clone())).collect()),
                 ));
+                pairs.push(("hb_interval_ms", Json::num(*hb_interval_ms as f64)));
+                pairs.push(("hb_timeout_ms", Json::num(*hb_timeout_ms as f64)));
             }
             Frame::Prepare { ladder } => {
                 let rungs: Vec<Json> = ladder
@@ -224,6 +243,16 @@ impl Frame {
                     .iter()
                     .filter_map(|n| n.as_str().map(str::to_string))
                     .collect(),
+                // lenient: pre-heartbeat-advert workers omit these, so
+                // fall back to the historical hard-coded cadence
+                hb_interval_ms: v
+                    .get("hb_interval_ms")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(DEFAULT_HB_INTERVAL_MS as usize) as u64,
+                hb_timeout_ms: v
+                    .get("hb_timeout_ms")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(DEFAULT_HB_TIMEOUT_MS as usize) as u64,
             },
             "prepare" => Frame::Prepare {
                 ladder: v
@@ -354,6 +383,8 @@ mod tests {
                 mode: "bn".into(),
                 classes: 10,
                 catalog: vec!["exact".into(), "op0".into()],
+                hb_interval_ms: 250,
+                hb_timeout_ms: 100,
             },
             &[],
         );
@@ -377,6 +408,27 @@ mod tests {
         roundtrip(Frame::Shutdown, &[]);
         roundtrip(Frame::Ok, &[]);
         roundtrip(Frame::Err { message: "no such op".into() }, &[]);
+    }
+
+    #[test]
+    fn hello_ack_without_heartbeat_fields_gets_the_legacy_cadence() {
+        // a pre-advert worker's HelloAck omits the hb_* fields; the
+        // parser must fall back to the historical hard-coded cadence
+        // rather than erroring or inventing zeros
+        let header = r#"{"type":"hello_ack","worker":"old","backend":"stub","mode":"","classes":4,"catalog":["exact"]}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let (frame, _) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        match frame {
+            Frame::HelloAck { hb_interval_ms, hb_timeout_ms, .. } => {
+                assert_eq!(hb_interval_ms, DEFAULT_HB_INTERVAL_MS);
+                assert_eq!(hb_timeout_ms, DEFAULT_HB_TIMEOUT_MS);
+            }
+            other => panic!("parsed {other:?}"),
+        }
     }
 
     #[test]

@@ -37,7 +37,9 @@ use anyhow::{Context, Result};
 
 use crate::backend::Backend;
 use crate::engine::OperatingPoint;
-use crate::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
+use crate::fleet::wire::{
+    self, Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION,
+};
 
 /// Draining gate: forwards enter read sections, a drain waits for all
 /// of them to leave while blocking new entries (writer-preferring, so a
@@ -104,6 +106,43 @@ impl Gate {
     }
 }
 
+/// Identity and cadence knobs for one worker daemon, the argument
+/// bundle behind [`spawn_with`]/[`run_with`].  The heartbeat pair is
+/// advertised in `HelloAck` so coordinators can probe at the cadence
+/// each worker was actually launched with — a short-leashed edge
+/// worker shortens fleet eviction time without redeploying peers.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Identity reported in `HelloAck` and error messages.
+    pub name: String,
+    /// Retraining-overlay mode the catalog was built with (`bn`,
+    /// `full`, `none`; empty when not applicable).
+    pub mode: String,
+    /// How often this worker expects to be heartbeat-probed.
+    pub hb_interval: Duration,
+    /// How long a probe may go unanswered before eviction.
+    pub hb_timeout: Duration,
+}
+
+impl WorkerOptions {
+    /// Options with the legacy hard-coded heartbeat cadence.
+    pub fn new(name: impl Into<String>, mode: impl Into<String>) -> Self {
+        WorkerOptions {
+            name: name.into(),
+            mode: mode.into(),
+            hb_interval: Duration::from_millis(DEFAULT_HB_INTERVAL_MS),
+            hb_timeout: Duration::from_millis(DEFAULT_HB_TIMEOUT_MS),
+        }
+    }
+
+    /// Override the advertised heartbeat cadence.
+    pub fn heartbeat(mut self, interval: Duration, timeout: Duration) -> Self {
+        self.hb_interval = interval;
+        self.hb_timeout = timeout;
+        self
+    }
+}
+
 /// State shared by every connection handler of one daemon.
 struct WorkerShared {
     name: String,
@@ -111,6 +150,9 @@ struct WorkerShared {
     /// in `HelloAck` so coordinators can cross-check their own
     /// `--mode`); empty when not applicable (in-process test workers).
     mode: String,
+    /// Heartbeat cadence advertised in `HelloAck`.
+    hb_interval: Duration,
+    hb_timeout: Duration,
     /// Index into the *prepared* ladder used by `Forward` frames that
     /// omit `op`; updated by `SetOp`.
     current_op: AtomicUsize,
@@ -177,16 +219,32 @@ impl WorkerHandle {
     }
 }
 
-/// Spawn a worker daemon on `listener`.  `catalog` is every operating
-/// point this worker can make resident, resolved by name at `Prepare`
-/// time; `mode` is the overlay mode the catalog was built with (empty
-/// = not applicable), advertised in `HelloAck` for coordinator-side
-/// cross-checks; `factory(conn_id)` builds one backend per coordinator
-/// connection on that connection's own thread.
+/// Spawn a worker daemon on `listener` with the legacy heartbeat
+/// cadence.  See [`spawn_with`] for the full option set.
 pub fn spawn<B, F>(
     listener: TcpListener,
     name: impl Into<String>,
     mode: impl Into<String>,
+    catalog: Vec<OperatingPoint>,
+    factory: F,
+) -> Result<WorkerHandle>
+where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    spawn_with(listener, WorkerOptions::new(name, mode), catalog, factory)
+}
+
+/// Spawn a worker daemon on `listener`.  `catalog` is every operating
+/// point this worker can make resident, resolved by name at `Prepare`
+/// time; `opts` carries identity, the overlay mode the catalog was
+/// built with (empty = not applicable, advertised in `HelloAck` for
+/// coordinator-side cross-checks) and the heartbeat cadence to
+/// advertise; `factory(conn_id)` builds one backend per coordinator
+/// connection on that connection's own thread.
+pub fn spawn_with<B, F>(
+    listener: TcpListener,
+    opts: WorkerOptions,
     catalog: Vec<OperatingPoint>,
     factory: F,
 ) -> Result<WorkerHandle>
@@ -199,8 +257,10 @@ where
         .set_nonblocking(true)
         .context("worker listener nonblocking")?;
     let shared = Arc::new(WorkerShared {
-        name: name.into(),
-        mode: mode.into(),
+        name: opts.name,
+        mode: opts.mode,
+        hb_interval: opts.hb_interval,
+        hb_timeout: opts.hb_timeout,
         current_op: AtomicUsize::new(0),
         served: AtomicU64::new(0),
         stop: AtomicBool::new(false),
@@ -252,7 +312,8 @@ where
 }
 
 /// Blocking daemon entry for the CLI: spawn + wait until a `Shutdown`
-/// frame (or `kill`) winds the daemon down.
+/// frame (or `kill`) winds the daemon down.  Legacy heartbeat cadence;
+/// see [`run_with`].
 pub fn run<B, F>(
     listener: TcpListener,
     name: impl Into<String>,
@@ -264,7 +325,21 @@ where
     B: Backend + 'static,
     F: Fn(usize) -> Result<B> + Send + Sync + 'static,
 {
-    spawn(listener, name, mode, catalog, factory)?.join();
+    run_with(listener, WorkerOptions::new(name, mode), catalog, factory)
+}
+
+/// Blocking daemon entry with the full option set ([`WorkerOptions`]).
+pub fn run_with<B, F>(
+    listener: TcpListener,
+    opts: WorkerOptions,
+    catalog: Vec<OperatingPoint>,
+    factory: F,
+) -> Result<()>
+where
+    B: Backend + 'static,
+    F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+{
+    spawn_with(listener, opts, catalog, factory)?.join();
     Ok(())
 }
 
@@ -339,6 +414,8 @@ fn handle_conn<B, F>(
                             mode: shared.mode.clone(),
                             classes: backend.num_classes(),
                             catalog: catalog.iter().map(|o| o.name.clone()).collect(),
+                            hb_interval_ms: shared.hb_interval.as_millis() as u64,
+                            hb_timeout_ms: shared.hb_timeout.as_millis() as u64,
                         },
                         Vec::new(),
                     ))

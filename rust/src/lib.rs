@@ -38,12 +38,16 @@
 //!     protocol, a worker daemon wrapping any `Backend`, and
 //!     `FleetBackend` — scatter/gather with failover plus fleet-wide
 //!     OP-switch broadcast, itself a `Backend`
+//!   * [`bench`]     scenario-driven load harness: replayable arrival
+//!     traces, scripted QoS/environment events, versioned
+//!     `BENCH_*.json` perf-trajectory reports, live dashboard
 //!   * [`pipeline`]  artifact-level orchestration
 //!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
 
 pub mod backend;
 pub mod baselines;
+pub mod bench;
 pub mod cli;
 pub mod engine;
 pub mod errmodel;

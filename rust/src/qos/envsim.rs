@@ -73,6 +73,21 @@ pub struct EnvState {
     pub budget: f64,
 }
 
+/// A scripted disturbance injected into a running [`EnvSimulator`] via
+/// [`EnvSimulator::apply`] — how bench scenarios stress the governor at
+/// a chosen instant instead of waiting for the physics to get there
+/// (a battery brown-out, a hot spell, clouds over the solar panel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EnvEvent {
+    /// Instantly remove `delta` (0..1) state-of-charge.
+    BatteryDrop { delta: f64 },
+    /// Instantly heat the die by `delta_c` degrees C.
+    ThermalSpike { delta_c: f64 },
+    /// Scale the harvest amplitude by `factor` from now on (0 = the
+    /// panel goes dark, 2 = double insolation).
+    HarvestScale { factor: f64 },
+}
+
 /// Battery + thermal + governor model; see the module docs.
 pub struct EnvSimulator {
     cfg: EnvConfig,
@@ -96,6 +111,24 @@ impl EnvSimulator {
     /// The current platform state.
     pub fn state(&self) -> EnvState {
         self.state
+    }
+
+    /// Inject a scripted disturbance; the next [`step`](Self::step)
+    /// integrates from the perturbed state (the budget is not
+    /// recomputed here — the governor only runs inside `step`, exactly
+    /// as it would for a real sensor reading).
+    pub fn apply(&mut self, event: EnvEvent) {
+        match event {
+            EnvEvent::BatteryDrop { delta } => {
+                self.state.soc = (self.state.soc - delta).clamp(0.0, 1.0);
+            }
+            EnvEvent::ThermalSpike { delta_c } => {
+                self.state.temperature += delta_c;
+            }
+            EnvEvent::HarvestScale { factor } => {
+                self.cfg.harvest_peak *= factor.max(0.0);
+            }
+        }
     }
 
     /// Harvest power at time t: half-sine "daylight" with noise.
@@ -205,6 +238,41 @@ mod tests {
             sim.step(0.1, 0.0);
         }
         assert!(sim.state().temperature < hot - 10.0);
+    }
+
+    #[test]
+    fn scripted_events_perturb_the_next_step() {
+        let cfg = EnvConfig { harvest_peak: 0.0, ..Default::default() };
+        let mut sim = EnvSimulator::new(cfg.clone());
+        sim.step(0.1, 0.5);
+        let before = sim.state();
+
+        // a brown-out below the knee must cut the budget on the very
+        // next governor pass
+        sim.apply(EnvEvent::BatteryDrop { delta: before.soc - 0.1 });
+        let b = sim.step(0.1, 0.5);
+        assert!(sim.state().soc < 0.15);
+        assert!(b < 0.5, "budget {b} should reflect the brown-out");
+
+        // a thermal spike past throttle_full pins the budget at the floor
+        let mut sim = EnvSimulator::new(cfg.clone());
+        sim.apply(EnvEvent::ThermalSpike { delta_c: 100.0 });
+        let b = sim.step(0.1, 0.0);
+        assert!((b - 0.05).abs() < 1e-9, "budget {b} should hit the floor");
+
+        // killing the harvest makes the SoC trajectory strictly worse
+        let trajectory = |scale: Option<f64>| {
+            let mut sim =
+                EnvSimulator::new(EnvConfig { harvest_peak: 4.0, ..Default::default() });
+            if let Some(factor) = scale {
+                sim.apply(EnvEvent::HarvestScale { factor });
+            }
+            for _ in 0..500 {
+                sim.step(1.0, 0.0);
+            }
+            sim.state().soc
+        };
+        assert!(trajectory(Some(0.0)) < trajectory(None));
     }
 
     #[test]

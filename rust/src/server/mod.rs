@@ -54,7 +54,7 @@ use crate::backend::{Backend, NativeBackend, OpTable};
 use crate::engine::OperatingPoint;
 use crate::muldb::MulDb;
 use crate::nn::Graph;
-use crate::util::stats::LatencyHistogram;
+use crate::util::stats::{LatencyHistogram, LatencySummary};
 
 pub use crate::qos::SwitchMode;
 
@@ -216,6 +216,60 @@ impl ServerMetrics {
             self.batch_size_sum as f64 / self.batches as f64
         }
     }
+
+    /// Condense the histograms into a plain-number snapshot: overall and
+    /// queue quantile summaries plus one [`OpMetricsSnapshot`] per
+    /// `OpTable` index.  This is the single extraction point the serving
+    /// report, the perf benches and the bench orchestrator share —
+    /// quantile math lives in `util::stats`, not at every call site.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            completed: self.completed,
+            batches: self.batches,
+            mean_batch: self.mean_batch(),
+            latency: self.latency.summary(),
+            queue: self.queue_latency.summary(),
+            per_op: self
+                .per_op_requests
+                .iter()
+                .zip(&self.per_op_latency)
+                .map(|(&requests, h)| OpMetricsSnapshot { requests, latency: h.summary() })
+                .collect(),
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            spawn_failures: self.spawn_failures,
+            peak_workers: self.peak_workers,
+            retagged_batches: self.retagged_batches,
+        }
+    }
+}
+
+/// Per-operating-point slice of a [`MetricsSnapshot`]: requests served
+/// under this `OpTable` index and their end-to-end latency summary.
+#[derive(Debug, Clone, Default)]
+pub struct OpMetricsSnapshot {
+    pub requests: u64,
+    pub latency: LatencySummary,
+}
+
+/// Plain-number condensation of [`ServerMetrics`] (histograms reduced to
+/// [`LatencySummary`] quantiles), from [`ServerMetrics::snapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// End-to-end latency over all requests.
+    pub latency: LatencySummary,
+    /// Submission-to-batch-formation latency over all requests.
+    pub queue: LatencySummary,
+    /// One entry per `OpTable` index, in table order.
+    pub per_op: Vec<OpMetricsSnapshot>,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub spawn_failures: u64,
+    pub peak_workers: usize,
+    pub retagged_batches: u64,
 }
 
 /// Bit of [`Shared::op_word`] marking the last switch as `Immediate`.
@@ -976,6 +1030,32 @@ mod tests {
                 WorkerMsg::Retire => continue,
             }
         }
+    }
+
+    #[test]
+    fn metrics_snapshot_condenses_histograms_per_op() {
+        let mut m = ServerMetrics::new(2);
+        m.completed = 3;
+        m.batches = 2;
+        m.batch_size_sum = 3;
+        for us in [100u64, 200, 4000] {
+            m.latency.record_us(us);
+        }
+        m.queue_latency.record_us(50);
+        m.per_op_requests[0] = 2;
+        m.per_op_requests[1] = 1;
+        m.per_op_latency[0].record_us(100);
+        m.per_op_latency[0].record_us(200);
+        m.per_op_latency[1].record_us(4000);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.per_op.len(), 2);
+        assert_eq!(s.per_op[0].requests, 2);
+        assert_eq!(s.per_op[0].latency.count, 2);
+        assert_eq!(s.per_op[1].latency.max_us, 4000);
+        assert!(s.latency.p99_us >= 4000, "p99 {}", s.latency.p99_us);
+        assert_eq!(s.queue.count, 1);
+        assert!((s.mean_batch - 1.5).abs() < 1e-12);
     }
 
     #[test]

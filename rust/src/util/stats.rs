@@ -113,6 +113,37 @@ impl LatencyHistogram {
         }
         self.max_us
     }
+
+    /// The standard quantile summary (count, mean, p50/p95/p99, max) in
+    /// one call — the reusable extraction consumers like the serving
+    /// report, `benches/perf_server.rs` and the bench orchestrator
+    /// share instead of duplicating percentile math.  Percentiles carry
+    /// the same upper-bound semantics as
+    /// [`percentile_us`](Self::percentile_us): the true quantile lies in
+    /// `(p/2, p]` for the log2 bucketing.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(50.0),
+            p95_us: self.percentile_us(95.0),
+            p99_us: self.percentile_us(99.0),
+            max_us: self.max_us,
+        }
+    }
+}
+
+/// Quantile summary of one [`LatencyHistogram`], extracted by
+/// [`LatencyHistogram::summary`].  All times in microseconds; the
+/// percentiles are log2-bucket upper bounds (within 2x of exact).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
 }
 
 #[cfg(test)]
@@ -136,6 +167,40 @@ mod tests {
         assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
         assert_eq!(h.count(), 7);
         assert_eq!(h.max_us(), 5000);
+    }
+
+    #[test]
+    fn summary_quantiles_match_sorted_vector_oracle_within_bucketing() {
+        // oracle: ceil-rank selection on the sorted raw samples — the
+        // histogram's bucket upper bound must bracket it within 2x
+        // (bucket i covers [2^i, 2^(i+1)))
+        let mut rng = crate::util::rng::Rng::new(17);
+        let samples: Vec<u64> = (0..5000).map(|_| 1 + rng.below(400_000) as u64).collect();
+        let mut h = LatencyHistogram::new();
+        for &s in &samples {
+            h.record_us(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let oracle = |p: f64| -> u64 {
+            let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+            sorted[rank.max(1) - 1]
+        };
+        let s = h.summary();
+        for (p, got) in [(50.0, s.p50_us), (95.0, s.p95_us), (99.0, s.p99_us)] {
+            let exact = oracle(p);
+            assert!(got > exact, "p{p}: bucket bound {got} must exceed oracle {exact}");
+            assert!(got <= 2 * exact, "p{p}: bucket bound {got} vs oracle {exact} (>2x off)");
+        }
+        assert_eq!(s.count, samples.len() as u64);
+        assert_eq!(s.max_us, *sorted.last().unwrap());
+        let exact_mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        assert!((s.mean_us - exact_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_all_zero() {
+        assert_eq!(LatencyHistogram::new().summary(), LatencySummary::default());
     }
 
     #[test]

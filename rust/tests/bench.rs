@@ -1,0 +1,143 @@
+//! Integration tests for the `qos-nets bench` load harness: builtin
+//! scenario round-trips, malformed-spec rejection, arrival-trace
+//! determinism, short end-to-end smoke runs (steady_state on the
+//! native synthetic model, ladder_thrash for both switch modes), and
+//! schema validation of the committed `BENCH_steady_state.json`
+//! baseline.
+
+use std::path::Path;
+
+use qos_nets::bench::driver::{run_scenario, BenchOpts};
+use qos_nets::bench::report::{BenchReport, REPORT_VERSION};
+use qos_nets::bench::scenario::{builtin, Scenario, BUILTIN_NAMES};
+use qos_nets::bench::{arrivals, synthetic};
+use qos_nets::util::json;
+
+#[test]
+fn all_builtin_scenarios_round_trip_and_validate() {
+    for name in BUILTIN_NAMES {
+        let sc = builtin(name).unwrap_or_else(|| panic!("missing builtin {name}"));
+        sc.validate().unwrap();
+        let text = json::to_string_pretty(&sc.to_json());
+        let back = Scenario::from_json(&json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(back, sc, "{name} mutated across the JSON round trip");
+    }
+}
+
+#[test]
+fn malformed_arrival_specs_are_rejected_at_load() {
+    // non-positive rate
+    let mut sc = builtin("steady_state").unwrap();
+    sc.arrivals[0].rate_rps = -3.0;
+    let v = json::parse(&json::to_string(&sc.to_json())).unwrap();
+    assert!(Scenario::from_json(&v).is_err());
+
+    // empty phase list
+    let mut sc = builtin("steady_state").unwrap();
+    sc.arrivals.clear();
+    let v = json::parse(&json::to_string(&sc.to_json())).unwrap();
+    assert!(Scenario::from_json(&v).is_err());
+
+    // unknown process tag straight from JSON text
+    let text = r#"{"name":"bad","duration_s":1,"seed":0,"tick_ms":50,"interval_ms":500,
+        "arrivals":[{"dur_s":1,"rate_rps":10,"process":"lognormal"}],
+        "batch_mix":[{"size":1,"weight":1}],
+        "deployment":{"backend":"stub","workers":1,"max_batch":4,"max_wait_ms":2},
+        "qos":{"source":"constant","budget":1.0},"events":[]}"#;
+    let err = Scenario::from_json(&json::parse(text).unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("lognormal"), "{err:#}");
+}
+
+#[test]
+fn same_seed_produces_identical_request_traces() {
+    let sc = builtin("flash_crowd").unwrap();
+    let pool = synthetic::POOL_IMAGES as u32;
+    let a = arrivals::generate(&sc, 3.0, 42, pool);
+    let b = arrivals::generate(&sc, 3.0, 42, pool);
+    assert_eq!(a, b, "same seed must replay the same trace");
+    assert_eq!(arrivals::trace_hash(&a), arrivals::trace_hash(&b));
+    let c = arrivals::generate(&sc, 3.0, 43, pool);
+    assert_ne!(arrivals::trace_hash(&a), arrivals::trace_hash(&c));
+}
+
+#[test]
+fn steady_state_smoke_run_emits_a_complete_report() {
+    let sc = builtin("steady_state").unwrap();
+    let opts = BenchOpts { seed: Some(7), secs: Some(2.0), dashboard: false };
+    let report = run_scenario(&sc, &opts).unwrap();
+
+    assert_eq!(report.version, REPORT_VERSION);
+    assert_eq!(report.scenario, "steady_state");
+    assert_eq!(report.provenance.seed, 7);
+    assert_eq!(report.provenance.config_hash.len(), 16);
+    assert_eq!(report.provenance.trace_hash.len(), 16);
+    assert!(report.throughput.submitted > 0, "load generator sent nothing");
+    assert!(report.throughput.completed > 0, "server completed nothing");
+    assert!(report.throughput.img_per_s > 0.0);
+    assert_eq!(report.throughput.ok, report.throughput.submitted, "requests were dropped");
+    assert!(report.latency.p99_us >= report.latency.p50_us);
+    assert_eq!(report.per_op.len(), 3, "native ladder has three rungs");
+    let served: u64 = report.per_op.iter().map(|o| o.requests).sum();
+    assert_eq!(served, report.throughput.completed);
+    assert!(!report.intervals.is_empty());
+    assert!(report.fleet.is_none());
+
+    // the report must survive its own serialization
+    let text = json::to_string_pretty(&report.to_json());
+    let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn identical_seeds_agree_on_provenance_and_trace() {
+    let sc = builtin("steady_state").unwrap();
+    let opts = BenchOpts { seed: Some(9), secs: Some(1.0), dashboard: false };
+    let a = run_scenario(&sc, &opts).unwrap();
+    let b = run_scenario(&sc, &opts).unwrap();
+    assert_eq!(a.provenance.config_hash, b.provenance.config_hash);
+    assert_eq!(a.provenance.trace_hash, b.provenance.trace_hash);
+    assert_eq!(a.throughput.submitted, b.throughput.submitted);
+}
+
+#[test]
+fn ladder_thrash_records_both_switch_modes() {
+    let sc = builtin("ladder_thrash").unwrap();
+    let opts = BenchOpts { seed: Some(19), secs: Some(2.0), dashboard: false };
+    let report = run_scenario(&sc, &opts).unwrap();
+    assert!(report.switches.drain >= 1, "expected a draining upgrade, got {:?}", report.switches);
+    assert!(
+        report.switches.immediate >= 1,
+        "expected an immediate downgrade, got {:?}",
+        report.switches
+    );
+    assert_eq!(
+        report.switches.total as usize,
+        report.switches.timeline.len(),
+        "timeline must account for every switch"
+    );
+    // the timeline's modes re-add to the counters
+    let drain = report.switches.timeline.iter().filter(|r| r.mode == "drain").count() as u64;
+    assert_eq!(drain, report.switches.drain);
+}
+
+#[test]
+fn committed_baseline_report_parses_and_matches_schema() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_steady_state.json");
+    let report = BenchReport::read_from(&path)
+        .unwrap_or_else(|e| panic!("committed baseline is schema-stale: {e:#}"));
+    assert_eq!(report.version, REPORT_VERSION);
+    assert_eq!(report.scenario, "steady_state");
+    assert_eq!(report.provenance.seed, 7);
+    // the baseline's config hash must match what this build derives
+    // from the builtin scenario, so scenario edits force a re-record
+    let sc = builtin("steady_state").unwrap();
+    assert_eq!(
+        report.provenance.config_hash,
+        format!("{:016x}", sc.config_hash()),
+        "builtin steady_state changed: re-record BENCH_steady_state.json \
+         (cargo run --release --no-default-features -- bench --scenario steady_state --seed 7)"
+    );
+    assert!(report.throughput.completed > 0);
+    assert!(!report.intervals.is_empty());
+}

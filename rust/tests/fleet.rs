@@ -15,7 +15,7 @@ use common::{build_tiny, stub_op};
 use qos_nets::backend::{Backend, NativeBackend, OpTable, StubBackend};
 use qos_nets::engine::OperatingPoint;
 use qos_nets::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
-use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle};
+use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle, WorkerOptions};
 use qos_nets::qos::SwitchMode;
 use qos_nets::server::{BatcherConfig, Server};
 
@@ -174,6 +174,8 @@ fn heartbeat_timeout_evicts_unresponsive_worker() {
                 mode: String::new(),
                 classes: 4,
                 catalog: vec!["hi".into(), "lo".into()],
+                hb_interval_ms: 1000,
+                hb_timeout_ms: 500,
             },
             &[],
         )
@@ -210,6 +212,36 @@ fn heartbeat_timeout_evicts_unresponsive_worker() {
     drop(fleet); // closes the silent socket; the thread sees EOF
     silent_thread.join().unwrap();
     healthy.kill();
+}
+
+#[test]
+fn advertised_heartbeat_cadence_reaches_the_coordinator_as_fleet_minimum() {
+    // one default-cadence worker plus one short-leashed worker: the
+    // coordinator's probe hints must take the fleet-wide minimum, so
+    // the short leash tightens eviction time for the whole deployment
+    let (slow, addr_slow) = stub_worker(4, Duration::ZERO, stub_catalog());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let opts = WorkerOptions::new("edge", "")
+        .heartbeat(Duration::from_millis(120), Duration::from_millis(60));
+    let fast = worker::spawn_with(listener, opts, stub_catalog(), move |_conn| {
+        Ok(StubBackend::new(4))
+    })
+    .unwrap();
+    let addr_fast = fast.addr().to_string();
+
+    let fleet = FleetBackend::connect(&[addr_slow.clone(), addr_fast]).unwrap();
+    assert_eq!(fleet.hb_interval(), Duration::from_millis(120));
+    assert_eq!(fleet.hb_timeout(), Duration::from_millis(60));
+    drop(fleet);
+
+    // a fleet of defaults keeps the legacy cadence
+    let fleet = FleetBackend::connect(std::slice::from_ref(&addr_slow)).unwrap();
+    assert_eq!(fleet.hb_interval(), Duration::from_millis(1000));
+    assert_eq!(fleet.hb_timeout(), Duration::from_millis(500));
+    drop(fleet);
+
+    slow.kill();
+    fast.kill();
 }
 
 #[test]

@@ -1,7 +1,8 @@
 //! Fleet serving benchmarks (stub-backed, always runs): loopback
 //! scatter/gather throughput vs a direct in-process backend at several
-//! worker counts and batch sizes, plus the cost of the two fleet-wide
-//! switch broadcasts (Immediate fire-and-forget vs Drain acked by every
+//! worker counts and batch sizes, pipelined vs lockstep dispatch on a
+//! latency-skewed fleet, plus the cost of the two fleet-wide switch
+//! broadcasts (Immediate fire-and-forget vs Drain acked by every
 //! worker).
 
 use std::net::TcpListener;
@@ -10,7 +11,7 @@ use std::time::{Duration, Instant};
 use qos_nets::backend::stub::stub_op;
 use qos_nets::backend::{Backend, StubBackend};
 use qos_nets::engine::OperatingPoint;
-use qos_nets::fleet::{worker, FleetBackend, WorkerHandle};
+use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle};
 use qos_nets::qos::SwitchMode;
 
 fn catalog() -> Vec<OperatingPoint> {
@@ -84,6 +85,81 @@ fn throughput_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn spawn_skewed(delays: &[Duration]) -> anyhow::Result<(Vec<WorkerHandle>, Vec<String>)> {
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for &delay in delays {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = worker::spawn(listener, "bench-worker", "", catalog(), move |_conn| {
+            Ok(StubBackend::new(10).with_delay(delay))
+        })?;
+        addrs.push(handle.addr().to_string());
+        handles.push(handle);
+    }
+    Ok((handles, addrs))
+}
+
+/// The tentpole comparison: the same three-speed fleet driven lockstep
+/// (window 1, one chunk in flight per worker — the pre-pipelining data
+/// plane) vs pipelined (several id-tagged Forwards in flight, chunk
+/// sizes skewed by the latency EWMA).  Lockstep is paced by the
+/// slowest box; pipelined keeps the fast one busy.
+fn pipelined_vs_lockstep_section() -> anyhow::Result<()> {
+    println!();
+    println!("=== pipelined vs lockstep scatter/gather (latency-skewed fleet) ===");
+    let delays = [Duration::from_micros(200), Duration::from_millis(1), Duration::from_millis(3)];
+    println!(
+        "{:>10} {:>7} {:>7} {:>9} {:>12} {:>12}",
+        "mode", "window", "batch", "rounds", "images/s", "ms/forward"
+    );
+    let elems = 64usize;
+    let (batch, rounds) = (96usize, 30usize);
+    let mut lockstep_ips = 0.0f64;
+    for &(label, window) in &[("lockstep", 1usize), ("pipelined", 6)] {
+        let (handles, addrs) = spawn_skewed(&delays)?;
+        let stats = FleetStats::default();
+        let fleet = FleetBackend::connect_with(&addrs, stats.clone())?;
+        let mut fleet = fleet.with_pipeline_window(window);
+        fleet.prepare(&catalog())?;
+        let images: Vec<f32> = (0..batch * elems).map(|i| (i % 10) as f32).collect();
+        // warmup rounds let the latency EWMA learn the skew
+        for _ in 0..5 {
+            fleet.forward(0, &images, batch)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            fleet.forward(0, &images, batch)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let ips = (rounds * batch) as f64 / wall;
+        let tail = if label == "lockstep" {
+            lockstep_ips = ips;
+            String::new()
+        } else {
+            format!("   ({:.2}x lockstep)", ips / lockstep_ips.max(1e-9))
+        };
+        println!(
+            "{label:>10} {window:>7} {batch:>7} {rounds:>9} {ips:>12.0} {:>12.3}{tail}",
+            wall * 1e3 / rounds as f64,
+        );
+        // per-worker attribution: chunk sizing should favor the fast box
+        let (ws, _, _) = stats.snapshot();
+        let share: Vec<String> = addrs
+            .iter()
+            .map(|a| {
+                let images = ws.iter().find(|(k, _)| k == a).map(|(_, w)| w.requests);
+                format!("{}", images.unwrap_or(0))
+            })
+            .collect();
+        println!("           per-worker images (0.2/1/3 ms): {}", share.join(" / "));
+        fleet.shutdown_fleet();
+        for h in handles {
+            h.join();
+        }
+    }
+    Ok(())
+}
+
 fn switch_broadcast_section() -> anyhow::Result<()> {
     println!();
     println!("=== fleet-wide OP switch broadcast cost (idle workers) ===");
@@ -120,5 +196,6 @@ fn switch_broadcast_section() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     throughput_section()?;
+    pipelined_vs_lockstep_section()?;
     switch_broadcast_section()
 }

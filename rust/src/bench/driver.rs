@@ -140,10 +140,28 @@ pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
                 })?);
             }
             let stats = FleetStats::default();
-            let control = FleetBackend::connect_with(&addrs, stats.clone())?;
+            // scenario pipeline knob: 0 = library default / env override,
+            // otherwise pin the in-flight window so recorded runs don't
+            // depend on the environment
+            let pipeline = sc.deployment.pipeline;
+            let window = |be: FleetBackend| {
+                if pipeline > 0 {
+                    be.with_pipeline_window(pipeline)
+                } else {
+                    be
+                }
+            };
+            let control = window(FleetBackend::connect_with(&addrs, stats.clone())?);
             let st = stats.clone();
             let server = Server::start(
-                move |_w| FleetBackend::connect_with(&addrs, st.clone()),
+                move |_w| {
+                    let be = FleetBackend::connect_with(&addrs, st.clone())?;
+                    Ok(if pipeline > 0 {
+                        be.with_pipeline_window(pipeline)
+                    } else {
+                        be
+                    })
+                },
                 OpTable::new(rig_ops),
                 cfg,
             )?;

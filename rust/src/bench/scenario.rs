@@ -94,6 +94,10 @@ pub struct Deployment {
     pub retag_downgrades: bool,
     /// Stub-backend compute delay, microseconds (ignored for native).
     pub stub_delay_us: u64,
+    /// In-flight Forwards per fleet worker connection: 0 = library
+    /// default (or the `QOS_NETS_FLEET_PIPELINE` override), 1 =
+    /// lockstep request/response.  Fleet deployments only.
+    pub pipeline: usize,
     /// Non-empty = spin up these loopback fleet workers and serve
     /// through a `FleetBackend` (scatter/gather + fleet-wide switch
     /// broadcast) instead of in-process backends.
@@ -235,7 +239,7 @@ impl Scenario {
             BackendKind::Native => "native",
             BackendKind::Stub => "stub",
         };
-        let deployment = Json::obj(vec![
+        let mut deployment_pairs = vec![
             ("backend", Json::str(backend)),
             ("workers", Json::num(self.deployment.workers as f64)),
             ("min_workers", Json::num(self.deployment.min_workers as f64)),
@@ -244,8 +248,15 @@ impl Scenario {
             ("max_wait_ms", Json::num(self.deployment.max_wait_ms as f64)),
             ("retag_downgrades", Json::Bool(self.deployment.retag_downgrades)),
             ("stub_delay_us", Json::num(self.deployment.stub_delay_us as f64)),
-            ("fleet", Json::Arr(fleet)),
-        ]);
+        ];
+        // emitted only when pinned, so the canonical JSON (and with it
+        // `config_hash`) of pre-pipelining scenarios is unchanged and
+        // committed baselines stay comparable
+        if self.deployment.pipeline > 0 {
+            deployment_pairs.push(("pipeline", Json::num(self.deployment.pipeline as f64)));
+        }
+        deployment_pairs.push(("fleet", Json::Arr(fleet)));
+        let deployment = Json::obj(deployment_pairs);
         let mut qos_pairs: Vec<(&str, Json)> = Vec::new();
         match &self.qos.source {
             QosSource::Constant(b) => {
@@ -417,6 +428,12 @@ impl Scenario {
         if !d.fleet.is_empty() && d.backend != BackendKind::Stub {
             bail!("scenario {}: loopback fleet workers serve the stub backend", self.name);
         }
+        if d.pipeline > 0 && d.fleet.is_empty() {
+            bail!(
+                "scenario {}: deployment.pipeline only applies to fleet deployments",
+                self.name
+            );
+        }
         for (i, w) in d.fleet.iter().enumerate() {
             if w.hb_interval_ms == 0 || w.hb_timeout_ms == 0 {
                 bail!("scenario {}: fleet worker {i}: heartbeat cadence must be > 0 ms", self.name);
@@ -547,6 +564,7 @@ fn parse_deployment(v: &Json) -> Result<Deployment> {
         max_wait_ms: req_f64(v, "max_wait_ms")? as u64,
         retag_downgrades: v.get("retag_downgrades").and_then(|x| x.as_bool()).unwrap_or(false),
         stub_delay_us: v.get("stub_delay_us").and_then(|x| x.as_usize()).unwrap_or(0) as u64,
+        pipeline: v.get("pipeline").and_then(|x| x.as_usize()).unwrap_or(0),
         fleet,
     })
 }
@@ -606,6 +624,7 @@ fn base_deployment(backend: BackendKind) -> Deployment {
         max_wait_ms: 4,
         retag_downgrades: false,
         stub_delay_us: 0,
+        pipeline: 0,
         fleet: Vec::new(),
     }
 }
@@ -775,13 +794,17 @@ fn ladder_thrash() -> Scenario {
     }
 }
 
-/// A three-speed loopback fleet with mixed heartbeat leashes: per-worker
-/// attribution under scatter/gather plus the advertised-cadence minimum.
+/// A three-speed loopback fleet with mixed heartbeat leashes:
+/// per-worker attribution under pipelined scatter/gather — the
+/// latency EWMA must skew chunk sizes toward the fast box — plus the
+/// advertised-cadence minimum.  The pipeline window is pinned so the
+/// recorded report does not depend on `QOS_NETS_FLEET_PIPELINE`.
 fn heterogeneous_fleet() -> Scenario {
     Scenario {
         name: "heterogeneous_fleet".into(),
         description: "three loopback fleet workers at 100/400/1200 us with mixed heartbeat \
-                      leashes — per-worker attribution and fast-eviction cadence"
+                      leashes — latency-skewed chunk sizing under a pinned pipeline window, \
+                      per-worker attribution and fast-eviction cadence"
             .into(),
         duration_s: 8.0,
         seed: 23,
@@ -798,6 +821,7 @@ fn heterogeneous_fleet() -> Scenario {
         ],
         deployment: Deployment {
             workers: 2,
+            pipeline: 4,
             fleet: vec![
                 FleetWorkerSpec { delay_us: 100, hb_interval_ms: 1000, hb_timeout_ms: 500 },
                 FleetWorkerSpec { delay_us: 400, hb_interval_ms: 400, hb_timeout_ms: 200 },

@@ -10,7 +10,12 @@
 //! (`qos-nets worker`), a separate control-plane connection broadcasts
 //! every controller switch fleet-wide (drained upgrades are acked by
 //! every surviving worker before the local switch applies), and the
-//! final report adds per-remote-worker attribution.
+//! final report adds per-remote-worker attribution.  Each heartbeat
+//! tick also re-probes evicted workers (recovered ones rejoin with
+//! their stats preserved) and, with `--registry ADDR`, admits workers
+//! that announced themselves via `worker --join`.  `--pipeline N` pins
+//! the per-connection in-flight Forward window (default: library
+//! default or the `QOS_NETS_FLEET_PIPELINE` override).
 
 use std::time::{Duration, Instant};
 
@@ -21,7 +26,7 @@ use crate::backend::PjrtBackend;
 use crate::backend::{Backend, NativeBackend, OpTable};
 use crate::cli::commands::{fleet_addrs, load_db, load_experiment, native_kernel};
 use crate::cli::Args;
-use crate::fleet::{FleetBackend, FleetStats};
+use crate::fleet::{FleetBackend, FleetRegistry, FleetStats};
 use crate::pipeline::Experiment;
 use crate::plan::OpPlan;
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
@@ -59,24 +64,54 @@ pub fn run(args: &Args) -> Result<()> {
     };
 
     if let Some(addrs) = fleet_addrs(args)? {
+        let pipeline = args.get_usize("pipeline", 0);
+        let registry = match args.get("registry") {
+            Some(addr) => {
+                let reg = FleetRegistry::bind(addr)?;
+                println!(
+                    "fleet registry on {} — workers join with `qos-nets worker --join {}`",
+                    reg.addr(),
+                    reg.addr()
+                );
+                Some(reg)
+            }
+            None => None,
+        };
         let stats = FleetStats::default();
         // control plane: its own connections, so switch broadcasts and
         // heartbeats never interleave with in-flight batches
         let control = FleetBackend::connect_with(&addrs, stats.clone())?;
+        let control = if pipeline > 0 {
+            control.with_pipeline_window(pipeline)
+        } else {
+            control
+        };
         control.check_mode(mode)?;
         println!(
-            "fleet: {} worker(s) connected ({})",
+            "fleet: {} worker(s) connected ({}), pipeline window {}",
             control.live_workers(),
-            addrs.join(", ")
+            addrs.join(", "),
+            control.pipeline_window(),
         );
         let st = stats.clone();
         let server = Server::start(
-            move |_w| FleetBackend::connect_with(&addrs, st.clone()),
+            move |_w| {
+                let be = FleetBackend::connect_with(&addrs, st.clone())?;
+                Ok(if pipeline > 0 {
+                    be.with_pipeline_window(pipeline)
+                } else {
+                    be
+                })
+            },
             table,
             cfg,
         )?;
-        return drive(args, &exp, server, controller, Some((control, stats)));
+        return drive(args, &exp, server, controller, Some((control, stats, registry)));
     }
+    anyhow::ensure!(
+        !args.has("registry"),
+        "--registry needs a fleet coordinator (pass --fleet too)"
+    );
 
     // the worker factory runs on each worker's own thread; capture only
     // cheap cloneable state so the closure is Send + Sync
@@ -128,7 +163,7 @@ fn drive<B: Backend + 'static>(
     exp: &Experiment,
     server: Server<B>,
     mut controller: QosController,
-    mut fleet: Option<(FleetBackend, FleetStats)>,
+    mut fleet: Option<(FleetBackend, FleetStats, Option<FleetRegistry>)>,
 ) -> Result<()> {
     let secs = args.get_f64("secs", 3.0);
     let rate = args.get_f64("rate", 200.0); // requests/second
@@ -144,7 +179,7 @@ fn drive<B: Backend + 'static>(
     // steps (minimum one step)
     let (hb_every, hb_timeout) = fleet
         .as_ref()
-        .map(|(c, _)| ((c.hb_interval().as_millis() as u64 / 50).max(1), c.hb_timeout()))
+        .map(|(c, _, _)| ((c.hb_interval().as_millis() as u64 / 50).max(1), c.hb_timeout()))
         .unwrap_or((20, Duration::from_millis(500)));
     let mut receivers = Vec::new();
     let mut rng = Rng::new(42);
@@ -158,7 +193,7 @@ fn drive<B: Backend + 'static>(
             if mode == SwitchMode::Drain {
                 drains += 1;
             }
-            if let Some((control, _)) = fleet.as_mut() {
+            if let Some((control, _, _)) = fleet.as_mut() {
                 // fleet first: a drained upgrade is only reported once
                 // every surviving remote worker has acked the barrier
                 let n = control.set_operating_point(idx, mode)? as u64;
@@ -168,9 +203,23 @@ fn drive<B: Backend + 'static>(
             }
             server.set_operating_point_with(idx, mode)?;
         }
-        if let Some((control, _)) = fleet.as_mut() {
+        if let Some((control, _, registry)) = fleet.as_mut() {
             if step as u64 % hb_every == hb_every - 1 {
                 control.heartbeat(hb_timeout);
+                // grow: workers that announced via `worker --join`
+                if let Some(reg) = registry {
+                    let pending = reg.take_new();
+                    if !pending.is_empty() {
+                        let n = control.admit(&pending);
+                        println!("fleet: admitted {n}/{} joining worker(s)", pending.len());
+                    }
+                }
+                // heal: evicted workers that recovered rejoin with
+                // their stats (and the OP ladder) restored
+                let rejoined = control.reprobe();
+                if rejoined > 0 {
+                    println!("fleet: {rejoined} evicted worker(s) rejoined");
+                }
             }
         }
         let step_end = started + Duration::from_millis(50 * (step as u64 + 1));
@@ -237,20 +286,28 @@ fn drive<B: Backend + 'static>(
         "  mean relative multiplication power over run: {:.2}%",
         100.0 * energy / submitted.max(1) as f64
     );
-    if let Some((control, stats)) = fleet {
+    if let Some((control, stats, _registry)) = fleet {
         let (workers, requeues, evictions) = stats.snapshot();
+        let rejoins: u64 = workers.iter().map(|(_, w)| w.rejoins).sum();
         println!(
-            "  fleet: {} worker(s) live at end, drain acks={fleet_acks} requeued chunks={requeues} evictions={evictions}",
+            "  fleet: {} worker(s) live at end, drain acks={fleet_acks} requeued chunks={requeues} evictions={evictions} rejoins={rejoins}",
             control.live_workers()
         );
         for (addr, w) in workers {
+            let mut tags = String::new();
+            if w.evicted {
+                tags.push_str("  [evicted]");
+            }
+            if w.rejoins > 0 {
+                tags.push_str(&format!("  [rejoined x{}]", w.rejoins));
+            }
             println!(
-                "    {addr}: {} requests in {} batches  mean={:.2}ms errors={}{}",
+                "    {addr}: {} requests in {} batches  mean={:.2}ms ewma/img={:.0}us errors={}{tags}",
                 w.requests,
                 w.batches,
                 w.mean_latency_us() / 1e3,
+                w.ewma_img_us,
                 w.errors,
-                if w.evicted { "  [evicted]" } else { "" }
             );
         }
     }

@@ -13,6 +13,12 @@
 //! fleet-wide minimum, so a short leash here shortens eviction time
 //! for the whole deployment (the `heterogeneous_fleet` bench scenario
 //! exercises exactly this).
+//!
+//! `--join HOST:PORT` announces the bound address to a coordinator's
+//! fleet registry (`serve --registry`) before serving, so the fleet
+//! grows under load without restarting the coordinator.  `--advertise`
+//! overrides the announced address when the worker sits behind NAT or
+//! binds a wildcard.
 
 use std::net::TcpListener;
 use std::time::Duration;
@@ -26,7 +32,7 @@ use crate::cli::commands::{load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::worker;
 use crate::fleet::worker::WorkerOptions;
-use crate::fleet::{DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS};
+use crate::fleet::{register_with, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS};
 use crate::pipeline;
 use crate::plan::OpPlan;
 
@@ -57,6 +63,15 @@ pub fn run(args: &Args) -> Result<()> {
     println!("  catalog ({} OPs): {}", names.len(), names.join(", "));
     println!("  heartbeat: interval {hb_interval_ms} ms, timeout {hb_timeout_ms} ms (advertised)");
     println!("  stop with a coordinator Shutdown frame (e.g. fleet teardown)");
+
+    // announce ourselves to a coordinator's registry before serving; the
+    // coordinator admits pending workers on its next heartbeat tick
+    if let Some(registry) = args.get("join") {
+        let advertised = addr.to_string();
+        let advertise = args.get_or("advertise", &advertised);
+        register_with(registry, advertise)?;
+        println!("  joined fleet registry at {registry} (advertised as {advertise})");
+    }
 
     let opts = WorkerOptions::new(name, mode).heartbeat(
         Duration::from_millis(hb_interval_ms as u64),

@@ -82,19 +82,26 @@ COMMANDS
                                 evaluates over remote fleet workers)
   serve     --exp E [--backend B] [--kernel K] [--secs S]
             [--workers N] [--min-workers N] [--max-workers N]
-            [--fleet H:P,H:P,...] [--retag-downgrades]
+            [--fleet H:P,H:P,...] [--pipeline N] [--registry ADDR]
+            [--retag-downgrades]
                                 QoS serving demo: elastic batching server
                                 with a power-budget trace driving OP
                                 switches (draining upgrades / immediate
                                 downgrades) and load-driven worker
                                 scaling (B: native|pjrt, default native;
                                 --fleet scatters batches across remote
-                                workers and broadcasts OP switches
-                                fleet-wide; --retag-downgrades lets an
+                                workers over pipelined connections and
+                                broadcasts OP switches fleet-wide;
+                                --pipeline pins the in-flight Forward
+                                window per worker, 1 = lockstep;
+                                --registry binds a join endpoint so
+                                `worker --join` grows the fleet under
+                                load; --retag-downgrades lets an
                                 immediate downgrade retag already-formed
                                 batches to the cheaper OP)
   worker    --exp E [--listen ADDR] [--backend B] [--mode M] [--kernel K]
             [--hb-interval-ms N] [--hb-timeout-ms N]
+            [--join HOST:PORT] [--advertise ADDR]
                                 fleet worker daemon: serves the
                                 experiment's OP catalog (exact baseline
                                 + plan ladder) over the fleet wire
@@ -102,7 +109,10 @@ COMMANDS
                                 Shutdown (default ADDR 127.0.0.1:7070;
                                 the hb flags set the heartbeat cadence
                                 advertised in HelloAck — coordinators
-                                probe at the fleet-wide minimum)
+                                probe at the fleet-wide minimum; --join
+                                announces the worker to a coordinator's
+                                --registry endpoint, --advertise
+                                overrides the announced address)
   bench     --scenario NAME|FILE.json [--seed N] [--secs S] [--out FILE]
             [--dashboard] [--list] [--print-scenario]
                                 scenario-driven load harness: replays a

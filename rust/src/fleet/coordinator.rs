@@ -1,31 +1,49 @@
 //! Coordinator side of the fleet: [`FleetBackend`] implements the
 //! unified [`Backend`] trait over a set of remote workers.
 //!
-//! * **Scatter/gather.**  `forward` splits a batch into contiguous
-//!   chunks, one per live worker, runs them in parallel (scoped
-//!   threads, one per peer connection) and reassembles the logits in
-//!   submission order — so the fleet is bit-identical to a single
-//!   backend serving the same stream, regardless of how the batch was
-//!   split.
-//! * **Failure semantics.**  A chunk whose worker dies mid-call evicts
-//!   that worker and is *requeued* onto the survivors (round-robin,
-//!   bounded by [`FleetBackend::with_max_retries`]); the forward only
-//!   fails once a chunk exhausts its retries or no workers remain.  No
-//!   request is ever silently dropped.
+//! * **Pipelined scatter/gather.**  `forward` carves the batch into
+//!   contiguous chunks pulled from a shared work queue, one scoped
+//!   pump thread per live worker connection.  Each pump keeps up to
+//!   `min(pipeline window, worker max_inflight)` id-tagged Forwards in
+//!   flight, reads replies in completion order and reassembles them by
+//!   id — so a fast worker streams through many chunks while a slow
+//!   one chews on its first, and the result is still bit-identical to
+//!   a single backend serving the same stream.  Chunk sizes come from
+//!   each worker's observed per-image latency (EWMA in
+//!   [`FleetStats`]): fast workers pull big chunks, slow workers pull
+//!   small ones, and a heterogeneous fleet stops being paced by its
+//!   slowest box.  `QOS_NETS_FLEET_PIPELINE=off` (or any window
+//!   number) overrides the default window of
+//!   [`DEFAULT_PIPELINE_WINDOW`]; window 1 is the legacy lockstep
+//!   request/response mode.
+//! * **Membership.**  Workers move through a state machine instead of
+//!   being evicted for life: `Live → Suspect` on the first failure,
+//!   `Suspect → Evicted` on the second (each failed chunk is requeued
+//!   onto survivors either way), `Evicted → Rejoining → Live` when a
+//!   re-probe completes a fresh Hello/Prepare/SetOp handshake.  All
+//!   transitions are single-sourced through
+//!   [`FleetStats::report_failure`]/[`FleetStats::mark_live`], so the
+//!   `evictions` counter moves exactly once per membership epoch no
+//!   matter how many backends (heartbeat and data plane included)
+//!   observe the same dead worker.  A registry join
+//!   ([`FleetBackend::admit`], fed by `fleet::registry`) grows the
+//!   fleet under load; other backends sharing the same [`FleetStats`]
+//!   adopt admitted workers on their next forward.
 //! * **Fleet-wide switching.**  [`FleetBackend::set_operating_point`]
 //!   broadcasts `SetOp` with the PR-2 [`SwitchMode`] semantics: `Drain`
 //!   writes the barrier frame to every live worker first (so they all
 //!   drain concurrently), then collects one ack per surviving worker
-//!   before returning; `Immediate` is fire-and-forget.
+//!   before returning; `Immediate` is a fire-and-forget store.  Worker
+//!   connections queue frames FIFO, so a drain barrier sent after
+//!   pipelined Forwards acks only once all of them have completed.
 //! * **Attribution.**  Every instance records per-worker request/batch
-//!   counts, cumulative latency and eviction state into a shared
-//!   [`FleetStats`]; `serve --fleet` hands one handle to every server
-//!   worker's backend and prints the per-worker table at the end (the
-//!   heterogeneous-pool attribution follow-on from the elastic-server
-//!   PR).
+//!   counts, cumulative latency, EWMA and membership state into a
+//!   shared [`FleetStats`]; `serve --fleet` hands one handle to every
+//!   server worker's backend and prints the per-worker table at the
+//!   end.
 
-use std::collections::BTreeMap;
-use std::net::TcpStream;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,7 +58,45 @@ use crate::qos::SwitchMode;
 /// worker is indistinguishable from a dead one past this.
 const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Per-worker serving statistics (see [`FleetStats`]).
+/// In-flight Forwards per worker connection unless overridden by
+/// [`FleetBackend::with_pipeline_window`] or `QOS_NETS_FLEET_PIPELINE`.
+pub const DEFAULT_PIPELINE_WINDOW: usize = 4;
+
+/// Target service time for one chunk, microseconds: a worker's chunk
+/// size is chosen so `chunk_len * ewma_img_us ≈` this quantum, which
+/// is what skews chunk sizes toward fast workers.
+const CHUNK_QUANTUM_US: f64 = 5_000.0;
+
+/// Smoothing factor for the per-image latency EWMA.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Handshake/readmit timeout used on the data-plane refresh path, so a
+/// dead host cannot stall `forward` for the full I/O timeout.
+const REFRESH_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Where one worker stands in the membership state machine.  The
+/// two-strike path `Live → Suspect → Evicted` tolerates one transient
+/// failure per epoch; `Rejoining` marks an evicted worker mid-re-probe
+/// until a fresh handshake completes and [`FleetStats::mark_live`]
+/// starts its next epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemberState {
+    /// Serving (or never yet observed failing).
+    #[default]
+    Live,
+    /// One failure this epoch; the next probe either readmits or
+    /// evicts.
+    Suspect,
+    /// Two failures without a successful handshake in between; only a
+    /// re-probe ([`FleetBackend::reprobe`]) or a registry re-join can
+    /// bring it back.
+    Evicted,
+    /// An eviction survivor with a re-probe in progress.
+    Rejoining,
+}
+
+/// Per-worker serving statistics and membership state (see
+/// [`FleetStats`]).
 #[derive(Debug, Default, Clone)]
 pub struct WorkerStats {
     /// Images this worker served.
@@ -51,8 +107,22 @@ pub struct WorkerStats {
     pub errors: u64,
     /// Cumulative wall time of successful forward calls, microseconds.
     pub latency_us_sum: u64,
-    /// Whether some coordinator connection evicted this worker.
+    /// Legacy view of `state == Evicted` (kept for reports).
     pub evicted: bool,
+    /// Membership state, single-sourced across every backend sharing
+    /// the registry.
+    pub state: MemberState,
+    /// Membership epoch: bumped every time the worker (re)enters
+    /// `Live`, so each epoch's eviction counts exactly once.
+    pub epoch: u64,
+    /// Completed eviction → live round trips.
+    pub rejoins: u64,
+    /// EWMA of per-image forward latency, microseconds (0 until the
+    /// first successful chunk); drives latency-aware chunk sizing.
+    pub ewma_img_us: f64,
+    /// Epoch whose eviction has already been counted (dedup across
+    /// heartbeat + data plane + multiple backends).
+    counted_epoch: Option<u64>,
 }
 
 impl WorkerStats {
@@ -73,9 +143,11 @@ struct FleetStatsInner {
     evictions: u64,
 }
 
-/// Shared per-worker attribution registry, keyed by worker address.
-/// Cheap to clone; every [`FleetBackend`] built from the same handle
-/// (e.g. one per server worker thread) folds into the same table.
+/// Shared per-worker attribution registry and membership authority,
+/// keyed by worker address.  Cheap to clone; every [`FleetBackend`]
+/// built from the same handle (e.g. one per server worker thread)
+/// folds into the same table, and membership transitions observed by
+/// any of them are visible to all.
 #[derive(Clone, Default)]
 pub struct FleetStats {
     inner: Arc<Mutex<FleetStatsInner>>,
@@ -91,18 +163,90 @@ impl FleetStats {
         self.inner.lock().unwrap().requeues += 1;
     }
 
-    /// Mark one worker evicted.  The counter is per *worker*, not per
-    /// coordinator connection: several backends sharing this registry
-    /// (one per server worker thread + the control plane) all losing
-    /// the same dead worker still count one eviction.
-    fn record_eviction(&self, addr: &str) {
+    /// Fold one successful chunk into the worker's counters and its
+    /// per-image latency EWMA.
+    fn record_success(&self, addr: &str, images: usize, latency_us: u64) {
+        let per_img = latency_us as f64 / images.max(1) as f64;
+        self.with_worker(addr, |w| {
+            w.requests += images as u64;
+            w.batches += 1;
+            w.latency_us_sum += latency_us;
+            w.ewma_img_us = if w.ewma_img_us <= 0.0 {
+                per_img
+            } else {
+                (1.0 - EWMA_ALPHA) * w.ewma_img_us + EWMA_ALPHA * per_img
+            };
+        });
+    }
+
+    fn ewma_img_us(&self, addr: &str) -> f64 {
+        self.inner.lock().unwrap().workers.get(addr).map_or(0.0, |w| w.ewma_img_us)
+    }
+
+    /// The worker's current membership state (`Live` if never seen —
+    /// a fresh address has nothing held against it).
+    pub fn state_of(&self, addr: &str) -> MemberState {
+        self.inner.lock().unwrap().workers.get(addr).map_or(MemberState::Live, |w| w.state)
+    }
+
+    fn live_addrs(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .workers
+            .iter()
+            .filter(|(_, w)| w.state == MemberState::Live)
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    /// Advance the state machine on a failure: `Live → Suspect` (first
+    /// strike), anything else `→ Evicted`.  The `evictions` counter
+    /// moves only on the first eviction of each membership epoch, so a
+    /// worker failing heartbeat and forward in the same tick — or
+    /// observed dead by several backends — still counts once.
+    fn report_failure(&self, addr: &str) -> MemberState {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         let w = inner.workers.entry(addr.to_string()).or_default();
-        if !w.evicted {
-            w.evicted = true;
-            inner.evictions += 1;
-        }
+        w.errors += 1;
+        w.state = match w.state {
+            MemberState::Live => MemberState::Suspect,
+            MemberState::Suspect | MemberState::Rejoining | MemberState::Evicted => {
+                if w.counted_epoch != Some(w.epoch) {
+                    w.counted_epoch = Some(w.epoch);
+                    inner.evictions += 1;
+                }
+                w.evicted = true;
+                MemberState::Evicted
+            }
+        };
+        w.state
+    }
+
+    /// A fresh handshake completed: back to `Live`, opening the next
+    /// membership epoch.  Counters (requests, latency, EWMA) persist
+    /// across the round trip — a rejoining worker keeps its history.
+    fn mark_live(&self, addr: &str) {
+        self.with_worker(addr, |w| {
+            if w.state != MemberState::Live {
+                if matches!(w.state, MemberState::Evicted | MemberState::Rejoining) {
+                    w.rejoins += 1;
+                }
+                w.state = MemberState::Live;
+                w.evicted = false;
+                w.epoch += 1;
+            }
+        });
+    }
+
+    /// Flag an evicted worker as having a re-probe in progress.
+    fn set_rejoining(&self, addr: &str) {
+        self.with_worker(addr, |w| {
+            if w.state == MemberState::Evicted {
+                w.state = MemberState::Rejoining;
+            }
+        });
     }
 
     /// Snapshot: per-worker stats (sorted by address), total requeued
@@ -126,13 +270,16 @@ struct Peer {
     /// Heartbeat cadence the worker advertised in `HelloAck`.
     hb_interval_ms: u64,
     hb_timeout_ms: u64,
-    /// `None` once evicted.
+    /// Pipelining capability the worker advertised in `HelloAck`
+    /// (legacy workers advertise nothing and get 1 = lockstep).
+    max_inflight: u64,
+    /// `None` while suspect/evicted.
     stream: Option<TcpStream>,
 }
 
 /// One scatter/gather work item: images `[start..start + len)` of the
 /// current forward call, with its requeue budget consumed so far.
-#[derive(Clone, Copy)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 struct Chunk {
     start: usize,
     len: usize,
@@ -149,17 +296,17 @@ enum ChunkOutcome {
     Io,
 }
 
-/// Drop a peer's connection and account the failure — the single place
-/// eviction bookkeeping lives (the `evictions` counter stays per
-/// worker, deduplicated inside [`FleetStats`]).
-fn evict(peer: &mut Peer, stats: &FleetStats) {
+/// Drop a peer's poisoned connection and advance the membership state
+/// machine — the single place failure bookkeeping lives, so heartbeat
+/// and data-plane failures can never double-count an eviction.
+fn fail(peer: &mut Peer, stats: &FleetStats) {
     peer.stream = None;
-    stats.with_worker(&peer.addr, |w| w.errors += 1);
-    stats.record_eviction(&peer.addr);
+    stats.report_failure(&peer.addr);
 }
 
-/// Strict request/response exchange with one peer; evicts on transport
-/// failure (the stream is poisoned mid-frame, so it cannot be reused).
+/// Strict request/response exchange with one peer; reports on
+/// transport failure (the stream is poisoned mid-frame, so it cannot
+/// be reused).
 fn call(
     peer: &mut Peer,
     stats: &FleetStats,
@@ -167,21 +314,198 @@ fn call(
     payload: &[f32],
 ) -> Result<(Frame, Vec<f32>)> {
     let Some(stream) = peer.stream.as_mut() else {
-        bail!("worker {} already evicted", peer.addr);
+        bail!("worker {} not connected", peer.addr);
     };
     let r = wire::write_frame(stream, frame, payload).and_then(|()| wire::read_frame(stream));
     match r {
         Ok(reply) => Ok(reply),
         Err(e) => {
-            evict(peer, stats);
+            fail(peer, stats);
             Err(e.context(format!("worker {}", peer.addr)))
         }
     }
 }
 
-/// A remote-fleet [`Backend`]: scatter/gather over TCP workers with
-/// failover, plus the fleet-wide control plane (switch broadcast,
-/// heartbeats, shutdown).  See the module docs.
+/// What one completed `Hello` exchange yields.
+struct Handshake {
+    stream: TcpStream,
+    classes: usize,
+    mode: String,
+    hb_interval_ms: u64,
+    hb_timeout_ms: u64,
+    max_inflight: u64,
+}
+
+/// Connect to `addr` under `timeout` and run the `Hello` exchange.
+fn handshake(addr: &str, timeout: Duration) -> Result<Handshake> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve fleet worker {addr}"))?
+        .next()
+        .with_context(|| format!("fleet worker {addr} resolves to no address"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connect to fleet worker {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    wire::write_frame(&mut stream, &Frame::Hello { version: PROTOCOL_VERSION }, &[])
+        .with_context(|| format!("hello to fleet worker {addr}"))?;
+    let (reply, _) = wire::read_frame(&mut stream)
+        .with_context(|| format!("hello ack from fleet worker {addr}"))?;
+    match reply {
+        Frame::HelloAck {
+            classes,
+            mode,
+            hb_interval_ms,
+            hb_timeout_ms,
+            max_inflight,
+            ..
+        } => Ok(Handshake {
+            stream,
+            classes,
+            mode,
+            hb_interval_ms,
+            hb_timeout_ms,
+            max_inflight,
+        }),
+        Frame::Err { message, .. } => bail!("fleet worker {addr} refused hello: {message}"),
+        other => bail!("fleet worker {addr}: unexpected {} to hello", other.type_name()),
+    }
+}
+
+/// The pipeline window configured via `QOS_NETS_FLEET_PIPELINE`:
+/// `off`/`0`/`false` force the legacy lockstep mode (window 1), a
+/// number sets the window, anything else (or unset) takes the default.
+fn pipeline_from_env() -> usize {
+    match std::env::var("QOS_NETS_FLEET_PIPELINE") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            if v == "off" || v == "0" || v == "false" {
+                1
+            } else {
+                v.parse().ok().filter(|&n| n >= 1).unwrap_or(DEFAULT_PIPELINE_WINDOW)
+            }
+        }
+        Err(_) => DEFAULT_PIPELINE_WINDOW,
+    }
+}
+
+/// Images one chunk should carry for a worker with this per-image
+/// EWMA: size toward the service-time quantum, `fallback` (the even
+/// share) before any latency has been observed.
+fn chunk_target(ewma_img_us: f64, fallback: usize) -> usize {
+    if ewma_img_us <= 0.0 {
+        fallback.max(1)
+    } else {
+        ((CHUNK_QUANTUM_US / ewma_img_us) as usize).max(1)
+    }
+}
+
+/// Carve up to `want` images off the front of the work queue.  Spans
+/// that have already failed once (`attempts > 0`) are taken whole so
+/// the retry budget stays attached to the same images.
+fn take_chunk(queue: &Mutex<VecDeque<Chunk>>, want: usize) -> Option<Chunk> {
+    let mut q = queue.lock().unwrap();
+    let front = q.front_mut()?;
+    if front.len <= want || front.attempts > 0 {
+        return q.pop_front();
+    }
+    let take = Chunk { start: front.start, len: want, attempts: 0 };
+    front.start += want;
+    front.len -= want;
+    Some(take)
+}
+
+/// One worker connection's pump for one forward call: keep the window
+/// full of id-tagged Forwards pulled from the shared queue, read
+/// replies in completion order, match them back by id.  On transport
+/// failure every in-flight chunk becomes an `Io` outcome and the peer
+/// moves through the membership machine; on an application error the
+/// pump stops pulling but still drains its in-flight replies, so the
+/// connection stays frame-aligned for the next call.
+#[allow(clippy::too_many_arguments)]
+fn peer_pump(
+    peer: &mut Peer,
+    stats: FleetStats,
+    queue: &Mutex<VecDeque<Chunk>>,
+    window: usize,
+    fallback: usize,
+    op_idx: usize,
+    images: &[f32],
+    elems: usize,
+) -> Vec<(Chunk, ChunkOutcome)> {
+    let addr = peer.addr.clone();
+    let Some(mut stream) = peer.stream.take() else {
+        return Vec::new();
+    };
+    let win = window.min(peer.max_inflight.max(1) as usize).max(1);
+    let mut out: Vec<(Chunk, ChunkOutcome)> = Vec::new();
+    let mut inflight: VecDeque<(u64, Chunk, Instant)> = VecDeque::new();
+    let mut next_id: u64 = 1;
+    let mut pulling = true;
+    let mut healthy = true;
+    let find = |inflight: &VecDeque<(u64, Chunk, Instant)>, id: Option<u64>| -> Option<usize> {
+        match id {
+            Some(id) => inflight.iter().position(|(q, _, _)| *q == id),
+            // a reply without an id is only unambiguous in lockstep
+            None if inflight.len() == 1 => Some(0),
+            None => None,
+        }
+    };
+    loop {
+        while pulling && inflight.len() < win {
+            let want = chunk_target(stats.ewma_img_us(&addr), fallback);
+            let Some(chunk) = take_chunk(queue, want) else { break };
+            let frame = Frame::Forward { id: Some(next_id), op: Some(op_idx), batch: chunk.len };
+            let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
+            if wire::write_frame(&mut stream, &frame, data).is_err() {
+                out.push((chunk, ChunkOutcome::Io));
+                healthy = false;
+                break;
+            }
+            inflight.push_back((next_id, chunk, Instant::now()));
+            next_id += 1;
+        }
+        if !healthy || inflight.is_empty() {
+            break;
+        }
+        match wire::read_frame(&mut stream) {
+            Ok((Frame::Logits { id, .. }, logits)) => match find(&inflight, id) {
+                Some(pos) => {
+                    let (_, chunk, t0) = inflight.remove(pos).expect("indexed in-flight entry");
+                    stats.record_success(&addr, chunk.len, t0.elapsed().as_micros() as u64);
+                    out.push((chunk, ChunkOutcome::Logits(logits)));
+                }
+                None => healthy = false, // reply for nothing in flight
+            },
+            Ok((Frame::Err { id, message }, _)) => match find(&inflight, id) {
+                Some(pos) => {
+                    let (_, chunk, _) = inflight.remove(pos).expect("indexed in-flight entry");
+                    stats.with_worker(&addr, |w| w.errors += 1);
+                    out.push((chunk, ChunkOutcome::App(message)));
+                    pulling = false;
+                }
+                None => healthy = false,
+            },
+            Ok(_) | Err(_) => healthy = false, // protocol confusion / transport
+        }
+    }
+    if healthy {
+        peer.stream = Some(stream);
+    } else {
+        for (_, chunk, _) in inflight {
+            out.push((chunk, ChunkOutcome::Io));
+        }
+        drop(stream);
+        fail(peer, &stats);
+    }
+    out
+}
+
+/// A remote-fleet [`Backend`]: pipelined scatter/gather over TCP
+/// workers with failover and dynamic membership, plus the fleet-wide
+/// control plane (switch broadcast, heartbeats, re-probe, registry
+/// admission, shutdown).  See the module docs.
 pub struct FleetBackend {
     peers: Vec<Peer>,
     classes: usize,
@@ -189,6 +513,15 @@ pub struct FleetBackend {
     /// Requeue budget per chunk after its first failed attempt.
     max_retries: usize,
     io_timeout: Duration,
+    /// In-flight Forwards per worker connection (1 = lockstep).
+    pipeline: usize,
+    /// The ladder broadcast by the last successful `prepare`, replayed
+    /// on every rejoin handshake (a fresh connection means a fresh
+    /// worker-side backend with nothing resident).
+    ladder: Option<Vec<LadderRung>>,
+    /// The OP this backend last broadcast, replayed on rejoin so a
+    /// recovered worker serves the fleet's current point, not rung 0.
+    current_op: Option<usize>,
 }
 
 impl FleetBackend {
@@ -207,36 +540,25 @@ impl FleetBackend {
         let mut peers = Vec::with_capacity(addrs.len());
         let mut classes: Option<usize> = None;
         for addr in addrs {
-            let mut stream = TcpStream::connect(addr.as_str())
-                .with_context(|| format!("connect to fleet worker {addr}"))?;
-            stream.set_nodelay(true).ok();
-            stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
-            stream.set_write_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
-            wire::write_frame(&mut stream, &Frame::Hello { version: PROTOCOL_VERSION }, &[])
-                .with_context(|| format!("hello to fleet worker {addr}"))?;
-            let (reply, _) = wire::read_frame(&mut stream)
-                .with_context(|| format!("hello ack from fleet worker {addr}"))?;
-            let (c, mode, hb_interval_ms, hb_timeout_ms) = match reply {
-                Frame::HelloAck { classes, mode, hb_interval_ms, hb_timeout_ms, .. } => {
-                    (classes, mode, hb_interval_ms, hb_timeout_ms)
-                }
-                Frame::Err { message } => bail!("fleet worker {addr} refused hello: {message}"),
-                other => bail!("fleet worker {addr}: unexpected {} to hello", other.type_name()),
-            };
+            let hs = handshake(addr, DEFAULT_IO_TIMEOUT)?;
             match classes {
-                None => classes = Some(c),
-                Some(prev) if prev != c => bail!(
-                    "fleet workers disagree on classifier width ({prev} vs {c} at {addr}) — mixed experiments?"
+                None => classes = Some(hs.classes),
+                Some(prev) if prev != hs.classes => bail!(
+                    "fleet workers disagree on classifier width ({prev} vs {c} at {addr}) — mixed experiments?",
+                    c = hs.classes
                 ),
                 Some(_) => {}
             }
+            hs.stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
+            hs.stream.set_write_timeout(Some(DEFAULT_IO_TIMEOUT)).ok();
             stats.with_worker(addr, |_| {}); // register for attribution
             peers.push(Peer {
                 addr: addr.clone(),
-                mode,
-                hb_interval_ms,
-                hb_timeout_ms,
-                stream: Some(stream),
+                mode: hs.mode,
+                hb_interval_ms: hs.hb_interval_ms,
+                hb_timeout_ms: hs.hb_timeout_ms,
+                max_inflight: hs.max_inflight,
+                stream: Some(hs.stream),
             });
         }
         Ok(FleetBackend {
@@ -245,6 +567,9 @@ impl FleetBackend {
             stats,
             max_retries: 2,
             io_timeout: DEFAULT_IO_TIMEOUT,
+            pipeline: pipeline_from_env(),
+            ladder: None,
+            current_op: None,
         })
     }
 
@@ -254,7 +579,21 @@ impl FleetBackend {
         self
     }
 
-    /// Workers still connected.
+    /// Override the pipeline window (in-flight Forwards per worker
+    /// connection; 1 = legacy lockstep).  Defaults to
+    /// [`DEFAULT_PIPELINE_WINDOW`] or the `QOS_NETS_FLEET_PIPELINE`
+    /// environment override.
+    pub fn with_pipeline_window(mut self, window: usize) -> Self {
+        self.pipeline = window.max(1);
+        self
+    }
+
+    /// The configured pipeline window.
+    pub fn pipeline_window(&self) -> usize {
+        self.pipeline
+    }
+
+    /// Workers currently connected.
     pub fn live_workers(&self) -> usize {
         self.peers.iter().filter(|p| p.stream.is_some()).count()
     }
@@ -311,14 +650,168 @@ impl FleetBackend {
         Ok(())
     }
 
+    /// Re-run the full admission handshake (`Hello`, then `Prepare`
+    /// with the stored ladder, then `SetOp` to the fleet's current OP)
+    /// against peer `i` and, on success, mark it live.  Used by the
+    /// refresh path, heartbeat second strikes, [`reprobe`](Self::reprobe)
+    /// and registry admission.
+    fn readmit(&mut self, i: usize, timeout: Duration) -> Result<()> {
+        let addr = self.peers[i].addr.clone();
+        let hs = handshake(&addr, timeout)?;
+        anyhow::ensure!(
+            hs.classes == self.classes,
+            "rejoining worker {addr} changed classifier width ({} vs fleet {})",
+            hs.classes,
+            self.classes
+        );
+        let mut stream = hs.stream;
+        if let Some(ladder) = &self.ladder {
+            wire::write_frame(&mut stream, &Frame::Prepare { ladder: ladder.clone() }, &[])
+                .with_context(|| format!("prepare to rejoining worker {addr}"))?;
+            match wire::read_frame(&mut stream)
+                .with_context(|| format!("prepare ack from rejoining worker {addr}"))?
+            {
+                (Frame::Ok, _) => {}
+                (Frame::Err { message, .. }, _) => {
+                    bail!("rejoining worker {addr} rejected prepare: {message}")
+                }
+                (other, _) => {
+                    bail!("rejoining worker {addr}: unexpected {} to prepare", other.type_name())
+                }
+            }
+        }
+        if let Some(op) = self.current_op {
+            // fire-and-forget: align the recovered worker with the
+            // fleet's current operating point
+            wire::write_frame(&mut stream, &Frame::SetOp { op, drain: false }, &[])
+                .with_context(|| format!("set_op to rejoining worker {addr}"))?;
+        }
+        stream.set_read_timeout(Some(self.io_timeout)).ok();
+        stream.set_write_timeout(Some(self.io_timeout)).ok();
+        let peer = &mut self.peers[i];
+        peer.mode = hs.mode;
+        peer.hb_interval_ms = hs.hb_interval_ms;
+        peer.hb_timeout_ms = hs.hb_timeout_ms;
+        peer.max_inflight = hs.max_inflight;
+        peer.stream = Some(stream);
+        self.stats.mark_live(&addr);
+        Ok(())
+    }
+
+    /// Adopt a worker address this backend has no peer entry for yet
+    /// (admitted via the registry, possibly by a different backend
+    /// sharing the same [`FleetStats`]).
+    fn try_adopt(&mut self, addr: &str, timeout: Duration) -> Result<()> {
+        self.peers.push(Peer {
+            addr: addr.to_string(),
+            mode: String::new(),
+            hb_interval_ms: wire::DEFAULT_HB_INTERVAL_MS,
+            hb_timeout_ms: wire::DEFAULT_HB_TIMEOUT_MS,
+            max_inflight: 1,
+            stream: None,
+        });
+        let i = self.peers.len() - 1;
+        match self.readmit(i, timeout) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.peers.pop();
+                Err(e)
+            }
+        }
+    }
+
+    /// Data-plane membership refresh, run at the top of every forward:
+    /// give each `Suspect` peer one quick chance to rejoin (second
+    /// failure evicts it), and adopt workers other backends admitted
+    /// into the shared registry.  Bounded by [`REFRESH_TIMEOUT`] per
+    /// attempt so a dead host cannot stall the data plane.
+    fn refresh_peers(&mut self) {
+        let probe = self.io_timeout.min(REFRESH_TIMEOUT);
+        for i in 0..self.peers.len() {
+            if self.peers[i].stream.is_some() {
+                continue;
+            }
+            let addr = self.peers[i].addr.clone();
+            if self.stats.state_of(&addr) != MemberState::Suspect {
+                continue;
+            }
+            if self.readmit(i, probe).is_err() {
+                self.stats.report_failure(&addr);
+            }
+        }
+        if self.ladder.is_some() {
+            let known: BTreeSet<String> = self.peers.iter().map(|p| p.addr.clone()).collect();
+            for addr in self.stats.live_addrs() {
+                if !known.contains(&addr) {
+                    let _ = self.try_adopt(&addr, probe);
+                }
+            }
+        }
+    }
+
+    /// Re-probe every disconnected peer — including `Evicted` ones,
+    /// which the data plane no longer retries — re-admitting each that
+    /// completes a fresh handshake.  Returns how many rejoined.  Run
+    /// this from a control loop (the serve loop runs it on heartbeat
+    /// ticks) to pick recovered workers back up.
+    pub fn reprobe(&mut self) -> usize {
+        let timeout = self.io_timeout.min(Duration::from_millis(500));
+        let mut rejoined = 0usize;
+        for i in 0..self.peers.len() {
+            if self.peers[i].stream.is_some() {
+                continue;
+            }
+            let addr = self.peers[i].addr.clone();
+            if self.stats.state_of(&addr) == MemberState::Evicted {
+                self.stats.set_rejoining(&addr);
+            }
+            match self.readmit(i, timeout) {
+                Ok(()) => rejoined += 1,
+                Err(_) => {
+                    self.stats.report_failure(&addr);
+                }
+            }
+        }
+        rejoined
+    }
+
+    /// Registry admission: handshake each newly announced address and
+    /// add it to this backend's peer set (and, via the shared stats
+    /// registry, make it adoptable by every sibling backend).  Already
+    /// known addresses are left to [`reprobe`](Self::reprobe).
+    /// Returns how many workers joined.
+    pub fn admit(&mut self, addrs: &[String]) -> usize {
+        let timeout = self.io_timeout.min(Duration::from_millis(500));
+        let mut joined = 0usize;
+        for addr in addrs {
+            if let Some(i) = self.peers.iter().position(|p| p.addr == *addr) {
+                if self.peers[i].stream.is_none() {
+                    self.stats.set_rejoining(addr);
+                    match self.readmit(i, timeout) {
+                        Ok(()) => joined += 1,
+                        Err(_) => {
+                            self.stats.report_failure(addr);
+                        }
+                    }
+                }
+                continue;
+            }
+            if self.try_adopt(addr, timeout).is_ok() {
+                joined += 1;
+            }
+        }
+        joined
+    }
+
     /// Broadcast an operating-point switch fleet-wide.
     ///
     /// `Drain` first writes the barrier frame to every live worker (so
     /// the whole fleet drains concurrently), then reads one ack per
-    /// worker; workers that fail either phase are evicted.  Returns the
-    /// number of surviving workers that acked — the coordinator only
-    /// reports the switch complete once every survivor has.
-    /// `Immediate` is a fire-and-forget store on every worker.
+    /// worker; workers that fail either phase leave the live set.
+    /// Returns the number of surviving workers that acked — the
+    /// coordinator only reports the switch complete once every
+    /// survivor has.  `Immediate` is a fire-and-forget store on every
+    /// worker.
     pub fn set_operating_point(&mut self, op: usize, mode: SwitchMode) -> Result<usize> {
         let drain = mode == SwitchMode::Drain;
         let frame = Frame::SetOp { op, drain };
@@ -328,13 +821,14 @@ impl FleetBackend {
             let Some(stream) = peer.stream.as_mut() else { continue };
             match wire::write_frame(stream, &frame, &[]) {
                 Ok(()) => sent.push(i),
-                Err(_) => evict(peer, &stats),
+                Err(_) => fail(peer, &stats),
             }
         }
         if sent.is_empty() {
             bail!("fleet: no live workers to switch");
         }
         if !drain {
+            self.current_op = Some(op);
             return Ok(sent.len());
         }
         // collect one ack per worker *before* reporting any failure —
@@ -348,20 +842,20 @@ impl FleetBackend {
             match wire::read_frame(stream) {
                 Ok((Frame::Ok, _)) => acks += 1,
                 Ok((other, _)) => {
-                    // a worker that rejects (or mangles) the switch is
-                    // evicted: leaving it serving a different OP than
-                    // the rest of the fleet would be silently wrong
+                    // a worker that rejects (or mangles) the switch
+                    // leaves the live set: keeping it serving a
+                    // different OP than the rest of the fleet would be
+                    // silently wrong
                     let msg = match other {
-                        Frame::Err { message } => message,
+                        Frame::Err { message, .. } => message,
                         other => format!("unexpected {} to drain switch", other.type_name()),
                     };
-                    evict(peer, &stats);
+                    fail(peer, &stats);
                     if first_err.is_none() {
-                        first_err =
-                            Some(anyhow!("fleet worker {}: {msg}", peer.addr));
+                        first_err = Some(anyhow!("fleet worker {}: {msg}", peer.addr));
                     }
                 }
-                Err(_) => evict(peer, &stats),
+                Err(_) => fail(peer, &stats),
             }
         }
         if let Some(e) = first_err {
@@ -370,12 +864,14 @@ impl FleetBackend {
         if acks == 0 {
             bail!("fleet: every worker died during the drain switch");
         }
+        self.current_op = Some(op);
         Ok(acks)
     }
 
-    /// Probe every live worker with a `Heartbeat` under `timeout`;
-    /// workers that fail to `Pong` in time are evicted.  Returns the
-    /// live count afterwards.
+    /// Probe every live worker with a `Heartbeat` under `timeout`, then
+    /// give each `Suspect` peer its second strike: a fresh handshake
+    /// readmits it, a failed one evicts it.  Returns the live count
+    /// afterwards.
     pub fn heartbeat(&mut self, timeout: Duration) -> usize {
         let stats = self.stats.clone();
         for peer in &mut self.peers {
@@ -386,7 +882,19 @@ impl FleetBackend {
             if ok {
                 stream.set_read_timeout(Some(self.io_timeout)).ok();
             } else {
-                evict(peer, &stats);
+                fail(peer, &stats);
+            }
+        }
+        for i in 0..self.peers.len() {
+            if self.peers[i].stream.is_some() {
+                continue;
+            }
+            let addr = self.peers[i].addr.clone();
+            if self.stats.state_of(&addr) != MemberState::Suspect {
+                continue;
+            }
+            if self.readmit(i, timeout).is_err() {
+                self.stats.report_failure(&addr);
             }
         }
         self.live_workers()
@@ -403,10 +911,10 @@ impl FleetBackend {
             }
             match call(peer, &stats, &Frame::Drain, &[]) {
                 Ok((Frame::Ok, _)) => acks += 1,
-                Ok((Frame::Err { message }, _)) => {
+                Ok((Frame::Err { message, .. }, _)) => {
                     bail!("fleet worker {} failed to drain: {message}", peer.addr)
                 }
-                Ok(_) | Err(_) => {} // evicted by `call`
+                Ok(_) | Err(_) => {} // handled by `call`
             }
         }
         Ok(acks)
@@ -430,74 +938,32 @@ impl FleetBackend {
         acks
     }
 
-    /// Split `batch` into one contiguous chunk per live worker (the
-    /// first `batch % live` chunks get the extra image).
-    fn split(batch: usize, live: usize) -> Vec<Chunk> {
-        let base = batch / live;
-        let extra = batch % live;
-        let mut chunks = Vec::new();
-        let mut start = 0;
-        for i in 0..live {
-            let len = base + usize::from(i < extra);
-            if len > 0 {
-                chunks.push(Chunk { start, len, attempts: 0 });
-            }
-            start += len;
-        }
-        chunks
-    }
-
-    /// Run one round of chunk calls, one scoped thread per live peer
-    /// (each peer serves its assigned chunks sequentially on its own
-    /// connection).  Returns every chunk with its outcome.
+    /// Run one pipelined round: every live peer pumps chunks from the
+    /// shared queue until it drains.  Returns every chunk with its
+    /// outcome.
+    #[allow(clippy::too_many_arguments)]
     fn scatter_round(
         peers: &mut [Peer],
         stats: &FleetStats,
-        assignments: Vec<Vec<Chunk>>,
+        queue: &Mutex<VecDeque<Chunk>>,
+        window: usize,
+        fallback: usize,
         op_idx: usize,
         images: &[f32],
         elems: usize,
     ) -> Vec<(Chunk, ChunkOutcome)> {
         std::thread::scope(|s| {
             let mut handles = Vec::new();
-            for (peer, chunks) in peers.iter_mut().zip(assignments) {
-                if chunks.is_empty() {
+            for peer in peers.iter_mut() {
+                if peer.stream.is_none() {
                     continue;
                 }
                 let stats = stats.clone();
                 handles.push(s.spawn(move || {
-                    let mut out = Vec::with_capacity(chunks.len());
-                    for chunk in chunks {
-                        let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
-                        let frame = Frame::Forward { op: Some(op_idx), batch: chunk.len };
-                        let t0 = Instant::now();
-                        let outcome = match call(peer, &stats, &frame, data) {
-                            Ok((Frame::Logits { .. }, logits)) => {
-                                stats.with_worker(&peer.addr, |w| {
-                                    w.requests += chunk.len as u64;
-                                    w.batches += 1;
-                                    w.latency_us_sum += t0.elapsed().as_micros() as u64;
-                                });
-                                ChunkOutcome::Logits(logits)
-                            }
-                            Ok((Frame::Err { message }, _)) => ChunkOutcome::App(message),
-                            Ok((other, _)) => {
-                                // protocol confusion: poison the stream
-                                evict(peer, &stats);
-                                ChunkOutcome::App(format!(
-                                    "worker {}: unexpected {} to forward",
-                                    peer.addr,
-                                    other.type_name()
-                                ))
-                            }
-                            Err(_) => ChunkOutcome::Io,
-                        };
-                        out.push((chunk, outcome));
-                    }
-                    out
+                    peer_pump(peer, stats, queue, window, fallback, op_idx, images, elems)
                 }));
             }
-            handles.into_iter().flat_map(|h| h.join().expect("fleet chunk thread")).collect()
+            handles.into_iter().flat_map(|h| h.join().expect("fleet peer thread")).collect()
         })
     }
 }
@@ -507,14 +973,15 @@ impl Backend for FleetBackend {
     /// each worker resolves the OPs from its local catalog and makes
     /// them resident).  A worker that *rejects* the ladder fails
     /// prepare — a fleet serving mismatched plans is a configuration
-    /// error, not a failover case; workers that die are evicted.
+    /// error, not a failover case; workers that die leave the live
+    /// set.  The ladder is kept for replay on every rejoin handshake.
     fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
         anyhow::ensure!(!ops.is_empty(), "fleet prepare: empty ladder");
         let ladder: Vec<LadderRung> = ops
             .iter()
             .map(|o| LadderRung { name: o.name.clone(), power: o.relative_power })
             .collect();
-        let frame = Frame::Prepare { ladder };
+        let frame = Frame::Prepare { ladder: ladder.clone() };
         let stats = self.stats.clone();
         let mut prepared = 0usize;
         for peer in &mut self.peers {
@@ -523,7 +990,7 @@ impl Backend for FleetBackend {
             }
             match call(peer, &stats, &frame, &[]) {
                 Ok((Frame::Ok, _)) => prepared += 1,
-                Ok((Frame::Err { message }, _)) => {
+                Ok((Frame::Err { message, .. }, _)) => {
                     bail!("fleet worker {} rejected prepare: {message}", peer.addr)
                 }
                 Ok((other, _)) => bail!(
@@ -531,16 +998,18 @@ impl Backend for FleetBackend {
                     peer.addr,
                     other.type_name()
                 ),
-                Err(_) => {} // evicted by `call`
+                Err(_) => {} // handled by `call`
             }
         }
         anyhow::ensure!(prepared > 0, "fleet prepare: no live workers");
+        self.ladder = Some(ladder);
         Ok(())
     }
 
-    /// Scatter the batch across live workers, gather logits in order,
-    /// rebalancing chunks from dead workers onto survivors (bounded
-    /// retries per chunk).
+    /// Scatter the batch across live workers (pipelined, latency-aware
+    /// chunk sizing), gather logits in completion order, reassemble in
+    /// submission order, rebalancing chunks from dead workers onto
+    /// survivors (bounded retries per chunk).
     fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(
             batch > 0 && !images.is_empty() && images.len() % batch == 0,
@@ -548,39 +1017,34 @@ impl Backend for FleetBackend {
             images.len()
         );
         let elems = images.len() / batch;
-        let live = self.live_workers();
-        anyhow::ensure!(live > 0, "fleet forward: no live workers");
-        let mut pending = Self::split(batch, live);
+        self.refresh_peers();
+        anyhow::ensure!(self.live_workers() > 0, "fleet forward: no live workers");
+        let window = self.pipeline;
+        let mut pending: VecDeque<Chunk> = VecDeque::new();
+        pending.push_back(Chunk { start: 0, len: batch, attempts: 0 });
         let mut gathered: Vec<(usize, Vec<f32>)> = Vec::new();
         while !pending.is_empty() {
-            // assign pending chunks round-robin over the live peers
-            let mut assignments: Vec<Vec<Chunk>> = vec![Vec::new(); self.peers.len()];
-            {
-                let live_idx: Vec<usize> = self
-                    .peers
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, p)| p.stream.is_some())
-                    .map(|(i, _)| i)
-                    .collect();
-                if live_idx.is_empty() {
-                    bail!(
-                        "fleet forward: all workers lost with {} images still queued",
-                        pending.iter().map(|c| c.len).sum::<usize>()
-                    );
-                }
-                for (i, chunk) in pending.drain(..).enumerate() {
-                    assignments[live_idx[i % live_idx.len()]].push(chunk);
-                }
+            let live = self.live_workers();
+            if live == 0 {
+                bail!(
+                    "fleet forward: all workers lost with {} images still queued",
+                    pending.iter().map(|c| c.len).sum::<usize>()
+                );
             }
+            let fallback = (batch / (live * window)).max(1);
+            let queue = Mutex::new(std::mem::take(&mut pending));
             let outcomes = Self::scatter_round(
                 &mut self.peers,
                 &self.stats,
-                assignments,
+                &queue,
+                window,
+                fallback,
                 op_idx,
                 images,
                 elems,
             );
+            // spans no pump pulled (every peer died first) go back too
+            pending = queue.into_inner().unwrap();
             for (chunk, outcome) in outcomes {
                 match outcome {
                     ChunkOutcome::Logits(logits) => {
@@ -604,7 +1068,7 @@ impl Backend for FleetBackend {
                             );
                         }
                         self.stats.record_requeue();
-                        pending.push(Chunk { attempts, ..chunk });
+                        pending.push_back(Chunk { attempts, ..chunk });
                     }
                 }
             }
@@ -614,6 +1078,11 @@ impl Backend for FleetBackend {
         for (_, logits) in gathered {
             out.extend_from_slice(&logits);
         }
+        anyhow::ensure!(
+            out.len() == batch * self.classes,
+            "fleet forward reassembled {} logits for batch {batch}",
+            out.len()
+        );
         Ok(out)
     }
 
@@ -642,17 +1111,75 @@ mod tests {
     use super::*;
 
     #[test]
-    fn split_covers_the_batch_in_order_without_empty_chunks() {
-        for (batch, live) in [(8usize, 3usize), (2, 4), (1, 1), (7, 7), (16, 2)] {
-            let chunks = FleetBackend::split(batch, live);
-            assert!(chunks.len() <= live);
-            let mut expect_start = 0;
-            for c in &chunks {
-                assert!(c.len > 0);
-                assert_eq!(c.start, expect_start);
-                expect_start += c.len;
-            }
-            assert_eq!(expect_start, batch);
-        }
+    fn take_chunk_carves_the_span_exactly_and_keeps_requeues_whole() {
+        let queue = Mutex::new(VecDeque::from([Chunk { start: 0, len: 10, attempts: 0 }]));
+        let a = take_chunk(&queue, 4).unwrap();
+        assert_eq!(a, Chunk { start: 0, len: 4, attempts: 0 });
+        let b = take_chunk(&queue, 100).unwrap(); // want > remaining: take all
+        assert_eq!(b, Chunk { start: 4, len: 6, attempts: 0 });
+        assert!(take_chunk(&queue, 1).is_none());
+
+        // a requeued span keeps its identity (and attempts budget)
+        let queue = Mutex::new(VecDeque::from([Chunk { start: 3, len: 9, attempts: 1 }]));
+        let whole = take_chunk(&queue, 2).unwrap();
+        assert_eq!(whole, Chunk { start: 3, len: 9, attempts: 1 });
+        assert!(take_chunk(&queue, 1).is_none());
+    }
+
+    #[test]
+    fn chunk_target_scales_inversely_with_observed_latency() {
+        assert_eq!(chunk_target(0.0, 8), 8); // no history: even share
+        let fast = chunk_target(CHUNK_QUANTUM_US / 100.0, 8); // 100 img/quantum
+        let slow = chunk_target(CHUNK_QUANTUM_US * 4.0, 8); // 4 quanta/img
+        assert_eq!(fast, 100);
+        assert_eq!(slow, 1); // clamped at one image
+        assert!(fast > slow);
+    }
+
+    #[test]
+    fn membership_counts_one_eviction_per_epoch() {
+        let stats = FleetStats::default();
+        // first strike suspects, second evicts, further failures in the
+        // same tick (heartbeat + forward both observing the death) are
+        // absorbed without recounting
+        assert_eq!(stats.report_failure("w"), MemberState::Suspect);
+        assert_eq!(stats.report_failure("w"), MemberState::Evicted);
+        assert_eq!(stats.report_failure("w"), MemberState::Evicted);
+        assert_eq!(stats.snapshot().2, 1);
+
+        // a re-probe in progress that fails falls back to Evicted
+        stats.set_rejoining("w");
+        assert_eq!(stats.state_of("w"), MemberState::Rejoining);
+        assert_eq!(stats.report_failure("w"), MemberState::Evicted);
+        assert_eq!(stats.snapshot().2, 1);
+
+        // rejoin opens a new epoch whose eviction counts again
+        stats.mark_live("w");
+        let (workers, _, evictions) = stats.snapshot();
+        let w = &workers.iter().find(|(a, _)| a == "w").unwrap().1;
+        assert_eq!(w.state, MemberState::Live);
+        assert_eq!(w.rejoins, 1);
+        assert!(!w.evicted);
+        assert_eq!(evictions, 1);
+        assert_eq!(stats.report_failure("w"), MemberState::Suspect);
+        assert_eq!(stats.report_failure("w"), MemberState::Evicted);
+        assert_eq!(stats.snapshot().2, 2);
+    }
+
+    #[test]
+    fn ewma_tracks_per_image_latency_and_survives_rejoin() {
+        let stats = FleetStats::default();
+        stats.record_success("w", 10, 10_000); // 1000 us/img
+        assert!((stats.ewma_img_us("w") - 1000.0).abs() < 1e-9);
+        stats.record_success("w", 10, 20_000); // 2000 us/img
+        let blended = 0.7 * 1000.0 + 0.3 * 2000.0;
+        assert!((stats.ewma_img_us("w") - blended).abs() < 1e-9);
+        // eviction and rejoin keep the latency history
+        stats.report_failure("w");
+        stats.report_failure("w");
+        stats.mark_live("w");
+        assert!((stats.ewma_img_us("w") - blended).abs() < 1e-9);
+        let (workers, _, _) = stats.snapshot();
+        assert_eq!(workers[0].1.requests, 20);
     }
 }

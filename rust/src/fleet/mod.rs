@@ -4,30 +4,43 @@
 //! The paper's runtime story — operating points switched cheaply as
 //! conditions change — scales past one process here: many edge workers,
 //! each wrapping any local backend (native LUT engine or PJRT), are
-//! driven by a coordinator that scatters batches across them, gathers
-//! logits in order, fails over when a worker dies mid-stream, and
-//! broadcasts OP switches fleet-wide with the same `SwitchMode`
-//! semantics the in-process server uses (`Drain` = per-worker barrier
-//! acked before the switch is reported complete; `Immediate` =
-//! fire-and-forget).
+//! driven by a coordinator that scatters batches across them over
+//! pipelined, multiplexed connections (several id-tagged Forwards in
+//! flight per worker, chunk sizes skewed toward fast workers by an
+//! observed-latency EWMA), gathers logits in completion order and
+//! reassembles them in submission order, fails over when a worker dies
+//! mid-stream, and broadcasts OP switches fleet-wide with the same
+//! `SwitchMode` semantics the in-process server uses (`Drain` =
+//! per-worker barrier acked before the switch is reported complete;
+//! `Immediate` = fire-and-forget).  Membership is dynamic: failing
+//! workers move `Live → Suspect → Evicted`, a re-probe brings
+//! recovered ones back (`Evicted → Rejoining → Live`), and a registry
+//! join path (`worker --join`) grows the fleet under load.
 //!
 //!   * [`wire`]        the std-only TCP frame protocol (JSON header +
 //!     raw f32 payload, the QTEN idiom)
 //!   * [`worker`]      the worker daemon (`qos-nets worker`): wraps any
 //!     `Backend` behind the protocol, with a process-wide drain gate
+//!     and a reader/compute split per connection for pipelining
 //!   * [`coordinator`] [`FleetBackend`]: the fleet *as* a `Backend` —
 //!     it slots into `server::Server`, `backend::evaluate` and the CLI
-//!     exactly like the native engine does
+//!     exactly like the native engine does — plus the membership state
+//!     machine in [`FleetStats`]
+//!   * [`registry`]    [`FleetRegistry`]: the coordinator-side listener
+//!     behind `worker --join`, feeding `FleetBackend::admit`
 //!
 //! The loopback integration tests (`rust/tests/fleet.rs`) pin the
 //! contract: a fleet of in-process workers is bit-identical to a single
 //! `NativeBackend` over the same request stream, including across a
-//! worker being killed mid-stream.
+//! worker being killed mid-stream and rejoining later (driven by the
+//! deterministic fault-injection proxy in `rust/tests/common/chaos.rs`).
 
 pub mod coordinator;
+pub mod registry;
 pub mod wire;
 pub mod worker;
 
-pub use coordinator::{FleetBackend, FleetStats, WorkerStats};
+pub use coordinator::{FleetBackend, FleetStats, MemberState, WorkerStats};
+pub use registry::{register_with, FleetRegistry};
 pub use wire::{Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION};
-pub use worker::{WorkerHandle, WorkerOptions};
+pub use worker::{WorkerHandle, WorkerOptions, WORKER_MAX_INFLIGHT};

@@ -1,0 +1,165 @@
+//! Registry join path: how a fleet grows under load.
+//!
+//! The coordinator binds a [`FleetRegistry`] next to its serving loop;
+//! a newly launched worker announces itself with `worker --join
+//! host:port`, which sends one `Register { addr }` frame
+//! ([`register_with`]) carrying the address the *worker* serves on.
+//! The registry records the announcement and acks; the serving loop
+//! drains [`FleetRegistry::take_new`] on its heartbeat ticks and feeds
+//! the addresses into [`FleetBackend::admit`], which runs the normal
+//! admission handshake (Hello/Prepare/SetOp) before the newcomer sees
+//! any traffic.  Registration is deliberately one-shot and dumb — no
+//! health state lives here; membership stays single-sourced in
+//! [`FleetStats`].
+//!
+//! [`FleetBackend::admit`]: crate::fleet::FleetBackend::admit
+//! [`FleetStats`]: crate::fleet::FleetStats
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::fleet::wire::{self, Frame};
+
+/// Per-connection socket timeout: a registration is one small frame
+/// each way, so anything slower is a stuck peer, not a slow one.
+const REGISTER_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Coordinator-side listener collecting `Register` announcements.
+/// Dropping it stops the accept loop.
+pub struct FleetRegistry {
+    addr: SocketAddr,
+    inner: Arc<RegistryInner>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+struct RegistryInner {
+    stop: AtomicBool,
+    pending: Mutex<Vec<String>>,
+}
+
+impl FleetRegistry {
+    /// Bind the registry listener (e.g. `127.0.0.1:0` for an ephemeral
+    /// port) and start accepting registrations in the background.
+    pub fn bind(addr: &str) -> Result<FleetRegistry> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind fleet registry on {addr}"))?;
+        let addr = listener.local_addr().context("fleet registry address")?;
+        listener.set_nonblocking(true).context("fleet registry nonblocking")?;
+        let inner = Arc::new(RegistryInner {
+            stop: AtomicBool::new(false),
+            pending: Mutex::new(Vec::new()),
+        });
+        let inner2 = inner.clone();
+        let accept = std::thread::spawn(move || {
+            while !inner2.stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => handle_register(stream, &inner2),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(FleetRegistry { addr, inner, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `127.0.0.1:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Drain the worker addresses that registered since the last call
+    /// (deduplicated within one drain window).
+    pub fn take_new(&self) -> Vec<String> {
+        std::mem::take(&mut *self.inner.pending.lock().unwrap())
+    }
+}
+
+impl Drop for FleetRegistry {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One registration connection: read one frame, record, ack.
+fn handle_register(mut stream: TcpStream, inner: &RegistryInner) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(REGISTER_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(REGISTER_TIMEOUT));
+    let reply = match wire::read_frame(&mut stream) {
+        Ok((Frame::Register { addr }, _)) => {
+            let mut pending = inner.pending.lock().unwrap();
+            if !pending.contains(&addr) {
+                pending.push(addr);
+            }
+            Frame::Ok
+        }
+        Ok((other, _)) => Frame::err(format!(
+            "fleet registry: unexpected {} frame (want register)",
+            other.type_name()
+        )),
+        Err(_) => return,
+    };
+    let _ = wire::write_frame(&mut stream, &reply, &[]);
+}
+
+/// Worker-side client for `worker --join`: announce `advertise` (the
+/// address this worker serves on) to the coordinator's registry.
+pub fn register_with(registry: &str, advertise: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(registry)
+        .with_context(|| format!("connect to fleet registry {registry}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    wire::write_frame(&mut stream, &Frame::Register { addr: advertise.to_string() }, &[])
+        .with_context(|| format!("register with fleet registry {registry}"))?;
+    match wire::read_frame(&mut stream)
+        .with_context(|| format!("register ack from fleet registry {registry}"))?
+    {
+        (Frame::Ok, _) => Ok(()),
+        (Frame::Err { message, .. }, _) => {
+            anyhow::bail!("fleet registry {registry} refused registration: {message}")
+        }
+        (other, _) => {
+            anyhow::bail!("fleet registry {registry}: unexpected {} to register", other.type_name())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_round_trip_collects_and_dedups_addresses() {
+        let reg = FleetRegistry::bind("127.0.0.1:0").unwrap();
+        let at = reg.addr().to_string();
+        register_with(&at, "10.0.0.1:7070").unwrap();
+        register_with(&at, "10.0.0.2:7070").unwrap();
+        register_with(&at, "10.0.0.1:7070").unwrap(); // duplicate
+        let mut got = reg.take_new();
+        got.sort();
+        assert_eq!(got, vec!["10.0.0.1:7070".to_string(), "10.0.0.2:7070".to_string()]);
+        assert!(reg.take_new().is_empty());
+    }
+
+    #[test]
+    fn registry_rejects_non_register_frames_with_a_clear_error() {
+        let reg = FleetRegistry::bind("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(reg.addr()).unwrap();
+        wire::write_frame(&mut stream, &Frame::Heartbeat, &[]).unwrap();
+        let (reply, _) = wire::read_frame(&mut stream).unwrap();
+        match reply {
+            Frame::Err { message, .. } => assert!(message.contains("want register"), "{message}"),
+            other => panic!("registry answered {other:?}"),
+        }
+    }
+}

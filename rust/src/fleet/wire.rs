@@ -7,22 +7,30 @@
 //! in-tree codec (`util::json`) so the protocol needs no new
 //! dependencies.
 //!
-//! The conversation is strictly request/response per connection: the
-//! coordinator writes one frame and, when the frame type warrants a
-//! reply ([`Frame::expects_reply`]), reads exactly one frame back.  The
+//! Control frames are strictly request/response: the coordinator
+//! writes one frame and, when the frame type warrants a reply
+//! ([`Frame::expects_reply`]), reads exactly one frame back.  The
 //! single fire-and-forget frame is `SetOp { drain: false }` — the
 //! paper's "lightweight switching" applied fleet-wide, where waiting
-//! for acks would defeat the point of an urgent downgrade.
+//! for acks would defeat the point of an urgent downgrade.  `Forward`
+//! is the exception since the data plane became pipelined: it carries
+//! a request `id`, the coordinator may have several Forwards in flight
+//! per connection (up to the worker's advertised `max_inflight`), and
+//! the worker echoes the id on the matching `Logits`/`Err` so replies
+//! can arrive and be reassembled in completion order.  A worker that
+//! omits `max_inflight` from its `HelloAck` is treated as strictly
+//! request/response (`max_inflight = 1`), so old workers keep working.
 //!
 //! | frame       | direction     | payload  | reply                  |
 //! |-------------|---------------|----------|------------------------|
 //! | `Hello`     | coord → worker| —        | `HelloAck` / `Err`     |
 //! | `Prepare`   | coord → worker| —        | `Ok` / `Err`           |
-//! | `Forward`   | coord → worker| images   | `Logits` / `Err`       |
+//! | `Forward`   | coord → worker| images   | `Logits` / `Err` (id-tagged, pipelined) |
 //! | `SetOp`     | coord → worker| —        | `Ok` iff `drain`       |
 //! | `Heartbeat` | coord → worker| —        | `Pong`                 |
 //! | `Drain`     | coord → worker| —        | `Ok` (after barrier)   |
 //! | `Shutdown`  | coord → worker| —        | `Ok` (then daemon exits)|
+//! | `Register`  | worker → registry| —     | `Ok` / `Err`           |
 
 use std::io::{Read, Write};
 
@@ -49,12 +57,14 @@ pub const DEFAULT_HB_TIMEOUT_MS: u64 = 500;
 const MAGIC: &[u8; 4] = b"QFLT";
 
 /// Sanity cap on the JSON header (a ladder of thousands of OPs fits in
-/// a fraction of this).
-const MAX_HEADER_BYTES: usize = 1 << 20;
+/// a fraction of this).  Public so robustness tests can assert the
+/// parser never allocates past it.
+pub const MAX_HEADER_BYTES: usize = 1 << 20;
 
 /// Sanity cap on the f32 payload: 256 Mi elements = 1 GiB, far above
-/// any realistic batch, low enough to refuse garbage lengths.
-const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+/// any realistic batch, low enough to refuse garbage lengths.  Public
+/// for the same reason as [`MAX_HEADER_BYTES`].
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
 
 /// One rung of the ladder as `Prepare` describes it: the OP name the
 /// worker must resolve from its local catalog, plus the relative power
@@ -81,6 +91,9 @@ pub enum Frame {
     /// timeout after which the coordinator should consider it dead.
     /// Coordinators take the fleet-wide minimum, so one short-leashed
     /// worker tightens eviction time for the whole deployment.
+    /// `max_inflight` is the pipelining capability advert: how many
+    /// id-tagged Forwards the worker accepts concurrently on one
+    /// connection (legacy workers omit it and get 1 = lockstep).
     HelloAck {
         worker: String,
         backend: String,
@@ -89,15 +102,19 @@ pub enum Frame {
         catalog: Vec<String>,
         hb_interval_ms: u64,
         hb_timeout_ms: u64,
+        max_inflight: u64,
     },
     /// Make this ladder resident (in order; `Forward::op` indexes it).
     Prepare { ladder: Vec<LadderRung> },
     /// Run one batch; payload = `[batch, H, W, C]` images flattened.
     /// `op` indexes the prepared ladder; `None` uses the worker's
-    /// current OP (set by `SetOp`).
-    Forward { op: Option<usize>, batch: usize },
+    /// current OP (set by `SetOp`).  `id` is the pipelining request
+    /// tag the worker echoes on the matching reply; `None` keeps the
+    /// legacy strict request/response semantics.
+    Forward { id: Option<u64>, op: Option<usize>, batch: usize },
     /// `Forward` answer; payload = `[batch, classes]` logits flattened.
-    Logits { classes: usize },
+    /// `id` echoes the request tag when the Forward carried one.
+    Logits { id: Option<u64>, classes: usize },
     /// Fleet-wide switch: `drain` = barrier (worker finishes in-flight
     /// forwards, applies, acks `Ok`); `!drain` = fire-and-forget store.
     SetOp { op: usize, drain: bool },
@@ -109,10 +126,24 @@ pub enum Frame {
     Drain,
     /// Stop the worker daemon (acked, then the process winds down).
     Shutdown,
+    /// Worker → registry announcement: "admit `addr` into the fleet".
+    /// Sent by `worker --join host:port` to a coordinator-side
+    /// registry listener; acked `Ok` once recorded.
+    Register { addr: String },
     /// Generic success ack.
     Ok,
-    /// Generic failure answer; the connection stays usable.
-    Err { message: String },
+    /// Generic failure answer; the connection stays usable.  `id`
+    /// echoes the request tag when answering a pipelined `Forward`, so
+    /// an application-level failure doesn't desynchronize the other
+    /// in-flight requests on the connection.
+    Err { id: Option<u64>, message: String },
+}
+
+impl Frame {
+    /// Shorthand for an id-less [`Frame::Err`] (control-plane errors).
+    pub fn err(message: impl Into<String>) -> Frame {
+        Frame::Err { id: None, message: message.into() }
+    }
 }
 
 impl Frame {
@@ -129,6 +160,7 @@ impl Frame {
             Frame::Pong { .. } => "pong",
             Frame::Drain => "drain",
             Frame::Shutdown => "shutdown",
+            Frame::Register { .. } => "register",
             Frame::Ok => "ok",
             Frame::Err { .. } => "err",
         }
@@ -144,7 +176,8 @@ impl Frame {
             | Frame::Forward { .. }
             | Frame::Heartbeat
             | Frame::Drain
-            | Frame::Shutdown => true,
+            | Frame::Shutdown
+            | Frame::Register { .. } => true,
             Frame::SetOp { drain, .. } => *drain,
             Frame::HelloAck { .. }
             | Frame::Logits { .. }
@@ -168,6 +201,7 @@ impl Frame {
                 catalog,
                 hb_interval_ms,
                 hb_timeout_ms,
+                max_inflight,
             } => {
                 pairs.push(("worker", Json::str(worker.clone())));
                 pairs.push(("backend", Json::str(backend.clone())));
@@ -179,6 +213,7 @@ impl Frame {
                 ));
                 pairs.push(("hb_interval_ms", Json::num(*hb_interval_ms as f64)));
                 pairs.push(("hb_timeout_ms", Json::num(*hb_timeout_ms as f64)));
+                pairs.push(("max_inflight", Json::num(*max_inflight as f64)));
             }
             Frame::Prepare { ladder } => {
                 let rungs: Vec<Json> = ladder
@@ -192,13 +227,19 @@ impl Frame {
                     .collect();
                 pairs.push(("ladder", Json::Arr(rungs)));
             }
-            Frame::Forward { op, batch } => {
+            Frame::Forward { id, op, batch } => {
+                if let Some(id) = id {
+                    pairs.push(("id", Json::num(*id as f64)));
+                }
                 if let Some(op) = op {
                     pairs.push(("op", Json::num(*op as f64)));
                 }
                 pairs.push(("batch", Json::num(*batch as f64)));
             }
-            Frame::Logits { classes } => {
+            Frame::Logits { id, classes } => {
+                if let Some(id) = id {
+                    pairs.push(("id", Json::num(*id as f64)));
+                }
                 pairs.push(("classes", Json::num(*classes as f64)));
             }
             Frame::SetOp { op, drain } => {
@@ -209,7 +250,13 @@ impl Frame {
                 pairs.push(("current_op", Json::num(*current_op as f64)));
                 pairs.push(("served", Json::num(*served as f64)));
             }
-            Frame::Err { message } => {
+            Frame::Register { addr } => {
+                pairs.push(("addr", Json::str(addr.clone())));
+            }
+            Frame::Err { id, message } => {
+                if let Some(id) = id {
+                    pairs.push(("id", Json::num(*id as f64)));
+                }
                 pairs.push(("message", Json::str(message.clone())));
             }
             Frame::Heartbeat | Frame::Drain | Frame::Shutdown | Frame::Ok => {}
@@ -227,6 +274,7 @@ impl Frame {
                 .and_then(|x| x.as_usize())
                 .with_context(|| format!("{kind} frame: missing {key}"))
         };
+        let opt_id = || v.get("id").and_then(|x| x.as_usize()).map(|x| x as u64);
         Ok(match kind {
             "hello" => Frame::Hello {
                 version: req_usize("version")? as u64,
@@ -253,6 +301,13 @@ impl Frame {
                     .get("hb_timeout_ms")
                     .and_then(|x| x.as_usize())
                     .unwrap_or(DEFAULT_HB_TIMEOUT_MS as usize) as u64,
+                // lenient: pre-pipelining workers omit the capability
+                // advert and get strict request/response
+                max_inflight: v
+                    .get("max_inflight")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(1)
+                    .max(1) as u64,
             },
             "prepare" => Frame::Prepare {
                 ladder: v
@@ -267,10 +322,12 @@ impl Frame {
                     .collect(),
             },
             "forward" => Frame::Forward {
+                id: opt_id(),
                 op: v.get("op").and_then(|x| x.as_usize()),
                 batch: req_usize("batch")?,
             },
             "logits" => Frame::Logits {
+                id: opt_id(),
                 classes: req_usize("classes")?,
             },
             "set_op" => Frame::SetOp {
@@ -284,8 +341,16 @@ impl Frame {
             },
             "drain" => Frame::Drain,
             "shutdown" => Frame::Shutdown,
+            "register" => Frame::Register {
+                addr: v
+                    .get("addr")
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("{kind} frame: missing addr"))?
+                    .to_string(),
+            },
             "ok" => Frame::Ok,
             "err" => Frame::Err {
+                id: opt_id(),
                 message: v.get("message").and_then(|x| x.as_str()).unwrap_or("").to_string(),
             },
             other => bail!("unknown frame type {other:?}"),
@@ -385,6 +450,7 @@ mod tests {
                 catalog: vec!["exact".into(), "op0".into()],
                 hb_interval_ms: 250,
                 hb_timeout_ms: 100,
+                max_inflight: 64,
             },
             &[],
         );
@@ -397,17 +463,23 @@ mod tests {
             },
             &[],
         );
-        roundtrip(Frame::Forward { op: Some(1), batch: 2 }, &[1.0, -2.5, 0.0, 3e-9]);
-        roundtrip(Frame::Forward { op: None, batch: 1 }, &[0.5]);
-        roundtrip(Frame::Logits { classes: 2 }, &[0.1, 0.9]);
+        roundtrip(
+            Frame::Forward { id: Some(7), op: Some(1), batch: 2 },
+            &[1.0, -2.5, 0.0, 3e-9],
+        );
+        roundtrip(Frame::Forward { id: None, op: None, batch: 1 }, &[0.5]);
+        roundtrip(Frame::Logits { id: Some(7), classes: 2 }, &[0.1, 0.9]);
+        roundtrip(Frame::Logits { id: None, classes: 2 }, &[0.1, 0.9]);
         roundtrip(Frame::SetOp { op: 1, drain: true }, &[]);
         roundtrip(Frame::SetOp { op: 0, drain: false }, &[]);
         roundtrip(Frame::Heartbeat, &[]);
         roundtrip(Frame::Pong { current_op: 2, served: 12345 }, &[]);
         roundtrip(Frame::Drain, &[]);
         roundtrip(Frame::Shutdown, &[]);
+        roundtrip(Frame::Register { addr: "10.0.0.3:7070".into() }, &[]);
         roundtrip(Frame::Ok, &[]);
-        roundtrip(Frame::Err { message: "no such op".into() }, &[]);
+        roundtrip(Frame::err("no such op"), &[]);
+        roundtrip(Frame::Err { id: Some(12), message: "forward blew up".into() }, &[]);
     }
 
     #[test]
@@ -423,9 +495,11 @@ mod tests {
         buf.extend_from_slice(&0u32.to_le_bytes());
         let (frame, _) = read_frame(&mut Cursor::new(&buf)).unwrap();
         match frame {
-            Frame::HelloAck { hb_interval_ms, hb_timeout_ms, .. } => {
+            Frame::HelloAck { hb_interval_ms, hb_timeout_ms, max_inflight, .. } => {
                 assert_eq!(hb_interval_ms, DEFAULT_HB_INTERVAL_MS);
                 assert_eq!(hb_timeout_ms, DEFAULT_HB_TIMEOUT_MS);
+                // and no pipelining capability advert means lockstep
+                assert_eq!(max_inflight, 1);
             }
             other => panic!("parsed {other:?}"),
         }
@@ -434,12 +508,13 @@ mod tests {
     #[test]
     fn consecutive_frames_share_a_stream() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Forward { op: Some(0), batch: 1 }, &[7.0]).unwrap();
+        write_frame(&mut buf, &Frame::Forward { id: None, op: Some(0), batch: 1 }, &[7.0])
+            .unwrap();
         write_frame(&mut buf, &Frame::Heartbeat, &[]).unwrap();
         let mut cur = Cursor::new(&buf);
         let (f1, p1) = read_frame(&mut cur).unwrap();
         let (f2, p2) = read_frame(&mut cur).unwrap();
-        assert_eq!(f1, Frame::Forward { op: Some(0), batch: 1 });
+        assert_eq!(f1, Frame::Forward { id: None, op: Some(0), batch: 1 });
         assert_eq!(p1, vec![7.0]);
         assert_eq!(f2, Frame::Heartbeat);
         assert!(p2.is_empty());
@@ -460,10 +535,11 @@ mod tests {
     #[test]
     fn only_requests_expect_replies_and_immediate_setop_does_not() {
         assert!(Frame::Hello { version: 1 }.expects_reply());
-        assert!(Frame::Forward { op: None, batch: 1 }.expects_reply());
+        assert!(Frame::Forward { id: None, op: None, batch: 1 }.expects_reply());
         assert!(Frame::SetOp { op: 0, drain: true }.expects_reply());
+        assert!(Frame::Register { addr: "127.0.0.1:7070".into() }.expects_reply());
         assert!(!Frame::SetOp { op: 0, drain: false }.expects_reply());
         assert!(!Frame::Ok.expects_reply());
-        assert!(!Frame::Logits { classes: 2 }.expects_reply());
+        assert!(!Frame::Logits { id: None, classes: 2 }.expects_reply());
     }
 }

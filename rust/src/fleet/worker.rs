@@ -9,6 +9,18 @@
 //! ladder against the catalog by name, cross-checks the expected
 //! relative power, and makes it resident.
 //!
+//! Each connection is split into a *reader* and a *compute* half so the
+//! coordinator can pipeline: the reader thread answers latency-critical
+//! control frames (`Hello`, `Heartbeat`, `Shutdown`) inline and queues
+//! everything else ([`Work`]) to the compute half, which owns the
+//! (non-`Send`) backend on the handler thread and answers through a
+//! shared, mutex-serialized writer.  Up to [`WORKER_MAX_INFLIGHT`]
+//! id-tagged Forwards may be queued per connection (advertised in
+//! `HelloAck`); replies echo the request id, so they stay matchable
+//! even though control replies interleave.  The queue is FIFO, which
+//! keeps `SetOp { drain: true }`/`Drain` ordered *behind* every Forward
+//! the coordinator sent first on the same connection.
+//!
 //! Cross-connection semantics live in the daemon's shared state:
 //!
 //! * **Drain barrier.**  Forwards from every connection run inside a
@@ -40,6 +52,13 @@ use crate::engine::OperatingPoint;
 use crate::fleet::wire::{
     self, Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION,
 };
+
+/// Pipelining capability one worker connection advertises in
+/// `HelloAck`: the queue between the reader and the compute half is
+/// unbounded, but coordinators should not build windows deeper than
+/// this (beyond it, queued batches only add memory pressure and switch
+/// latency, never throughput).
+pub const WORKER_MAX_INFLIGHT: u64 = 64;
 
 /// Draining gate: forwards enter read sections, a drain waits for all
 /// of them to leave while blocking new entries (writer-preferring, so a
@@ -375,8 +394,169 @@ fn resolve_ladder(
     Ok(out)
 }
 
-/// One coordinator connection: strict request/response until the stream
-/// closes, errors, or the daemon stops.
+/// Work the reader half queues to the compute half of one connection.
+/// FIFO order is load-bearing: a drain barrier queued after N Forwards
+/// executes after all N have entered the gate, which is what lets the
+/// coordinator pipeline Forwards and still trust the barrier.
+enum Work {
+    Forward { id: Option<u64>, op: Option<usize>, batch: usize, payload: Vec<f32> },
+    Prepare { ladder: Vec<LadderRung> },
+    SetOp { op: usize, drain: bool },
+    Drain,
+}
+
+/// Reader half of one connection: answers latency-critical control
+/// frames inline (through the shared writer) and queues everything else
+/// to the compute half.  Exits on stream close/error or `Shutdown`;
+/// dropping `tx` on exit is what winds the compute half down.
+fn reader_loop(
+    mut stream: TcpStream,
+    tx: std::sync::mpsc::Sender<Work>,
+    writer: &Mutex<TcpStream>,
+    shared: &WorkerShared,
+    catalog: &[OperatingPoint],
+    backend_name: &str,
+    classes: usize,
+) {
+    loop {
+        let (frame, payload) = match wire::read_frame(&mut stream) {
+            Ok(x) => x,
+            Err(_) => break, // connection closed / daemon stopping
+        };
+        let inline: Option<Frame> = match frame {
+            Frame::Hello { version } => Some(if version == PROTOCOL_VERSION {
+                Frame::HelloAck {
+                    worker: shared.name.clone(),
+                    backend: backend_name.to_string(),
+                    mode: shared.mode.clone(),
+                    classes,
+                    catalog: catalog.iter().map(|o| o.name.clone()).collect(),
+                    hb_interval_ms: shared.hb_interval.as_millis() as u64,
+                    hb_timeout_ms: shared.hb_timeout.as_millis() as u64,
+                    max_inflight: WORKER_MAX_INFLIGHT,
+                }
+            } else {
+                Frame::err(format!(
+                    "protocol version mismatch: worker {PROTOCOL_VERSION}, coordinator {version}"
+                ))
+            }),
+            Frame::Forward { id, op, batch } => {
+                if tx.send(Work::Forward { id, op, batch, payload }).is_err() {
+                    break;
+                }
+                None
+            }
+            Frame::Prepare { ladder } => {
+                if tx.send(Work::Prepare { ladder }).is_err() {
+                    break;
+                }
+                None
+            }
+            Frame::SetOp { op, drain } => {
+                if tx.send(Work::SetOp { op, drain }).is_err() {
+                    break;
+                }
+                None
+            }
+            Frame::Drain => {
+                if tx.send(Work::Drain).is_err() {
+                    break;
+                }
+                None
+            }
+            Frame::Heartbeat => Some(Frame::Pong {
+                current_op: shared.current_op.load(Ordering::Acquire),
+                served: shared.served.load(Ordering::Acquire),
+            }),
+            Frame::Shutdown => {
+                let mut w = writer.lock().unwrap();
+                let _ = wire::write_frame(&mut *w, &Frame::Ok, &[]);
+                drop(w);
+                shared.close_all();
+                break;
+            }
+            other => Some(Frame::err(format!(
+                "unexpected {} frame from coordinator",
+                other.type_name()
+            ))),
+        };
+        if let Some(reply) = inline {
+            let mut w = writer.lock().unwrap();
+            if wire::write_frame(&mut *w, &reply, &[]).is_err() {
+                break;
+            }
+        }
+    }
+}
+
+/// Compute half of one connection: owns the (non-`Send`) backend on the
+/// handler thread, drains the FIFO work queue, and answers through the
+/// shared writer.  A write failure shuts the socket down to unblock the
+/// reader half, then exits.
+fn compute_loop<B: Backend>(
+    rx: std::sync::mpsc::Receiver<Work>,
+    backend: &mut B,
+    shared: &WorkerShared,
+    catalog: &[OperatingPoint],
+    writer: &Mutex<TcpStream>,
+) {
+    let mut prepared = 0usize;
+    while let Ok(work) = rx.recv() {
+        let (reply, out): (Frame, Vec<f32>) = match work {
+            Work::Prepare { ladder } => match resolve_ladder(catalog, &ladder) {
+                Ok(ops) => match backend.prepare(&ops) {
+                    Ok(()) => {
+                        prepared = ops.len();
+                        (Frame::Ok, Vec::new())
+                    }
+                    Err(e) => (Frame::err(format!("{e:#}")), Vec::new()),
+                },
+                Err(message) => (Frame::err(message), Vec::new()),
+            },
+            Work::Forward { id, op, batch, payload } => {
+                let op_idx = op.unwrap_or_else(|| shared.current_op.load(Ordering::Acquire));
+                if prepared == 0 {
+                    (Frame::Err { id, message: "forward before prepare".to_string() }, Vec::new())
+                } else if batch == 0 || payload.is_empty() || payload.len() % batch != 0 {
+                    let message = format!("bad forward: {} elems for batch {batch}", payload.len());
+                    (Frame::Err { id, message }, Vec::new())
+                } else {
+                    let section = shared.gate.enter();
+                    let r = backend.forward(op_idx, &payload, batch);
+                    drop(section);
+                    match r {
+                        Ok(logits) => {
+                            shared.served.fetch_add(batch as u64, Ordering::AcqRel);
+                            (Frame::Logits { id, classes: backend.num_classes() }, logits)
+                        }
+                        Err(e) => (Frame::Err { id, message: format!("{e:#}") }, Vec::new()),
+                    }
+                }
+            }
+            Work::SetOp { op, drain } => {
+                if drain {
+                    shared.gate.drain(|| shared.current_op.store(op, Ordering::Release));
+                    (Frame::Ok, Vec::new())
+                } else {
+                    shared.current_op.store(op, Ordering::Release);
+                    continue; // fire-and-forget
+                }
+            }
+            Work::Drain => {
+                shared.gate.drain(|| ());
+                (Frame::Ok, Vec::new())
+            }
+        };
+        let mut w = writer.lock().unwrap();
+        if wire::write_frame(&mut *w, &reply, &out).is_err() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+            break;
+        }
+    }
+}
+
+/// One coordinator connection: reader half on a scoped thread, compute
+/// half (owning the backend, which need not be `Send`) on this thread.
 fn handle_conn<B, F>(
     mut stream: TcpStream,
     conn_id: usize,
@@ -393,106 +573,26 @@ fn handle_conn<B, F>(
             // answer whatever arrives first with the init failure
             if let Ok((_frame, _)) = wire::read_frame(&mut stream) {
                 let msg = format!("worker {}: backend init failed: {e:#}", shared.name);
-                let _ = wire::write_frame(&mut stream, &Frame::Err { message: msg }, &[]);
+                let _ = wire::write_frame(&mut stream, &Frame::err(msg), &[]);
             }
             return;
         }
     };
-    let mut prepared = 0usize;
-    loop {
-        let (frame, payload) = match wire::read_frame(&mut stream) {
-            Ok(x) => x,
-            Err(_) => break, // connection closed / daemon stopping
-        };
-        let reply: Option<(Frame, Vec<f32>)> = match frame {
-            Frame::Hello { version } => {
-                if version == PROTOCOL_VERSION {
-                    Some((
-                        Frame::HelloAck {
-                            worker: shared.name.clone(),
-                            backend: backend.name().to_string(),
-                            mode: shared.mode.clone(),
-                            classes: backend.num_classes(),
-                            catalog: catalog.iter().map(|o| o.name.clone()).collect(),
-                            hb_interval_ms: shared.hb_interval.as_millis() as u64,
-                            hb_timeout_ms: shared.hb_timeout.as_millis() as u64,
-                        },
-                        Vec::new(),
-                    ))
-                } else {
-                    let message = format!(
-                        "protocol version mismatch: worker {PROTOCOL_VERSION}, coordinator {version}"
-                    );
-                    Some((Frame::Err { message }, Vec::new()))
-                }
-            }
-            Frame::Prepare { ladder } => match resolve_ladder(catalog, &ladder) {
-                Ok(ops) => match backend.prepare(&ops) {
-                    Ok(()) => {
-                        prepared = ops.len();
-                        Some((Frame::Ok, Vec::new()))
-                    }
-                    Err(e) => Some((Frame::Err { message: format!("{e:#}") }, Vec::new())),
-                },
-                Err(message) => Some((Frame::Err { message }, Vec::new())),
-            },
-            Frame::Forward { op, batch } => {
-                let op_idx = op.unwrap_or_else(|| shared.current_op.load(Ordering::Acquire));
-                if prepared == 0 {
-                    let message = "forward before prepare".to_string();
-                    Some((Frame::Err { message }, Vec::new()))
-                } else if batch == 0 || payload.is_empty() || payload.len() % batch != 0 {
-                    let message = format!("bad forward: {} elems for batch {batch}", payload.len());
-                    Some((Frame::Err { message }, Vec::new()))
-                } else {
-                    let section = shared.gate.enter();
-                    let r = backend.forward(op_idx, &payload, batch);
-                    drop(section);
-                    match r {
-                        Ok(logits) => {
-                            shared.served.fetch_add(batch as u64, Ordering::AcqRel);
-                            Some((Frame::Logits { classes: backend.num_classes() }, logits))
-                        }
-                        Err(e) => Some((Frame::Err { message: format!("{e:#}") }, Vec::new())),
-                    }
-                }
-            }
-            Frame::SetOp { op, drain } => {
-                if drain {
-                    shared.gate.drain(|| shared.current_op.store(op, Ordering::Release));
-                    Some((Frame::Ok, Vec::new()))
-                } else {
-                    shared.current_op.store(op, Ordering::Release);
-                    None // fire-and-forget
-                }
-            }
-            Frame::Heartbeat => Some((
-                Frame::Pong {
-                    current_op: shared.current_op.load(Ordering::Acquire),
-                    served: shared.served.load(Ordering::Acquire),
-                },
-                Vec::new(),
-            )),
-            Frame::Drain => {
-                shared.gate.drain(|| ());
-                Some((Frame::Ok, Vec::new()))
-            }
-            Frame::Shutdown => {
-                let _ = wire::write_frame(&mut stream, &Frame::Ok, &[]);
-                shared.close_all();
-                break;
-            }
-            other => {
-                let message = format!("unexpected {} frame from coordinator", other.type_name());
-                Some((Frame::Err { message }, Vec::new()))
-            }
-        };
-        if let Some((frame, payload)) = reply {
-            if wire::write_frame(&mut stream, &frame, &payload).is_err() {
-                break;
-            }
-        }
-    }
+    let backend_name = backend.name().to_string();
+    let classes = backend.num_classes();
+    let writer = match stream.try_clone() {
+        Ok(w) => Mutex::new(w),
+        Err(_) => return,
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<Work>();
+    std::thread::scope(|scope| {
+        let writer_ref = &writer;
+        let name_ref = backend_name.as_str();
+        scope.spawn(move || {
+            reader_loop(stream, tx, writer_ref, shared, catalog, name_ref, classes);
+        });
+        compute_loop(rx, &mut backend, shared, catalog, &writer);
+    });
 }
 
 #[cfg(test)]

@@ -1,0 +1,265 @@
+//! Deterministic fault-injection TCP proxy for the fleet tests.
+//!
+//! A [`ChaosProxy`] sits between a coordinator and one worker and
+//! forwards whole QFLT frames (it parses the `magic | header_len |
+//! header | payload_len | payload` framing as raw bytes, without
+//! interpreting headers), injecting faults driven by a SplitMix64
+//! stream forked per connection and direction — so *which* frames get
+//! delayed, split or severed is a pure function of the seed, not of
+//! thread timing:
+//!
+//! * **delay** — sleep a seeded duration from a range before
+//!   forwarding each frame (reorders completion across workers);
+//! * **stall** — one long pause before the Nth forwarded frame
+//!   (a worker that is alive but unresponsive);
+//! * **split writes** — cut every frame at a seeded byte offset and
+//!   flush the two halves separately (exercises short-read handling);
+//! * **sever** — on the Nth forwarded frame, optionally emit a partial
+//!   frame prefix, then cut both directions (a worker dying
+//!   mid-stream, with a torn frame on the wire).
+//!
+//! After a sever — scripted via [`ChaosConfig::sever_on_frame`] or
+//! manual via [`ChaosProxy::sever_now`] — the proxy accepts new
+//! connections and immediately closes them, so coordinator re-probes
+//! fail fast and deterministically instead of hanging; [`heal`]
+//! restores full pass-through, letting the (still running) worker
+//! rejoin without rebinding its listener.
+//!
+//! [`heal`]: ChaosProxy::heal
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use qos_nets::util::rng::Rng;
+
+/// Fault script for one proxy; `default()` is transparent pass-through.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    /// Sleep a seeded duration in this range before forwarding each
+    /// frame.
+    pub delay: Option<(Duration, Duration)>,
+    /// Before forwarding the Nth frame (1-based, across connections
+    /// and directions), pause this long.
+    pub stall: Option<(u64, Duration)>,
+    /// Cut every frame at a seeded byte offset and flush the halves
+    /// separately, with a short pause in between.
+    pub split_writes: bool,
+    /// Sever the link on the Nth forwarded frame (1-based).
+    pub sever_on_frame: Option<u64>,
+    /// When severing, first emit a seeded-length prefix of the frame —
+    /// the victim sees a torn frame, not a clean EOF.
+    pub sever_mid_frame: bool,
+}
+
+struct ProxyShared {
+    target: String,
+    cfg: ChaosConfig,
+    seed: u64,
+    stop: AtomicBool,
+    severed: AtomicBool,
+    /// Frames fully or partially forwarded, across connections and
+    /// directions (the counter the stall/sever scripts key on).
+    forwarded: AtomicU64,
+    /// Live stream clones, so `sever_now` can cut mid-read.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// In-process fault-injection TCP proxy; see the module docs.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Proxy `127.0.0.1:<ephemeral>` → `target`, with faults scripted
+    /// by `cfg` and randomness derived from `seed`.
+    pub fn spawn(target: impl Into<String>, seed: u64, cfg: ChaosConfig) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind chaos proxy");
+        let addr = listener.local_addr().expect("chaos proxy address");
+        listener.set_nonblocking(true).expect("chaos proxy nonblocking");
+        let shared = Arc::new(ProxyShared {
+            target: target.into(),
+            cfg,
+            seed,
+            stop: AtomicBool::new(false),
+            severed: AtomicBool::new(false),
+            forwarded: AtomicU64::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let shared2 = shared.clone();
+        let accept = std::thread::spawn(move || {
+            let mut conn_id = 0u64;
+            while !shared2.stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((client, _peer)) => {
+                        if shared2.severed.load(Ordering::Acquire) {
+                            // refuse fast: accept-then-close reads as
+                            // EOF on the coordinator's handshake
+                            let _ = client.shutdown(Shutdown::Both);
+                            continue;
+                        }
+                        let Ok(upstream) = TcpStream::connect(&shared2.target) else {
+                            let _ = client.shutdown(Shutdown::Both);
+                            continue;
+                        };
+                        let _ = client.set_nodelay(true);
+                        let _ = upstream.set_nodelay(true);
+                        spawn_pumps(&shared2, client, upstream, conn_id);
+                        conn_id += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // unblock any pump still stuck in a read
+            for c in shared2.conns.lock().unwrap().iter() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        });
+        ChaosProxy { addr, shared, accept: Some(accept) }
+    }
+
+    /// The address coordinators should connect to instead of the
+    /// worker's own.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Frames forwarded so far (fully or as a sever prefix).
+    pub fn frames_forwarded(&self) -> u64 {
+        self.shared.forwarded.load(Ordering::Acquire)
+    }
+
+    /// Whether the link is currently severed (scripted or manual).
+    pub fn is_severed(&self) -> bool {
+        self.shared.severed.load(Ordering::Acquire)
+    }
+
+    /// Cut every proxied connection now and refuse new ones until
+    /// [`heal`](Self::heal) — the worker behind the proxy stays alive.
+    pub fn sever_now(&self) {
+        self.shared.severed.store(true, Ordering::Release);
+        for c in self.shared.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Restore pass-through after a sever; new connections reach the
+    /// worker again (the rejoin path).
+    pub fn heal(&self) {
+        self.shared.severed.store(false, Ordering::Release);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.sever_now();
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the two directional pumps for one proxied connection, each
+/// with its own decorrelated RNG stream (tagged by connection id and
+/// direction) so fault placement is deterministic per seed.
+fn spawn_pumps(shared: &Arc<ProxyShared>, client: TcpStream, upstream: TcpStream, conn_id: u64) {
+    let (Ok(client2), Ok(upstream2)) = (client.try_clone(), upstream.try_clone()) else {
+        let _ = client.shutdown(Shutdown::Both);
+        let _ = upstream.shutdown(Shutdown::Both);
+        return;
+    };
+    {
+        let mut conns = shared.conns.lock().unwrap();
+        if let (Ok(c), Ok(u)) = (client.try_clone(), upstream.try_clone()) {
+            conns.push(c);
+            conns.push(u);
+        }
+    }
+    let s1 = shared.clone();
+    let rng1 = Rng::new(s1.seed).fork(conn_id * 2);
+    std::thread::spawn(move || pump(client, upstream, &s1, rng1));
+    let s2 = shared.clone();
+    let rng2 = Rng::new(s2.seed).fork(conn_id * 2 + 1);
+    std::thread::spawn(move || pump(upstream2, client2, &s2, rng2));
+}
+
+/// Read one raw QFLT frame (without interpreting the header).  Length
+/// caps mirror the real parser's, so a desynchronized stream fails
+/// instead of allocating garbage.
+fn read_raw_frame(from: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut head = [0u8; 8]; // magic + header_len
+    from.read_exact(&mut head)?;
+    let hlen = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    if &head[..4] != b"QFLT" || hlen == 0 || hlen > (1 << 20) {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad frame"));
+    }
+    let mut buf = vec![0u8; 8 + hlen + 4];
+    buf[..8].copy_from_slice(&head);
+    from.read_exact(&mut buf[8..])?;
+    let plen = u32::from_le_bytes(buf[8 + hlen..].try_into().unwrap()) as usize;
+    if plen > (1 << 30) {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad payload len"));
+    }
+    let at = buf.len();
+    buf.resize(at + plen, 0);
+    from.read_exact(&mut buf[at..])?;
+    Ok(buf)
+}
+
+/// One direction of one proxied connection: forward whole frames,
+/// injecting the scripted faults.
+fn pump(mut from: TcpStream, mut to: TcpStream, shared: &ProxyShared, mut rng: Rng) {
+    loop {
+        if shared.stop.load(Ordering::Acquire) || shared.severed.load(Ordering::Acquire) {
+            break;
+        }
+        let frame = match read_raw_frame(&mut from) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        let n = shared.forwarded.fetch_add(1, Ordering::AcqRel) + 1;
+        if let Some((at, pause)) = shared.cfg.stall {
+            if n == at {
+                std::thread::sleep(pause);
+            }
+        }
+        if let Some((lo, hi)) = shared.cfg.delay {
+            let span = hi.saturating_sub(lo);
+            std::thread::sleep(lo + span.mul_f64(rng.f64()));
+        }
+        if shared.cfg.sever_on_frame == Some(n) {
+            if shared.cfg.sever_mid_frame && frame.len() > 1 {
+                // a torn frame: prefix only, then the cut
+                let cut = 1 + rng.below(frame.len() - 1);
+                let _ = to.write_all(&frame[..cut]);
+                let _ = to.flush();
+            }
+            shared.severed.store(true, Ordering::Release);
+            break;
+        }
+        let written = if shared.cfg.split_writes && frame.len() > 1 {
+            let cut = 1 + rng.below(frame.len() - 1);
+            to.write_all(&frame[..cut])
+                .and_then(|()| to.flush())
+                .and_then(|()| {
+                    std::thread::sleep(Duration::from_millis(1));
+                    to.write_all(&frame[cut..])
+                })
+        } else {
+            to.write_all(&frame)
+        };
+        if written.and_then(|()| to.flush()).is_err() {
+            break;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}

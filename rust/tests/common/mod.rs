@@ -4,6 +4,8 @@
 
 #![allow(dead_code)] // each test crate uses a subset of these helpers
 
+pub mod chaos;
+
 use std::collections::HashMap;
 use std::sync::Arc;
 

@@ -1,23 +1,33 @@
 //! Fleet integration tests: loopback worker daemons on `127.0.0.1:0`
 //! driven by a coordinator `FleetBackend` — bit-exactness against a
-//! single local `NativeBackend`, failure injection (a worker killed
-//! mid-stream must not lose a request), heartbeat-timeout eviction,
-//! fleet-wide drain-barrier ordering, and the raw wire conversation.
+//! single local backend (including under pipelined, out-of-order
+//! completion), deterministic fault injection through the chaos proxy
+//! (`common::chaos`): mid-frame severs, split writes, stalls, eviction
+//! and rejoin, latency-aware chunk sizing, drain-barrier ordering
+//! behind pipelined forwards, registry-driven fleet growth, wire-level
+//! fuzzing, and version skew.  Every failure scenario is scripted by a
+//! SplitMix64 seed, not by wall-clock races.
 
 mod common;
 
-use std::net::TcpListener;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use common::chaos::{ChaosConfig, ChaosProxy};
 use common::{build_tiny, stub_op};
 use qos_nets::backend::{Backend, NativeBackend, OpTable, StubBackend};
 use qos_nets::engine::OperatingPoint;
-use qos_nets::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
-use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle, WorkerOptions};
+use qos_nets::fleet::wire::{self, Frame, LadderRung, MAX_HEADER_BYTES, PROTOCOL_VERSION};
+use qos_nets::fleet::{
+    register_with, worker, FleetBackend, FleetRegistry, FleetStats, MemberState, WorkerHandle,
+    WorkerOptions, WorkerStats, WORKER_MAX_INFLIGHT,
+};
 use qos_nets::qos::SwitchMode;
 use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::util::rng::Rng;
 
 /// Spawn one loopback stub worker; returns its handle and address.
 fn stub_worker(
@@ -36,6 +46,30 @@ fn stub_worker(
 
 fn stub_catalog() -> Vec<OperatingPoint> {
     vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]
+}
+
+/// Raw QFLT frame bytes from an arbitrary header string — for speaking
+/// protocol dialects the `Frame` enum cannot (version-skew tests) and
+/// for seeding the fuzzer.
+fn raw_frame(header: &str, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"QFLT");
+    buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    buf.extend_from_slice(header.as_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// One worker's stats row out of a snapshot.
+fn stats_of(stats: &FleetStats, addr: &str) -> WorkerStats {
+    stats
+        .snapshot()
+        .0
+        .into_iter()
+        .find(|(a, _)| a == addr)
+        .map(|(_, w)| w)
+        .unwrap_or_default()
 }
 
 #[test]
@@ -95,53 +129,62 @@ fn loopback_fleet_is_bit_identical_to_single_native_backend() {
 }
 
 #[test]
-fn worker_killed_mid_stream_loses_no_request_and_logits_match() {
+fn worker_severed_mid_stream_loses_no_request_and_logits_match() {
     let classes = 7usize;
     let catalog = vec![stub_op("only", 1.0)];
-    let mut handles: Vec<Option<WorkerHandle>> = Vec::new();
+    let mut handles = Vec::new();
     let mut addrs = Vec::new();
-    for _ in 0..3 {
-        // a slow-ish stub so the kill lands while a forward is in flight
-        let (h, addr) = stub_worker(classes, Duration::from_millis(30), catalog.clone());
-        handles.push(Some(h));
-        addrs.push(addr);
+    let mut victim_proxy = None;
+    for w in 0..3 {
+        let (h, addr) = stub_worker(classes, Duration::from_millis(5), catalog.clone());
+        if w == 1 {
+            // worker 1 talks through the chaos proxy, which cuts the
+            // link mid-frame on its 11th forwarded frame — well inside
+            // the data-plane stream (4 frames go to handshake+prepare)
+            let proxy = ChaosProxy::spawn(
+                addr,
+                0xC0FFEE,
+                ChaosConfig {
+                    sever_on_frame: Some(11),
+                    sever_mid_frame: true,
+                    ..ChaosConfig::default()
+                },
+            );
+            addrs.push(proxy.addr().to_string());
+            victim_proxy = Some(proxy);
+        } else {
+            addrs.push(addr);
+        }
+        handles.push(h);
     }
+    let victim_addr = addrs[1].clone();
+    let proxy = victim_proxy.unwrap();
+
     let mut fleet = FleetBackend::connect(&addrs).unwrap();
     fleet.prepare(&catalog).unwrap();
     let mut local = StubBackend::new(classes);
     local.prepare(&catalog).unwrap();
 
     let mut completed = 0usize;
-    let mut killer = None;
     for step in 0..20usize {
         let batch = 9usize;
         let images: Vec<f32> = (0..batch)
-            .flat_map(|i| {
-                let x0 = ((step + i) % classes) as f32;
-                [x0, 0.0, 0.0]
-            })
+            .flat_map(|i| [((step + i) % classes) as f32, 0.0, 0.0])
             .collect();
-        if step == 8 {
-            // kill one worker while the next forward is on the wire
-            let victim = handles[1].take().unwrap();
-            killer = Some(std::thread::spawn(move || {
-                std::thread::sleep(Duration::from_millis(10));
-                victim.kill();
-            }));
-        }
         let got = fleet.forward(0, &images, batch).unwrap();
         let want = local.forward(0, &images, batch).unwrap();
         assert_eq!(got, want, "step {step}: logits diverged after failover");
         completed += batch;
         assert_eq!(got.len(), batch * classes);
     }
-    killer.unwrap().join().unwrap();
 
-    assert_eq!(completed, 20 * 9, "every request must complete despite the kill");
-    assert_eq!(fleet.live_workers(), 2, "the killed worker must be evicted");
+    assert_eq!(completed, 20 * 9, "every request must complete despite the sever");
+    assert!(proxy.is_severed(), "the scripted sever must have fired");
+    assert_eq!(fleet.live_workers(), 2, "the severed worker must be evicted");
+    assert_eq!(fleet.stats().state_of(&victim_addr), MemberState::Evicted);
     let (workers, requeues, evictions) = fleet.stats().snapshot();
     assert_eq!(evictions, 1);
-    assert!(requeues >= 1, "the dead worker's chunk must have been requeued");
+    assert!(requeues >= 1, "the severed worker's in-flight chunk must have been requeued");
     let survivors: u64 = workers
         .iter()
         .filter(|(_, w)| !w.evicted)
@@ -149,9 +192,256 @@ fn worker_killed_mid_stream_loses_no_request_and_logits_match() {
         .sum();
     assert!(survivors > 0);
 
-    for handle in handles.into_iter().flatten() {
+    for handle in handles {
         handle.kill();
     }
+}
+
+#[test]
+fn chaos_delay_skew_reassembles_out_of_order_completions_bit_exact() {
+    let classes = 5usize;
+    let catalog = vec![stub_op("only", 1.0)];
+    let (h0, addr0) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    let (h1, addr1) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    // worker 1's frames lag by a seeded 4-12 ms each way, so worker 0
+    // races ahead and logits complete far from submission order
+    let proxy = ChaosProxy::spawn(
+        addr1,
+        0x0DD_5EED,
+        ChaosConfig {
+            delay: Some((Duration::from_millis(4), Duration::from_millis(12))),
+            ..ChaosConfig::default()
+        },
+    );
+    let addrs = vec![addr0, proxy.addr().to_string()];
+    // an explicit window keeps this pipelined even under the
+    // QOS_NETS_FLEET_PIPELINE=off compatibility leg
+    let mut fleet = FleetBackend::connect(&addrs).unwrap().with_pipeline_window(6);
+    fleet.prepare(&catalog).unwrap();
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+
+    for step in 0..10usize {
+        let batch = 24 + step; // odd sizes exercise uneven splits
+        let images: Vec<f32> = (0..batch)
+            .flat_map(|i| [((i * 7 + step) % classes) as f32, 0.5])
+            .collect();
+        let got = fleet.forward(0, &images, batch).unwrap();
+        let want = local.forward(0, &images, batch).unwrap();
+        assert_eq!(got, want, "step {step}: out-of-order gather reassembled wrong");
+    }
+
+    assert!(
+        proxy.frames_forwarded() > 4,
+        "the delayed worker must have seen data-plane traffic, saw {} frames",
+        proxy.frames_forwarded()
+    );
+    let (_, _, evictions) = fleet.stats().snapshot();
+    assert_eq!(evictions, 0, "delays are not failures");
+    h0.kill();
+    h1.kill();
+}
+
+#[test]
+fn chaos_split_writes_and_stalls_do_not_corrupt_the_stream() {
+    let classes = 4usize;
+    let catalog = stub_catalog();
+    let (h0, addr0) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    // every frame is torn at a seeded offset and flushed in two pieces,
+    // and the 9th frame stalls 120 ms — an alive-but-slow link
+    let proxy = ChaosProxy::spawn(
+        addr0,
+        0x5EED_5711,
+        ChaosConfig {
+            split_writes: true,
+            stall: Some((9, Duration::from_millis(120))),
+            ..ChaosConfig::default()
+        },
+    );
+    let mut fleet = FleetBackend::connect(&[proxy.addr().to_string()]).unwrap();
+    fleet.prepare(&catalog).unwrap();
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+
+    for step in 0..8usize {
+        let batch = 5usize;
+        let images: Vec<f32> =
+            (0..batch).flat_map(|i| [((step + i) % classes) as f32, 0.0]).collect();
+        let got = fleet.forward(0, &images, batch).unwrap();
+        let want = local.forward(0, &images, batch).unwrap();
+        assert_eq!(got, want, "step {step}: logits diverged over the torn link");
+    }
+
+    let (workers, requeues, evictions) = fleet.stats().snapshot();
+    assert_eq!(
+        (requeues, evictions),
+        (0, 0),
+        "torn writes and stalls must not look like failures"
+    );
+    assert!(workers.iter().all(|(_, w)| w.state == MemberState::Live));
+    h0.kill();
+}
+
+#[test]
+fn evicted_worker_rejoins_with_its_stats_preserved() {
+    let classes = 4usize;
+    let catalog = stub_catalog();
+    let (h0, addr0) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    let (h1, addr1) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    let proxy = ChaosProxy::spawn(addr1, 0xA11CE, ChaosConfig::default());
+    let paddr = proxy.addr().to_string();
+
+    let stats = FleetStats::default();
+    let mut fleet =
+        FleetBackend::connect_with(&[addr0.clone(), paddr.clone()], stats.clone()).unwrap();
+    fleet.prepare(&catalog).unwrap();
+    fleet.set_operating_point(1, SwitchMode::Immediate).unwrap();
+
+    let images = |step: usize, batch: usize| -> Vec<f32> {
+        (0..batch).flat_map(|i| [((step + i) % classes) as f32, 0.0]).collect()
+    };
+
+    // drive traffic until the proxied worker has history worth keeping
+    let mut before = 0u64;
+    for step in 0..200usize {
+        fleet.forward(1, &images(step, 16), 16).unwrap();
+        before = stats_of(&stats, &paddr).requests;
+        if before > 0 {
+            break;
+        }
+    }
+    assert!(before > 0, "the proxied worker never served — cannot test preservation");
+
+    // cut the link: first strike suspects, the failed quick-readmit on
+    // the next forward evicts
+    proxy.sever_now();
+    for step in 0..3usize {
+        fleet.forward(1, &images(step, 8), 8).unwrap();
+    }
+    assert_eq!(fleet.live_workers(), 1);
+    assert_eq!(stats.state_of(&paddr), MemberState::Evicted);
+    let w = stats_of(&stats, &paddr);
+    assert_eq!(w.requests, before, "eviction must not touch serving history");
+    assert_eq!(w.rejoins, 0);
+
+    // a re-probe against a still-severed link changes nothing
+    assert_eq!(fleet.reprobe(), 0);
+    assert_eq!(stats.state_of(&paddr), MemberState::Evicted);
+
+    // heal and re-probe: fresh handshake, ladder + OP replay, Live again
+    proxy.heal();
+    assert_eq!(fleet.reprobe(), 1);
+    assert_eq!(fleet.live_workers(), 2);
+    let w = stats_of(&stats, &paddr);
+    assert_eq!(w.state, MemberState::Live);
+    assert_eq!(w.rejoins, 1);
+    assert_eq!(w.requests, before, "history must survive the evict → rejoin round trip");
+
+    // and the rejoined worker serves again, still bit-exact
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+    let mut served_again = false;
+    for step in 0..200usize {
+        let got = fleet.forward(1, &images(step, 16), 16).unwrap();
+        let want = local.forward(1, &images(step, 16), 16).unwrap();
+        assert_eq!(got, want, "step {step} after rejoin");
+        if stats_of(&stats, &paddr).requests > before {
+            served_again = true;
+            break;
+        }
+    }
+    assert!(served_again, "a rejoined worker must take traffic again");
+    h0.kill();
+    h1.kill();
+}
+
+#[test]
+fn latency_skewed_fleet_gets_latency_skewed_chunk_sizes() {
+    let catalog = vec![stub_op("only", 1.0)];
+    let classes = 3usize;
+    let (hf, fast) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    let (hs, slow) = stub_worker(classes, Duration::from_millis(25), catalog.clone());
+    let stats = FleetStats::default();
+    let mut fleet = FleetBackend::connect_with(&[fast.clone(), slow.clone()], stats.clone())
+        .unwrap()
+        .with_pipeline_window(4);
+    fleet.prepare(&catalog).unwrap();
+
+    let batch = 48usize;
+    let images: Vec<f32> = (0..batch).flat_map(|i| [(i % classes) as f32, 0.0]).collect();
+    for _ in 0..12 {
+        let out = fleet.forward(0, &images, batch).unwrap();
+        assert_eq!(out.len(), batch * classes);
+    }
+
+    let (_, _, evictions) = stats.snapshot();
+    assert_eq!(evictions, 0);
+    let (f, s) = (stats_of(&stats, &fast), stats_of(&stats, &slow));
+    assert!(
+        f.requests > s.requests,
+        "the fast worker must serve more images ({} vs {})",
+        f.requests,
+        s.requests
+    );
+    let mean = |w: &WorkerStats| w.requests as f64 / w.batches.max(1) as f64;
+    assert!(
+        mean(&f) > mean(&s),
+        "chunk sizing must skew toward the fast worker ({:.1} vs {:.1} images/chunk)",
+        mean(&f),
+        mean(&s)
+    );
+    assert_eq!(stats.state_of(&slow), MemberState::Live, "slow is not dead");
+    hf.kill();
+    hs.kill();
+}
+
+#[test]
+fn registry_join_grows_the_fleet_and_siblings_adopt_the_newcomer() {
+    let classes = 4usize;
+    let catalog = stub_catalog();
+    let (h0, addr0) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    let stats = FleetStats::default();
+    let mut fleet = FleetBackend::connect_with(&[addr0.clone()], stats.clone()).unwrap();
+    fleet.prepare(&catalog).unwrap();
+    fleet.forward(0, &[1.0, 0.0], 1).unwrap();
+
+    // a new worker announces itself via the registry while the fleet
+    // is already serving
+    let reg = FleetRegistry::bind("127.0.0.1:0").unwrap();
+    let (h1, addr1) = stub_worker(classes, Duration::ZERO, catalog.clone());
+    register_with(&reg.addr().to_string(), &addr1).unwrap();
+    let newcomers = reg.take_new();
+    assert_eq!(newcomers, vec![addr1.clone()]);
+    assert_eq!(fleet.admit(&newcomers), 1);
+    assert_eq!(fleet.live_workers(), 2);
+
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+    let mut newcomer_served = false;
+    for step in 0..200usize {
+        let batch = 8usize;
+        let images: Vec<f32> =
+            (0..batch).flat_map(|i| [((step + i) % classes) as f32, 0.0]).collect();
+        let got = fleet.forward(0, &images, batch).unwrap();
+        let want = local.forward(0, &images, batch).unwrap();
+        assert_eq!(got, want, "step {step} with the admitted worker");
+        if stats_of(&stats, &addr1).requests > 0 {
+            newcomer_served = true;
+            break;
+        }
+    }
+    assert!(newcomer_served, "an admitted worker must end up serving traffic");
+
+    // a sibling backend sharing the stats registry adopts the newcomer
+    // on its next forward — `serve --fleet` batcher threads see joins
+    // without their own registry plumbing
+    let mut sib = FleetBackend::connect_with(&[addr0.clone()], stats.clone()).unwrap();
+    sib.prepare(&catalog).unwrap();
+    sib.forward(0, &[1.0, 0.0], 1).unwrap();
+    assert_eq!(sib.live_workers(), 2, "sibling must adopt the registry-admitted worker");
+
+    h0.kill();
+    h1.kill();
 }
 
 #[test]
@@ -159,7 +449,9 @@ fn heartbeat_timeout_evicts_unresponsive_worker() {
     let (healthy, addr0) = stub_worker(4, Duration::ZERO, stub_catalog());
 
     // a worker that answers the handshake and then goes silent: the
-    // timeout path, not the connection-reset path
+    // timeout path, not the connection-reset path.  The probe suspects
+    // it, the in-call readmit gives it its second strike (the fresh
+    // hello times out too), and it leaves the live set evicted.
     let silent = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr1 = silent.local_addr().unwrap().to_string();
     let silent_thread = std::thread::spawn(move || {
@@ -176,6 +468,7 @@ fn heartbeat_timeout_evicts_unresponsive_worker() {
                 catalog: vec!["hi".into(), "lo".into()],
                 hb_interval_ms: 1000,
                 hb_timeout_ms: 500,
+                max_inflight: 1,
             },
             &[],
         )
@@ -205,6 +498,7 @@ fn heartbeat_timeout_evicts_unresponsive_worker() {
     let (workers, _, evictions) = fleet.stats().snapshot();
     assert_eq!(evictions, 1);
     assert!(workers.iter().any(|(a, w)| *a == addr1 && w.evicted));
+    assert_eq!(fleet.stats().state_of(&addr1), MemberState::Evicted);
 
     // a healthy fleet member keeps answering after the probe
     assert_eq!(fleet.heartbeat(Duration::from_millis(500)), 1);
@@ -298,17 +592,66 @@ fn fleet_drain_switch_acks_only_after_inflight_forwards_complete() {
 }
 
 #[test]
+fn raw_wire_drain_barrier_orders_behind_pipelined_forwards() {
+    let (handle, addr) = stub_worker(4, Duration::from_millis(40), stub_catalog());
+    let mut s = TcpStream::connect(&addr).unwrap();
+    wire::write_frame(&mut s, &Frame::Hello { version: PROTOCOL_VERSION }, &[]).unwrap();
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::HelloAck { .. }));
+    wire::write_frame(
+        &mut s,
+        &Frame::Prepare {
+            ladder: vec![
+                LadderRung { name: "hi".into(), power: 1.0 },
+                LadderRung { name: "lo".into(), power: 0.5 },
+            ],
+        },
+        &[],
+    )
+    .unwrap();
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
+
+    // two pipelined forwards and the drain-switch barrier, written
+    // back-to-back without reading a single reply: the worker's FIFO
+    // execution must answer both forwards before acking the barrier
+    let t0 = Instant::now();
+    wire::write_frame(&mut s, &Frame::Forward { id: Some(7), op: Some(0), batch: 1 }, &[1.0, 0.0])
+        .unwrap();
+    wire::write_frame(&mut s, &Frame::Forward { id: Some(8), op: Some(0), batch: 1 }, &[2.0, 0.0])
+        .unwrap();
+    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: true }, &[]).unwrap();
+
+    match wire::read_frame(&mut s).unwrap().0 {
+        Frame::Logits { id, classes } => {
+            assert_eq!((id, classes), (Some(7), 4));
+        }
+        other => panic!("expected the first logits, got {other:?}"),
+    }
+    match wire::read_frame(&mut s).unwrap().0 {
+        Frame::Logits { id, .. } => assert_eq!(id, Some(8)),
+        other => panic!("expected the second logits, got {other:?}"),
+    }
+    assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
+    assert!(
+        t0.elapsed() >= Duration::from_millis(70),
+        "barrier acked after {:?} — before both 40 ms forwards could have run",
+        t0.elapsed()
+    );
+    handle.kill();
+}
+
+#[test]
 fn raw_wire_conversation_covers_setop_current_op_and_drain() {
     let (handle, addr) = stub_worker(4, Duration::ZERO, stub_catalog());
-    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    let mut s = TcpStream::connect(&addr).unwrap();
 
-    // handshake
+    // handshake; the worker advertises its pipelining capability
     wire::write_frame(&mut s, &Frame::Hello { version: PROTOCOL_VERSION }, &[]).unwrap();
     let (ack, _) = wire::read_frame(&mut s).unwrap();
     match ack {
-        Frame::HelloAck { classes, catalog, .. } => {
+        Frame::HelloAck { classes, catalog, max_inflight, .. } => {
             assert_eq!(classes, 4);
             assert_eq!(catalog, vec!["hi".to_string(), "lo".to_string()]);
+            assert_eq!(max_inflight, WORKER_MAX_INFLIGHT);
         }
         other => panic!("expected HelloAck, got {other:?}"),
     }
@@ -327,13 +670,18 @@ fn raw_wire_conversation_covers_setop_current_op_and_drain() {
     .unwrap();
     assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
 
-    // fire-and-forget SetOp, then a Forward that omits `op`: it must
-    // run under the worker's current OP — observable via Pong
+    // fire-and-forget SetOp, then an id-less legacy Forward omitting
+    // `op`: it must run under the worker's current OP, and the reply to
+    // an id-less request carries no id either
     wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: false }, &[]).unwrap();
-    wire::write_frame(&mut s, &Frame::Forward { op: None, batch: 2 }, &[1.0, 0.0, 3.0, 0.0])
-        .unwrap();
+    wire::write_frame(
+        &mut s,
+        &Frame::Forward { id: None, op: None, batch: 2 },
+        &[1.0, 0.0, 3.0, 0.0],
+    )
+    .unwrap();
     let (logits, payload) = wire::read_frame(&mut s).unwrap();
-    assert!(matches!(logits, Frame::Logits { classes: 4 }));
+    assert!(matches!(logits, Frame::Logits { id: None, classes: 4 }));
     assert_eq!(payload.len(), 2 * 4);
 
     wire::write_frame(&mut s, &Frame::Heartbeat, &[]).unwrap();
@@ -352,7 +700,7 @@ fn raw_wire_conversation_covers_setop_current_op_and_drain() {
     // version mismatch is refused
     wire::write_frame(&mut s, &Frame::Hello { version: 999 }, &[]).unwrap();
     match wire::read_frame(&mut s).unwrap().0 {
-        Frame::Err { message } => assert!(message.contains("version"), "{message}"),
+        Frame::Err { message, .. } => assert!(message.contains("version"), "{message}"),
         other => panic!("expected Err, got {other:?}"),
     }
 
@@ -360,6 +708,127 @@ fn raw_wire_conversation_covers_setop_current_op_and_drain() {
     wire::write_frame(&mut s, &Frame::Shutdown, &[]).unwrap();
     assert!(matches!(wire::read_frame(&mut s).unwrap().0, Frame::Ok));
     handle.join();
+}
+
+#[test]
+fn version_skew_worker_with_unknown_frames_is_rejected_cleanly() {
+    // a future-protocol worker answers Hello with a frame type this
+    // coordinator has never heard of; the connect must fail with an
+    // error naming the unknown frame, not hang or panic
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let (frame, _) = wire::read_frame(&mut s).unwrap();
+        assert!(matches!(frame, Frame::Hello { .. }));
+        s.write_all(&raw_frame(r#"{"type":"teleport","hops":3}"#, &[])).unwrap();
+        s.flush().unwrap();
+        // hold the socket open until the coordinator gives up
+        use std::io::Read;
+        let mut buf = [0u8; 64];
+        let _ = s.read(&mut buf);
+    });
+
+    let err = FleetBackend::connect(&[addr]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown frame type"), "{msg}");
+    assert!(msg.contains("hello ack"), "{msg}");
+    t.join().unwrap();
+}
+
+#[test]
+fn wire_fuzz_mutated_frames_error_cleanly_and_respect_caps() {
+    // seeded corpus: every frame kind, with and without payloads
+    let mut bases: Vec<Vec<u8>> = Vec::new();
+    let corpus: Vec<(Frame, Vec<f32>)> = vec![
+        (Frame::Hello { version: PROTOCOL_VERSION }, vec![]),
+        (
+            Frame::HelloAck {
+                worker: "w".into(),
+                backend: "stub".into(),
+                mode: "bn".into(),
+                classes: 10,
+                catalog: vec!["hi".into(), "lo".into()],
+                hb_interval_ms: 1000,
+                hb_timeout_ms: 500,
+                max_inflight: 64,
+            },
+            vec![],
+        ),
+        (
+            Frame::Prepare {
+                ladder: vec![
+                    LadderRung { name: "hi".into(), power: 1.0 },
+                    LadderRung { name: "lo".into(), power: 0.5 },
+                ],
+            },
+            vec![],
+        ),
+        (Frame::Forward { id: Some(42), op: Some(1), batch: 3 }, vec![1.0; 9]),
+        (Frame::Logits { id: Some(42), classes: 3 }, vec![0.5; 9]),
+        (Frame::SetOp { op: 1, drain: true }, vec![]),
+        (Frame::Heartbeat, vec![]),
+        (Frame::Pong { current_op: 1, served: 99 }, vec![]),
+        (Frame::Register { addr: "10.0.0.9:7070".into() }, vec![]),
+        (Frame::err("boom"), vec![]),
+    ];
+    for (frame, payload) in &corpus {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, frame, payload).unwrap();
+        // sanity: the unmutated bytes round-trip
+        let (back, pay) = wire::read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(&back, frame);
+        assert_eq!(&pay, payload);
+        bases.push(buf);
+    }
+
+    // random mutations: bit flips, truncations, hostile length stamps.
+    // The parser may accept a mutation that lands in a don't-care byte;
+    // it must never panic, hang, or allocate past the caps.
+    let mut rng = Rng::new(0xF0_55E_D);
+    for _ in 0..600 {
+        let mut bytes = bases[rng.below(bases.len())].clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                bytes.truncate(rng.below(bytes.len()));
+            }
+            _ => {
+                let i = rng.below(bytes.len().saturating_sub(4).max(1));
+                let stamp = (rng.next_u64() as u32).to_le_bytes();
+                let end = (i + 4).min(bytes.len());
+                bytes[i..end].copy_from_slice(&stamp[..end - i]);
+            }
+        }
+        let _ = wire::read_frame(&mut bytes.as_slice()); // must not panic
+    }
+
+    // a header length just past the cap is refused before any read
+    let mut bytes = raw_frame(r#"{"type":"heartbeat"}"#, &[]);
+    bytes[4..8].copy_from_slice(&((MAX_HEADER_BYTES as u32) + 1).to_le_bytes());
+    let err = wire::read_frame(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+
+    // ...and so is a payload length past the cap, or a misaligned one
+    let header = r#"{"type":"heartbeat"}"#;
+    let plen_at = 8 + header.len();
+    let mut bytes = raw_frame(header, &[]);
+    bytes[plen_at..plen_at + 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+    let err = wire::read_frame(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("payload length"), "{err:#}");
+    let mut bytes = raw_frame(header, &[]);
+    bytes[plen_at..plen_at + 4].copy_from_slice(&6u32.to_le_bytes());
+    let err = wire::read_frame(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("payload length"), "{err:#}");
+
+    // bad magic fails loudly
+    let mut bytes = raw_frame(header, &[]);
+    bytes[0] = b'X';
+    let err = wire::read_frame(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
 }
 
 #[test]
@@ -476,5 +945,92 @@ fn server_over_fleet_serves_waves_across_a_drain_switch() {
 
     for handle in handles {
         handle.kill();
+    }
+}
+
+/// Seeded churn soak: continuous forwards compared bit-exact against a
+/// local `StubBackend` while workers are severed, healed and
+/// re-admitted and the fleet OP flips between Drain and Immediate
+/// switches.  `cargo test -q --test fleet -- --ignored soak` runs it;
+/// `QOS_NETS_SOAK_SEED` / `QOS_NETS_SOAK_SECS` override the script
+/// (the CI advisory job runs a 3-seed matrix).
+#[test]
+#[ignore = "30 s churn soak; run explicitly (the CI advisory job does)"]
+fn soak_kill_rejoin_churn_stays_bit_exact() {
+    let env_u64 = |key: &str, default: u64| {
+        std::env::var(key).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+    };
+    let seed = env_u64("QOS_NETS_SOAK_SEED", 1);
+    let secs = env_u64("QOS_NETS_SOAK_SECS", 30);
+    let classes = 6usize;
+    let catalog = stub_catalog();
+    let mut rng = Rng::new(seed);
+
+    let mut handles = Vec::new();
+    let mut proxies = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..3u64 {
+        let (h, addr) = stub_worker(classes, Duration::from_millis(1), catalog.clone());
+        let proxy = ChaosProxy::spawn(addr, rng.fork(i).next_u64(), ChaosConfig::default());
+        addrs.push(proxy.addr().to_string());
+        proxies.push(proxy);
+        handles.push(h);
+    }
+    let stats = FleetStats::default();
+    let mut fleet = FleetBackend::connect_with(&addrs, stats.clone()).unwrap();
+    fleet.prepare(&catalog).unwrap();
+    let mut local = StubBackend::new(classes);
+    local.prepare(&catalog).unwrap();
+
+    let t0 = Instant::now();
+    let mut severed: Option<usize> = None;
+    let mut iter = 0u64;
+    let mut op = 0usize;
+    while t0.elapsed() < Duration::from_secs(secs) {
+        iter += 1;
+        // churn: sever one proxy, then heal + re-admit it a few dozen
+        // forwards later; at most one worker is down at a time, so
+        // every forward retains quorum
+        if iter % 17 == 0 {
+            match severed.take() {
+                Some(i) => {
+                    proxies[i].heal();
+                    fleet.reprobe();
+                }
+                None => {
+                    let i = rng.below(proxies.len());
+                    proxies[i].sever_now();
+                    severed = Some(i);
+                }
+            }
+        }
+        // OP churn: both switch modes, against live traffic
+        if iter % 29 == 0 {
+            op = 1 - op;
+            let mode = if rng.below(2) == 0 { SwitchMode::Drain } else { SwitchMode::Immediate };
+            let _ = fleet.set_operating_point(op, mode);
+        }
+        let batch = 1 + rng.below(24);
+        let images: Vec<f32> =
+            (0..batch).flat_map(|_| [rng.below(classes) as f32, 0.0]).collect();
+        let got = fleet.forward(op, &images, batch).unwrap();
+        let want = local.forward(op, &images, batch).unwrap();
+        assert_eq!(got, want, "soak iter {iter} (seed {seed}) diverged");
+    }
+
+    // settle: heal everything and re-admit the stragglers
+    for p in &proxies {
+        p.heal();
+    }
+    fleet.reprobe();
+    assert_eq!(fleet.live_workers(), 3, "every worker must be re-admitted after the churn");
+    let (workers, _, evictions) = stats.snapshot();
+    let rejoins: u64 = workers.iter().map(|(_, w)| w.rejoins).sum();
+    assert!(
+        evictions >= 1 && rejoins >= 1,
+        "the churn script must exercise evict + rejoin (seed {seed}: {evictions} evictions, {rejoins} rejoins over {iter} iters)"
+    );
+    for h in handles {
+        h.kill();
     }
 }

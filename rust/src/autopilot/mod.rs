@@ -1,0 +1,833 @@
+//! SLO autopilot: one closed-loop controller over the three levers the
+//! repo previously drove independently — the QoS operating-point ladder
+//! (accuracy ↔ power), the elastic worker pool (capacity ↔ power), and
+//! the fleet chunk plan (interleaving granularity ↔ tail latency).
+//!
+//! The paper's QoS story is precisely that a platform with multiple
+//! operating points can trade accuracy for resources *under pressure*;
+//! this module closes that loop.  Each control tick the [`Autopilot`]
+//! consumes a windowed p95 latency (from `ServerMetrics::snapshot()`
+//! deltas), the environmental power budget (`qos::envsim`), an operator
+//! power envelope, and the pool/fleet state, and emits at most one
+//! action per axis plus a [`Decision`] record for the audit log.
+//!
+//! ## Precedence
+//!
+//! 1. **Power first.**  The effective budget handed to the wrapped
+//!    [`QosController`] is `min(env budget, power envelope)` — power
+//!    constraints always bind, and budget-driven downgrades keep their
+//!    `Immediate` urgency.
+//! 2. **Shed accuracy before shedding latency.**  Under latency
+//!    pressure (windowed p95 above `pressure_frac * slo`), the
+//!    autopilot first grows the worker pool if the ceiling allows
+//!    (capacity costs no accuracy), then pushes its *latency cap* one
+//!    rung toward frugal ([`QosController::observe_capped`]) so the SLO
+//!    is defended by degrading accuracy, not by violating latency.
+//!    With a fleet attached it also narrows the chunk quantum for finer
+//!    interleaving.
+//! 3. **Recover accuracy only after sustained headroom.**  Only after
+//!    `recover_after` *consecutive* clear ticks (p95 under
+//!    `clear_frac * slo`) does the cap relax one rung — the upgrade
+//!    then rides the normal draining switch path — and only after the
+//!    longer `pool_recover_after` streak does the pool shrink.
+//! 4. **Hysteresis everywhere.**  Per-axis cooldowns pace consecutive
+//!    actions, the pressure/clear thresholds are deliberately apart
+//!    (`clear_frac < pressure_frac`), and the wrapped controller keeps
+//!    its own upgrade margin + dwell — so OP and pool decisions cannot
+//!    flap against each other under an oscillating budget.
+//!
+//! The autopilot never touches a server directly: `tick` returns a
+//! [`TickOutcome`] and the caller (`serve --autopilot`, the bench
+//! driver) actuates the switch through the existing fleet-first
+//! broadcast + `set_operating_point_with` path, the pool target through
+//! `Server::set_pool_target`, and the chunk quantum through
+//! `FleetStats::set_chunk_quantum_us` — Drain/Immediate semantics and
+//! the supervisor's thread ownership are preserved unchanged.
+
+use std::time::Instant;
+
+use crate::fleet::CHUNK_QUANTUM_US;
+use crate::qos::{LadderEntry, QosConfig, QosController, SwitchMode};
+use crate::util::json::Json;
+
+/// Knobs for [`Autopilot`].  The defaults assume the control tick is
+/// the bench interval (~500 ms) and a log2-bucketed p95, whose readings
+/// double between rungs — hence a `pressure_frac` well below 1.0, so
+/// the shed fires one bucket *before* the SLO bucket is reached.
+#[derive(Debug, Clone)]
+pub struct AutopilotConfig {
+    /// The latency SLO: windowed p95 must stay at or under this.
+    pub slo_p95_ms: f64,
+    /// Operator power envelope (relative multiplication power, 0..=1);
+    /// 1.0 = only the environmental budget binds.
+    pub power_envelope: f64,
+    /// p95 above `pressure_frac * slo_p95_ms` = latency pressure.
+    pub pressure_frac: f64,
+    /// p95 at or under `clear_frac * slo_p95_ms` = headroom tick.
+    pub clear_frac: f64,
+    /// Minimum samples in the p95 window before it is trusted (an
+    /// almost-empty window's p95 is one batch's noise).
+    pub min_window: u64,
+    /// Consecutive headroom ticks before one accuracy-recovery step.
+    pub recover_after: u32,
+    /// Consecutive headroom ticks before the pool shrinks (longer than
+    /// `recover_after`: accuracy recovers first, capacity leaves last).
+    pub pool_recover_after: u32,
+    /// Ticks between consecutive actions on the same axis.
+    pub cooldown_ticks: u32,
+    /// Chunk quantum while narrowed, microseconds.
+    pub chunk_narrow_us: f64,
+}
+
+impl Default for AutopilotConfig {
+    fn default() -> Self {
+        AutopilotConfig {
+            slo_p95_ms: 100.0,
+            power_envelope: 1.0,
+            pressure_frac: 0.5,
+            clear_frac: 0.4,
+            min_window: 16,
+            recover_after: 4,
+            pool_recover_after: 10,
+            cooldown_ticks: 2,
+            chunk_narrow_us: CHUNK_QUANTUM_US / 2.0,
+        }
+    }
+}
+
+/// Everything the autopilot observes on one control tick.
+#[derive(Debug, Clone, Copy)]
+pub struct TickInputs {
+    /// Wall-clock offset of this tick, seconds (stamped into the log).
+    pub t_s: f64,
+    /// Windowed p95 end-to-end latency, milliseconds (0 when the
+    /// window is empty).
+    pub p95_ms: f64,
+    /// Requests completed inside the window.
+    pub window: u64,
+    /// Environmental power budget (envsim governor or scripted trace).
+    pub env_budget: f64,
+    /// Workers currently live / pool bounds.
+    pub live_workers: usize,
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Whether a fleet chunk planner is attached (enables chunk
+    /// actions).
+    pub has_fleet: bool,
+}
+
+/// Which constraint drove this tick's decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// The power budget/envelope limits the OP below the latency cap.
+    Power,
+    /// Latency pressure (p95 approaching the SLO) drove the tick.
+    Latency,
+    /// Sustained headroom drove a recovery action.
+    Headroom,
+    /// Nothing bound; steady state.
+    None,
+}
+
+/// Operating-point action taken this tick (as seen on the ladder:
+/// `Down` = toward frugal, `Up` = toward accurate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpAction {
+    None,
+    Down,
+    Up,
+}
+
+/// Worker-pool action taken this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolAction {
+    None,
+    Grow,
+    Shrink,
+}
+
+/// Fleet chunk-plan action taken this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkAction {
+    None,
+    Narrow,
+    Widen,
+}
+
+impl Bound {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Bound::Power => "power",
+            Bound::Latency => "latency",
+            Bound::Headroom => "headroom",
+            Bound::None => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Bound> {
+        Some(match s {
+            "power" => Bound::Power,
+            "latency" => Bound::Latency,
+            "headroom" => Bound::Headroom,
+            "none" => Bound::None,
+            _ => return None,
+        })
+    }
+}
+
+impl OpAction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpAction::None => "none",
+            OpAction::Down => "op_down",
+            OpAction::Up => "op_up",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpAction> {
+        Some(match s {
+            "none" => OpAction::None,
+            "op_down" => OpAction::Down,
+            "op_up" => OpAction::Up,
+            _ => return None,
+        })
+    }
+}
+
+impl PoolAction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PoolAction::None => "none",
+            PoolAction::Grow => "pool_grow",
+            PoolAction::Shrink => "pool_shrink",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PoolAction> {
+        Some(match s {
+            "none" => PoolAction::None,
+            "pool_grow" => PoolAction::Grow,
+            "pool_shrink" => PoolAction::Shrink,
+            _ => return None,
+        })
+    }
+}
+
+impl ChunkAction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ChunkAction::None => "none",
+            ChunkAction::Narrow => "chunk_narrow",
+            ChunkAction::Widen => "chunk_widen",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChunkAction> {
+        Some(match s {
+            "none" => ChunkAction::None,
+            "chunk_narrow" => ChunkAction::Narrow,
+            "chunk_widen" => ChunkAction::Widen,
+            _ => return None,
+        })
+    }
+}
+
+/// One line of the autopilot's audit log: what it saw, what it did,
+/// and which constraint bound.  Serialized into the bench report's
+/// `autopilot.decisions` timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// Tick timestamp, seconds from run start.
+    pub t_s: f64,
+    /// Windowed p95 observed this tick, milliseconds.
+    pub p95_ms: f64,
+    /// Relative power of the OP in force *after* the tick.
+    pub power: f64,
+    /// Effective power budget (min of env budget and envelope).
+    pub budget: f64,
+    /// `OpTable` index in force after the tick.
+    pub op: usize,
+    /// Live workers observed at the tick.
+    pub workers: usize,
+    pub op_action: OpAction,
+    pub pool_action: PoolAction,
+    pub chunk_action: ChunkAction,
+    pub bound: Bound,
+}
+
+impl Decision {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_s", Json::num(self.t_s)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("power", Json::num(self.power)),
+            ("budget", Json::num(self.budget)),
+            ("op", Json::num(self.op as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("op_action", Json::str(self.op_action.as_str())),
+            ("pool_action", Json::str(self.pool_action.as_str())),
+            ("chunk_action", Json::str(self.chunk_action.as_str())),
+            ("bound", Json::str(self.bound.as_str())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Decision, String> {
+        let field = |k: &str| -> Result<f64, String> {
+            j.req(k)?.as_f64().ok_or_else(|| format!("decision.{k}: not a number"))
+        };
+        let tag = |k: &str| -> Result<String, String> {
+            Ok(j.req(k)?
+                .as_str()
+                .ok_or_else(|| format!("decision.{k}: not a string"))?
+                .to_string())
+        };
+        Ok(Decision {
+            t_s: field("t_s")?,
+            p95_ms: field("p95_ms")?,
+            power: field("power")?,
+            budget: field("budget")?,
+            op: field("op")? as usize,
+            workers: field("workers")? as usize,
+            op_action: OpAction::parse(&tag("op_action")?)
+                .ok_or_else(|| "decision.op_action: unknown tag".to_string())?,
+            pool_action: PoolAction::parse(&tag("pool_action")?)
+                .ok_or_else(|| "decision.pool_action: unknown tag".to_string())?,
+            chunk_action: ChunkAction::parse(&tag("chunk_action")?)
+                .ok_or_else(|| "decision.chunk_action: unknown tag".to_string())?,
+            bound: Bound::parse(&tag("bound")?)
+                .ok_or_else(|| "decision.bound: unknown tag".to_string())?,
+        })
+    }
+}
+
+/// What the caller must actuate after one [`Autopilot::tick`].
+#[derive(Debug, Clone)]
+pub struct TickOutcome {
+    /// OP switch to apply (table index + mode), through the usual
+    /// fleet-first broadcast then `set_operating_point_with`.
+    pub switch: Option<(usize, SwitchMode)>,
+    /// New explicit worker-pool target (`Server::set_pool_target`).
+    pub pool_target: Option<usize>,
+    /// New fleet chunk quantum (`FleetStats::set_chunk_quantum_us`).
+    pub chunk_quantum_us: Option<f64>,
+    /// Audit-log record for this tick.
+    pub decision: Decision,
+}
+
+/// The closed-loop controller; see the module docs for the precedence
+/// rules.  Wraps a [`QosController`] so budget hysteresis, dwell and
+/// Drain/Immediate mode selection stay exactly the serving stack's.
+#[derive(Debug)]
+pub struct Autopilot {
+    cfg: AutopilotConfig,
+    controller: QosController,
+    /// Latency cap: sorted-ladder position the controller may not rise
+    /// above (0 = uncapped).  Latency pressure pushes it toward frugal;
+    /// sustained headroom relaxes it back.
+    lat_cap: usize,
+    /// Consecutive clear (headroom) ticks.
+    headroom_ticks: u32,
+    op_cooldown: u32,
+    pool_cooldown: u32,
+    chunk_cooldown: u32,
+    chunk_narrowed: bool,
+    /// Control ticks run.
+    pub ticks: u64,
+    /// Ticks whose observed p95 exceeded the SLO.
+    pub slo_violations: u64,
+}
+
+impl Autopilot {
+    /// Build over a ladder (e.g. `OpTable::ladder()`); `qos` carries
+    /// the deployment's usual hysteresis knobs into the wrapped
+    /// controller.
+    pub fn new(ladder: Vec<LadderEntry>, qos: QosConfig, cfg: AutopilotConfig) -> Self {
+        Autopilot {
+            cfg,
+            controller: QosController::new(ladder, qos),
+            lat_cap: 0,
+            headroom_ticks: 0,
+            op_cooldown: 0,
+            pool_cooldown: 0,
+            chunk_cooldown: 0,
+            chunk_narrowed: false,
+            ticks: 0,
+            slo_violations: 0,
+        }
+    }
+
+    /// The wrapped controller (switch/violation counters, ladder).
+    pub fn controller(&self) -> &QosController {
+        &self.controller
+    }
+
+    /// Current latency cap (sorted-ladder position; 0 = uncapped).
+    pub fn lat_cap(&self) -> usize {
+        self.lat_cap
+    }
+
+    /// The configuration in force.
+    pub fn config(&self) -> &AutopilotConfig {
+        &self.cfg
+    }
+
+    /// Whether `p95_ms` violates the SLO.
+    pub fn violates_slo(&self, p95_ms: f64) -> bool {
+        p95_ms > self.cfg.slo_p95_ms
+    }
+
+    /// One control tick; pure with respect to the serving stack — the
+    /// caller actuates the returned [`TickOutcome`].
+    pub fn tick(&mut self, inp: &TickInputs, now: Instant) -> TickOutcome {
+        self.ticks += 1;
+        self.op_cooldown = self.op_cooldown.saturating_sub(1);
+        self.pool_cooldown = self.pool_cooldown.saturating_sub(1);
+        self.chunk_cooldown = self.chunk_cooldown.saturating_sub(1);
+
+        let slo = self.cfg.slo_p95_ms;
+        let have_signal = inp.window >= self.cfg.min_window;
+        let pressured = have_signal && inp.p95_ms > self.cfg.pressure_frac * slo;
+        // an empty window is headroom (nothing in flight can miss the
+        // SLO); a sub-min_window one is ambiguous and holds the line
+        let clear = inp.window == 0 || (have_signal && inp.p95_ms <= self.cfg.clear_frac * slo);
+        if have_signal && inp.p95_ms > slo {
+            self.slo_violations += 1;
+        }
+        if clear {
+            self.headroom_ticks += 1;
+        } else {
+            self.headroom_ticks = 0;
+        }
+
+        let n_rungs = self.controller.ladder().len();
+        let mut pool_action = PoolAction::None;
+        let mut pool_target = None;
+        let mut chunk_action = ChunkAction::None;
+        let mut chunk_quantum_us = None;
+        let mut recovery = false;
+
+        if pressured {
+            // capacity before accuracy: a bigger pool sheds latency
+            // without spending accuracy; only when the ceiling is
+            // reached does the OP ladder give ground
+            if inp.live_workers < inp.max_workers && self.pool_cooldown == 0 {
+                pool_action = PoolAction::Grow;
+                pool_target = Some(inp.live_workers + 1);
+                self.pool_cooldown = self.cfg.cooldown_ticks;
+            } else {
+                // cap one rung past wherever the controller actually is
+                // (the budget may already hold it below the cap — a
+                // cap-relative step would burn a tick on a no-op)
+                let shed_to = (self.controller.current() + 1).min(n_rungs - 1);
+                if shed_to > self.lat_cap && self.op_cooldown == 0 {
+                    self.lat_cap = shed_to;
+                    self.op_cooldown = self.cfg.cooldown_ticks;
+                }
+            }
+            // finer interleaving is accuracy-free: narrow alongside
+            // whichever lever moved
+            if inp.has_fleet && !self.chunk_narrowed && self.chunk_cooldown == 0 {
+                chunk_action = ChunkAction::Narrow;
+                chunk_quantum_us = Some(self.cfg.chunk_narrow_us);
+                self.chunk_narrowed = true;
+                self.chunk_cooldown = self.cfg.cooldown_ticks;
+            }
+        } else if self.headroom_ticks >= self.cfg.recover_after {
+            // recovery, most valuable lever first: accuracy, then chunk
+            // plan, then (after the longer streak) capacity — one axis
+            // per tick, each restart of the streak re-earned
+            if self.lat_cap > 0 && self.op_cooldown == 0 {
+                self.lat_cap -= 1;
+                self.op_cooldown = self.cfg.cooldown_ticks;
+                self.headroom_ticks = 0;
+                recovery = true;
+            } else if inp.has_fleet && self.chunk_narrowed && self.chunk_cooldown == 0 {
+                chunk_action = ChunkAction::Widen;
+                chunk_quantum_us = Some(CHUNK_QUANTUM_US);
+                self.chunk_narrowed = false;
+                self.chunk_cooldown = self.cfg.cooldown_ticks;
+                recovery = true;
+            } else if self.headroom_ticks >= self.cfg.pool_recover_after
+                && inp.live_workers > inp.min_workers
+                && self.pool_cooldown == 0
+            {
+                pool_action = PoolAction::Shrink;
+                pool_target = Some(inp.live_workers - 1);
+                self.pool_cooldown = self.cfg.cooldown_ticks;
+                self.headroom_ticks = 0;
+                recovery = true;
+            }
+        }
+
+        // power precedence: the real (env ∧ envelope) budget flows to
+        // the wrapped controller unchanged, the latency cap rides along
+        // as a floor on frugality — so budget-driven downgrades stay
+        // Immediate and upgrade hysteresis works on genuine recovery
+        let power_limit = inp.env_budget.min(self.cfg.power_envelope);
+        let before = self.controller.current();
+        let switch = self.controller.observe_with_mode_capped(power_limit, self.lat_cap, now);
+        let after = self.controller.current();
+        let op_action = match after.cmp(&before) {
+            std::cmp::Ordering::Greater => OpAction::Down,
+            std::cmp::Ordering::Less => OpAction::Up,
+            std::cmp::Ordering::Equal => OpAction::None,
+        };
+
+        let lat_cap_power = self.controller.ladder()[self.lat_cap].power;
+        let bound = if pressured {
+            Bound::Latency
+        } else if recovery || op_action == OpAction::Up {
+            Bound::Headroom
+        } else if power_limit < lat_cap_power {
+            Bound::Power
+        } else {
+            Bound::None
+        };
+
+        let decision = Decision {
+            t_s: inp.t_s,
+            p95_ms: inp.p95_ms,
+            power: self.controller.current_entry().power,
+            budget: power_limit,
+            op: self.controller.current_table_index(),
+            workers: inp.live_workers,
+            op_action,
+            pool_action,
+            chunk_action,
+            bound,
+        };
+        TickOutcome { switch, pool_target, chunk_quantum_us, decision }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ladder() -> Vec<LadderEntry> {
+        vec![
+            LadderEntry { name: "exact".into(), power: 1.0, table_index: 0 },
+            LadderEntry { name: "mid".into(), power: 0.8, table_index: 1 },
+            LadderEntry { name: "frugal".into(), power: 0.6, table_index: 2 },
+        ]
+    }
+
+    // zero margin so a full budget can reach the power-1.0 top rung
+    // (the pre-existing margin quirk is covered in qos::tests)
+    fn qos() -> QosConfig {
+        QosConfig { upgrade_margin: 0.0, min_dwell: Duration::ZERO }
+    }
+
+    fn pilot(cfg: AutopilotConfig) -> Autopilot {
+        Autopilot::new(ladder(), qos(), cfg)
+    }
+
+    /// Inputs for a fixed 2-worker pool with a trusted latency window.
+    fn inputs(t_s: f64, p95_ms: f64, env_budget: f64) -> TickInputs {
+        TickInputs {
+            t_s,
+            p95_ms,
+            window: 100,
+            env_budget,
+            live_workers: 2,
+            min_workers: 2,
+            max_workers: 2,
+            has_fleet: false,
+        }
+    }
+
+    #[test]
+    fn power_bound_tick_downgrades_immediately_and_logs_power() {
+        let mut p = pilot(AutopilotConfig { slo_p95_ms: 100.0, ..Default::default() });
+        let t = Instant::now();
+        // settle at the top: ample budget, low latency
+        let o = p.tick(&inputs(0.0, 20.0, 1.0), t);
+        assert_eq!(o.switch, Some((0, SwitchMode::Drain)));
+        // budget collapse with latency still fine: power binds, the
+        // downgrade is Immediate, and no pool/chunk action fires
+        let o = p.tick(&inputs(0.5, 20.0, 0.7), t);
+        assert_eq!(o.switch, Some((2, SwitchMode::Immediate)));
+        assert_eq!(o.decision.bound, Bound::Power);
+        assert_eq!(o.decision.op_action, OpAction::Down);
+        assert_eq!(o.decision.pool_action, PoolAction::None);
+        assert_eq!(o.pool_target, None);
+        assert_eq!(p.lat_cap(), 0, "power pressure must not move the latency cap");
+    }
+
+    #[test]
+    fn envelope_caps_the_op_even_with_full_env_budget() {
+        let cfg = AutopilotConfig {
+            slo_p95_ms: 100.0,
+            power_envelope: 0.9,
+            ..Default::default()
+        };
+        let mut p = pilot(cfg);
+        let t = Instant::now();
+        let o = p.tick(&inputs(0.0, 20.0, 1.0), t);
+        // min(1.0, 0.9) = 0.9 only fits the 0.8 rung
+        assert_eq!(o.switch, Some((1, SwitchMode::Drain)));
+        assert_eq!(o.decision.budget, 0.9);
+        let o = p.tick(&inputs(0.5, 20.0, 1.0), t);
+        assert_eq!(o.switch, None);
+        assert_eq!(o.decision.bound, Bound::Power);
+    }
+
+    #[test]
+    fn latency_pressure_sheds_accuracy_before_latency() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t); // settle at exact
+        // p95 climbing toward the SLO (over pressure_frac, under the
+        // SLO itself): accuracy is shed while latency is still intact
+        let o = p.tick(&inputs(0.5, 60.0, 1.0), t);
+        assert_eq!(o.decision.bound, Bound::Latency);
+        assert_eq!(o.decision.op_action, OpAction::Down);
+        assert_eq!(o.switch, Some((1, SwitchMode::Immediate)));
+        assert_eq!(p.lat_cap(), 1);
+        assert_eq!(p.slo_violations, 0, "60ms < 100ms SLO: not a violation");
+        // still pressured: the cap walks to the frugal floor and stops
+        let o = p.tick(&inputs(1.0, 60.0, 1.0), t);
+        assert_eq!(o.switch, Some((2, SwitchMode::Immediate)));
+        let o = p.tick(&inputs(1.5, 60.0, 1.0), t);
+        assert_eq!(o.switch, None);
+        assert_eq!(p.lat_cap(), 2);
+    }
+
+    #[test]
+    fn pool_grows_before_accuracy_is_spent() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        let elastic = |t_s: f64, p95: f64, live: usize| TickInputs {
+            live_workers: live,
+            min_workers: 1,
+            max_workers: 3,
+            ..inputs(t_s, p95, 1.0)
+        };
+        p.tick(&elastic(0.0, 20.0, 1), t);
+        // pressure with pool headroom: grow, keep the accurate rung
+        let o = p.tick(&elastic(0.5, 60.0, 1), t);
+        assert_eq!(o.decision.pool_action, PoolAction::Grow);
+        assert_eq!(o.pool_target, Some(2));
+        assert_eq!(o.decision.op_action, OpAction::None);
+        assert_eq!(p.lat_cap(), 0);
+        let o = p.tick(&elastic(1.0, 60.0, 2), t);
+        assert_eq!(o.pool_target, Some(3));
+        // ceiling reached: only now does accuracy give ground
+        let o = p.tick(&elastic(1.5, 60.0, 3), t);
+        assert_eq!(o.decision.pool_action, PoolAction::None);
+        assert_eq!(o.decision.op_action, OpAction::Down);
+        assert_eq!(p.lat_cap(), 1);
+    }
+
+    #[test]
+    fn recovery_requires_sustained_headroom_then_upgrades_with_drain() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            recover_after: 3,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t);
+        p.tick(&inputs(0.5, 60.0, 1.0), t); // shed to mid
+        assert_eq!(p.lat_cap(), 1);
+        // two clear ticks: not sustained yet, the cap holds
+        assert_eq!(p.tick(&inputs(1.0, 20.0, 1.0), t).switch, None);
+        assert_eq!(p.tick(&inputs(1.5, 20.0, 1.0), t).switch, None);
+        assert_eq!(p.lat_cap(), 1);
+        // third consecutive clear tick: the cap relaxes and the upgrade
+        // rides the draining switch path
+        let o = p.tick(&inputs(2.0, 20.0, 1.0), t);
+        assert_eq!(o.switch, Some((0, SwitchMode::Drain)));
+        assert_eq!(o.decision.bound, Bound::Headroom);
+        assert_eq!(o.decision.op_action, OpAction::Up);
+        assert_eq!(p.lat_cap(), 0);
+    }
+
+    #[test]
+    fn ambiguous_p95_between_thresholds_holds_the_line() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            recover_after: 2,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t);
+        p.tick(&inputs(0.5, 60.0, 1.0), t); // shed
+        assert_eq!(p.lat_cap(), 1);
+        // p95 at 45ms: under pressure_frac*slo (50) but over
+        // clear_frac*slo (40) — neither sheds further nor recovers,
+        // for arbitrarily many ticks
+        for i in 0..20 {
+            let o = p.tick(&inputs(1.0 + i as f64, 45.0, 1.0), t);
+            assert_eq!(o.switch, None);
+            assert_eq!(o.decision.bound, Bound::None);
+        }
+        assert_eq!(p.lat_cap(), 1);
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_op_sheds() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            cooldown_ticks: 2,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t);
+        let o = p.tick(&inputs(0.5, 60.0, 1.0), t);
+        assert_eq!(o.decision.op_action, OpAction::Down); // shed fires
+        // next pressured tick: cooldown holds the second shed back
+        let o = p.tick(&inputs(1.0, 60.0, 1.0), t);
+        assert_eq!(o.decision.op_action, OpAction::None);
+        assert_eq!(p.lat_cap(), 1);
+        // cooldown expired: the second shed lands
+        let o = p.tick(&inputs(1.5, 60.0, 1.0), t);
+        assert_eq!(o.decision.op_action, OpAction::Down);
+        assert_eq!(p.lat_cap(), 2);
+    }
+
+    #[test]
+    fn no_flap_under_oscillating_budget_or_latency() {
+        // the wrapped controller keeps its upgrade margin + the
+        // autopilot requires sustained headroom: an oscillating budget
+        // and a latency signal bouncing across the pressure threshold
+        // must not produce an up/down switch pair every period
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            recover_after: 4,
+            cooldown_ticks: 2,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t);
+        let mut switches = 0u64;
+        for i in 0..40 {
+            // latency alternates 60ms (pressured) / 45ms (ambiguous);
+            // budget alternates 1.0 / 0.85
+            let p95 = if i % 2 == 0 { 60.0 } else { 45.0 };
+            let budget = if i % 2 == 0 { 1.0 } else { 0.85 };
+            if p.tick(&inputs(0.5 * i as f64, p95, budget), t).switch.is_some() {
+                switches += 1;
+            }
+        }
+        // the shed ratchets down (at most to the floor) but never
+        // bounces back up: headroom is never sustained for 4 ticks
+        assert!(switches <= 2, "flapped: {switches} switches");
+        assert_eq!(p.controller().current(), 2);
+        assert_eq!(p.lat_cap(), 2);
+    }
+
+    #[test]
+    fn chunk_plan_narrows_under_pressure_and_widens_after_headroom() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            recover_after: 2,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        let fleet = |t_s: f64, p95: f64| TickInputs { has_fleet: true, ..inputs(t_s, p95, 1.0) };
+        p.tick(&fleet(0.0, 20.0), t);
+        let o = p.tick(&fleet(0.5, 60.0), t);
+        assert_eq!(o.decision.chunk_action, ChunkAction::Narrow);
+        assert_eq!(o.chunk_quantum_us, Some(CHUNK_QUANTUM_US / 2.0));
+        // already narrowed: continued pressure does not re-narrow (the
+        // cap keeps walking toward frugal instead)
+        let o = p.tick(&fleet(1.0, 60.0), t);
+        assert_eq!(o.decision.chunk_action, ChunkAction::None);
+        assert_eq!(p.lat_cap(), 2);
+        // sustained headroom: accuracy recovers first — one cap rung
+        // per earned streak — and only once fully recovered does the
+        // chunk plan widen on the next streak
+        p.tick(&fleet(1.5, 20.0), t);
+        let o = p.tick(&fleet(2.0, 20.0), t);
+        assert_eq!(o.decision.op_action, OpAction::Up);
+        assert_eq!(o.decision.chunk_action, ChunkAction::None);
+        p.tick(&fleet(2.5, 20.0), t);
+        let o = p.tick(&fleet(3.0, 20.0), t);
+        assert_eq!(o.decision.op_action, OpAction::Up);
+        assert_eq!(p.lat_cap(), 0);
+        p.tick(&fleet(3.5, 20.0), t);
+        let o = p.tick(&fleet(4.0, 20.0), t);
+        assert_eq!(o.decision.chunk_action, ChunkAction::Widen);
+        assert_eq!(o.chunk_quantum_us, Some(CHUNK_QUANTUM_US));
+    }
+
+    #[test]
+    fn pool_shrinks_only_after_the_longer_headroom_streak() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            recover_after: 2,
+            pool_recover_after: 4,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        let elastic = |t_s: f64, p95: f64, live: usize| TickInputs {
+            live_workers: live,
+            min_workers: 1,
+            max_workers: 3,
+            ..inputs(t_s, p95, 1.0)
+        };
+        p.tick(&elastic(0.0, 20.0, 1), t);
+        let o = p.tick(&elastic(0.5, 60.0, 1), t); // grow under pressure
+        assert_eq!(o.pool_target, Some(2));
+        // headroom streak: ticks 1..=3 are clear; the pool holds until
+        // the streak reaches pool_recover_after (4)
+        for i in 0..3 {
+            let o = p.tick(&elastic(1.0 + 0.5 * i as f64, 20.0, 2), t);
+            assert_eq!(o.decision.pool_action, PoolAction::None);
+        }
+        let o = p.tick(&elastic(3.0, 20.0, 2), t);
+        assert_eq!(o.decision.pool_action, PoolAction::Shrink);
+        assert_eq!(o.pool_target, Some(1));
+        assert_eq!(o.decision.bound, Bound::Headroom);
+    }
+
+    #[test]
+    fn untrusted_window_takes_no_latency_action() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            min_window: 16,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t);
+        // a huge p95 over a 3-sample window is one batch's noise
+        let o = p.tick(&TickInputs { window: 3, ..inputs(0.5, 500.0, 1.0) }, t);
+        assert_eq!(o.decision.bound, Bound::None);
+        assert_eq!(p.lat_cap(), 0);
+        assert_eq!(p.slo_violations, 0);
+    }
+
+    #[test]
+    fn decision_json_round_trips() {
+        let d = Decision {
+            t_s: 1.5,
+            p95_ms: 65.536,
+            power: 0.8,
+            budget: 0.9,
+            op: 1,
+            workers: 2,
+            op_action: OpAction::Down,
+            pool_action: PoolAction::None,
+            chunk_action: ChunkAction::Narrow,
+            bound: Bound::Latency,
+        };
+        let j = d.to_json();
+        assert_eq!(Decision::from_json(&j).unwrap(), d);
+        assert!(Decision::from_json(&Json::obj(vec![("t_s", Json::num(0.0))])).is_err());
+    }
+}

@@ -41,6 +41,11 @@ pub struct StubBackend {
     prepared: usize,
     /// simulated compute time per `forward` call (zero by default)
     delay: Duration,
+    /// scale `delay` by the OP's relative power (see
+    /// [`with_op_delay_scaling`](Self::with_op_delay_scaling))
+    op_delay_scaling: bool,
+    /// per-OP relative powers recorded at `prepare`, for delay scaling
+    op_powers: Vec<f64>,
     /// (op_idx, batch) log of every forward call, for assertions
     pub forward_calls: Vec<(usize, usize)>,
 }
@@ -53,6 +58,8 @@ impl StubBackend {
             classes,
             prepared: 0,
             delay: Duration::ZERO,
+            op_delay_scaling: false,
+            op_powers: Vec::new(),
             forward_calls: Vec::new(),
         }
     }
@@ -69,11 +76,36 @@ impl StubBackend {
     pub fn prepared_ops(&self) -> usize {
         self.prepared
     }
+
+    /// Scale the simulated `forward` delay by the active OP's relative
+    /// power (normalized to the most expensive rung), so frugal rungs
+    /// really are faster — the causal link an SLO autopilot exploits
+    /// when it sheds accuracy to recover latency.  No-op until
+    /// `prepare` has recorded the ladder's powers.
+    pub fn with_op_delay_scaling(mut self) -> Self {
+        self.op_delay_scaling = true;
+        self
+    }
+
+    /// The effective `forward` sleep for `op_idx` under the current
+    /// scaling policy.
+    fn delay_for(&self, op_idx: usize) -> Duration {
+        if !self.op_delay_scaling || self.op_powers.is_empty() {
+            return self.delay;
+        }
+        let max = self.op_powers.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return self.delay;
+        }
+        let power = self.op_powers.get(op_idx).copied().unwrap_or(max);
+        self.delay.mul_f64((power / max).clamp(0.0, 1.0))
+    }
 }
 
 impl Backend for StubBackend {
     fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
         self.prepared = ops.len();
+        self.op_powers = ops.iter().map(|o| o.relative_power).collect();
         Ok(())
     }
 
@@ -85,8 +117,9 @@ impl Backend for StubBackend {
             bail!("bad stub input: {} elems for batch {batch}", images.len());
         }
         self.forward_calls.push((op_idx, batch));
-        if !self.delay.is_zero() {
-            std::thread::sleep(self.delay);
+        let delay = self.delay_for(op_idx);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
         }
         let elems = images.len() / batch;
         let c = self.classes;
@@ -106,5 +139,25 @@ impl Backend for StubBackend {
 
     fn num_classes(&self) -> usize {
         self.classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_delay_scaling_shortens_frugal_rungs() {
+        let mut be = StubBackend::new(4)
+            .with_delay(Duration::from_millis(10))
+            .with_op_delay_scaling();
+        be.prepare(&[stub_op("exact", 1.0), stub_op("frugal", 0.5)]).unwrap();
+        assert_eq!(be.delay_for(0), Duration::from_millis(10));
+        assert_eq!(be.delay_for(1), Duration::from_millis(5));
+
+        // off by default: both rungs sleep the full delay
+        let mut plain = StubBackend::new(4).with_delay(Duration::from_millis(10));
+        plain.prepare(&[stub_op("exact", 1.0), stub_op("frugal", 0.5)]).unwrap();
+        assert_eq!(plain.delay_for(1), Duration::from_millis(10));
     }
 }

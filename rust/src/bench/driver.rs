@@ -7,18 +7,27 @@
 //! native synthetic model, the delayed stub, and a loopback fleet of
 //! stub workers — exactly like the `serve` command's `drive`, so the
 //! harness measures the same code paths production serving uses.
+//!
+//! Scenarios that declare an `slo_p95_ms` target engage the
+//! [`Autopilot`]: the run happens twice on the same seed (uncontrolled
+//! baseline first, then closed-loop), and the report's `autopilot`
+//! section carries both trajectories plus the per-tick decision log.
 
+use std::collections::VecDeque;
 use std::net::TcpListener;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
+use crate::autopilot::{
+    Autopilot, AutopilotConfig, ChunkAction, Decision, OpAction, PoolAction, TickInputs,
+};
 use crate::backend::{Backend, NativeBackend, OpTable, StubBackend};
 use crate::bench::arrivals::{self, Arrival};
 use crate::bench::dashboard::Dashboard;
 use crate::bench::report::{
-    BenchReport, FleetReport, FleetWorkerReport, Interval, OpReport, Provenance, Scaling,
-    SwitchRecord, Switches, Throughput, REPORT_VERSION,
+    AutopilotBaseline, AutopilotReport, BenchReport, FleetReport, FleetWorkerReport, Interval,
+    OpReport, Provenance, Scaling, SwitchRecord, Switches, Throughput, REPORT_VERSION,
 };
 use crate::bench::scenario::{BackendKind, EventKind, QosSource, Scenario};
 use crate::bench::synthetic;
@@ -27,6 +36,7 @@ use crate::fleet::{FleetBackend, FleetStats};
 use crate::qos::envsim::{EnvConfig, EnvEvent, EnvSimulator};
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
+use crate::util::stats::LatencyHistogram;
 
 /// CLI-level overrides for one bench run.
 #[derive(Debug, Clone, Copy, Default)]
@@ -37,6 +47,19 @@ pub struct BenchOpts {
     pub secs: Option<f64>,
     /// Render the live ANSI dashboard while running.
     pub dashboard: bool,
+    /// Force the autopilot on/off; `None` = on iff the scenario
+    /// declares `slo_p95_ms`.
+    pub autopilot: Option<bool>,
+}
+
+/// Whether one pass actuates the autopilot or only observes the SLO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ApMode {
+    /// Plain QoS walk; when the scenario has an SLO the p95 trajectory
+    /// is still tracked and reported (the "autopilot off" baseline).
+    Observe,
+    /// The autopilot owns OP, pool and chunk-plan decisions.
+    Autopilot,
 }
 
 /// Where each tick's power budget comes from at run time.
@@ -84,13 +107,95 @@ struct RunCtx<'a> {
     seed: u64,
     duration_s: f64,
     dashboard: bool,
+    mode: ApMode,
     pool: Vec<f32>,
     elems: usize,
 }
 
+/// Sliding-window p95 bookkeeping for scenarios with an SLO: a ring of
+/// cumulative latency histograms (one per tick) differenced against the
+/// oldest entry, so the p95 the controller sees covers roughly the last
+/// reporting interval rather than the whole run.
+struct SloTracker {
+    slo_ms: f64,
+    min_window: u64,
+    window_ticks: usize,
+    hist: VecDeque<LatencyHistogram>,
+    violation_ticks: u64,
+    first_violation_t_s: Option<f64>,
+    p95_timeline: Vec<(f64, f64)>,
+}
+
+impl SloTracker {
+    fn new(cfg: &AutopilotConfig, window_ticks: usize) -> SloTracker {
+        SloTracker {
+            slo_ms: cfg.slo_p95_ms,
+            min_window: cfg.min_window,
+            window_ticks: window_ticks.max(1),
+            hist: VecDeque::new(),
+            violation_ticks: 0,
+            first_violation_t_s: None,
+            p95_timeline: Vec::new(),
+        }
+    }
+
+    /// Fold in this tick's cumulative histogram; returns the windowed
+    /// `(p95_ms, samples, violated)` triple.
+    fn observe(&mut self, cur: LatencyHistogram, t_s: f64) -> (f64, u64, bool) {
+        let win = match self.hist.front() {
+            Some(earlier) => cur.since(earlier),
+            None => cur.clone(),
+        };
+        self.hist.push_back(cur);
+        if self.hist.len() > self.window_ticks {
+            self.hist.pop_front();
+        }
+        let p95_ms = win.percentile_us(95.0) as f64 / 1000.0;
+        let window = win.count();
+        self.p95_timeline.push((t_s, p95_ms));
+        let violated = window >= self.min_window && p95_ms > self.slo_ms;
+        if violated {
+            self.violation_ticks += 1;
+            if self.first_violation_t_s.is_none() {
+                self.first_violation_t_s = Some(t_s);
+            }
+        }
+        (p95_ms, window, violated)
+    }
+}
+
 /// Execute one scenario end to end and return its report.
+///
+/// With the autopilot engaged (explicit `--autopilot on`, or by default
+/// whenever the scenario declares `slo_p95_ms`), the scenario runs
+/// twice on the same seed — uncontrolled first, then closed-loop — and
+/// the uncontrolled p95 timeline lands in `autopilot.baseline` so one
+/// report carries both trajectories.
 pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
     sc.validate()?;
+    let autopilot_on = match opts.autopilot {
+        Some(on) => {
+            anyhow::ensure!(
+                !on || sc.slo_p95_ms.is_some(),
+                "--autopilot on requires a scenario that declares `slo_p95_ms`"
+            );
+            on
+        }
+        None => sc.slo_p95_ms.is_some(),
+    };
+    if !autopilot_on {
+        return run_once(sc, opts, ApMode::Observe);
+    }
+    let base = run_once(sc, opts, ApMode::Observe)?;
+    let mut report = run_once(sc, opts, ApMode::Autopilot)?;
+    if let Some(ap) = report.autopilot.as_mut() {
+        ap.baseline = base.autopilot.and_then(|b| b.baseline);
+    }
+    Ok(report)
+}
+
+/// One pass over the scenario: build the deployment, run the loop.
+fn run_once(sc: &Scenario, opts: &BenchOpts, mode: ApMode) -> Result<BenchReport> {
     let seed = opts.seed.unwrap_or(sc.seed);
     let duration_s = opts.secs.unwrap_or(sc.duration_s);
     anyhow::ensure!(
@@ -108,18 +213,22 @@ pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
                 OpTable::new(ops),
                 cfg,
             )?;
-            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, mode, pool, elems };
             run_on(ctx, server, None)
         }
         BackendKind::Stub if sc.deployment.fleet.is_empty() => {
             let delay = Duration::from_micros(sc.deployment.stub_delay_us);
+            let scaled = sc.deployment.op_delay_scaling;
             let (pool, elems) = synthetic::stub_image_pool();
             let server = Server::start(
-                move |_w| Ok(StubBackend::new(synthetic::STUB_CLASSES).with_delay(delay)),
+                move |_w| {
+                    let be = StubBackend::new(synthetic::STUB_CLASSES).with_delay(delay);
+                    Ok(if scaled { be.with_op_delay_scaling() } else { be })
+                },
                 OpTable::new(synthetic::stub_ladder()),
                 cfg,
             )?;
-            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, mode, pool, elems };
             run_on(ctx, server, None)
         }
         BackendKind::Stub => {
@@ -166,7 +275,7 @@ pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
                 cfg,
             )?;
             let (pool, elems) = synthetic::stub_image_pool();
-            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, pool, elems };
+            let ctx = RunCtx { sc, seed, duration_s, dashboard: opts.dashboard, mode, pool, elems };
             run_on(ctx, server, Some(FleetRig { control, stats, handles }))
         }
     }
@@ -174,7 +283,7 @@ pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
 
 fn batcher_config(sc: &Scenario) -> BatcherConfig {
     let d = &sc.deployment;
-    BatcherConfig {
+    let mut cfg = BatcherConfig {
         max_batch: d.max_batch,
         max_wait: Duration::from_millis(d.max_wait_ms),
         workers: d.workers,
@@ -182,7 +291,18 @@ fn batcher_config(sc: &Scenario) -> BatcherConfig {
         max_workers: d.max_workers,
         retag_downgrades: d.retag_downgrades,
         ..BatcherConfig::default()
+    };
+    // supervisor cadence knobs: 0 keeps the library default
+    if d.scale_interval_ms > 0 {
+        cfg.scale_interval = Duration::from_millis(d.scale_interval_ms);
     }
+    if d.scale_up_after > 0 {
+        cfg.scale_up_after = d.scale_up_after;
+    }
+    if d.scale_down_after > 0 {
+        cfg.scale_down_after = d.scale_down_after;
+    }
+    cfg
 }
 
 /// The measurement loop, written once for every backend.
@@ -208,6 +328,43 @@ fn run_on<B: Backend + 'static>(
     let mut source = BudgetSource::build(sc, ctx.seed, total_ticks);
     let powers: Vec<f64> = server.ops().iter().map(|o| o.relative_power).collect();
     let op_names: Vec<String> = server.ops().iter().map(|o| o.name.clone()).collect();
+
+    // SLO tracking runs whenever the scenario declares a p95 target;
+    // the autopilot itself actuates only in `ApMode::Autopilot`.
+    let slo_cfg = sc.slo_p95_ms.map(|slo| AutopilotConfig {
+        slo_p95_ms: slo,
+        power_envelope: sc.power_envelope.unwrap_or(1.0),
+        // express the time-based defaults in this scenario's tick units
+        recover_after: (1000 / sc.tick_ms).max(1) as u32,
+        pool_recover_after: (2500 / sc.tick_ms).max(1) as u32,
+        cooldown_ticks: (200 / sc.tick_ms).max(1) as u32,
+        ..AutopilotConfig::default()
+    });
+    let mut tracker = slo_cfg.as_ref().map(|cfg| SloTracker::new(cfg, ticks_per_interval));
+    let mut pilot = match (&slo_cfg, ctx.mode) {
+        (Some(cfg), ApMode::Autopilot) => Some(Autopilot::new(
+            server.op_table().ladder(),
+            QosConfig {
+                upgrade_margin: sc.qos.upgrade_margin,
+                min_dwell: Duration::from_millis(sc.qos.min_dwell_ms),
+            },
+            cfg.clone(),
+        )),
+        _ => None,
+    };
+    // effective pool bounds the autopilot may steer within (mirrors the
+    // BatcherConfig normalization: 0 floor = "same as workers")
+    let (pool_min, pool_max) = if sc.deployment.max_workers > 0 {
+        let floor = if sc.deployment.min_workers > 0 {
+            sc.deployment.min_workers
+        } else {
+            sc.deployment.workers
+        };
+        (floor, sc.deployment.max_workers)
+    } else {
+        (sc.deployment.workers, sc.deployment.workers)
+    };
+    let mut decisions: Vec<Decision> = Vec::new();
 
     // scripted events, time-sorted, consumed front to back
     let mut events = sc.events.clone();
@@ -257,24 +414,79 @@ fn run_on<B: Backend + 'static>(
                 EventKind::HarvestScale(factor) => {
                     apply_env(&mut source, EnvEvent::HarvestScale { factor })
                 }
+                EventKind::TariffWindow { scale, secs } => {
+                    apply_env(&mut source, EnvEvent::TariffWindow { scale, secs })
+                }
             }
             next_event += 1;
         }
 
-        // 2. budget sample + controller walk (fleet hears first, so a
+        // 2. budget sample + control walk (fleet hears first, so a
         //    drained upgrade is acked fleet-wide before the local flip)
         budget = source.sample(i, tick_s, powers[server.operating_point()]);
-        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
-            if let Some(rig) = fleet.as_mut() {
-                rig.control.set_operating_point(idx, mode)?;
+        let now = Instant::now();
+        if let Some(ap) = pilot.as_mut() {
+            let tr = tracker.as_mut().expect("autopilot implies an SLO tracker");
+            let (p95_ms, window, violated) = tr.observe(server.metrics().latency, t_s);
+            let out = ap.tick(
+                &TickInputs {
+                    t_s,
+                    p95_ms,
+                    window,
+                    env_budget: budget,
+                    live_workers: server.live_workers(),
+                    min_workers: pool_min,
+                    max_workers: pool_max,
+                    has_fleet: fleet.is_some(),
+                },
+                now,
+            );
+            if let Some((idx, mode)) = out.switch {
+                if let Some(rig) = fleet.as_mut() {
+                    rig.control.set_operating_point(idx, mode)?;
+                }
+                server.set_operating_point_with(idx, mode)?;
+                timeline.push(SwitchRecord {
+                    t_s,
+                    op: idx,
+                    mode: mode_tag(mode).to_string(),
+                    forced: false,
+                });
             }
-            server.set_operating_point_with(idx, mode)?;
-            timeline.push(SwitchRecord {
-                t_s,
-                op: idx,
-                mode: mode_tag(mode).to_string(),
-                forced: false,
-            });
+            if let Some(target) = out.pool_target {
+                server.set_pool_target(target);
+            }
+            if let Some(q) = out.chunk_quantum_us {
+                if let Some(rig) = fleet.as_mut() {
+                    rig.stats.set_chunk_quantum_us(q);
+                }
+            }
+            let d = out.decision;
+            let acted = out.switch.is_some()
+                || d.op_action != OpAction::None
+                || d.pool_action != PoolAction::None
+                || d.chunk_action != ChunkAction::None;
+            // keep the committed log small: action ticks, SLO-violation
+            // ticks, and one heartbeat per reporting interval
+            if acted || violated || (i + 1) % ticks_per_interval == 0 {
+                decisions.push(d);
+            }
+        } else {
+            if let Some((idx, mode)) = controller.observe_with_mode(budget, now) {
+                if let Some(rig) = fleet.as_mut() {
+                    rig.control.set_operating_point(idx, mode)?;
+                }
+                server.set_operating_point_with(idx, mode)?;
+                timeline.push(SwitchRecord {
+                    t_s,
+                    op: idx,
+                    mode: mode_tag(mode).to_string(),
+                    forced: false,
+                });
+            }
+            if let Some(tr) = tracker.as_mut() {
+                tr.observe(server.metrics().latency, t_s);
+            }
         }
 
         // 3. replay arrivals due before this tick's deadline
@@ -383,6 +595,40 @@ fn run_on<B: Backend + 'static>(
         .collect();
     let drain = timeline.iter().filter(|r| r.mode == "drain").count() as u64;
     let forced = timeline.iter().filter(|r| r.forced).count() as u64;
+    let budget_violations = pilot
+        .as_ref()
+        .map(|p| p.controller().budget_violations)
+        .unwrap_or(controller.budget_violations);
+    let autopilot = match (slo_cfg, tracker) {
+        (Some(apcfg), Some(tr)) => {
+            let first_downgrade_t_s = decisions
+                .iter()
+                .find(|d| d.op_action == OpAction::Down)
+                .map(|d| d.t_s);
+            let mut rep = AutopilotReport {
+                slo_p95_ms: apcfg.slo_p95_ms,
+                power_envelope: apcfg.power_envelope,
+                slo_violation_ticks: tr.violation_ticks,
+                first_violation_t_s: tr.first_violation_t_s,
+                first_downgrade_t_s,
+                decisions,
+                baseline: None,
+            };
+            if ctx.mode == ApMode::Observe {
+                // an uncontrolled pass doubles as its own baseline, so
+                // a standalone `--autopilot off` run still records the
+                // trajectory; the paired run lifts this into the
+                // closed-loop report
+                rep.baseline = Some(AutopilotBaseline {
+                    slo_violation_ticks: tr.violation_ticks,
+                    first_violation_t_s: tr.first_violation_t_s,
+                    p95_timeline: tr.p95_timeline,
+                });
+            }
+            Some(rep)
+        }
+        _ => None,
+    };
     let created_unix = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -416,7 +662,7 @@ fn run_on<B: Backend + 'static>(
             drain,
             immediate: timeline.len() as u64 - drain,
             forced,
-            budget_violations: controller.budget_violations,
+            budget_violations,
             retagged_batches: m.retagged_batches,
             timeline,
         },
@@ -428,6 +674,7 @@ fn run_on<B: Backend + 'static>(
             final_workers,
         },
         fleet: fleet_report,
+        autopilot,
         intervals,
     })
 }

@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::autopilot::Decision;
 use crate::util::json::{self, Json};
 use crate::util::stats::LatencySummary;
 
@@ -108,6 +109,36 @@ pub struct FleetReport {
     pub workers: Vec<FleetWorkerReport>,
 }
 
+/// The autopilot-off control run paired with an autopilot run: same
+/// scenario, same seed, plain budget-driven QoS control — the evidence
+/// that the SLO pressure was real and the autopilot's sheds earned
+/// their keep.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AutopilotBaseline {
+    /// Control ticks whose windowed p95 exceeded the SLO.
+    pub slo_violation_ticks: u64,
+    /// First tick at which the windowed p95 exceeded the SLO.
+    pub first_violation_t_s: Option<f64>,
+    /// `(t_s, p95_ms)` per decision-log tick (windowed p95).
+    pub p95_timeline: Vec<(f64, f64)>,
+}
+
+/// Autopilot activity over the run (absent when the autopilot was
+/// off and no paired baseline was recorded).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AutopilotReport {
+    pub slo_p95_ms: f64,
+    /// 1.0 = no operator envelope beyond the environmental budget.
+    pub power_envelope: f64,
+    pub slo_violation_ticks: u64,
+    pub first_violation_t_s: Option<f64>,
+    /// First accuracy downgrade the autopilot commanded (`op_down`).
+    pub first_downgrade_t_s: Option<f64>,
+    /// The decision log: action ticks plus interval-boundary ticks.
+    pub decisions: Vec<Decision>,
+    pub baseline: Option<AutopilotBaseline>,
+}
+
 /// One sampling-interval snapshot: the trajectory the dashboard draws
 /// and trend tooling charts.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -147,6 +178,7 @@ pub struct BenchReport {
     pub switches: Switches,
     pub scaling: Scaling,
     pub fleet: Option<FleetReport>,
+    pub autopilot: Option<AutopilotReport>,
     pub intervals: Vec<Interval>,
 }
 
@@ -277,6 +309,39 @@ impl BenchReport {
                 ),
             ]),
         };
+        let opt_t = |t: Option<f64>| t.map(Json::num).unwrap_or(Json::Null);
+        let autopilot = match &self.autopilot {
+            None => Json::Null,
+            Some(a) => {
+                let baseline = match &a.baseline {
+                    None => Json::Null,
+                    Some(b) => Json::obj(vec![
+                        ("slo_violation_ticks", Json::num(b.slo_violation_ticks as f64)),
+                        ("first_violation_t_s", opt_t(b.first_violation_t_s)),
+                        (
+                            "p95_timeline",
+                            Json::Arr(
+                                b.p95_timeline
+                                    .iter()
+                                    .map(|&(t, p95)| {
+                                        Json::Arr(vec![Json::num(t), Json::num(p95)])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                };
+                Json::obj(vec![
+                    ("slo_p95_ms", Json::num(a.slo_p95_ms)),
+                    ("power_envelope", Json::num(a.power_envelope)),
+                    ("slo_violation_ticks", Json::num(a.slo_violation_ticks as f64)),
+                    ("first_violation_t_s", opt_t(a.first_violation_t_s)),
+                    ("first_downgrade_t_s", opt_t(a.first_downgrade_t_s)),
+                    ("decisions", Json::Arr(a.decisions.iter().map(|d| d.to_json()).collect())),
+                    ("baseline", baseline),
+                ])
+            }
+        };
         let intervals = self
             .intervals
             .iter()
@@ -307,6 +372,7 @@ impl BenchReport {
             ("switches", switches),
             ("scaling", scaling),
             ("fleet", fleet),
+            ("autopilot", autopilot),
             ("intervals", Json::Arr(intervals)),
         ])
     }
@@ -415,6 +481,72 @@ impl BenchReport {
                 })
             }
         };
+        let opt_t = |j: Option<&Json>, what: &str| -> Result<Option<f64>> {
+            match j {
+                None | Some(Json::Null) => Ok(None),
+                Some(x) => Ok(Some(
+                    x.as_f64().with_context(|| format!("report: non-numeric {what}"))?,
+                )),
+            }
+        };
+        let autopilot = match v.get("autopilot") {
+            None | Some(Json::Null) => None,
+            Some(a) => {
+                let decisions = a
+                    .get("decisions")
+                    .and_then(|x| x.as_arr())
+                    .context("report: autopilot missing decisions array")?
+                    .iter()
+                    .map(|d| Decision::from_json(d).map_err(|e| anyhow::anyhow!("report: {e}")))
+                    .collect::<Result<Vec<_>>>()?;
+                let baseline = match a.get("baseline") {
+                    None | Some(Json::Null) => None,
+                    Some(b) => {
+                        let p95_timeline = b
+                            .get("p95_timeline")
+                            .and_then(|x| x.as_arr())
+                            .context("report: baseline missing p95_timeline array")?
+                            .iter()
+                            .map(|pair| {
+                                let pair = pair
+                                    .as_arr()
+                                    .context("report: p95_timeline entry not a pair")?;
+                                match pair {
+                                    [t, p95] => Ok((
+                                        t.as_f64().context("report: p95_timeline t")?,
+                                        p95.as_f64().context("report: p95_timeline p95")?,
+                                    )),
+                                    _ => bail!("report: p95_timeline entry not a pair"),
+                                }
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        Some(AutopilotBaseline {
+                            slo_violation_ticks: req_f64(b, "slo_violation_ticks")? as u64,
+                            first_violation_t_s: opt_t(
+                                b.get("first_violation_t_s"),
+                                "baseline first_violation_t_s",
+                            )?,
+                            p95_timeline,
+                        })
+                    }
+                };
+                Some(AutopilotReport {
+                    slo_p95_ms: req_f64(a, "slo_p95_ms")?,
+                    power_envelope: req_f64(a, "power_envelope")?,
+                    slo_violation_ticks: req_f64(a, "slo_violation_ticks")? as u64,
+                    first_violation_t_s: opt_t(
+                        a.get("first_violation_t_s"),
+                        "autopilot first_violation_t_s",
+                    )?,
+                    first_downgrade_t_s: opt_t(
+                        a.get("first_downgrade_t_s"),
+                        "autopilot first_downgrade_t_s",
+                    )?,
+                    decisions,
+                    baseline,
+                })
+            }
+        };
         let intervals = v
             .get("intervals")
             .and_then(|x| x.as_arr())
@@ -450,6 +582,7 @@ impl BenchReport {
             switches,
             scaling,
             fleet,
+            autopilot,
             intervals,
         })
     }
@@ -524,6 +657,30 @@ mod tests {
                 ],
             },
             scaling: Scaling { peak_workers: 2, final_workers: 2, ..Default::default() },
+            autopilot: Some(AutopilotReport {
+                slo_p95_ms: 100.0,
+                power_envelope: 1.0,
+                slo_violation_ticks: 0,
+                first_violation_t_s: None,
+                first_downgrade_t_s: Some(0.4),
+                decisions: vec![Decision {
+                    t_s: 0.4,
+                    p95_ms: 65.5,
+                    power: 0.6,
+                    budget: 0.9,
+                    op: 2,
+                    workers: 2,
+                    op_action: crate::autopilot::OpAction::Down,
+                    pool_action: crate::autopilot::PoolAction::None,
+                    chunk_action: crate::autopilot::ChunkAction::None,
+                    bound: crate::autopilot::Bound::Latency,
+                }],
+                baseline: Some(AutopilotBaseline {
+                    slo_violation_ticks: 7,
+                    first_violation_t_s: Some(0.55),
+                    p95_timeline: vec![(0.05, 16.4), (0.55, 131.1)],
+                }),
+            }),
             fleet: Some(FleetReport {
                 requeues: 0,
                 evictions: 0,
@@ -557,12 +714,48 @@ mod tests {
         let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, r);
 
-        // and with no fleet section
+        // and with no fleet / autopilot sections (null in the JSON):
+        // pre-autopilot reports keep parsing
         let mut r = sample();
         r.fleet = None;
+        r.autopilot = None;
         let back =
             BenchReport::from_json(&json::parse(&json::to_string(&r.to_json())).unwrap()).unwrap();
         assert_eq!(back.fleet, None);
+        assert_eq!(back.autopilot, None);
+
+        // and with an autopilot section but no baseline
+        let mut r = sample();
+        r.autopilot.as_mut().unwrap().baseline = None;
+        let back =
+            BenchReport::from_json(&json::parse(&json::to_string(&r.to_json())).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn malformed_autopilot_sections_are_rejected() {
+        // an unknown decision tag must fail parsing, not chart garbage
+        let mut v = sample().to_json();
+        let text = json::to_string(&v).replace("op_down", "op_sideways");
+        v = json::parse(&text).unwrap();
+        let err = BenchReport::from_json(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("op_action"), "{err:#}");
+
+        // a decisions array is required once the section is present
+        let mut r = sample();
+        r.autopilot = Some(AutopilotReport::default());
+        let mut v = r.to_json();
+        if let Json::Obj(pairs) = &mut v {
+            for (k, val) in pairs.iter_mut() {
+                if k == "autopilot" {
+                    if let Json::Obj(a) = val {
+                        a.retain(|(k, _)| k != "decisions");
+                    }
+                }
+            }
+        }
+        let err = BenchReport::from_json(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("decisions"), "{err:#}");
     }
 
     #[test]

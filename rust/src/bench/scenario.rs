@@ -4,7 +4,7 @@
 //! arrival process, duration, batch-size mix, deployment shape and a
 //! script of QoS/environment events — so a perf trajectory recorded
 //! today can be replayed bit-identically against next month's code.
-//! Six built-ins cover the serving stack's interesting regimes
+//! Seven built-ins cover the serving stack's interesting regimes
 //! ([`BUILTIN_NAMES`]); arbitrary scenarios load from files via
 //! [`Scenario::from_json`], which validates aggressively so a malformed
 //! spec fails before any thread spawns.
@@ -94,6 +94,15 @@ pub struct Deployment {
     pub retag_downgrades: bool,
     /// Stub-backend compute delay, microseconds (ignored for native).
     pub stub_delay_us: u64,
+    /// Scale the stub delay by each OP's relative power (frugal rungs
+    /// run faster) — the causal latency/accuracy link the autopilot
+    /// exploits.  In-process stub deployments only.
+    pub op_delay_scaling: bool,
+    /// Supervisor scaling-cadence overrides, `server::BatcherConfig`
+    /// semantics; 0 = library default.  Elastic pools only.
+    pub scale_interval_ms: u64,
+    pub scale_up_after: u32,
+    pub scale_down_after: u32,
     /// In-flight Forwards per fleet worker connection: 0 = library
     /// default (or the `QOS_NETS_FLEET_PIPELINE` override), 1 =
     /// lockstep request/response.  Fleet deployments only.
@@ -142,6 +151,10 @@ pub enum EventKind {
     ThermalSpike(f64),
     /// [`crate::qos::envsim::EnvEvent::HarvestScale`] (env source only).
     HarvestScale(f64),
+    /// [`crate::qos::envsim::EnvEvent::TariffWindow`] (env source only):
+    /// cap the budget by `scale` for `secs` *simulated* seconds (wall
+    /// seconds x `env_time_scale`).
+    TariffWindow { scale: f64, secs: f64 },
 }
 
 /// One scripted disturbance, fired once when the run clock passes
@@ -170,17 +183,25 @@ pub struct Scenario {
     pub batch_mix: Vec<MixEntry>,
     pub deployment: Deployment,
     pub qos: QosSpec,
+    /// p95 latency SLO, ms — enables the autopilot for this scenario
+    /// (`None` = plain budget-driven QoS control, the pre-autopilot
+    /// behavior).
+    pub slo_p95_ms: Option<f64>,
+    /// Operator power envelope in (0, 1], capping the budget the
+    /// autopilot hands its controller.  Requires `slo_p95_ms`.
+    pub power_envelope: Option<f64>,
     pub events: Vec<Event>,
 }
 
 /// Every built-in scenario name, in presentation order.
-pub const BUILTIN_NAMES: [&str; 6] = [
+pub const BUILTIN_NAMES: [&str; 7] = [
     "steady_state",
     "diurnal_ramp",
     "incast_burst",
     "flash_crowd",
     "ladder_thrash",
     "heterogeneous_fleet",
+    "slo_pressure",
 ];
 
 /// Rungs every bench ladder has (native synthetic and stub/fleet
@@ -249,9 +270,24 @@ impl Scenario {
             ("retag_downgrades", Json::Bool(self.deployment.retag_downgrades)),
             ("stub_delay_us", Json::num(self.deployment.stub_delay_us as f64)),
         ];
-        // emitted only when pinned, so the canonical JSON (and with it
-        // `config_hash`) of pre-pipelining scenarios is unchanged and
-        // committed baselines stay comparable
+        // optional knobs are emitted only when set, so the canonical
+        // JSON (and with it `config_hash`) of scenarios predating each
+        // knob is unchanged and committed baselines stay comparable
+        if self.deployment.op_delay_scaling {
+            deployment_pairs.push(("op_delay_scaling", Json::Bool(true)));
+        }
+        if self.deployment.scale_interval_ms > 0 {
+            deployment_pairs
+                .push(("scale_interval_ms", Json::num(self.deployment.scale_interval_ms as f64)));
+        }
+        if self.deployment.scale_up_after > 0 {
+            deployment_pairs
+                .push(("scale_up_after", Json::num(self.deployment.scale_up_after as f64)));
+        }
+        if self.deployment.scale_down_after > 0 {
+            deployment_pairs
+                .push(("scale_down_after", Json::num(self.deployment.scale_down_after as f64)));
+        }
         if self.deployment.pipeline > 0 {
             deployment_pairs.push(("pipeline", Json::num(self.deployment.pipeline as f64)));
         }
@@ -299,11 +335,16 @@ impl Scenario {
                         pairs.push(("kind", Json::str("harvest_scale")));
                         pairs.push(("factor", Json::num(factor)));
                     }
+                    EventKind::TariffWindow { scale, secs } => {
+                        pairs.push(("kind", Json::str("tariff_window")));
+                        pairs.push(("scale", Json::num(scale)));
+                        pairs.push(("secs", Json::num(secs)));
+                    }
                 }
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
+        let mut top = vec![
             ("name", Json::str(self.name.clone())),
             ("description", Json::str(self.description.clone())),
             ("duration_s", Json::num(self.duration_s)),
@@ -314,8 +355,16 @@ impl Scenario {
             ("batch_mix", Json::Arr(mix)),
             ("deployment", deployment),
             ("qos", Json::obj(qos_pairs)),
-            ("events", Json::Arr(events)),
-        ])
+        ];
+        // omitted when unset — see the deployment-knob note above
+        if let Some(slo) = self.slo_p95_ms {
+            top.push(("slo_p95_ms", Json::num(slo)));
+        }
+        if let Some(envelope) = self.power_envelope {
+            top.push(("power_envelope", Json::num(envelope)));
+        }
+        top.push(("events", Json::Arr(events)));
+        Json::obj(top)
     }
 
     /// Parse + validate; every rejection names the offending field.
@@ -344,6 +393,8 @@ impl Scenario {
         let deployment =
             parse_deployment(v.get("deployment").context("scenario: missing deployment")?)?;
         let qos = parse_qos(v.get("qos").context("scenario: missing qos")?)?;
+        let slo_p95_ms = v.get("slo_p95_ms").and_then(|x| x.as_f64());
+        let power_envelope = v.get("power_envelope").and_then(|x| x.as_f64());
         let events = v
             .get("events")
             .and_then(|x| x.as_arr())
@@ -363,6 +414,8 @@ impl Scenario {
             batch_mix,
             deployment,
             qos,
+            slo_p95_ms,
+            power_envelope,
             events,
         };
         sc.validate()?;
@@ -434,6 +487,20 @@ impl Scenario {
                 self.name
             );
         }
+        if d.op_delay_scaling && (d.backend != BackendKind::Stub || !d.fleet.is_empty()) {
+            bail!(
+                "scenario {}: op_delay_scaling applies to in-process stub deployments",
+                self.name
+            );
+        }
+        if (d.scale_interval_ms > 0 || d.scale_up_after > 0 || d.scale_down_after > 0)
+            && d.max_workers == 0
+        {
+            bail!(
+                "scenario {}: supervisor cadence knobs need an elastic pool (max_workers > 0)",
+                self.name
+            );
+        }
         for (i, w) in d.fleet.iter().enumerate() {
             if w.hb_interval_ms == 0 || w.hb_timeout_ms == 0 {
                 bail!("scenario {}: fleet worker {i}: heartbeat cadence must be > 0 ms", self.name);
@@ -461,6 +528,19 @@ impl Scenario {
         if !(self.qos.env_time_scale.is_finite() && self.qos.env_time_scale > 0.0) {
             bail!("scenario {}: env_time_scale must be finite and > 0", self.name);
         }
+        if let Some(slo) = self.slo_p95_ms {
+            if !(slo.is_finite() && slo > 0.0) {
+                bail!("scenario {}: slo_p95_ms must be finite and > 0", self.name);
+            }
+        }
+        if let Some(envelope) = self.power_envelope {
+            if !(envelope.is_finite() && envelope > 0.0 && envelope <= 1.0) {
+                bail!("scenario {}: power_envelope must be in (0, 1]", self.name);
+            }
+            if self.slo_p95_ms.is_none() {
+                bail!("scenario {}: power_envelope needs slo_p95_ms (the autopilot SLO)", self.name);
+            }
+        }
         for (i, e) in self.events.iter().enumerate() {
             if !(e.at_s.is_finite() && e.at_s >= 0.0) {
                 bail!("scenario {}: event {i}: at_s must be finite and >= 0", self.name);
@@ -487,12 +567,27 @@ impl Scenario {
                 }
                 EventKind::BatteryDrop(_)
                 | EventKind::ThermalSpike(_)
-                | EventKind::HarvestScale(_) => {
+                | EventKind::HarvestScale(_)
+                | EventKind::TariffWindow { .. } => {
                     if self.qos.source != QosSource::Env {
                         bail!(
                             "scenario {}: event {i}: environment events need qos.source = env",
                             self.name
                         );
+                    }
+                    if let EventKind::TariffWindow { scale, secs } = e.kind {
+                        if !(scale.is_finite() && (0.0..=1.0).contains(&scale)) {
+                            bail!(
+                                "scenario {}: event {i}: tariff scale must be in [0, 1]",
+                                self.name
+                            );
+                        }
+                        if !(secs.is_finite() && secs > 0.0) {
+                            bail!(
+                                "scenario {}: event {i}: tariff secs must be finite and > 0",
+                                self.name
+                            );
+                        }
                     }
                 }
             }
@@ -564,6 +659,11 @@ fn parse_deployment(v: &Json) -> Result<Deployment> {
         max_wait_ms: req_f64(v, "max_wait_ms")? as u64,
         retag_downgrades: v.get("retag_downgrades").and_then(|x| x.as_bool()).unwrap_or(false),
         stub_delay_us: v.get("stub_delay_us").and_then(|x| x.as_usize()).unwrap_or(0) as u64,
+        op_delay_scaling: v.get("op_delay_scaling").and_then(|x| x.as_bool()).unwrap_or(false),
+        scale_interval_ms: v.get("scale_interval_ms").and_then(|x| x.as_usize()).unwrap_or(0)
+            as u64,
+        scale_up_after: v.get("scale_up_after").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
+        scale_down_after: v.get("scale_down_after").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
         pipeline: v.get("pipeline").and_then(|x| x.as_usize()).unwrap_or(0),
         fleet,
     })
@@ -594,6 +694,10 @@ fn parse_event(v: &Json) -> Result<Event> {
         "battery_drop" => EventKind::BatteryDrop(req_f64(v, "delta")?),
         "thermal_spike" => EventKind::ThermalSpike(req_f64(v, "delta_c")?),
         "harvest_scale" => EventKind::HarvestScale(req_f64(v, "factor")?),
+        "tariff_window" => EventKind::TariffWindow {
+            scale: req_f64(v, "scale")?,
+            secs: req_f64(v, "secs")?,
+        },
         other => bail!("unknown event kind {other:?}"),
     };
     Ok(Event { at_s: req_f64(v, "at_s")?, kind })
@@ -608,6 +712,7 @@ pub fn builtin(name: &str) -> Option<Scenario> {
         "flash_crowd" => flash_crowd(),
         "ladder_thrash" => ladder_thrash(),
         "heterogeneous_fleet" => heterogeneous_fleet(),
+        "slo_pressure" => slo_pressure(),
         _ => return None,
     };
     debug_assert!(sc.validate().is_ok(), "builtin {name} must validate");
@@ -624,6 +729,10 @@ fn base_deployment(backend: BackendKind) -> Deployment {
         max_wait_ms: 4,
         retag_downgrades: false,
         stub_delay_us: 0,
+        op_delay_scaling: false,
+        scale_interval_ms: 0,
+        scale_up_after: 0,
+        scale_down_after: 0,
         pipeline: 0,
         fleet: Vec::new(),
     }
@@ -661,6 +770,8 @@ fn steady_state() -> Scenario {
         ],
         deployment: base_deployment(BackendKind::Native),
         qos: base_qos(QosSource::Trace("sine".into())),
+        slo_p95_ms: None,
+        power_envelope: None,
         events: Vec::new(),
     }
 }
@@ -690,6 +801,8 @@ fn diurnal_ramp() -> Scenario {
             ..base_deployment(BackendKind::Native)
         },
         qos: base_qos(QosSource::Env),
+        slo_p95_ms: None,
+        power_envelope: None,
         events: vec![Event { at_s: 12.0, kind: EventKind::HarvestScale(0.0) }],
     }
 }
@@ -720,6 +833,8 @@ fn incast_burst() -> Scenario {
             ..base_deployment(BackendKind::Stub)
         },
         qos: base_qos(QosSource::Constant(1.0)),
+        slo_p95_ms: None,
+        power_envelope: None,
         events: Vec::new(),
     }
 }
@@ -754,6 +869,8 @@ fn flash_crowd() -> Scenario {
             ..base_deployment(BackendKind::Stub)
         },
         qos: base_qos(QosSource::Trace("steps".into())),
+        slo_p95_ms: None,
+        power_envelope: None,
         events: Vec::new(),
     }
 }
@@ -790,6 +907,8 @@ fn ladder_thrash() -> Scenario {
             ..base_deployment(BackendKind::Stub)
         },
         qos: base_qos(QosSource::Constant(1.0)),
+        slo_p95_ms: None,
+        power_envelope: None,
         events,
     }
 }
@@ -830,7 +949,66 @@ fn heterogeneous_fleet() -> Scenario {
             ..base_deployment(BackendKind::Stub)
         },
         qos: base_qos(QosSource::Trace("sine".into())),
+        slo_p95_ms: None,
+        power_envelope: None,
         events: Vec::new(),
+    }
+}
+
+/// A grid tariff window scripted against the SLO autopilot: a fixed
+/// two-worker pool (accuracy is the only lever) runs a stub whose delay
+/// scales with OP power, so shedding rungs genuinely buys throughput.
+/// The tariff window (budget 0.9) pushes the deployment off the exact
+/// rung onto mid, and a load peak beyond the mid rung's capacity lands
+/// inside the window; the autopilot must trade accuracy for latency
+/// *before* the p95 crosses the SLO, and recover accuracy once the
+/// window ends — while an autopilot-off run of the same seed sits at
+/// the mid rung and violates the SLO for the whole peak.
+///
+/// Capacity math (2 workers, max_batch 8, 8 ms base delay): exact
+/// 2000 img/s, mid 2500 img/s, frugal 3333 img/s.  The peak offers
+/// 2750 img/s — above mid, below frugal.  `env_time_scale` is 1 so the
+/// battery/thermal physics stay flat over the 12 s run and the scripted
+/// tariff window is the only budget driver.  `upgrade_margin` must be 0
+/// here: the top rung's relative power is 1.0, so any positive margin
+/// would block the frugal->exact settle forever and the run would cruise
+/// at the floor with nothing left to shed.
+fn slo_pressure() -> Scenario {
+    Scenario {
+        name: "slo_pressure".into(),
+        description: "load peak beyond the mid rung inside a grid tariff window — the \
+                      autopilot must shed accuracy before the p95 SLO breaks and recover \
+                      after the window ends"
+            .into(),
+        duration_s: 12.0,
+        seed: 29,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![
+            ArrivalPhase { dur_s: 4.0, rate_rps: 75.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 5.0, rate_rps: 687.5, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 3.0, rate_rps: 75.0, process: ArrivalProcess::Poisson },
+        ],
+        batch_mix: vec![MixEntry { size: 4, weight: 1.0 }],
+        deployment: Deployment {
+            workers: 2,
+            max_batch: 8,
+            stub_delay_us: 8000,
+            op_delay_scaling: true,
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: QosSpec {
+            source: QosSource::Env,
+            upgrade_margin: 0.0,
+            min_dwell_ms: 100,
+            env_time_scale: 1.0,
+        },
+        slo_p95_ms: Some(100.0),
+        power_envelope: None,
+        events: vec![Event {
+            at_s: 4.0,
+            kind: EventKind::TariffWindow { scale: 0.9, secs: 5.0 },
+        }],
     }
 }
 
@@ -931,5 +1109,65 @@ mod tests {
         let mut sc = builtin("steady_state").unwrap();
         sc.interval_ms = 75;
         assert!(sc.validate().unwrap_err().to_string().contains("multiple"));
+
+        // tariff windows are env events with bounded scale
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.qos.source = QosSource::Constant(1.0);
+        assert!(sc.validate().unwrap_err().to_string().contains("env"));
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.events[0].kind = EventKind::TariffWindow { scale: 1.5, secs: 5.0 };
+        assert!(sc.validate().unwrap_err().to_string().contains("tariff scale"));
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.events[0].kind = EventKind::TariffWindow { scale: 0.9, secs: 0.0 };
+        assert!(sc.validate().unwrap_err().to_string().contains("tariff secs"));
+
+        // the power envelope is only meaningful with an SLO
+        let mut sc = builtin("steady_state").unwrap();
+        sc.power_envelope = Some(0.8);
+        assert!(sc.validate().unwrap_err().to_string().contains("slo_p95_ms"));
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.slo_p95_ms = Some(0.0);
+        assert!(sc.validate().unwrap_err().to_string().contains("slo_p95_ms"));
+
+        // op_delay_scaling needs the in-process stub
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.deployment.backend = BackendKind::Native;
+        assert!(sc.validate().unwrap_err().to_string().contains("op_delay_scaling"));
+
+        // supervisor cadence knobs need an elastic pool
+        let mut sc = builtin("steady_state").unwrap();
+        sc.deployment.scale_interval_ms = 10;
+        assert!(sc.validate().unwrap_err().to_string().contains("elastic"));
+    }
+
+    #[test]
+    fn new_optional_fields_are_omitted_when_unset() {
+        // committed config_hashes from before the autopilot PR must
+        // survive: a scenario not using the new knobs serializes to
+        // JSON that never mentions them
+        let text = json::to_string(&builtin("steady_state").unwrap().to_json());
+        for key in [
+            "slo_p95_ms",
+            "power_envelope",
+            "op_delay_scaling",
+            "scale_interval_ms",
+            "scale_up_after",
+            "scale_down_after",
+        ] {
+            assert!(!text.contains(key), "steady_state JSON should omit {key}: {text}");
+        }
+        // and a scenario that does use them round-trips exactly
+        let mut sc = builtin("slo_pressure").unwrap();
+        sc.power_envelope = Some(0.9);
+        sc.deployment.max_workers = 4;
+        sc.deployment.min_workers = 1;
+        sc.deployment.workers = 1;
+        sc.deployment.scale_interval_ms = 10;
+        sc.deployment.scale_up_after = 1;
+        sc.deployment.scale_down_after = 5;
+        let back =
+            Scenario::from_json(&json::parse(&json::to_string(&sc.to_json())).unwrap()).unwrap();
+        assert_eq!(back, sc);
+        assert_eq!(back.config_hash(), sc.config_hash());
     }
 }

@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::bench::driver::{run_scenario, BenchOpts};
 use crate::bench::scenario::{builtin, Scenario, BUILTIN_NAMES};
@@ -38,10 +38,20 @@ pub fn run(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // `--autopilot on|off` (bare `--autopilot` = on); unset defers to
+    // the scenario: engaged iff it declares `slo_p95_ms`
+    let autopilot = match args.get("autopilot") {
+        Some("on") => Some(true),
+        Some("off") => Some(false),
+        Some(other) => bail!("--autopilot takes on|off, got {other:?}"),
+        None if args.has("autopilot") => Some(true),
+        None => None,
+    };
     let opts = BenchOpts {
         seed: args.get("seed").and_then(|s| s.parse().ok()),
         secs: args.get("secs").and_then(|s| s.parse().ok()),
         dashboard: args.has("dashboard"),
+        autopilot,
     };
     println!(
         "bench {}: {} (seed {}, {:.1}s)",
@@ -95,6 +105,28 @@ pub fn run(args: &Args) -> Result<()> {
         "  workers: peak={} final={} scale-ups={} scale-downs={}",
         sc_.peak_workers, sc_.final_workers, sc_.scale_ups, sc_.scale_downs
     );
+    if let Some(ap) = &report.autopilot {
+        let fmt_t = |t: Option<f64>| match t {
+            Some(t) => format!("{t:.2}s"),
+            None => "-".to_string(),
+        };
+        println!(
+            "  autopilot: slo p95<={:.0}ms envelope={:.2}  violations={} first_violation={} first_downgrade={}  decisions={}",
+            ap.slo_p95_ms,
+            ap.power_envelope,
+            ap.slo_violation_ticks,
+            fmt_t(ap.first_violation_t_s),
+            fmt_t(ap.first_downgrade_t_s),
+            ap.decisions.len()
+        );
+        if let Some(b) = &ap.baseline {
+            println!(
+                "    baseline (autopilot off, same seed): violations={} first_violation={}",
+                b.slo_violation_ticks,
+                fmt_t(b.first_violation_t_s)
+            );
+        }
+    }
     if let Some(f) = &report.fleet {
         println!(
             "  fleet: {} worker(s), requeues={} evictions={}",

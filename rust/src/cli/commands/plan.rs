@@ -2,12 +2,15 @@
 //! artifacts — per-layer assignment deltas per operating point, per-OP
 //! power deltas, subset and provenance differences.  Useful for
 //! auditing what a planner change (or a re-run under a new seed)
-//! actually did to a deployment before serving it.
+//! actually did to a deployment before serving it.  `--json` emits the
+//! same diff as machine-readable JSON (for CI gates and scripts); the
+//! human table stays the default.
 
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
 use crate::plan::{OpPlan, PlanDiff, Provenance};
+use crate::util::json;
 
 pub fn run(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
@@ -45,6 +48,11 @@ fn diff(args: &Args) -> Result<()> {
     let a = OpPlan::load(path_a)?;
     let b = OpPlan::load(path_b)?;
     let d: PlanDiff = a.diff(&b);
+
+    if args.has("json") {
+        println!("{}", json::to_string_pretty(&d.to_json()));
+        return Ok(());
+    }
 
     println!("plan diff: {path_a} (a) vs {path_b} (b)");
     println!(

@@ -17,10 +17,12 @@
 //! the per-connection in-flight Forward window (default: library
 //! default or the `QOS_NETS_FLEET_PIPELINE` override).
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::autopilot::{Autopilot, AutopilotConfig, TickInputs};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::backend::{Backend, NativeBackend, OpTable};
@@ -32,6 +34,15 @@ use crate::plan::OpPlan;
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
 use crate::util::rng::Rng;
+use crate::util::stats::LatencyHistogram;
+
+/// `--autopilot` rig: the closed-loop controller plus the pool bounds
+/// it may steer within.
+struct ApRig {
+    pilot: Autopilot,
+    pool_min: usize,
+    pool_max: usize,
+}
 
 pub fn run(args: &Args) -> Result<()> {
     let exp = load_experiment(args)?;
@@ -50,17 +61,59 @@ pub fn run(args: &Args) -> Result<()> {
     let default_workers = if args.has("fleet") { 1 } else { 2 };
     let workers = args.get_usize("workers", default_workers);
     let max_workers = args.get_usize("max-workers", workers);
-    let cfg = BatcherConfig {
+    // fixed pool unless bounds are passed explicitly, so plain
+    // `--workers N` keeps its pre-elastic meaning; the min default
+    // stays under an explicit ceiling so --max-workers is honored
+    let min_workers = args.get_usize("min-workers", workers.min(max_workers));
+    let mut cfg = BatcherConfig {
         max_batch: args.get_usize("max-batch", 16),
         max_wait: Duration::from_millis(4),
         workers,
-        // fixed pool unless bounds are passed explicitly, so plain
-        // `--workers N` keeps its pre-elastic meaning; the min default
-        // stays under an explicit ceiling so --max-workers is honored
-        min_workers: args.get_usize("min-workers", workers.min(max_workers)),
+        min_workers,
         max_workers,
         retag_downgrades: args.has("retag-downgrades"),
         ..BatcherConfig::default()
+    };
+    // supervisor cadence knobs; unset keeps the library defaults
+    if let Some(ms) = args.get("scale-interval-ms").and_then(|s| s.parse::<u64>().ok()) {
+        cfg.scale_interval = Duration::from_millis(ms);
+    }
+    if let Some(n) = args.get("scale-up-after").and_then(|s| s.parse::<u32>().ok()) {
+        cfg.scale_up_after = n;
+    }
+    if let Some(n) = args.get("scale-down-after").and_then(|s| s.parse::<u32>().ok()) {
+        cfg.scale_down_after = n;
+    }
+
+    // `--autopilot`: a latency SLO joins the power budget in one
+    // closed-loop controller (OP ladder x pool size x fleet chunk plan)
+    let pilot = if args.has("autopilot") {
+        let slo = args.get_f64("slo-p95-ms", 100.0);
+        let envelope = args.get_f64("power-envelope", 1.0);
+        anyhow::ensure!(slo.is_finite() && slo > 0.0, "--slo-p95-ms must be > 0");
+        anyhow::ensure!(
+            envelope.is_finite() && envelope > 0.0 && envelope <= 1.0,
+            "--power-envelope must be in (0, 1]"
+        );
+        println!("autopilot: slo p95<={slo}ms, power envelope {envelope}");
+        Some(ApRig {
+            pilot: Autopilot::new(
+                table.ladder(),
+                QosConfig::default(),
+                AutopilotConfig {
+                    slo_p95_ms: slo,
+                    power_envelope: envelope,
+                    recover_after: 20,      // 1 s of 50 ms budget steps
+                    pool_recover_after: 50, // 2.5 s
+                    cooldown_ticks: 4,      // 200 ms
+                    ..AutopilotConfig::default()
+                },
+            ),
+            pool_min: min_workers.max(1),
+            pool_max: max_workers.max(1),
+        })
+    } else {
+        None
     };
 
     if let Some(addrs) = fleet_addrs(args)? {
@@ -106,7 +159,7 @@ pub fn run(args: &Args) -> Result<()> {
             table,
             cfg,
         )?;
-        return drive(args, &exp, server, controller, Some((control, stats, registry)));
+        return drive(args, &exp, server, controller, pilot, Some((control, stats, registry)));
     }
     anyhow::ensure!(
         !args.has("registry"),
@@ -126,7 +179,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller, None)
+            drive(args, &exp, server, controller, pilot, None)
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
@@ -144,7 +197,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller, None)
+            drive(args, &exp, server, controller, pilot, None)
         }
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => bail!("this build has no PJRT support (rebuild with the `pjrt` feature)"),
@@ -163,6 +216,7 @@ fn drive<B: Backend + 'static>(
     exp: &Experiment,
     server: Server<B>,
     mut controller: QosController,
+    mut pilot: Option<ApRig>,
     mut fleet: Option<(FleetBackend, FleetStats, Option<FleetRegistry>)>,
 ) -> Result<()> {
     let secs = args.get_f64("secs", 3.0);
@@ -188,8 +242,65 @@ fn drive<B: Backend + 'static>(
     let mut drains = 0u64;
     let mut fleet_acks = 0u64;
     let mut energy = 0.0f64; // sum of per-request relative power
+    // sliding ~500 ms p95 window for the autopilot (ring of cumulative
+    // histograms, differenced against the oldest entry)
+    let mut hist: VecDeque<LatencyHistogram> = VecDeque::new();
+    const WINDOW_STEPS: usize = 10;
     for (step, &budget) in trace.iter().enumerate() {
-        if let Some((idx, mode)) = controller.observe_with_mode(budget, Instant::now()) {
+        let switch = match pilot.as_mut() {
+            Some(rig) => {
+                let cur = server.metrics().latency;
+                let win = match hist.front() {
+                    Some(earlier) => cur.since(earlier),
+                    None => cur.clone(),
+                };
+                hist.push_back(cur);
+                if hist.len() > WINDOW_STEPS {
+                    hist.pop_front();
+                }
+                let out = rig.pilot.tick(
+                    &TickInputs {
+                        t_s: step as f64 * 0.05,
+                        p95_ms: win.percentile_us(95.0) as f64 / 1000.0,
+                        window: win.count(),
+                        env_budget: budget,
+                        live_workers: server.live_workers(),
+                        min_workers: rig.pool_min,
+                        max_workers: rig.pool_max,
+                        has_fleet: fleet.is_some(),
+                    },
+                    Instant::now(),
+                );
+                if let Some(target) = out.pool_target {
+                    server.set_pool_target(target);
+                }
+                if let Some(q) = out.chunk_quantum_us {
+                    if let Some((_, stats, _)) = fleet.as_ref() {
+                        stats.set_chunk_quantum_us(q);
+                    }
+                }
+                if out.switch.is_some()
+                    || out.pool_target.is_some()
+                    || out.chunk_quantum_us.is_some()
+                {
+                    let d = &out.decision;
+                    println!(
+                        "  autopilot t={:.2}s p95={:.1}ms op={} workers={} bound={} [{} {} {}]",
+                        d.t_s,
+                        d.p95_ms,
+                        d.op,
+                        d.workers,
+                        d.bound.as_str(),
+                        d.op_action.as_str(),
+                        d.pool_action.as_str(),
+                        d.chunk_action.as_str()
+                    );
+                }
+                out.switch
+            }
+            None => controller.observe_with_mode(budget, Instant::now()),
+        };
+        if let Some((idx, mode)) = switch {
             if mode == SwitchMode::Drain {
                 drains += 1;
             }
@@ -261,13 +372,29 @@ fn drive<B: Backend + 'static>(
         lat.max_us as f64 / 1e3,
         m.queue_latency.mean_us() / 1e3,
     );
+    let (switches, budget_violations) = match &pilot {
+        Some(rig) => (
+            rig.pilot.controller().switches,
+            rig.pilot.controller().budget_violations,
+        ),
+        None => (controller.switches, controller.budget_violations),
+    };
     println!(
         "  mean batch={:.2}  OP switches={} ({} draining) budget violations={}",
         m.mean_batch(),
-        controller.switches,
+        switches,
         drains,
-        controller.budget_violations
+        budget_violations
     );
+    if let Some(rig) = &pilot {
+        println!(
+            "  autopilot: slo p95<={:.0}ms envelope={:.2}  ticks={} slo violations={}",
+            rig.pilot.config().slo_p95_ms,
+            rig.pilot.config().power_envelope,
+            rig.pilot.ticks,
+            rig.pilot.slo_violations
+        );
+    }
     println!(
         "  workers: live={live} peak={} scale-ups={} scale-downs={} spawn-failures={} retagged-batches={}",
         m.peak_workers, m.scale_ups, m.scale_downs, m.spawn_failures, m.retagged_batches

@@ -82,8 +82,11 @@ COMMANDS
                                 evaluates over remote fleet workers)
   serve     --exp E [--backend B] [--kernel K] [--secs S]
             [--workers N] [--min-workers N] [--max-workers N]
+            [--scale-interval-ms N] [--scale-up-after N]
+            [--scale-down-after N]
             [--fleet H:P,H:P,...] [--pipeline N] [--registry ADDR]
             [--retag-downgrades]
+            [--autopilot [--slo-p95-ms MS] [--power-envelope F]]
                                 QoS serving demo: elastic batching server
                                 with a power-budget trace driving OP
                                 switches (draining upgrades / immediate
@@ -98,7 +101,18 @@ COMMANDS
                                 `worker --join` grows the fleet under
                                 load; --retag-downgrades lets an
                                 immediate downgrade retag already-formed
-                                batches to the cheaper OP)
+                                batches to the cheaper OP;
+                                --scale-interval-ms/--scale-up-after/
+                                --scale-down-after tune the supervisor's
+                                sampling cadence and hysteresis;
+                                --autopilot closes the loop on a latency
+                                SLO: one controller jointly steers the
+                                OP ladder, the worker pool and the fleet
+                                chunk plan against --slo-p95-ms (default
+                                100) under --power-envelope (default 1.0
+                                = env budget only), shedding accuracy
+                                before latency and recovering accuracy
+                                only after sustained headroom)
   worker    --exp E [--listen ADDR] [--backend B] [--mode M] [--kernel K]
             [--hb-interval-ms N] [--hb-timeout-ms N]
             [--join HOST:PORT] [--advertise ADDR]
@@ -114,7 +128,7 @@ COMMANDS
                                 --registry endpoint, --advertise
                                 overrides the announced address)
   bench     --scenario NAME|FILE.json [--seed N] [--secs S] [--out FILE]
-            [--dashboard] [--list] [--print-scenario]
+            [--dashboard] [--list] [--print-scenario] [--autopilot on|off]
                                 scenario-driven load harness: replays a
                                 seeded open-loop arrival trace against
                                 the deployment the scenario describes
@@ -124,10 +138,19 @@ COMMANDS
                                 versioned BENCH_<scenario>.json perf
                                 record (per-OP quantiles, switch
                                 timeline, scale events); --list shows
-                                the six built-in scenarios
-  plan      diff A.json B.json  compare two stored OpPlans: per-layer
+                                the built-in scenarios; scenarios with
+                                an slo_p95_ms target engage the SLO
+                                autopilot (override with --autopilot
+                                on|off) and run twice on one seed, so
+                                the report carries the closed-loop
+                                decision log plus the uncontrolled
+                                baseline p95 timeline
+  plan      diff A.json B.json [--json]
+                                compare two stored OpPlans: per-layer
                                 assignment deltas per OP, per-OP power
                                 deltas, subset + provenance differences
+                                (--json emits the same diff machine-
+                                readable for CI gates)
   report    <fig1|fig2|fig3> --exp E   dump figure data series
   selftest  --exp E             cross-layer integration checks
 

@@ -62,10 +62,14 @@ const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 /// [`FleetBackend::with_pipeline_window`] or `QOS_NETS_FLEET_PIPELINE`.
 pub const DEFAULT_PIPELINE_WINDOW: usize = 4;
 
-/// Target service time for one chunk, microseconds: a worker's chunk
-/// size is chosen so `chunk_len * ewma_img_us ≈` this quantum, which
-/// is what skews chunk sizes toward fast workers.
-const CHUNK_QUANTUM_US: f64 = 5_000.0;
+/// Default target service time for one chunk, microseconds: a worker's
+/// chunk size is chosen so `chunk_len * ewma_img_us ≈` this quantum,
+/// which is what skews chunk sizes toward fast workers.  Overridable at
+/// runtime per fleet via [`FleetStats::set_chunk_quantum_us`] — the
+/// autopilot narrows the quantum under latency pressure (smaller
+/// chunks, finer interleaving) and widens it back when headroom
+/// returns.
+pub const CHUNK_QUANTUM_US: f64 = 5_000.0;
 
 /// Smoothing factor for the per-image latency EWMA.
 const EWMA_ALPHA: f64 = 0.3;
@@ -141,6 +145,12 @@ struct FleetStatsInner {
     workers: BTreeMap<String, WorkerStats>,
     requeues: u64,
     evictions: u64,
+    /// Runtime chunk-quantum override, microseconds; 0 = use
+    /// [`CHUNK_QUANTUM_US`].  Lives here (not on [`FleetBackend`])
+    /// because every backend built from the same handle — one per
+    /// server worker thread — shares this registry, so one setter call
+    /// reaches every pump.
+    chunk_quantum_us: f64,
 }
 
 /// Shared per-worker attribution registry and membership authority,
@@ -181,6 +191,27 @@ impl FleetStats {
 
     fn ewma_img_us(&self, addr: &str) -> f64 {
         self.inner.lock().unwrap().workers.get(addr).map_or(0.0, |w| w.ewma_img_us)
+    }
+
+    /// Override the per-chunk service-time quantum for every backend
+    /// sharing this registry (clamped to at least 100 us so a zero or
+    /// negative target cannot degenerate to one-image chunks fleet-wide
+    /// by accident).  The autopilot's chunk-plan actuator.
+    pub fn set_chunk_quantum_us(&self, quantum_us: f64) {
+        self.inner.lock().unwrap().chunk_quantum_us = quantum_us.max(100.0);
+    }
+
+    /// Restore the default chunk quantum ([`CHUNK_QUANTUM_US`]).
+    pub fn reset_chunk_quantum(&self) {
+        self.inner.lock().unwrap().chunk_quantum_us = 0.0;
+    }
+
+    /// The chunk quantum currently in force (default or override).
+    pub fn chunk_quantum_us(&self) -> f64 {
+        match self.inner.lock().unwrap().chunk_quantum_us {
+            q if q > 0.0 => q,
+            _ => CHUNK_QUANTUM_US,
+        }
     }
 
     /// The worker's current membership state (`Live` if never seen —
@@ -391,13 +422,14 @@ fn pipeline_from_env() -> usize {
 }
 
 /// Images one chunk should carry for a worker with this per-image
-/// EWMA: size toward the service-time quantum, `fallback` (the even
-/// share) before any latency has been observed.
-fn chunk_target(ewma_img_us: f64, fallback: usize) -> usize {
+/// EWMA: size toward the service-time quantum (the fleet's current
+/// one — see [`FleetStats::set_chunk_quantum_us`]), `fallback` (the
+/// even share) before any latency has been observed.
+fn chunk_target(quantum_us: f64, ewma_img_us: f64, fallback: usize) -> usize {
     if ewma_img_us <= 0.0 {
         fallback.max(1)
     } else {
-        ((CHUNK_QUANTUM_US / ewma_img_us) as usize).max(1)
+        ((quantum_us / ewma_img_us) as usize).max(1)
     }
 }
 
@@ -453,8 +485,9 @@ fn peer_pump(
         }
     };
     loop {
+        let quantum_us = stats.chunk_quantum_us();
         while pulling && inflight.len() < win {
-            let want = chunk_target(stats.ewma_img_us(&addr), fallback);
+            let want = chunk_target(quantum_us, stats.ewma_img_us(&addr), fallback);
             let Some(chunk) = take_chunk(queue, want) else { break };
             let frame = Frame::Forward { id: Some(next_id), op: Some(op_idx), batch: chunk.len };
             let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
@@ -1128,12 +1161,31 @@ mod tests {
 
     #[test]
     fn chunk_target_scales_inversely_with_observed_latency() {
-        assert_eq!(chunk_target(0.0, 8), 8); // no history: even share
-        let fast = chunk_target(CHUNK_QUANTUM_US / 100.0, 8); // 100 img/quantum
-        let slow = chunk_target(CHUNK_QUANTUM_US * 4.0, 8); // 4 quanta/img
+        let q = CHUNK_QUANTUM_US;
+        assert_eq!(chunk_target(q, 0.0, 8), 8); // no history: even share
+        let fast = chunk_target(q, CHUNK_QUANTUM_US / 100.0, 8); // 100 img/quantum
+        let slow = chunk_target(q, CHUNK_QUANTUM_US * 4.0, 8); // 4 quanta/img
         assert_eq!(fast, 100);
         assert_eq!(slow, 1); // clamped at one image
         assert!(fast > slow);
+    }
+
+    #[test]
+    fn chunk_quantum_override_is_shared_and_resettable() {
+        let stats = FleetStats::default();
+        assert_eq!(stats.chunk_quantum_us(), CHUNK_QUANTUM_US);
+        // a clone shares the registry, so the override reaches every
+        // backend built from the same handle
+        let sibling = stats.clone();
+        stats.set_chunk_quantum_us(1_000.0);
+        assert_eq!(sibling.chunk_quantum_us(), 1_000.0);
+        // halving the quantum halves the chunk target at fixed EWMA
+        assert_eq!(chunk_target(sibling.chunk_quantum_us(), 100.0, 8), 10);
+        // degenerate targets clamp instead of collapsing to 1-image chunks
+        stats.set_chunk_quantum_us(0.0);
+        assert_eq!(sibling.chunk_quantum_us(), 100.0);
+        stats.reset_chunk_quantum();
+        assert_eq!(sibling.chunk_quantum_us(), CHUNK_QUANTUM_US);
     }
 
     #[test]

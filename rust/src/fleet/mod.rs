@@ -40,7 +40,7 @@ pub mod registry;
 pub mod wire;
 pub mod worker;
 
-pub use coordinator::{FleetBackend, FleetStats, MemberState, WorkerStats};
+pub use coordinator::{FleetBackend, FleetStats, MemberState, WorkerStats, CHUNK_QUANTUM_US};
 pub use registry::{register_with, FleetRegistry};
 pub use wire::{Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION};
 pub use worker::{WorkerHandle, WorkerOptions, WORKER_MAX_INFLIGHT};

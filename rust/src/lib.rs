@@ -31,6 +31,9 @@
 //!   * [`backend`]   unified `Backend` trait + OpTable over both engines
 //!   * [`qos`]       operating-point controller (budget + hysteresis +
 //!     switch-mode policy)
+//!   * [`autopilot`] SLO autopilot: one closed-loop controller over OP
+//!     ladder × worker-pool size × fleet chunk plan, driven by a p95
+//!     latency SLO and a power envelope
 //!   * [`server`]    elastic batching inference server, generic over
 //!     `Backend`: load-driven worker scaling, per-OP latency
 //!     attribution, draining OP-switch barriers
@@ -45,6 +48,7 @@
 //!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
 
+pub mod autopilot;
 pub mod backend;
 pub mod baselines;
 pub mod bench;

@@ -509,6 +509,79 @@ impl PlanDiff {
                     && op.power_delta().is_some_and(|d| d.abs() < 1e-12)
             })
     }
+
+    /// Machine-readable form of the diff (`plan diff --json`): the same
+    /// structure the human table prints — per-OP name/power deltas and
+    /// layer-level assignment changes — plus the verdict, so CI and
+    /// scripts can gate on `same_deployment` without scraping text.
+    pub fn to_json(&self) -> Json {
+        fn opt_num(v: Option<f64>) -> Json {
+            match v {
+                Some(x) => Json::num(x),
+                None => Json::Null,
+            }
+        }
+        fn opt_id(v: Option<usize>) -> Json {
+            match v {
+                Some(id) => Json::num(id as f64),
+                None => Json::Null,
+            }
+        }
+        fn opt_str(v: &Option<String>) -> Json {
+            match v {
+                Some(s) => Json::str(s.clone()),
+                None => Json::Null,
+            }
+        }
+        fn prov(p: &Option<Provenance>) -> Json {
+            match p {
+                Some(p) => Json::obj(vec![
+                    ("planner", Json::str(p.planner.clone())),
+                    ("seed", Json::num(p.seed as f64)),
+                    ("config_hash", Json::str(p.config_hash.clone())),
+                ]),
+                None => Json::Null,
+            }
+        }
+        fn ids(v: &[usize]) -> Json {
+            Json::Arr(v.iter().map(|&id| Json::num(id as f64)).collect())
+        }
+        let ops = self
+            .ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| {
+                let changed = op
+                    .changed
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("layer", Json::str(d.layer.clone())),
+                            ("from", opt_id(d.from)),
+                            ("to", opt_id(d.to)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("index", Json::num(i as f64)),
+                    ("name_a", opt_str(&op.name_a)),
+                    ("name_b", opt_str(&op.name_b)),
+                    ("power_a", opt_num(op.power_a)),
+                    ("power_b", opt_num(op.power_b)),
+                    ("power_delta", opt_num(op.power_delta())),
+                    ("changed", Json::Arr(changed)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("same_deployment", Json::Bool(self.is_same_deployment())),
+            ("subset_only_a", ids(&self.subset_only_a)),
+            ("subset_only_b", ids(&self.subset_only_b)),
+            ("provenance_a", prov(&self.provenance_a)),
+            ("provenance_b", prov(&self.provenance_b)),
+            ("ops", Json::Arr(ops)),
+        ])
+    }
 }
 
 impl OpPlan {

@@ -86,6 +86,11 @@ pub enum EnvEvent {
     /// Scale the harvest amplitude by `factor` from now on (0 = the
     /// panel goes dark, 2 = double insolation).
     HarvestScale { factor: f64 },
+    /// A grid tariff window: for the next `secs` simulated seconds the
+    /// governor multiplies its budget by `scale` (0..1) — peak-price
+    /// hours where the operator caps draw by policy, not physics.  A
+    /// new window replaces any window still in force.
+    TariffWindow { scale: f64, secs: f64 },
 }
 
 /// Battery + thermal + governor model; see the module docs.
@@ -93,6 +98,8 @@ pub struct EnvSimulator {
     cfg: EnvConfig,
     state: EnvState,
     rng: Rng,
+    /// active tariff window, as (budget scale, simulated end time)
+    tariff: Option<(f64, f64)>,
 }
 
 impl EnvSimulator {
@@ -105,7 +112,7 @@ impl EnvSimulator {
             budget: 1.0,
         };
         let rng = Rng::new(cfg.seed);
-        EnvSimulator { cfg, state, rng }
+        EnvSimulator { cfg, state, rng, tariff: None }
     }
 
     /// The current platform state.
@@ -128,7 +135,15 @@ impl EnvSimulator {
             EnvEvent::HarvestScale { factor } => {
                 self.cfg.harvest_peak *= factor.max(0.0);
             }
+            EnvEvent::TariffWindow { scale, secs } => {
+                self.tariff = Some((scale.clamp(0.0, 1.0), self.state.t + secs.max(0.0)));
+            }
         }
+    }
+
+    /// Whether a tariff window is currently capping the budget.
+    pub fn tariff_active(&self) -> bool {
+        self.tariff.is_some_and(|(_, until)| self.state.t < until)
     }
 
     /// Harvest power at time t: half-sine "daylight" with noise.
@@ -165,8 +180,17 @@ impl EnvSimulator {
         } else {
             1.0 - (self.state.temperature - c.throttle_start) / (c.throttle_full - c.throttle_start)
         };
+        // tariff windows cap the budget by policy on top of the physics
+        let tariff_factor = match self.tariff {
+            Some((scale, until)) if self.state.t < until => scale,
+            Some(_) => {
+                self.tariff = None; // expired window
+                1.0
+            }
+            None => 1.0,
+        };
         // budget floor > 0: the cheapest OP must always be schedulable
-        self.state.budget = (soc_factor * thermal_factor).max(0.05);
+        self.state.budget = (soc_factor * thermal_factor * tariff_factor).max(0.05);
         self.state.t += dt;
         self.state.budget
     }
@@ -273,6 +297,59 @@ mod tests {
             sim.state().soc
         };
         assert!(trajectory(Some(0.0)) < trajectory(None));
+    }
+
+    #[test]
+    fn tariff_window_caps_budget_then_expires() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            harvest_peak: 0.0,
+            battery_capacity: 1e9,
+            ..Default::default()
+        });
+        let full = sim.step(0.1, 0.0);
+        assert!(full > 0.95, "baseline budget {full}");
+
+        sim.apply(EnvEvent::TariffWindow { scale: 0.5, secs: 1.0 });
+        assert!(sim.tariff_active());
+        let capped = sim.step(0.1, 0.0);
+        assert!((capped - 0.5 * full).abs() < 0.05, "capped budget {capped}");
+
+        // ten more 0.1 s steps walk past the 1 s window end
+        let mut last = capped;
+        for _ in 0..10 {
+            last = sim.step(0.1, 0.0);
+        }
+        assert!(!sim.tariff_active());
+        assert!(last > 0.95, "budget {last} should recover after the window");
+    }
+
+    #[test]
+    fn tariff_window_respects_budget_floor() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            harvest_peak: 0.0,
+            ..Default::default()
+        });
+        sim.apply(EnvEvent::TariffWindow { scale: 0.0, secs: 100.0 });
+        let b = sim.step(0.1, 0.0);
+        assert!((b - 0.05).abs() < 1e-9, "budget {b} should sit on the floor");
+    }
+
+    #[test]
+    fn new_tariff_window_replaces_the_old_one() {
+        let mut sim = EnvSimulator::new(EnvConfig {
+            harvest_peak: 0.0,
+            battery_capacity: 1e9,
+            ..Default::default()
+        });
+        sim.apply(EnvEvent::TariffWindow { scale: 0.2, secs: 1000.0 });
+        sim.apply(EnvEvent::TariffWindow { scale: 0.8, secs: 0.5 });
+        let b = sim.step(0.1, 0.0);
+        assert!((b - 0.8).abs() < 0.05, "budget {b} should follow the newer window");
+        for _ in 0..10 {
+            sim.step(0.1, 0.0);
+        }
+        // the long 0.2 window is gone — replaced, not stacked
+        assert!(sim.state().budget > 0.95, "budget {}", sim.state().budget);
     }
 
     #[test]

@@ -166,11 +166,23 @@ impl QosController {
     /// [`LadderEntry::table_index`]), so it can be handed to
     /// `Server::set_operating_point` verbatim.
     pub fn observe(&mut self, budget: f64, now: Instant) -> Option<usize> {
+        self.observe_capped(budget, 0, now)
+    }
+
+    /// Like [`observe`](Self::observe), but with an accuracy *cap*: the
+    /// controller never settles on a rung more accurate than sorted
+    /// position `cap` (0 = uncapped), regardless of budget.  This is
+    /// the autopilot's latency lever — latency pressure pushes the cap
+    /// toward frugal rungs while the *real* power budget keeps flowing
+    /// through unchanged, so upgrade-margin hysteresis still works on
+    /// genuine budget recovery instead of stalling against a synthetic
+    /// capped budget.
+    pub fn observe_capped(&mut self, budget: f64, cap: usize, now: Instant) -> Option<usize> {
         let cur_power = self.ladder[self.current].power;
         if cur_power > budget {
             self.budget_violations += 1;
         }
-        let ideal = self.ideal_for(budget);
+        let ideal = self.ideal_for(budget).max(cap.min(self.ladder.len() - 1));
         if ideal == self.current {
             return None;
         }
@@ -199,8 +211,20 @@ impl QosController {
     /// and return [`SwitchMode::Immediate`]; upgrades can afford the
     /// draining barrier and return [`SwitchMode::Drain`].
     pub fn observe_with_mode(&mut self, budget: f64, now: Instant) -> Option<(usize, SwitchMode)> {
+        self.observe_with_mode_capped(budget, 0, now)
+    }
+
+    /// [`observe_capped`](Self::observe_capped) with the
+    /// [`observe_with_mode`](Self::observe_with_mode) switch-mode
+    /// policy: capped downgrades are `Immediate`, upgrades `Drain`.
+    pub fn observe_with_mode_capped(
+        &mut self,
+        budget: f64,
+        cap: usize,
+        now: Instant,
+    ) -> Option<(usize, SwitchMode)> {
         let before = self.ladder[self.current].power;
-        let idx = self.observe(budget, now)?;
+        let idx = self.observe_capped(budget, cap, now)?;
         let after = self.ladder[self.current].power;
         let mode = if after > before {
             SwitchMode::Drain
@@ -263,6 +287,24 @@ mod tests {
         assert_eq!(c.ideal_for(0.7), 1);
         assert_eq!(c.ideal_for(0.6), 2);
         assert_eq!(c.ideal_for(0.1), 2); // nothing fits -> most frugal
+    }
+
+    #[test]
+    fn ideal_for_is_deterministic_on_exact_rung_boundaries() {
+        // a budget landing exactly on a rung's power selects that rung
+        // (power <= budget is inclusive), on every rung of the ladder —
+        // the autopilot feeds synthesized budgets equal to rung powers,
+        // so boundary ties must never fall through to a cheaper OP
+        let c = QosController::new(ladder(), QosConfig::default());
+        assert_eq!(c.ideal_for(0.85), 0);
+        assert_eq!(c.ideal_for(0.69), 1);
+        assert_eq!(c.ideal_for(0.57), 2);
+        // and the pick is stable across repeated evaluation
+        for _ in 0..10 {
+            assert_eq!(c.ideal_for(0.69), 1);
+        }
+        // one ulp below the boundary falls to the next rung down
+        assert_eq!(c.ideal_for(f64::from_bits(0.69f64.to_bits() - 1)), 2);
     }
 
     #[test]
@@ -346,6 +388,34 @@ mod tests {
         }
         assert_eq!(c.observe(1.0, t0 + Duration::from_millis(101)), Some(0));
         assert_eq!(c.switches, 3);
+    }
+
+    #[test]
+    fn observe_capped_never_settles_above_the_cap() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        // ample budget but cap at the middle rung: the controller rises
+        // only to position 1, never to the most accurate rung
+        assert_eq!(c.observe_capped(1.0, 1, t), Some(1));
+        assert_eq!(c.observe_capped(1.0, 1, t), None);
+        assert_eq!(c.current(), 1);
+        // tightening the cap forces an immediate downgrade even with
+        // the budget unchanged
+        assert_eq!(
+            c.observe_with_mode_capped(1.0, 2, t),
+            Some((2, SwitchMode::Immediate))
+        );
+        // releasing the cap lets the ample budget lift it back up (a
+        // draining upgrade, as ever)
+        assert_eq!(c.observe_with_mode_capped(1.0, 0, t), Some((0, SwitchMode::Drain)));
+        // a cap past the ladder end clamps to the most frugal rung
+        assert_eq!(c.observe_capped(1.0, 99, t), Some(2));
     }
 
     #[test]

@@ -299,8 +299,16 @@ struct Shared {
     /// the wait-time watermark (includes worker-channel backlog, not
     /// just time in the batcher).
     queue_watermark_us: AtomicU64,
+    /// Explicit worker-count target installed by an external controller
+    /// (the SLO autopilot); `usize::MAX` = unmanaged, i.e. the
+    /// supervisor runs its own watermark heuristics.  While a target is
+    /// set the supervisor converges the pool to it instead.
+    pool_target: AtomicUsize,
     stop: AtomicBool,
 }
+
+/// [`Shared::pool_target`] sentinel: no external target installed.
+const POOL_UNMANAGED: usize = usize::MAX;
 
 impl Shared {
     fn new(first_worker: usize) -> Self {
@@ -310,6 +318,7 @@ impl Shared {
             live_workers: AtomicUsize::new(0),
             next_worker: AtomicUsize::new(first_worker),
             queue_watermark_us: AtomicU64::new(0),
+            pool_target: AtomicUsize::new(POOL_UNMANAGED),
             stop: AtomicBool::new(false),
         }
     }
@@ -387,6 +396,10 @@ pub struct Server<B: Backend> {
     /// Supervisor-spawned worker handles, joined at shutdown.
     scaled: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     next_id: AtomicUsize,
+    /// Normalized pool bounds (post-`start` invariants), kept so
+    /// external pool targets can be clamped into the legal range.
+    min_workers: usize,
+    max_workers: usize,
     _backend: PhantomData<fn() -> B>,
 }
 
@@ -497,6 +510,8 @@ impl<B: Backend + 'static> Server<B> {
             threads,
             scaled,
             next_id: AtomicUsize::new(0),
+            min_workers: cfg.min_workers,
+            max_workers: cfg.max_workers,
             _backend: PhantomData,
         })
     }
@@ -576,6 +591,33 @@ impl<B: Backend + 'static> Server<B> {
     /// Requests submitted but not yet answered.
     pub fn inflight(&self) -> usize {
         self.shared.inflight.load(Ordering::Acquire)
+    }
+
+    /// Install an explicit worker-count target (clamped into the pool's
+    /// `[min_workers, max_workers]` range) and return the clamped
+    /// value.  While a target is set, the scaling supervisor converges
+    /// the pool to it instead of running its own queue-depth
+    /// heuristics — this is the autopilot's capacity actuator.  On a
+    /// fixed pool (no supervisor) the target is recorded but inert,
+    /// and the clamp collapses it to the fixed size.
+    pub fn set_pool_target(&self, workers: usize) -> usize {
+        let clamped = workers.clamp(self.min_workers, self.max_workers);
+        self.shared.pool_target.store(clamped, Ordering::Release);
+        clamped
+    }
+
+    /// Remove any explicit pool target: the supervisor resumes its
+    /// watermark-driven scaling on its next tick.
+    pub fn clear_pool_target(&self) {
+        self.shared.pool_target.store(POOL_UNMANAGED, Ordering::Release);
+    }
+
+    /// The explicit pool target currently installed, if any.
+    pub fn pool_target(&self) -> Option<usize> {
+        match self.shared.pool_target.load(Ordering::Acquire) {
+            POOL_UNMANAGED => None,
+            n => Some(n),
+        }
     }
 
     /// Snapshot of the aggregate metrics.
@@ -934,6 +976,34 @@ fn supervisor_loop<B, F>(
             let handle = spawn_worker(ctx.clone(), w, true, None);
             push_handle(&handles, handle);
             ctx.metrics.lock().unwrap().scale_ups += 1;
+            continue;
+        }
+        // an explicit pool target (installed by the autopilot via
+        // `set_pool_target`) overrides the watermark heuristics: spawn
+        // straight to the target, retire one worker per tick above it
+        // (gentle shrink — FIFO Retire tokens queue behind in-flight
+        // work, and one per tick keeps a transient target from
+        // draining the pool before the controller reconsiders)
+        let target = ctx.shared.pool_target.load(Ordering::Acquire);
+        if target != POOL_UNMANAGED {
+            up_streak = 0;
+            idle_streak = 0;
+            let target = target.clamp(cfg.min_workers, cfg.max_workers);
+            if live < target {
+                let n = target - live;
+                for _ in 0..n {
+                    ctx.shared.live_workers.fetch_add(1, Ordering::AcqRel);
+                    let w = ctx.shared.next_worker.fetch_add(1, Ordering::AcqRel);
+                    let handle = spawn_worker(ctx.clone(), w, true, None);
+                    push_handle(&handles, handle);
+                }
+                let mut m = ctx.metrics.lock().unwrap();
+                m.scale_ups += n as u64;
+                m.peak_workers = m.peak_workers.max(target);
+            } else if live > target {
+                let _ = batch_tx.send(WorkerMsg::Retire);
+                ctx.metrics.lock().unwrap().scale_downs += 1;
+            }
             continue;
         }
         // the watermark includes the intentional max_wait batching

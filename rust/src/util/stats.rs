@@ -114,6 +114,26 @@ impl LatencyHistogram {
         self.max_us
     }
 
+    /// The histogram of samples recorded since `earlier` was captured:
+    /// per-bucket and counter subtraction.  `earlier` must be a past
+    /// snapshot of this same (cumulative, monotone) histogram; buckets
+    /// saturate at zero so a mismatched pair degrades to empty rather
+    /// than panicking.  `max_us` cannot be un-merged, so the window
+    /// inherits the cumulative max — an upper bound, same spirit as the
+    /// log2 percentile bounds.
+    pub fn since(&self, earlier: &LatencyHistogram) -> LatencyHistogram {
+        let mut delta = LatencyHistogram::new();
+        for (d, (now, then)) in
+            delta.buckets.iter_mut().zip(self.buckets.iter().zip(&earlier.buckets))
+        {
+            *d = now.saturating_sub(*then);
+        }
+        delta.count = self.count.saturating_sub(earlier.count);
+        delta.sum_us = self.sum_us.saturating_sub(earlier.sum_us);
+        delta.max_us = if delta.count == 0 { 0 } else { self.max_us };
+        delta
+    }
+
     /// The standard quantile summary (count, mean, p50/p95/p99, max) in
     /// one call — the reusable extraction consumers like the serving
     /// report, `benches/perf_server.rs` and the bench orchestrator
@@ -201,6 +221,28 @@ mod tests {
     #[test]
     fn empty_summary_is_all_zero() {
         assert_eq!(LatencyHistogram::new().summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn since_isolates_the_window() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 20, 40] {
+            h.record_us(us);
+        }
+        let snap = h.clone();
+        for us in [100_000u64, 200_000, 400_000] {
+            h.record_us(us);
+        }
+        let win = h.since(&snap);
+        assert_eq!(win.count(), 3);
+        // the slow window's p50 reflects only the new samples, not the
+        // fast prefix the cumulative histogram would average in
+        assert!(win.percentile_us(50.0) > 100_000, "window p50 {}", win.percentile_us(50.0));
+        assert!(h.percentile_us(50.0) <= 128, "cumulative p50 {}", h.percentile_us(50.0));
+        // empty window degrades to all-zero
+        let none = h.since(&h.clone());
+        assert_eq!(none.count(), 0);
+        assert_eq!(none.summary(), LatencySummary::default());
     }
 
     #[test]

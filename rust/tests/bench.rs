@@ -1,12 +1,14 @@
 //! Integration tests for the `qos-nets bench` load harness: builtin
 //! scenario round-trips, malformed-spec rejection, arrival-trace
 //! determinism, short end-to-end smoke runs (steady_state on the
-//! native synthetic model, ladder_thrash for both switch modes), and
-//! schema validation of the committed `BENCH_steady_state.json`
-//! baseline.
+//! native synthetic model, ladder_thrash for both switch modes,
+//! slo_pressure for the autopilot's shed-before-violate ordering), and
+//! schema validation of the committed `BENCH_steady_state.json` and
+//! `BENCH_slo_pressure.json` baselines.
 
 use std::path::Path;
 
+use qos_nets::autopilot::OpAction;
 use qos_nets::bench::driver::{run_scenario, BenchOpts};
 use qos_nets::bench::report::{BenchReport, REPORT_VERSION};
 use qos_nets::bench::scenario::{builtin, Scenario, BUILTIN_NAMES};
@@ -64,7 +66,7 @@ fn same_seed_produces_identical_request_traces() {
 #[test]
 fn steady_state_smoke_run_emits_a_complete_report() {
     let sc = builtin("steady_state").unwrap();
-    let opts = BenchOpts { seed: Some(7), secs: Some(2.0), dashboard: false };
+    let opts = BenchOpts { seed: Some(7), secs: Some(2.0), ..BenchOpts::default() };
     let report = run_scenario(&sc, &opts).unwrap();
 
     assert_eq!(report.version, REPORT_VERSION);
@@ -92,7 +94,7 @@ fn steady_state_smoke_run_emits_a_complete_report() {
 #[test]
 fn identical_seeds_agree_on_provenance_and_trace() {
     let sc = builtin("steady_state").unwrap();
-    let opts = BenchOpts { seed: Some(9), secs: Some(1.0), dashboard: false };
+    let opts = BenchOpts { seed: Some(9), secs: Some(1.0), ..BenchOpts::default() };
     let a = run_scenario(&sc, &opts).unwrap();
     let b = run_scenario(&sc, &opts).unwrap();
     assert_eq!(a.provenance.config_hash, b.provenance.config_hash);
@@ -103,7 +105,7 @@ fn identical_seeds_agree_on_provenance_and_trace() {
 #[test]
 fn ladder_thrash_records_both_switch_modes() {
     let sc = builtin("ladder_thrash").unwrap();
-    let opts = BenchOpts { seed: Some(19), secs: Some(2.0), dashboard: false };
+    let opts = BenchOpts { seed: Some(19), secs: Some(2.0), ..BenchOpts::default() };
     let report = run_scenario(&sc, &opts).unwrap();
     assert!(report.switches.drain >= 1, "expected a draining upgrade, got {:?}", report.switches);
     assert!(
@@ -119,6 +121,60 @@ fn ladder_thrash_records_both_switch_modes() {
     // the timeline's modes re-add to the counters
     let drain = report.switches.timeline.iter().filter(|r| r.mode == "drain").count() as u64;
     assert_eq!(drain, report.switches.drain);
+}
+
+#[test]
+fn slo_pressure_smoke_sheds_accuracy_before_violating_the_slo() {
+    // truncated to the cruise phase plus half the peak: long enough for
+    // the baseline to blow through the SLO and for the autopilot to
+    // shed first, short enough for CI (the paired run doubles it)
+    let sc = builtin("slo_pressure").unwrap();
+    let opts = BenchOpts { seed: Some(29), secs: Some(8.0), ..BenchOpts::default() };
+    let report = run_scenario(&sc, &opts).unwrap();
+
+    let ap = report.autopilot.as_ref().expect("slo_pressure must engage the autopilot");
+    assert_eq!(ap.slo_p95_ms, 100.0);
+    let down = ap.first_downgrade_t_s.expect("the overload must trigger an accuracy shed");
+    if let Some(v) = ap.first_violation_t_s {
+        assert!(
+            down < v,
+            "autopilot shed accuracy at {down}s only after the SLO broke at {v}s"
+        );
+    }
+    assert!(!ap.decisions.is_empty(), "decision log must not be empty");
+    let base = ap.baseline.as_ref().expect("the paired run embeds the uncontrolled baseline");
+    assert!(
+        base.slo_violation_ticks > 0,
+        "the uncontrolled run should violate the SLO under the peak"
+    );
+    assert!(!base.p95_timeline.is_empty());
+
+    // the report round-trips with its autopilot section intact
+    let text = json::to_string_pretty(&report.to_json());
+    let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn autopilot_off_run_still_records_the_slo_trajectory() {
+    let sc = builtin("slo_pressure").unwrap();
+    let opts =
+        BenchOpts { seed: Some(29), secs: Some(2.0), autopilot: Some(false), ..BenchOpts::default() };
+    let report = run_scenario(&sc, &opts).unwrap();
+    let ap = report.autopilot.as_ref().expect("SLO scenarios report their trajectory even when off");
+    assert!(ap.decisions.is_empty(), "no autopilot, no decisions");
+    assert!(ap.first_downgrade_t_s.is_none());
+    let base = ap.baseline.as_ref().expect("an off run doubles as its own baseline");
+    assert!(!base.p95_timeline.is_empty());
+}
+
+#[test]
+fn autopilot_on_requires_an_slo_scenario() {
+    let sc = builtin("steady_state").unwrap();
+    let opts =
+        BenchOpts { seed: Some(7), secs: Some(1.0), autopilot: Some(true), ..BenchOpts::default() };
+    let err = run_scenario(&sc, &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("slo_p95_ms"), "{err:#}");
 }
 
 #[test]
@@ -140,4 +196,42 @@ fn committed_baseline_report_parses_and_matches_schema() {
     );
     assert!(report.throughput.completed > 0);
     assert!(!report.intervals.is_empty());
+}
+
+#[test]
+fn committed_slo_pressure_report_shows_the_autopilot_protecting_the_slo() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_slo_pressure.json");
+    let report = BenchReport::read_from(&path)
+        .unwrap_or_else(|e| panic!("committed autopilot baseline is schema-stale: {e:#}"));
+    assert_eq!(report.version, REPORT_VERSION);
+    assert_eq!(report.scenario, "slo_pressure");
+    let sc = builtin("slo_pressure").unwrap();
+    assert_eq!(
+        report.provenance.config_hash,
+        format!("{:016x}", sc.config_hash()),
+        "builtin slo_pressure changed: re-record BENCH_slo_pressure.json \
+         (cargo run --release --no-default-features -- bench --scenario slo_pressure --seed 29)"
+    );
+
+    let ap = report.autopilot.as_ref().expect("autopilot section missing");
+    assert_eq!(ap.slo_p95_ms, 100.0);
+    // the acceptance ordering: accuracy shed strictly before any
+    // p95-over-SLO interval, and accuracy recovered afterwards
+    let down = ap.first_downgrade_t_s.expect("no accuracy downgrade recorded");
+    if let Some(v) = ap.first_violation_t_s {
+        assert!(down < v, "downgrade at {down}s must precede the first violation at {v}s");
+    }
+    assert!(
+        ap.decisions.iter().any(|d| d.op_action == OpAction::Up && d.t_s > down),
+        "no accuracy recovery after the shed"
+    );
+    // the uncontrolled run of the same seed sustains SLO violations
+    let base = ap.baseline.as_ref().expect("baseline timeline missing");
+    assert!(
+        base.slo_violation_ticks >= 10,
+        "baseline should violate the SLO for a sustained stretch, got {} ticks",
+        base.slo_violation_ticks
+    );
+    assert!(base.first_violation_t_s.is_some());
+    assert!(!base.p95_timeline.is_empty());
 }

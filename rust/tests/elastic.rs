@@ -137,6 +137,39 @@ fn deep_burst_reaches_the_ceiling_in_one_pressured_tick() {
 }
 
 #[test]
+fn explicit_pool_target_overrides_watermark_scaling() {
+    // idle server (no load at all): the watermark heuristics would
+    // never grow the pool, so reaching 3 workers proves the explicit
+    // target drove the supervisor
+    let table = OpTable::new(vec![stub_op("only", 1.0)]);
+    let server = Server::start(|_w| Ok(StubBackend::new(4)), table, elastic_cfg()).unwrap();
+    assert_eq!(server.live_workers(), 1);
+    assert_eq!(server.pool_target(), None);
+
+    // target above the ceiling clamps to it; 3 is in range and sticks
+    assert_eq!(server.set_pool_target(100), 4);
+    assert_eq!(server.set_pool_target(3), 3);
+    assert_eq!(server.pool_target(), Some(3));
+    wait_for("pool to grow to the explicit target", 20, || {
+        server.live_workers() == 3
+    });
+
+    // shrink target: the supervisor retires back down, one per tick
+    assert_eq!(server.set_pool_target(0), 1);
+    wait_for("pool to shrink to the explicit target", 20, || {
+        server.live_workers() == 1
+    });
+
+    // releasing the target hands control back to the heuristics (the
+    // idle pool just stays at the floor)
+    server.clear_pool_target();
+    assert_eq!(server.pool_target(), None);
+    let m = server.shutdown();
+    assert!(m.scale_ups >= 2, "scale_ups {}", m.scale_ups);
+    assert!(m.scale_downs >= 2, "scale_downs {}", m.scale_downs);
+}
+
+#[test]
 fn static_pool_never_scales() {
     // default bounds (0/0 = "same as workers"): no supervisor, fixed pool
     let table = OpTable::new(vec![stub_op("only", 1.0)]);

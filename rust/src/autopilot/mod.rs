@@ -496,6 +496,16 @@ impl Autopilot {
             chunk_action,
             bound,
         };
+        crate::obs::publish(crate::obs::ObsEvent::AutopilotDecision {
+            t_s: decision.t_s,
+            p95_ms: decision.p95_ms,
+            op: decision.op,
+            workers: decision.workers,
+            op_action: decision.op_action.as_str().to_string(),
+            pool_action: decision.pool_action.as_str().to_string(),
+            chunk_action: decision.chunk_action.as_str().to_string(),
+            bound: decision.bound.as_str().to_string(),
+        });
         TickOutcome { switch, pool_target, chunk_quantum_us, decision }
     }
 }

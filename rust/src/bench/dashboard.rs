@@ -2,10 +2,15 @@
 //!
 //! Plain escape-code rendering (cursor-up + clear-line), no terminal
 //! crate: a fixed block of lines is redrawn in place once per sampling
-//! interval, with a unicode sparkline of recent throughput.  Purely
-//! additive — the recorded report is identical with or without it.
+//! interval, with a unicode sparkline of recent throughput.
+//!
+//! Every number on the panel is read back from the process-wide
+//! [`Registry`] — the same families `--metrics-addr` exposes — so the
+//! panel and a concurrent scrape can never disagree.  The dashboard
+//! keeps only presentation state of its own (the throughput ring the
+//! sparkline draws, derived from deltas of the completed counter).
 
-use crate::bench::report::Interval;
+use crate::obs::Registry;
 
 const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
 /// Sparkline width (most recent intervals shown).
@@ -16,6 +21,11 @@ const PANEL_LINES: usize = 4;
 /// Redraws a small metrics panel in place.
 pub struct Dashboard {
     drawn_once: bool,
+    /// `(t_s, completed)` at the previous observation, for the
+    /// throughput delta.
+    last: Option<(f64, f64)>,
+    /// Recent per-interval throughput (img/s), newest last.
+    rates: Vec<f64>,
 }
 
 impl Default for Dashboard {
@@ -26,16 +36,32 @@ impl Default for Dashboard {
 
 impl Dashboard {
     pub fn new() -> Self {
-        Dashboard { drawn_once: false }
+        Dashboard { drawn_once: false, last: None, rates: Vec::new() }
     }
 
-    /// Render the panel for the newest interval.  `history` is the full
-    /// interval list so far (newest last); `op_name` names the rung in
-    /// force at the snapshot.
-    pub fn render(&mut self, scenario: &str, history: &[Interval], op_name: &str) {
-        let Some(snap) = history.last() else {
-            return;
+    /// Sample the registry at bench time `t_s` and redraw the panel.
+    /// `op_name` names the ladder rung behind the `qos_nets_op_index`
+    /// gauge (the registry exports the index, not the name).
+    pub fn observe(&mut self, reg: &Registry, scenario: &str, t_s: f64, op_name: &str) {
+        let read = |name: &str| reg.value(name, &[]).unwrap_or(0.0);
+        let completed = read("qos_nets_requests_completed_total");
+        let submitted = read("qos_nets_requests_submitted_total");
+        let inflight = read("qos_nets_inflight");
+        let workers = read("qos_nets_workers");
+        let op = read("qos_nets_op_index");
+        let budget = read("qos_nets_power_budget");
+        let p99_us = reg.value("qos_nets_latency_us", &[("quantile", "0.99")]).unwrap_or(0.0);
+
+        let img_per_s = match self.last {
+            Some((t0, c0)) if t_s > t0 => (completed - c0) / (t_s - t0),
+            _ => 0.0,
         };
+        self.last = Some((t_s, completed));
+        self.rates.push(img_per_s);
+        if self.rates.len() > SPARK_WIDTH {
+            self.rates.remove(0);
+        }
+
         if self.drawn_once {
             // move back to the top of the panel and overwrite it
             print!("\x1b[{PANEL_LINES}A");
@@ -43,18 +69,14 @@ impl Dashboard {
         self.drawn_once = true;
         let clear = "\x1b[2K";
         println!(
-            "{clear}bench {scenario}  t={:>6.1}s  op={} ({op_name})  budget={:.2}",
-            snap.t_s, snap.op, snap.budget
+            "{clear}bench {scenario}  t={t_s:>6.1}s  op={} ({op_name})  budget={budget:.2}",
+            op as usize
         );
-        println!("{clear}  {:>8.1} img/s  {}", snap.img_per_s, sparkline(history));
-        println!(
-            "{clear}  p99<={:.2} ms (cumulative)  inflight={}",
-            snap.p99_us as f64 / 1e3,
-            snap.inflight
-        );
+        println!("{clear}  {img_per_s:>8.1} img/s  {}", sparkline(&self.rates));
+        println!("{clear}  p99<={:.2} ms (cumulative)  inflight={}", p99_us / 1e3, inflight as u64);
         println!(
             "{clear}  workers={}  submitted={}  completed={}",
-            snap.workers, snap.submitted, snap.completed
+            workers as usize, submitted as u64, completed as u64
         );
     }
 
@@ -68,16 +90,16 @@ impl Dashboard {
 
 /// Throughput sparkline over the most recent intervals, scaled to the
 /// window's own maximum.
-fn sparkline(history: &[Interval]) -> String {
-    let window = &history[history.len().saturating_sub(SPARK_WIDTH)..];
-    let max = window.iter().map(|i| i.img_per_s).fold(0.0f64, f64::max);
+fn sparkline(rates: &[f64]) -> String {
+    let window = &rates[rates.len().saturating_sub(SPARK_WIDTH)..];
+    let max = window.iter().copied().fold(0.0f64, f64::max);
     if max <= 0.0 {
         return SPARK[0].to_string().repeat(window.len().max(1));
     }
     window
         .iter()
-        .map(|i| {
-            let level = (i.img_per_s / max * (SPARK.len() - 1) as f64).round() as usize;
+        .map(|r| {
+            let level = (r / max * (SPARK.len() - 1) as f64).round() as usize;
             SPARK[level.min(SPARK.len() - 1)]
         })
         .collect()
@@ -87,14 +109,9 @@ fn sparkline(history: &[Interval]) -> String {
 mod tests {
     use super::*;
 
-    fn iv(img_per_s: f64) -> Interval {
-        Interval { img_per_s, ..Default::default() }
-    }
-
     #[test]
     fn sparkline_scales_to_the_window_max() {
-        let hist: Vec<Interval> = [0.0, 50.0, 100.0].into_iter().map(iv).collect();
-        let s: Vec<char> = sparkline(&hist).chars().collect();
+        let s: Vec<char> = sparkline(&[0.0, 50.0, 100.0]).chars().collect();
         assert_eq!(s.len(), 3);
         assert_eq!(s[0], SPARK[0]);
         assert_eq!(s[2], SPARK[7]);
@@ -102,9 +119,26 @@ mod tests {
 
     #[test]
     fn sparkline_windows_long_histories_and_survives_all_zero() {
-        let hist: Vec<Interval> = (0..100).map(|i| iv(i as f64)).collect();
+        let hist: Vec<f64> = (0..100).map(|i| i as f64).collect();
         assert_eq!(sparkline(&hist).chars().count(), SPARK_WIDTH);
-        let flat: Vec<Interval> = (0..3).map(|_| iv(0.0)).collect();
-        assert_eq!(sparkline(&flat).chars().count(), 3);
+        assert_eq!(sparkline(&[0.0, 0.0, 0.0]).chars().count(), 3);
+    }
+
+    #[test]
+    fn observe_derives_throughput_from_completed_deltas() {
+        use crate::obs::metrics::{Kind, MetricFamily, Sample};
+        fn completed(n: f64) -> Vec<MetricFamily> {
+            let s = vec![Sample::plain(n)];
+            vec![MetricFamily::new("qos_nets_requests_completed_total", "", Kind::Counter, s)]
+        }
+        let reg = Registry::default();
+        reg.register("t", || completed(200.0));
+        let mut d = Dashboard::new();
+        // first sample has no baseline: rate must be 0, not `completed/t`
+        d.observe(&reg, "unit", 1.0, "op0");
+        assert_eq!(d.rates, vec![0.0]);
+        reg.register("t", || completed(500.0));
+        d.observe(&reg, "unit", 3.0, "op0");
+        assert_eq!(d.rates[1], 150.0);
     }
 }

@@ -15,6 +15,7 @@
 
 use std::collections::VecDeque;
 use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
@@ -33,13 +34,14 @@ use crate::bench::scenario::{BackendKind, EventKind, QosSource, Scenario};
 use crate::bench::synthetic;
 use crate::fleet::worker::{self, WorkerHandle, WorkerOptions};
 use crate::fleet::{FleetBackend, FleetStats};
+use crate::obs::{self, metrics::{Kind, MetricFamily, Sample}, MetricsServer, ObsEvent};
 use crate::qos::envsim::{EnvConfig, EnvEvent, EnvSimulator};
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
 use crate::util::stats::LatencyHistogram;
 
 /// CLI-level overrides for one bench run.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct BenchOpts {
     /// Replaces the scenario's seed (recorded in provenance).
     pub seed: Option<u64>,
@@ -50,6 +52,9 @@ pub struct BenchOpts {
     /// Force the autopilot on/off; `None` = on iff the scenario
     /// declares `slo_p95_ms`.
     pub autopilot: Option<bool>,
+    /// Serve the Prometheus text endpoint here for the whole run
+    /// (both passes of an autopilot pairing share the listener).
+    pub metrics_addr: Option<String>,
 }
 
 /// Whether one pass actuates the autopilot or only observes the SLO.
@@ -173,6 +178,17 @@ impl SloTracker {
 /// report carries both trajectories.
 pub fn run_scenario(sc: &Scenario, opts: &BenchOpts) -> Result<BenchReport> {
     sc.validate()?;
+    // one listener outlives both passes of an autopilot pairing; the
+    // per-pass collectors re-register under the same ids, so a scrape
+    // always reflects the pass currently running
+    let _metrics = match opts.metrics_addr.as_deref() {
+        Some(addr) => {
+            let srv = MetricsServer::start(addr, None).context("bench metrics endpoint")?;
+            obs::log!(Info, "metrics endpoint on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let autopilot_on = match opts.autopilot {
         Some(on) => {
             anyhow::ensure!(
@@ -329,6 +345,26 @@ fn run_on<B: Backend + 'static>(
     let powers: Vec<f64> = server.ops().iter().map(|o| o.relative_power).collect();
     let op_names: Vec<String> = server.ops().iter().map(|o| o.name.clone()).collect();
 
+    // hand this pass's sources to the process-wide registry: event
+    // counters restart from zero, and the server/fleet/bench collectors
+    // replace the previous pass's by id, so a live scrape (and the
+    // dashboard, which reads the same registry) always reflects the
+    // pass in flight
+    let registry = obs::registry();
+    registry.reset_counters();
+    registry.register("server", server.metrics_collector());
+    match fleet.as_ref() {
+        Some(rig) => registry.register("fleet", rig.stats.metrics_collector()),
+        None => registry.unregister("fleet"),
+    }
+    let gauges = Arc::new(Mutex::new(BenchGauges::default()));
+    {
+        let g = Arc::clone(&gauges);
+        let powers = powers.clone();
+        let envelope = sc.power_envelope.unwrap_or(1.0);
+        registry.register("bench", move || bench_families(&g.lock().unwrap(), &powers, envelope));
+    }
+
     // SLO tracking runs whenever the scenario declares a p95 target;
     // the autopilot itself actuates only in `ApMode::Autopilot`.
     let slo_cfg = sc.slo_p95_ms.map(|slo| AutopilotConfig {
@@ -398,6 +434,11 @@ fn run_on<B: Backend + 'static>(
                         rig.control.set_operating_point(op, mode)?;
                     }
                     server.set_operating_point_with(op, mode)?;
+                    obs::publish(ObsEvent::OpSwitch {
+                        op,
+                        mode: mode_tag(mode).to_string(),
+                        trigger: "scripted".to_string(),
+                    });
                     timeline.push(SwitchRecord {
                         t_s,
                         op,
@@ -446,6 +487,11 @@ fn run_on<B: Backend + 'static>(
                     rig.control.set_operating_point(idx, mode)?;
                 }
                 server.set_operating_point_with(idx, mode)?;
+                obs::publish(ObsEvent::OpSwitch {
+                    op: idx,
+                    mode: mode_tag(mode).to_string(),
+                    trigger: "autopilot".to_string(),
+                });
                 timeline.push(SwitchRecord {
                     t_s,
                     op: idx,
@@ -477,6 +523,11 @@ fn run_on<B: Backend + 'static>(
                     rig.control.set_operating_point(idx, mode)?;
                 }
                 server.set_operating_point_with(idx, mode)?;
+                obs::publish(ObsEvent::OpSwitch {
+                    op: idx,
+                    mode: mode_tag(mode).to_string(),
+                    trigger: "budget".to_string(),
+                });
                 timeline.push(SwitchRecord {
                     t_s,
                     op: idx,
@@ -518,6 +569,15 @@ fn run_on<B: Backend + 'static>(
             std::thread::sleep(sleep.min(Duration::from_millis(5)));
         }
 
+        // refresh the bench-owned gauges once per tick so concurrent
+        // scrapes see the budget/OP the loop is actually running under
+        {
+            let mut g = gauges.lock().unwrap();
+            g.op = server.operating_point();
+            g.budget = budget;
+            g.submitted = submitted;
+        }
+
         // 4. interval snapshot
         if (i + 1) % ticks_per_interval == 0 || i + 1 == total_ticks {
             let m = server.metrics();
@@ -538,9 +598,11 @@ fn run_on<B: Backend + 'static>(
                 p99_us: m.latency.percentile_us(99.0),
             };
             last_completed = m.completed;
+            let snap_t_s = snap.t_s;
+            let snap_op = snap.op;
             intervals.push(snap);
             if ctx.dashboard {
-                dash.render(&sc.name, &intervals, &op_names[snap.op]);
+                dash.observe(registry, &sc.name, snap_t_s, &op_names[snap_op]);
             }
         }
     }
@@ -677,6 +739,54 @@ fn run_on<B: Backend + 'static>(
         autopilot,
         intervals,
     })
+}
+
+/// Driver-owned values the `"bench"` registry collector exposes (and
+/// the dashboard reads back): submitted count, live budget, OP in
+/// force.  Updated once per tick under a mutex the scrape thread
+/// shares.
+#[derive(Default)]
+struct BenchGauges {
+    op: usize,
+    budget: f64,
+    submitted: u64,
+}
+
+/// Metric families derived from [`BenchGauges`] plus the static ladder
+/// powers and scenario envelope.
+fn bench_families(g: &BenchGauges, powers: &[f64], envelope: f64) -> Vec<MetricFamily> {
+    vec![
+        MetricFamily::new(
+            "qos_nets_requests_submitted_total",
+            "Images the bench driver has submitted to the server.",
+            Kind::Counter,
+            vec![Sample::plain(g.submitted as f64)],
+        ),
+        MetricFamily::new(
+            "qos_nets_power_budget",
+            "Normalized power budget from the scenario's QoS source.",
+            Kind::Gauge,
+            vec![Sample::plain(g.budget)],
+        ),
+        MetricFamily::new(
+            "qos_nets_power_envelope",
+            "Power envelope the autopilot steers under (1.0 = unconstrained).",
+            Kind::Gauge,
+            vec![Sample::plain(envelope)],
+        ),
+        MetricFamily::new(
+            "qos_nets_op_index",
+            "Operating point currently in force (ladder index).",
+            Kind::Gauge,
+            vec![Sample::plain(g.op as f64)],
+        ),
+        MetricFamily::new(
+            "qos_nets_op_power",
+            "Relative power draw of the operating point in force.",
+            Kind::Gauge,
+            vec![Sample::plain(powers.get(g.op).copied().unwrap_or(0.0))],
+        ),
+    ]
 }
 
 fn mode_tag(mode: SwitchMode) -> &'static str {

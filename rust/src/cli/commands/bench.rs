@@ -6,8 +6,10 @@
 //! the versioned `BENCH_<scenario>.json` perf record.  `--seed` and
 //! `--secs` override the scenario without editing it (both are
 //! recorded in the report's provenance), `--dashboard` renders the
-//! live ANSI panel, `--list` and `--print-scenario` introspect the
-//! built-ins without running anything.
+//! live ANSI panel, `--metrics-addr HOST:PORT` serves the Prometheus
+//! text endpoint while the run is in flight, `--list` and
+//! `--print-scenario` introspect the built-ins without running
+//! anything.
 
 use std::path::PathBuf;
 
@@ -52,7 +54,11 @@ pub fn run(args: &Args) -> Result<()> {
         secs: args.get("secs").and_then(|s| s.parse().ok()),
         dashboard: args.has("dashboard"),
         autopilot,
+        metrics_addr: args.get("metrics-addr").map(str::to_string),
     };
+    if let Some(addr) = opts.metrics_addr.as_deref() {
+        println!("metrics: will serve http://{addr}/metrics for the duration of the run");
+    }
     println!(
         "bench {}: {} (seed {}, {:.1}s)",
         sc.name,

@@ -16,8 +16,17 @@
 //! that announced themselves via `worker --join`.  `--pipeline N` pins
 //! the per-connection in-flight Forward window (default: library
 //! default or the `QOS_NETS_FLEET_PIPELINE` override).
+//!
+//! Observability: `--metrics-addr HOST:PORT` serves the Prometheus
+//! text endpoint (server, fleet and event-counter families) for the
+//! duration of the run; `--flight-recorder [DIR]` attaches the event
+//! ring and dumps it to a versioned JSON file on SLO violations (with
+//! a cooldown), on fleet evictions, and on operator request
+//! (`GET /dump` on the metrics endpoint).
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -29,6 +38,7 @@ use crate::backend::{Backend, NativeBackend, OpTable};
 use crate::cli::commands::{fleet_addrs, load_db, load_experiment, native_kernel};
 use crate::cli::Args;
 use crate::fleet::{FleetBackend, FleetRegistry, FleetStats};
+use crate::obs::{self, MetricsServer, ObsEvent, Recorder};
 use crate::pipeline::Experiment;
 use crate::plan::OpPlan;
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
@@ -223,6 +233,33 @@ fn drive<B: Backend + 'static>(
     let rate = args.get_f64("rate", 200.0); // requests/second
     let trace_kind = args.get_or("trace", "sine");
 
+    // --flight-recorder [DIR]: ring-buffer the event stream and dump
+    // it on SLO violations, evictions, or operator request
+    let recorder = if args.has("flight-recorder") {
+        let dir = PathBuf::from(args.get_or("flight-recorder", "."));
+        let rec = Arc::new(Recorder::with_defaults());
+        obs::attach_recorder(rec.clone());
+        println!("flight recorder armed (dumps to {})", dir.display());
+        Some((rec, dir))
+    } else {
+        None
+    };
+    // --metrics-addr HOST:PORT: Prometheus text endpoint; the same
+    // registry the final report numbers come from
+    let _metrics = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = MetricsServer::start(addr, recorder.as_ref().map(|(r, _)| r.clone()))?;
+            println!("metrics endpoint on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    obs::registry().register("server", server.metrics_collector());
+    match fleet.as_ref() {
+        Some((_, stats, _)) => obs::registry().register("fleet", stats.metrics_collector()),
+        None => obs::registry().unregister("fleet"),
+    }
+
     let (images, _) = exp.load_testset()?;
     let elems = exp.image_elems();
     let n_img = images.len() / elems;
@@ -246,6 +283,13 @@ fn drive<B: Backend + 'static>(
     // histograms, differenced against the oldest entry)
     let mut hist: VecDeque<LatencyHistogram> = VecDeque::new();
     const WINDOW_STEPS: usize = 10;
+    // flight-dump trigger state: violation/eviction high-water marks,
+    // plus a dump cooldown so a sustained SLO breach writes one file
+    // every ~5 s instead of one per 50 ms step
+    const DUMP_COOLDOWN_STEPS: usize = 100;
+    let mut seen_violations = 0u64;
+    let mut seen_evictions = 0u64;
+    let mut last_slo_dump: Option<usize> = None;
     for (step, &budget) in trace.iter().enumerate() {
         let switch = match pilot.as_mut() {
             Some(rig) => {
@@ -296,6 +340,21 @@ fn drive<B: Backend + 'static>(
                         d.chunk_action.as_str()
                     );
                 }
+                if let Some((rec, dir)) = recorder.as_ref() {
+                    if rig.pilot.slo_violations > seen_violations {
+                        seen_violations = rig.pilot.slo_violations;
+                        if last_slo_dump.is_none_or(|s| step - s >= DUMP_COOLDOWN_STEPS) {
+                            last_slo_dump = Some(step);
+                            obs::note_flight_dump("slo_violation");
+                            match rec.dump_to(dir, "slo_violation") {
+                                Ok(p) => {
+                                    println!("flight recorder: SLO violation -> {}", p.display())
+                                }
+                                Err(e) => obs::log!(Error, "flight dump failed: {e:#}"),
+                            }
+                        }
+                    }
+                }
                 out.switch
             }
             None => controller.observe_with_mode(budget, Instant::now()),
@@ -313,8 +372,18 @@ fn drive<B: Backend + 'static>(
                 }
             }
             server.set_operating_point_with(idx, mode)?;
+            let piloted = pilot.is_some();
+            obs::publish(ObsEvent::OpSwitch {
+                op: idx,
+                mode: match mode {
+                    SwitchMode::Drain => "drain",
+                    SwitchMode::Immediate => "immediate",
+                }
+                .to_string(),
+                trigger: if piloted { "autopilot" } else { "budget" }.to_string(),
+            });
         }
-        if let Some((control, _, registry)) = fleet.as_mut() {
+        if let Some((control, stats, registry)) = fleet.as_mut() {
             if step as u64 % hb_every == hb_every - 1 {
                 control.heartbeat(hb_timeout);
                 // grow: workers that announced via `worker --join`
@@ -330,6 +399,20 @@ fn drive<B: Backend + 'static>(
                 let rejoined = control.reprobe();
                 if rejoined > 0 {
                     println!("fleet: {rejoined} evicted worker(s) rejoined");
+                }
+                // any new eviction since the last probe flushes the
+                // flight ring (membership loss is exactly the moment
+                // the preceding seconds of events matter)
+                if let Some((rec, dir)) = recorder.as_ref() {
+                    let (_, _, evictions) = stats.snapshot();
+                    if evictions > seen_evictions {
+                        seen_evictions = evictions;
+                        obs::note_flight_dump("eviction");
+                        match rec.dump_to(dir, "eviction") {
+                            Ok(p) => println!("flight recorder: eviction -> {}", p.display()),
+                            Err(e) => obs::log!(Error, "flight dump failed: {e:#}"),
+                        }
+                    }
                 }
             }
         }
@@ -436,7 +519,21 @@ fn drive<B: Backend + 'static>(
                 w.ewma_img_us,
                 w.errors,
             );
+            // transport-health line: the counters the eviction /
+            // requeue / drain-barrier machinery accumulated
+            let mean_drain_ms = if w.drain_waits > 0 {
+                w.drain_wait_us as f64 / w.drain_waits as f64 / 1e3
+            } else {
+                0.0
+            };
+            println!(
+                "      hb-misses={} requeued-chunks={} drain-waits={} (mean {:.2}ms)",
+                w.hb_misses, w.requeues, w.drain_waits, mean_drain_ms,
+            );
         }
+    }
+    if let Some((rec, _)) = &recorder {
+        obs::detach_recorder(rec);
     }
     Ok(())
 }

@@ -87,6 +87,7 @@ COMMANDS
             [--fleet H:P,H:P,...] [--pipeline N] [--registry ADDR]
             [--retag-downgrades]
             [--autopilot [--slo-p95-ms MS] [--power-envelope F]]
+            [--metrics-addr HOST:PORT] [--flight-recorder [DIR]]
                                 QoS serving demo: elastic batching server
                                 with a power-budget trace driving OP
                                 switches (draining upgrades / immediate
@@ -112,7 +113,12 @@ COMMANDS
                                 100) under --power-envelope (default 1.0
                                 = env budget only), shedding accuracy
                                 before latency and recovering accuracy
-                                only after sustained headroom)
+                                only after sustained headroom;
+                                --metrics-addr serves the Prometheus
+                                text endpoint for the run's duration,
+                                --flight-recorder arms the event ring —
+                                dumped to DIR (default .) on SLO
+                                violations, evictions, and GET /dump)
   worker    --exp E [--listen ADDR] [--backend B] [--mode M] [--kernel K]
             [--hb-interval-ms N] [--hb-timeout-ms N]
             [--join HOST:PORT] [--advertise ADDR]
@@ -129,6 +135,7 @@ COMMANDS
                                 overrides the announced address)
   bench     --scenario NAME|FILE.json [--seed N] [--secs S] [--out FILE]
             [--dashboard] [--list] [--print-scenario] [--autopilot on|off]
+            [--metrics-addr HOST:PORT]
                                 scenario-driven load harness: replays a
                                 seeded open-loop arrival trace against
                                 the deployment the scenario describes
@@ -144,7 +151,10 @@ COMMANDS
                                 on|off) and run twice on one seed, so
                                 the report carries the closed-loop
                                 decision log plus the uncontrolled
-                                baseline p95 timeline
+                                baseline p95 timeline; --metrics-addr
+                                serves the Prometheus text endpoint
+                                (same registry the --dashboard panel
+                                reads) while the run is in flight
   plan      diff A.json B.json [--json]
                                 compare two stored OpPlans: per-layer
                                 assignment deltas per OP, per-OP power

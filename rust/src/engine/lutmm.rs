@@ -666,7 +666,9 @@ pub fn default_kernel() -> Arc<dyn LutKernel> {
         if !name.is_empty() {
             match kernel_by_name(&name) {
                 Ok(k) => return k,
-                Err(e) => eprintln!("warning: {KERNEL_ENV}={name}: {e}; using auto-detection"),
+                Err(e) => {
+                    crate::obs::log!(Warn, "{KERNEL_ENV}={name}: {e}; using auto-detection")
+                }
             }
         }
     }

@@ -199,6 +199,7 @@ impl Engine {
         if images.len() != expect {
             bail!("input size {} != expected {}", images.len(), expect);
         }
+        let span_t0 = crate::obs::recording().then(std::time::Instant::now);
         let mut vals: HashMap<usize, Act> = HashMap::new();
         vals.insert(
             0,
@@ -290,6 +291,13 @@ impl Engine {
                     vals.remove(&inp);
                 }
             }
+        }
+        if let Some(t0) = span_t0 {
+            crate::obs::publish(crate::obs::ObsEvent::EngineForward {
+                op: op.name.clone(),
+                images: batch,
+                dur_us: t0.elapsed().as_micros() as u64,
+            });
         }
         Ok(logits.context("no output produced")?.data)
     }

@@ -52,6 +52,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::backend::Backend;
 use crate::engine::OperatingPoint;
 use crate::fleet::wire::{self, Frame, LadderRung, PROTOCOL_VERSION};
+use crate::obs::{self, member_state_str, metrics::{Kind, MetricFamily, Sample}, ObsEvent};
 use crate::qos::SwitchMode;
 
 /// Default socket read/write timeout for data-plane calls; a hung
@@ -124,6 +125,19 @@ pub struct WorkerStats {
     /// EWMA of per-image forward latency, microseconds (0 until the
     /// first successful chunk); drives latency-aware chunk sizing.
     pub ewma_img_us: f64,
+    /// Heartbeat probes this worker failed to answer.
+    pub hb_misses: u64,
+    /// Chunks lost to transport failures on this worker (each went
+    /// back onto the shared queue for a survivor to serve).
+    pub requeues: u64,
+    /// Drain barriers this worker acked (OP switches + explicit
+    /// drains).
+    pub drain_waits: u64,
+    /// Cumulative time the coordinator spent waiting on this worker's
+    /// drain-barrier acks, microseconds.
+    pub drain_wait_us: u64,
+    /// Forwards currently in flight on this worker's connection.
+    pub inflight: u64,
     /// Epoch whose eviction has already been counted (dedup across
     /// heartbeat + data plane + multiple backends).
     counted_epoch: Option<u64>,
@@ -237,46 +251,92 @@ impl FleetStats {
     /// worker failing heartbeat and forward in the same tick — or
     /// observed dead by several backends — still counts once.
     fn report_failure(&self, addr: &str) -> MemberState {
-        let mut guard = self.inner.lock().unwrap();
-        let inner = &mut *guard;
-        let w = inner.workers.entry(addr.to_string()).or_default();
-        w.errors += 1;
-        w.state = match w.state {
-            MemberState::Live => MemberState::Suspect,
-            MemberState::Suspect | MemberState::Rejoining | MemberState::Evicted => {
-                if w.counted_epoch != Some(w.epoch) {
-                    w.counted_epoch = Some(w.epoch);
-                    inner.evictions += 1;
+        let (from, to) = {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            let w = inner.workers.entry(addr.to_string()).or_default();
+            w.errors += 1;
+            let from = w.state;
+            w.state = match w.state {
+                MemberState::Live => MemberState::Suspect,
+                MemberState::Suspect | MemberState::Rejoining | MemberState::Evicted => {
+                    if w.counted_epoch != Some(w.epoch) {
+                        w.counted_epoch = Some(w.epoch);
+                        inner.evictions += 1;
+                    }
+                    w.evicted = true;
+                    MemberState::Evicted
                 }
-                w.evicted = true;
-                MemberState::Evicted
-            }
+            };
+            (from, w.state)
         };
-        w.state
+        if from != to {
+            obs::publish(ObsEvent::Membership {
+                addr: addr.to_string(),
+                from: member_state_str(from).to_string(),
+                to: member_state_str(to).to_string(),
+            });
+        }
+        to
     }
 
     /// A fresh handshake completed: back to `Live`, opening the next
     /// membership epoch.  Counters (requests, latency, EWMA) persist
     /// across the round trip — a rejoining worker keeps its history.
     fn mark_live(&self, addr: &str) {
+        let mut from = None;
         self.with_worker(addr, |w| {
             if w.state != MemberState::Live {
                 if matches!(w.state, MemberState::Evicted | MemberState::Rejoining) {
                     w.rejoins += 1;
                 }
+                from = Some(w.state);
                 w.state = MemberState::Live;
                 w.evicted = false;
                 w.epoch += 1;
             }
         });
+        if let Some(from) = from {
+            obs::publish(ObsEvent::Membership {
+                addr: addr.to_string(),
+                from: member_state_str(from).to_string(),
+                to: "live".to_string(),
+            });
+        }
     }
 
     /// Flag an evicted worker as having a re-probe in progress.
     fn set_rejoining(&self, addr: &str) {
+        let mut moved = false;
         self.with_worker(addr, |w| {
             if w.state == MemberState::Evicted {
                 w.state = MemberState::Rejoining;
+                moved = true;
             }
+        });
+        if moved {
+            obs::publish(ObsEvent::Membership {
+                addr: addr.to_string(),
+                from: "evicted".to_string(),
+                to: "rejoining".to_string(),
+            });
+        }
+    }
+
+    /// A heartbeat probe went unanswered: bump the worker's miss
+    /// counter and publish the event (failure bookkeeping stays in
+    /// [`fail`]/[`FleetStats::report_failure`]).
+    fn record_hb_miss(&self, addr: &str) {
+        self.with_worker(addr, |w| w.hb_misses += 1);
+        obs::publish(ObsEvent::HeartbeatMiss { addr: addr.to_string() });
+    }
+
+    /// Fold one acked drain barrier (OP switch or explicit drain) into
+    /// the worker's wait accounting.
+    fn record_drain_wait(&self, addr: &str, waited_us: u64) {
+        self.with_worker(addr, |w| {
+            w.drain_waits += 1;
+            w.drain_wait_us += waited_us;
         });
     }
 
@@ -289,6 +349,120 @@ impl FleetStats {
             inner.requeues,
             inner.evictions,
         )
+    }
+
+    /// A scrape-time collector for [`crate::obs::Registry::register`]:
+    /// membership gauges plus per-worker attribution series, read from
+    /// this registry when the endpoint is scraped (the same snapshot
+    /// the `serve --fleet` report prints).
+    pub fn metrics_collector(&self) -> impl Fn() -> Vec<MetricFamily> + Send + Sync + 'static {
+        let stats = self.clone();
+        move || {
+            let (workers, _, _) = stats.snapshot();
+            let mut by_state = [0usize; 4];
+            for (_, w) in &workers {
+                let slot = match w.state {
+                    MemberState::Live => 0,
+                    MemberState::Suspect => 1,
+                    MemberState::Evicted => 2,
+                    MemberState::Rejoining => 3,
+                };
+                by_state[slot] += 1;
+            }
+            let states = ["live", "suspect", "evicted", "rejoining"];
+            let mut fams = vec![
+                MetricFamily::new(
+                    "qos_nets_fleet_workers",
+                    "Fleet workers by membership state.",
+                    Kind::Gauge,
+                    states
+                        .iter()
+                        .zip(by_state)
+                        .map(|(s, n)| Sample::with(&[("state", s)], n as f64))
+                        .collect(),
+                ),
+                MetricFamily::new(
+                    "qos_nets_fleet_chunk_quantum_us",
+                    "Per-chunk service-time quantum in force, microseconds.",
+                    Kind::Gauge,
+                    vec![Sample::plain(stats.chunk_quantum_us())],
+                ),
+            ];
+            let per_worker: [(&str, &str, Kind, fn(&WorkerStats) -> f64); 10] = [
+                (
+                    "qos_nets_fleet_worker_requests_total",
+                    "Images served per fleet worker.",
+                    Kind::Counter,
+                    |w| w.requests as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_chunks_total",
+                    "Forward chunks served per fleet worker.",
+                    Kind::Counter,
+                    |w| w.batches as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_errors_total",
+                    "I/O and protocol failures per fleet worker.",
+                    Kind::Counter,
+                    |w| w.errors as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_rejoins_total",
+                    "Completed eviction-to-live round trips per fleet worker.",
+                    Kind::Counter,
+                    |w| w.rejoins as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_hb_misses_total",
+                    "Unanswered heartbeat probes per fleet worker.",
+                    Kind::Counter,
+                    |w| w.hb_misses as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_requeues_total",
+                    "Chunks lost to transport failures per fleet worker.",
+                    Kind::Counter,
+                    |w| w.requeues as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_drain_waits_total",
+                    "Drain barriers acked per fleet worker.",
+                    Kind::Counter,
+                    |w| w.drain_waits as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_drain_wait_us_total",
+                    "Cumulative drain-barrier wait per fleet worker, microseconds.",
+                    Kind::Counter,
+                    |w| w.drain_wait_us as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_ewma_img_us",
+                    "EWMA per-image forward latency per fleet worker, microseconds.",
+                    Kind::Gauge,
+                    |w| w.ewma_img_us,
+                ),
+                (
+                    "qos_nets_fleet_worker_inflight",
+                    "Forwards in flight per fleet worker connection.",
+                    Kind::Gauge,
+                    |w| w.inflight as f64,
+                ),
+            ];
+            for (name, help, kind, get) in per_worker {
+                fams.push(MetricFamily::new(
+                    name,
+                    help,
+                    kind,
+                    workers
+                        .iter()
+                        .map(|(addr, w)| Sample::with(&[("addr", addr)], get(w)))
+                        .collect(),
+                ));
+            }
+            fams
+        }
     }
 }
 
@@ -492,10 +666,12 @@ fn peer_pump(
             let frame = Frame::Forward { id: Some(next_id), op: Some(op_idx), batch: chunk.len };
             let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
             if wire::write_frame(&mut stream, &frame, data).is_err() {
+                stats.with_worker(&addr, |w| w.requeues += 1);
                 out.push((chunk, ChunkOutcome::Io));
                 healthy = false;
                 break;
             }
+            stats.with_worker(&addr, |w| w.inflight += 1);
             inflight.push_back((next_id, chunk, Instant::now()));
             next_id += 1;
         }
@@ -506,7 +682,17 @@ fn peer_pump(
             Ok((Frame::Logits { id, .. }, logits)) => match find(&inflight, id) {
                 Some(pos) => {
                     let (_, chunk, t0) = inflight.remove(pos).expect("indexed in-flight entry");
-                    stats.record_success(&addr, chunk.len, t0.elapsed().as_micros() as u64);
+                    let latency_us = t0.elapsed().as_micros() as u64;
+                    stats.with_worker(&addr, |w| w.inflight = w.inflight.saturating_sub(1));
+                    stats.record_success(&addr, chunk.len, latency_us);
+                    if obs::recording() {
+                        obs::publish(ObsEvent::FleetChunk {
+                            addr: addr.clone(),
+                            op: op_idx,
+                            images: chunk.len,
+                            latency_us,
+                        });
+                    }
                     out.push((chunk, ChunkOutcome::Logits(logits)));
                 }
                 None => healthy = false, // reply for nothing in flight
@@ -514,7 +700,10 @@ fn peer_pump(
             Ok((Frame::Err { id, message }, _)) => match find(&inflight, id) {
                 Some(pos) => {
                     let (_, chunk, _) = inflight.remove(pos).expect("indexed in-flight entry");
-                    stats.with_worker(&addr, |w| w.errors += 1);
+                    stats.with_worker(&addr, |w| {
+                        w.errors += 1;
+                        w.inflight = w.inflight.saturating_sub(1);
+                    });
                     out.push((chunk, ChunkOutcome::App(message)));
                     pulling = false;
                 }
@@ -526,6 +715,11 @@ fn peer_pump(
     if healthy {
         peer.stream = Some(stream);
     } else {
+        let lost = inflight.len() as u64;
+        stats.with_worker(&addr, |w| {
+            w.inflight = w.inflight.saturating_sub(lost);
+            w.requeues += lost;
+        });
         for (_, chunk, _) in inflight {
             out.push((chunk, ChunkOutcome::Io));
         }
@@ -862,6 +1056,11 @@ impl FleetBackend {
         }
         if !drain {
             self.current_op = Some(op);
+            obs::publish(ObsEvent::OpSwitch {
+                op,
+                mode: "immediate".to_string(),
+                trigger: "fleet".to_string(),
+            });
             return Ok(sent.len());
         }
         // collect one ack per worker *before* reporting any failure —
@@ -872,8 +1071,12 @@ impl FleetBackend {
         for i in sent {
             let peer = &mut self.peers[i];
             let Some(stream) = peer.stream.as_mut() else { continue };
+            let t0 = Instant::now();
             match wire::read_frame(stream) {
-                Ok((Frame::Ok, _)) => acks += 1,
+                Ok((Frame::Ok, _)) => {
+                    acks += 1;
+                    stats.record_drain_wait(&peer.addr, t0.elapsed().as_micros() as u64);
+                }
                 Ok((other, _)) => {
                     // a worker that rejects (or mangles) the switch
                     // leaves the live set: keeping it serving a
@@ -898,6 +1101,15 @@ impl FleetBackend {
             bail!("fleet: every worker died during the drain switch");
         }
         self.current_op = Some(op);
+        // published only after every surviving worker acked its
+        // barrier, so recorded event order reflects the guarantee:
+        // pre-switch FleetChunk events precede this, post-switch ones
+        // follow it
+        obs::publish(ObsEvent::OpSwitch {
+            op,
+            mode: "drain".to_string(),
+            trigger: "fleet".to_string(),
+        });
         Ok(acks)
     }
 
@@ -915,6 +1127,7 @@ impl FleetBackend {
             if ok {
                 stream.set_read_timeout(Some(self.io_timeout)).ok();
             } else {
+                stats.record_hb_miss(&peer.addr);
                 fail(peer, &stats);
             }
         }
@@ -942,8 +1155,12 @@ impl FleetBackend {
             if peer.stream.is_none() {
                 continue;
             }
+            let t0 = Instant::now();
             match call(peer, &stats, &Frame::Drain, &[]) {
-                Ok((Frame::Ok, _)) => acks += 1,
+                Ok((Frame::Ok, _)) => {
+                    acks += 1;
+                    stats.record_drain_wait(&peer.addr, t0.elapsed().as_micros() as u64);
+                }
                 Ok((Frame::Err { message, .. }, _)) => {
                     bail!("fleet worker {} failed to drain: {message}", peer.addr)
                 }
@@ -1101,6 +1318,7 @@ impl Backend for FleetBackend {
                             );
                         }
                         self.stats.record_requeue();
+                        obs::publish(ObsEvent::Requeue { images: chunk.len, attempts });
                         pending.push_back(Chunk { attempts, ..chunk });
                     }
                 }

@@ -52,6 +52,7 @@ use crate::engine::OperatingPoint;
 use crate::fleet::wire::{
     self, Frame, LadderRung, DEFAULT_HB_INTERVAL_MS, DEFAULT_HB_TIMEOUT_MS, PROTOCOL_VERSION,
 };
+use crate::obs::{self, ObsEvent};
 
 /// Pipelining capability one worker connection advertises in
 /// `HelloAck`: the queue between the reader and the compute half is
@@ -109,6 +110,7 @@ impl Gate {
     /// issuing barriers at once) keep their writer preference even
     /// after the first drain clears the flag.
     fn drain<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
         let mut g = self.state.lock().unwrap();
         loop {
             g.draining = true;
@@ -117,6 +119,7 @@ impl Gate {
             }
             g = self.cv.wait(g).unwrap();
         }
+        obs::publish(ObsEvent::WorkerBarrier { waited_us: t0.elapsed().as_micros() as u64 });
         let out = f();
         g.draining = false;
         drop(g);

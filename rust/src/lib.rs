@@ -44,6 +44,9 @@
 //!   * [`bench`]     scenario-driven load harness: replayable arrival
 //!     traces, scripted QoS/environment events, versioned
 //!     `BENCH_*.json` perf-trajectory reports, live dashboard
+//!   * [`obs`]       unified observability: event bus, flight
+//!     recorder, Prometheus-text metrics registry + scrape endpoint,
+//!     leveled `obs::log!` diagnostics
 //!   * [`pipeline`]  artifact-level orchestration
 //!   * [`cli`]       flag parsing + subcommands for the `qos-nets` binary
 //!   * [`util`]      JSON / tensor IO / PRNG / stats substrates
@@ -58,6 +61,7 @@ pub mod errmodel;
 pub mod fleet;
 pub mod muldb;
 pub mod nn;
+pub mod obs;
 pub mod pipeline;
 pub mod plan;
 pub mod qos;

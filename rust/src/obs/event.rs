@@ -1,0 +1,317 @@
+//! The event taxonomy: everything the serving stack can tell the
+//! flight recorder, as one flat enum with a stable JSON encoding.
+//!
+//! Events are *facts about transitions*, not samples: a batch was
+//! formed, a switch completed, a worker moved through the membership
+//! machine.  Continuous signals (latency quantiles, queue depth,
+//! gauges) live in [`crate::obs::metrics`] instead — the recorder is
+//! for reconstructing *why* a transition happened, the registry for
+//! watching *what it costs*.
+//!
+//! [`EventRecord`] wraps an event with the process-monotonic timestamp
+//! and the bus sequence number assigned at publish time; the pair is
+//! what the flight-recorder dump serializes, and
+//! [`EventRecord::from_json`] inverts the encoding exactly (pinned by
+//! the round-trip tests in `rust/tests/obs.rs`).
+
+use crate::util::json::Json;
+
+/// One observability event.  String fields hold the stable lowercase
+/// encodings the rest of the system already uses (`SwitchMode` as
+/// `"drain"`/`"immediate"`, autopilot actions via their `as_str`,
+/// membership states via [`crate::obs::member_state_str`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    /// The batcher flushed a batch toward the worker pool.
+    BatchFormed {
+        /// Batcher-assigned batch sequence number.
+        batch: u64,
+        /// `OpTable` index the batch was stamped with at formation.
+        op: usize,
+        size: usize,
+    },
+    /// A pool worker finished a batch (after any retag).
+    BatchDone {
+        batch: u64,
+        /// `OpTable` index the batch actually ran under.
+        op: usize,
+        size: usize,
+        /// Submit-to-done latency of the batch's oldest request.
+        latency_us: u64,
+        /// Retagged to a cheaper OP at execution time.
+        retagged: bool,
+    },
+    /// The native engine completed one forward pass (kernel span).
+    EngineForward {
+        /// Operating-point name.
+        op: String,
+        images: usize,
+        dur_us: u64,
+    },
+    /// The fleet coordinator gathered one chunk from a remote worker.
+    FleetChunk {
+        addr: String,
+        /// `OpTable` index the chunk was forwarded under.
+        op: usize,
+        images: usize,
+        latency_us: u64,
+    },
+    /// An operating-point switch completed (for `drain` mode this is
+    /// published *after* the barrier ack, so event order reflects the
+    /// barrier's guarantee).
+    OpSwitch {
+        /// Destination `OpTable` index.
+        op: usize,
+        /// `"drain"` or `"immediate"`.
+        mode: String,
+        /// What drove the switch: `"budget"`, `"autopilot"`,
+        /// `"scripted"`, `"operator"`, or `"fleet"` for the
+        /// coordinator-side broadcast.
+        trigger: String,
+    },
+    /// One autopilot control tick, with the per-axis actions it chose.
+    AutopilotDecision {
+        t_s: f64,
+        p95_ms: f64,
+        /// `OpTable` index after the tick.
+        op: usize,
+        workers: usize,
+        op_action: String,
+        pool_action: String,
+        chunk_action: String,
+        bound: String,
+    },
+    /// The elastic supervisor changed the pool: `"up"`, `"down"` or
+    /// `"spawn_failure"`.
+    ScaleAction { action: String, workers: usize },
+    /// A fleet worker moved through the membership state machine.
+    Membership { addr: String, from: String, to: String },
+    /// A heartbeat probe went unanswered.
+    HeartbeatMiss { addr: String },
+    /// A chunk lost to a transport failure went back on the queue.
+    Requeue { images: usize, attempts: usize },
+    /// A worker-side drain barrier completed after waiting out its
+    /// in-flight forwards.
+    WorkerBarrier { waited_us: u64 },
+    /// A leveled diagnostic from `obs::log!` (recorded even when the
+    /// `QOS_NETS_LOG` gate keeps it off stderr).
+    Log { level: String, module: String, message: String },
+}
+
+impl ObsEvent {
+    /// Stable JSON discriminator for this event.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ObsEvent::BatchFormed { .. } => "batch_formed",
+            ObsEvent::BatchDone { .. } => "batch_done",
+            ObsEvent::EngineForward { .. } => "engine_forward",
+            ObsEvent::FleetChunk { .. } => "fleet_chunk",
+            ObsEvent::OpSwitch { .. } => "op_switch",
+            ObsEvent::AutopilotDecision { .. } => "autopilot_decision",
+            ObsEvent::ScaleAction { .. } => "scale_action",
+            ObsEvent::Membership { .. } => "membership",
+            ObsEvent::HeartbeatMiss { .. } => "heartbeat_miss",
+            ObsEvent::Requeue { .. } => "requeue",
+            ObsEvent::WorkerBarrier { .. } => "worker_barrier",
+            ObsEvent::Log { .. } => "log",
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        match self {
+            ObsEvent::BatchFormed { batch, op, size } => vec![
+                ("batch", Json::num(*batch as f64)),
+                ("op", Json::num(*op as f64)),
+                ("size", Json::num(*size as f64)),
+            ],
+            ObsEvent::BatchDone { batch, op, size, latency_us, retagged } => vec![
+                ("batch", Json::num(*batch as f64)),
+                ("op", Json::num(*op as f64)),
+                ("size", Json::num(*size as f64)),
+                ("latency_us", Json::num(*latency_us as f64)),
+                ("retagged", Json::Bool(*retagged)),
+            ],
+            ObsEvent::EngineForward { op, images, dur_us } => vec![
+                ("op", Json::str(op.clone())),
+                ("images", Json::num(*images as f64)),
+                ("dur_us", Json::num(*dur_us as f64)),
+            ],
+            ObsEvent::FleetChunk { addr, op, images, latency_us } => vec![
+                ("addr", Json::str(addr.clone())),
+                ("op", Json::num(*op as f64)),
+                ("images", Json::num(*images as f64)),
+                ("latency_us", Json::num(*latency_us as f64)),
+            ],
+            ObsEvent::OpSwitch { op, mode, trigger } => vec![
+                ("op", Json::num(*op as f64)),
+                ("mode", Json::str(mode.clone())),
+                ("trigger", Json::str(trigger.clone())),
+            ],
+            ObsEvent::AutopilotDecision {
+                t_s,
+                p95_ms,
+                op,
+                workers,
+                op_action,
+                pool_action,
+                chunk_action,
+                bound,
+            } => vec![
+                ("t_s", Json::num(*t_s)),
+                ("p95_ms", Json::num(*p95_ms)),
+                ("op", Json::num(*op as f64)),
+                ("workers", Json::num(*workers as f64)),
+                ("op_action", Json::str(op_action.clone())),
+                ("pool_action", Json::str(pool_action.clone())),
+                ("chunk_action", Json::str(chunk_action.clone())),
+                ("bound", Json::str(bound.clone())),
+            ],
+            ObsEvent::ScaleAction { action, workers } => vec![
+                ("action", Json::str(action.clone())),
+                ("workers", Json::num(*workers as f64)),
+            ],
+            ObsEvent::Membership { addr, from, to } => vec![
+                ("addr", Json::str(addr.clone())),
+                ("from", Json::str(from.clone())),
+                ("to", Json::str(to.clone())),
+            ],
+            ObsEvent::HeartbeatMiss { addr } => vec![("addr", Json::str(addr.clone()))],
+            ObsEvent::Requeue { images, attempts } => vec![
+                ("images", Json::num(*images as f64)),
+                ("attempts", Json::num(*attempts as f64)),
+            ],
+            ObsEvent::WorkerBarrier { waited_us } => {
+                vec![("waited_us", Json::num(*waited_us as f64))]
+            }
+            ObsEvent::Log { level, module, message } => vec![
+                ("level", Json::str(level.clone())),
+                ("module", Json::str(module.clone())),
+                ("message", Json::str(message.clone())),
+            ],
+        }
+    }
+
+    /// Serialize as a flat object: `{"kind": ..., <fields>}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::str(self.kind().to_string()))];
+        pairs.extend(self.fields());
+        Json::obj(pairs)
+    }
+
+    /// Parse the encoding [`to_json`](Self::to_json) produces; unknown
+    /// kinds and missing fields are errors (a dump that drifted from
+    /// this build's taxonomy should fail loudly, not chart garbage).
+    pub fn from_json(v: &Json) -> Result<ObsEvent, String> {
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("event: missing or non-numeric {key:?}"))
+        };
+        let s = |key: &str| -> Result<String, String> {
+            v.get(key)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("event: missing or non-string {key:?}"))
+        };
+        let kind = s("kind")?;
+        Ok(match kind.as_str() {
+            "batch_formed" => ObsEvent::BatchFormed {
+                batch: f("batch")? as u64,
+                op: f("op")? as usize,
+                size: f("size")? as usize,
+            },
+            "batch_done" => ObsEvent::BatchDone {
+                batch: f("batch")? as u64,
+                op: f("op")? as usize,
+                size: f("size")? as usize,
+                latency_us: f("latency_us")? as u64,
+                retagged: v.get("retagged").and_then(|x| x.as_bool()).unwrap_or(false),
+            },
+            "engine_forward" => ObsEvent::EngineForward {
+                op: s("op")?,
+                images: f("images")? as usize,
+                dur_us: f("dur_us")? as u64,
+            },
+            "fleet_chunk" => ObsEvent::FleetChunk {
+                addr: s("addr")?,
+                op: f("op")? as usize,
+                images: f("images")? as usize,
+                latency_us: f("latency_us")? as u64,
+            },
+            "op_switch" => ObsEvent::OpSwitch {
+                op: f("op")? as usize,
+                mode: s("mode")?,
+                trigger: s("trigger")?,
+            },
+            "autopilot_decision" => ObsEvent::AutopilotDecision {
+                t_s: f("t_s")?,
+                p95_ms: f("p95_ms")?,
+                op: f("op")? as usize,
+                workers: f("workers")? as usize,
+                op_action: s("op_action")?,
+                pool_action: s("pool_action")?,
+                chunk_action: s("chunk_action")?,
+                bound: s("bound")?,
+            },
+            "scale_action" => ObsEvent::ScaleAction {
+                action: s("action")?,
+                workers: f("workers")? as usize,
+            },
+            "membership" => ObsEvent::Membership {
+                addr: s("addr")?,
+                from: s("from")?,
+                to: s("to")?,
+            },
+            "heartbeat_miss" => ObsEvent::HeartbeatMiss { addr: s("addr")? },
+            "requeue" => ObsEvent::Requeue {
+                images: f("images")? as usize,
+                attempts: f("attempts")? as usize,
+            },
+            "worker_barrier" => ObsEvent::WorkerBarrier { waited_us: f("waited_us")? as u64 },
+            "log" => ObsEvent::Log {
+                level: s("level")?,
+                module: s("module")?,
+                message: s("message")?,
+            },
+            other => return Err(format!("event: unknown kind {other:?}")),
+        })
+    }
+}
+
+/// One bus publication: the event plus the publish-time sequence
+/// number (total order across the process) and microseconds since the
+/// process observability epoch ([`crate::obs::now_us`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub seq: u64,
+    pub t_us: u64,
+    pub event: ObsEvent,
+}
+
+impl EventRecord {
+    /// Serialize; [`EventRecord::from_json`] inverts this exactly.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seq".to_string(), Json::num(self.seq as f64)),
+            ("t_us".to_string(), Json::num(self.t_us as f64)),
+        ];
+        if let Json::Obj(fields) = self.event.to_json() {
+            pairs.extend(fields);
+        }
+        Json::Obj(pairs)
+    }
+
+    /// Parse the encoding [`to_json`](Self::to_json) produces.
+    pub fn from_json(v: &Json) -> Result<EventRecord, String> {
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("event record: missing or non-numeric {key:?}"))
+        };
+        Ok(EventRecord {
+            seq: f("seq")? as u64,
+            t_us: f("t_us")? as u64,
+            event: ObsEvent::from_json(v)?,
+        })
+    }
+}

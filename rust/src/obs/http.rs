@@ -1,0 +1,191 @@
+//! A tiny std-only HTTP endpoint exposing the metrics registry.
+//!
+//! One accept thread, blocking reads with a short timeout, two routes:
+//!
+//! * `GET /metrics` — the registry rendered in Prometheus text format
+//!   (`text/plain; version=0.0.4`), gathered fresh per scrape.
+//! * `GET /dump` — freeze the attached flight recorder to JSON and
+//!   return it (the operator-request dump trigger; 404 when no
+//!   recorder is attached).
+//!
+//! This is deliberately not a web server: no keep-alive, no routing
+//! table, no TLS — just enough HTTP/1.1 for `curl` and a Prometheus
+//! scraper, with zero new dependencies.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+use super::recorder::Recorder;
+
+/// Scrape endpoint serving the process-wide [`super::registry`].
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, or `127.0.0.1:0` for an
+    /// ephemeral port) and start serving scrapes on a background
+    /// thread.  `recorder`, when given, backs the `/dump` route.
+    pub fn start(addr: &str, recorder: Option<Arc<Recorder>>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("metrics endpoint: binding {addr}"))?;
+        let local = listener.local_addr().context("metrics endpoint: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("obs-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => handle_conn(stream, recorder.as_deref()),
+                        Err(_) => continue,
+                    }
+                }
+            })
+            .context("metrics endpoint: spawning accept thread")?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(&mut self) {
+        if self.handle.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, recorder: Option<&Recorder>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut buf = [0u8; 2048];
+    let mut req = Vec::new();
+    // Read until the end of the request head (we ignore any body).
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                req.extend_from_slice(&buf[..n]);
+                if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&req);
+    let path = head.split_whitespace().nth(1).unwrap_or("");
+    let (status, content_type, body) = match path {
+        "/metrics" | "/" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            super::registry().render(),
+        ),
+        "/dump" => match recorder {
+            Some(r) => {
+                super::note_flight_dump("operator");
+                let dump = r.dump("operator");
+                ("200 OK", "application/json", json::to_string_pretty(&dump.to_json()))
+            }
+            None => (
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                "no flight recorder attached\n".to_string(),
+            ),
+        },
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {len}\r\nConnection: close\r\n\r\n",
+        len = body.len()
+    );
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsEvent;
+
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        let (head, body) = out.split_once("\r\n\r\n").unwrap_or((out.as_str(), ""));
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn metrics_route_serves_prometheus_text() {
+        let mut srv = MetricsServer::start("127.0.0.1:0", None).unwrap();
+        let (head, body) = get(srv.local_addr(), "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        assert!(head.contains("text/plain; version=0.0.4"), "head: {head}");
+        assert!(body.contains("# TYPE qos_nets_op_switches_total counter"), "body: {body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dump_route_404s_without_recorder_and_serves_json_with_one() {
+        let mut srv = MetricsServer::start("127.0.0.1:0", None).unwrap();
+        let (head, _) = get(srv.local_addr(), "/dump");
+        assert!(head.starts_with("HTTP/1.1 404"), "head: {head}");
+        srv.shutdown();
+
+        let rec = Arc::new(Recorder::with_defaults());
+        crate::obs::attach_recorder(rec.clone());
+        crate::obs::publish(crate::obs::ObsEvent::HeartbeatMiss { addr: "dump-test:1".into() });
+        let mut srv = MetricsServer::start("127.0.0.1:0", Some(rec.clone())).unwrap();
+        let (head, body) = get(srv.local_addr(), "/dump");
+        crate::obs::detach_recorder(&rec);
+        assert!(head.starts_with("HTTP/1.1 200"), "head: {head}");
+        let parsed = crate::util::json::parse(&body).unwrap();
+        let dump = crate::obs::FlightDump::from_json(&parsed).unwrap();
+        assert_eq!(dump.reason, "operator");
+        let hit = dump.events.iter().any(|e| {
+            matches!(&e.event, ObsEvent::HeartbeatMiss { addr } if addr == "dump-test:1")
+        });
+        assert!(hit, "recorded heartbeat miss missing from the dump");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_route_404s() {
+        let mut srv = MetricsServer::start("127.0.0.1:0", None).unwrap();
+        let (head, _) = get(srv.local_addr(), "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"));
+        srv.shutdown();
+    }
+}

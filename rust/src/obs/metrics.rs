@@ -1,0 +1,356 @@
+//! The metrics registry: one process-wide table of metric families
+//! rendered in Prometheus text exposition format.
+//!
+//! Two kinds of series feed it:
+//!
+//! * **Event-derived counters** — bumped by the bus as cold events
+//!   (switches, autopilot decisions, membership transitions, scale
+//!   actions, heartbeat misses, log lines) are published.  Their
+//!   families are *declared* up front, so `# HELP`/`# TYPE` headers
+//!   appear in the exposition even before the first increment — a
+//!   scraper can discover the schema on the first scrape.
+//! * **Collectors** — closures registered by the serving stack that
+//!   read the authoritative sources (`ServerMetrics::snapshot()`,
+//!   `FleetStats::snapshot()`, gauges) at scrape time.  Nothing is
+//!   double-counted and the hot path pays nothing: quantiles come
+//!   from the same `LatencyHistogram::summary()` every report already
+//!   uses, so the endpoint and the reports can never disagree.
+//!
+//! Metric names are part of the public surface; the name table is
+//! documented in `docs/ARCHITECTURE.md` and pinned by
+//! `rust/tests/obs.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::util::stats::LatencySummary;
+
+/// How a family's samples behave over time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One sample: a label set and a value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// An unlabeled sample.
+    pub fn plain(value: f64) -> Sample {
+        Sample { labels: Vec::new(), value }
+    }
+
+    /// A labeled sample.
+    pub fn with(labels: &[(&str, &str)], value: f64) -> Sample {
+        Sample {
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            value,
+        }
+    }
+}
+
+/// One metric family: a name, its help line, its kind, its samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricFamily {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub samples: Vec<Sample>,
+}
+
+impl MetricFamily {
+    /// A family with the given samples.
+    pub fn new(name: &str, help: &str, kind: Kind, samples: Vec<Sample>) -> MetricFamily {
+        MetricFamily { name: name.to_string(), help: help.to_string(), kind, samples }
+    }
+}
+
+/// Expand a [`LatencySummary`] into the conventional quantile + count
+/// + sum families (`<name>{quantile=...}`, `<name>_count`,
+/// `<name>_sum`), all under `extra` labels.  The quantile values are
+/// exactly [`LatencySummary`]'s log2-bucket upper bounds — the same
+/// numbers every report prints — and the sum is reconstructed from
+/// the summary's exact mean.
+pub fn summary_families(
+    name: &str,
+    help: &str,
+    extra: &[(&str, &str)],
+    s: &LatencySummary,
+) -> Vec<MetricFamily> {
+    let q = |quantile: &str, v: u64| -> Sample {
+        let mut labels = extra.to_vec();
+        labels.push(("quantile", quantile));
+        Sample::with(&labels, v as f64)
+    };
+    vec![
+        MetricFamily::new(
+            name,
+            help,
+            Kind::Gauge,
+            vec![q("0.5", s.p50_us), q("0.95", s.p95_us), q("0.99", s.p99_us)],
+        ),
+        MetricFamily::new(
+            &format!("{name}_count"),
+            &format!("Observations behind {name}."),
+            Kind::Counter,
+            vec![Sample::with(extra, s.count as f64)],
+        ),
+        MetricFamily::new(
+            &format!("{name}_sum"),
+            &format!("Sum of observations behind {name}, microseconds."),
+            Kind::Counter,
+            vec![Sample::with(extra, s.mean_us * s.count as f64)],
+        ),
+    ]
+}
+
+/// The event-derived counter families, declared so their headers
+/// render before the first increment.
+const DECLARED: &[(&str, &str)] = &[
+    ("qos_nets_op_switches_total", "Operating-point switches by mode and trigger."),
+    ("qos_nets_autopilot_ticks_total", "Autopilot control ticks by binding constraint."),
+    ("qos_nets_autopilot_actions_total", "Autopilot actuations by axis and action."),
+    ("qos_nets_scale_events_total", "Elastic-pool scale actions by kind."),
+    ("qos_nets_fleet_transitions_total", "Fleet membership transitions by from/to state."),
+    ("qos_nets_fleet_heartbeat_misses_total", "Unanswered heartbeat probes by worker."),
+    ("qos_nets_fleet_requeues_total", "Chunks requeued after transport failures."),
+    ("qos_nets_fleet_evictions_total", "Fleet evictions by worker."),
+    ("qos_nets_log_messages_total", "obs::log diagnostics by level."),
+    ("qos_nets_flight_dumps_total", "Flight-recorder dumps by trigger reason."),
+];
+
+type CollectFn = Box<dyn Fn() -> Vec<MetricFamily> + Send + Sync>;
+
+/// The registry; one per process, via [`crate::obs::registry`].
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, BTreeMap<Vec<(String, String)>, u64>>>,
+    collectors: Mutex<Vec<(String, CollectFn)>>,
+}
+
+impl Registry {
+    /// Register `collect` under `id`, replacing any collector already
+    /// registered under the same id (so a bench harness re-running
+    /// passes swaps sources instead of stacking them).
+    pub fn register<F>(&self, id: &str, collect: F)
+    where
+        F: Fn() -> Vec<MetricFamily> + Send + Sync + 'static,
+    {
+        let mut cs = self.collectors.lock().unwrap();
+        cs.retain(|(cid, _)| cid != id);
+        cs.push((id.to_string(), Box::new(collect)));
+    }
+
+    /// Drop the collector registered under `id` (no-op if absent).
+    pub fn unregister(&self, id: &str) {
+        self.collectors.lock().unwrap().retain(|(cid, _)| cid != id);
+    }
+
+    /// Bump an event-derived counter.  `name` should be one of the
+    /// declared families so its header renders; undeclared names still
+    /// count but expose without a help line.
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], by: u64) {
+        let key: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_default().entry(key).or_insert(0) += by;
+    }
+
+    /// Zero every event-derived counter (the bench harness calls this
+    /// between paired passes so the endpoint reflects the current
+    /// pass; collectors re-register instead).
+    pub fn reset_counters(&self) {
+        self.counters.lock().unwrap().clear();
+    }
+
+    /// Materialize every family: declared counters (with whatever
+    /// counts exist), then collector output, merged by name and
+    /// sorted.
+    pub fn gather(&self) -> Vec<MetricFamily> {
+        let mut by_name: BTreeMap<String, MetricFamily> = BTreeMap::new();
+        for (name, help) in DECLARED {
+            by_name.insert(
+                name.to_string(),
+                MetricFamily::new(name, help, Kind::Counter, Vec::new()),
+            );
+        }
+        {
+            let counters = self.counters.lock().unwrap();
+            for (name, series) in counters.iter() {
+                let fam = by_name.entry(name.clone()).or_insert_with(|| {
+                    MetricFamily::new(name, "", Kind::Counter, Vec::new())
+                });
+                for (labels, value) in series {
+                    fam.samples.push(Sample { labels: labels.clone(), value: *value as f64 });
+                }
+            }
+        }
+        let collectors = self.collectors.lock().unwrap();
+        for (_, collect) in collectors.iter() {
+            for fam in collect() {
+                match by_name.get_mut(&fam.name) {
+                    Some(existing) => existing.samples.extend(fam.samples),
+                    None => {
+                        by_name.insert(fam.name.clone(), fam);
+                    }
+                }
+            }
+        }
+        by_name.into_values().collect()
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (text/plain; version=0.0.4): deterministic family order, one
+    /// `# HELP`/`# TYPE` header per family.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for fam in self.gather() {
+            if !fam.help.is_empty() {
+                let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+            }
+            let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.as_str());
+            for s in &fam.samples {
+                if s.labels.is_empty() {
+                    let _ = writeln!(out, "{} {}", fam.name, fmt_value(s.value));
+                } else {
+                    let labels: Vec<String> = s
+                        .labels
+                        .iter()
+                        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+                        .collect();
+                    let joined = labels.join(",");
+                    let _ = writeln!(out, "{}{{{joined}}} {}", fam.name, fmt_value(s.value));
+                }
+            }
+        }
+        out
+    }
+
+    /// Look one sample up by family name and exact label set (order
+    /// insensitive) — what the live dashboard reads, so the panel and
+    /// the exposition endpoint share one source.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let mut want: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        want.sort();
+        for fam in self.gather() {
+            if fam.name != name {
+                continue;
+            }
+            for s in &fam.samples {
+                let mut have = s.labels.clone();
+                have.sort();
+                if have == want {
+                    return Some(s.value);
+                }
+            }
+        }
+        None
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declared_families_render_headers_before_any_increment() {
+        let r = Registry::default();
+        let text = r.render();
+        for (name, _) in DECLARED {
+            assert!(
+                text.contains(&format!("# TYPE {name} counter")),
+                "missing declared header for {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn counters_merge_into_their_declared_family() {
+        let r = Registry::default();
+        r.inc("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "budget")], 1);
+        r.inc("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "budget")], 2);
+        let text = r.render();
+        assert!(
+            text.contains("qos_nets_op_switches_total{mode=\"drain\",trigger=\"budget\"} 3"),
+            "{text}"
+        );
+        // exactly one header for the family
+        assert_eq!(text.matches("# TYPE qos_nets_op_switches_total").count(), 1);
+        assert_eq!(
+            r.value("qos_nets_op_switches_total", &[("trigger", "budget"), ("mode", "drain")]),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn collectors_replace_by_id_and_merge_by_family() {
+        let r = Registry::default();
+        r.register("g", || {
+            vec![MetricFamily::new("demo_gauge", "a demo", Kind::Gauge, vec![Sample::plain(1.0)])]
+        });
+        r.register("g", || {
+            vec![MetricFamily::new("demo_gauge", "a demo", Kind::Gauge, vec![Sample::plain(2.0)])]
+        });
+        assert_eq!(r.value("demo_gauge", &[]), Some(2.0));
+        r.unregister("g");
+        assert_eq!(r.value("demo_gauge", &[]), None);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::default();
+        r.inc("weird", &[("addr", "a\"b\\c")], 1);
+        assert!(r.render().contains("weird{addr=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn summary_families_mirror_the_latency_summary() {
+        let s = LatencySummary {
+            count: 10,
+            mean_us: 150.0,
+            p50_us: 128,
+            p95_us: 256,
+            p99_us: 512,
+            max_us: 400,
+        };
+        let fams = summary_families("lat_us", "demo", &[("op", "exact")], &s);
+        assert_eq!(fams.len(), 3);
+        let q = &fams[0];
+        assert_eq!(q.samples[0].value, 128.0);
+        assert_eq!(q.samples[2].value, 512.0);
+        assert_eq!(fams[1].samples[0].value, 10.0);
+        assert!((fams[2].samples[0].value - 1500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,312 @@
+//! Unified observability: one event bus, a flight recorder, and a
+//! scrapeable metrics registry across server, fleet, autopilot and
+//! engine.
+//!
+//! The paper's runtime-adaptation story only pays off if an operator
+//! can see *why* each transition happened and *what it cost*.  Before
+//! this module that evidence was fragmented across
+//! `ServerMetrics::snapshot()`, `FleetStats`, autopilot decision logs
+//! and ad-hoc stderr prints; here it converges on three std-only
+//! pieces:
+//!
+//! * **The event bus** ([`publish`], [`ObsEvent`]): subsystems publish
+//!   transition facts — batch lifecycle spans, OP switches with mode +
+//!   trigger, autopilot decisions, scale actions, fleet membership
+//!   transitions, heartbeat misses, requeues.  The fast path is two
+//!   relaxed atomic loads when nothing is attached, so library code
+//!   publishes unconditionally from hot loops without checking flags.
+//!   Hot span events that would allocate should still gate on
+//!   [`recording`] at the call site to skip building the event at all.
+//! * **The flight recorder** ([`recorder::Recorder`]): a bounded ring
+//!   of the last N seconds of events, attached to the bus with
+//!   [`attach_recorder`], frozen to a versioned JSON dump on SLO
+//!   violation, worker eviction, or operator request (`serve
+//!   --flight-recorder`, `GET /dump` on the metrics endpoint).
+//! * **The metrics registry** ([`metrics::Registry`], [`registry`]):
+//!   event-derived counters plus scrape-time collectors over the
+//!   authoritative snapshots, rendered in Prometheus text format by
+//!   the std-only TCP endpoint in [`http`] (`serve --metrics-addr`).
+//!
+//! Leveled diagnostics ride the same bus: the [`log!`](crate::obs_log)
+//! macro gates stderr output on `QOS_NETS_LOG` (error/warn/info/debug,
+//! default `warn`) and publishes every message as an
+//! [`ObsEvent::Log`], so a flight dump carries the warnings that led
+//! up to an incident even when they never hit the terminal.
+
+pub mod event;
+pub mod http;
+pub mod metrics;
+pub mod recorder;
+
+pub use event::{EventRecord, ObsEvent};
+pub use http::MetricsServer;
+pub use metrics::Registry;
+pub use recorder::{FlightDump, Recorder, FLIGHT_DUMP_VERSION};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Monotonic timestamps and sequence numbers
+// ---------------------------------------------------------------------------
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process observability epoch (the first call
+/// into this module).  Monotonic; shared by every event timestamp.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+// ---------------------------------------------------------------------------
+// The bus
+// ---------------------------------------------------------------------------
+
+static RECORDER_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+fn recorders() -> &'static RwLock<Vec<Arc<Recorder>>> {
+    static RECORDERS: OnceLock<RwLock<Vec<Arc<Recorder>>>> = OnceLock::new();
+    RECORDERS.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Whether any flight recorder is attached.  Hot publish sites that
+/// would allocate to build their event (names, addresses) should gate
+/// on this so a stack without a recorder pays a single atomic load.
+pub fn recording() -> bool {
+    RECORDER_COUNT.load(Ordering::Relaxed) > 0
+}
+
+/// Attach a recorder: every subsequent [`publish`] lands in it.
+pub fn attach_recorder(r: Arc<Recorder>) {
+    recorders().write().unwrap().push(r);
+    RECORDER_COUNT.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Detach a previously attached recorder (matched by identity).
+pub fn detach_recorder(r: &Arc<Recorder>) {
+    let mut subs = recorders().write().unwrap();
+    let before = subs.len();
+    subs.retain(|s| !Arc::ptr_eq(s, r));
+    let removed = before - subs.len();
+    if removed > 0 {
+        RECORDER_COUNT.fetch_sub(removed, Ordering::Relaxed);
+    }
+}
+
+/// The process-wide metrics registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// Publish one event: bump its event-derived counters (cold kinds
+/// only — span events are counted by the collectors that already own
+/// their sources) and, when a recorder is attached, stamp a sequence
+/// number + monotonic timestamp and append to every ring.
+pub fn publish(event: ObsEvent) {
+    bump_counters(&event);
+    if recording() {
+        let rec = EventRecord { seq: SEQ.fetch_add(1, Ordering::Relaxed), t_us: now_us(), event };
+        for r in recorders().read().unwrap().iter() {
+            r.record(rec.clone());
+        }
+    }
+}
+
+fn bump_counters(event: &ObsEvent) {
+    let reg = registry();
+    match event {
+        ObsEvent::OpSwitch { mode, trigger, .. } => {
+            reg.inc("qos_nets_op_switches_total", &[("mode", mode), ("trigger", trigger)], 1);
+        }
+        ObsEvent::AutopilotDecision { op_action, pool_action, chunk_action, bound, .. } => {
+            reg.inc("qos_nets_autopilot_ticks_total", &[("bound", bound)], 1);
+            for (axis, action) in
+                [("op", op_action), ("pool", pool_action), ("chunk", chunk_action)]
+            {
+                if action != "none" {
+                    reg.inc(
+                        "qos_nets_autopilot_actions_total",
+                        &[("axis", axis), ("action", action)],
+                        1,
+                    );
+                }
+            }
+        }
+        ObsEvent::ScaleAction { action, .. } => {
+            reg.inc("qos_nets_scale_events_total", &[("action", action)], 1);
+        }
+        ObsEvent::Membership { addr, from, to } => {
+            reg.inc("qos_nets_fleet_transitions_total", &[("from", from), ("to", to)], 1);
+            if to == "evicted" {
+                reg.inc("qos_nets_fleet_evictions_total", &[("addr", addr)], 1);
+            }
+        }
+        ObsEvent::HeartbeatMiss { addr } => {
+            reg.inc("qos_nets_fleet_heartbeat_misses_total", &[("addr", addr)], 1);
+        }
+        ObsEvent::Requeue { .. } => {
+            reg.inc("qos_nets_fleet_requeues_total", &[], 1);
+        }
+        ObsEvent::Log { level, .. } => {
+            reg.inc("qos_nets_log_messages_total", &[("level", level)], 1);
+        }
+        // span events: counted at their authoritative sources
+        ObsEvent::BatchFormed { .. }
+        | ObsEvent::BatchDone { .. }
+        | ObsEvent::EngineForward { .. }
+        | ObsEvent::FleetChunk { .. }
+        | ObsEvent::WorkerBarrier { .. } => {}
+    }
+}
+
+/// Record a flight dump being taken (counter + recorder trace).
+pub fn note_flight_dump(reason: &str) {
+    registry().inc("qos_nets_flight_dumps_total", &[("reason", reason)], 1);
+}
+
+// ---------------------------------------------------------------------------
+// Leveled logging (`obs::log!`, gated by QOS_NETS_LOG)
+// ---------------------------------------------------------------------------
+
+/// Diagnostic severity for [`log!`](crate::obs_log), ordered from
+/// most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Lowercase name (the `QOS_NETS_LOG` value and the counter label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// `QOS_NETS_LOG` threshold: messages at or above this severity go to
+/// stderr.  `off` silences stderr entirely (events still publish).
+fn log_threshold() -> i8 {
+    static THRESHOLD: OnceLock<i8> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        let raw = std::env::var("QOS_NETS_LOG").unwrap_or_default();
+        match raw.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => -1,
+            "error" => Level::Error as i8,
+            "info" => Level::Info as i8,
+            "debug" => Level::Debug as i8,
+            // default: warnings and errors, matching the pre-obs
+            // behavior of the library's eprintln! diagnostics
+            _ => Level::Warn as i8,
+        }
+    })
+}
+
+/// Whether a message at `level` would reach stderr.
+pub fn log_enabled(level: Level) -> bool {
+    (level as i8) <= log_threshold()
+}
+
+/// The implementation behind [`log!`](crate::obs_log): print to
+/// stderr when the `QOS_NETS_LOG` gate allows it, and publish the
+/// message onto the bus either way (so flight dumps keep suppressed
+/// diagnostics).  CLI user-facing output stays on plain
+/// `println!`/`eprintln!` — this is for *library* diagnostics only.
+pub fn logf(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    let message = args.to_string();
+    if log_enabled(level) {
+        eprintln!("[{}] {module}: {message}", level.as_str());
+    }
+    publish(ObsEvent::Log {
+        level: level.as_str().to_string(),
+        module: module.to_string(),
+        message,
+    });
+}
+
+/// Leveled library diagnostic: `obs::log!(Warn, "chunk {n} requeued")`.
+///
+/// The level is a [`Level`] variant name; the rest is `format!`
+/// syntax.  Messages print to stderr as `[warn] module::path: ...`
+/// when `QOS_NETS_LOG` allows the level (default `warn`), and always
+/// publish as [`ObsEvent::Log`] for the flight recorder.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:ident, $($arg:tt)*) => {
+        $crate::obs::logf(
+            $crate::obs::Level::$lvl,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+pub use crate::obs_log as log;
+
+/// Stable lowercase encoding of a fleet membership state for events
+/// and metric labels.
+pub fn member_state_str(state: crate::fleet::MemberState) -> &'static str {
+    match state {
+        crate::fleet::MemberState::Live => "live",
+        crate::fleet::MemberState::Suspect => "suspect",
+        crate::fleet::MemberState::Evicted => "evicted",
+        crate::fleet::MemberState::Rejoining => "rejoining",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn publish_is_inert_without_recorders_but_counts_cold_events() {
+        let before = registry()
+            .value("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "test-inert")])
+            .unwrap_or(0.0);
+        publish(ObsEvent::OpSwitch { op: 1, mode: "drain".into(), trigger: "test-inert".into() });
+        let after = registry()
+            .value("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "test-inert")])
+            .unwrap();
+        assert_eq!(after, before + 1.0);
+    }
+
+    #[test]
+    fn attached_recorder_sees_events_in_seq_order() {
+        let r = Arc::new(Recorder::new(Duration::from_secs(60), 128));
+        attach_recorder(r.clone());
+        publish(ObsEvent::HeartbeatMiss { addr: "t:1".into() });
+        publish(ObsEvent::HeartbeatMiss { addr: "t:2".into() });
+        detach_recorder(&r);
+        publish(ObsEvent::HeartbeatMiss { addr: "t:3".into() });
+        let events: Vec<EventRecord> = r
+            .snapshot()
+            .into_iter()
+            .filter(|e| {
+                matches!(&e.event, ObsEvent::HeartbeatMiss { addr } if addr.starts_with("t:"))
+            })
+            .collect();
+        assert_eq!(events.len(), 2, "detached recorder must stop receiving");
+        assert!(events[0].seq < events[1].seq);
+        assert!(events[0].t_us <= events[1].t_us);
+    }
+
+    #[test]
+    fn log_levels_parse_and_order() {
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(Level::Warn.as_str(), "warn");
+    }
+}

@@ -1,0 +1,172 @@
+//! The flight recorder: a bounded ring of recent [`EventRecord`]s
+//! that snapshots to a versioned JSON dump when something goes wrong.
+//!
+//! The ring is bounded twice over — by capacity (so a hot serving loop
+//! cannot grow it without limit) and by a retention window (so a dump
+//! taken after an incident holds the *last N seconds*, not the last N
+//! events from twenty minutes ago).  Recording is one short mutex
+//! section per event; the recorder only receives events at all while
+//! attached to the bus ([`crate::obs::attach_recorder`]), so a serving
+//! stack without `--flight-recorder` never pays for it.
+//!
+//! Dumps are triggered by the serve loop (SLO violation, worker
+//! eviction) or by an operator hitting the metrics endpoint's `/dump`
+//! route — the std-only stand-in for a `SIGUSR1` handler.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::event::EventRecord;
+
+/// Bump on any incompatible schema change to the dump JSON.
+pub const FLIGHT_DUMP_VERSION: u64 = 1;
+
+/// Default retention window: the last 30 seconds of events.
+pub const DEFAULT_WINDOW: Duration = Duration::from_secs(30);
+
+/// Default ring capacity (events, not bytes).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Bounded last-N-seconds event ring; see the module docs.
+pub struct Recorder {
+    window_us: u64,
+    cap: usize,
+    ring: Mutex<VecDeque<EventRecord>>,
+}
+
+impl Recorder {
+    /// A ring holding at most `cap` events from the last `window`.
+    pub fn new(window: Duration, cap: usize) -> Recorder {
+        Recorder {
+            window_us: window.as_micros() as u64,
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// A ring with the default window and capacity.
+    pub fn with_defaults() -> Recorder {
+        Recorder::new(DEFAULT_WINDOW, DEFAULT_CAPACITY)
+    }
+
+    /// Append one record, evicting whatever the capacity or the
+    /// retention window no longer covers.
+    pub fn record(&self, rec: EventRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        let horizon = rec.t_us.saturating_sub(self.window_us);
+        ring.push_back(rec);
+        while ring.len() > self.cap {
+            ring.pop_front();
+        }
+        while ring.front().is_some_and(|r| r.t_us < horizon) {
+            ring.pop_front();
+        }
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Whether the ring is empty.
+    pub fn is_empty(&self) -> bool {
+        self.ring.lock().unwrap().is_empty()
+    }
+
+    /// Copy the ring out, oldest first (the ring keeps recording).
+    pub fn snapshot(&self) -> Vec<EventRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Freeze the current ring into a dump tagged with `reason`
+    /// (`"slo_violation"`, `"eviction"`, `"operator"`, ...).
+    pub fn dump(&self, reason: &str) -> FlightDump {
+        FlightDump {
+            version: FLIGHT_DUMP_VERSION,
+            reason: reason.to_string(),
+            t_us: super::now_us(),
+            events: self.snapshot(),
+        }
+    }
+
+    /// Dump to `flight_<reason>_<t_us>.json` under `dir`; returns the
+    /// path written.
+    pub fn dump_to(&self, dir: &Path, reason: &str) -> Result<PathBuf> {
+        self.dump(reason).write_to(dir)
+    }
+}
+
+/// One frozen flight-recorder snapshot, versioned for trend tooling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightDump {
+    pub version: u64,
+    /// What triggered the dump.
+    pub reason: String,
+    /// Dump time, microseconds since the process observability epoch.
+    pub t_us: u64,
+    /// The retained events, oldest first.
+    pub events: Vec<EventRecord>,
+}
+
+impl FlightDump {
+    /// Serialize; [`FlightDump::from_json`] inverts this exactly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("reason", Json::str(self.reason.clone())),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Parse + validate a dump (strict: wrong version, an unknown
+    /// event kind, or any missing required field is an error).
+    pub fn from_json(v: &Json) -> Result<FlightDump> {
+        let version = v
+            .get("version")
+            .and_then(|x| x.as_f64())
+            .context("flight dump: missing version")? as u64;
+        anyhow::ensure!(
+            version == FLIGHT_DUMP_VERSION,
+            "flight dump version {version} unsupported (this build reads {FLIGHT_DUMP_VERSION})"
+        );
+        let events = v
+            .get("events")
+            .and_then(|x| x.as_arr())
+            .context("flight dump: missing events array")?
+            .iter()
+            .map(|e| EventRecord::from_json(e).map_err(|m| anyhow::anyhow!("flight dump: {m}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FlightDump {
+            version,
+            reason: v
+                .get("reason")
+                .and_then(|x| x.as_str())
+                .context("flight dump: missing reason")?
+                .to_string(),
+            t_us: v.get("t_us").and_then(|x| x.as_f64()).context("flight dump: missing t_us")?
+                as u64,
+            events,
+        })
+    }
+
+    /// Write to `flight_<reason>_<t_us>.json` under `dir`; returns the
+    /// path written.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let safe: String = self
+            .reason
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("flight_{safe}_{t}.json", t = self.t_us));
+        std::fs::write(&path, json::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("writing flight dump to {}", path.display()))?;
+        Ok(path)
+    }
+}

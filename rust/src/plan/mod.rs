@@ -431,8 +431,9 @@ impl OpPlan {
                 _ => None,
             };
             if matches!(mode, "bn" | "full") && overlay.is_none() {
-                eprintln!(
-                    "warning: OP{i}: no {mode} overlay found (run stage B retraining); using base params"
+                crate::obs::log!(
+                    Warn,
+                    "OP{i}: no {mode} overlay found (run stage B retraining); using base params"
                 );
             }
             out.push(pipeline::build_operating_point(

@@ -54,6 +54,7 @@ use crate::backend::{Backend, NativeBackend, OpTable};
 use crate::engine::OperatingPoint;
 use crate::muldb::MulDb;
 use crate::nn::Graph;
+use crate::obs::{self, metrics::{summary_families, Kind, MetricFamily, Sample}, ObsEvent};
 use crate::util::stats::{LatencyHistogram, LatencySummary};
 
 pub use crate::qos::SwitchMode;
@@ -625,6 +626,82 @@ impl<B: Backend + 'static> Server<B> {
         self.metrics.lock().unwrap().clone()
     }
 
+    /// A scrape-time collector for [`crate::obs::Registry::register`]:
+    /// it reads [`ServerMetrics::snapshot`] and the shared gauges when
+    /// the endpoint is scraped, so the exposition, the live dashboard
+    /// and the final serving report all condense the *same* histograms
+    /// — nothing is double-counted and the hot path pays nothing.
+    pub fn metrics_collector(&self) -> impl Fn() -> Vec<MetricFamily> + Send + Sync + 'static {
+        let metrics = self.metrics.clone();
+        let shared = self.shared.clone();
+        let op_names: Vec<String> = self.ops.ops().iter().map(|op| op.name.clone()).collect();
+        move || {
+            let snap = metrics.lock().unwrap().snapshot();
+            let mut fams = vec![
+                MetricFamily::new(
+                    "qos_nets_requests_completed_total",
+                    "Requests answered by the batching server.",
+                    Kind::Counter,
+                    vec![Sample::plain(snap.completed as f64)],
+                ),
+                MetricFamily::new(
+                    "qos_nets_batches_total",
+                    "Batches executed by the worker pool.",
+                    Kind::Counter,
+                    vec![Sample::plain(snap.batches as f64)],
+                ),
+                MetricFamily::new(
+                    "qos_nets_batches_retagged_total",
+                    "Batches retagged to a cheaper OP at execution time.",
+                    Kind::Counter,
+                    vec![Sample::plain(snap.retagged_batches as f64)],
+                ),
+                MetricFamily::new(
+                    "qos_nets_inflight",
+                    "Requests submitted but not yet answered.",
+                    Kind::Gauge,
+                    vec![Sample::plain(shared.inflight.load(Ordering::Acquire) as f64)],
+                ),
+                MetricFamily::new(
+                    "qos_nets_workers",
+                    "Live inference workers in the elastic pool.",
+                    Kind::Gauge,
+                    vec![Sample::plain(shared.live_workers.load(Ordering::Acquire) as f64)],
+                ),
+            ];
+            fams.extend(summary_families(
+                "qos_nets_latency_us",
+                "End-to-end request latency, microseconds.",
+                &[],
+                &snap.latency,
+            ));
+            fams.extend(summary_families(
+                "qos_nets_queue_latency_us",
+                "Submission-to-batch-formation latency, microseconds.",
+                &[],
+                &snap.queue,
+            ));
+            let mut op_requests = Vec::with_capacity(snap.per_op.len());
+            for (i, per_op) in snap.per_op.iter().enumerate() {
+                let name = op_names.get(i).map(String::as_str).unwrap_or("?");
+                op_requests.push(Sample::with(&[("op", name)], per_op.requests as f64));
+                fams.extend(summary_families(
+                    "qos_nets_op_latency_us",
+                    "End-to-end latency per operating point, microseconds.",
+                    &[("op", name)],
+                    &per_op.latency,
+                ));
+            }
+            fams.push(MetricFamily::new(
+                "qos_nets_op_requests_total",
+                "Requests served per operating point.",
+                Kind::Counter,
+                op_requests,
+            ));
+            fams
+        }
+    }
+
     /// Drain and stop; joins all threads (including supervisor-spawned
     /// workers) and returns the final metrics.
     pub fn shutdown(mut self) -> ServerMetrics {
@@ -692,10 +769,14 @@ where
                 ctx.shared.live_workers.fetch_sub(1, Ordering::AcqRel);
             }
             Err(e) => {
-                eprintln!("worker {w}: backend init failed: {e:#}");
+                obs::log!(Error, "worker {w}: backend init failed: {e:#}");
                 if reserved {
-                    ctx.shared.live_workers.fetch_sub(1, Ordering::AcqRel);
+                    let was = ctx.shared.live_workers.fetch_sub(1, Ordering::AcqRel);
                     ctx.metrics.lock().unwrap().spawn_failures += 1;
+                    obs::publish(ObsEvent::ScaleAction {
+                        action: "spawn_failure".to_string(),
+                        workers: was.saturating_sub(1),
+                    });
                 }
                 if let Some(tx) = ready {
                     let _ = tx.send(Err(e));
@@ -765,7 +846,7 @@ where
         let logits = match backend.forward(op_idx, &images, b) {
             Ok(l) => l,
             Err(e) => {
-                eprintln!("{} backend: dropping batch of {b}: {e:#}", backend.name());
+                obs::log!(Error, "{} backend: dropping batch of {b}: {e:#}", backend.name());
                 ctx.shared.inflight.fetch_sub(b, Ordering::AcqRel);
                 continue;
             }
@@ -800,6 +881,15 @@ where
                 m.per_op_latency[op_idx].record_us(total_us);
             }
         }
+        if obs::recording() {
+            obs::publish(ObsEvent::BatchDone {
+                batch: batch.seq,
+                op: op_idx,
+                size: b,
+                latency_us: times[0].1,
+                retagged,
+            });
+        }
         for ((i, r), &(queue_us, total_us)) in batch.reqs.into_iter().enumerate().zip(&times) {
             let _ = r.resp.send(Response {
                 id: r.id,
@@ -830,6 +920,13 @@ fn flush_batch(
         seq: *seq,
     };
     *seq += 1;
+    if obs::recording() {
+        obs::publish(ObsEvent::BatchFormed {
+            batch: batch.seq,
+            op: batch.op_idx,
+            size: batch.reqs.len(),
+        });
+    }
     let _ = out.send(WorkerMsg::Batch(batch));
 }
 
@@ -976,6 +1073,7 @@ fn supervisor_loop<B, F>(
             let handle = spawn_worker(ctx.clone(), w, true, None);
             push_handle(&handles, handle);
             ctx.metrics.lock().unwrap().scale_ups += 1;
+            obs::publish(ObsEvent::ScaleAction { action: "up".to_string(), workers: live + 1 });
             continue;
         }
         // an explicit pool target (installed by the autopilot via
@@ -997,12 +1095,19 @@ fn supervisor_loop<B, F>(
                     let handle = spawn_worker(ctx.clone(), w, true, None);
                     push_handle(&handles, handle);
                 }
-                let mut m = ctx.metrics.lock().unwrap();
-                m.scale_ups += n as u64;
-                m.peak_workers = m.peak_workers.max(target);
+                {
+                    let mut m = ctx.metrics.lock().unwrap();
+                    m.scale_ups += n as u64;
+                    m.peak_workers = m.peak_workers.max(target);
+                }
+                obs::publish(ObsEvent::ScaleAction { action: "up".to_string(), workers: target });
             } else if live > target {
                 let _ = batch_tx.send(WorkerMsg::Retire);
                 ctx.metrics.lock().unwrap().scale_downs += 1;
+                obs::publish(ObsEvent::ScaleAction {
+                    action: "down".to_string(),
+                    workers: live - 1,
+                });
             }
             continue;
         }
@@ -1046,9 +1151,12 @@ fn supervisor_loop<B, F>(
                 let handle = spawn_worker(ctx.clone(), w, true, None);
                 push_handle(&handles, handle);
             }
-            let mut m = ctx.metrics.lock().unwrap();
-            m.scale_ups += n as u64;
-            m.peak_workers = m.peak_workers.max(live + n);
+            {
+                let mut m = ctx.metrics.lock().unwrap();
+                m.scale_ups += n as u64;
+                m.peak_workers = m.peak_workers.max(live + n);
+            }
+            obs::publish(ObsEvent::ScaleAction { action: "up".to_string(), workers: live + n });
         }
         if idle && idle_streak >= cfg.scale_down_after && live > cfg.min_workers {
             idle_streak = 0;
@@ -1056,6 +1164,7 @@ fn supervisor_loop<B, F>(
             // work, so retiring never drops batches
             let _ = batch_tx.send(WorkerMsg::Retire);
             ctx.metrics.lock().unwrap().scale_downs += 1;
+            obs::publish(ObsEvent::ScaleAction { action: "down".to_string(), workers: live - 1 });
         }
     }
 }

@@ -1,0 +1,266 @@
+//! Observability integration tests: the Prometheus exposition contract
+//! (stable family names; quantiles equal to the exact
+//! `LatencyHistogram::summary()` numbers the reports print), the
+//! flight-recorder ring bounds + dump schema round-trip, and the
+//! recorded event order across a drained OP switch with a fleet worker
+//! behind the fault-injection chaos proxy.
+//!
+//! The ordering test is the one that pins the tentpole's semantic
+//! guarantee: a drain-mode `OpSwitch` event is published only after
+//! every surviving worker acked the barrier, so in the recorded
+//! sequence every pre-switch `FleetChunk` precedes it and every
+//! post-switch one follows it — even when the transport under one
+//! worker is splitting and delaying frames.
+
+mod common;
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::chaos::{ChaosConfig, ChaosProxy};
+use common::stub_op;
+use qos_nets::backend::{OpTable, StubBackend};
+use qos_nets::engine::OperatingPoint;
+use qos_nets::fleet::{worker, FleetBackend, FleetStats, WorkerHandle};
+use qos_nets::obs::{
+    self, EventRecord, FlightDump, ObsEvent, Recorder, Registry, FLIGHT_DUMP_VERSION,
+};
+use qos_nets::qos::SwitchMode;
+use qos_nets::server::{BatcherConfig, Server};
+use qos_nets::util::json;
+
+/// Spawn one loopback stub worker; returns its handle and address.
+fn stub_worker(delay: Duration, catalog: Vec<OperatingPoint>) -> (WorkerHandle, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = worker::spawn(listener, "obs-worker", "", catalog, move |_conn| {
+        Ok(StubBackend::new(4).with_delay(delay))
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+#[test]
+fn exposition_names_are_stable_and_quantiles_match_the_histogram() {
+    let table = OpTable::new(vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4)),
+        table,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..64 {
+        rxs.push(server.submit(vec![(i % 4) as f32, 0.0]).unwrap());
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    // responses can land a hair before the worker's metrics critical
+    // section; wait for the counter, then everything below is stable
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics().completed < 64 {
+        assert!(Instant::now() < deadline, "completed counter never reached 64");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // a private registry so parallel tests in this binary cannot feed
+    // families into the assertion; the collector is the identical
+    // closure `serve --metrics-addr` registers globally
+    let reg = Registry::default();
+    reg.register("server", server.metrics_collector());
+    let text = reg.render();
+
+    // the scrape contract: renaming any of these breaks dashboards, so
+    // the list is pinned here (event-derived counter families render
+    // their headers even with zero samples)
+    for name in [
+        "qos_nets_requests_completed_total",
+        "qos_nets_batches_total",
+        "qos_nets_batches_retagged_total",
+        "qos_nets_inflight",
+        "qos_nets_workers",
+        "qos_nets_latency_us",
+        "qos_nets_latency_us_count",
+        "qos_nets_latency_us_sum",
+        "qos_nets_queue_latency_us",
+        "qos_nets_op_latency_us",
+        "qos_nets_op_requests_total",
+        "qos_nets_op_switches_total",
+        "qos_nets_autopilot_ticks_total",
+        "qos_nets_autopilot_actions_total",
+        "qos_nets_scale_events_total",
+        "qos_nets_fleet_transitions_total",
+        "qos_nets_fleet_heartbeat_misses_total",
+        "qos_nets_fleet_requeues_total",
+        "qos_nets_fleet_evictions_total",
+        "qos_nets_log_messages_total",
+        "qos_nets_flight_dumps_total",
+    ] {
+        assert!(text.contains(&format!("# TYPE {name} ")), "missing family {name} in:\n{text}");
+    }
+
+    // quantile samples are exactly the LatencyHistogram::summary()
+    // numbers every report prints — same histogram, same bounds
+    let m = server.metrics();
+    let s = m.latency.summary();
+    assert_eq!(reg.value("qos_nets_requests_completed_total", &[]), Some(m.completed as f64));
+    assert_eq!(reg.value("qos_nets_latency_us", &[("quantile", "0.5")]), Some(s.p50_us as f64));
+    assert_eq!(reg.value("qos_nets_latency_us", &[("quantile", "0.95")]), Some(s.p95_us as f64));
+    assert_eq!(reg.value("qos_nets_latency_us", &[("quantile", "0.99")]), Some(s.p99_us as f64));
+    assert_eq!(reg.value("qos_nets_latency_us_count", &[]), Some(s.count as f64));
+    // per-OP families carry the OP *name* as the label (label order
+    // must not matter to lookups)
+    assert!(reg.value("qos_nets_op_latency_us", &[("quantile", "0.99"), ("op", "hi")]).is_some());
+    assert_eq!(reg.value("qos_nets_op_requests_total", &[("op", "hi")]), Some(64.0));
+    assert_eq!(reg.value("qos_nets_op_requests_total", &[("op", "lo")]), Some(0.0));
+    server.shutdown();
+}
+
+#[test]
+fn flight_ring_is_bounded_and_the_dump_schema_round_trips() {
+    // capacity bound: 20 in, 8 survive, oldest evicted first
+    let rec = Recorder::new(Duration::from_secs(3600), 8);
+    for i in 0..20u64 {
+        rec.record(EventRecord {
+            seq: i,
+            t_us: 1_000 + i,
+            event: ObsEvent::HeartbeatMiss { addr: format!("w{i}") },
+        });
+    }
+    assert_eq!(rec.len(), 8);
+    let seqs: Vec<u64> = rec.snapshot().iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (12..20).collect::<Vec<_>>());
+
+    // retention bound: an event past the window expels what it no
+    // longer covers
+    let rec2 = Recorder::new(Duration::from_secs(1), 64);
+    rec2.record(EventRecord {
+        seq: 0,
+        t_us: 0,
+        event: ObsEvent::Requeue { images: 1, attempts: 1 },
+    });
+    rec2.record(EventRecord {
+        seq: 1,
+        t_us: 5_000_000,
+        event: ObsEvent::Requeue { images: 2, attempts: 1 },
+    });
+    assert_eq!(rec2.snapshot().iter().map(|e| e.seq).collect::<Vec<_>>(), vec![1]);
+
+    // dump -> JSON text -> parse -> FlightDump is the identity
+    let dump = rec.dump("unit-test");
+    assert_eq!(dump.version, FLIGHT_DUMP_VERSION);
+    assert_eq!(dump.reason, "unit-test");
+    let text = json::to_string_pretty(&dump.to_json());
+    let back = FlightDump::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, dump);
+    assert!(matches!(&back.events[0].event, ObsEvent::HeartbeatMiss { addr } if addr == "w12"));
+
+    // a wrong version must be a hard error, not a best-effort parse
+    let mut wrong = dump.to_json();
+    if let json::Json::Obj(pairs) = &mut wrong {
+        for (k, v) in pairs.iter_mut() {
+            if k == "version" {
+                *v = json::Json::num((FLIGHT_DUMP_VERSION + 1) as f64);
+            }
+        }
+    }
+    assert!(FlightDump::from_json(&wrong).is_err());
+
+    // the file path dump_to writes is re-readable through the same API
+    let dir = std::env::temp_dir().join(format!("qos_nets_obs_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = rec.dump_to(&dir, "unit/test").unwrap();
+    let on_disk = std::fs::read_to_string(&path).unwrap();
+    let from_disk = FlightDump::from_json(&json::parse(&on_disk).unwrap()).unwrap();
+    assert_eq!(from_disk.events.len(), 8);
+    assert_eq!(from_disk.reason, "unit/test");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn drain_switch_event_order_holds_under_the_chaos_proxy() {
+    let catalog = vec![stub_op("hi", 1.0), stub_op("lo", 0.5)];
+    let (h1, a1) = stub_worker(Duration::from_millis(1), catalog.clone());
+    let (h2, a2) = stub_worker(Duration::from_millis(1), catalog);
+    // one worker behind a jittering transport: every frame split in
+    // two and delayed up to 2 ms, so completions reorder across the
+    // fleet while the barrier guarantee must still hold
+    let proxy = ChaosProxy::spawn(
+        a1,
+        11,
+        ChaosConfig {
+            split_writes: true,
+            delay: Some((Duration::ZERO, Duration::from_millis(2))),
+            ..ChaosConfig::default()
+        },
+    );
+    let proxied = proxy.addr().to_string();
+    let stats = FleetStats::default();
+    let mut fleet = FleetBackend::connect_with(&[proxied.clone(), a2.clone()], stats).unwrap();
+
+    let rec = Arc::new(Recorder::with_defaults());
+    obs::attach_recorder(rec.clone());
+
+    let images: Vec<f32> = (0..16).map(|i| (i % 4) as f32).collect();
+    for _ in 0..3 {
+        fleet.forward(0, &images, 8).unwrap();
+    }
+    fleet.set_operating_point(1, SwitchMode::Drain).unwrap();
+    for _ in 0..3 {
+        fleet.forward(1, &images, 8).unwrap();
+    }
+
+    obs::detach_recorder(&rec);
+    let events = rec.snapshot();
+    // other tests in this binary may publish concurrently (the bus is
+    // process-wide), so every filter pins this fleet's addresses
+    let mine = |addr: &str| addr == proxied || addr == a2;
+    let pre_max = events
+        .iter()
+        .filter_map(|e| match &e.event {
+            ObsEvent::FleetChunk { addr, op: 0, .. } if mine(addr) => Some(e.seq),
+            _ => None,
+        })
+        .max()
+        .expect("no pre-switch FleetChunk events recorded");
+    let switch_seq = events
+        .iter()
+        .filter_map(|e| match &e.event {
+            ObsEvent::OpSwitch { op: 1, mode, trigger }
+                if mode == "drain" && trigger == "fleet" =>
+            {
+                Some(e.seq)
+            }
+            _ => None,
+        })
+        .min()
+        .expect("no drain OpSwitch event recorded");
+    let post_min = events
+        .iter()
+        .filter_map(|e| match &e.event {
+            ObsEvent::FleetChunk { addr, op: 1, .. } if mine(addr) => Some(e.seq),
+            _ => None,
+        })
+        .min()
+        .expect("no post-switch FleetChunk events recorded");
+    assert!(
+        pre_max < switch_seq,
+        "pre-switch chunk (seq {pre_max}) recorded after the drain switch (seq {switch_seq})"
+    );
+    assert!(
+        switch_seq < post_min,
+        "post-switch chunk (seq {post_min}) recorded before the drain switch (seq {switch_seq})"
+    );
+
+    fleet.shutdown_fleet();
+    drop(proxy);
+    h1.join();
+    h2.join();
+}

@@ -253,11 +253,18 @@ pub struct Decision {
     pub pool_action: PoolAction,
     pub chunk_action: ChunkAction,
     pub bound: Bound,
+    /// The tick wanted to shed further but the rung cap already pinned
+    /// the ladder at its frugal floor — the saturation the cap would
+    /// otherwise swallow silently (see
+    /// [`QosController::observe_with_mode_capped_signal`]).
+    pub cap_saturated: bool,
+    /// Tenant class this decision steered (`None` single-tenant).
+    pub class: Option<String>,
 }
 
 impl Decision {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("t_s", Json::num(self.t_s)),
             ("p95_ms", Json::num(self.p95_ms)),
             ("power", Json::num(self.power)),
@@ -268,7 +275,16 @@ impl Decision {
             ("pool_action", Json::str(self.pool_action.as_str())),
             ("chunk_action", Json::str(self.chunk_action.as_str())),
             ("bound", Json::str(self.bound.as_str())),
-        ])
+        ];
+        // omitted when default, so pre-tenancy decision logs (and the
+        // committed bench baselines embedding them) stay byte-identical
+        if self.cap_saturated {
+            fields.push(("cap_saturated", Json::Bool(true)));
+        }
+        if let Some(class) = &self.class {
+            fields.push(("class", Json::str(class)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Decision, String> {
@@ -296,6 +312,9 @@ impl Decision {
                 .ok_or_else(|| "decision.chunk_action: unknown tag".to_string())?,
             bound: Bound::parse(&tag("bound")?)
                 .ok_or_else(|| "decision.bound: unknown tag".to_string())?,
+            // lenient: pre-tenancy logs carry neither key
+            cap_saturated: j.get("cap_saturated").and_then(|x| x.as_bool()).unwrap_or(false),
+            class: j.get("class").and_then(|x| x.as_str()).map(str::to_string),
         })
     }
 }
@@ -331,10 +350,18 @@ pub struct Autopilot {
     pool_cooldown: u32,
     chunk_cooldown: u32,
     chunk_narrowed: bool,
+    /// Tenant class label stamped into decisions and events (`None`
+    /// single-tenant — see [`Autopilot::with_class`]).
+    class: Option<String>,
     /// Control ticks run.
     pub ticks: u64,
     /// Ticks whose observed p95 exceeded the SLO.
     pub slo_violations: u64,
+    /// Pressured ticks that wanted to shed further but found the rung
+    /// cap already pinned at the frugal floor (satellite signal of
+    /// [`QosController::observe_with_mode_capped_signal`]): demand the
+    /// ladder could not absorb.
+    pub cap_saturated_ticks: u64,
 }
 
 impl Autopilot {
@@ -351,9 +378,19 @@ impl Autopilot {
             pool_cooldown: 0,
             chunk_cooldown: 0,
             chunk_narrowed: false,
+            class: None,
             ticks: 0,
             slo_violations: 0,
+            cap_saturated_ticks: 0,
         }
+    }
+
+    /// Tag this pilot with a tenant class: its decisions and published
+    /// events carry the label (multi-tenant deployments run one pilot
+    /// per class — see [`MultiAutopilot`]).
+    pub fn with_class(mut self, class: impl Into<String>) -> Self {
+        self.class = Some(class.into());
+        self
     }
 
     /// The wrapped controller (switch/violation counters, ladder).
@@ -465,7 +502,14 @@ impl Autopilot {
         // Immediate and upgrade hysteresis works on genuine recovery
         let power_limit = inp.env_budget.min(self.cfg.power_envelope);
         let before = self.controller.current();
-        let switch = self.controller.observe_with_mode_capped(power_limit, self.lat_cap, now);
+        let (switch, saturated) =
+            self.controller.observe_with_mode_capped_signal(power_limit, self.lat_cap, now);
+        // only a *pressured* saturated tick counts: the tick wanted to
+        // shed further and the floor-pinned cap swallowed the step
+        let cap_saturated = pressured && saturated;
+        if cap_saturated {
+            self.cap_saturated_ticks += 1;
+        }
         let after = self.controller.current();
         let op_action = match after.cmp(&before) {
             std::cmp::Ordering::Greater => OpAction::Down,
@@ -495,6 +539,8 @@ impl Autopilot {
             pool_action,
             chunk_action,
             bound,
+            cap_saturated,
+            class: self.class.clone(),
         };
         crate::obs::publish(crate::obs::ObsEvent::AutopilotDecision {
             t_s: decision.t_s,
@@ -505,8 +551,86 @@ impl Autopilot {
             pool_action: decision.pool_action.as_str().to_string(),
             chunk_action: decision.chunk_action.as_str().to_string(),
             bound: decision.bound.as_str().to_string(),
+            class: decision.class.clone(),
         });
         TickOutcome { switch, pool_target, chunk_quantum_us, decision }
+    }
+}
+
+/// Per-class autopilots steering one shared power envelope with strict
+/// priority.  Class 0 (premium) is allocated first: each pilot in id
+/// order sees the envelope *remaining* after every higher-priority
+/// class's chosen rung was charged at that class's traffic weight —
+/// so when the shared budget tightens, the best-effort pilots inherit
+/// the squeeze and shed first while premium sheds last.  With a single
+/// class of weight 1 the allocation is the identity and every decision
+/// matches the bare [`Autopilot`] bit for bit.
+#[derive(Debug)]
+pub struct MultiAutopilot {
+    pilots: Vec<Autopilot>,
+    /// Normalized traffic weight per class (what fraction of the
+    /// deployment's multiplication power the class's rung choice
+    /// charges against the shared envelope).
+    weights: Vec<f64>,
+}
+
+impl MultiAutopilot {
+    /// `pilots` in class-id (premium-first) order; `weights` are
+    /// normalized to sum 1 (uniform when empty or non-positive).
+    pub fn new(pilots: Vec<Autopilot>, weights: Vec<f64>) -> Self {
+        let n = pilots.len().max(1);
+        let mut weights = if weights.len() == pilots.len() {
+            weights
+        } else {
+            vec![1.0; pilots.len()]
+        };
+        let sum: f64 = weights.iter().copied().filter(|w| *w > 0.0).sum();
+        if sum > 0.0 {
+            for w in &mut weights {
+                *w = w.max(0.0) / sum;
+            }
+        } else {
+            weights = vec![1.0 / n as f64; pilots.len()];
+        }
+        MultiAutopilot { pilots, weights }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pilots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pilots.is_empty()
+    }
+
+    /// The per-class pilots, in class-id order.
+    pub fn pilots(&self) -> &[Autopilot] {
+        &self.pilots
+    }
+
+    /// One control tick for every class, premium first.  `inputs[c]`
+    /// carries class `c`'s own latency window; its `env_budget` is the
+    /// *shared* environmental budget, which this allocator narrows to
+    /// the class's slice before the pilot sees it.
+    pub fn tick(&mut self, inputs: &[TickInputs], now: Instant) -> Vec<TickOutcome> {
+        assert_eq!(inputs.len(), self.pilots.len());
+        // the shared envelope: every class observes the same env budget
+        let mut remaining = inputs.first().map(|i| i.env_budget).unwrap_or(1.0);
+        let mut out = Vec::with_capacity(self.pilots.len());
+        for (c, pilot) in self.pilots.iter_mut().enumerate() {
+            let w = self.weights[c];
+            // a class may spend up to the leftover envelope scaled by
+            // its weight (a light class's rung barely dents the total,
+            // so its effective budget saturates at 1.0)
+            let eff = if w > 0.0 { (remaining / w).clamp(0.0, 1.0) } else { 1.0 };
+            let inp = TickInputs { env_budget: inputs[c].env_budget.min(eff), ..inputs[c] };
+            let outcome = pilot.tick(&inp, now);
+            // charge the chosen rung before the next (lower-priority)
+            // class is allocated
+            remaining = (remaining - w * outcome.decision.power).max(0.0);
+            out.push(outcome);
+        }
+        out
     }
 }
 
@@ -835,9 +959,90 @@ mod tests {
             pool_action: PoolAction::None,
             chunk_action: ChunkAction::Narrow,
             bound: Bound::Latency,
+            cap_saturated: false,
+            class: None,
         };
         let j = d.to_json();
         assert_eq!(Decision::from_json(&j).unwrap(), d);
+        // the tenancy fields are omitted at their defaults, so
+        // pre-tenancy decision logs parse and re-serialize unchanged
+        let text = crate::util::json::to_string(&j);
+        assert!(!text.contains("cap_saturated") && !text.contains("class"), "{text}");
+        let tagged = Decision {
+            cap_saturated: true,
+            class: Some("premium".to_string()),
+            ..d.clone()
+        };
+        assert_eq!(Decision::from_json(&tagged.to_json()).unwrap(), tagged);
         assert!(Decision::from_json(&Json::obj(vec![("t_s", Json::num(0.0))])).is_err());
+    }
+
+    #[test]
+    fn saturated_sheds_are_counted_once_the_cap_pins_the_floor() {
+        let mut p = pilot(AutopilotConfig {
+            slo_p95_ms: 100.0,
+            cooldown_ticks: 0,
+            ..Default::default()
+        });
+        let t = Instant::now();
+        p.tick(&inputs(0.0, 20.0, 1.0), t); // settle at exact
+        // walking the cap down is demand the ladder absorbs
+        let o = p.tick(&inputs(0.5, 60.0, 1.0), t);
+        assert!(!o.decision.cap_saturated);
+        p.tick(&inputs(1.0, 60.0, 1.0), t); // cap reaches the floor
+        assert_eq!(p.cap_saturated_ticks, 0);
+        // the floor is pinned: every further pressured tick wanted to
+        // shed and could not — the saturation the cap used to swallow
+        let o = p.tick(&inputs(1.5, 60.0, 1.0), t);
+        assert!(o.decision.cap_saturated);
+        let o = p.tick(&inputs(2.0, 60.0, 1.0), t);
+        assert!(o.decision.cap_saturated);
+        assert_eq!(p.cap_saturated_ticks, 2);
+        // a clear tick is not saturation even while the cap sits low
+        let o = p.tick(&inputs(2.5, 20.0, 1.0), t);
+        assert!(!o.decision.cap_saturated);
+        assert_eq!(p.cap_saturated_ticks, 2);
+    }
+
+    #[test]
+    fn single_class_multi_pilot_matches_the_bare_autopilot() {
+        let t = Instant::now();
+        let cfg = || AutopilotConfig { slo_p95_ms: 100.0, ..Default::default() };
+        let mut solo = pilot(cfg());
+        let mut multi = MultiAutopilot::new(vec![pilot(cfg())], vec![1.0]);
+        let trace = [(20.0, 1.0), (60.0, 0.85), (60.0, 0.7), (45.0, 1.0), (20.0, 1.0)];
+        for (i, (p95, budget)) in trace.iter().enumerate() {
+            let inp = inputs(0.5 * i as f64, *p95, *budget);
+            let a = solo.tick(&inp, t);
+            let b = multi.tick(&[inp], t).remove(0);
+            assert_eq!(b.switch, a.switch, "tick {i}");
+            assert_eq!(b.decision, a.decision, "tick {i}");
+        }
+    }
+
+    #[test]
+    fn shared_envelope_charges_premium_before_best_effort() {
+        let t = Instant::now();
+        let mk = || pilot(AutopilotConfig { slo_p95_ms: 100.0, ..Default::default() });
+        let mut multi = MultiAutopilot::new(
+            vec![mk().with_class("premium"), mk().with_class("best_effort")],
+            vec![1.0, 1.0], // normalized to an even traffic split
+        );
+        // ample budget: both classes settle at the accurate top rung
+        let settle = multi.tick(&[inputs(0.0, 20.0, 1.0), inputs(0.0, 20.0, 1.0)], t);
+        assert_eq!(settle[0].decision.op, 0);
+        assert_eq!(settle[1].decision.op, 0);
+        // collapse below the frugal floor: premium is allocated the
+        // full env budget first; best-effort only sees what premium's
+        // floor rung left of the shared envelope
+        let outs = multi.tick(&[inputs(0.5, 20.0, 0.5), inputs(0.5, 20.0, 0.5)], t);
+        assert_eq!(outs[0].decision.budget, 0.5);
+        assert!(
+            (outs[1].decision.budget - 0.4).abs() < 1e-12,
+            "best-effort budget {}",
+            outs[1].decision.budget
+        );
+        assert_eq!(outs[0].decision.class.as_deref(), Some("premium"));
+        assert_eq!(outs[1].decision.class.as_deref(), Some("best_effort"));
     }
 }

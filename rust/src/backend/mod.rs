@@ -51,6 +51,22 @@ pub trait Backend {
     /// images `[batch, H, W, C]` f32 -> logits `[batch, classes]`.
     fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>>;
 
+    /// [`forward`](Backend::forward) carrying the requesting tenant's
+    /// class id.  Execution substrates produce the same logits for
+    /// every tenant, so the default ignores the tag; distributed
+    /// backends override it to stamp the class onto wire frames so
+    /// worker-side drain barriers stay scoped to one class.
+    fn forward_class(
+        &mut self,
+        class: usize,
+        op_idx: usize,
+        images: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let _ = class;
+        self.forward(op_idx, images, batch)
+    }
+
     /// Short stable identifier ("native", "pjrt", ...).
     fn name(&self) -> &str;
 

@@ -21,23 +21,26 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{Context, Result};
 
 use crate::autopilot::{
-    Autopilot, AutopilotConfig, ChunkAction, Decision, OpAction, PoolAction, TickInputs,
+    Autopilot, AutopilotConfig, ChunkAction, Decision, MultiAutopilot, OpAction, PoolAction,
+    TickInputs,
 };
 use crate::backend::{Backend, NativeBackend, OpTable, StubBackend};
 use crate::bench::arrivals::{self, Arrival};
 use crate::bench::dashboard::Dashboard;
 use crate::bench::report::{
     AutopilotBaseline, AutopilotReport, BenchReport, FleetReport, FleetWorkerReport, Interval,
-    OpReport, Provenance, Scaling, SwitchRecord, Switches, Throughput, REPORT_VERSION,
+    OpReport, Provenance, Scaling, SwitchRecord, Switches, TenantReport, Throughput,
+    REPORT_VERSION,
 };
-use crate::bench::scenario::{BackendKind, EventKind, QosSource, Scenario};
+use crate::bench::scenario::{BackendKind, EventKind, QosSource, Scenario, TenantSpec};
 use crate::bench::synthetic;
 use crate::fleet::worker::{self, WorkerHandle, WorkerOptions};
 use crate::fleet::{FleetBackend, FleetStats};
-use crate::obs::{self, metrics::{Kind, MetricFamily, Sample}, MetricsServer, ObsEvent};
+use crate::obs::{self, metrics::{CollectFn, Kind, MetricFamily, Sample}, MetricsServer, ObsEvent};
 use crate::qos::envsim::{EnvConfig, EnvEvent, EnvSimulator};
 use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
+use crate::util::rng::Rng;
 use crate::util::stats::LatencyHistogram;
 
 /// CLI-level overrides for one bench run.
@@ -218,7 +221,7 @@ fn run_once(sc: &Scenario, opts: &BenchOpts, mode: ApMode) -> Result<BenchReport
         duration_s.is_finite() && duration_s > 0.0,
         "bench duration must be finite and > 0"
     );
-    let cfg = batcher_config(sc);
+    let cfg = batcher_config(sc, tenanted(sc, mode));
 
     match sc.deployment.backend {
         BackendKind::Native => {
@@ -297,7 +300,16 @@ fn run_once(sc: &Scenario, opts: &BenchOpts, mode: ApMode) -> Result<BenchReport
     }
 }
 
-fn batcher_config(sc: &Scenario) -> BatcherConfig {
+/// Whether this pass splits the traffic into tenant classes: only the
+/// closed-loop pass of a multi-tenant scenario.  The baseline pass runs
+/// classless on the identical seed so the committed report's tenant
+/// numbers compare against exactly the trajectory tenancy replaced,
+/// and single-tenant scenarios never leave the classic path.
+fn tenanted(sc: &Scenario, mode: ApMode) -> bool {
+    mode == ApMode::Autopilot && sc.tenants.len() >= 2
+}
+
+fn batcher_config(sc: &Scenario, tenanted: bool) -> BatcherConfig {
     let d = &sc.deployment;
     let mut cfg = BatcherConfig {
         max_batch: d.max_batch,
@@ -317,6 +329,10 @@ fn batcher_config(sc: &Scenario) -> BatcherConfig {
     }
     if d.scale_down_after > 0 {
         cfg.scale_down_after = d.scale_down_after;
+    }
+    if tenanted {
+        cfg.classes = sc.tenants.len();
+        cfg.class_names = sc.tenants.iter().map(|t| t.name.clone()).collect();
     }
     cfg
 }
@@ -345,25 +361,31 @@ fn run_on<B: Backend + 'static>(
     let powers: Vec<f64> = server.ops().iter().map(|o| o.relative_power).collect();
     let op_names: Vec<String> = server.ops().iter().map(|o| o.name.clone()).collect();
 
-    // hand this pass's sources to the process-wide registry: event
-    // counters restart from zero, and the server/fleet/bench collectors
-    // replace the previous pass's by id, so a live scrape (and the
-    // dashboard, which reads the same registry) always reflects the
-    // pass in flight
+    // hand this pass's sources to the process-wide registry in one
+    // atomic rotation: event counters restart from zero *and* the
+    // server/fleet/bench collectors replace the previous pass's by id
+    // under the same critical section, so a live scrape (and the
+    // dashboard, which reads the same registry) sees the previous pass
+    // or this one — never stale per-OP families over zeroed counters
     let registry = obs::registry();
-    registry.reset_counters();
-    registry.register("server", server.metrics_collector());
-    match fleet.as_ref() {
-        Some(rig) => registry.register("fleet", rig.stats.metrics_collector()),
-        None => registry.unregister("fleet"),
-    }
     let gauges = Arc::new(Mutex::new(BenchGauges::default()));
+    let mut sources: Vec<(String, CollectFn)> =
+        vec![("server".into(), Box::new(server.metrics_collector()))];
+    if let Some(rig) = fleet.as_ref() {
+        sources.push(("fleet".into(), Box::new(rig.stats.metrics_collector())));
+    } else {
+        registry.unregister("fleet");
+    }
     {
         let g = Arc::clone(&gauges);
         let powers = powers.clone();
         let envelope = sc.power_envelope.unwrap_or(1.0);
-        registry.register("bench", move || bench_families(&g.lock().unwrap(), &powers, envelope));
+        sources.push((
+            "bench".into(),
+            Box::new(move || bench_families(&g.lock().unwrap(), &powers, envelope)),
+        ));
     }
+    registry.rotate_collectors(sources);
 
     // SLO tracking runs whenever the scenario declares a p95 target;
     // the autopilot itself actuates only in `ApMode::Autopilot`.
@@ -377,8 +399,9 @@ fn run_on<B: Backend + 'static>(
         ..AutopilotConfig::default()
     });
     let mut tracker = slo_cfg.as_ref().map(|cfg| SloTracker::new(cfg, ticks_per_interval));
+    let run_tenanted = tenanted(sc, ctx.mode);
     let mut pilot = match (&slo_cfg, ctx.mode) {
-        (Some(cfg), ApMode::Autopilot) => Some(Autopilot::new(
+        (Some(cfg), ApMode::Autopilot) if !run_tenanted => Some(Autopilot::new(
             server.op_table().ladder(),
             QosConfig {
                 upgrade_margin: sc.qos.upgrade_margin,
@@ -388,6 +411,36 @@ fn run_on<B: Backend + 'static>(
         )),
         _ => None,
     };
+    // multi-tenant closed loop: one pilot and one sliding p95 window
+    // per class, steering per-class rungs under the shared envelope
+    // with strict priority (premium first, so it sheds last)
+    let mut class_trackers: Vec<SloTracker> = Vec::new();
+    let mut multi = if run_tenanted {
+        let base = slo_cfg.clone().expect("tenants require slo_p95_ms (scenario validation)");
+        let mut pilots = Vec::with_capacity(sc.tenants.len());
+        for t in &sc.tenants {
+            let cfg = AutopilotConfig { slo_p95_ms: t.slo_p95_ms, ..base.clone() };
+            class_trackers.push(SloTracker::new(&cfg, ticks_per_interval));
+            pilots.push(
+                Autopilot::new(
+                    server.op_table().ladder(),
+                    QosConfig {
+                        upgrade_margin: sc.qos.upgrade_margin,
+                        min_dwell: Duration::from_millis(sc.qos.min_dwell_ms),
+                    },
+                    cfg,
+                )
+                .with_class(t.name.clone()),
+            );
+        }
+        let weights = sc.tenants.iter().map(|t| t.weight).collect();
+        Some(MultiAutopilot::new(pilots, weights))
+    } else {
+        None
+    };
+    // class picks draw from their own stream so the arrival trace (and
+    // with it `trace_hash`) is untouched by tenancy
+    let mut class_rng = Rng::new(ctx.seed ^ 0x7e4a_9c1d_5b3f_2081);
     // effective pool bounds the autopilot may steer within (mirrors the
     // BatcherConfig normalization: 0 floor = "same as workers")
     let (pool_min, pool_max) = if sc.deployment.max_workers > 0 {
@@ -415,6 +468,14 @@ fn run_on<B: Backend + 'static>(
     let mut next_arrival = 0usize;
     let mut last_completed = 0u64;
     let mut budget = 1.0f64;
+    // loopback-fleet re-probe cadence in ticks (the scenario knob
+    // mirroring serve's --reprobe-interval-ms); 0 = never, matching a
+    // serve loop that left the flag unset
+    let reprobe_every = if sc.deployment.reprobe_interval_ms > 0 {
+        (sc.deployment.reprobe_interval_ms / sc.tick_ms).max(1) as usize
+    } else {
+        0
+    };
     let started = Instant::now();
 
     for i in 0..total_ticks {
@@ -438,6 +499,7 @@ fn run_on<B: Backend + 'static>(
                         op,
                         mode: mode_tag(mode).to_string(),
                         trigger: "scripted".to_string(),
+                        class: None,
                     });
                     timeline.push(SwitchRecord {
                         t_s,
@@ -466,7 +528,72 @@ fn run_on<B: Backend + 'static>(
         //    drained upgrade is acked fleet-wide before the local flip)
         budget = source.sample(i, tick_s, powers[server.operating_point()]);
         let now = Instant::now();
-        if let Some(ap) = pilot.as_mut() {
+        if let Some(mp) = multi.as_mut() {
+            let m = server.metrics();
+            // the scenario-level tracker keeps observing the aggregate
+            // stream, so the report's headline trajectory stays
+            // comparable with the classless baseline pass
+            if let Some(tr) = tracker.as_mut() {
+                tr.observe(m.latency.clone(), t_s);
+            }
+            let mut inputs = Vec::with_capacity(mp.len());
+            let mut violated = Vec::with_capacity(mp.len());
+            for (c, tr) in class_trackers.iter_mut().enumerate() {
+                let (p95_ms, window, v) = tr.observe(m.per_class[c].latency.clone(), t_s);
+                violated.push(v);
+                inputs.push(TickInputs {
+                    t_s,
+                    p95_ms,
+                    window,
+                    env_budget: budget,
+                    live_workers: server.live_workers(),
+                    min_workers: pool_min,
+                    max_workers: pool_max,
+                    has_fleet: fleet.is_some(),
+                });
+            }
+            for (c, out) in mp.tick(&inputs, now).into_iter().enumerate() {
+                if let Some((idx, mode)) = out.switch {
+                    if let Some(rig) = fleet.as_mut() {
+                        rig.control.set_operating_point_class(Some(c), idx, mode)?;
+                    }
+                    server.set_class_operating_point_with(c, idx, mode)?;
+                    obs::publish(ObsEvent::OpSwitch {
+                        op: idx,
+                        mode: mode_tag(mode).to_string(),
+                        trigger: "autopilot".to_string(),
+                        class: Some(sc.tenants[c].name.clone()),
+                    });
+                    timeline.push(SwitchRecord {
+                        t_s,
+                        op: idx,
+                        mode: mode_tag(mode).to_string(),
+                        forced: false,
+                    });
+                }
+                // the pool and the fleet chunk plan are deployment-wide
+                // levers: the premium pilot owns them, so capacity is
+                // never grown or narrowed on a best-effort whim
+                if c == 0 {
+                    if let Some(target) = out.pool_target {
+                        server.set_pool_target(target);
+                    }
+                    if let Some(q) = out.chunk_quantum_us {
+                        if let Some(rig) = fleet.as_mut() {
+                            rig.stats.set_chunk_quantum_us(q);
+                        }
+                    }
+                }
+                let d = out.decision;
+                let acted = out.switch.is_some()
+                    || d.op_action != OpAction::None
+                    || d.pool_action != PoolAction::None
+                    || d.chunk_action != ChunkAction::None;
+                if acted || violated[c] || (i + 1) % ticks_per_interval == 0 {
+                    decisions.push(d);
+                }
+            }
+        } else if let Some(ap) = pilot.as_mut() {
             let tr = tracker.as_mut().expect("autopilot implies an SLO tracker");
             let (p95_ms, window, violated) = tr.observe(server.metrics().latency, t_s);
             let out = ap.tick(
@@ -491,6 +618,7 @@ fn run_on<B: Backend + 'static>(
                     op: idx,
                     mode: mode_tag(mode).to_string(),
                     trigger: "autopilot".to_string(),
+                    class: None,
                 });
                 timeline.push(SwitchRecord {
                     t_s,
@@ -527,6 +655,7 @@ fn run_on<B: Backend + 'static>(
                     op: idx,
                     mode: mode_tag(mode).to_string(),
                     trigger: "budget".to_string(),
+                    class: None,
                 });
                 timeline.push(SwitchRecord {
                     t_s,
@@ -540,6 +669,14 @@ fn run_on<B: Backend + 'static>(
             }
         }
 
+        // 2b. scheduled re-probe of disconnected fleet peers (a no-op
+        //     while every worker is healthy)
+        if reprobe_every > 0 && (i + 1) % reprobe_every == 0 {
+            if let Some(rig) = fleet.as_mut() {
+                rig.control.reprobe();
+            }
+        }
+
         // 3. replay arrivals due before this tick's deadline
         let deadline = started + tick * (i as u32 + 1);
         loop {
@@ -550,7 +687,14 @@ fn run_on<B: Backend + 'static>(
                 let at = a.image as usize * ctx.elems;
                 let img = &ctx.pool[at..at + ctx.elems];
                 for _ in 0..a.count {
-                    receivers.push(server.submit(img.to_vec())?);
+                    if run_tenanted {
+                        let c = pick_tenant(&sc.tenants, &mut class_rng);
+                        if let Some(rx) = server.submit_class(c, img.to_vec())? {
+                            receivers.push(rx);
+                        }
+                    } else {
+                        receivers.push(server.submit(img.to_vec())?);
+                    }
                     submitted += 1;
                 }
                 next_arrival += 1;
@@ -636,6 +780,7 @@ fn run_on<B: Backend + 'static>(
                 errors: w.errors,
                 mean_latency_us: w.mean_latency_us(),
                 evicted: w.evicted,
+                reprobes: w.reprobes,
             })
             .collect();
         Some(FleetReport { requeues, evictions, workers })
@@ -657,10 +802,14 @@ fn run_on<B: Backend + 'static>(
         .collect();
     let drain = timeline.iter().filter(|r| r.mode == "drain").count() as u64;
     let forced = timeline.iter().filter(|r| r.forced).count() as u64;
-    let budget_violations = pilot
-        .as_ref()
-        .map(|p| p.controller().budget_violations)
-        .unwrap_or(controller.budget_violations);
+    let budget_violations = if let Some(mp) = multi.as_ref() {
+        mp.pilots().iter().map(|p| p.controller().budget_violations).sum()
+    } else {
+        pilot
+            .as_ref()
+            .map(|p| p.controller().budget_violations)
+            .unwrap_or(controller.budget_violations)
+    };
     let autopilot = match (slo_cfg, tracker) {
         (Some(apcfg), Some(tr)) => {
             let first_downgrade_t_s = decisions
@@ -691,6 +840,27 @@ fn run_on<B: Backend + 'static>(
         }
         _ => None,
     };
+    // per-class slice of the run: serving counters from the batcher's
+    // class metrics, steering counters from each class's pilot/window
+    let tenants = multi.as_ref().map(|mp| {
+        sc.tenants
+            .iter()
+            .enumerate()
+            .map(|(c, t)| TenantReport {
+                name: t.name.clone(),
+                priority: t.priority,
+                share: t.share,
+                slo_p95_ms: Some(t.slo_p95_ms),
+                submitted: m.per_class[c].submitted,
+                completed: m.per_class[c].completed,
+                rejected: m.per_class[c].rejected,
+                retagged_batches: m.per_class[c].retagged_batches,
+                slo_violation_ticks: class_trackers[c].violation_ticks,
+                cap_saturated_ticks: mp.pilots()[c].cap_saturated_ticks,
+                latency: m.per_class[c].latency.clone(),
+            })
+            .collect()
+    });
     let created_unix = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -737,6 +907,7 @@ fn run_on<B: Backend + 'static>(
         },
         fleet: fleet_report,
         autopilot,
+        tenants,
         intervals,
     })
 }
@@ -787,6 +958,25 @@ fn bench_families(g: &BenchGauges, powers: &[f64], envelope: f64) -> Vec<MetricF
             vec![Sample::plain(powers.get(g.op).copied().unwrap_or(0.0))],
         ),
     ]
+}
+
+/// Weight-proportional tenant pick for one arrival.  Draws from its
+/// own seeded stream so the arrival trace — and with it `trace_hash` —
+/// is identical between the classless baseline pass and the tenanted
+/// closed-loop pass.
+fn pick_tenant(tenants: &[TenantSpec], rng: &mut Rng) -> usize {
+    let total: f64 = tenants.iter().map(|t| t.weight).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut x = rng.f64() * total;
+    for (i, t) in tenants.iter().enumerate() {
+        x -= t.weight;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    tenants.len() - 1
 }
 
 fn mode_tag(mode: SwitchMode) -> &'static str {

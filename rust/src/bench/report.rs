@@ -99,6 +99,10 @@ pub struct FleetWorkerReport {
     pub errors: u64,
     pub mean_latency_us: f64,
     pub evicted: bool,
+    /// Re-probe handshakes the control loop aimed at this worker
+    /// (omitted from the JSON while zero, so pre-existing reports stay
+    /// byte-identical).
+    pub reprobes: u64,
 }
 
 /// Fleet-level counters (absent for in-process deployments).
@@ -107,6 +111,36 @@ pub struct FleetReport {
     pub requeues: u64,
     pub evictions: u64,
     pub workers: Vec<FleetWorkerReport>,
+}
+
+/// One tenant class's slice of the run, present only for multi-tenant
+/// scenarios (the `tenants` array is omitted otherwise, keeping
+/// single-tenant reports byte-identical to the pre-tenancy schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantReport {
+    pub name: String,
+    /// Strict scheduling priority (0 = premium, sheds last).
+    pub priority: u32,
+    /// Admission weight against the other classes.
+    pub share: f64,
+    /// Per-class p95 SLO, ms (`None` = rides the deployment objective).
+    pub slo_p95_ms: Option<f64>,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Requests bounced by weighted admission — the shedding evidence:
+    /// under overload these should be best-effort until premium's own
+    /// SLO is violated.
+    pub rejected: u64,
+    /// Batches retagged to a cheaper OP after this class downgraded.
+    pub retagged_batches: u64,
+    /// Autopilot ticks whose windowed per-class p95 exceeded the
+    /// class's SLO.
+    pub slo_violation_ticks: u64,
+    /// Pressured ticks where the class controller wanted to shed
+    /// further but its rung cap already pinned the floor.
+    pub cap_saturated_ticks: u64,
+    /// End-to-end latency over this class's completed requests.
+    pub latency: LatencySummary,
 }
 
 /// The autopilot-off control run paired with an autopilot run: same
@@ -179,6 +213,9 @@ pub struct BenchReport {
     pub scaling: Scaling,
     pub fleet: Option<FleetReport>,
     pub autopilot: Option<AutopilotReport>,
+    /// Per-tenant-class slices; `None` for single-tenant runs (and
+    /// omitted from the JSON entirely).
+    pub tenants: Option<Vec<TenantReport>>,
     pub intervals: Vec<Interval>,
 }
 
@@ -295,14 +332,18 @@ impl BenchReport {
                         f.workers
                             .iter()
                             .map(|w| {
-                                Json::obj(vec![
+                                let mut fields = vec![
                                     ("addr", Json::str(w.addr.clone())),
                                     ("requests", Json::num(w.requests as f64)),
                                     ("batches", Json::num(w.batches as f64)),
                                     ("errors", Json::num(w.errors as f64)),
                                     ("mean_latency_us", Json::num(w.mean_latency_us)),
                                     ("evicted", Json::Bool(w.evicted)),
-                                ])
+                                ];
+                                if w.reprobes > 0 {
+                                    fields.push(("reprobes", Json::num(w.reprobes as f64)));
+                                }
+                                Json::obj(fields)
                             })
                             .collect(),
                     ),
@@ -359,7 +400,7 @@ impl BenchReport {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut root = vec![
             ("version", Json::num(self.version as f64)),
             ("scenario", Json::str(self.scenario.clone())),
             ("description", Json::str(self.description.clone())),
@@ -373,8 +414,33 @@ impl BenchReport {
             ("scaling", scaling),
             ("fleet", fleet),
             ("autopilot", autopilot),
-            ("intervals", Json::Arr(intervals)),
-        ])
+        ];
+        // the tenants array only exists for multi-tenant runs, so
+        // single-tenant reports stay byte-identical to the pre-tenancy
+        // schema
+        if let Some(tenants) = &self.tenants {
+            let arr = tenants
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::str(t.name.clone())),
+                        ("priority", Json::num(t.priority as f64)),
+                        ("share", Json::num(t.share)),
+                        ("slo_p95_ms", t.slo_p95_ms.map(Json::num).unwrap_or(Json::Null)),
+                        ("submitted", Json::num(t.submitted as f64)),
+                        ("completed", Json::num(t.completed as f64)),
+                        ("rejected", Json::num(t.rejected as f64)),
+                        ("retagged_batches", Json::num(t.retagged_batches as f64)),
+                        ("slo_violation_ticks", Json::num(t.slo_violation_ticks as f64)),
+                        ("cap_saturated_ticks", Json::num(t.cap_saturated_ticks as f64)),
+                        ("latency", summary_to_json(&t.latency)),
+                    ])
+                })
+                .collect();
+            root.push(("tenants", Json::Arr(arr)));
+        }
+        root.push(("intervals", Json::Arr(intervals)));
+        Json::obj(root)
     }
 
     /// Parse + validate a report (strict: wrong version or any missing
@@ -471,6 +537,8 @@ impl BenchReport {
                             errors: req_f64(w, "errors")? as u64,
                             mean_latency_us: req_f64(w, "mean_latency_us")?,
                             evicted: w.get("evicted").and_then(|x| x.as_bool()).unwrap_or(false),
+                            reprobes: w.get("reprobes").and_then(|x| x.as_f64()).unwrap_or(0.0)
+                                as u64,
                         })
                     })
                     .collect::<Result<Vec<_>>>()?;
@@ -547,6 +615,31 @@ impl BenchReport {
                 })
             }
         };
+        let tenants = match v.get("tenants").and_then(|x| x.as_arr()) {
+            None => None,
+            Some(arr) => Some(
+                arr.iter()
+                    .map(|t| {
+                        Ok(TenantReport {
+                            name: req_str(t, "name")?.to_string(),
+                            priority: req_f64(t, "priority")? as u32,
+                            share: req_f64(t, "share")?,
+                            slo_p95_ms: t.get("slo_p95_ms").and_then(|x| x.as_f64()),
+                            submitted: req_f64(t, "submitted")? as u64,
+                            completed: req_f64(t, "completed")? as u64,
+                            rejected: req_f64(t, "rejected")? as u64,
+                            retagged_batches: req_f64(t, "retagged_batches")? as u64,
+                            slo_violation_ticks: req_f64(t, "slo_violation_ticks")? as u64,
+                            cap_saturated_ticks: req_f64(t, "cap_saturated_ticks")? as u64,
+                            latency: summary_from_json(
+                                t.get("latency").context("report: tenant missing latency")?,
+                                "tenant latency",
+                            )?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        };
         let intervals = v
             .get("intervals")
             .and_then(|x| x.as_arr())
@@ -583,6 +676,7 @@ impl BenchReport {
             scaling,
             fleet,
             autopilot,
+            tenants,
             intervals,
         })
     }
@@ -674,6 +768,8 @@ mod tests {
                     pool_action: crate::autopilot::PoolAction::None,
                     chunk_action: crate::autopilot::ChunkAction::None,
                     bound: crate::autopilot::Bound::Latency,
+                    cap_saturated: false,
+                    class: None,
                 }],
                 baseline: Some(AutopilotBaseline {
                     slo_violation_ticks: 7,
@@ -691,8 +787,10 @@ mod tests {
                     errors: 0,
                     mean_latency_us: 800.0,
                     evicted: false,
+                    reprobes: 0,
                 }],
             }),
+            tenants: None,
             intervals: vec![Interval {
                 t_s: 0.5,
                 img_per_s: 50.0,
@@ -727,6 +825,49 @@ mod tests {
         // and with an autopilot section but no baseline
         let mut r = sample();
         r.autopilot.as_mut().unwrap().baseline = None;
+        let back =
+            BenchReport::from_json(&json::parse(&json::to_string(&r.to_json())).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn tenant_sections_round_trip_and_are_omitted_when_absent() {
+        // single-tenant: no tenants key, no zero-valued reprobes key —
+        // the schema is byte-compatible with pre-tenancy reports
+        let text = json::to_string(&sample().to_json());
+        assert!(!text.contains("\"tenants\""));
+        assert!(!text.contains("\"reprobes\""));
+
+        let mut r = sample();
+        r.fleet.as_mut().unwrap().workers[0].reprobes = 3;
+        r.tenants = Some(vec![
+            TenantReport {
+                name: "premium".into(),
+                priority: 0,
+                share: 3.0,
+                slo_p95_ms: Some(100.0),
+                submitted: 90,
+                completed: 90,
+                rejected: 0,
+                retagged_batches: 0,
+                slo_violation_ticks: 0,
+                cap_saturated_ticks: 0,
+                latency: LatencySummary::default(),
+            },
+            TenantReport {
+                name: "best_effort".into(),
+                priority: 1,
+                share: 1.0,
+                slo_p95_ms: None,
+                submitted: 40,
+                completed: 25,
+                rejected: 15,
+                retagged_batches: 2,
+                slo_violation_ticks: 6,
+                cap_saturated_ticks: 4,
+                latency: LatencySummary::default(),
+            },
+        ]);
         let back =
             BenchReport::from_json(&json::parse(&json::to_string(&r.to_json())).unwrap()).unwrap();
         assert_eq!(back, r);

@@ -107,10 +107,30 @@ pub struct Deployment {
     /// default (or the `QOS_NETS_FLEET_PIPELINE` override), 1 =
     /// lockstep request/response.  Fleet deployments only.
     pub pipeline: usize,
+    /// Rejoining re-probe cadence, ms; 0 = library default.  Fleet
+    /// deployments only.
+    pub reprobe_interval_ms: u64,
     /// Non-empty = spin up these loopback fleet workers and serve
     /// through a `FleetBackend` (scatter/gather + fleet-wide switch
     /// broadcast) instead of in-process backends.
     pub fleet: Vec<FleetWorkerSpec>,
+}
+
+/// One tenant class of a multi-tenant scenario: a share of the arrival
+/// stream pinned to its own SLO and admission weight.  Classes are
+/// listed premium-first (non-decreasing `priority`, 0 = premium) and
+/// their listed order is the class id every other layer uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Strict scheduling priority, 0 = premium (sheds last).
+    pub priority: u32,
+    /// Admission weight against the other classes under overload.
+    pub share: f64,
+    /// Per-class p95 latency SLO, ms.
+    pub slo_p95_ms: f64,
+    /// Relative weight of this class in the arrival mix.
+    pub weight: f64,
 }
 
 /// Where each tick's power budget comes from.
@@ -190,11 +210,16 @@ pub struct Scenario {
     /// Operator power envelope in (0, 1], capping the budget the
     /// autopilot hands its controller.  Requires `slo_p95_ms`.
     pub power_envelope: Option<f64>,
+    /// Tenant classes sharing the deployment (empty = the classic
+    /// single-tenant scenario; the canonical JSON omits the section so
+    /// pre-tenancy `config_hash`es are unchanged).  Requires
+    /// `slo_p95_ms` — per-class steering rides the autopilot.
+    pub tenants: Vec<TenantSpec>,
     pub events: Vec<Event>,
 }
 
 /// Every built-in scenario name, in presentation order.
-pub const BUILTIN_NAMES: [&str; 7] = [
+pub const BUILTIN_NAMES: [&str; 8] = [
     "steady_state",
     "diurnal_ramp",
     "incast_burst",
@@ -202,6 +227,7 @@ pub const BUILTIN_NAMES: [&str; 7] = [
     "ladder_thrash",
     "heterogeneous_fleet",
     "slo_pressure",
+    "tenant_contention",
 ];
 
 /// Rungs every bench ladder has (native synthetic and stub/fleet
@@ -291,6 +317,12 @@ impl Scenario {
         if self.deployment.pipeline > 0 {
             deployment_pairs.push(("pipeline", Json::num(self.deployment.pipeline as f64)));
         }
+        if self.deployment.reprobe_interval_ms > 0 {
+            deployment_pairs.push((
+                "reprobe_interval_ms",
+                Json::num(self.deployment.reprobe_interval_ms as f64),
+            ));
+        }
         deployment_pairs.push(("fleet", Json::Arr(fleet)));
         let deployment = Json::obj(deployment_pairs);
         let mut qos_pairs: Vec<(&str, Json)> = Vec::new();
@@ -363,6 +395,22 @@ impl Scenario {
         if let Some(envelope) = self.power_envelope {
             top.push(("power_envelope", Json::num(envelope)));
         }
+        if !self.tenants.is_empty() {
+            let tenants = self
+                .tenants
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::str(t.name.clone())),
+                        ("priority", Json::num(t.priority as f64)),
+                        ("share", Json::num(t.share)),
+                        ("slo_p95_ms", Json::num(t.slo_p95_ms)),
+                        ("weight", Json::num(t.weight)),
+                    ])
+                })
+                .collect();
+            top.push(("tenants", Json::Arr(tenants)));
+        }
         top.push(("events", Json::Arr(events)));
         Json::obj(top)
     }
@@ -395,6 +443,13 @@ impl Scenario {
         let qos = parse_qos(v.get("qos").context("scenario: missing qos")?)?;
         let slo_p95_ms = v.get("slo_p95_ms").and_then(|x| x.as_f64());
         let power_envelope = v.get("power_envelope").and_then(|x| x.as_f64());
+        let tenants = v
+            .get("tenants")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(parse_tenant)
+            .collect::<Result<Vec<_>>>()?;
         let events = v
             .get("events")
             .and_then(|x| x.as_arr())
@@ -416,6 +471,7 @@ impl Scenario {
             qos,
             slo_p95_ms,
             power_envelope,
+            tenants,
             events,
         };
         sc.validate()?;
@@ -487,6 +543,12 @@ impl Scenario {
                 self.name
             );
         }
+        if d.reprobe_interval_ms > 0 && d.fleet.is_empty() {
+            bail!(
+                "scenario {}: deployment.reprobe_interval_ms only applies to fleet deployments",
+                self.name
+            );
+        }
         if d.op_delay_scaling && (d.backend != BackendKind::Stub || !d.fleet.is_empty()) {
             bail!(
                 "scenario {}: op_delay_scaling applies to in-process stub deployments",
@@ -539,6 +601,38 @@ impl Scenario {
             }
             if self.slo_p95_ms.is_none() {
                 bail!("scenario {}: power_envelope needs slo_p95_ms (the autopilot SLO)", self.name);
+            }
+        }
+        if !self.tenants.is_empty() {
+            if self.slo_p95_ms.is_none() {
+                bail!(
+                    "scenario {}: tenants need slo_p95_ms (per-class steering rides the autopilot)",
+                    self.name
+                );
+            }
+            for (i, t) in self.tenants.iter().enumerate() {
+                if t.name.is_empty() {
+                    bail!("scenario {}: tenant {i}: empty name", self.name);
+                }
+                if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                    bail!("scenario {}: tenant {i}: duplicate name {:?}", self.name, t.name);
+                }
+                if !(t.share.is_finite() && t.share > 0.0) {
+                    bail!("scenario {}: tenant {i}: share must be finite and > 0", self.name);
+                }
+                if !(t.weight.is_finite() && t.weight > 0.0) {
+                    bail!("scenario {}: tenant {i}: weight must be finite and > 0", self.name);
+                }
+                if !(t.slo_p95_ms.is_finite() && t.slo_p95_ms > 0.0) {
+                    bail!("scenario {}: tenant {i}: slo_p95_ms must be finite and > 0", self.name);
+                }
+                if i > 0 && t.priority < self.tenants[i - 1].priority {
+                    bail!(
+                        "scenario {}: tenant {i}: classes must be listed premium-first \
+                         (non-decreasing priority)",
+                        self.name
+                    );
+                }
             }
         }
         for (i, e) in self.events.iter().enumerate() {
@@ -665,7 +759,19 @@ fn parse_deployment(v: &Json) -> Result<Deployment> {
         scale_up_after: v.get("scale_up_after").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
         scale_down_after: v.get("scale_down_after").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
         pipeline: v.get("pipeline").and_then(|x| x.as_usize()).unwrap_or(0),
+        reprobe_interval_ms: v.get("reprobe_interval_ms").and_then(|x| x.as_usize()).unwrap_or(0)
+            as u64,
         fleet,
+    })
+}
+
+fn parse_tenant(v: &Json) -> Result<TenantSpec> {
+    Ok(TenantSpec {
+        name: req_str(v, "name")?.to_string(),
+        priority: req_f64(v, "priority")? as u32,
+        share: req_f64(v, "share")?,
+        slo_p95_ms: req_f64(v, "slo_p95_ms")?,
+        weight: req_f64(v, "weight")?,
     })
 }
 
@@ -713,6 +819,7 @@ pub fn builtin(name: &str) -> Option<Scenario> {
         "ladder_thrash" => ladder_thrash(),
         "heterogeneous_fleet" => heterogeneous_fleet(),
         "slo_pressure" => slo_pressure(),
+        "tenant_contention" => tenant_contention(),
         _ => return None,
     };
     debug_assert!(sc.validate().is_ok(), "builtin {name} must validate");
@@ -734,6 +841,7 @@ fn base_deployment(backend: BackendKind) -> Deployment {
         scale_up_after: 0,
         scale_down_after: 0,
         pipeline: 0,
+        reprobe_interval_ms: 0,
         fleet: Vec::new(),
     }
 }
@@ -772,6 +880,7 @@ fn steady_state() -> Scenario {
         qos: base_qos(QosSource::Trace("sine".into())),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events: Vec::new(),
     }
 }
@@ -803,6 +912,7 @@ fn diurnal_ramp() -> Scenario {
         qos: base_qos(QosSource::Env),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events: vec![Event { at_s: 12.0, kind: EventKind::HarvestScale(0.0) }],
     }
 }
@@ -835,6 +945,7 @@ fn incast_burst() -> Scenario {
         qos: base_qos(QosSource::Constant(1.0)),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events: Vec::new(),
     }
 }
@@ -871,6 +982,7 @@ fn flash_crowd() -> Scenario {
         qos: base_qos(QosSource::Trace("steps".into())),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events: Vec::new(),
     }
 }
@@ -909,6 +1021,7 @@ fn ladder_thrash() -> Scenario {
         qos: base_qos(QosSource::Constant(1.0)),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events,
     }
 }
@@ -951,6 +1064,7 @@ fn heterogeneous_fleet() -> Scenario {
         qos: base_qos(QosSource::Trace("sine".into())),
         slo_p95_ms: None,
         power_envelope: None,
+        tenants: Vec::new(),
         events: Vec::new(),
     }
 }
@@ -1005,6 +1119,70 @@ fn slo_pressure() -> Scenario {
         },
         slo_p95_ms: Some(100.0),
         power_envelope: None,
+        tenants: Vec::new(),
+        events: vec![Event {
+            at_s: 4.0,
+            kind: EventKind::TariffWindow { scale: 0.9, secs: 5.0 },
+        }],
+    }
+}
+
+/// The slo_pressure overload shared by two tenant classes: a premium
+/// class (priority 0, 1/4 of the arrivals, tight SLO) and a best-effort
+/// class (priority 1, 3/4 of the arrivals, loose SLO) ride the same
+/// two-worker stub pool through the same tariff window and load peak.
+/// The per-class autopilot must shed the best-effort ladder first, so
+/// the committed `BENCH_tenant_contention.json` shows the premium
+/// class's violation-tick count strictly below the classless baseline
+/// pass while every shed/retag lands on best-effort.
+fn tenant_contention() -> Scenario {
+    Scenario {
+        name: "tenant_contention".into(),
+        description: "two tenant classes share the slo_pressure overload — the per-class \
+                      autopilot sheds the best-effort ladder first and keeps the premium \
+                      p95 inside its SLO"
+            .into(),
+        duration_s: 12.0,
+        seed: 31,
+        tick_ms: 50,
+        interval_ms: 500,
+        arrivals: vec![
+            ArrivalPhase { dur_s: 4.0, rate_rps: 75.0, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 5.0, rate_rps: 687.5, process: ArrivalProcess::Poisson },
+            ArrivalPhase { dur_s: 3.0, rate_rps: 75.0, process: ArrivalProcess::Poisson },
+        ],
+        batch_mix: vec![MixEntry { size: 4, weight: 1.0 }],
+        deployment: Deployment {
+            workers: 2,
+            max_batch: 8,
+            stub_delay_us: 8000,
+            op_delay_scaling: true,
+            ..base_deployment(BackendKind::Stub)
+        },
+        qos: QosSpec {
+            source: QosSource::Env,
+            upgrade_margin: 0.0,
+            min_dwell_ms: 100,
+            env_time_scale: 1.0,
+        },
+        slo_p95_ms: Some(100.0),
+        power_envelope: None,
+        tenants: vec![
+            TenantSpec {
+                name: "premium".into(),
+                priority: 0,
+                share: 3.0,
+                slo_p95_ms: 100.0,
+                weight: 1.0,
+            },
+            TenantSpec {
+                name: "best_effort".into(),
+                priority: 1,
+                share: 1.0,
+                slo_p95_ms: 250.0,
+                weight: 3.0,
+            },
+        ],
         events: vec![Event {
             at_s: 4.0,
             kind: EventKind::TariffWindow { scale: 0.9, secs: 5.0 },
@@ -1138,6 +1316,39 @@ mod tests {
         let mut sc = builtin("steady_state").unwrap();
         sc.deployment.scale_interval_ms = 10;
         assert!(sc.validate().unwrap_err().to_string().contains("elastic"));
+
+        // the reprobe cadence knob is fleet-only
+        let mut sc = builtin("steady_state").unwrap();
+        sc.deployment.reprobe_interval_ms = 200;
+        assert!(sc.validate().unwrap_err().to_string().contains("fleet"));
+    }
+
+    #[test]
+    fn tenant_sections_validate_premium_first_ordering_and_shapes() {
+        let sc = builtin("tenant_contention").unwrap();
+        assert_eq!(sc.tenants.len(), 2);
+        assert_eq!(sc.tenants[0].name, "premium");
+        assert!(sc.tenants[0].priority <= sc.tenants[1].priority);
+
+        // classes must be listed premium-first
+        let mut bad = sc.clone();
+        bad.tenants.swap(0, 1);
+        assert!(bad.validate().unwrap_err().to_string().contains("premium-first"));
+
+        // duplicate names are rejected
+        let mut bad = sc.clone();
+        bad.tenants[1].name = "premium".into();
+        assert!(bad.validate().unwrap_err().to_string().contains("duplicate"));
+
+        // tenants ride the autopilot, so the scenario SLO is required
+        let mut bad = sc.clone();
+        bad.slo_p95_ms = None;
+        assert!(bad.validate().unwrap_err().to_string().contains("slo_p95_ms"));
+
+        // shares and weights must be positive
+        let mut bad = sc.clone();
+        bad.tenants[1].share = 0.0;
+        assert!(bad.validate().unwrap_err().to_string().contains("share"));
     }
 
     #[test]
@@ -1153,6 +1364,8 @@ mod tests {
             "scale_interval_ms",
             "scale_up_after",
             "scale_down_after",
+            "reprobe_interval_ms",
+            "tenants",
         ] {
             assert!(!text.contains(key), "steady_state JSON should omit {key}: {text}");
         }

@@ -41,7 +41,7 @@ use crate::fleet::{FleetBackend, FleetRegistry, FleetStats};
 use crate::obs::{self, MetricsServer, ObsEvent, Recorder};
 use crate::pipeline::Experiment;
 use crate::plan::OpPlan;
-use crate::qos::{budget_trace, QosConfig, QosController, SwitchMode};
+use crate::qos::{budget_trace, ClassSet, QosConfig, QosController, SwitchMode};
 use crate::server::{BatcherConfig, Server};
 use crate::util::rng::Rng;
 use crate::util::stats::LatencyHistogram;
@@ -75,6 +75,17 @@ pub fn run(args: &Args) -> Result<()> {
     // `--workers N` keeps its pre-elastic meaning; the min default
     // stays under an explicit ceiling so --max-workers is honored
     let min_workers = args.get_usize("min-workers", workers.min(max_workers));
+    // --tenant NAME:SLO_MS:SHARE (repeatable, flag order = priority) or
+    // --tenants-file F: carve the deployment into tenant classes —
+    // per-class batch queues, per-class (op, mode) words, weighted
+    // admission under --max-inflight, per-class metrics
+    let tenants = match args.get("tenants-file") {
+        Some(path) => ClassSet::from_json_file(std::path::Path::new(path))?,
+        None => ClassSet::from_flags(&args.get_all("tenant"))?,
+    };
+    if tenants.is_multi() {
+        println!("tenants: {} classes ({})", tenants.len(), tenants.names().join(", "));
+    }
     let mut cfg = BatcherConfig {
         max_batch: args.get_usize("max-batch", 16),
         max_wait: Duration::from_millis(4),
@@ -82,6 +93,10 @@ pub fn run(args: &Args) -> Result<()> {
         min_workers,
         max_workers,
         retag_downgrades: args.has("retag-downgrades"),
+        classes: tenants.len(),
+        class_names: tenants.names(),
+        admit_fracs: tenants.admit_fracs(),
+        max_inflight: args.get_usize("max-inflight", 0),
         ..BatcherConfig::default()
     };
     // supervisor cadence knobs; unset keeps the library defaults
@@ -169,7 +184,8 @@ pub fn run(args: &Args) -> Result<()> {
             table,
             cfg,
         )?;
-        return drive(args, &exp, server, controller, pilot, Some((control, stats, registry)));
+        let fleet = Some((control, stats, registry));
+        return drive(args, &exp, server, controller, pilot, fleet, tenants);
     }
     anyhow::ensure!(
         !args.has("registry"),
@@ -189,7 +205,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller, pilot, None)
+            drive(args, &exp, server, controller, pilot, None, tenants)
         }
         #[cfg(feature = "pjrt")]
         "pjrt" => {
@@ -207,7 +223,7 @@ pub fn run(args: &Args) -> Result<()> {
                 table,
                 cfg,
             )?;
-            drive(args, &exp, server, controller, pilot, None)
+            drive(args, &exp, server, controller, pilot, None, tenants)
         }
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => bail!("this build has no PJRT support (rebuild with the `pjrt` feature)"),
@@ -228,6 +244,7 @@ fn drive<B: Backend + 'static>(
     mut controller: QosController,
     mut pilot: Option<ApRig>,
     mut fleet: Option<(FleetBackend, FleetStats, Option<FleetRegistry>)>,
+    tenants: ClassSet,
 ) -> Result<()> {
     let secs = args.get_f64("secs", 3.0);
     let rate = args.get_f64("rate", 200.0); // requests/second
@@ -272,6 +289,13 @@ fn drive<B: Backend + 'static>(
         .as_ref()
         .map(|(c, _, _)| ((c.hb_interval().as_millis() as u64 / 50).max(1), c.hb_timeout()))
         .unwrap_or((20, Duration::from_millis(500)));
+    // --reprobe-interval-ms: decouple evicted-worker re-probing from
+    // the heartbeat cadence (unset keeps the legacy behavior: re-probe
+    // on every heartbeat tick), quantized to 50 ms steps
+    let reprobe_every = args
+        .get("reprobe-interval-ms")
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(|ms| (ms / 50).max(1));
     let mut receivers = Vec::new();
     let mut rng = Rng::new(42);
     let started = Instant::now();
@@ -381,10 +405,16 @@ fn drive<B: Backend + 'static>(
                 }
                 .to_string(),
                 trigger: if piloted { "autopilot" } else { "budget" }.to_string(),
+                class: None,
             });
         }
         if let Some((control, stats, registry)) = fleet.as_mut() {
-            if step as u64 % hb_every == hb_every - 1 {
+            let hb_tick = step as u64 % hb_every == hb_every - 1;
+            let reprobe_tick = match reprobe_every {
+                Some(every) => step as u64 % every == every - 1,
+                None => hb_tick,
+            };
+            if hb_tick {
                 control.heartbeat(hb_timeout);
                 // grow: workers that announced via `worker --join`
                 if let Some(reg) = registry {
@@ -394,12 +424,16 @@ fn drive<B: Backend + 'static>(
                         println!("fleet: admitted {n}/{} joining worker(s)", pending.len());
                     }
                 }
+            }
+            if reprobe_tick {
                 // heal: evicted workers that recovered rejoin with
                 // their stats (and the OP ladder) restored
                 let rejoined = control.reprobe();
                 if rejoined > 0 {
                     println!("fleet: {rejoined} evicted worker(s) rejoined");
                 }
+            }
+            if hb_tick {
                 // any new eviction since the last probe flushes the
                 // flight ring (membership loss is exactly the moment
                 // the preceding seconds of events matter)
@@ -420,7 +454,17 @@ fn drive<B: Backend + 'static>(
         while Instant::now() < step_end {
             let i = rng.below(n_img);
             let img = images[i * elems..(i + 1) * elems].to_vec();
-            receivers.push(server.submit(img)?);
+            if tenants.is_multi() {
+                // share-weighted tenant mix; rejected submissions
+                // (weighted admission under --max-inflight) show up in
+                // the per-class rejected counters, not here
+                let class = pick_class(&tenants, &mut rng);
+                if let Some(rx) = server.submit_class(class, img)? {
+                    receivers.push(rx);
+                }
+            } else {
+                receivers.push(server.submit(img)?);
+            }
             submitted += 1;
             energy += server.ops()[server.operating_point()].relative_power;
             let gap = Duration::from_secs_f64(rng.exp(rate));
@@ -492,6 +536,21 @@ fn drive<B: Backend + 'static>(
             h.p99_us as f64 / 1e3,
         );
     }
+    if tenants.is_multi() {
+        for (i, pc) in m.per_class.iter().enumerate() {
+            let t = tenants.get(i);
+            println!(
+                "  class {} (priority {}): submitted={} completed={} rejected={} retagged-batches={}  p99<={:.2}ms",
+                t.name,
+                t.priority,
+                pc.submitted,
+                pc.completed,
+                pc.rejected,
+                pc.retagged_batches,
+                pc.latency.p99_us as f64 / 1e3,
+            );
+        }
+    }
     println!(
         "  mean relative multiplication power over run: {:.2}%",
         100.0 * energy / submitted.max(1) as f64
@@ -527,8 +586,8 @@ fn drive<B: Backend + 'static>(
                 0.0
             };
             println!(
-                "      hb-misses={} requeued-chunks={} drain-waits={} (mean {:.2}ms)",
-                w.hb_misses, w.requeues, w.drain_waits, mean_drain_ms,
+                "      hb-misses={} requeued-chunks={} drain-waits={} (mean {:.2}ms) reprobes={}",
+                w.hb_misses, w.requeues, w.drain_waits, mean_drain_ms, w.reprobes,
             );
         }
     }
@@ -536,4 +595,17 @@ fn drive<B: Backend + 'static>(
         obs::detach_recorder(rec);
     }
     Ok(())
+}
+
+/// Share-weighted tenant pick for the synthetic load mix.
+fn pick_class(tenants: &ClassSet, rng: &mut Rng) -> usize {
+    let total: f64 = tenants.iter().map(|c| c.share).sum();
+    let mut x = rng.f64() * total;
+    for (i, c) in tenants.iter().enumerate() {
+        x -= c.share;
+        if x < 0.0 {
+            return i;
+        }
+    }
+    tenants.len() - 1
 }

@@ -10,7 +10,9 @@ use std::collections::HashMap;
 pub struct Args {
     pub command: String,
     pub positional: Vec<String>,
-    flags: HashMap<String, String>,
+    /// Every occurrence of each valued flag, in argv order (repeatable
+    /// flags like `--tenant` read them all; `get` takes the last).
+    flags: HashMap<String, Vec<String>>,
     switches: Vec<String>,
 }
 
@@ -27,7 +29,7 @@ impl Args {
                 // value if next token exists and is not another flag
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
-                        out.flags.insert(name.to_string(), (*v).clone());
+                        out.flags.entry(name.to_string()).or_default().push((*v).clone());
                         it.next();
                     }
                     _ => out.switches.push(name.to_string()),
@@ -40,7 +42,13 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every value a repeatable flag was given, in argv order (empty
+    /// when the flag is absent).
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -85,7 +93,9 @@ COMMANDS
             [--scale-interval-ms N] [--scale-up-after N]
             [--scale-down-after N]
             [--fleet H:P,H:P,...] [--pipeline N] [--registry ADDR]
-            [--retag-downgrades]
+            [--reprobe-interval-ms N] [--retag-downgrades]
+            [--tenant NAME:SLO_MS:SHARE]... [--tenants-file F.json]
+            [--max-inflight N]
             [--autopilot [--slo-p95-ms MS] [--power-envelope F]]
             [--metrics-addr HOST:PORT] [--flight-recorder [DIR]]
                                 QoS serving demo: elastic batching server
@@ -106,6 +116,19 @@ COMMANDS
                                 --scale-interval-ms/--scale-up-after/
                                 --scale-down-after tune the supervisor's
                                 sampling cadence and hysteresis;
+                                --reprobe-interval-ms re-probes evicted
+                                fleet workers on its own cadence instead
+                                of every heartbeat tick;
+                                --tenant (repeatable, flag order =
+                                priority: first = premium) or
+                                --tenants-file carve the deployment into
+                                tenant classes — per-class queues and
+                                (op, mode) words, per-class metrics, and
+                                share-weighted admission under
+                                --max-inflight (0 = unlimited): under
+                                overload best-effort classes are
+                                rejected first, premium only when the
+                                deployment is hard-full;
                                 --autopilot closes the loop on a latency
                                 SLO: one controller jointly steers the
                                 OP ladder, the worker pool and the fleet
@@ -193,6 +216,14 @@ mod tests {
         assert_eq!(a.get("exp"), Some("quick"));
         assert!(a.has("verbose"));
         assert_eq!(a.get_usize("limit", 0), 10);
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_value_and_get_takes_the_last() {
+        let a = parse(&["serve", "--tenant", "premium:100:3", "--tenant", "be:250:1"]);
+        assert_eq!(a.get_all("tenant"), vec!["premium:100:3", "be:250:1"]);
+        assert_eq!(a.get("tenant"), Some("be:250:1"));
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

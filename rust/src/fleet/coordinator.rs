@@ -136,6 +136,10 @@ pub struct WorkerStats {
     /// Cumulative time the coordinator spent waiting on this worker's
     /// drain-barrier acks, microseconds.
     pub drain_wait_us: u64,
+    /// Re-probe handshakes aimed at this worker (successful or not);
+    /// surfaced in the per-worker fleet report so operators can see
+    /// how hard the control loop is working a flapping box.
+    pub reprobes: u64,
     /// Forwards currently in flight on this worker's connection.
     pub inflight: u64,
     /// Epoch whose eviction has already been counted (dedup across
@@ -388,7 +392,7 @@ impl FleetStats {
                     vec![Sample::plain(stats.chunk_quantum_us())],
                 ),
             ];
-            let per_worker: [(&str, &str, Kind, fn(&WorkerStats) -> f64); 10] = [
+            let per_worker: [(&str, &str, Kind, fn(&WorkerStats) -> f64); 11] = [
                 (
                     "qos_nets_fleet_worker_requests_total",
                     "Images served per fleet worker.",
@@ -436,6 +440,12 @@ impl FleetStats {
                     "Cumulative drain-barrier wait per fleet worker, microseconds.",
                     Kind::Counter,
                     |w| w.drain_wait_us as f64,
+                ),
+                (
+                    "qos_nets_fleet_worker_reprobes_total",
+                    "Re-probe handshakes aimed at each fleet worker.",
+                    Kind::Counter,
+                    |w| w.reprobes as f64,
                 ),
                 (
                     "qos_nets_fleet_worker_ewma_img_us",
@@ -636,6 +646,7 @@ fn peer_pump(
     queue: &Mutex<VecDeque<Chunk>>,
     window: usize,
     fallback: usize,
+    class: Option<usize>,
     op_idx: usize,
     images: &[f32],
     elems: usize,
@@ -663,7 +674,12 @@ fn peer_pump(
         while pulling && inflight.len() < win {
             let want = chunk_target(quantum_us, stats.ewma_img_us(&addr), fallback);
             let Some(chunk) = take_chunk(queue, want) else { break };
-            let frame = Frame::Forward { id: Some(next_id), op: Some(op_idx), batch: chunk.len };
+            let frame = Frame::Forward {
+                id: Some(next_id),
+                op: Some(op_idx),
+                batch: chunk.len,
+                class,
+            };
             let data = &images[chunk.start * elems..(chunk.start + chunk.len) * elems];
             if wire::write_frame(&mut stream, &frame, data).is_err() {
                 stats.with_worker(&addr, |w| w.requeues += 1);
@@ -749,6 +765,11 @@ pub struct FleetBackend {
     /// The OP this backend last broadcast, replayed on rejoin so a
     /// recovered worker serves the fleet's current point, not rung 0.
     current_op: Option<usize>,
+    /// Per-tenant-class OP overrides last broadcast
+    /// ([`set_operating_point_class`](Self::set_operating_point_class)),
+    /// replayed on rejoin after `current_op` so a recovered worker
+    /// serves every class at the fleet's current point.
+    class_ops: BTreeMap<usize, usize>,
 }
 
 impl FleetBackend {
@@ -797,6 +818,7 @@ impl FleetBackend {
             pipeline: pipeline_from_env(),
             ladder: None,
             current_op: None,
+            class_ops: BTreeMap::new(),
         })
     }
 
@@ -910,8 +932,13 @@ impl FleetBackend {
         if let Some(op) = self.current_op {
             // fire-and-forget: align the recovered worker with the
             // fleet's current operating point
-            wire::write_frame(&mut stream, &Frame::SetOp { op, drain: false }, &[])
+            wire::write_frame(&mut stream, &Frame::SetOp { op, drain: false, class: None }, &[])
                 .with_context(|| format!("set_op to rejoining worker {addr}"))?;
+        }
+        for (&class, &op) in &self.class_ops {
+            let frame = Frame::SetOp { op, drain: false, class: Some(class) };
+            wire::write_frame(&mut stream, &frame, &[])
+                .with_context(|| format!("class set_op to rejoining worker {addr}"))?;
         }
         stream.set_read_timeout(Some(self.io_timeout)).ok();
         stream.set_write_timeout(Some(self.io_timeout)).ok();
@@ -989,6 +1016,7 @@ impl FleetBackend {
                 continue;
             }
             let addr = self.peers[i].addr.clone();
+            self.stats.with_worker(&addr, |w| w.reprobes += 1);
             if self.stats.state_of(&addr) == MemberState::Evicted {
                 self.stats.set_rejoining(&addr);
             }
@@ -1040,8 +1068,22 @@ impl FleetBackend {
     /// survivor has.  `Immediate` is a fire-and-forget store on every
     /// worker.
     pub fn set_operating_point(&mut self, op: usize, mode: SwitchMode) -> Result<usize> {
+        self.set_operating_point_class(None, op, mode)
+    }
+
+    /// [`set_operating_point`](Self::set_operating_point) scoped to one
+    /// tenant class: the `SetOp` frame carries the class id, so each
+    /// worker's drain barrier waits only on that class's in-flight
+    /// forwards — a premium switch never queues behind a best-effort
+    /// drain.  `None` is the legacy whole-fleet switch.
+    pub fn set_operating_point_class(
+        &mut self,
+        class: Option<usize>,
+        op: usize,
+        mode: SwitchMode,
+    ) -> Result<usize> {
         let drain = mode == SwitchMode::Drain;
-        let frame = Frame::SetOp { op, drain };
+        let frame = Frame::SetOp { op, drain, class };
         let stats = self.stats.clone();
         let mut sent = Vec::new();
         for (i, peer) in self.peers.iter_mut().enumerate() {
@@ -1055,11 +1097,12 @@ impl FleetBackend {
             bail!("fleet: no live workers to switch");
         }
         if !drain {
-            self.current_op = Some(op);
+            self.store_broadcast_op(class, op);
             obs::publish(ObsEvent::OpSwitch {
                 op,
                 mode: "immediate".to_string(),
                 trigger: "fleet".to_string(),
+                class: class.map(|c| c.to_string()),
             });
             return Ok(sent.len());
         }
@@ -1100,7 +1143,7 @@ impl FleetBackend {
         if acks == 0 {
             bail!("fleet: every worker died during the drain switch");
         }
-        self.current_op = Some(op);
+        self.store_broadcast_op(class, op);
         // published only after every surviving worker acked its
         // barrier, so recorded event order reflects the guarantee:
         // pre-switch FleetChunk events precede this, post-switch ones
@@ -1109,8 +1152,24 @@ impl FleetBackend {
             op,
             mode: "drain".to_string(),
             trigger: "fleet".to_string(),
+            class: class.map(|c| c.to_string()),
         });
         Ok(acks)
+    }
+
+    /// Remember what the last switch broadcast so rejoin handshakes can
+    /// replay it: a whole-fleet switch supersedes every per-class
+    /// override, a class-scoped one layers on top.
+    fn store_broadcast_op(&mut self, class: Option<usize>, op: usize) {
+        match class {
+            None => {
+                self.current_op = Some(op);
+                self.class_ops.clear();
+            }
+            Some(c) => {
+                self.class_ops.insert(c, op);
+            }
+        }
     }
 
     /// Probe every live worker with a `Heartbeat` under `timeout`, then
@@ -1198,6 +1257,7 @@ impl FleetBackend {
         queue: &Mutex<VecDeque<Chunk>>,
         window: usize,
         fallback: usize,
+        class: Option<usize>,
         op_idx: usize,
         images: &[f32],
         elems: usize,
@@ -1210,57 +1270,23 @@ impl FleetBackend {
                 }
                 let stats = stats.clone();
                 handles.push(s.spawn(move || {
-                    peer_pump(peer, stats, queue, window, fallback, op_idx, images, elems)
+                    peer_pump(peer, stats, queue, window, fallback, class, op_idx, images, elems)
                 }));
             }
             handles.into_iter().flat_map(|h| h.join().expect("fleet peer thread")).collect()
         })
     }
-}
 
-impl Backend for FleetBackend {
-    /// Broadcast the ladder to every worker (names + expected powers;
-    /// each worker resolves the OPs from its local catalog and makes
-    /// them resident).  A worker that *rejects* the ladder fails
-    /// prepare — a fleet serving mismatched plans is a configuration
-    /// error, not a failover case; workers that die leave the live
-    /// set.  The ladder is kept for replay on every rejoin handshake.
-    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
-        anyhow::ensure!(!ops.is_empty(), "fleet prepare: empty ladder");
-        let ladder: Vec<LadderRung> = ops
-            .iter()
-            .map(|o| LadderRung { name: o.name.clone(), power: o.relative_power })
-            .collect();
-        let frame = Frame::Prepare { ladder: ladder.clone() };
-        let stats = self.stats.clone();
-        let mut prepared = 0usize;
-        for peer in &mut self.peers {
-            if peer.stream.is_none() {
-                continue;
-            }
-            match call(peer, &stats, &frame, &[]) {
-                Ok((Frame::Ok, _)) => prepared += 1,
-                Ok((Frame::Err { message, .. }, _)) => {
-                    bail!("fleet worker {} rejected prepare: {message}", peer.addr)
-                }
-                Ok((other, _)) => bail!(
-                    "fleet worker {}: unexpected {} to prepare",
-                    peer.addr,
-                    other.type_name()
-                ),
-                Err(_) => {} // handled by `call`
-            }
-        }
-        anyhow::ensure!(prepared > 0, "fleet prepare: no live workers");
-        self.ladder = Some(ladder);
-        Ok(())
-    }
-
-    /// Scatter the batch across live workers (pipelined, latency-aware
-    /// chunk sizing), gather logits in completion order, reassemble in
-    /// submission order, rebalancing chunks from dead workers onto
-    /// survivors (bounded retries per chunk).
-    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+    /// The shared body of [`Backend::forward`] and
+    /// [`Backend::forward_class`]: scatter/gather with an optional
+    /// tenant-class tag stamped onto every `Forward` frame.
+    fn forward_tagged(
+        &mut self,
+        class: Option<usize>,
+        op_idx: usize,
+        images: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(
             batch > 0 && !images.is_empty() && images.len() % batch == 0,
             "bad fleet input: {} elems for batch {batch}",
@@ -1289,6 +1315,7 @@ impl Backend for FleetBackend {
                 &queue,
                 window,
                 fallback,
+                class,
                 op_idx,
                 images,
                 elems,
@@ -1335,6 +1362,67 @@ impl Backend for FleetBackend {
             out.len()
         );
         Ok(out)
+    }
+}
+
+impl Backend for FleetBackend {
+    /// Broadcast the ladder to every worker (names + expected powers;
+    /// each worker resolves the OPs from its local catalog and makes
+    /// them resident).  A worker that *rejects* the ladder fails
+    /// prepare — a fleet serving mismatched plans is a configuration
+    /// error, not a failover case; workers that die leave the live
+    /// set.  The ladder is kept for replay on every rejoin handshake.
+    fn prepare(&mut self, ops: &[OperatingPoint]) -> Result<()> {
+        anyhow::ensure!(!ops.is_empty(), "fleet prepare: empty ladder");
+        let ladder: Vec<LadderRung> = ops
+            .iter()
+            .map(|o| LadderRung { name: o.name.clone(), power: o.relative_power })
+            .collect();
+        let frame = Frame::Prepare { ladder: ladder.clone() };
+        let stats = self.stats.clone();
+        let mut prepared = 0usize;
+        for peer in &mut self.peers {
+            if peer.stream.is_none() {
+                continue;
+            }
+            match call(peer, &stats, &frame, &[]) {
+                Ok((Frame::Ok, _)) => prepared += 1,
+                Ok((Frame::Err { message, .. }, _)) => {
+                    bail!("fleet worker {} rejected prepare: {message}", peer.addr)
+                }
+                Ok((other, _)) => bail!(
+                    "fleet worker {}: unexpected {} to prepare",
+                    peer.addr,
+                    other.type_name()
+                ),
+                Err(_) => {} // handled by `call`
+            }
+        }
+        anyhow::ensure!(prepared > 0, "fleet prepare: no live workers");
+        self.ladder = Some(ladder);
+        Ok(())
+    }
+
+    /// Scatter the batch across live workers (pipelined, latency-aware
+    /// chunk sizing), gather logits in completion order, reassemble in
+    /// submission order, rebalancing chunks from dead workers onto
+    /// survivors (bounded retries per chunk).
+    fn forward(&mut self, op_idx: usize, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.forward_tagged(None, op_idx, images, batch)
+    }
+
+    /// [`forward`](Backend::forward) with the tenant class stamped on
+    /// every `Forward` frame, so worker-side gates account the chunk to
+    /// that class and class-scoped drain barriers wait only on their
+    /// own traffic.
+    fn forward_class(
+        &mut self,
+        class: usize,
+        op_idx: usize,
+        images: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        self.forward_tagged(Some(class), op_idx, images, batch)
     }
 
     fn name(&self) -> &str {

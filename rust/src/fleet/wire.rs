@@ -110,14 +110,20 @@ pub enum Frame {
     /// `op` indexes the prepared ladder; `None` uses the worker's
     /// current OP (set by `SetOp`).  `id` is the pipelining request
     /// tag the worker echoes on the matching reply; `None` keeps the
-    /// legacy strict request/response semantics.
-    Forward { id: Option<u64>, op: Option<usize>, batch: usize },
+    /// legacy strict request/response semantics.  `class` tags the
+    /// batch with its tenant class so a per-class drain barrier counts
+    /// only its own in-flight forwards; `None` = untagged
+    /// (single-tenant, the legacy encoding).
+    Forward { id: Option<u64>, op: Option<usize>, batch: usize, class: Option<usize> },
     /// `Forward` answer; payload = `[batch, classes]` logits flattened.
     /// `id` echoes the request tag when the Forward carried one.
     Logits { id: Option<u64>, classes: usize },
     /// Fleet-wide switch: `drain` = barrier (worker finishes in-flight
     /// forwards, applies, acks `Ok`); `!drain` = fire-and-forget store.
-    SetOp { op: usize, drain: bool },
+    /// `class` scopes a drain barrier to one tenant class's in-flight
+    /// forwards, so a premium switch never stalls behind a best-effort
+    /// drain; `None` keeps the fleet-wide (all-class) semantics.
+    SetOp { op: usize, drain: bool, class: Option<usize> },
     /// Liveness probe.
     Heartbeat,
     /// `Heartbeat` answer with a peek at the worker's state.
@@ -227,7 +233,7 @@ impl Frame {
                     .collect();
                 pairs.push(("ladder", Json::Arr(rungs)));
             }
-            Frame::Forward { id, op, batch } => {
+            Frame::Forward { id, op, batch, class } => {
                 if let Some(id) = id {
                     pairs.push(("id", Json::num(*id as f64)));
                 }
@@ -235,6 +241,9 @@ impl Frame {
                     pairs.push(("op", Json::num(*op as f64)));
                 }
                 pairs.push(("batch", Json::num(*batch as f64)));
+                if let Some(class) = class {
+                    pairs.push(("class", Json::num(*class as f64)));
+                }
             }
             Frame::Logits { id, classes } => {
                 if let Some(id) = id {
@@ -242,9 +251,12 @@ impl Frame {
                 }
                 pairs.push(("classes", Json::num(*classes as f64)));
             }
-            Frame::SetOp { op, drain } => {
+            Frame::SetOp { op, drain, class } => {
                 pairs.push(("op", Json::num(*op as f64)));
                 pairs.push(("drain", Json::Bool(*drain)));
+                if let Some(class) = class {
+                    pairs.push(("class", Json::num(*class as f64)));
+                }
             }
             Frame::Pong { current_op, served } => {
                 pairs.push(("current_op", Json::num(*current_op as f64)));
@@ -325,6 +337,8 @@ impl Frame {
                 id: opt_id(),
                 op: v.get("op").and_then(|x| x.as_usize()),
                 batch: req_usize("batch")?,
+                // lenient: pre-tenancy coordinators omit the class tag
+                class: v.get("class").and_then(|x| x.as_usize()),
             },
             "logits" => Frame::Logits {
                 id: opt_id(),
@@ -333,6 +347,8 @@ impl Frame {
             "set_op" => Frame::SetOp {
                 op: req_usize("op")?,
                 drain: v.get("drain").and_then(|x| x.as_bool()).unwrap_or(false),
+                // lenient: pre-tenancy coordinators switch all classes
+                class: v.get("class").and_then(|x| x.as_usize()),
             },
             "heartbeat" => Frame::Heartbeat,
             "pong" => Frame::Pong {
@@ -464,14 +480,16 @@ mod tests {
             &[],
         );
         roundtrip(
-            Frame::Forward { id: Some(7), op: Some(1), batch: 2 },
+            Frame::Forward { id: Some(7), op: Some(1), batch: 2, class: None },
             &[1.0, -2.5, 0.0, 3e-9],
         );
-        roundtrip(Frame::Forward { id: None, op: None, batch: 1 }, &[0.5]);
+        roundtrip(Frame::Forward { id: None, op: None, batch: 1, class: None }, &[0.5]);
+        roundtrip(Frame::Forward { id: Some(9), op: Some(0), batch: 1, class: Some(1) }, &[0.5]);
         roundtrip(Frame::Logits { id: Some(7), classes: 2 }, &[0.1, 0.9]);
         roundtrip(Frame::Logits { id: None, classes: 2 }, &[0.1, 0.9]);
-        roundtrip(Frame::SetOp { op: 1, drain: true }, &[]);
-        roundtrip(Frame::SetOp { op: 0, drain: false }, &[]);
+        roundtrip(Frame::SetOp { op: 1, drain: true, class: None }, &[]);
+        roundtrip(Frame::SetOp { op: 0, drain: false, class: None }, &[]);
+        roundtrip(Frame::SetOp { op: 2, drain: true, class: Some(0) }, &[]);
         roundtrip(Frame::Heartbeat, &[]);
         roundtrip(Frame::Pong { current_op: 2, served: 12345 }, &[]);
         roundtrip(Frame::Drain, &[]);
@@ -508,13 +526,17 @@ mod tests {
     #[test]
     fn consecutive_frames_share_a_stream() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::Forward { id: None, op: Some(0), batch: 1 }, &[7.0])
-            .unwrap();
+        write_frame(
+            &mut buf,
+            &Frame::Forward { id: None, op: Some(0), batch: 1, class: None },
+            &[7.0],
+        )
+        .unwrap();
         write_frame(&mut buf, &Frame::Heartbeat, &[]).unwrap();
         let mut cur = Cursor::new(&buf);
         let (f1, p1) = read_frame(&mut cur).unwrap();
         let (f2, p2) = read_frame(&mut cur).unwrap();
-        assert_eq!(f1, Frame::Forward { id: None, op: Some(0), batch: 1 });
+        assert_eq!(f1, Frame::Forward { id: None, op: Some(0), batch: 1, class: None });
         assert_eq!(p1, vec![7.0]);
         assert_eq!(f2, Frame::Heartbeat);
         assert!(p2.is_empty());
@@ -535,10 +557,11 @@ mod tests {
     #[test]
     fn only_requests_expect_replies_and_immediate_setop_does_not() {
         assert!(Frame::Hello { version: 1 }.expects_reply());
-        assert!(Frame::Forward { id: None, op: None, batch: 1 }.expects_reply());
-        assert!(Frame::SetOp { op: 0, drain: true }.expects_reply());
+        assert!(Frame::Forward { id: None, op: None, batch: 1, class: None }.expects_reply());
+        assert!(Frame::SetOp { op: 0, drain: true, class: None }.expects_reply());
+        assert!(Frame::SetOp { op: 0, drain: true, class: Some(1) }.expects_reply());
         assert!(Frame::Register { addr: "127.0.0.1:7070".into() }.expects_reply());
-        assert!(!Frame::SetOp { op: 0, drain: false }.expects_reply());
+        assert!(!Frame::SetOp { op: 0, drain: false, class: None }.expects_reply());
         assert!(!Frame::Ok.expects_reply());
         assert!(!Frame::Logits { id: None, classes: 2 }.expects_reply());
     }

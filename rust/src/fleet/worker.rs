@@ -64,6 +64,11 @@ pub const WORKER_MAX_INFLIGHT: u64 = 64;
 /// Draining gate: forwards enter read sections, a drain waits for all
 /// of them to leave while blocking new entries (writer-preferring, so a
 /// loaded worker cannot starve the barrier the way an `RwLock` could).
+/// Sections and barriers are keyed by tenant class: a class-scoped
+/// barrier waits only for that class's forwards and blocks only that
+/// class's new entries, so a premium switch never stalls behind a
+/// best-effort backlog.  Un-classed barriers (`None`) keep the legacy
+/// whole-process semantics.
 #[derive(Default)]
 struct Gate {
     state: Mutex<GateState>,
@@ -72,8 +77,33 @@ struct Gate {
 
 #[derive(Default)]
 struct GateState {
-    inflight: usize,
-    draining: bool,
+    /// In-flight forwards per class id (grown on demand; un-classed
+    /// forwards count as class 0).
+    inflight: Vec<usize>,
+    /// Classes with a pending class-scoped barrier.
+    draining: Vec<bool>,
+    /// A pending whole-process barrier (legacy un-classed drain).
+    draining_all: bool,
+}
+
+impl GateState {
+    fn slot(&mut self, class: usize) -> &mut usize {
+        if self.inflight.len() <= class {
+            self.inflight.resize(class + 1, 0);
+        }
+        &mut self.inflight[class]
+    }
+
+    fn drain_flag(&mut self, class: usize) -> &mut bool {
+        if self.draining.len() <= class {
+            self.draining.resize(class + 1, false);
+        }
+        &mut self.draining[class]
+    }
+
+    fn blocked(&self, class: usize) -> bool {
+        self.draining_all || self.draining.get(class).copied().unwrap_or(false)
+    }
 }
 
 /// An in-flight read section of a [`Gate`], from [`Gate::enter`].  The
@@ -81,47 +111,63 @@ struct GateState {
 /// bug, malformed payload tripping an internal assert) unwinds the
 /// handler thread without leaving the in-flight count stuck nonzero —
 /// which would wedge every future drain barrier process-wide.
-struct GateSection<'a>(&'a Gate);
+struct GateSection<'a> {
+    gate: &'a Gate,
+    class: usize,
+}
 
 impl Drop for GateSection<'_> {
     fn drop(&mut self) {
-        let mut g = self.0.state.lock().unwrap();
-        g.inflight -= 1;
-        self.0.cv.notify_all();
+        let mut g = self.gate.state.lock().unwrap();
+        *g.slot(self.class) -= 1;
+        self.gate.cv.notify_all();
     }
 }
 
 impl Gate {
-    /// Begin a forward; blocks while a drain barrier is pending.  The
-    /// section ends when the returned handle drops (including by
-    /// unwind).
-    fn enter(&self) -> GateSection<'_> {
+    /// Begin a forward for one class; blocks while a barrier covering
+    /// that class is pending.  The section ends when the returned
+    /// handle drops (including by unwind).
+    fn enter(&self, class: usize) -> GateSection<'_> {
         let mut g = self.state.lock().unwrap();
-        while g.draining {
+        while g.blocked(class) {
             g = self.cv.wait(g).unwrap();
         }
-        g.inflight += 1;
-        GateSection(self)
+        *g.slot(class) += 1;
+        GateSection { gate: self, class }
     }
 
-    /// Run `f` once every in-flight forward has completed; new forwards
-    /// wait until `f` returns.  `draining` is re-asserted on every
+    /// Run `f` once every in-flight forward of `class` (every class
+    /// when `None`) has completed; new forwards in the barrier's scope
+    /// wait until `f` returns.  The drain flag is re-asserted on every
     /// wakeup, so overlapping drains (two coordinator connections
     /// issuing barriers at once) keep their writer preference even
     /// after the first drain clears the flag.
-    fn drain<T>(&self, f: impl FnOnce() -> T) -> T {
+    fn drain<T>(&self, class: Option<usize>, f: impl FnOnce() -> T) -> T {
         let t0 = std::time::Instant::now();
         let mut g = self.state.lock().unwrap();
         loop {
-            g.draining = true;
-            if g.inflight == 0 {
+            let clear = match class {
+                None => {
+                    g.draining_all = true;
+                    g.inflight.iter().sum::<usize>() == 0
+                }
+                Some(c) => {
+                    *g.drain_flag(c) = true;
+                    g.inflight.get(c).copied().unwrap_or(0) == 0
+                }
+            };
+            if clear {
                 break;
             }
             g = self.cv.wait(g).unwrap();
         }
         obs::publish(ObsEvent::WorkerBarrier { waited_us: t0.elapsed().as_micros() as u64 });
         let out = f();
-        g.draining = false;
+        match class {
+            None => g.draining_all = false,
+            Some(c) => *g.drain_flag(c) = false,
+        }
         drop(g);
         self.cv.notify_all();
         out
@@ -176,8 +222,12 @@ struct WorkerShared {
     hb_interval: Duration,
     hb_timeout: Duration,
     /// Index into the *prepared* ladder used by `Forward` frames that
-    /// omit `op`; updated by `SetOp`.
+    /// omit `op`; updated by un-classed `SetOp` frames.
     current_op: AtomicUsize,
+    /// Per-class current OP, installed by class-tagged `SetOp` frames
+    /// (grown on demand); a class with no entry falls back to the
+    /// process-wide `current_op`.
+    class_ops: Mutex<Vec<Option<usize>>>,
     /// Images forwarded since startup (reported in `Pong`).
     served: AtomicU64,
     stop: AtomicBool,
@@ -190,6 +240,38 @@ struct WorkerShared {
 }
 
 impl WorkerShared {
+    /// Current OP for a `Forward` that omitted `op`: the class's own
+    /// word when a class-tagged `SetOp` installed one, else the
+    /// process-wide legacy word.
+    fn op_for(&self, class: Option<usize>) -> usize {
+        if let Some(c) = class {
+            if let Some(op) = self.class_ops.lock().unwrap().get(c).and_then(|o| *o) {
+                return op;
+            }
+        }
+        self.current_op.load(Ordering::Acquire)
+    }
+
+    /// Install a `SetOp`: class-tagged frames write their class's own
+    /// word, un-classed frames the process-wide one — superseding every
+    /// per-class override, because a legacy whole-process switch means
+    /// the whole process.
+    fn store_op(&self, class: Option<usize>, op: usize) {
+        match class {
+            None => {
+                self.current_op.store(op, Ordering::Release);
+                self.class_ops.lock().unwrap().clear();
+            }
+            Some(c) => {
+                let mut ops = self.class_ops.lock().unwrap();
+                if ops.len() <= c {
+                    ops.resize(c + 1, None);
+                }
+                ops[c] = Some(op);
+            }
+        }
+    }
+
     fn close_all(&self) {
         self.stop.store(true, Ordering::Release);
         for (_, c) in self.conns.lock().unwrap().iter() {
@@ -284,6 +366,7 @@ where
         hb_interval: opts.hb_interval,
         hb_timeout: opts.hb_timeout,
         current_op: AtomicUsize::new(0),
+        class_ops: Mutex::new(Vec::new()),
         served: AtomicU64::new(0),
         stop: AtomicBool::new(false),
         gate: Gate::default(),
@@ -402,9 +485,21 @@ fn resolve_ladder(
 /// executes after all N have entered the gate, which is what lets the
 /// coordinator pipeline Forwards and still trust the barrier.
 enum Work {
-    Forward { id: Option<u64>, op: Option<usize>, batch: usize, payload: Vec<f32> },
-    Prepare { ladder: Vec<LadderRung> },
-    SetOp { op: usize, drain: bool },
+    Forward {
+        id: Option<u64>,
+        op: Option<usize>,
+        batch: usize,
+        class: Option<usize>,
+        payload: Vec<f32>,
+    },
+    Prepare {
+        ladder: Vec<LadderRung>,
+    },
+    SetOp {
+        op: usize,
+        drain: bool,
+        class: Option<usize>,
+    },
     Drain,
 }
 
@@ -443,8 +538,8 @@ fn reader_loop(
                     "protocol version mismatch: worker {PROTOCOL_VERSION}, coordinator {version}"
                 ))
             }),
-            Frame::Forward { id, op, batch } => {
-                if tx.send(Work::Forward { id, op, batch, payload }).is_err() {
+            Frame::Forward { id, op, batch, class } => {
+                if tx.send(Work::Forward { id, op, batch, class, payload }).is_err() {
                     break;
                 }
                 None
@@ -455,8 +550,8 @@ fn reader_loop(
                 }
                 None
             }
-            Frame::SetOp { op, drain } => {
-                if tx.send(Work::SetOp { op, drain }).is_err() {
+            Frame::SetOp { op, drain, class } => {
+                if tx.send(Work::SetOp { op, drain, class }).is_err() {
                     break;
                 }
                 None
@@ -516,15 +611,15 @@ fn compute_loop<B: Backend>(
                 },
                 Err(message) => (Frame::err(message), Vec::new()),
             },
-            Work::Forward { id, op, batch, payload } => {
-                let op_idx = op.unwrap_or_else(|| shared.current_op.load(Ordering::Acquire));
+            Work::Forward { id, op, batch, class, payload } => {
+                let op_idx = op.unwrap_or_else(|| shared.op_for(class));
                 if prepared == 0 {
                     (Frame::Err { id, message: "forward before prepare".to_string() }, Vec::new())
                 } else if batch == 0 || payload.is_empty() || payload.len() % batch != 0 {
                     let message = format!("bad forward: {} elems for batch {batch}", payload.len());
                     (Frame::Err { id, message }, Vec::new())
                 } else {
-                    let section = shared.gate.enter();
+                    let section = shared.gate.enter(class.unwrap_or(0));
                     let r = backend.forward(op_idx, &payload, batch);
                     drop(section);
                     match r {
@@ -536,17 +631,19 @@ fn compute_loop<B: Backend>(
                     }
                 }
             }
-            Work::SetOp { op, drain } => {
+            Work::SetOp { op, drain, class } => {
                 if drain {
-                    shared.gate.drain(|| shared.current_op.store(op, Ordering::Release));
+                    // the barrier inherits the frame's scope: classed
+                    // switches drain only their class's forwards
+                    shared.gate.drain(class, || shared.store_op(class, op));
                     (Frame::Ok, Vec::new())
                 } else {
-                    shared.current_op.store(op, Ordering::Release);
+                    shared.store_op(class, op);
                     continue; // fire-and-forget
                 }
             }
             Work::Drain => {
-                shared.gate.drain(|| ());
+                shared.gate.drain(None, || ());
                 (Frame::Ok, Vec::new())
             }
         };
@@ -607,11 +704,11 @@ mod tests {
     fn gate_blocks_drain_until_inflight_work_exits() {
         let gate = Arc::new(Gate::default());
         let progress = Arc::new(AtomicU32::new(0));
-        let section = gate.enter();
+        let section = gate.enter(0);
         let g2 = gate.clone();
         let p2 = progress.clone();
         let drainer = std::thread::spawn(move || {
-            g2.drain(|| p2.store(1, Ordering::Release));
+            g2.drain(None, || p2.store(1, Ordering::Release));
         });
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(progress.load(Ordering::Acquire), 0, "drain ran with work in flight");
@@ -623,15 +720,15 @@ mod tests {
     #[test]
     fn gate_defers_new_entries_while_draining() {
         let gate = Arc::new(Gate::default());
-        let section = gate.enter();
+        let section = gate.enter(0);
         let g2 = gate.clone();
-        let drainer = std::thread::spawn(move || g2.drain(|| ()));
+        let drainer = std::thread::spawn(move || g2.drain(None, || ()));
         let g3 = gate.clone();
         let entered = Arc::new(AtomicU32::new(0));
         let e3 = entered.clone();
         std::thread::sleep(Duration::from_millis(10));
         let late = std::thread::spawn(move || {
-            let s = g3.enter();
+            let s = g3.enter(0);
             e3.store(1, Ordering::Release);
             drop(s);
         });
@@ -651,12 +748,37 @@ mod tests {
         let gate = Arc::new(Gate::default());
         let g2 = gate.clone();
         let panicker = std::thread::spawn(move || {
-            let _section = g2.enter();
+            let _section = g2.enter(0);
             panic!("backend blew up mid-forward");
         });
         assert!(panicker.join().is_err());
         // the barrier must complete promptly despite the panic
-        gate.drain(|| ());
+        gate.drain(None, || ());
+    }
+
+    #[test]
+    fn class_scoped_drain_ignores_other_classes_inflight_work() {
+        let gate = Arc::new(Gate::default());
+        // best-effort (class 1) work is in flight...
+        let be_section = gate.enter(1);
+        // ...yet a premium (class 0) barrier completes immediately: a
+        // premium switch never stalls behind a best-effort backlog
+        gate.drain(Some(0), || ());
+        // a best-effort barrier still waits for its own class
+        let g2 = gate.clone();
+        let done = Arc::new(AtomicU32::new(0));
+        let d2 = done.clone();
+        let drainer = std::thread::spawn(move || {
+            g2.drain(Some(1), || d2.store(1, Ordering::Release));
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(done.load(Ordering::Acquire), 0, "barrier skipped in-flight work");
+        // and premium entries are not blocked by the pending
+        // best-effort barrier
+        drop(gate.enter(0));
+        drop(be_section);
+        drainer.join().unwrap();
+        assert_eq!(done.load(Ordering::Acquire), 1);
     }
 
     #[test]

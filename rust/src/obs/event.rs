@@ -29,6 +29,8 @@ pub enum ObsEvent {
         /// `OpTable` index the batch was stamped with at formation.
         op: usize,
         size: usize,
+        /// Tenant class name (`None` = single-tenant, label omitted).
+        class: Option<String>,
     },
     /// A pool worker finished a batch (after any retag).
     BatchDone {
@@ -40,6 +42,8 @@ pub enum ObsEvent {
         latency_us: u64,
         /// Retagged to a cheaper OP at execution time.
         retagged: bool,
+        /// Tenant class name (`None` = single-tenant, label omitted).
+        class: Option<String>,
     },
     /// The native engine completed one forward pass (kernel span).
     EngineForward {
@@ -68,6 +72,8 @@ pub enum ObsEvent {
         /// `"scripted"`, `"operator"`, or `"fleet"` for the
         /// coordinator-side broadcast.
         trigger: String,
+        /// Tenant class name (`None` = single-tenant, label omitted).
+        class: Option<String>,
     },
     /// One autopilot control tick, with the per-axis actions it chose.
     AutopilotDecision {
@@ -80,6 +86,8 @@ pub enum ObsEvent {
         pool_action: String,
         chunk_action: String,
         bound: String,
+        /// Tenant class name (`None` = single-tenant, label omitted).
+        class: Option<String>,
     },
     /// The elastic supervisor changed the pool: `"up"`, `"down"` or
     /// `"spawn_failure"`.
@@ -119,18 +127,30 @@ impl ObsEvent {
 
     fn fields(&self) -> Vec<(&'static str, Json)> {
         match self {
-            ObsEvent::BatchFormed { batch, op, size } => vec![
-                ("batch", Json::num(*batch as f64)),
-                ("op", Json::num(*op as f64)),
-                ("size", Json::num(*size as f64)),
-            ],
-            ObsEvent::BatchDone { batch, op, size, latency_us, retagged } => vec![
-                ("batch", Json::num(*batch as f64)),
-                ("op", Json::num(*op as f64)),
-                ("size", Json::num(*size as f64)),
-                ("latency_us", Json::num(*latency_us as f64)),
-                ("retagged", Json::Bool(*retagged)),
-            ],
+            ObsEvent::BatchFormed { batch, op, size, class } => {
+                let mut fields = vec![
+                    ("batch", Json::num(*batch as f64)),
+                    ("op", Json::num(*op as f64)),
+                    ("size", Json::num(*size as f64)),
+                ];
+                if let Some(class) = class {
+                    fields.push(("class", Json::str(class.clone())));
+                }
+                fields
+            }
+            ObsEvent::BatchDone { batch, op, size, latency_us, retagged, class } => {
+                let mut fields = vec![
+                    ("batch", Json::num(*batch as f64)),
+                    ("op", Json::num(*op as f64)),
+                    ("size", Json::num(*size as f64)),
+                    ("latency_us", Json::num(*latency_us as f64)),
+                    ("retagged", Json::Bool(*retagged)),
+                ];
+                if let Some(class) = class {
+                    fields.push(("class", Json::str(class.clone())));
+                }
+                fields
+            }
             ObsEvent::EngineForward { op, images, dur_us } => vec![
                 ("op", Json::str(op.clone())),
                 ("images", Json::num(*images as f64)),
@@ -142,11 +162,17 @@ impl ObsEvent {
                 ("images", Json::num(*images as f64)),
                 ("latency_us", Json::num(*latency_us as f64)),
             ],
-            ObsEvent::OpSwitch { op, mode, trigger } => vec![
-                ("op", Json::num(*op as f64)),
-                ("mode", Json::str(mode.clone())),
-                ("trigger", Json::str(trigger.clone())),
-            ],
+            ObsEvent::OpSwitch { op, mode, trigger, class } => {
+                let mut fields = vec![
+                    ("op", Json::num(*op as f64)),
+                    ("mode", Json::str(mode.clone())),
+                    ("trigger", Json::str(trigger.clone())),
+                ];
+                if let Some(class) = class {
+                    fields.push(("class", Json::str(class.clone())));
+                }
+                fields
+            }
             ObsEvent::AutopilotDecision {
                 t_s,
                 p95_ms,
@@ -156,16 +182,23 @@ impl ObsEvent {
                 pool_action,
                 chunk_action,
                 bound,
-            } => vec![
-                ("t_s", Json::num(*t_s)),
-                ("p95_ms", Json::num(*p95_ms)),
-                ("op", Json::num(*op as f64)),
-                ("workers", Json::num(*workers as f64)),
-                ("op_action", Json::str(op_action.clone())),
-                ("pool_action", Json::str(pool_action.clone())),
-                ("chunk_action", Json::str(chunk_action.clone())),
-                ("bound", Json::str(bound.clone())),
-            ],
+                class,
+            } => {
+                let mut fields = vec![
+                    ("t_s", Json::num(*t_s)),
+                    ("p95_ms", Json::num(*p95_ms)),
+                    ("op", Json::num(*op as f64)),
+                    ("workers", Json::num(*workers as f64)),
+                    ("op_action", Json::str(op_action.clone())),
+                    ("pool_action", Json::str(pool_action.clone())),
+                    ("chunk_action", Json::str(chunk_action.clone())),
+                    ("bound", Json::str(bound.clone())),
+                ];
+                if let Some(class) = class {
+                    fields.push(("class", Json::str(class.clone())));
+                }
+                fields
+            }
             ObsEvent::ScaleAction { action, workers } => vec![
                 ("action", Json::str(action.clone())),
                 ("workers", Json::num(*workers as f64)),
@@ -213,12 +246,15 @@ impl ObsEvent {
                 .map(str::to_string)
                 .ok_or_else(|| format!("event: missing or non-string {key:?}"))
         };
+        // lenient: pre-tenancy dumps omit the class label entirely
+        let class = || v.get("class").and_then(|x| x.as_str()).map(str::to_string);
         let kind = s("kind")?;
         Ok(match kind.as_str() {
             "batch_formed" => ObsEvent::BatchFormed {
                 batch: f("batch")? as u64,
                 op: f("op")? as usize,
                 size: f("size")? as usize,
+                class: class(),
             },
             "batch_done" => ObsEvent::BatchDone {
                 batch: f("batch")? as u64,
@@ -226,6 +262,7 @@ impl ObsEvent {
                 size: f("size")? as usize,
                 latency_us: f("latency_us")? as u64,
                 retagged: v.get("retagged").and_then(|x| x.as_bool()).unwrap_or(false),
+                class: class(),
             },
             "engine_forward" => ObsEvent::EngineForward {
                 op: s("op")?,
@@ -242,6 +279,7 @@ impl ObsEvent {
                 op: f("op")? as usize,
                 mode: s("mode")?,
                 trigger: s("trigger")?,
+                class: class(),
             },
             "autopilot_decision" => ObsEvent::AutopilotDecision {
                 t_s: f("t_s")?,
@@ -252,6 +290,7 @@ impl ObsEvent {
                 pool_action: s("pool_action")?,
                 chunk_action: s("chunk_action")?,
                 bound: s("bound")?,
+                class: class(),
             },
             "scale_action" => ObsEvent::ScaleAction {
                 action: s("action")?,

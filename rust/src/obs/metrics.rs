@@ -134,7 +134,9 @@ const DECLARED: &[(&str, &str)] = &[
     ("qos_nets_flight_dumps_total", "Flight-recorder dumps by trigger reason."),
 ];
 
-type CollectFn = Box<dyn Fn() -> Vec<MetricFamily> + Send + Sync>;
+/// A boxed scrape-time collector, as stored in the [`Registry`] (the
+/// shape [`Registry::rotate_collectors`] swaps in wholesale).
+pub type CollectFn = Box<dyn Fn() -> Vec<MetricFamily> + Send + Sync>;
 
 /// The registry; one per process, via [`crate::obs::registry`].
 #[derive(Default)]
@@ -176,6 +178,24 @@ impl Registry {
     /// pass; collectors re-register instead).
     pub fn reset_counters(&self) {
         self.counters.lock().unwrap().clear();
+    }
+
+    /// Zero every event-derived counter AND swap in a fresh collector
+    /// set in one critical section.  Rotating one source at a time
+    /// (`reset_counters` + per-id `register` calls) leaves a window
+    /// where a scrape pairs the previous pass's per-OP families with
+    /// the next pass's zeroed counters; the bench harness uses this
+    /// between paired passes so a scrape sees the old sources or the
+    /// new ones, never a mix.  Collectors named in `fresh` replace any
+    /// same-id entry; other registered collectors are left in place.
+    pub fn rotate_collectors(&self, fresh: Vec<(String, CollectFn)>) {
+        let mut counters = self.counters.lock().unwrap();
+        let mut cs = self.collectors.lock().unwrap();
+        counters.clear();
+        for (id, collect) in fresh {
+            cs.retain(|(cid, _)| cid != &id);
+            cs.push((id, collect));
+        }
     }
 
     /// Materialize every family: declared counters (with whatever

@@ -122,11 +122,27 @@ pub fn publish(event: ObsEvent) {
 fn bump_counters(event: &ObsEvent) {
     let reg = registry();
     match event {
-        ObsEvent::OpSwitch { mode, trigger, .. } => {
-            reg.inc("qos_nets_op_switches_total", &[("mode", mode), ("trigger", trigger)], 1);
+        ObsEvent::OpSwitch { mode, trigger, class, .. } => {
+            // the class label rides along only when the event carries
+            // one, so single-tenant series keep their pre-tenancy names
+            match class {
+                Some(c) => reg.inc(
+                    "qos_nets_op_switches_total",
+                    &[("class", c), ("mode", mode), ("trigger", trigger)],
+                    1,
+                ),
+                None => {
+                    reg.inc("qos_nets_op_switches_total", &[("mode", mode), ("trigger", trigger)], 1)
+                }
+            }
         }
-        ObsEvent::AutopilotDecision { op_action, pool_action, chunk_action, bound, .. } => {
-            reg.inc("qos_nets_autopilot_ticks_total", &[("bound", bound)], 1);
+        ObsEvent::AutopilotDecision { op_action, pool_action, chunk_action, bound, class, .. } => {
+            match class {
+                Some(c) => {
+                    reg.inc("qos_nets_autopilot_ticks_total", &[("bound", bound), ("class", c)], 1)
+                }
+                None => reg.inc("qos_nets_autopilot_ticks_total", &[("bound", bound)], 1),
+            }
             for (axis, action) in
                 [("op", op_action), ("pool", pool_action), ("chunk", chunk_action)]
             {
@@ -277,7 +293,12 @@ mod tests {
         let before = registry()
             .value("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "test-inert")])
             .unwrap_or(0.0);
-        publish(ObsEvent::OpSwitch { op: 1, mode: "drain".into(), trigger: "test-inert".into() });
+        publish(ObsEvent::OpSwitch {
+            op: 1,
+            mode: "drain".into(),
+            trigger: "test-inert".into(),
+            class: None,
+        });
         let after = registry()
             .value("qos_nets_op_switches_total", &[("mode", "drain"), ("trigger", "test-inert")])
             .unwrap();

@@ -16,6 +16,9 @@
 //! `docs/ARCHITECTURE.md` for how this couples to the serving stack.
 
 pub mod envsim;
+pub mod tenants;
+
+pub use tenants::{ClassSet, TenantClass};
 
 use std::time::{Duration, Instant};
 
@@ -97,11 +100,17 @@ pub struct QosController {
     cfg: QosConfig,
     current: usize, // position in the sorted ladder, NOT a table index
     last_switch: Option<Instant>,
+    last_cap_saturated: bool,
     /// Number of switches fired so far.
     pub switches: u64,
     /// Number of budget samples observed while the current OP exceeded
     /// the budget (including samples where nothing cheaper existed).
     pub budget_violations: u64,
+    /// Number of capped observations that found the cap pinning the
+    /// controller at the frugal floor with nothing left to shed (the
+    /// `CapSaturated` signal of
+    /// [`observe_capped_signal`](Self::observe_capped_signal)).
+    pub cap_saturations: u64,
 }
 
 impl QosController {
@@ -124,8 +133,10 @@ impl QosController {
             cfg,
             current,
             last_switch: None,
+            last_cap_saturated: false,
             switches: 0,
             budget_violations: 0,
+            cap_saturations: 0,
         }
     }
 
@@ -178,24 +189,53 @@ impl QosController {
     /// genuine budget recovery instead of stalling against a synthetic
     /// capped budget.
     pub fn observe_capped(&mut self, budget: f64, cap: usize, now: Instant) -> Option<usize> {
+        self.observe_capped_signal(budget, cap, now).0
+    }
+
+    /// [`observe_capped`](Self::observe_capped) that also reports cap
+    /// saturation: `true` when the cap pins the controller at the
+    /// frugal floor with nothing left to shed — the "wanted to shed
+    /// further but couldn't" signal a latency autopilot needs to stop
+    /// silently ratcheting a cap that no longer buys anything.  The
+    /// rising edge is logged at debug level; [`Self::cap_saturations`]
+    /// counts every saturated observation.
+    pub fn observe_capped_signal(
+        &mut self,
+        budget: f64,
+        cap: usize,
+        now: Instant,
+    ) -> (Option<usize>, bool) {
+        let floor = self.ladder.len() - 1;
+        let cap_eff = cap.min(floor);
         let cur_power = self.ladder[self.current].power;
         if cur_power > budget {
             self.budget_violations += 1;
         }
-        let ideal = self.ideal_for(budget).max(cap.min(self.ladder.len() - 1));
+        let saturated = cap_eff > 0 && cap_eff == floor && self.current == floor;
+        if saturated {
+            self.cap_saturations += 1;
+            if !self.last_cap_saturated {
+                crate::obs_log!(
+                    Debug,
+                    "cap saturated: rung cap {cap} pins the ladder at its frugal floor ({floor})"
+                );
+            }
+        }
+        self.last_cap_saturated = saturated;
+        let ideal = self.ideal_for(budget).max(cap_eff);
         if ideal == self.current {
-            return None;
+            return (None, saturated);
         }
         let upgrading = ideal < self.current; // towards higher accuracy/power
         if upgrading {
             // hysteresis: require headroom and dwell time
             let target_power = self.ladder[ideal].power;
             if target_power > budget * (1.0 - self.cfg.upgrade_margin) {
-                return None;
+                return (None, saturated);
             }
             if let Some(t) = self.last_switch {
                 if now.duration_since(t) < self.cfg.min_dwell {
-                    return None;
+                    return (None, saturated);
                 }
             }
         }
@@ -203,7 +243,7 @@ impl QosController {
         self.current = ideal;
         self.last_switch = Some(now);
         self.switches += 1;
-        Some(self.ladder[ideal].table_index)
+        (Some(self.ladder[ideal].table_index), saturated)
     }
 
     /// Like [`observe`](Self::observe), but also chooses how the switch
@@ -223,15 +263,30 @@ impl QosController {
         cap: usize,
         now: Instant,
     ) -> Option<(usize, SwitchMode)> {
+        self.observe_with_mode_capped_signal(budget, cap, now).0
+    }
+
+    /// [`observe_with_mode_capped`](Self::observe_with_mode_capped)
+    /// that also reports the cap-saturation signal of
+    /// [`observe_capped_signal`](Self::observe_capped_signal).
+    pub fn observe_with_mode_capped_signal(
+        &mut self,
+        budget: f64,
+        cap: usize,
+        now: Instant,
+    ) -> (Option<(usize, SwitchMode)>, bool) {
         let before = self.ladder[self.current].power;
-        let idx = self.observe_capped(budget, cap, now)?;
+        let (idx, saturated) = self.observe_capped_signal(budget, cap, now);
+        let Some(idx) = idx else {
+            return (None, saturated);
+        };
         let after = self.ladder[self.current].power;
         let mode = if after > before {
             SwitchMode::Drain
         } else {
             SwitchMode::Immediate
         };
-        Some((idx, mode))
+        (Some((idx, mode)), saturated)
     }
 }
 
@@ -416,6 +471,39 @@ mod tests {
         assert_eq!(c.observe_with_mode_capped(1.0, 0, t), Some((0, SwitchMode::Drain)));
         // a cap past the ladder end clamps to the most frugal rung
         assert_eq!(c.observe_capped(1.0, 99, t), Some(2));
+    }
+
+    #[test]
+    fn cap_at_the_frugal_floor_raises_the_saturation_signal() {
+        let mut c = QosController::new(
+            ladder(),
+            QosConfig {
+                upgrade_margin: 0.0,
+                min_dwell: Duration::ZERO,
+            },
+        );
+        let t = Instant::now();
+        // a mid-ladder cap never saturates, even while it forces a rung
+        let (sw, sat) = c.observe_capped_signal(1.0, 1, t);
+        assert_eq!(sw, Some(1));
+        assert!(!sat);
+        // cap at the frugal floor: the first call still gets to shed...
+        let (sw, sat) = c.observe_capped_signal(1.0, 2, t);
+        assert_eq!(sw, Some(2));
+        assert!(!sat, "the shed to the floor is productive, not saturated");
+        // ...but once pinned there, every capped observation reports
+        // saturation ("wanted to shed further but couldn't")
+        for i in 1..=3u64 {
+            let (sw, sat) = c.observe_capped_signal(1.0, 2, t);
+            assert_eq!(sw, None);
+            assert!(sat);
+            assert_eq!(c.cap_saturations, i);
+        }
+        // releasing the cap clears the signal and lets the rung recover
+        let (sw, sat) = c.observe_with_mode_capped_signal(1.0, 0, t);
+        assert_eq!(sw, Some((0, SwitchMode::Drain)));
+        assert!(!sat);
+        assert_eq!(c.cap_saturations, 3);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Tenant classes: first-class multi-tenancy over one shared ladder.
+//!
+//! QoS-Nets' shared-subset design means one deployment holds several
+//! operating points over the same resident parameters — which maps
+//! directly onto several *tenants* sharing one serving stack, each
+//! steered along its own rung ladder.  A [`TenantClass`] names one such
+//! tenant: a strict scheduling priority (0 = premium, sheds last), a
+//! per-class p95 SLO, and an admission share that decides who gets
+//! rejected first under overload.  A [`ClassSet`] is the validated
+//! registry the rest of the stack carries: class ids are positions in
+//! the set (premium-first), and every layer — batcher queues, per-class
+//! `(op, mode)` words, autopilot pilots, fleet drain barriers, metric
+//! labels — indexes by that id.
+//!
+//! Class sets load from a `tenants.json` file
+//! ([`ClassSet::from_json_file`], `{"tenants": [{...}]}` with the same
+//! per-class keys as the bench scenario schema) or from repeated
+//! `--tenant name:slo_ms:share` flags ([`ClassSet::from_flags`]).  A
+//! deployment that configures neither runs the [`ClassSet::single`]
+//! default — one class, full share — which keeps every single-tenant
+//! code path byte-identical to the pre-tenancy stack.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tenant class.  See the module docs for how ids are assigned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Strict scheduling priority: 0 = premium.  Lower values are
+    /// admitted first, drained first, and shed *last*.
+    pub priority: u32,
+    /// Per-class p95 latency SLO, ms (`None` = no per-class SLO; the
+    /// class rides the deployment-wide objective).
+    pub slo_p95_ms: Option<f64>,
+    /// Admission weight against the other classes under overload.
+    pub share: f64,
+}
+
+/// A validated, premium-first ordered set of tenant classes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSet {
+    classes: Vec<TenantClass>,
+}
+
+impl ClassSet {
+    /// The single-tenant default: one class holding the whole share.
+    pub fn single() -> ClassSet {
+        ClassSet {
+            classes: vec![TenantClass {
+                name: "default".to_string(),
+                priority: 0,
+                slo_p95_ms: None,
+                share: 1.0,
+            }],
+        }
+    }
+
+    /// Build a set from explicit classes; sorts premium-first (stable,
+    /// so equal priorities keep their given order) and validates.
+    pub fn new(mut classes: Vec<TenantClass>) -> Result<ClassSet> {
+        if classes.is_empty() {
+            bail!("tenant class set: no classes");
+        }
+        classes.sort_by_key(|c| c.priority);
+        for (i, c) in classes.iter().enumerate() {
+            if c.name.is_empty() {
+                bail!("tenant class {i}: empty name");
+            }
+            if classes[..i].iter().any(|o| o.name == c.name) {
+                bail!("tenant class {i}: duplicate name {:?}", c.name);
+            }
+            if !(c.share.is_finite() && c.share > 0.0) {
+                bail!("tenant class {:?}: share must be finite and > 0", c.name);
+            }
+            if let Some(slo) = c.slo_p95_ms {
+                if !(slo.is_finite() && slo > 0.0) {
+                    bail!("tenant class {:?}: slo_p95_ms must be finite and > 0", c.name);
+                }
+            }
+        }
+        Ok(ClassSet { classes })
+    }
+
+    /// Parse repeated `--tenant name:slo_ms:share` flags.  The empty
+    /// list yields [`ClassSet::single`].
+    pub fn from_flags(flags: &[String]) -> Result<ClassSet> {
+        if flags.is_empty() {
+            return Ok(ClassSet::single());
+        }
+        let classes = flags
+            .iter()
+            .enumerate()
+            .map(|(i, flag)| {
+                let parts: Vec<&str> = flag.split(':').collect();
+                if parts.len() != 3 {
+                    bail!("--tenant {flag:?}: expected name:slo_ms:share");
+                }
+                let slo: f64 = parts[1]
+                    .parse()
+                    .with_context(|| format!("--tenant {flag:?}: bad slo_ms"))?;
+                let share: f64 = parts[2]
+                    .parse()
+                    .with_context(|| format!("--tenant {flag:?}: bad share"))?;
+                Ok(TenantClass {
+                    name: parts[0].to_string(),
+                    // flag order is priority order: first flag = premium
+                    priority: i as u32,
+                    slo_p95_ms: Some(slo),
+                    share,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        ClassSet::new(classes)
+    }
+
+    /// Parse a `tenants.json` value: `{"tenants": [{"name": ...,
+    /// "priority": ..., "slo_p95_ms": ..., "share": ...}, ...]}`.
+    pub fn from_json(v: &Json) -> Result<ClassSet> {
+        let arr = v
+            .get("tenants")
+            .and_then(|x| x.as_arr())
+            .context("tenants.json: missing tenants array")?;
+        let classes = arr
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let name = t
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("tenants.json: tenant {i}: missing name"))?
+                    .to_string();
+                Ok(TenantClass {
+                    name,
+                    priority: t.get("priority").and_then(|x| x.as_usize()).unwrap_or(i) as u32,
+                    slo_p95_ms: t.get("slo_p95_ms").and_then(|x| x.as_f64()),
+                    share: t.get("share").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        ClassSet::new(classes)
+    }
+
+    /// Load [`ClassSet::from_json`] from a file path.
+    pub fn from_json_file(path: &std::path::Path) -> Result<ClassSet> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tenants file {}", path.display()))?;
+        let v = crate::util::json::parse(&text).map_err(anyhow::Error::msg)?;
+        ClassSet::from_json(&v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    /// More than one class configured.
+    pub fn is_multi(&self) -> bool {
+        self.classes.len() > 1
+    }
+
+    pub fn get(&self, id: usize) -> &TenantClass {
+        &self.classes[id]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TenantClass> {
+        self.classes.iter()
+    }
+
+    /// Class id for a name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c.name == name)
+    }
+
+    /// Class names in id order (metric label values).
+    pub fn names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Fraction of the admission capacity class `id` may fill before
+    /// it is rejected: strictly-higher-priority classes' shares are
+    /// reserved out of its reach, so under moderate overload the
+    /// best-effort classes hit their fraction (and start bouncing)
+    /// while premium still admits.  The highest-priority class always
+    /// gets 1.0 — premium is only rejected when the deployment is
+    /// hard-full.
+    pub fn admit_frac(&self, id: usize) -> f64 {
+        let total: f64 = self.classes.iter().map(|c| c.share).sum();
+        let higher: f64 = self
+            .classes
+            .iter()
+            .filter(|c| c.priority < self.classes[id].priority)
+            .map(|c| c.share)
+            .sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        ((total - higher) / total).clamp(0.0, 1.0)
+    }
+
+    /// Admission fractions for every class, in id order (the shape
+    /// `server::BatcherConfig` carries).
+    pub fn admit_fracs(&self) -> Vec<f64> {
+        (0..self.classes.len()).map(|i| self.admit_frac(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn two_classes() -> ClassSet {
+        ClassSet::new(vec![
+            TenantClass {
+                name: "premium".into(),
+                priority: 0,
+                slo_p95_ms: Some(100.0),
+                share: 3.0,
+            },
+            TenantClass {
+                name: "best_effort".into(),
+                priority: 1,
+                slo_p95_ms: Some(250.0),
+                share: 1.0,
+            },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn single_default_spans_the_whole_share() {
+        let s = ClassSet::single();
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_multi());
+        assert_eq!(s.admit_frac(0), 1.0);
+        assert_eq!(s.get(0).priority, 0);
+    }
+
+    #[test]
+    fn class_ids_are_premium_first_and_admission_reserves_premium_share() {
+        let s = ClassSet::new(vec![
+            TenantClass { name: "be".into(), priority: 5, slo_p95_ms: None, share: 1.0 },
+            TenantClass { name: "prem".into(), priority: 0, slo_p95_ms: None, share: 3.0 },
+        ])
+        .unwrap();
+        // sorted premium-first regardless of the input order
+        assert_eq!(s.get(0).name, "prem");
+        assert_eq!(s.index_of("be"), Some(1));
+        // premium always admits; best-effort only up to its slice
+        assert_eq!(s.admit_frac(0), 1.0);
+        assert!((s.admit_frac(1) - 0.25).abs() < 1e-12);
+        assert_eq!(s.admit_fracs(), vec![1.0, 0.25]);
+    }
+
+    #[test]
+    fn flags_parse_in_priority_order_and_reject_malformed_specs() {
+        let s = ClassSet::from_flags(&[
+            "premium:100:3".to_string(),
+            "best_effort:250:1".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0).name, "premium");
+        assert_eq!(s.get(0).slo_p95_ms, Some(100.0));
+        assert_eq!(s.get(1).share, 1.0);
+        // no flags = the single-tenant default
+        assert_eq!(ClassSet::from_flags(&[]).unwrap(), ClassSet::single());
+        // malformed specs name the offending flag
+        assert!(ClassSet::from_flags(&["premium:100".to_string()]).is_err());
+        assert!(ClassSet::from_flags(&["premium:abc:1".to_string()]).is_err());
+        assert!(ClassSet::from_flags(&["premium:100:0".to_string()]).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_and_validation() {
+        let text = r#"{"tenants":[
+            {"name":"premium","priority":0,"slo_p95_ms":100,"share":3},
+            {"name":"best_effort","priority":1,"slo_p95_ms":250,"share":1}
+        ]}"#;
+        let s = ClassSet::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(s, two_classes());
+
+        // duplicate names are rejected
+        let dup = r#"{"tenants":[{"name":"a","share":1},{"name":"a","share":1}]}"#;
+        assert!(ClassSet::from_json(&json::parse(dup).unwrap()).is_err());
+        // an empty set is rejected
+        let empty = r#"{"tenants":[]}"#;
+        assert!(ClassSet::from_json(&json::parse(empty).unwrap()).is_err());
+    }
+}

@@ -63,6 +63,9 @@ pub use crate::qos::SwitchMode;
 pub struct Request {
     /// Server-assigned sequence number (monotonic per server).
     pub id: u64,
+    /// Tenant class id (position in the deployment's
+    /// [`crate::qos::ClassSet`]); 0 in single-tenant deployments.
+    pub class: usize,
     /// Flattened `[H, W, C]` image.
     pub image: Vec<f32>,
     /// Submission timestamp; queue/total latency is measured from here.
@@ -76,6 +79,8 @@ pub struct Request {
 pub struct Response {
     /// Echo of the request id.
     pub id: u64,
+    /// Echo of the request's tenant class id (0 single-tenant).
+    pub class: usize,
     /// One logit per class of the served model.
     pub logits: Vec<f32>,
     /// `OpTable` index of the operating point the batch ran under
@@ -146,6 +151,29 @@ pub struct BatcherConfig {
     /// `Response::op_index` still reports the OP the batch actually ran
     /// under.
     pub retag_downgrades: bool,
+    /// Tenant class count.  0 or 1 = single-tenant: one queue, one
+    /// `(op, mode)` word, no class labels — byte-identical to the
+    /// pre-tenancy server.  With more classes the batcher keys its
+    /// pending queues per class (a batch never mixes classes), each
+    /// class gets its own operating-point word and drain barrier, and
+    /// batch events/metrics carry a `class` label.
+    pub classes: usize,
+    /// Class names in id order (from [`crate::qos::ClassSet::names`])
+    /// for event and metric labels; missing entries fall back to the
+    /// class id.  Ignored single-tenant.
+    pub class_names: Vec<String>,
+    /// Per-class admission fractions in id order (from
+    /// [`crate::qos::ClassSet::admit_fracs`]); missing entries admit
+    /// fully.  Only consulted when `max_inflight > 0`.
+    pub admit_fracs: Vec<f64>,
+    /// Admission capacity: [`Server::submit_class`] rejects a class-`c`
+    /// submission once total in-flight requests reach
+    /// `admit_fracs[c] * max_inflight`, so best-effort classes bounce
+    /// first under overload while premium (fraction 1.0) only bounces
+    /// when the deployment is hard-full.  0 (default) = unlimited;
+    /// every submission is accepted and [`Server::submit`] never
+    /// consults the fractions at all.
+    pub max_inflight: usize,
 }
 
 impl Default for BatcherConfig {
@@ -162,8 +190,25 @@ impl Default for BatcherConfig {
             scale_up_after: 2,
             scale_down_after: 25,
             retag_downgrades: false,
+            classes: 1,
+            class_names: Vec::new(),
+            admit_fracs: Vec::new(),
+            max_inflight: 0,
         }
     }
+}
+
+/// Event/metric label value per class id: `None` single-tenant (the
+/// label is omitted so series keep their pre-tenancy names), the
+/// configured class name (or the id rendered as text) otherwise.
+fn class_labels(cfg: &BatcherConfig) -> Vec<Option<String>> {
+    let n = cfg.classes.max(1);
+    if n == 1 {
+        return vec![None];
+    }
+    (0..n)
+        .map(|c| Some(cfg.class_names.get(c).cloned().unwrap_or_else(|| c.to_string())))
+        .collect()
 }
 
 /// Aggregate serving metrics, cloned out under a lock.
@@ -196,15 +241,61 @@ pub struct ServerMetrics {
     /// Batches retagged to a cheaper OP at execution time under the
     /// [`BatcherConfig::retag_downgrades`] policy.
     pub retagged_batches: u64,
+    /// Per-tenant-class slice of the traffic, indexed by class id.  A
+    /// single entry in single-tenant deployments.
+    pub per_class: Vec<ClassMetrics>,
+}
+
+/// Per-tenant-class serving metrics (one entry of
+/// [`ServerMetrics::per_class`]).
+#[derive(Debug, Default, Clone)]
+pub struct ClassMetrics {
+    /// Submissions through [`Server::submit_class`] (admitted or not).
+    /// [`Server::submit`] bypasses this counter — the single-tenant
+    /// fast path stays lock-free.
+    pub submitted: u64,
+    /// Requests answered.
+    pub completed: u64,
+    /// Submissions bounced by weighted admission
+    /// ([`BatcherConfig::max_inflight`]).
+    pub rejected: u64,
+    /// Batches of this class retagged to a cheaper OP at execution.
+    pub retagged_batches: u64,
+    /// End-to-end latency over this class's requests.
+    pub latency: LatencyHistogram,
+}
+
+impl ClassMetrics {
+    /// Condense to plain numbers (see [`ServerMetrics::snapshot`]).
+    pub fn snapshot(&self) -> ClassMetricsSnapshot {
+        ClassMetricsSnapshot {
+            submitted: self.submitted,
+            completed: self.completed,
+            rejected: self.rejected,
+            retagged_batches: self.retagged_batches,
+            latency: self.latency.summary(),
+        }
+    }
+}
+
+/// Plain-number condensation of one [`ClassMetrics`] entry.
+#[derive(Debug, Clone, Default)]
+pub struct ClassMetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub retagged_batches: u64,
+    pub latency: LatencySummary,
 }
 
 impl ServerMetrics {
-    fn new(n_ops: usize) -> Self {
+    fn new(n_ops: usize, classes: usize) -> Self {
         ServerMetrics {
             per_op_requests: vec![0; n_ops],
             per_op_latency: vec![LatencyHistogram::new(); n_ops],
             latency: LatencyHistogram::new(),
             queue_latency: LatencyHistogram::new(),
+            per_class: vec![ClassMetrics::default(); classes.max(1)],
             ..Default::default()
         }
     }
@@ -241,6 +332,7 @@ impl ServerMetrics {
             spawn_failures: self.spawn_failures,
             peak_workers: self.peak_workers,
             retagged_batches: self.retagged_batches,
+            per_class: self.per_class.iter().map(ClassMetrics::snapshot).collect(),
         }
     }
 }
@@ -271,23 +363,27 @@ pub struct MetricsSnapshot {
     pub spawn_failures: u64,
     pub peak_workers: usize,
     pub retagged_batches: u64,
+    /// One entry per tenant class, in class-id (premium-first) order.
+    pub per_class: Vec<ClassMetricsSnapshot>,
 }
 
-/// Bit of [`Shared::op_word`] marking the last switch as `Immediate`.
+/// Bit of [`Shared::op_words`] marking the last switch as `Immediate`.
 const OP_IMMEDIATE_FLAG: u64 = 1 << 63;
 
 /// State shared between the batcher, workers, supervisor and handle.
 struct Shared {
-    /// Current `OpTable` index (batches are stamped from this at
-    /// formation time) packed with how the last switch was applied:
-    /// bit 63 set = `Immediate`, clear = draining barrier.  One word so
-    /// the retag policy reads a coherent (op, mode) pair — with two
-    /// separate atomics a worker could pair a stale Immediate flag
-    /// with a Drain switch's fresh index and retag a pre-barrier batch
-    /// the barrier had promised the old OP.  The retag policy only
-    /// fires after an Immediate switch — a Drain switch *guarantees*
-    /// pre-barrier requests run under the old OP.
-    op_word: AtomicU64,
+    /// Current `OpTable` index *per tenant class* (batches are stamped
+    /// from their class's word at formation time), each packed with how
+    /// the last switch was applied: bit 63 set = `Immediate`, clear =
+    /// draining barrier.  One word per class so the retag policy reads
+    /// a coherent (op, mode) pair — with two separate atomics a worker
+    /// could pair a stale Immediate flag with a Drain switch's fresh
+    /// index and retag a pre-barrier batch the barrier had promised the
+    /// old OP.  The retag policy only fires after an Immediate switch —
+    /// a Drain switch *guarantees* pre-barrier requests run under the
+    /// old OP.  Single-tenant deployments hold exactly one word, so the
+    /// pre-tenancy behavior is unchanged.
+    op_words: Vec<AtomicU64>,
     /// Requests submitted but not yet answered (queue-depth signal).
     inflight: AtomicUsize,
     /// Workers that completed `prepare` and are serving (supervisor
@@ -312,9 +408,9 @@ struct Shared {
 const POOL_UNMANAGED: usize = usize::MAX;
 
 impl Shared {
-    fn new(first_worker: usize) -> Self {
+    fn new(first_worker: usize, classes: usize) -> Self {
         Shared {
-            op_word: AtomicU64::new(0),
+            op_words: (0..classes.max(1)).map(|_| AtomicU64::new(0)).collect(),
             inflight: AtomicUsize::new(0),
             live_workers: AtomicUsize::new(0),
             next_worker: AtomicUsize::new(first_worker),
@@ -324,16 +420,17 @@ impl Shared {
         }
     }
 
-    /// Publish an OP switch: the new index + whether it was `Immediate`,
-    /// in one store (see [`Shared::op_word`]).
-    fn store_op(&self, idx: usize, immediate: bool) {
+    /// Publish an OP switch for one class: the new index + whether it
+    /// was `Immediate`, in one store (see [`Shared::op_words`]).
+    fn store_op(&self, class: usize, idx: usize, immediate: bool) {
         let word = idx as u64 | if immediate { OP_IMMEDIATE_FLAG } else { 0 };
-        self.op_word.store(word, Ordering::Release);
+        self.op_words[class].store(word, Ordering::Release);
     }
 
-    /// The coherent (current OP index, last-switch-was-Immediate) pair.
-    fn load_op(&self) -> (usize, bool) {
-        let word = self.op_word.load(Ordering::Acquire);
+    /// One class's coherent (current OP index, last-switch-was-
+    /// Immediate) pair.
+    fn load_op(&self, class: usize) -> (usize, bool) {
+        let word = self.op_words[class].load(Ordering::Acquire);
         ((word & !OP_IMMEDIATE_FLAG) as usize, word & OP_IMMEDIATE_FLAG != 0)
     }
 }
@@ -341,14 +438,18 @@ impl Shared {
 /// Ingress-channel message: a request, or a draining switch barrier.
 enum Ingress {
     Req(Request),
-    /// Flush everything enqueued so far under the old OP, then apply
-    /// `idx` and ack.
-    Switch { idx: usize, ack: mpsc::Sender<()> },
+    /// Flush everything of `class` enqueued so far under its old OP,
+    /// then apply `idx` to that class and ack.  The barrier is
+    /// per-class: a premium switch never waits on another class's
+    /// pending requests.
+    Switch { class: usize, idx: usize, ack: mpsc::Sender<()> },
 }
 
-/// A formed batch, OP-tagged at formation time.
+/// A formed batch, OP-tagged at formation time.  Single-class by
+/// construction: the batcher never mixes tenant classes in one batch.
 struct Batch {
     reqs: Vec<Request>,
+    class: usize,
     op_idx: usize,
     seq: u64,
 }
@@ -369,6 +470,8 @@ struct WorkerCtx<B, F> {
     shared: Arc<Shared>,
     /// See [`BatcherConfig::retag_downgrades`].
     retag_downgrades: bool,
+    /// Per-class event label values (see [`class_labels`]).
+    labels: Arc<Vec<Option<String>>>,
     _backend: PhantomData<fn() -> B>,
 }
 
@@ -381,6 +484,7 @@ impl<B, F> Clone for WorkerCtx<B, F> {
             metrics: self.metrics.clone(),
             shared: self.shared.clone(),
             retag_downgrades: self.retag_downgrades,
+            labels: self.labels.clone(),
             _backend: PhantomData,
         }
     }
@@ -401,6 +505,11 @@ pub struct Server<B: Backend> {
     /// external pool targets can be clamped into the legal range.
     min_workers: usize,
     max_workers: usize,
+    /// Per-class event/metric labels (see [`class_labels`]).
+    labels: Arc<Vec<Option<String>>>,
+    /// Weighted-admission knobs, copied out of the config.
+    admit_fracs: Vec<f64>,
+    max_inflight: usize,
     _backend: PhantomData<fn() -> B>,
 }
 
@@ -433,8 +542,10 @@ impl<B: Backend + 'static> Server<B> {
         cfg.min_workers = cfg.min_workers.min(cfg.max_workers);
         cfg.workers = initial.clamp(cfg.min_workers, cfg.max_workers);
 
-        let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len())));
-        let shared = Arc::new(Shared::new(cfg.workers));
+        let n_classes = cfg.classes.max(1);
+        let labels = Arc::new(class_labels(&cfg));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::new(ops.len(), n_classes)));
+        let shared = Arc::new(Shared::new(cfg.workers, n_classes));
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
         let (batch_tx, batch_rx) = mpsc::channel::<WorkerMsg>();
@@ -446,6 +557,7 @@ impl<B: Backend + 'static> Server<B> {
             metrics: metrics.clone(),
             shared: shared.clone(),
             retag_downgrades: cfg.retag_downgrades,
+            labels: labels.clone(),
             _backend: PhantomData,
         };
 
@@ -513,17 +625,54 @@ impl<B: Backend + 'static> Server<B> {
             next_id: AtomicUsize::new(0),
             min_workers: cfg.min_workers,
             max_workers: cfg.max_workers,
+            labels,
+            admit_fracs: cfg.admit_fracs.clone(),
+            max_inflight: cfg.max_inflight,
             _backend: PhantomData,
         })
     }
 
-    /// Submit one image; returns the response channel.
+    /// Submit one image; returns the response channel.  Single-tenant
+    /// entry point: the request is class 0 and admission control is
+    /// bypassed — exactly the pre-tenancy behavior.
     pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.enqueue(0, image)
+    }
+
+    /// Submit one image under a tenant class, subject to weighted
+    /// admission.  `Ok(None)` = rejected: total in-flight requests
+    /// already fill the class's admission fraction of
+    /// [`BatcherConfig::max_inflight`] (strictly-higher-priority
+    /// classes' shares are out of its reach, so best-effort bounces
+    /// first and premium only bounces when the deployment is
+    /// hard-full).  With `max_inflight` 0 every submission is admitted.
+    pub fn submit_class(
+        &self,
+        class: usize,
+        image: Vec<f32>,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        let class = class.min(self.labels.len().saturating_sub(1));
+        if self.max_inflight > 0 {
+            let frac = self.admit_fracs.get(class).copied().unwrap_or(1.0);
+            let cap = ((frac * self.max_inflight as f64).floor() as usize).max(1);
+            if self.shared.inflight.load(Ordering::Acquire) >= cap {
+                let mut m = self.metrics.lock().unwrap();
+                m.per_class[class].submitted += 1;
+                m.per_class[class].rejected += 1;
+                return Ok(None);
+            }
+        }
+        self.metrics.lock().unwrap().per_class[class].submitted += 1;
+        self.enqueue(class, image).map(Some)
+    }
+
+    fn enqueue(&self, class: usize, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
         self.shared.inflight.fetch_add(1, Ordering::AcqRel);
         let sent = self.ingress.send(Ingress::Req(Request {
             id,
+            class,
             image,
             enqueued: Instant::now(),
             resp: tx,
@@ -537,9 +686,16 @@ impl<B: Backend + 'static> Server<B> {
 
     /// Switch the serving operating point immediately (a single atomic
     /// store; batches formed from here on are tagged with `idx`).
+    /// Class 0 — the whole deployment when single-tenant.
     pub fn set_operating_point(&self, idx: usize) {
+        self.set_class_operating_point(0, idx);
+    }
+
+    /// [`set_operating_point`](Self::set_operating_point) for one
+    /// tenant class: only that class's batches change OP.
+    pub fn set_class_operating_point(&self, class: usize, idx: usize) {
         assert!(idx < self.ops.len());
-        self.shared.store_op(idx, true);
+        self.shared.store_op(class, idx, true);
     }
 
     /// Switch the serving operating point under an explicit
@@ -548,18 +704,31 @@ impl<B: Backend + 'static> Server<B> {
     /// installs a barrier in the batcher and blocks until it is
     /// applied: every request submitted before this call completes
     /// under the old OP, every request submitted after it returns runs
-    /// under the new one, and no batch spans the switch.
+    /// under the new one, and no batch spans the switch.  Class 0.
     pub fn set_operating_point_with(&self, idx: usize, mode: SwitchMode) -> Result<()> {
+        self.set_class_operating_point_with(0, idx, mode)
+    }
+
+    /// [`set_operating_point_with`](Self::set_operating_point_with)
+    /// for one tenant class.  The `Drain` barrier is per-class: it
+    /// flushes and re-tags only `class`'s pending requests, so a
+    /// premium switch never stalls behind a best-effort backlog.
+    pub fn set_class_operating_point_with(
+        &self,
+        class: usize,
+        idx: usize,
+        mode: SwitchMode,
+    ) -> Result<()> {
         assert!(idx < self.ops.len());
         match mode {
             SwitchMode::Immediate => {
-                self.set_operating_point(idx);
+                self.set_class_operating_point(class, idx);
                 Ok(())
             }
             SwitchMode::Drain => {
                 let (ack_tx, ack_rx) = mpsc::channel();
                 self.ingress
-                    .send(Ingress::Switch { idx, ack: ack_tx })
+                    .send(Ingress::Switch { class, idx, ack: ack_tx })
                     .map_err(|_| anyhow!("server stopped"))?;
                 ack_rx
                     .recv()
@@ -569,9 +738,15 @@ impl<B: Backend + 'static> Server<B> {
         }
     }
 
-    /// Current `OpTable` index batches are being tagged with.
+    /// Current `OpTable` index batches are being tagged with (class 0).
     pub fn operating_point(&self) -> usize {
-        self.shared.load_op().0
+        self.shared.load_op(0).0
+    }
+
+    /// Current `OpTable` index one tenant class's batches are tagged
+    /// with.
+    pub fn class_operating_point(&self, class: usize) -> usize {
+        self.shared.load_op(class).0
     }
 
     /// The served operating points, in table order.
@@ -635,6 +810,7 @@ impl<B: Backend + 'static> Server<B> {
         let metrics = self.metrics.clone();
         let shared = self.shared.clone();
         let op_names: Vec<String> = self.ops.ops().iter().map(|op| op.name.clone()).collect();
+        let labels = self.labels.clone();
         move || {
             let snap = metrics.lock().unwrap().snapshot();
             let mut fams = vec![
@@ -698,6 +874,36 @@ impl<B: Backend + 'static> Server<B> {
                 Kind::Counter,
                 op_requests,
             ));
+            // per-tenant-class families only exist in multi-tenant
+            // deployments — a single-tenant scrape is byte-identical
+            // to the pre-tenancy exposition
+            if labels.len() > 1 {
+                let mut completed = Vec::with_capacity(labels.len());
+                let mut rejected = Vec::with_capacity(labels.len());
+                for (c, pc) in snap.per_class.iter().enumerate() {
+                    let name = labels.get(c).and_then(|l| l.as_deref()).unwrap_or("?");
+                    completed.push(Sample::with(&[("class", name)], pc.completed as f64));
+                    rejected.push(Sample::with(&[("class", name)], pc.rejected as f64));
+                    fams.extend(summary_families(
+                        "qos_nets_class_latency_us",
+                        "End-to-end latency per tenant class, microseconds.",
+                        &[("class", name)],
+                        &pc.latency,
+                    ));
+                }
+                fams.push(MetricFamily::new(
+                    "qos_nets_class_requests_total",
+                    "Requests answered per tenant class.",
+                    Kind::Counter,
+                    completed,
+                ));
+                fams.push(MetricFamily::new(
+                    "qos_nets_class_rejected_total",
+                    "Submissions bounced by weighted admission, per tenant class.",
+                    Kind::Counter,
+                    rejected,
+                ));
+            }
             fams
         }
     }
@@ -815,10 +1021,11 @@ where
         // The batch stays uniform either way.
         let mut retagged = false;
         if ctx.retag_downgrades {
-            // one load: the (op, mode) pair is coherent, so a Drain
-            // switch landing between two separate reads can never be
-            // misattributed to an earlier Immediate switch
-            let (cur, immediate) = ctx.shared.load_op();
+            // one load of the batch's own class word: the (op, mode)
+            // pair is coherent, so a Drain switch landing between two
+            // separate reads can never be misattributed to an earlier
+            // Immediate switch
+            let (cur, immediate) = ctx.shared.load_op(batch.class);
             if immediate
                 && cur != op_idx
                 && ctx.ops.get(cur).relative_power < ctx.ops.get(op_idx).relative_power
@@ -843,7 +1050,7 @@ where
         for r in &batch.reqs {
             images.extend_from_slice(&r.image);
         }
-        let logits = match backend.forward(op_idx, &images, b) {
+        let logits = match backend.forward_class(batch.class, op_idx, &images, b) {
             Ok(l) => l,
             Err(e) => {
                 obs::log!(Error, "{} backend: dropping batch of {b}: {e:#}", backend.name());
@@ -872,6 +1079,7 @@ where
             m.batch_size_sum += b as u64;
             if retagged {
                 m.retagged_batches += 1;
+                m.per_class[batch.class].retagged_batches += 1;
             }
             for &(queue_us, total_us) in &times {
                 m.completed += 1;
@@ -879,6 +1087,8 @@ where
                 m.latency.record_us(total_us);
                 m.queue_latency.record_us(queue_us);
                 m.per_op_latency[op_idx].record_us(total_us);
+                m.per_class[batch.class].completed += 1;
+                m.per_class[batch.class].latency.record_us(total_us);
             }
         }
         if obs::recording() {
@@ -888,11 +1098,13 @@ where
                 size: b,
                 latency_us: times[0].1,
                 retagged,
+                class: ctx.labels.get(batch.class).cloned().flatten(),
             });
         }
         for ((i, r), &(queue_us, total_us)) in batch.reqs.into_iter().enumerate().zip(&times) {
             let _ = r.resp.send(Response {
                 id: r.id,
+                class: batch.class,
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 op_index: op_idx,
                 batch_seq: batch.seq,
@@ -904,8 +1116,10 @@ where
     }
 }
 
-/// Flush `pending` as one OP-tagged batch.
+/// Flush one class's `pending` as one OP-tagged batch.
 fn flush_batch(
+    class: usize,
+    label: &Option<String>,
     pending: &mut Vec<Request>,
     out: &mpsc::Sender<WorkerMsg>,
     shared: &Shared,
@@ -916,7 +1130,8 @@ fn flush_batch(
     }
     let batch = Batch {
         reqs: std::mem::take(pending),
-        op_idx: shared.load_op().0,
+        class,
+        op_idx: shared.load_op(class).0,
         seq: *seq,
     };
     *seq += 1;
@@ -925,76 +1140,100 @@ fn flush_batch(
             batch: batch.seq,
             op: batch.op_idx,
             size: batch.reqs.len(),
+            class: label.clone(),
         });
     }
     let _ = out.send(WorkerMsg::Batch(batch));
 }
 
+/// The batcher keeps one pending queue + flush deadline per tenant
+/// class (a batch never mixes classes) and walks classes in id order —
+/// premium-first — wherever several are due at once.  Single-tenant
+/// this degenerates to the pre-tenancy single queue.
 fn batcher_loop(
     ingress: mpsc::Receiver<Ingress>,
     out: mpsc::Sender<WorkerMsg>,
     cfg: BatcherConfig,
     shared: Arc<Shared>,
 ) {
-    let mut pending: Vec<Request> = Vec::new();
-    let mut deadline: Option<Instant> = None;
+    let n_classes = cfg.classes.max(1);
+    let labels = class_labels(&cfg);
+    let mut pending: Vec<Vec<Request>> = (0..n_classes).map(|_| Vec::new()).collect();
+    let mut deadlines: Vec<Option<Instant>> = vec![None; n_classes];
     let mut seq: u64 = 0;
+    let mut flush = |c: usize, pending: &mut Vec<Vec<Request>>, seq: &mut u64| {
+        flush_batch(c, &labels[c], &mut pending[c], &out, &shared, seq);
+    };
     loop {
         if shared.stop.load(Ordering::Acquire) {
             // stop requested: drain whatever is already queued, flush the
-            // final partial batch and exit promptly (shutdown no longer
+            // final partial batches and exit promptly (shutdown no longer
             // relies solely on channel disconnect)
             while let Ok(msg) = ingress.try_recv() {
                 match msg {
                     Ingress::Req(req) => {
-                        pending.push(req);
-                        if pending.len() >= cfg.max_batch {
-                            flush_batch(&mut pending, &out, &shared, &mut seq);
+                        let c = req.class.min(n_classes - 1);
+                        pending[c].push(req);
+                        if pending[c].len() >= cfg.max_batch {
+                            flush(c, &mut pending, &mut seq);
                         }
                     }
-                    Ingress::Switch { idx, ack } => {
-                        flush_batch(&mut pending, &out, &shared, &mut seq);
-                        shared.store_op(idx, false);
+                    Ingress::Switch { class, idx, ack } => {
+                        let c = class.min(n_classes - 1);
+                        flush(c, &mut pending, &mut seq);
+                        shared.store_op(c, idx, false);
                         let _ = ack.send(());
                     }
                 }
             }
-            flush_batch(&mut pending, &out, &shared, &mut seq);
+            for c in 0..n_classes {
+                flush(c, &mut pending, &mut seq);
+            }
             break;
         }
-        let timeout = match deadline {
+        let timeout = match deadlines.iter().flatten().min() {
             Some(d) => d.saturating_duration_since(Instant::now()),
             None => Duration::from_millis(50),
         };
         match ingress.recv_timeout(timeout) {
             Ok(Ingress::Req(req)) => {
-                if pending.is_empty() {
-                    deadline = Some(Instant::now() + cfg.max_wait);
+                let c = req.class.min(n_classes - 1);
+                if pending[c].is_empty() {
+                    deadlines[c] = Some(Instant::now() + cfg.max_wait);
                 }
-                pending.push(req);
-                if pending.len() >= cfg.max_batch {
-                    flush_batch(&mut pending, &out, &shared, &mut seq);
-                    deadline = None;
+                pending[c].push(req);
+                if pending[c].len() >= cfg.max_batch {
+                    flush(c, &mut pending, &mut seq);
+                    deadlines[c] = None;
                 }
             }
-            Ok(Ingress::Switch { idx, ack }) => {
-                // the drain barrier: everything enqueued before the
-                // switch leaves as batches tagged with the old OP, then
-                // the new index takes effect (and the retag policy is
-                // disarmed — Drain promises those batches the old OP)
-                flush_batch(&mut pending, &out, &shared, &mut seq);
-                deadline = None;
-                shared.store_op(idx, false);
+            Ok(Ingress::Switch { class, idx, ack }) => {
+                // the drain barrier, scoped to one class: everything of
+                // that class enqueued before the switch leaves as
+                // batches tagged with its old OP, then the new index
+                // takes effect (and the retag policy is disarmed —
+                // Drain promises those batches the old OP).  Other
+                // classes' queues are untouched, so a premium switch
+                // never stalls behind a best-effort backlog.
+                let c = class.min(n_classes - 1);
+                flush(c, &mut pending, &mut seq);
+                deadlines[c] = None;
+                shared.store_op(c, idx, false);
                 let _ = ack.send(());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() {
-                    flush_batch(&mut pending, &out, &shared, &mut seq);
-                    deadline = None;
+                let now = Instant::now();
+                for c in 0..n_classes {
+                    if !pending[c].is_empty() && deadlines[c].is_none_or(|d| d <= now) {
+                        flush(c, &mut pending, &mut seq);
+                        deadlines[c] = None;
+                    }
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                flush_batch(&mut pending, &out, &shared, &mut seq);
+                for c in 0..n_classes {
+                    flush(c, &mut pending, &mut seq);
+                }
                 break;
             }
         }
@@ -1178,6 +1417,7 @@ mod tests {
         (
             Request {
                 id: 0,
+                class: 0,
                 image: vec![val, 0.0],
                 enqueued: Instant::now(),
                 resp: tx,
@@ -1196,7 +1436,7 @@ mod tests {
     ) {
         let (in_tx, in_rx) = mpsc::channel();
         let (out_tx, out_rx) = mpsc::channel();
-        let shared = Arc::new(Shared::new(0));
+        let shared = Arc::new(Shared::new(0, cfg.classes.max(1)));
         let shared2 = shared.clone();
         let h = std::thread::spawn(move || batcher_loop(in_rx, out_tx, cfg, shared2));
         (in_tx, out_rx, shared, h)
@@ -1213,7 +1453,7 @@ mod tests {
 
     #[test]
     fn metrics_snapshot_condenses_histograms_per_op() {
-        let mut m = ServerMetrics::new(2);
+        let mut m = ServerMetrics::new(2, 1);
         m.completed = 3;
         m.batches = 2;
         m.batch_size_sum = 3;
@@ -1332,22 +1572,69 @@ mod tests {
             in_tx.send(Ingress::Req(r)).unwrap();
         }
         let (ack_tx, ack_rx) = mpsc::channel();
-        in_tx.send(Ingress::Switch { idx: 1, ack: ack_tx }).unwrap();
+        in_tx
+            .send(Ingress::Switch { class: 0, idx: 1, ack: ack_tx })
+            .unwrap();
         ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         // the pre-switch batch left tagged with the old OP...
         let batch = recv_batch(&out_rx);
         assert_eq!(batch.reqs.len(), 3);
         assert_eq!(batch.op_idx, 0);
         // ...and the new OP is in effect for later batches
-        assert_eq!(shared.load_op().0, 1);
+        assert_eq!(shared.load_op(0).0, 1);
         let (r, _rx) = req(9.0);
         in_tx.send(Ingress::Req(r)).unwrap();
         let (ack_tx, ack_rx) = mpsc::channel();
-        in_tx.send(Ingress::Switch { idx: 0, ack: ack_tx }).unwrap();
+        in_tx
+            .send(Ingress::Switch { class: 0, idx: 0, ack: ack_tx })
+            .unwrap();
         ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         let batch = recv_batch(&out_rx);
         assert_eq!(batch.reqs.len(), 1);
         assert_eq!(batch.op_idx, 1);
+        drop(in_tx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn multi_class_barrier_drains_only_its_own_class() {
+        let (in_tx, out_rx, shared, h) = spawn_batcher(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(30), // only barriers can flush
+            workers: 1,
+            classes: 2,
+            ..BatcherConfig::default()
+        });
+        let mut resp_rxs = Vec::new();
+        // one pending request per class
+        for class in [0usize, 1] {
+            let (mut r, rx) = req(class as f32);
+            r.class = class;
+            resp_rxs.push(rx);
+            in_tx.send(Ingress::Req(r)).unwrap();
+        }
+        // a best-effort (class 1) drain barrier must not flush premium
+        let (ack_tx, ack_rx) = mpsc::channel();
+        in_tx
+            .send(Ingress::Switch { class: 1, idx: 2, ack: ack_tx })
+            .unwrap();
+        ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.class, 1);
+        assert_eq!(batch.reqs.len(), 1);
+        assert_eq!(batch.op_idx, 0, "pre-barrier batch keeps the old OP");
+        assert_eq!(shared.load_op(1).0, 2);
+        assert_eq!(shared.load_op(0).0, 0, "premium's word is untouched");
+        // premium is still queued; its own barrier flushes it
+        let (ack_tx, ack_rx) = mpsc::channel();
+        in_tx
+            .send(Ingress::Switch { class: 0, idx: 1, ack: ack_tx })
+            .unwrap();
+        ack_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let batch = recv_batch(&out_rx);
+        assert_eq!(batch.class, 0);
+        assert_eq!(batch.reqs.len(), 1);
+        assert_eq!(shared.load_op(0).0, 1);
         drop(in_tx);
         h.join().unwrap();
     }

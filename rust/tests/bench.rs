@@ -235,3 +235,87 @@ fn committed_slo_pressure_report_shows_the_autopilot_protecting_the_slo() {
     assert!(base.first_violation_t_s.is_some());
     assert!(!base.p95_timeline.is_empty());
 }
+
+#[test]
+fn tenant_contention_smoke_splits_traffic_and_labels_decisions() {
+    // truncated two-class run: the classless baseline pass and the
+    // tenanted closed-loop pass share one seed, so the report carries
+    // the per-class slice next to the uncontrolled trajectory
+    let sc = builtin("tenant_contention").unwrap();
+    let opts = BenchOpts { seed: Some(31), secs: Some(6.0), ..BenchOpts::default() };
+    let report = run_scenario(&sc, &opts).unwrap();
+
+    let tenants = report.tenants.as_ref().expect("tenant_contention must report per-class slices");
+    assert_eq!(tenants.len(), 2);
+    assert_eq!(tenants[0].name, "premium");
+    assert_eq!(tenants[1].name, "best_effort");
+    assert!(tenants[0].priority < tenants[1].priority);
+    for t in tenants {
+        assert!(t.submitted > 0, "class {} got no traffic", t.name);
+        assert_eq!(t.rejected, 0, "no admission ceiling in this scenario");
+    }
+    let total: u64 = tenants.iter().map(|t| t.submitted).sum();
+    assert_eq!(total, report.throughput.submitted, "every request belongs to exactly one class");
+
+    // per-class decision records: both pilots ran and stamped their
+    // class label into the log
+    let ap = report.autopilot.as_ref().expect("tenants ride the autopilot");
+    for name in ["premium", "best_effort"] {
+        assert!(
+            ap.decisions.iter().any(|d| d.class.as_deref() == Some(name)),
+            "no decision records for class {name}"
+        );
+    }
+    ap.baseline.as_ref().expect("the paired run embeds the classless baseline");
+
+    // the tenant section survives its own serialization
+    let text = json::to_string_pretty(&report.to_json());
+    let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn committed_tenant_contention_report_shows_premium_shielded_from_shedding() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_tenant_contention.json");
+    let report = BenchReport::read_from(&path)
+        .unwrap_or_else(|e| panic!("committed tenancy baseline is schema-stale: {e:#}"));
+    assert_eq!(report.version, REPORT_VERSION);
+    assert_eq!(report.scenario, "tenant_contention");
+    let sc = builtin("tenant_contention").unwrap();
+    assert_eq!(
+        report.provenance.config_hash,
+        format!("{:016x}", sc.config_hash()),
+        "builtin tenant_contention changed: re-record BENCH_tenant_contention.json \
+         (cargo run --release --no-default-features -- bench --scenario tenant_contention --seed 31)"
+    );
+
+    let tenants = report.tenants.as_ref().expect("tenant section missing");
+    assert_eq!(tenants.len(), 2);
+    let premium = &tenants[0];
+    let best_effort = &tenants[1];
+    assert_eq!(premium.name, "premium");
+    assert_eq!(best_effort.name, "best_effort");
+
+    // the acceptance ordering: under the shared overload the premium
+    // class's SLO-violation ticks sit strictly below the classless
+    // baseline pass of the same seed, and every shed/retagged batch is
+    // attributed to best-effort
+    let ap = report.autopilot.as_ref().expect("autopilot section missing");
+    let base = ap.baseline.as_ref().expect("baseline timeline missing");
+    assert!(
+        premium.slo_violation_ticks < base.slo_violation_ticks,
+        "premium saw {} violation ticks, not below the classless baseline's {}",
+        premium.slo_violation_ticks,
+        base.slo_violation_ticks
+    );
+    assert!(
+        best_effort.slo_violation_ticks >= premium.slo_violation_ticks,
+        "best-effort must absorb the shedding, not premium"
+    );
+    assert_eq!(premium.rejected, 0, "premium requests were bounced");
+    assert_eq!(premium.retagged_batches, 0, "premium batches were retagged to a cheaper rung");
+    // the strict-priority envelope squeezed best-effort's ladder, not
+    // premium's: every saturated-shed tick is a best-effort tick
+    assert_eq!(premium.cap_saturated_ticks, 0);
+    assert!(base.slo_violation_ticks >= 10, "baseline should sustain violations under the peak");
+}

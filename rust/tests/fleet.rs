@@ -614,11 +614,19 @@ fn raw_wire_drain_barrier_orders_behind_pipelined_forwards() {
     // back-to-back without reading a single reply: the worker's FIFO
     // execution must answer both forwards before acking the barrier
     let t0 = Instant::now();
-    wire::write_frame(&mut s, &Frame::Forward { id: Some(7), op: Some(0), batch: 1 }, &[1.0, 0.0])
-        .unwrap();
-    wire::write_frame(&mut s, &Frame::Forward { id: Some(8), op: Some(0), batch: 1 }, &[2.0, 0.0])
-        .unwrap();
-    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: true }, &[]).unwrap();
+    wire::write_frame(
+        &mut s,
+        &Frame::Forward { id: Some(7), op: Some(0), batch: 1, class: None },
+        &[1.0, 0.0],
+    )
+    .unwrap();
+    wire::write_frame(
+        &mut s,
+        &Frame::Forward { id: Some(8), op: Some(0), batch: 1, class: None },
+        &[2.0, 0.0],
+    )
+    .unwrap();
+    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: true, class: None }, &[]).unwrap();
 
     match wire::read_frame(&mut s).unwrap().0 {
         Frame::Logits { id, classes } => {
@@ -673,10 +681,10 @@ fn raw_wire_conversation_covers_setop_current_op_and_drain() {
     // fire-and-forget SetOp, then an id-less legacy Forward omitting
     // `op`: it must run under the worker's current OP, and the reply to
     // an id-less request carries no id either
-    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: false }, &[]).unwrap();
+    wire::write_frame(&mut s, &Frame::SetOp { op: 1, drain: false, class: None }, &[]).unwrap();
     wire::write_frame(
         &mut s,
-        &Frame::Forward { id: None, op: None, batch: 2 },
+        &Frame::Forward { id: None, op: None, batch: 2, class: None },
         &[1.0, 0.0, 3.0, 0.0],
     )
     .unwrap();
@@ -764,9 +772,11 @@ fn wire_fuzz_mutated_frames_error_cleanly_and_respect_caps() {
             },
             vec![],
         ),
-        (Frame::Forward { id: Some(42), op: Some(1), batch: 3 }, vec![1.0; 9]),
+        (Frame::Forward { id: Some(42), op: Some(1), batch: 3, class: None }, vec![1.0; 9]),
+        (Frame::Forward { id: Some(43), op: Some(1), batch: 3, class: Some(1) }, vec![1.0; 9]),
         (Frame::Logits { id: Some(42), classes: 3 }, vec![0.5; 9]),
-        (Frame::SetOp { op: 1, drain: true }, vec![]),
+        (Frame::SetOp { op: 1, drain: true, class: None }, vec![]),
+        (Frame::SetOp { op: 2, drain: true, class: Some(0) }, vec![]),
         (Frame::Heartbeat, vec![]),
         (Frame::Pong { current_op: 1, served: 99 }, vec![]),
         (Frame::Register { addr: "10.0.0.9:7070".into() }, vec![]),

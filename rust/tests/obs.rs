@@ -233,7 +233,7 @@ fn drain_switch_event_order_holds_under_the_chaos_proxy() {
     let switch_seq = events
         .iter()
         .filter_map(|e| match &e.event {
-            ObsEvent::OpSwitch { op: 1, mode, trigger }
+            ObsEvent::OpSwitch { op: 1, mode, trigger, .. }
                 if mode == "drain" && trigger == "fleet" =>
             {
                 Some(e.seq)

@@ -1,0 +1,134 @@
+//! Multi-tenant serving: weighted admission under overload, per-class
+//! metrics attribution, and the per-class operating-point words.
+//!
+//! The admission test pins the tenancy tentpole's core promise: when
+//! the deployment saturates its `max_inflight` ceiling, every rejected
+//! request is best-effort until the deployment is *hard-full* — only
+//! then does premium start bouncing.
+
+mod common;
+
+use std::time::Duration;
+
+use common::stub_op;
+use qos_nets::backend::{OpTable, StubBackend};
+use qos_nets::qos::ClassSet;
+use qos_nets::server::{BatcherConfig, Server, SwitchMode};
+
+/// Two classes out of the serve-command flag syntax: premium (class 0,
+/// share 3) and best_effort (class 1, share 1).
+fn two_classes() -> ClassSet {
+    ClassSet::from_flags(&["premium:100:3".to_string(), "best_effort:250:1".to_string()])
+        .expect("valid tenant flags")
+}
+
+fn tenant_cfg(classes: &ClassSet, max_inflight: usize) -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(2),
+        workers: 1,
+        classes: classes.len(),
+        class_names: classes.names(),
+        admit_fracs: classes.admit_fracs(),
+        max_inflight,
+        ..BatcherConfig::default()
+    }
+}
+
+#[test]
+fn overload_rejects_best_effort_first_and_premium_only_when_hard_full() {
+    let classes = two_classes();
+    // premium reaches the whole ceiling; best_effort only its share
+    // slice: floor(1/4 * 8) = 2 in-flight requests
+    let fracs = classes.admit_fracs();
+    assert!((fracs[0] - 1.0).abs() < 1e-9, "premium frac {fracs:?}");
+    assert!((fracs[1] - 0.25).abs() < 1e-9, "best_effort frac {fracs:?}");
+
+    // a slow backend keeps everything in flight for the whole test, so
+    // admission decisions depend only on the submission order
+    let table = OpTable::new(vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4).with_delay(Duration::from_millis(150))),
+        table,
+        tenant_cfg(&classes, 8),
+    )
+    .unwrap();
+
+    let mut rxs = Vec::new();
+    // 4 best-effort submissions: the first two fill the class's slice,
+    // the next two bounce while premium's share stays untouched
+    let mut be_rejected = 0u64;
+    for i in 0..4 {
+        match server.submit_class(1, vec![(i % 4) as f32, 0.0]).unwrap() {
+            Some(rx) => rxs.push(rx),
+            None => be_rejected += 1,
+        }
+    }
+    assert_eq!(be_rejected, 2, "best_effort over its slice must bounce");
+
+    // premium fills the remaining ceiling (2 in flight, cap 8): six
+    // more all admitted — none of the best-effort rejections freed
+    // capacity premium could not reach anyway
+    for i in 0..6 {
+        let rx = server
+            .submit_class(0, vec![(i % 4) as f32, 0.0])
+            .unwrap()
+            .expect("premium must be admitted until the deployment is hard-full");
+        rxs.push(rx);
+    }
+    // hard-full: 8 in flight = the ceiling; now premium bounces too
+    assert!(
+        server.submit_class(0, vec![0.0, 0.0]).unwrap().is_none(),
+        "premium must only bounce when the deployment is hard-full"
+    );
+
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.per_class.len(), 2);
+    assert_eq!(m.per_class[0].submitted, 7);
+    assert_eq!(m.per_class[0].completed, 6);
+    assert_eq!(m.per_class[0].rejected, 1);
+    assert_eq!(m.per_class[1].submitted, 4);
+    assert_eq!(m.per_class[1].completed, 2);
+    assert_eq!(m.per_class[1].rejected, 2);
+    // every rejection before the hard-full probe was best-effort
+    assert_eq!(m.per_class[1].rejected, be_rejected);
+}
+
+#[test]
+fn unlimited_inflight_admits_every_class_and_splits_metrics() {
+    let classes = two_classes();
+    let table = OpTable::new(vec![stub_op("hi", 1.0), stub_op("lo", 0.5)]);
+    let server = Server::start(
+        |_w| Ok(StubBackend::new(4)),
+        table,
+        tenant_cfg(&classes, 0), // 0 = no admission control
+    )
+    .unwrap();
+
+    // steer only best_effort onto the frugal rung; premium batches must
+    // keep the exact OP
+    server.set_class_operating_point_with(1, 1, SwitchMode::Drain).unwrap();
+
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let class = i % 2;
+        let rx = server
+            .submit_class(class, vec![(i % 4) as f32, 0.0])
+            .unwrap()
+            .expect("max_inflight 0 admits everything");
+        rxs.push((class, rx));
+    }
+    for (class, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let want_op = if class == 0 { 0 } else { 1 };
+        assert_eq!(resp.op_index, want_op, "class {class} ran on the wrong OP");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.per_class[0].submitted, 3);
+    assert_eq!(m.per_class[1].submitted, 3);
+    assert_eq!(m.per_class[0].rejected + m.per_class[1].rejected, 0);
+    assert_eq!(m.per_class[0].completed + m.per_class[1].completed, 6);
+}
